@@ -1,0 +1,63 @@
+//! Engine comparison bench: native decode vs PJRT decode (dense cache),
+//! plus native decode across every cache backend at a long context — the
+//! end-to-end per-token cost of each compression method.
+//!
+//!   cargo bench --bench decode_engines
+
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::dict::DictionarySet;
+use lexico::model::{Engine, Weights};
+use lexico::tasks;
+use lexico::util::rng::Rng;
+use lexico::util::stats::{bench_ms, report};
+
+fn main() -> anyhow::Result<()> {
+    let art = lexico::artifacts_dir();
+    if !art.join("model_M.bin").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
+    let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let mut rng = Rng::new(5);
+    let t_ctx = 400;
+    let mut prompt = vec![tasks::BOS];
+    prompt.extend(tasks::encode(&tasks::gen_lm_text(&mut rng, t_ctx)));
+    prompt.truncate(t_ctx);
+
+    println!("native decode step at context {} per cache backend:\n", prompt.len());
+    for spec in [
+        "full",
+        "lexico:s=8,nb=32",
+        "lexico:s=4,nb=32",
+        "kivi:bits=2,g=16,nb=16",
+        "pertoken:bits=4,g=16,nb=4",
+        "zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16",
+        "snapkv:cap=64,win=8",
+        "pyramidkv:cap=64,win=8",
+    ] {
+        let mut cache = build_cache(spec, &ctx)?;
+        let _ = engine.prefill(&prompt, &mut *cache);
+        let mut pos = prompt.len();
+        let st = bench_ms(5, 40, || {
+            let _ = engine.decode_step(7, pos, &mut *cache);
+            pos += 1;
+        });
+        report(spec, &st);
+    }
+
+    // PJRT path (dense cache graph) for the cross-engine comparison
+    if art.join("model.hlo.txt").exists() {
+        println!("\nPJRT decode (AOT artifacts through the XLA CPU client):\n");
+        let pjrt = lexico::runtime::PjrtEngine::load(&art, &art.join("model_M.bin"))?;
+        let short: Vec<u32> = prompt.iter().copied().take(120).collect();
+        let st = bench_ms(1, 5, || {
+            let _ = pjrt.generate(&short, 8, None).unwrap();
+        });
+        report("pjrt generate (120-tok prefill + 8 decode)", &st);
+    }
+    Ok(())
+}

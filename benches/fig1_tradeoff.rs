@@ -1,0 +1,53 @@
+//! Fig 1 bench: wall-clock cost of regenerating the headline tradeoff
+//! sweep (method × sparsity on the arith task), plus the per-method eval
+//! throughput — the end-to-end harness cost that gates every experiment.
+//!
+//!   cargo bench --bench fig1_tradeoff
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lexico::dict::DictionarySet;
+use lexico::eval::{evaluate, EvalConfig};
+use lexico::model::{Engine, Weights};
+use lexico::tasks::Task;
+
+fn main() -> anyhow::Result<()> {
+    let art = lexico::artifacts_dir();
+    if !art.join("model_M.bin").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
+    let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
+    let n = 10;
+    println!("eval throughput on arith (n={n} samples/method), model M:\n");
+    let mut total = 0.0;
+    for spec in [
+        "full",
+        "lexico:s=8,nb=32",
+        "lexico:s=4,nb=32",
+        "lexico:s=2,nb=32",
+        "kivi:bits=2,g=16,nb=16",
+        "kivi:bits=4,g=16,nb=16",
+        "pertoken:bits=4,g=16,nb=4",
+        "zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16",
+        "snapkv:cap=48,win=8",
+        "pyramidkv:cap=48,win=8",
+    ] {
+        let t0 = Instant::now();
+        let r = evaluate(&engine, Some(dicts.clone()), spec,
+                         &EvalConfig::new(Task::Arith, n, 12345))?;
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!(
+            "{spec:<40} {:6.2} s  ({:5.2} s/sample, KV {:5.1}%, score {:5.1})",
+            dt,
+            dt / n as f64,
+            100.0 * r.kv_ratio,
+            r.score
+        );
+    }
+    println!("\nfull sweep cost at these settings: {total:.1} s");
+    Ok(())
+}

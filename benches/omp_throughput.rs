@@ -1,0 +1,38 @@
+//! OMP kernel micro-bench: vectors/second vs (N, s, δ) — the L3 hot-path
+//! profile that drives the §Perf iteration in EXPERIMENTS.md.
+//!
+//!   cargo bench --bench omp_throughput
+
+use lexico::dict::Dictionary;
+use lexico::omp::{omp_encode, OmpWorkspace};
+use lexico::util::rng::Rng;
+use lexico::util::stats::{bench_ms, report};
+
+fn main() {
+    let m = 32;
+    let mut rng = Rng::new(1);
+    let batch = 64;
+    let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(m)).collect();
+    println!("batched OMP, head_dim={m}, {batch} vectors per iteration\n");
+    for n_atoms in [256usize, 1024, 4096] {
+        let d = Dictionary::random(m, n_atoms, 7);
+        for s in [4usize, 8, 16] {
+            let mut ws = OmpWorkspace::new(n_atoms, m, s);
+            let st = bench_ms(3, 20, || {
+                for x in &xs {
+                    let _ = omp_encode(&d.atoms, n_atoms, m, x, s, 0.0, &mut ws);
+                }
+            });
+            let vps = batch as f64 / (st.mean / 1e3);
+            report(&format!("N={n_atoms:<5} s={s:<3} ({vps:>9.0} vec/s)"), &st);
+        }
+        // threshold mode at δ=0.4 (early termination saves iterations)
+        let mut ws = OmpWorkspace::new(n_atoms, m, 16);
+        let st = bench_ms(3, 20, || {
+            for x in &xs {
+                let _ = omp_encode(&d.atoms, n_atoms, m, x, 16, 0.4, &mut ws);
+            }
+        });
+        report(&format!("N={n_atoms:<5} delta=0.4 (max s=16)"), &st);
+    }
+}

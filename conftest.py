@@ -1,0 +1,5 @@
+"""Pytest path shim: make `compile` importable when running from the repo root."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

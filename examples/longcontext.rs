@@ -1,0 +1,59 @@
+//! Long-context workload: retrieval accuracy vs context length for Lexico
+//! and the quantization/eviction baselines — the setting where the paper's
+//! O(Nm + Ts) attention and per-token byte savings matter most.
+//!
+//!   cargo run --release --example longcontext
+
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::dict::DictionarySet;
+use lexico::model::{Engine, Weights};
+use lexico::tasks;
+use lexico::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let art = lexico::artifacts_dir();
+    let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
+    let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let n_samples = 30;
+
+    println!("needle-retrieval accuracy vs context length (n={n_samples} each)\n");
+    println!("{:<24} {:>8} {:>8} {:>8} {:>10}", "method", "16 pairs", "28 pairs", "40 pairs", "KV @40");
+    for spec in [
+        "full",
+        "lexico:s=8,nb=32",
+        "lexico:s=4,nb=32",
+        "lexico:s=2,nb=32",
+        "kivi:bits=2,g=16,nb=16",
+        "snapkv:cap=64,win=8",
+    ] {
+        let mut accs = Vec::new();
+        let mut kv_last = 0.0;
+        for pairs in [16usize, 28, 40] {
+            let mut rng = Rng::new(31337 + pairs as u64);
+            let mut correct = 0;
+            let mut kv_sum = 0.0;
+            for _ in 0..n_samples {
+                let inst = tasks::gen_needle(&mut rng, pairs);
+                let mut prompt = vec![tasks::BOS];
+                prompt.extend(tasks::encode(&inst.prompt));
+                let mut cache = build_cache(spec, &ctx)?;
+                let out = engine.generate(&prompt, 6, Some(tasks::newline_id()), &mut *cache);
+                correct +=
+                    (tasks::decode(&out).trim_end_matches('\n') == inst.answer) as usize;
+                kv_sum += cache.kv_ratio();
+            }
+            accs.push(100.0 * correct as f64 / n_samples as f64);
+            kv_last = kv_sum / n_samples as f64;
+        }
+        println!(
+            "{spec:<24} {:>7.1}% {:>7.1}% {:>7.1}% {:>9.1}%",
+            accs[0], accs[1], accs[2], 100.0 * kv_last
+        );
+    }
+    println!("\nEviction loses the needle once it falls outside the kept set;");
+    println!("Lexico keeps *every* token at ~3s+2 bytes and degrades smoothly.");
+    Ok(())
+}

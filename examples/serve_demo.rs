@@ -1,0 +1,87 @@
+//! Serving demo: starts the coordinator in-process, fires a batch of
+//! concurrent requests through the TCP front end, and prints latency /
+//! throughput / KV-size metrics — the memory-bound-serving story of the
+//! paper (§1): smaller KV per session ⇒ more sessions per budget.
+//!
+//!   cargo run --release --example serve_demo
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use lexico::model::{Engine, Weights};
+use lexico::server::batcher::{self, BatcherConfig};
+use lexico::server::http;
+use lexico::server::metrics::Metrics;
+use lexico::tasks;
+use lexico::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let art = lexico::artifacts_dir();
+    let engine = Arc::new(Engine::new(Weights::load(art.join("model_M.bin"))?));
+    let dicts = Arc::new(lexico::dict::DictionarySet::load(art.join("dict_M_N1024.bin"))?);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+
+    // coordinator: Lexico default method, a deliberately small KV budget
+    let cfg = BatcherConfig {
+        default_method: "lexico:s=6,nb=32".into(),
+        kv_budget_bytes: 2.0 * 1024.0 * 1024.0,
+        max_sessions: 16,
+    };
+    let (jtx, jrx) = channel();
+    let (eng2, m2) = (engine.clone(), metrics.clone());
+    std::thread::spawn(move || batcher::run(eng2, Some(dicts), cfg, jrx, m2));
+
+    // TCP front end on an ephemeral port
+    let (atx, arx) = channel();
+    let m3 = metrics.clone();
+    std::thread::spawn(move || {
+        http::serve("127.0.0.1:0", jtx, m3, move |a| {
+            let _ = atx.send(a);
+        })
+    });
+    let addr = arx.recv()?;
+    println!("serving on {addr}\n");
+
+    // 12 concurrent clients, mixed workloads, some explicitly full-cache
+    let mut handles = Vec::new();
+    for i in 0..12u64 {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(u64, Json)> {
+            let mut rng = lexico::util::rng::Rng::new(90 + i);
+            let inst = if i % 2 == 0 {
+                tasks::gen_needle(&mut rng, 20)
+            } else {
+                tasks::gen_arith_prompt(&mut rng, 3, 3)
+            };
+            let method = if i % 3 == 0 { "full" } else { "" };
+            let mut conn = TcpStream::connect(addr)?;
+            writeln!(
+                conn,
+                r#"{{"prompt": "{}", "max_new": 6, "method": "{method}"}}"#,
+                inst.prompt.replace('\n', "\\n")
+            )?;
+            let mut line = String::new();
+            BufReader::new(conn).read_line(&mut line)?;
+            Ok((i, Json::parse(&line).map_err(|e| anyhow::anyhow!(e))?))
+        }));
+    }
+    for h in handles {
+        let (i, v) = h.join().unwrap()?;
+        println!(
+            "req {i:>2}: {:>6.1} ms total, {:>6.1} ms TTFT, KV {:>5.1}%, reply {:?}",
+            v.get("total_ms").as_f64().unwrap_or(0.0),
+            v.get("ttft_ms").as_f64().unwrap_or(0.0),
+            100.0 * v.get("kv_ratio").as_f64().unwrap_or(0.0),
+            v.get("text").as_str().unwrap_or("").trim_end()
+        );
+    }
+
+    println!("\n=== aggregate metrics ===");
+    println!("{}", metrics.lock().unwrap().report());
+
+    // shut the listener down cleanly
+    let mut conn = TcpStream::connect(addr)?;
+    writeln!(conn, r#"{{"cmd": "shutdown"}}"#)?;
+    Ok(())
+}

@@ -1,0 +1,433 @@
+"""AOT build pipeline: train models + dictionaries, export weights and HLO.
+
+Runs ONCE at build time (``make artifacts``); the Rust serving binary is
+self-contained afterwards. Produces, under ``artifacts/``:
+
+  vocab.txt                    tokenizer contract (asserted by Rust tests)
+  model_{S,M,L}.bin            trained transformer weights (LXMW format)
+  dict_{size}_N{n}.bin         per-layer K/V Lexico dictionaries (LXDC)
+  sae_M_N{n}.bin               sparse-autoencoder baseline (LXSA, Table 1)
+  model.hlo.txt                M-model single-token decode graph (dense cache)
+  prefill_M.hlo.txt            M-model prefill graph
+  omp_M.hlo.txt                L1 Pallas OMP kernel, lowered standalone
+  lexico_decode_M.hlo.txt      full Lexico decode step (Eq. 7, calls L1 kernel)
+  grads_M.hlo.txt              loss+grad graph (the L2 bwd, for completeness)
+  manifest.json                input/output orderings + static dims per graph
+
+HLO is exported as *text*: jax>=0.5 serialized protos carry 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Env knobs: LEXICO_SIZES=S,M,L  LEXICO_STEPS_<SIZE>  LEXICO_DICT_EPOCHS
+           LEXICO_FORCE=1 (retrain even if .bin exists)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import dictlearn
+from . import model as model_mod
+from .kernels.omp import omp_pallas_call
+
+# ---------------------------------------------------------------------------
+# Binary formats (readers live in rust/src/model/weights.rs, rust/src/dict/)
+# ---------------------------------------------------------------------------
+
+
+def _write_tensor(f, name: str, arr: np.ndarray):
+    arr = np.ascontiguousarray(arr, dtype=np.float32)
+    nb = name.encode()
+    f.write(struct.pack("<I", len(nb)))
+    f.write(nb)
+    f.write(struct.pack("<I", arr.ndim))
+    f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+    f.write(arr.tobytes())
+
+
+def save_model_bin(path: str, cfg: model_mod.ModelConfig, params: dict):
+    with open(path, "wb") as f:
+        f.write(b"LXMW")
+        f.write(
+            struct.pack(
+                "<9I", 1, cfg.n_layers, cfg.d_model, cfg.n_heads,
+                cfg.n_kv_heads, cfg.head_dim, cfg.d_ff, cfg.vocab, cfg.max_seq,
+            )
+        )
+        names = sorted(params)
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            _write_tensor(f, name, np.asarray(params[name]))
+
+
+def load_model_bin(path: str):
+    """Python-side reader (used by tests and incremental builds)."""
+    with open(path, "rb") as f:
+        assert f.read(4) == b"LXMW"
+        ver, nl, dm, nh, nkv, hd, ff, vocab, ms = struct.unpack("<9I", f.read(36))
+        assert ver == 1
+        cfg = model_mod.ModelConfig("?", nl, dm, nh, nkv, hd, ff, vocab, ms)
+        (n_tensors,) = struct.unpack("<I", f.read(4))
+        params = {}
+        for _ in range(n_tensors):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            (rank,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{rank}I", f.read(4 * rank))
+            n = int(np.prod(shape))
+            params[name] = np.frombuffer(f.read(4 * n), np.float32).reshape(shape)
+        return cfg, params
+
+
+def save_dict_bin(path: str, d_k: np.ndarray, d_v: np.ndarray):
+    """d_k/d_v: [L, m, N] float32, unit-norm columns."""
+    ll, m, n = d_k.shape
+    with open(path, "wb") as f:
+        f.write(b"LXDC")
+        f.write(struct.pack("<4I", 1, ll, m, n))
+        f.write(np.ascontiguousarray(d_k, np.float32).tobytes())
+        f.write(np.ascontiguousarray(d_v, np.float32).tobytes())
+
+
+def load_dict_bin(path: str):
+    with open(path, "rb") as f:
+        assert f.read(4) == b"LXDC"
+        ver, ll, m, n = struct.unpack("<4I", f.read(16))
+        assert ver == 1
+        sz = ll * m * n
+        d_k = np.frombuffer(f.read(4 * sz), np.float32).reshape(ll, m, n)
+        d_v = np.frombuffer(f.read(4 * sz), np.float32).reshape(ll, m, n)
+        return d_k, d_v
+
+
+def save_sae_bin(path: str, enc_k, dec_k, enc_v, dec_v):
+    m, n = enc_k.shape
+    with open(path, "wb") as f:
+        f.write(b"LXSA")
+        f.write(struct.pack("<3I", 1, m, n))
+        for a in (enc_k, dec_k, enc_v, dec_v):
+            f.write(np.ascontiguousarray(a, np.float32).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering helper (text interchange — see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype if not hasattr(x, "dtype") else x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Model training
+# ---------------------------------------------------------------------------
+
+DEFAULT_STEPS = {"S": 900, "M": 3200, "L": 1300}
+TRAIN_BATCH, TRAIN_SEQ = 4, 256
+TRAIN_SEED = 42
+
+
+def sanity_eval(params, cfg, seed=7, n=12) -> dict:
+    """Quick greedy-decoding accuracy on arith + needle (build-time log)."""
+    rng = data_mod.SplitMix64(seed)
+    nl = data_mod.encode("\n")[0]
+    correct_a = correct_n = 0
+    for _ in range(n):
+        p, a = data_mod.gen_arith_prompt(rng, 3, 2)
+        out = model_mod.generate_greedy(
+            params, cfg, [data_mod.BOS] + data_mod.encode(p), 6, stop_id=nl)
+        if data_mod.decode(out).rstrip("\n") == a:
+            correct_a += 1
+        p, a = data_mod.gen_needle_example(rng, 10)
+        out = model_mod.generate_greedy(
+            params, cfg, [data_mod.BOS] + data_mod.encode(p), 6, stop_id=nl)
+        if data_mod.decode(out).rstrip("\n") == a:
+            correct_n += 1
+    return {"arith": correct_a / n, "needle": correct_n / n}
+
+
+def train_model(size: str, steps: int, log) -> tuple:
+    cfg = model_mod.CONFIGS[size]
+    params = model_mod.init_params(jax.random.PRNGKey(hash(size) % 2**31), cfg)
+    log(f"[{size}] {cfg.param_count(params)} params, {steps} steps")
+    step = model_mod.make_train_step(cfg, 1.5e-3, steps)
+    opt = model_mod.adam_init(params)
+    n_tokens = steps * TRAIN_BATCH * TRAIN_SEQ + 1
+    t0 = time.time()
+    for i, (x, y, w) in enumerate(
+        data_mod.training_batches(TRAIN_SEED, n_tokens, TRAIN_BATCH, TRAIN_SEQ)
+    ):
+        if i >= steps:
+            break
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(w))
+        if i % 200 == 0 or i == steps - 1:
+            log(f"[{size}] step {i} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    acc = sanity_eval(params, cfg)
+    log(f"[{size}] sanity: arith {acc['arith']:.2f} needle {acc['needle']:.2f}")
+    return cfg, {k: np.asarray(v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Dictionary training per model
+# ---------------------------------------------------------------------------
+
+DICT_SPARSITY = 8          # paper: s = m/4 during dictionary training
+DICT_TOKENS = 4096         # corpus size for KV collection
+DICT_SEED = 1234           # distinct from TRAIN_SEED → held-out-ish corpus
+
+
+def build_dicts(size: str, cfg, params, n_atoms: int, epochs: int, log, art: str) -> str:
+    path = f"{art}/dict_{size}_N{n_atoms}.bin"
+    if os.path.exists(path) and not os.environ.get("LEXICO_FORCE"):
+        log(f"[{size}] {path} exists, skip")
+        return path
+    kvecs, vvecs = dictlearn.collect_kv(params, cfg, DICT_SEED, DICT_TOKENS)
+    # The paper trains with lr 1e-4 at (m=128, N≤4096, WikiText scale); at
+    # our smaller scale that underfits badly — 3e-3 with cosine decay
+    # reaches much lower reconstruction error in the same epochs.
+    lr = float(os.environ.get("LEXICO_DICT_LR", "3e-3"))
+    d_ks, d_vs = [], []
+    for layer in range(cfg.n_layers):
+        for vecs, acc in ((kvecs[layer], d_ks), (vvecs[layer], d_vs)):
+            d = dictlearn.train_dictionary(
+                vecs, n_atoms, DICT_SPARSITY, epochs=epochs, lr=lr,
+                seed=layer, log=None)
+            acc.append(d)
+        log(f"[{size}] N={n_atoms} layer {layer} dicts done")
+    save_dict_bin(path, np.stack(d_ks), np.stack(d_vs))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# HLO graph exports (M model)
+# ---------------------------------------------------------------------------
+
+HLO_TC, HLO_TB, HLO_S, HLO_N = 512, 64, 8, 1024
+OMP_BATCH = 64
+
+
+def export_hlo(cfg, params, out_main: str, log) -> dict:
+    manifest: dict = {"graphs": {}}
+    names = sorted(params)
+    wspecs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    art = os.path.dirname(out_main) or "."
+    ll, kv, m = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    t_max = cfg.max_seq
+
+    def lower(fn, specs):
+        return to_hlo_text(jax.jit(fn).lower(*specs))
+
+    def record(fname, text, inputs, outputs, const=None):
+        with open(os.path.join(art, fname), "w") as f:
+            f.write(text)
+        manifest["graphs"][fname] = {
+            "inputs": inputs, "outputs": outputs, "const": const or {},
+        }
+        log(f"wrote {fname} ({len(text)} chars)")
+
+    i32, f32 = jnp.int32, jnp.float32
+    winfo = [{"name": n, "shape": list(params[n].shape), "dtype": "f32"} for n in names]
+
+    # ---- dense-cache decode step (the Makefile sentinel) -----------------
+    def dec(*args):
+        ws = dict(zip(names, args[: len(names)]))
+        token, pos, kc, vc = args[len(names):]
+        return model_mod.decode_step(ws, cfg, token, pos, kc, vc)
+
+    cache_spec = jax.ShapeDtypeStruct((ll, 1, kv, t_max, m), f32)
+    text = lower(dec, wspecs + [
+        jax.ShapeDtypeStruct((1,), i32), jax.ShapeDtypeStruct((1,), i32),
+        cache_spec, cache_spec,
+    ])
+    record(os.path.basename(out_main), text,
+           winfo + [
+               {"name": "token", "shape": [1], "dtype": "i32"},
+               {"name": "pos", "shape": [1], "dtype": "i32"},
+               {"name": "k_cache", "shape": [ll, 1, kv, t_max, m], "dtype": "f32"},
+               {"name": "v_cache", "shape": [ll, 1, kv, t_max, m], "dtype": "f32"},
+           ],
+           [{"name": "logits", "shape": [1, cfg.vocab], "dtype": "f32"},
+            {"name": "k_cache", "shape": [ll, 1, kv, t_max, m], "dtype": "f32"},
+            {"name": "v_cache", "shape": [ll, 1, kv, t_max, m], "dtype": "f32"}],
+           {"t_max": t_max})
+
+    # ---- prefill ----------------------------------------------------------
+    def pre(*args):
+        ws = dict(zip(names, args[: len(names)]))
+        tokens, n_valid = args[len(names):]
+        return model_mod.prefill(ws, cfg, tokens, n_valid)
+
+    text = lower(pre, wspecs + [
+        jax.ShapeDtypeStruct((1, t_max), i32), jax.ShapeDtypeStruct((1,), i32)])
+    record("prefill_M.hlo.txt", text,
+           winfo + [
+               {"name": "tokens", "shape": [1, t_max], "dtype": "i32"},
+               {"name": "n_valid", "shape": [1], "dtype": "i32"},
+           ],
+           [{"name": "last_logits", "shape": [1, cfg.vocab], "dtype": "f32"},
+            {"name": "k_states", "shape": [ll, 1, kv, t_max, m], "dtype": "f32"},
+            {"name": "v_states", "shape": [ll, 1, kv, t_max, m], "dtype": "f32"}],
+           {"t_max": t_max})
+
+    # ---- standalone Pallas OMP kernel -------------------------------------
+    call = omp_pallas_call(m, HLO_N, OMP_BATCH, HLO_S, 0.0, tile=OMP_BATCH)
+    text = to_hlo_text(jax.jit(call).lower(
+        jax.ShapeDtypeStruct((m, HLO_N), f32),
+        jax.ShapeDtypeStruct((OMP_BATCH, m), f32)))
+    record("omp_M.hlo.txt", text,
+           [{"name": "dict", "shape": [m, HLO_N], "dtype": "f32"},
+            {"name": "x", "shape": [OMP_BATCH, m], "dtype": "f32"}],
+           [{"name": "idx", "shape": [OMP_BATCH, HLO_S], "dtype": "i32"},
+            {"name": "val", "shape": [OMP_BATCH, HLO_S], "dtype": "f32"},
+            {"name": "nnz", "shape": [OMP_BATCH], "dtype": "i32"}],
+           {"s": HLO_S, "n_atoms": HLO_N, "batch": OMP_BATCH})
+
+    # ---- full Lexico decode step (Eq. 7; calls the L1 attention kernel) ---
+    def lexdec(*args):
+        ws = dict(zip(names, args[: len(names)]))
+        (d_k, d_v, token, pos, k_idx, k_val, v_idx, v_val, n_csr,
+         k_buf, v_buf, n_buf) = args[len(names):]
+        return model_mod.lexico_decode_step(
+            ws, cfg, d_k, d_v, token, pos,
+            k_idx, k_val, v_idx, v_val, n_csr, k_buf, v_buf, n_buf)
+
+    dk_spec = jax.ShapeDtypeStruct((ll, m, HLO_N), f32)
+    idx_spec = jax.ShapeDtypeStruct((ll, kv, HLO_TC, HLO_S), i32)
+    val_spec = jax.ShapeDtypeStruct((ll, kv, HLO_TC, HLO_S), f32)
+    buf_spec = jax.ShapeDtypeStruct((ll, kv, HLO_TB, m), f32)
+    text = lower(lexdec, wspecs + [
+        dk_spec, dk_spec,
+        jax.ShapeDtypeStruct((1,), i32), jax.ShapeDtypeStruct((1,), i32),
+        idx_spec, val_spec, idx_spec, val_spec,
+        jax.ShapeDtypeStruct((), i32),
+        buf_spec, buf_spec, jax.ShapeDtypeStruct((), i32),
+    ])
+    record("lexico_decode_M.hlo.txt", text,
+           winfo + [
+               {"name": "d_k", "shape": [ll, m, HLO_N], "dtype": "f32"},
+               {"name": "d_v", "shape": [ll, m, HLO_N], "dtype": "f32"},
+               {"name": "token", "shape": [1], "dtype": "i32"},
+               {"name": "pos", "shape": [1], "dtype": "i32"},
+               {"name": "k_idx", "shape": [ll, kv, HLO_TC, HLO_S], "dtype": "i32"},
+               {"name": "k_val", "shape": [ll, kv, HLO_TC, HLO_S], "dtype": "f32"},
+               {"name": "v_idx", "shape": [ll, kv, HLO_TC, HLO_S], "dtype": "i32"},
+               {"name": "v_val", "shape": [ll, kv, HLO_TC, HLO_S], "dtype": "f32"},
+               {"name": "n_csr", "shape": [], "dtype": "i32"},
+               {"name": "k_buf", "shape": [ll, kv, HLO_TB, m], "dtype": "f32"},
+               {"name": "v_buf", "shape": [ll, kv, HLO_TB, m], "dtype": "f32"},
+               {"name": "n_buf", "shape": [], "dtype": "i32"},
+           ],
+           [{"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+            {"name": "k_t", "shape": [ll, kv, m], "dtype": "f32"},
+            {"name": "v_t", "shape": [ll, kv, m], "dtype": "f32"}],
+           {"tc": HLO_TC, "tb": HLO_TB, "s": HLO_S, "n_atoms": HLO_N})
+
+    # ---- loss + grads (the L2 backward pass, exported for completeness) ---
+    def grads(*args):
+        ws = dict(zip(names, args[: len(names)]))
+        x, y = args[len(names):]
+        loss, g = jax.value_and_grad(model_mod.loss_fn)(ws, cfg, x, y)
+        return (loss, *[g[n] for n in names])
+
+    text = lower(grads, wspecs + [
+        jax.ShapeDtypeStruct((2, 128), i32), jax.ShapeDtypeStruct((2, 128), i32)])
+    record("grads_M.hlo.txt", text,
+           winfo + [{"name": "x", "shape": [2, 128], "dtype": "i32"},
+                    {"name": "y", "shape": [2, 128], "dtype": "i32"}],
+           [{"name": "loss", "shape": [], "dtype": "f32"}] + winfo,
+           {"batch": 2, "seq": 128})
+
+    manifest["weight_order"] = names
+    manifest["config"] = {
+        "n_layers": ll, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "n_kv_heads": kv, "head_dim": m, "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab, "max_seq": t_max,
+    }
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log("wrote manifest.json")
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = ap.parse_args()
+    art = os.path.dirname(args.out) or "."
+    os.makedirs(art, exist_ok=True)
+
+    def log(msg):
+        print(f"[aot] {msg}", flush=True)
+
+    t_start = time.time()
+    with open(os.path.join(art, "vocab.txt"), "w") as f:
+        f.write(data_mod.VOCAB_CHARS)
+
+    sizes = os.environ.get("LEXICO_SIZES", "S,M,L").split(",")
+    epochs = int(os.environ.get("LEXICO_DICT_EPOCHS", "12"))
+    models = {}
+    for size in sizes:
+        path = f"{art}/model_{size}.bin"
+        if os.path.exists(path) and not os.environ.get("LEXICO_FORCE"):
+            log(f"{path} exists, loading")
+            cfg, params = load_model_bin(path)
+            cfg = model_mod.CONFIGS[size]
+        else:
+            steps = int(os.environ.get(f"LEXICO_STEPS_{size}", DEFAULT_STEPS[size]))
+            cfg, params = train_model(size, steps, log)
+            save_model_bin(path, cfg, params)
+            log(f"saved {path}")
+        models[size] = (cfg, params)
+
+    for size in sizes:
+        cfg, params = models[size]
+        n_list = (1024, 256) if size == "M" else (1024,)
+        for n_atoms in n_list:
+            build_dicts(size, cfg, params, n_atoms, epochs, log, art)
+
+    # SAE baseline (Table 1): middle-layer K/V of the M model.
+    if "M" in models:
+        sae_path = f"{art}/sae_M_N1024.bin"
+        if not (os.path.exists(sae_path) and not os.environ.get("LEXICO_FORCE")):
+            cfg, params = models["M"]
+            kvecs, vvecs = dictlearn.collect_kv(params, cfg, DICT_SEED, DICT_TOKENS)
+            mid = cfg.n_layers // 2
+            enc_k, dec_k = dictlearn.train_sae(kvecs[mid], 1024, DICT_SPARSITY, epochs=epochs)
+            enc_v, dec_v = dictlearn.train_sae(vvecs[mid], 1024, DICT_SPARSITY, epochs=epochs)
+            save_sae_bin(sae_path, enc_k, dec_k, enc_v, dec_v)
+            log(f"saved {sae_path}")
+
+        cfg, params = models["M"]
+        export_hlo(cfg, {k: jnp.asarray(v) for k, v in params.items()}, args.out, log)
+
+    log(f"done in {time.time()-t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

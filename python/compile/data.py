@@ -1,0 +1,346 @@
+"""Synthetic task suite + tokenizer — the data contract shared with Rust.
+
+This module is the *single source of truth* for the byte-level vocabulary
+(exported to ``artifacts/vocab.txt`` by ``aot.py`` and asserted equal by the
+Rust test suite) and the Python-side generators of the synthetic workloads
+that substitute for the paper's corpora (see DESIGN.md §1):
+
+  * ``lm``          — Markov-chain "prose" (WikiText-103 substitute; the
+                      dictionary-training and LM-perplexity corpus)
+  * ``arith``       — multi-step arithmetic chains (GSM8K substitute)
+  * ``arith_hard``  — deeper chains (MMLU-Pro Engineering substitute)
+  * ``needle``      — key/value recall over long distractor context
+                      (TREC/TriviaQA-style retrieval substitute)
+  * ``copy``        — long-range verbatim completion (LCC/RepoBench substitute)
+  * ``sort``        — digit sorting (MMLU-Pro Law substitute)
+
+Generators are seeded with SplitMix64 so the corpus is reproducible; the
+Rust evaluation harness uses *different* seeds/streams, so evaluation data
+is automatically held out from training data.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS = 0, 1, 2
+SPECIALS = 3
+# Order matters: id(ch) = SPECIALS + VOCAB_CHARS.index(ch).
+VOCAB_CHARS = "\n abcdefghijklmnopqrstuvwxyz0123456789=+-*;:,.?#()<>[]"
+VOCAB_SIZE = SPECIALS + len(VOCAB_CHARS)  # 57
+
+_CH2ID = {c: SPECIALS + i for i, c in enumerate(VOCAB_CHARS)}
+_ID2CH = {SPECIALS + i: c for i, c in enumerate(VOCAB_CHARS)}
+
+
+def encode(text: str) -> list[int]:
+    """Map text to token ids. Raises on out-of-vocabulary characters."""
+    return [_CH2ID[c] for c in text]
+
+
+def decode(ids) -> str:
+    """Inverse of :func:`encode`; specials render as empty."""
+    return "".join(_ID2CH.get(int(i), "") for i in ids)
+
+
+# ---------------------------------------------------------------------------
+# SplitMix64 — tiny, portable PRNG (same algorithm as rust/src/util/rng.rs)
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Deterministic 64-bit PRNG used by every generator in this repo."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n)."""
+        return self.next_u64() % n
+
+    def choice(self, seq):
+        return seq[self.below(len(seq))]
+
+    def uniform(self) -> float:
+        return self.next_u64() / float(1 << 64)
+
+
+# ---------------------------------------------------------------------------
+# lm task — Markov "prose"
+# ---------------------------------------------------------------------------
+
+# A compact word list; the Markov transition structure below gives the text
+# non-trivial bigram statistics for the language-modeling proxy task.
+_WORDS = (
+    "the a one this that red blue green small large old new dark cold "
+    "fox dog cat bird fish tree river stone house door city road cloud "
+    "runs jumps sleeps sings falls rises moves turns stands waits "
+    "over under near beside into from with without through around "
+    "quickly slowly quietly loudly gently always never often soon "
+    "and but then while because"
+).split()
+
+_KINDS = {}  # word -> syntactic class index
+for _w in _WORDS[:14]:
+    _KINDS[_w] = 0  # determiners/adjectives
+for _w in _WORDS[14:28]:
+    _KINDS[_w] = 1  # nouns
+for _w in _WORDS[28:38]:
+    _KINDS[_w] = 2  # verbs
+for _w in _WORDS[38:48]:
+    _KINDS[_w] = 3  # prepositions
+for _w in _WORDS[48:58]:
+    _KINDS[_w] = 4  # adverbs
+for _w in _WORDS[58:]:
+    _KINDS[_w] = 5  # conjunctions
+
+_BY_KIND = [[w for w in _WORDS if _KINDS[w] == k] for k in range(6)]
+# kind -> plausible successor kinds (weighted by repetition)
+_NEXT = {
+    0: [0, 1, 1, 1],
+    1: [2, 2, 2, 3],
+    2: [3, 3, 4, 5],
+    3: [0, 0, 1, 1],
+    4: [5, 0, 2, 3],
+    5: [0, 0, 1, 4],
+}
+
+
+def gen_lm_text(rng: SplitMix64, n_chars: int) -> str:
+    """Markov-chain prose of roughly ``n_chars`` characters."""
+    out: list[str] = []
+    total = 0
+    while total < n_chars:
+        kind = 0
+        sent_len = 5 + rng.below(9)
+        words = []
+        for _ in range(sent_len):
+            words.append(rng.choice(_BY_KIND[kind]))
+            kind = rng.choice(_NEXT[kind])
+        s = " ".join(words) + ". "
+        out.append(s)
+        total += len(s)
+    return "".join(out)[:n_chars]
+
+
+# ---------------------------------------------------------------------------
+# arith task — multi-step arithmetic chains (values mod 100)
+# ---------------------------------------------------------------------------
+
+_VARS = "abcdefghij"
+
+
+def gen_arith_example(rng: SplitMix64, n_steps: int) -> tuple[str, str]:
+    """One chain. Returns (prompt_without_answer, answer_string).
+
+    Format: ``a=3;b=a+4;c=b*2;c?`` → answer ``14``. All values mod 100.
+    """
+    vals: dict[str, int] = {}
+    parts = []
+    for i in range(n_steps):
+        var = _VARS[i]
+        if i == 0:
+            v = 1 + rng.below(9)
+            parts.append(f"{var}={v}")
+        else:
+            src = _VARS[rng.below(i)]
+            op = rng.choice("+-*")
+            operand = 1 + rng.below(9)
+            if op == "+":
+                v = (vals[src] + operand) % 100
+            elif op == "-":
+                v = (vals[src] - operand) % 100
+            else:
+                v = (vals[src] * operand) % 100
+            parts.append(f"{var}={src}{op}{operand}")
+        vals[var] = v
+    q = _VARS[n_steps - 1]
+    return ";".join(parts) + f";{q}?", str(vals[q])
+
+
+def gen_arith_prompt(
+    rng: SplitMix64, n_steps: int, n_shots: int
+) -> tuple[str, str]:
+    """Few-shot prompt: k solved chains, then an unsolved one."""
+    shots = []
+    for _ in range(n_shots):
+        p, a = gen_arith_example(rng, n_steps)
+        shots.append(p + a)
+    query, answer = gen_arith_example(rng, n_steps)
+    return "\n".join(shots + [query]), answer
+
+
+# ---------------------------------------------------------------------------
+# needle task — key/value recall
+# ---------------------------------------------------------------------------
+
+
+def gen_needle_example(rng: SplitMix64, n_pairs: int) -> tuple[str, str]:
+    """``k17=v42;k83=v07;...;k17?`` → ``v42``. Keys are distinct 2-digit."""
+    keys = list(range(100))
+    # Fisher–Yates shuffle with our PRNG.
+    for i in range(99, 0, -1):
+        j = rng.below(i + 1)
+        keys[i], keys[j] = keys[j], keys[i]
+    keys = keys[:n_pairs]
+    pairs = [(k, rng.below(100)) for k in keys]
+    ctx = ";".join(f"k{k:02d}=v{v:02d}" for k, v in pairs)
+    qk, qv = pairs[rng.below(n_pairs)]
+    return f"{ctx};k{qk:02d}?", f"v{qv:02d}"
+
+
+# ---------------------------------------------------------------------------
+# copy task — verbatim long-range completion
+# ---------------------------------------------------------------------------
+
+
+def gen_copy_example(rng: SplitMix64, n_chars: int) -> tuple[str, str]:
+    """``<random letters>#`` → the same letters again."""
+    s = "".join(
+        VOCAB_CHARS[2 + rng.below(26)] for _ in range(n_chars)
+    )  # letters a..z
+    return s + "#", s
+
+
+# ---------------------------------------------------------------------------
+# sort task
+# ---------------------------------------------------------------------------
+
+
+def gen_sort_example(rng: SplitMix64, n_digits: int) -> tuple[str, str]:
+    """``7,3,9,1>`` → ``1,3,7,9``."""
+    ds = [rng.below(10) for _ in range(n_digits)]
+    return ",".join(map(str, ds)) + ">", ",".join(map(str, sorted(ds)))
+
+
+# ---------------------------------------------------------------------------
+# Mixed training corpus
+# ---------------------------------------------------------------------------
+
+TASK_NAMES = ("lm", "arith", "arith_hard", "needle", "copy", "sort")
+
+
+def gen_training_document(rng: SplitMix64) -> str:
+    """One training document: a solved task instance (or prose).
+
+    Mixture is retrieval-heavy: induction-style skills (needle/copy) need
+    the most gradient signal at these model scales."""
+    r = rng.below(10)
+    if r < 2:
+        return gen_lm_text(rng, 120 + rng.below(140))
+    if r < 4:
+        # half the time, a few-shot style document (solved chains separated
+        # by newlines) so the eval-time few-shot format is in-distribution
+        if rng.below(2) == 0:
+            p, a = gen_arith_example(rng, 2 + rng.below(4))
+            return p + a
+        chains = [
+            "".join(gen_arith_example(rng, 3 + rng.below(2)))
+            for _ in range(2 + rng.below(3))
+        ]
+        return "\n".join(chains)
+    if r == 4:
+        p, a = gen_arith_example(rng, 5 + rng.below(4))  # hard variant
+        return p + a
+    if r < 8:
+        p, a = gen_needle_example(rng, 4 + rng.below(28))
+        return p + a
+    if r == 8:
+        p, a = gen_copy_example(rng, 8 + rng.below(32))
+        return p + a
+    p, a = gen_sort_example(rng, 3 + rng.below(6))
+    return p + a
+
+
+def token_stream(seed: int, n_tokens: int) -> np.ndarray:
+    """Concatenate BOS-separated training documents into a token stream."""
+    rng = SplitMix64(seed)
+    toks: list[int] = []
+    while len(toks) < n_tokens:
+        toks.append(BOS)
+        toks.extend(encode(gen_training_document(rng)))
+        toks.append(_CH2ID["\n"])
+    return np.asarray(toks[:n_tokens], dtype=np.int32)
+
+
+#: loss weight for answer spans (tokens after a query marker ?/>/# up to
+#: the newline). Answers are the only positions where task *competence*
+#: (rather than format) shows up in the loss; upweighting them sharpens the
+#: learning signal for retrieval/induction enormously at our tiny scale.
+ANSWER_WEIGHT = 8.0
+_QUERY_MARKS = {_CH2ID[c] for c in "?>#"}
+_NL = _CH2ID["\n"]
+
+
+def answer_weights(stream: np.ndarray) -> np.ndarray:
+    """Per-position loss weights for a token stream (weight of predicting
+    ``stream[i]`` given the prefix): ANSWER_WEIGHT inside answer spans."""
+    w = np.ones(len(stream), dtype=np.float32)
+    in_ans = False
+    for i, t in enumerate(stream):
+        if in_ans:
+            w[i] = ANSWER_WEIGHT
+        if t in _QUERY_MARKS:
+            in_ans = True
+        elif t == _NL or t == BOS:
+            in_ans = False
+    return w
+
+
+def training_batches(seed: int, n_tokens: int, batch: int, seq: int):
+    """Yield (x, y, w) next-token batches carved from the token stream."""
+    stream = token_stream(seed, n_tokens)
+    weights = answer_weights(stream)
+    per = batch * seq
+    n = (len(stream) - 1) // per
+    for i in range(n):
+        chunk = stream[i * per : i * per + per + 1]
+        x = chunk[:-1].reshape(batch, seq)
+        y = chunk[1:].reshape(batch, seq)
+        w = weights[i * per + 1 : i * per + per + 1].reshape(batch, seq)
+        yield x, y, w
+
+
+# Disjoint corpora for the Table 1 reconstruction-error protocol. Each is a
+# different *distribution* (WikiText / CNN-DailyMail / IMDB / TweetEval
+# substitutes): prose, arithmetic, retrieval, mixed-short.
+TABLE1_CORPORA = {
+    "prose": lambda rng: gen_lm_text(rng, 200),
+    "arith": lambda rng: "\n".join(
+        p + a for p, a in (gen_arith_example(rng, 3 + rng.below(4)) for _ in range(6))
+    ),
+    "retrieval": lambda rng: ";".join(
+        p + a for p, a in (gen_needle_example(rng, 10 + rng.below(20)) for _ in range(2))
+    ),
+    "mixed": lambda rng: "\n".join(
+        [
+            gen_sort_example(rng, 4 + rng.below(5))[0],
+            gen_copy_example(rng, 10 + rng.below(20))[0],
+            gen_lm_text(rng, 80),
+        ]
+    ),
+}
+
+
+def corpus_tokens(name: str, seed: int, n_tokens: int) -> np.ndarray:
+    """Token stream drawn from one of the Table-1 corpora."""
+    gen = TABLE1_CORPORA[name]
+    rng = SplitMix64(seed)
+    toks: list[int] = []
+    while len(toks) < n_tokens:
+        toks.append(BOS)
+        toks.extend(encode(gen(rng)))
+    return np.asarray(toks[:n_tokens], dtype=np.int32)

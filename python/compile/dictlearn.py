@@ -1,0 +1,252 @@
+"""Dictionary learning for Lexico (paper §3.3, Fig. 4) + Table 1 baselines.
+
+Trains per-layer key/value dictionaries by direct gradient-based
+optimization: each step OMP-encodes a batch of KV vectors against the
+current dictionary, then takes an Adam step on the ℓ2 reconstruction loss
+with gradient components parallel to each atom removed (the paper's
+unit-norm enforcement), followed by re-normalization.
+
+Also implements the Table 1 baselines:
+  * sparse autoencoder (two-layer perceptron, hard top-k activation);
+  * random unit-norm dictionaries.
+
+The OMP encoder here (``omp_jnp``) is the same inverse-Gram algorithm as the
+L1 Pallas kernel, written as plain jnp so the training loop jits tightly on
+CPU; equivalence of the two (and of both against the textbook oracle in
+``kernels/ref.py``) is asserted by the test suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+# ---------------------------------------------------------------------------
+# Batched OMP in plain jnp (jit-friendly; same math as kernels/omp.py)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(2,), static_argnames=("delta",))
+def omp_jnp(D, X, s: int, delta: float = 0.0):
+    """OMP over rows of X [B,m] w.r.t. D [m,N] (unit-norm columns).
+
+    Returns (idx [B,s] i32, val [B,s] f32, nnz [B] i32)."""
+    b, m = X.shape
+    n = D.shape[1]
+    f = X.dtype
+    norm_x = jnp.sqrt(jnp.sum(X * X, axis=1))
+
+    def body(i, carry):
+        sel, sel_d, g_inv, y, r, mask, nnz = carry
+        r_norm = jnp.sqrt(jnp.sum(r * r, axis=1))
+        active = r_norm > jnp.maximum(delta * norm_x, 1e-12)
+        c = jnp.abs(r @ D)
+        c = jnp.where(mask, -jnp.inf, c)
+        j = jnp.argmax(c, axis=1)
+        dj = jnp.take(D.T, j, axis=0)
+        e_i = jax.nn.one_hot(i, s, dtype=f)
+        bb = jnp.einsum("tsm,tm->ts", sel_d, dj)
+        u = jnp.einsum("tsk,tk->ts", g_inv, bb)
+        beta = jnp.maximum(1.0 - jnp.sum(bb * u, axis=1), 1e-8)[:, None, None]
+        upd = (
+            u[:, :, None] * u[:, None, :]
+            - u[:, :, None] * e_i[None, None, :]
+            - e_i[None, :, None] * u[:, None, :]
+            + e_i[None, :, None] * e_i[None, None, :]
+        ) / beta
+        g_inv_n = g_inv + upd
+        sel_d_n = sel_d + e_i[None, :, None] * dj[:, None, :]
+        sel_n = sel + e_i.astype(jnp.int32)[None, :] * j[:, None].astype(jnp.int32)
+        alpha = jnp.einsum("tsm,tm->ts", sel_d_n, X)
+        y_n = jnp.einsum("tsk,tk->ts", g_inv_n, alpha)
+        r_n = X - jnp.einsum("ts,tsm->tm", y_n, sel_d_n)
+        mask_n = mask | jax.nn.one_hot(j, n, dtype=jnp.bool_)
+        a1, a2 = active[:, None], active[:, None, None]
+        return (
+            jnp.where(a1, sel_n, sel),
+            jnp.where(a2, sel_d_n, sel_d),
+            jnp.where(a2, g_inv_n, g_inv),
+            jnp.where(a1, y_n, y),
+            jnp.where(a1, r_n, r),
+            jnp.where(a1, mask_n, mask),
+            nnz + active.astype(jnp.int32),
+        )
+
+    init = (
+        jnp.zeros((b, s), jnp.int32),
+        jnp.zeros((b, s, m), f),
+        jnp.zeros((b, s, s), f),
+        jnp.zeros((b, s), f),
+        X,
+        jnp.zeros((b, n), jnp.bool_),
+        jnp.zeros((b,), jnp.int32),
+    )
+    sel, _, _, y, _, _, nnz = jax.lax.fori_loop(0, s, body, init)
+    return sel, y, nnz
+
+
+def reconstruct_jnp(D, idx, val):
+    """X̂ [B,m] from sparse codes."""
+    return jnp.einsum("bs,bsm->bm", val, jnp.take(D.T, idx, axis=0))
+
+
+def rel_error_jnp(D, X, idx, val):
+    err = jnp.linalg.norm(X - reconstruct_jnp(D, idx, val), axis=-1)
+    return err / jnp.maximum(jnp.linalg.norm(X, axis=-1), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# KV-vector collection (training data for the dictionaries)
+# ---------------------------------------------------------------------------
+
+
+def collect_kv(params, cfg, seed: int, n_tokens: int, seq: int = 256):
+    """Run the model over the synthetic corpus and gather per-layer K/V states.
+
+    Returns (K [L, n_vecs, m], V [L, n_vecs, m]) — kv-heads flattened into
+    the vector axis (the paper's dictionaries are per-layer, shared across
+    heads)."""
+    fwd = jax.jit(lambda p, t: model_mod.forward(p, cfg, t)[1:])
+    ks, vs = [], []
+    stream = data_mod.token_stream(seed, n_tokens)
+    n_chunks = len(stream) // seq
+    for c in range(n_chunks):
+        toks = jnp.asarray(stream[c * seq : (c + 1) * seq][None], jnp.int32)
+        k, v = fwd(params, toks)  # [L,1,KV,T,m]
+        ks.append(np.asarray(k[:, 0]))  # [L,KV,T,m]
+        vs.append(np.asarray(v[:, 0]))
+    k = np.concatenate(ks, axis=2)  # [L,KV,T_total,m]
+    v = np.concatenate(vs, axis=2)
+    ll, kv, tt, m = k.shape
+    return k.reshape(ll, kv * tt, m), v.reshape(ll, kv * tt, m)
+
+
+# ---------------------------------------------------------------------------
+# Lexico dictionary training (OMP encoder + projected Adam)
+# ---------------------------------------------------------------------------
+
+
+def init_dictionary(key, m: int, n: int):
+    """Uniform init (PyTorch linear-layer default), unit-norm columns."""
+    lim = 1.0 / np.sqrt(m)
+    d = jax.random.uniform(key, (m, n), jnp.float32, -lim, lim)
+    return d / jnp.linalg.norm(d, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _dict_step(D, opt, X, lr, s: int):
+    """One training step: OMP encode (stop-grad), ℓ2 loss, projected Adam."""
+    idx, val, _ = omp_jnp(D, X, s)
+
+    def loss(d):
+        return jnp.mean(jnp.sum((X - reconstruct_jnp(d, idx, val)) ** 2, axis=1))
+
+    l, g = jax.value_and_grad(loss)(D)
+    # remove gradient components parallel to each atom (unit-norm tangent)
+    par = jnp.sum(g * D, axis=0, keepdims=True)
+    g = g - par * D
+    new_d, opt = model_mod.adam_update({"d": D}, {"d": g}, opt, lr)
+    d = new_d["d"]
+    d = d / jnp.maximum(jnp.linalg.norm(d, axis=0, keepdims=True), 1e-8)
+    return d, opt, l
+
+
+def train_dictionary(
+    vectors: np.ndarray,
+    n_atoms: int,
+    s: int,
+    epochs: int = 12,
+    batch: int = 256,
+    lr: float = 1e-4,
+    seed: int = 0,
+    log=None,
+):
+    """Train one dictionary on ``vectors`` [n,m]. Paper recipe: Adam with
+    cosine decay over the epochs, lr 1e-4."""
+    n_vec, m = vectors.shape
+    key = jax.random.PRNGKey(seed)
+    d = init_dictionary(key, m, n_atoms)
+    opt = model_mod.adam_init({"d": d})
+    n_batches = max(1, n_vec // batch)
+    total = epochs * n_batches
+    step_i = 0
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        perm = rng.permutation(n_vec)
+        ep_loss = 0.0
+        for bi in range(n_batches):
+            xb = jnp.asarray(vectors[perm[bi * batch : (bi + 1) * batch]])
+            cur_lr = lr * 0.5 * (1.0 + np.cos(np.pi * step_i / total))
+            d, opt, l = _dict_step(d, opt, xb, cur_lr, s)
+            ep_loss += float(l)
+            step_i += 1
+        if log:
+            log(f"  dict epoch {ep+1}/{epochs} loss {ep_loss / n_batches:.5f}")
+    return np.asarray(d)
+
+
+# ---------------------------------------------------------------------------
+# Table 1 baselines
+# ---------------------------------------------------------------------------
+
+
+def random_dictionary(m: int, n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((m, n)).astype(np.float32)
+    return d / np.linalg.norm(d, axis=0, keepdims=True)
+
+
+def _topk_hard(z, k: int):
+    """K-sparse autoencoder activation: keep top-k by |activation|."""
+    vals = jax.lax.top_k(jnp.abs(z), k)[0]
+    thresh = vals[..., -1][..., None]
+    return jnp.where(jnp.abs(z) >= thresh, z, 0.0)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _sae_step(enc, dec, opt, X, s: int, lr=1e-3):  # noqa: D401
+    def loss(params):
+        e, d = params["enc"], params["dec"]
+        y = _topk_hard(X @ e, s)
+        return jnp.mean(jnp.sum((X - y @ d.T) ** 2, axis=1))
+
+    l, g = jax.value_and_grad(loss)({"enc": enc, "dec": dec})
+    new, opt = model_mod.adam_update({"enc": enc, "dec": dec}, g, opt, lr)
+    d = new["dec"]
+    d = d / jnp.maximum(jnp.linalg.norm(d, axis=0, keepdims=True), 1e-8)
+    return new["enc"], d, opt, l
+
+
+def train_sae(vectors: np.ndarray, n_atoms: int, s: int, epochs: int = 12,
+              batch: int = 256, seed: int = 0, lr: float = 3e-3):
+    """Two-layer perceptron with hard top-k activation (Table 1 baseline).
+
+    Returns (encoder [m,N], decoder [m,N]); reconstruction uses
+    ``topk(x·enc) @ decᵀ``."""
+    n_vec, m = vectors.shape
+    key = jax.random.PRNGKey(seed)
+    enc = jnp.asarray(np.asarray(init_dictionary(key, m, n_atoms)))
+    dec = init_dictionary(jax.random.PRNGKey(seed + 1), m, n_atoms)
+    opt = model_mod.adam_init({"enc": enc, "dec": dec})
+    rng = np.random.default_rng(seed)
+    n_batches = max(1, n_vec // batch)
+    for _ in range(epochs):
+        perm = rng.permutation(n_vec)
+        for bi in range(n_batches):
+            xb = jnp.asarray(vectors[perm[bi * batch : (bi + 1) * batch]])
+            enc, dec, opt, _ = _sae_step(enc, dec, opt, xb, s, lr)
+    return np.asarray(enc), np.asarray(dec)
+
+
+def sae_rel_error(enc, dec, X, s: int) -> np.ndarray:
+    y = _topk_hard(jnp.asarray(X) @ jnp.asarray(enc), s)
+    recon = y @ jnp.asarray(dec).T
+    err = jnp.linalg.norm(jnp.asarray(X) - recon, axis=-1)
+    return np.asarray(err / jnp.maximum(jnp.linalg.norm(jnp.asarray(X), axis=-1), 1e-12))

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+from . import ref  # noqa: F401
+from .omp import omp  # noqa: F401
+from .sparse_attn import lexico_decode_attn  # noqa: F401

@@ -1,0 +1,115 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels.
+
+These implementations favour clarity over speed; every Pallas kernel in this
+package is validated against them by ``python/tests/``. The OMP oracle uses
+an explicit least-squares solve per iteration (textbook OMP, Algorithm 1 of
+the paper); the decode-attention oracle materializes the dense
+reconstruction ``K̂ = K_csr D_kᵀ`` (Eq. 4/5) and runs standard attention.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def omp_ref(
+    D: np.ndarray, X: np.ndarray, s: int, delta: float | None = None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Textbook OMP. ``D`` is [m, N] with unit-norm columns, ``X`` is [B, m].
+
+    Returns (indices [B, s] int32, values [B, s] f32, nnz [B] int32).
+    If ``delta`` is given, iteration stops early once
+    ``||x - Dy||_2 <= delta * ||x||_2`` (paper §4.2.1); unused slots have
+    index 0 and value 0 and are excluded from nnz.
+    """
+    m, N = D.shape
+    B = X.shape[0]
+    idxs = np.zeros((B, s), dtype=np.int32)
+    vals = np.zeros((B, s), dtype=np.float32)
+    nnz = np.zeros((B,), dtype=np.int32)
+    for b in range(B):
+        x = X[b].astype(np.float64)
+        norm_x = np.linalg.norm(x)
+        support: list[int] = []
+        y = np.zeros(0)
+        for i in range(s):
+            r = x - (D[:, support].astype(np.float64) @ y if support else 0.0)
+            if delta is not None and np.linalg.norm(r) <= delta * norm_x:
+                break
+            c = D.astype(np.float64).T @ r
+            c[support] = 0.0  # residual already ⊥ span(support)
+            j = int(np.argmax(np.abs(c)))
+            support.append(j)
+            sub = D[:, support].astype(np.float64)
+            y, *_ = np.linalg.lstsq(sub, x, rcond=None)
+        k = len(support)
+        idxs[b, :k] = support
+        vals[b, :k] = y.astype(np.float32)
+        nnz[b] = k
+    return idxs, vals, nnz
+
+
+def reconstruct(D: np.ndarray, idxs: np.ndarray, vals: np.ndarray) -> np.ndarray:
+    """Dense reconstruction ``X̂[b] = Σ_j vals[b,j] · D[:, idxs[b,j]]``."""
+    atoms = D.T[idxs]  # [B, s, m]
+    return np.einsum(
+        "bs,bsm->bm", vals.astype(np.float64), atoms.astype(np.float64)
+    ).astype(np.float32)
+
+
+def rel_error(
+    D: np.ndarray, X: np.ndarray, idxs: np.ndarray, vals: np.ndarray
+) -> np.ndarray:
+    """Per-vector relative ℓ2 reconstruction error (Table 1 metric)."""
+    err = np.linalg.norm(X - reconstruct(D, idxs, vals), axis=-1)
+    return err / np.maximum(np.linalg.norm(X, axis=-1), 1e-12)
+
+
+def lexico_decode_attn_ref(
+    q: np.ndarray,          # [H, m]           query heads (single new token)
+    k_idx: np.ndarray,      # [KV, Tc, s]      compressed key indices
+    k_val: np.ndarray,      # [KV, Tc, s]      compressed key coefficients
+    v_idx: np.ndarray,      # [KV, Tc, s]
+    v_val: np.ndarray,      # [KV, Tc, s]
+    d_k: np.ndarray,        # [m, N]
+    d_v: np.ndarray,        # [m, N]
+    k_buf: np.ndarray,      # [KV, Tb, m]      full-precision buffer (incl. k_t)
+    v_buf: np.ndarray,      # [KV, Tb, m]
+) -> np.ndarray:
+    """Reference for Eq. (7): split attention over compressed + buffer cache.
+
+    Grouped-query attention: query head h uses kv head h // (H // KV).
+    Returns the attention output [H, m].
+    """
+    H, m = q.shape
+    KV = k_idx.shape[0]
+    group = H // KV
+    out = np.zeros((H, m), dtype=np.float32)
+    for h in range(H):
+        g = h // group
+        k_hat = reconstruct(d_k, k_idx[g], k_val[g])  # [Tc, m]
+        v_hat = reconstruct(d_v, v_idx[g], v_val[g])  # [Tc, m]
+        keys = np.concatenate([k_hat, k_buf[g]], axis=0)  # [Tc+Tb, m]
+        values = np.concatenate([v_hat, v_buf[g]], axis=0)
+        scores = keys @ q[h] / np.sqrt(m)
+        scores -= scores.max()
+        w = np.exp(scores)
+        w /= w.sum()
+        out[h] = (w[:, None] * values).sum(axis=0)
+    return out
+
+
+def attn_ref(q: np.ndarray, K: np.ndarray, V: np.ndarray) -> np.ndarray:
+    """Plain single-token attention oracle. q [H,m], K/V [KV,T,m] → [H,m]."""
+    H, m = q.shape
+    KV = K.shape[0]
+    group = H // KV
+    out = np.zeros((H, m), dtype=np.float32)
+    for h in range(H):
+        g = h // group
+        scores = K[g] @ q[h] / np.sqrt(m)
+        scores -= scores.max()
+        w = np.exp(scores)
+        w /= w.sum()
+        out[h] = (w[:, None] * V[g]).sum(axis=0)
+    return out

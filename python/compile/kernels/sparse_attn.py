@@ -1,0 +1,107 @@
+"""Lexico split decode-attention as a Pallas kernel (paper Eq. 7 / Fig 2b).
+
+For one newly generated token the pre-softmax scores over the *compressed*
+prefix are computed without materializing K̂: first ``q·D_k`` (a [G,m]×[m,N]
+MXU matmul, shared across the whole kv-head group), then the sparse
+contraction with ``K_csr`` — a gather of ``s`` scalars per token followed by
+a fused multiply-accumulate on the VPU. Buffer tokens take the standard
+dense path, and the two score blocks share one softmax.
+
+The value side reconstructs ``V̂`` rows from ``D_v`` with a gather +
+weighted-sum (for tiny ``s`` this is the one-hot-matmul pattern the MXU
+prefers; in interpret mode it executes as a gather).
+
+Grid: one program per kv head; each program serves its whole GQA group.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lexico_decode_attn"]
+
+
+def _kernel(q_ref, kidx_ref, kval_ref, vidx_ref, vval_ref, dk_ref, dv_ref,
+            kbuf_ref, vbuf_ref, biasc_ref, biasb_ref, o_ref):
+    q = q_ref[...][0]        # [G, m]   query heads of this kv group
+    k_idx = kidx_ref[...][0]  # [Tc, s]
+    k_val = kval_ref[...][0]
+    v_idx = vidx_ref[...][0]
+    v_val = vval_ref[...][0]
+    d_k = dk_ref[...]        # [m, N]
+    d_v = dv_ref[...]
+    k_buf = kbuf_ref[...][0]  # [Tb, m]
+    v_buf = vbuf_ref[...][0]
+    bias_c = biasc_ref[...]  # [Tc]   additive score bias (0 or -inf mask)
+    bias_b = biasb_ref[...]  # [Tb]
+    m = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m, q.dtype))
+
+    # --- compressed scores: (q·D_k) then sparse contraction with K_csr ----
+    qd = q @ d_k                                   # [G, N]  (MXU)
+    gathered = jnp.take(qd, k_idx, axis=1)         # [G, Tc, s]
+    sc_c = jnp.sum(gathered * k_val[None], axis=2) * scale + bias_c[None]
+
+    # --- buffer scores: standard dense path -------------------------------
+    sc_b = (q @ k_buf.T) * scale + bias_b[None]    # [G, Tb]
+
+    # --- joint softmax -----------------------------------------------------
+    scores = jnp.concatenate([sc_c, sc_b], axis=1)  # [G, Tc+Tb]
+    scores = scores - jnp.max(scores, axis=1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    tc = sc_c.shape[1]
+    w_c, w_b = w[:, :tc], w[:, tc:]
+
+    # --- value side: V̂ rows via gather + weighted sum ---------------------
+    atoms = jnp.take(d_v.T, v_idx, axis=0)          # [Tc, s, m]
+    v_hat = jnp.einsum("ts,tsm->tm", v_val, atoms)  # [Tc, m]
+    out = w_c @ v_hat + w_b @ v_buf                 # [G, m]
+    o_ref[...] = out[None]
+
+
+def lexico_decode_attn(q, k_idx, k_val, v_idx, v_val, d_k, d_v, k_buf, v_buf,
+                       bias_c=None, bias_b=None):
+    """Split attention for one token. Shapes as in ``ref.lexico_decode_attn_ref``:
+
+    q [H,m]; k_idx/k_val/v_idx/v_val [KV,Tc,s]; d_k/d_v [m,N];
+    k_buf/v_buf [KV,Tb,m] (buffer already includes the new token's k/v);
+    optional additive score biases bias_c [Tc] / bias_b [Tb] (use -1e30 to
+    mask invalid slots). Returns the attention output [H, m].
+    """
+    h, m = q.shape
+    kv, tc, s = k_idx.shape
+    tb = k_buf.shape[1]
+    n_atoms = d_k.shape[1]
+    g = h // kv
+    assert g * kv == h, (h, kv)
+    if bias_c is None:
+        bias_c = jnp.zeros((tc,), q.dtype)
+    if bias_b is None:
+        bias_b = jnp.zeros((tb,), q.dtype)
+    qg = q.reshape(kv, g, m)
+    out = pl.pallas_call(
+        functools.partial(_kernel),
+        grid=(kv,),
+        in_specs=[
+            pl.BlockSpec((1, g, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tc, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tc, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tc, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tc, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, n_atoms), lambda i: (0, 0)),
+            pl.BlockSpec((m, n_atoms), lambda i: (0, 0)),
+            pl.BlockSpec((1, tb, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tb, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tc,), lambda i: (0,)),
+            pl.BlockSpec((tb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, g, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kv, g, m), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qg, k_idx, k_val, v_idx, v_val, d_k, d_v, k_buf, v_buf, bias_c, bias_b)
+    return out.reshape(h, m)

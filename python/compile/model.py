@@ -1,0 +1,369 @@
+"""L2 — the JAX GQA transformer (fwd/bwd) and the Lexico decode path.
+
+This is the paper's "model" layer: a decoder-only transformer with grouped-
+query attention, RoPE, RMSNorm and SwiGLU — the architecture family of every
+model the paper evaluates (Llama-3.x / Mistral / Qwen2.5). Three sizes (S/M/L,
+DESIGN.md §1) are trained from scratch by ``aot.py`` at build time; weights
+are exported to ``artifacts/model_{size}.bin`` and all inference graphs are
+lowered to HLO text for the Rust/PJRT runtime. Python never runs at serving
+time.
+
+The Lexico decode step (``lexico_decode_step``) composes the L1 Pallas
+kernels (``kernels.omp``, ``kernels.sparse_attn``) into the full Eq. 7
+computation so they lower into the same HLO artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.sparse_attn import lexico_decode_attn
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters. ``name`` keys the artifact files."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    max_seq: int
+    rope_base: float = 10000.0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            params = init_params(jax.random.PRNGKey(0), self)
+        return sum(int(np.prod(v.shape)) for v in params.values())
+
+
+# The three model scales (Fig. 1's 1B/3B/8B ladder substitute). head_dim m=32
+# throughout, so the paper's (3s+2)/(2m) memory accounting applies unchanged.
+CONFIGS = {
+    "S": ModelConfig("S", n_layers=2, d_model=64, n_heads=2, n_kv_heads=1,
+                     head_dim=32, d_ff=128, vocab=57, max_seq=640),
+    "M": ModelConfig("M", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                     head_dim=32, d_ff=256, vocab=57, max_seq=640),
+    "L": ModelConfig("L", n_layers=8, d_model=128, n_heads=4, n_kv_heads=2,
+                     head_dim=32, d_ff=256, vocab=57, max_seq=640),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Flat name → shape map; the single source of truth for the .bin format."""
+    shapes: dict[str, tuple[int, ...]] = {"embed": (cfg.vocab, cfg.d_model)}
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes[p + "ln1"] = (cfg.d_model,)
+        shapes[p + "wq"] = (cfg.d_model, cfg.q_dim)
+        shapes[p + "wk"] = (cfg.d_model, cfg.kv_dim)
+        shapes[p + "wv"] = (cfg.d_model, cfg.kv_dim)
+        shapes[p + "wo"] = (cfg.q_dim, cfg.d_model)
+        shapes[p + "ln2"] = (cfg.d_model,)
+        shapes[p + "w1"] = (cfg.d_model, cfg.d_ff)
+        shapes[p + "w3"] = (cfg.d_model, cfg.d_ff)
+        shapes[p + "w2"] = (cfg.d_ff, cfg.d_model)
+    shapes["lnf"] = (cfg.d_model,)
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig) -> dict[str, jax.Array]:
+    """Scaled-normal init; norms start at 1."""
+    shapes = param_shapes(cfg)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "lnf")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """cos/sin tables for given positions [..., d/2] (split-half convention)."""
+    half = cfg.head_dim // 2
+    inv = cfg.rope_base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., head_dim]; cos/sin broadcastable to [..., head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(params, i, x):
+    p = f"layer{i}."
+    q = x @ params[p + "wq"]
+    k = x @ params[p + "wk"]
+    v = x @ params[p + "wv"]
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    """Causal LM forward. tokens [B,T] int32 → logits [B,T,V].
+
+    Also returns the per-layer K/V states (post-RoPE keys) for cache export:
+    (logits, k_states [L,B,KV,T,m], v_states).
+    """
+    b, t = tokens.shape
+    x = params["embed"][tokens]  # [B,T,d]
+    pos = jnp.arange(t)
+    cos, sin = rope_angles(cfg, pos)  # [T, m/2]
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q, k, v = _qkv(params, i, h)
+        q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos[None, :, None], sin[None, :, None])
+        k = apply_rope(k, cos[None, :, None], sin[None, :, None])
+        ks.append(k.transpose(0, 2, 1, 3))  # [B,KV,T,m]
+        vs.append(v.transpose(0, 2, 1, 3))
+        group = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k, group, axis=2)
+        vr = jnp.repeat(v, group, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", q, kr) / math.sqrt(cfg.head_dim)
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhts,bshd->bthd", w, vr).reshape(b, t, cfg.q_dim)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2"])
+        gate = jax.nn.silu(h @ params[p + "w1"]) * (h @ params[p + "w3"])
+        x = x + gate @ params[p + "w2"]
+    x = rmsnorm(x, params["lnf"])
+    logits = x @ params["embed"].T  # tied unembedding
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def loss_fn(params, cfg: ModelConfig, x, y, w=None):
+    """Weighted next-token cross-entropy (w=None ⇒ uniform)."""
+    logits, _, _ = forward(params, cfg, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    if w is None:
+        return nll.mean()
+    return jnp.sum(nll * w) / jnp.sum(w)
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled — this image has no optax)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mh = {k: m[k] / (1 - b1 ** t.astype(jnp.float32)) for k in params}
+    vh = {k: v[k] / (1 - b2 ** t.astype(jnp.float32)) for k in params}
+    new = {k: params[k] - lr * mh[k] / (jnp.sqrt(vh[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def make_train_step(cfg: ModelConfig, peak_lr: float, total_steps: int):
+    """Jitted fwd/bwd + Adam with cosine decay (the paper's dict-training
+    recipe applied to the model itself)."""
+
+    warmup = max(1, total_steps // 20)
+
+    def step(params, opt, x, y, w):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, x, y, w)
+        t = opt["t"].astype(jnp.float32)
+        frac = jnp.clip((t - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        lr = peak_lr * jnp.minimum(t / warmup, 1.0) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# Decode graphs (AOT-exported; executed from Rust via PJRT)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, k_cache, v_cache):
+    """One autoregressive step with a dense (full-precision) KV cache.
+
+    token [B] int32; pos [B] int32 (0-based index of this token);
+    k_cache/v_cache [L,B,KV,Tmax,m]. Returns (logits [B,V], k_cache, v_cache)
+    with the new K/V written at position ``pos``.
+    """
+    b = token.shape[0]
+    t_max = k_cache.shape[3]
+    x = params["embed"][token]  # [B,d]
+    cos, sin = rope_angles(cfg, pos)  # [B, m/2]
+    valid = jnp.arange(t_max)[None, :] <= pos[:, None]  # [B,Tmax]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q, k, v = _qkv(params, i, h)
+        q = apply_rope(q.reshape(b, cfg.n_heads, cfg.head_dim), cos[:, None], sin[:, None])
+        k = apply_rope(k.reshape(b, cfg.n_kv_heads, cfg.head_dim), cos[:, None], sin[:, None])
+        v = v.reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        # scatter the new K/V at position pos
+        onehot = (jnp.arange(t_max)[None, :] == pos[:, None]).astype(k.dtype)  # [B,T]
+        k_cache = k_cache.at[i].add(onehot[:, None, :, None] * k[:, :, None, :])
+        v_cache = v_cache.at[i].add(onehot[:, None, :, None] * v[:, :, None, :])
+        group = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k_cache[i], group, axis=1)  # [B,H,T,m]
+        vr = jnp.repeat(v_cache[i], group, axis=1)
+        scores = jnp.einsum("bhd,bhtd->bht", q, kr) / math.sqrt(cfg.head_dim)
+        scores = jnp.where(valid[:, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bht,bhtd->bhd", w, vr).reshape(b, cfg.q_dim)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2"])
+        gate = jax.nn.silu(h @ params[p + "w1"]) * (h @ params[p + "w3"])
+        x = x + gate @ params[p + "w2"]
+    x = rmsnorm(x, params["lnf"])
+    return x @ params["embed"].T, k_cache, v_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, n_valid):
+    """Prefill graph: tokens [B,Tmax] (PAD beyond n_valid). Returns
+    (logits at the last valid position [B,V], k_states, v_states
+    [L,B,KV,Tmax,m]). Padding keys are left in the cache but masked by
+    position bounds at decode time."""
+    logits, ks, vs = forward(params, cfg, tokens)
+    b = tokens.shape[0]
+    last = jnp.take_along_axis(
+        logits, (n_valid - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    del b
+    return last, ks, vs
+
+
+def lexico_decode_step(
+    params, cfg: ModelConfig, d_k, d_v,
+    token, pos,
+    k_idx, k_val, v_idx, v_val, n_csr,
+    k_buf, v_buf, n_buf,
+):
+    """One autoregressive step over the Lexico compressed cache (Eq. 7).
+
+    d_k/d_v          [L, m, N]      per-layer dictionaries
+    token, pos       [1]            (single-sequence graph)
+    k_idx/k_val/...  [L, KV, Tc, s] CSR-as-dense compressed prefix
+    n_csr            []             number of valid compressed tokens
+    k_buf/v_buf      [L, KV, Tb, m] recency buffer (full precision)
+    n_buf            []             number of valid buffer tokens *excluding*
+                                    the new token (its slot is n_buf)
+
+    Returns (logits [V], k_t [L,KV,m], v_t [L,KV,m]): the coordinator owns
+    buffer append / OMP compression (Alg. 2), keeping this graph pure.
+
+    Invalid CSR slots must carry value 0 (they then contribute exp(0)-free
+    scores — we mask them to -inf here via n_csr); invalid buffer slots are
+    masked likewise.
+    """
+    tc = k_idx.shape[2]
+    tb = k_buf.shape[2]
+    x = params["embed"][token][0]  # [d]
+    cos, sin = rope_angles(cfg, pos)  # [1, m/2]
+    k_out, v_out = [], []
+    mask_c = jnp.arange(tc) < n_csr          # [Tc]
+    mask_b = jnp.arange(tb) <= n_buf          # [Tb] (includes the new token)
+    neg = jnp.float32(-1e30)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, params[p + "ln1"])
+        q = (h @ params[p + "wq"]).reshape(cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        k_out.append(k)
+        v_out.append(v)
+        # place the new token's K/V into its buffer slot
+        slot = (jnp.arange(tb) == n_buf).astype(k.dtype)  # [Tb]
+        kb = k_buf[i] * (1.0 - slot)[None, :, None] + slot[None, :, None] * k[:, None, :]
+        vb = v_buf[i] * (1.0 - slot)[None, :, None] + slot[None, :, None] * v[:, None, :]
+        # split attention via the L1 Pallas kernel; validity masking enters
+        # as additive score biases (0 for valid slots, -1e30 otherwise).
+        bias_c = jnp.where(mask_c, 0.0, neg)
+        bias_b = jnp.where(mask_b, 0.0, neg)
+        attn = lexico_decode_attn(
+            q, k_idx[i], k_val[i], v_idx[i], v_val[i], d_k[i], d_v[i],
+            kb, vb, bias_c, bias_b,
+        ).reshape(cfg.q_dim)
+        x = x + attn @ params[p + "wo"]
+        h = rmsnorm(x, params[p + "ln2"])
+        gate = jax.nn.silu(h @ params[p + "w1"]) * (h @ params[p + "w3"])
+        x = x + gate @ params[p + "w2"]
+    x = rmsnorm(x, params["lnf"])
+    return x @ params["embed"].T, jnp.stack(k_out), jnp.stack(v_out)
+
+
+# ---------------------------------------------------------------------------
+# Greedy generation (python-side sanity evals only)
+# ---------------------------------------------------------------------------
+
+
+def generate_greedy(params, cfg: ModelConfig, prompt_ids, max_new: int, stop_id=None):
+    """Slow reference generation used by build-time sanity checks."""
+    ids = list(prompt_ids)
+    fwd = jax.jit(lambda p, t: forward(p, cfg, t)[0])
+    for _ in range(max_new):
+        t = jnp.asarray([ids], jnp.int32)
+        logits = fwd(params, t)
+        nxt = int(jnp.argmax(logits[0, len(ids) - 1]))
+        ids.append(nxt)
+        if stop_id is not None and nxt == stop_id:
+            break
+    return ids[len(prompt_ids):]

@@ -1,0 +1,101 @@
+"""Data contract: tokenizer, generators, PRNG parity with the Rust side."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_vocab_roundtrip():
+    s = "a=3;b=a+4;b?7\nk01=v02;k01?"
+    assert data.decode(data.encode(s)) == s
+    assert data.VOCAB_SIZE == 57
+
+
+def test_splitmix64_known_vectors():
+    # Same algorithm as rust/src/util/rng.rs — spot-check determinism and
+    # 64-bit wrapping behaviour.
+    r = data.SplitMix64(1234)
+    v = [r.next_u64() for _ in range(3)]
+    r2 = data.SplitMix64(1234)
+    assert v == [r2.next_u64() for _ in range(3)]
+    assert all(0 <= x < 2**64 for x in v)
+    # golden value (computed once; also asserted in the Rust tests via the
+    # shared artifact if regenerated)
+    r3 = data.SplitMix64(0)
+    assert r3.next_u64() == 16294208416658607535
+
+
+def test_arith_examples_solve():
+    rng = data.SplitMix64(1)
+    for _ in range(100):
+        p, a = data.gen_arith_example(rng, 4)
+        env = {}
+        chain, q = p.rsplit(";", 1)
+        for stmt in chain.split(";"):
+            var, expr = stmt.split("=")
+            for op in "+-*":
+                if op in expr:
+                    src, operand = expr.split(op)
+                    val = {"+": env[src] + int(operand),
+                           "-": env[src] - int(operand),
+                           "*": env[src] * int(operand)}[op] % 100
+                    break
+            else:
+                val = int(expr)
+            env[var] = val
+        assert str(env[q[:-1]]) == a, p
+
+
+def test_needle_consistency():
+    rng = data.SplitMix64(2)
+    for _ in range(30):
+        p, a = data.gen_needle_example(rng, 15)
+        q = p.rsplit(";", 1)[1][:-1]
+        assert f"{q}={a}" in p
+
+
+def test_training_stream_shapes():
+    stream = data.token_stream(seed=3, n_tokens=1000)
+    assert stream.shape == (1000,)
+    assert stream.min() >= 0 and stream.max() < data.VOCAB_SIZE
+    assert (stream == data.BOS).sum() > 0
+    batches = list(data.training_batches(3, 4 * 2 * 32 + 1, 2, 32))
+    assert len(batches) == 4
+    x, y, w = batches[0]
+    assert x.shape == (2, 32) and w.shape == (2, 32)
+    # next-token alignment
+    np.testing.assert_array_equal(x.reshape(-1)[1:], y.reshape(-1)[:-1])
+
+
+def test_answer_weights_mark_spans():
+    # "k01=v02;k01?v02\n" → the answer chars (v02) and the newline carry
+    # ANSWER_WEIGHT; everything else weight 1.
+    toks = np.asarray([data.BOS] + data.encode("k01?v02\nab"), np.int32)
+    w = data.answer_weights(toks)
+    text = "k01?v02\nab"
+    expect = [1.0] * (1 + len(text))
+    q = 1 + text.index("?")
+    for i in range(q + 1, 1 + text.index("\n") + 1):
+        expect[i] = data.ANSWER_WEIGHT
+    np.testing.assert_array_equal(w, expect)
+
+
+def test_table1_corpora_disjoint_formats():
+    toks = {name: data.corpus_tokens(name, 9, 400) for name in data.TABLE1_CORPORA}
+    texts = {name: data.decode(t) for name, t in toks.items()}
+    assert "k" in texts["retrieval"] and "=" in texts["retrieval"]
+    assert any(w in texts["prose"] for w in ("the", "fox", "river"))
+    assert ";" in texts["arith"]
+    for t in toks.values():
+        assert t.shape == (400,)
+
+
+def test_vocab_file_matches_rust_constant():
+    """artifacts/vocab.txt (when built) must equal VOCAB_CHARS."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/vocab.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        assert f.read() == data.VOCAB_CHARS

@@ -1,0 +1,63 @@
+"""Dictionary learning: convergence, constraints, baselines (Table 1 logic)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import dictlearn
+
+
+def subspace_data(rng, n_vec, m, n_sub=4, dim=3):
+    """Union-of-subspaces data — the structure Fig. 3 observes in keys."""
+    bases = [rng.standard_normal((dim, m)).astype(np.float32) for _ in range(n_sub)]
+    out = np.zeros((n_vec, m), np.float32)
+    for v in range(n_vec):
+        b = bases[rng.integers(n_sub)]
+        out[v] = rng.standard_normal(dim).astype(np.float32) @ b
+    return out
+
+
+@pytest.fixture(scope="module")
+def trained():
+    rng = np.random.default_rng(0)
+    vecs = subspace_data(rng, 512, 16)
+    d = dictlearn.train_dictionary(vecs, n_atoms=64, s=4, epochs=15, batch=64,
+                                   lr=3e-2, seed=1)
+    return vecs, d
+
+
+def test_atoms_unit_norm(trained):
+    _, d = trained
+    norms = np.linalg.norm(d, axis=0)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+
+def test_trained_beats_random(trained):
+    vecs, d = trained
+    rand = dictlearn.random_dictionary(16, 64, seed=9)
+    idx, val, _ = dictlearn.omp_jnp(jnp.asarray(d), jnp.asarray(vecs[:200]), 4)
+    e_t = np.asarray(dictlearn.rel_error_jnp(jnp.asarray(d), jnp.asarray(vecs[:200]), idx, val))
+    idx, val, _ = dictlearn.omp_jnp(jnp.asarray(rand), jnp.asarray(vecs[:200]), 4)
+    e_r = np.asarray(dictlearn.rel_error_jnp(jnp.asarray(rand), jnp.asarray(vecs[:200]), idx, val))
+    assert e_t.mean() < 0.8 * e_r.mean(), (e_t.mean(), e_r.mean())
+
+
+def test_sae_baseline_trains_and_reconstructs():
+    rng = np.random.default_rng(2)
+    vecs = subspace_data(rng, 256, 16)
+    enc, dec = dictlearn.train_sae(vecs, n_atoms=64, s=4, epochs=25, batch=64, seed=3, lr=1e-2)
+    errs = dictlearn.sae_rel_error(enc, dec, vecs[:100], 4)
+    assert np.isfinite(errs).all()
+    assert errs.mean() < 1.0
+    norms = np.linalg.norm(dec, axis=0)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+
+def test_collect_kv_shapes():
+    import jax
+    from compile import model
+    cfg = model.ModelConfig("T", 2, 32, 2, 1, 16, 64, 57, 96)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    k, v = dictlearn.collect_kv(params, cfg, seed=5, n_tokens=128, seq=64)
+    assert k.shape == (2, 128, 16)
+    assert v.shape == (2, 128, 16)

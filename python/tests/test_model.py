@@ -1,0 +1,115 @@
+"""L2 JAX model: shapes, causality, training, and the Lexico decode path."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+
+
+TINY = model.ModelConfig("T", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                         head_dim=16, d_ff=64, vocab=57, max_seq=96)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((2, 10), jnp.int32)
+    logits, ks, vs = model.forward(params, TINY, toks)
+    assert logits.shape == (2, 10, 57)
+    assert ks.shape == (2, 2, 1, 10, 16)
+    assert vs.shape == (2, 2, 1, 10, 16)
+
+
+def test_causality(params):
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(3, 57, (1, 12)).astype(np.int32)
+    b = a.copy()
+    b[0, -1] = (b[0, -1] - 3 + 1) % 54 + 3
+    la, _, _ = model.forward(params, TINY, jnp.asarray(a))
+    lb, _, _ = model.forward(params, TINY, jnp.asarray(b))
+    np.testing.assert_allclose(la[0, :-1], lb[0, :-1], atol=1e-5)
+    assert not np.allclose(la[0, -1], lb[0, -1])
+
+
+def test_decode_step_matches_forward(params):
+    """Autoregressive decode with the dense cache == full forward."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(3, 57, (1, 8)).astype(np.int32)
+    logits_full, ks, vs = model.forward(params, TINY, jnp.asarray(toks))
+    t_max = 16
+    kc = jnp.zeros((2, 1, 1, t_max, 16))
+    vc = jnp.zeros((2, 1, 1, t_max, 16))
+    kc = kc.at[:, :, :, :8].set(ks)
+    vc = vc.at[:, :, :, :8].set(vs)
+    nxt = jnp.asarray([5], jnp.int32)
+    logits_dec, _, _ = model.decode_step(
+        params, TINY, nxt, jnp.asarray([8], jnp.int32), kc, vc)
+    toks9 = np.concatenate([toks, [[5]]], axis=1)
+    logits_full9, _, _ = model.forward(params, TINY, jnp.asarray(toks9))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[0]), np.asarray(logits_full9[0, -1]), atol=1e-4)
+
+
+def test_lexico_decode_with_exact_dictionary(params):
+    """Identity dictionary + s=m ⇒ lexico decode == dense decode."""
+    m, n = 16, 16
+    eye = jnp.eye(m)[None].repeat(2, 0)  # [L, m, N]
+    rng = np.random.default_rng(2)
+    toks = rng.integers(3, 57, (1, 6)).astype(np.int32)
+    _, ks, vs = model.forward(params, TINY, jnp.asarray(toks))
+    # compress tokens 0..3 "exactly": idx=coordinates, val=components
+    tc, tb, s = 8, 6, m
+    k_idx = jnp.zeros((2, 1, tc, s), jnp.int32)
+    k_val = jnp.zeros((2, 1, tc, s))
+    v_idx = jnp.zeros((2, 1, tc, s), jnp.int32)
+    v_val = jnp.zeros((2, 1, tc, s))
+    # identity dictionary ⇒ indices are coordinates, coefficients are the
+    # vector components themselves. ks is [L,B,KV,T,m].
+    coords = jnp.arange(m)[None, None, None]
+    k_idx = k_idx.at[:, :, :4].set(coords.repeat(4, 2))
+    v_idx = v_idx.at[:, :, :4].set(coords.repeat(4, 2))
+    k_val = k_val.at[:, :, :4].set(ks[:, 0][:, :, :4, :])
+    v_val = v_val.at[:, :, :4].set(vs[:, 0][:, :, :4, :])
+    # buffer holds tokens 4,5 at slots 0,1
+    k_buf = jnp.zeros((2, 1, tb, m)).at[:, :, 0:2].set(ks[:, 0][:, :, 4:6, :])
+    v_buf = jnp.zeros((2, 1, tb, m)).at[:, :, 0:2].set(vs[:, 0][:, :, 4:6, :])
+    logits_lex, k_t, v_t = model.lexico_decode_step(
+        params, TINY, eye, eye,
+        jnp.asarray([7], jnp.int32), jnp.asarray([6], jnp.int32),
+        k_idx, k_val, v_idx, v_val, jnp.asarray(4, jnp.int32),
+        k_buf, v_buf, jnp.asarray(2, jnp.int32))
+    # reference: dense forward over the 7 tokens
+    toks7 = np.concatenate([toks, [[7]]], axis=1)
+    logits_ref, ks7, _ = model.forward(params, TINY, jnp.asarray(toks7))
+    np.testing.assert_allclose(
+        np.asarray(logits_lex), np.asarray(logits_ref[0, -1]), atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(k_t), np.asarray(ks7[:, 0][:, :, -1, :]), atol=1e-5)
+
+
+def test_training_reduces_loss():
+    cfg = TINY
+    params = model.init_params(jax.random.PRNGKey(1), cfg)
+    step = model.make_train_step(cfg, 3e-3, 30)
+    opt = model.adam_init(params)
+    losses = []
+    for x, y, w in data.training_batches(7, 30 * 2 * 64 + 1, 2, 64):
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y), jnp.asarray(w))
+        losses.append(float(loss))
+        if len(losses) >= 30:
+            break
+    assert losses[-1] < losses[0] * 0.8, losses[::6]
+
+
+def test_param_shapes_contract():
+    shapes = model.param_shapes(TINY)
+    assert shapes["embed"] == (57, 32)
+    assert shapes["layer0.wk"] == (32, 16)
+    assert shapes["layer1.w2"] == (64, 32)
+    assert len([k for k in shapes if k.startswith("layer0.")]) == 9

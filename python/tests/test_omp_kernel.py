@@ -1,0 +1,118 @@
+"""L1 Pallas OMP kernel vs the textbook oracle (kernels/ref.py)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import omp, ref
+from compile.dictlearn import omp_jnp
+
+
+def unit_dict(rng, m, n):
+    d = rng.standard_normal((m, n)).astype(np.float32)
+    return d / np.linalg.norm(d, axis=0, keepdims=True)
+
+
+def test_kernel_matches_oracle_exactly():
+    rng = np.random.default_rng(0)
+    m, n, b, s = 32, 256, 16, 6
+    d = unit_dict(rng, m, n)
+    x = rng.standard_normal((b, m)).astype(np.float32)
+    idx, val, nnz = omp(jnp.asarray(d), jnp.asarray(x), s, tile=8)
+    ridx, rval, rnnz = ref.omp_ref(d, x, s)
+    assert (np.asarray(nnz) == rnnz).all()
+    assert (np.sort(np.asarray(idx), 1) == np.sort(ridx, 1)).all()
+    err_k = ref.rel_error(d, x, np.asarray(idx), np.asarray(val))
+    err_r = ref.rel_error(d, x, ridx, rval)
+    np.testing.assert_allclose(err_k, err_r, atol=1e-4)
+
+
+def test_residual_monotone_in_sparsity():
+    rng = np.random.default_rng(1)
+    m, n = 32, 128
+    d = unit_dict(rng, m, n)
+    x = rng.standard_normal((4, m)).astype(np.float32)
+    prev = np.full(4, np.inf)
+    for s in (1, 2, 4, 8):
+        idx, val, _ = omp(jnp.asarray(d), jnp.asarray(x), s, tile=4)
+        err = ref.rel_error(d, x, np.asarray(idx), np.asarray(val))
+        assert (err <= prev + 1e-4).all(), (s, err, prev)
+        prev = err
+
+
+def test_threshold_mode_is_greedy_prefix():
+    rng = np.random.default_rng(2)
+    m, n, b = 32, 128, 8
+    d = unit_dict(rng, m, n)
+    x = rng.standard_normal((b, m)).astype(np.float32)
+    full_idx, _, _ = omp(jnp.asarray(d), jnp.asarray(x), 12, tile=8)
+    thr_idx, thr_val, nnz = omp(jnp.asarray(d), jnp.asarray(x), 12, delta=0.5, tile=8)
+    nnz = np.asarray(nnz)
+    thr_idx = np.asarray(thr_idx)
+    full_idx = np.asarray(full_idx)
+    for bi in range(b):
+        k = nnz[bi]
+        assert (thr_idx[bi, :k] == full_idx[bi, :k]).all()
+        if k < 12:
+            err = ref.rel_error(d, x[bi:bi + 1], thr_idx[bi:bi + 1], np.asarray(thr_val)[bi:bi + 1])
+            assert err[0] <= 0.5 + 1e-3
+
+
+def test_exact_recovery_of_sparse_signal():
+    rng = np.random.default_rng(3)
+    m, n, k = 32, 256, 3
+    d = unit_dict(rng, m, n)
+    support = rng.choice(n, size=k, replace=False)
+    coefs = rng.uniform(0.5, 2.0, size=k).astype(np.float32)
+    x = (d[:, support] @ coefs)[None].astype(np.float32)
+    idx, val, _ = omp(jnp.asarray(d), jnp.asarray(x), k, tile=1)
+    err = ref.rel_error(d, x, np.asarray(idx), np.asarray(val))
+    assert err[0] < 1e-3
+    assert set(np.asarray(idx)[0]) == set(support)
+
+
+def test_zero_vector_freezes():
+    rng = np.random.default_rng(4)
+    d = unit_dict(rng, 16, 64)
+    x = np.zeros((4, 16), np.float32)
+    idx, val, nnz = omp(jnp.asarray(d), jnp.asarray(x), 4, tile=4)
+    assert (np.asarray(nnz) == 0).all()
+    assert np.asarray(val).sum() == 0
+
+
+def test_jnp_variant_matches_kernel():
+    """The jit-friendly trainer encoder == the Pallas kernel."""
+    rng = np.random.default_rng(5)
+    m, n, b, s = 32, 256, 12, 5
+    d = unit_dict(rng, m, n)
+    x = rng.standard_normal((b, m)).astype(np.float32)
+    ki, kv, kn = omp(jnp.asarray(d), jnp.asarray(x), s, tile=4)
+    ji, jv, jn = omp_jnp(jnp.asarray(d), jnp.asarray(x), s)
+    assert (np.asarray(ki) == np.asarray(ji)).all()
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(jv), atol=1e-5)
+    assert (np.asarray(kn) == np.asarray(jn)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    overcomplete=st.sampled_from([2, 4, 8]),
+    b=st.integers(1, 9),
+    s=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_vs_oracle_hypothesis(m, overcomplete, b, s, seed):
+    """Shape/param sweep: kernel reconstruction ≤ oracle's (within fp32 ties)."""
+    rng = np.random.default_rng(seed)
+    n = m * overcomplete
+    s = min(s, m)
+    d = unit_dict(rng, m, n)
+    x = rng.standard_normal((b, m)).astype(np.float32)
+    idx, val, nnz = omp(jnp.asarray(d), jnp.asarray(x), s, tile=min(8, b))
+    assert np.asarray(idx).shape == (b, s)
+    assert (np.asarray(nnz) == s).all()
+    err_k = ref.rel_error(d, x, np.asarray(idx), np.asarray(val))
+    err_r = ref.rel_error(d, x, *ref.omp_ref(d, x, s)[:2])
+    # f32 vs f64 argmax ties can flip a selection; allow a small margin
+    assert (err_k <= err_r + 0.05).all(), (err_k, err_r)

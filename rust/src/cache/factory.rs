@@ -1,0 +1,179 @@
+//! Cache-backend construction from a method spec string.
+//!
+//! Spec grammar (used by the CLI, eval sweeps and the repro drivers):
+//!   full
+//!   lexico:s=8,nb=32,na=1[,delta=0.3][,fp16][,adaptive=1024:0.3][,dict=PATH]
+//!   kivi:bits=2,g=16,nb=16
+//!   pertoken:bits=4,g=16[,nb=0]
+//!   zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16
+//!   snapkv:cap=64,win=8[,pool=5]
+//!   pyramidkv:cap=64,win=8[,pool=5][,slope=3]
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::full::FullCache;
+use super::kivi::{KiviCache, KiviConfig};
+use super::lexico::{LexicoCache, LexicoConfig};
+use super::pertoken::{PerTokenCache, PerTokenConfig};
+use super::pyramidkv::{PyramidKvCache, PyramidKvConfig};
+use super::snapkv::{SnapKvCache, SnapKvConfig};
+use super::zipcache::{ZipCache, ZipCacheConfig};
+use super::{CacheShape, KvCache};
+use crate::dict::DictionarySet;
+use crate::sparse::CoefPrecision;
+
+/// Parsed method spec.
+#[derive(Clone, Debug)]
+pub struct MethodSpec {
+    pub kind: String,
+    pub opts: BTreeMap<String, String>,
+}
+
+impl MethodSpec {
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (kind, rest) = match spec.split_once(':') {
+            Some((k, r)) => (k.to_string(), r),
+            None => (spec.to_string(), ""),
+        };
+        let mut opts = BTreeMap::new();
+        for part in rest.split(',').filter(|p| !p.is_empty()) {
+            match part.split_once('=') {
+                Some((k, v)) => {
+                    opts.insert(k.to_string(), v.to_string());
+                }
+                None => {
+                    opts.insert(part.to_string(), "1".to_string());
+                }
+            }
+        }
+        Ok(MethodSpec { kind, opts })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for {key}: {v}")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.opts.contains_key(key)
+    }
+}
+
+/// Everything a factory call may need beyond the spec itself.
+pub struct CacheContext {
+    pub shape: CacheShape,
+    /// Lexico dictionaries (required for lexico:* specs).
+    pub dicts: Option<Arc<DictionarySet>>,
+}
+
+/// Build a cache backend from a spec string.
+pub fn build_cache(spec: &str, ctx: &CacheContext) -> Result<Box<dyn KvCache>> {
+    let ms = MethodSpec::parse(spec)?;
+    let shape = ctx.shape;
+    Ok(match ms.kind.as_str() {
+        "full" => Box::new(FullCache::new(shape)),
+        "lexico" => {
+            let dicts = ctx
+                .dicts
+                .clone()
+                .context("lexico backend requires dictionaries")?;
+            let adaptive = match ms.opts.get("adaptive") {
+                None => None,
+                Some(v) => {
+                    let (n, d) = v
+                        .split_once(':')
+                        .context("adaptive=<max_atoms>:<delta>")?;
+                    Some((n.parse()?, d.parse()?))
+                }
+            };
+            let cfg = LexicoConfig {
+                sparsity: ms.get("s", 8usize)?,
+                delta: ms.get("delta", 0.0f32)?,
+                n_buffer: ms.get("nb", 32usize)?,
+                n_approx: ms.get("na", 1usize)?,
+                precision: if ms.flag("fp16") {
+                    CoefPrecision::Fp16
+                } else {
+                    CoefPrecision::Fp8
+                },
+                adaptive,
+            };
+            Box::new(LexicoCache::new(shape, dicts, cfg))
+        }
+        "kivi" => Box::new(KiviCache::new(shape, KiviConfig {
+            bits: ms.get("bits", 2u8)?,
+            group: ms.get("g", 16usize)?,
+            n_buffer: ms.get("nb", 16usize)?,
+        })),
+        "pertoken" => Box::new(PerTokenCache::new(shape, PerTokenConfig {
+            bits: ms.get("bits", 4u8)?,
+            group: ms.get("g", 16usize)?,
+            n_buffer: ms.get("nb", 0usize)?,
+        })),
+        "zipcache" => Box::new(ZipCache::new(shape, ZipCacheConfig {
+            bits_hi: ms.get("hi", 4u8)?,
+            bits_lo: ms.get("lo", 2u8)?,
+            group: ms.get("g", 16usize)?,
+            salient_frac: ms.get("frac", 0.2f32)?,
+            n_buffer: ms.get("nb", 16usize)?,
+        })),
+        "snapkv" => Box::new(SnapKvCache::new(shape, SnapKvConfig {
+            capacity: ms.get("cap", 64usize)?,
+            window: ms.get("win", 8usize)?,
+            pool: ms.get("pool", 5usize)?,
+        })),
+        "pyramidkv" => Box::new(PyramidKvCache::new(shape, PyramidKvConfig {
+            capacity: ms.get("cap", 64usize)?,
+            window: ms.get("win", 8usize)?,
+            pool: ms.get("pool", 5usize)?,
+            slope: ms.get("slope", 3.0f32)?,
+        })),
+        other => bail!("unknown cache method '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> CacheContext {
+        let shape = CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 16 };
+        let dicts = DictionarySet {
+            keys: (0..2).map(|i| crate::dict::Dictionary::random(16, 64, i)).collect(),
+            values: (0..2).map(|i| crate::dict::Dictionary::random(16, 64, 9 + i)).collect(),
+        };
+        CacheContext { shape, dicts: Some(Arc::new(dicts)) }
+    }
+
+    #[test]
+    fn builds_every_backend() {
+        let c = ctx();
+        for spec in [
+            "full",
+            "lexico:s=4,nb=8",
+            "lexico:s=4,nb=8,delta=0.3,fp16",
+            "lexico:s=2,nb=4,adaptive=16:0.3",
+            "kivi:bits=2,g=8,nb=4",
+            "pertoken:bits=4,g=16",
+            "zipcache:hi=4,lo=2,g=16,frac=0.25,nb=4",
+            "snapkv:cap=32,win=4",
+            "pyramidkv:cap=32,win=4,slope=2",
+        ] {
+            let cache = build_cache(spec, &c).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(cache.tokens(), 0);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(build_cache("h2o", &ctx()).is_err());
+        assert!(build_cache("lexico:s=abc", &ctx()).is_err());
+    }
+}

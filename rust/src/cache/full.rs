@@ -1,0 +1,124 @@
+//! Full-precision (FP16-accounted) KV cache — the paper's "Full Cache" row.
+
+use super::{dense_attend, CacheShape, KvCache};
+
+pub struct FullCache {
+    shape: CacheShape,
+    /// per-layer token-major K/V rows
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+    tokens: usize,
+    scores: Vec<f32>,
+}
+
+impl FullCache {
+    pub fn new(shape: CacheShape) -> Self {
+        FullCache {
+            ks: vec![Vec::new(); shape.n_layers],
+            vs: vec![Vec::new(); shape.n_layers],
+            shape,
+            tokens: 0,
+            scores: Vec::new(),
+        }
+    }
+
+    /// Raw access for tests / key-geometry analysis (Fig. 3).
+    pub fn keys(&self, layer: usize) -> &[f32] {
+        &self.ks[layer]
+    }
+
+    /// Raw value access (Table 1 KV-vector collection).
+    pub fn values(&self, layer: usize) -> &[f32] {
+        &self.vs[layer]
+    }
+}
+
+impl KvCache for FullCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      _q_win: &[f32], _w: usize) {
+        self.ks[layer].extend_from_slice(ks);
+        self.vs[layer].extend_from_slice(vs);
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        self.ks[layer].extend_from_slice(k);
+        self.vs[layer].extend_from_slice(v);
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let t = self.ks[layer].len() / self.shape.kv_dim();
+        // borrow juggling: move scores buffer out during the call
+        let mut scores = std::mem::take(&mut self.scores);
+        dense_attend(&self.shape, &self.ks[layer], &self.vs[layer], t, q, out, &mut scores);
+        self.scores = scores;
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        self.full_bytes()
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        "full".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn shape2() -> CacheShape {
+        CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 8 }
+    }
+
+    #[test]
+    fn append_and_ratio() {
+        let shape = shape2();
+        let mut c = FullCache::new(shape);
+        let mut rng = Rng::new(1);
+        for _ in 0..5 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        assert_eq!(c.tokens(), 5);
+        assert!((c.kv_ratio() - 1.0).abs() < 1e-12);
+        // 2 layers * 5 tokens * (2 vectors * 16 dims * 2 bytes)
+        assert_eq!(c.full_bytes(), (2 * 5 * 2 * 16 * 2) as f64);
+    }
+
+    #[test]
+    fn attend_is_softmax_average() {
+        // With identical keys, attention must average the values.
+        let shape = shape2();
+        let mut c = FullCache::new(shape);
+        let k = vec![1.0; shape.kv_dim()];
+        let mut v1 = vec![0.0; shape.kv_dim()];
+        let mut v2 = vec![2.0; shape.kv_dim()];
+        v1[0] = 4.0;
+        v2[0] = 0.0;
+        c.append(0, &k, &v1);
+        c.append(0, &k, &v2);
+        let q = vec![0.5; shape.q_dim()];
+        let mut out = vec![0.0; shape.q_dim()];
+        c.attend(0, &q, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-5); // mean of 4 and 0
+        assert!((out[1] - 1.0).abs() < 1e-5); // mean of 0 and 2
+    }
+}

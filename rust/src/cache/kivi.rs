@@ -1,0 +1,283 @@
+//! KIVI (Liu et al. 2024): asymmetric 2/4-bit KV quantization.
+//!
+//! Keys are quantized **per channel** in groups of `g` tokens (outlier
+//! channels dominate key error, so grouping along the token axis per
+//! channel isolates them); values are quantized **per token** (group size
+//! `g` along channels). The most recent `n_b` tokens stay full precision
+//! (the residual), and key tokens leave the residual only in complete
+//! groups of `g` so the per-channel grouping stays aligned — both exactly
+//! as in the reference implementation.
+
+use super::{dense_attend, CacheShape, KvCache};
+use crate::quant::{dequantize_group, dequantize_vector, quantize_group, quantize_vector, QuantGroup};
+
+#[derive(Clone, Debug)]
+pub struct KiviConfig {
+    pub bits: u8,
+    /// quantization group size g (tokens for keys, channels for values)
+    pub group: usize,
+    /// residual window n_b kept in FP16
+    pub n_buffer: usize,
+}
+
+impl Default for KiviConfig {
+    fn default() -> Self {
+        KiviConfig { bits: 2, group: 16, n_buffer: 16 }
+    }
+}
+
+/// One quantized key block: `g` tokens × kv_dim channels, stored as one
+/// QuantGroup per channel (codes indexed by token-within-block).
+struct KeyBlock {
+    per_channel: Vec<QuantGroup>, // [kv_dim]
+    len: usize,                   // tokens in the block (== g)
+}
+
+struct LayerState {
+    key_blocks: Vec<KeyBlock>,
+    /// per-token quantized values, in token order
+    qv: Vec<Vec<QuantGroup>>,
+    /// keys waiting for a full group (already out of the residual window)
+    k_pending: Vec<f32>, // [t][kv_dim]
+    pending_len: usize,
+    /// fp residual (most recent n_b tokens), token-major
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    buf_len: usize,
+}
+
+pub struct KiviCache {
+    shape: CacheShape,
+    cfg: KiviConfig,
+    layers: Vec<LayerState>,
+    tokens: usize,
+    scores: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+impl KiviCache {
+    pub fn new(shape: CacheShape, cfg: KiviConfig) -> Self {
+        let layers = (0..shape.n_layers)
+            .map(|_| LayerState {
+                key_blocks: Vec::new(),
+                qv: Vec::new(),
+                k_pending: Vec::new(),
+                pending_len: 0,
+                k_buf: Vec::new(),
+                v_buf: Vec::new(),
+                buf_len: 0,
+            })
+            .collect();
+        KiviCache {
+            shape,
+            cfg,
+            layers,
+            tokens: 0,
+            scores: Vec::new(),
+            dk: Vec::new(),
+            dv: Vec::new(),
+        }
+    }
+
+    /// Move tokens beyond the residual window out of the buffer: values are
+    /// quantized immediately per token; keys accumulate in `k_pending`
+    /// until `g` of them form a per-channel block.
+    fn spill(&mut self, layer: usize) {
+        let kvd = self.shape.kv_dim();
+        let g = self.cfg.group;
+        let bits = self.cfg.bits;
+        let st = &mut self.layers[layer];
+        while st.buf_len > self.cfg.n_buffer {
+            let v: Vec<f32> = st.v_buf[..kvd].to_vec();
+            st.qv.push(quantize_vector(&v, g.min(kvd), bits));
+            st.k_pending.extend_from_slice(&st.k_buf[..kvd]);
+            st.pending_len += 1;
+            st.k_buf.drain(..kvd);
+            st.v_buf.drain(..kvd);
+            st.buf_len -= 1;
+        }
+        while st.pending_len >= g {
+            // per-channel quantization over the g oldest pending tokens
+            let mut per_channel = Vec::with_capacity(kvd);
+            let mut col = vec![0.0f32; g];
+            for c in 0..kvd {
+                for ti in 0..g {
+                    col[ti] = st.k_pending[ti * kvd + c];
+                }
+                per_channel.push(quantize_group(&col, bits));
+            }
+            st.key_blocks.push(KeyBlock { per_channel, len: g });
+            st.k_pending.drain(..g * kvd);
+            st.pending_len -= g;
+        }
+    }
+
+    /// Dequantize everything (blocks + pending keys + residual) token-major.
+    fn materialize(&mut self, layer: usize) -> usize {
+        let kvd = self.shape.kv_dim();
+        let st = &self.layers[layer];
+        let t_blocks: usize = st.key_blocks.iter().map(|b| b.len).sum();
+        let t = t_blocks + st.pending_len + st.buf_len;
+        self.dk.resize(t * kvd, 0.0);
+        self.dv.resize(t * kvd, 0.0);
+        // keys from per-channel blocks
+        let mut off = 0;
+        let mut col = vec![0.0f32; self.cfg.group];
+        for b in &st.key_blocks {
+            for c in 0..kvd {
+                dequantize_group(&b.per_channel[c], &mut col[..b.len]);
+                for ti in 0..b.len {
+                    self.dk[(off + ti) * kvd + c] = col[ti];
+                }
+            }
+            off += b.len;
+        }
+        // pending keys (still fp; charged as fp16 in accounting)
+        self.dk[off * kvd..(off + st.pending_len) * kvd]
+            .copy_from_slice(&st.k_pending[..st.pending_len * kvd]);
+        // residual keys
+        let roff = off + st.pending_len;
+        self.dk[roff * kvd..t * kvd].copy_from_slice(&st.k_buf[..st.buf_len * kvd]);
+        // values: quantized tokens then residual
+        let tq = st.qv.len();
+        for ti in 0..tq {
+            dequantize_vector(&st.qv[ti], &mut self.dv[ti * kvd..(ti + 1) * kvd]);
+        }
+        self.dv[tq * kvd..t * kvd].copy_from_slice(&st.v_buf[..st.buf_len * kvd]);
+        debug_assert_eq!(tq + st.buf_len, t, "value/key token count mismatch");
+        t
+    }
+}
+
+impl KvCache for KiviCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      _q_win: &[f32], _w: usize) {
+        let st = &mut self.layers[layer];
+        st.k_buf.extend_from_slice(ks);
+        st.v_buf.extend_from_slice(vs);
+        st.buf_len += t;
+        self.spill(layer);
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let st = &mut self.layers[layer];
+        st.k_buf.extend_from_slice(k);
+        st.v_buf.extend_from_slice(v);
+        st.buf_len += 1;
+        self.spill(layer);
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let t = self.materialize(layer);
+        let mut scores = std::mem::take(&mut self.scores);
+        let dk = std::mem::take(&mut self.dk);
+        let dv = std::mem::take(&mut self.dv);
+        dense_attend(&self.shape, &dk, &dv, t, q, out, &mut scores);
+        self.scores = scores;
+        self.dk = dk;
+        self.dv = dv;
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        let kvd = self.shape.kv_dim() as f64;
+        let mut bytes = 0.0;
+        for st in &self.layers {
+            for b in &st.key_blocks {
+                bytes += b.per_channel.iter().map(|g| g.bytes()).sum::<f64>();
+            }
+            for groups in &st.qv {
+                bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
+            }
+            // pending keys + residual, FP16-accounted
+            bytes += st.pending_len as f64 * kvd * 2.0;
+            bytes += st.buf_len as f64 * 2.0 * kvd * 2.0;
+        }
+        bytes
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("kivi_{}bit", self.cfg.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::full::FullCache;
+    use crate::util::rng::Rng;
+
+    fn shape() -> CacheShape {
+        CacheShape { n_layers: 1, n_heads: 2, n_kv_heads: 1, head_dim: 16 }
+    }
+
+    #[test]
+    fn key_blocks_form_per_group() {
+        let cfg = KiviConfig { bits: 2, group: 4, n_buffer: 2 };
+        let mut c = KiviCache::new(shape(), cfg);
+        let mut rng = Rng::new(1);
+        for _ in 0..11 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+        }
+        // 11 tokens, buffer 2 → 9 out; 2 full key blocks of 4, 1 pending
+        let st = &c.layers[0];
+        assert_eq!(st.key_blocks.len(), 2);
+        assert_eq!(st.pending_len, 1);
+        assert_eq!(st.qv.len(), 9);
+        assert_eq!(st.buf_len, 2);
+    }
+
+    #[test]
+    fn high_bit_attention_close_to_full() {
+        let cfg = KiviConfig { bits: 8, group: 4, n_buffer: 0 };
+        let mut c = KiviCache::new(shape(), cfg);
+        let mut f = FullCache::new(shape());
+        let mut rng = Rng::new(9);
+        for _ in 0..8 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+            f.append(0, &k, &v);
+        }
+        let q = rng.normal_vec(32);
+        let (mut o1, mut o2) = (vec![0.0; 32], vec![0.0; 32]);
+        c.attend(0, &q, &mut o1);
+        f.attend(0, &q, &mut o2);
+        crate::util::prop::assert_close(&o1, &o2, 0.05, "kivi8≈full").unwrap();
+    }
+
+    #[test]
+    fn two_bit_is_smaller_than_four_bit() {
+        let mut sizes = Vec::new();
+        for bits in [2u8, 4] {
+            let cfg = KiviConfig { bits, group: 16, n_buffer: 0 };
+            let mut c = KiviCache::new(shape(), cfg);
+            let mut rng = Rng::new(4);
+            for _ in 0..32 {
+                let k = rng.normal_vec(16);
+                let v = rng.normal_vec(16);
+                c.append(0, &k, &v);
+            }
+            sizes.push(c.kv_ratio());
+        }
+        assert!(sizes[0] < sizes[1], "{sizes:?}");
+        // 2-bit g=16 at kvd=16: 8 B keys + 8 B values per token vs 64 B
+        assert!(sizes[0] < 0.3, "{sizes:?}");
+    }
+}

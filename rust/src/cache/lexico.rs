@@ -1,0 +1,491 @@
+//! The Lexico KV-cache backend (paper §3.4, Algorithm 2, Eq. 7).
+//!
+//! Per layer and kv head the cache holds
+//!   * `K_csr`/`V_csr` — OMP sparse codes (u16 indices + FP8/FP16 coefs);
+//!   * a full-precision recency buffer of up to `n_b` tokens.
+//! When the buffer exceeds `n_b`, the oldest `n_a` tokens are OMP-compressed
+//! (the paper runs this in parallel with the forward pass; here it is the
+//! same computation on the same thread, measured separately by the latency
+//! bench).
+//!
+//! Decode attention follows the paper's split computation: the query is
+//! first multiplied by the dictionary (`q·D_k`, O(N·m)), then contracted
+//! against the sparse codes (O(T·s)); buffer tokens take the dense path;
+//! one softmax spans both. The value side accumulates coefficients into a
+//! dictionary-bin vector `z` and finishes with atoms·z — the same
+//! O(N·m + T·s) complexity the paper reports.
+
+use super::{CacheShape, KvCache};
+use crate::dict::adaptive::AdaptiveDict;
+use crate::dict::DictionarySet;
+use crate::omp::{omp_encode, OmpWorkspace};
+use crate::sparse::{CoefPrecision, CsrRow};
+use crate::tensor::{axpy, dot, softmax};
+use std::sync::Arc;
+
+/// Lexico knobs (paper defaults in comments).
+#[derive(Clone, Debug)]
+pub struct LexicoConfig {
+    /// sparsity per vector (s); with `delta > 0` this is the max sparsity
+    pub sparsity: usize,
+    /// relative-error early-termination threshold δ (0 ⇒ fixed sparsity)
+    pub delta: f32,
+    /// full-precision recency buffer length n_b (paper: 128)
+    pub n_buffer: usize,
+    /// approximation window n_a — tokens compressed per overflow (paper: 1)
+    pub n_approx: usize,
+    /// CSR coefficient precision (paper main: FP8; ablations: FP16)
+    pub precision: CoefPrecision,
+    /// adaptive dictionary learning (§4.2.4): (max added atoms, δ_adapt)
+    pub adaptive: Option<(usize, f32)>,
+}
+
+impl Default for LexicoConfig {
+    fn default() -> Self {
+        LexicoConfig {
+            sparsity: 8,
+            delta: 0.0,
+            n_buffer: 32,
+            n_approx: 1,
+            precision: CoefPrecision::Fp8,
+            adaptive: None,
+        }
+    }
+}
+
+/// Per-(layer, kv-head) state.
+struct HeadState {
+    k_csr: Vec<CsrRow>,
+    v_csr: Vec<CsrRow>,
+    /// token-major buffer rows, oldest first: [t][m]
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    buf_len: usize,
+}
+
+pub struct LexicoCache {
+    shape: CacheShape,
+    cfg: LexicoConfig,
+    dicts: Arc<DictionarySet>,
+    /// adaptive overlays (lazily created when cfg.adaptive is set)
+    adaptive_k: Vec<Option<AdaptiveDict>>,
+    adaptive_v: Vec<Option<AdaptiveDict>>,
+    /// heads[layer * n_kv_heads + g]
+    heads: Vec<HeadState>,
+    tokens: usize,
+    ws: OmpWorkspace,
+    // attend scratch
+    scores: Vec<f32>,
+    qd: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl LexicoCache {
+    pub fn new(shape: CacheShape, dicts: Arc<DictionarySet>, cfg: LexicoConfig) -> Self {
+        assert_eq!(dicts.keys.len(), shape.n_layers, "dict layers mismatch");
+        let n = dicts.keys[0].n;
+        let m = shape.head_dim;
+        assert_eq!(dicts.keys[0].m, m, "dict head_dim mismatch");
+        let heads = (0..shape.n_layers * shape.n_kv_heads)
+            .map(|_| HeadState {
+                k_csr: Vec::new(),
+                v_csr: Vec::new(),
+                k_buf: Vec::new(),
+                v_buf: Vec::new(),
+                buf_len: 0,
+            })
+            .collect();
+        let (adaptive_k, adaptive_v) = if let Some((max_extra, d)) = cfg.adaptive {
+            (
+                dicts.keys.iter().map(|b| Some(AdaptiveDict::new(b, max_extra, d))).collect(),
+                dicts.values.iter().map(|b| Some(AdaptiveDict::new(b, max_extra, d))).collect(),
+            )
+        } else {
+            (
+                (0..shape.n_layers).map(|_| None).collect(),
+                (0..shape.n_layers).map(|_| None).collect(),
+            )
+        };
+        let n_cap = n + cfg.adaptive.map(|(e, _)| e).unwrap_or(0);
+        LexicoCache {
+            shape,
+            ws: OmpWorkspace::new(n_cap, m, cfg.sparsity.max(1)),
+            cfg,
+            dicts,
+            adaptive_k,
+            adaptive_v,
+            heads,
+            tokens: 0,
+            scores: Vec::new(),
+            qd: vec![0.0; n_cap],
+            z: vec![0.0; n_cap],
+        }
+    }
+
+    #[inline]
+    fn head_idx(&self, layer: usize, g: usize) -> usize {
+        layer * self.shape.n_kv_heads + g
+    }
+
+    /// Compress one vector with the layer's K or V dictionary.
+    fn encode(&mut self, layer: usize, is_key: bool, x: &[f32]) -> CsrRow {
+        let prec = self.cfg.precision;
+        let (s, delta) = (self.cfg.sparsity, self.cfg.delta);
+        let adapt = if is_key {
+            &mut self.adaptive_k[layer]
+        } else {
+            &mut self.adaptive_v[layer]
+        };
+        let code = if let Some(ad) = adapt.as_mut() {
+            ad.encode(x, s, &mut self.ws).0
+        } else {
+            let d = if is_key {
+                &self.dicts.keys[layer]
+            } else {
+                &self.dicts.values[layer]
+            };
+            omp_encode(&d.atoms, d.n, d.m, x, s, delta, &mut self.ws)
+        };
+        CsrRow::from_f32(&code.idx, &code.val, prec)
+    }
+
+    /// Compress the oldest `n` buffer tokens of every kv head in `layer`.
+    fn compress_oldest(&mut self, layer: usize, n: usize) {
+        let m = self.shape.head_dim;
+        for g in 0..self.shape.n_kv_heads {
+            let hi = self.head_idx(layer, g);
+            for _ in 0..n {
+                if self.heads[hi].buf_len == 0 {
+                    break;
+                }
+                let k: Vec<f32> = self.heads[hi].k_buf[..m].to_vec();
+                let v: Vec<f32> = self.heads[hi].v_buf[..m].to_vec();
+                let k_row = self.encode(layer, true, &k);
+                let v_row = self.encode(layer, false, &v);
+                let h = &mut self.heads[hi];
+                h.k_csr.push(k_row);
+                h.v_csr.push(v_row);
+                h.k_buf.drain(..m);
+                h.v_buf.drain(..m);
+                h.buf_len -= 1;
+            }
+        }
+    }
+
+    /// Current atom views per layer (base or adaptive overlay).
+    fn atoms(&self, layer: usize, is_key: bool) -> (&[f32], usize) {
+        let (ad, base) = if is_key {
+            (&self.adaptive_k[layer], &self.dicts.keys[layer])
+        } else {
+            (&self.adaptive_v[layer], &self.dicts.values[layer])
+        };
+        match ad {
+            Some(a) => (a.atoms(), a.n_atoms()),
+            None => (&base.atoms, base.n),
+        }
+    }
+}
+
+impl KvCache for LexicoCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      _q_win: &[f32], _w: usize) {
+        let m = self.shape.head_dim;
+        let kvd = self.shape.kv_dim();
+        // load everything into the buffer, then compress all but the last n_b
+        for g in 0..self.shape.n_kv_heads {
+            let hi = self.head_idx(layer, g);
+            for ti in 0..t {
+                self.heads[hi]
+                    .k_buf
+                    .extend_from_slice(&ks[ti * kvd + g * m..ti * kvd + (g + 1) * m]);
+                self.heads[hi]
+                    .v_buf
+                    .extend_from_slice(&vs[ti * kvd + g * m..ti * kvd + (g + 1) * m]);
+            }
+            self.heads[hi].buf_len += t;
+        }
+        let overflow = self.heads[self.head_idx(layer, 0)]
+            .buf_len
+            .saturating_sub(self.cfg.n_buffer);
+        if overflow > 0 {
+            self.compress_oldest(layer, overflow);
+        }
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let m = self.shape.head_dim;
+        for g in 0..self.shape.n_kv_heads {
+            let hi = self.head_idx(layer, g);
+            self.heads[hi].k_buf.extend_from_slice(&k[g * m..(g + 1) * m]);
+            self.heads[hi].v_buf.extend_from_slice(&v[g * m..(g + 1) * m]);
+            self.heads[hi].buf_len += 1;
+        }
+        if self.heads[self.head_idx(layer, 0)].buf_len > self.cfg.n_buffer {
+            self.compress_oldest(layer, self.cfg.n_approx);
+        }
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let m = self.shape.head_dim;
+        let n_heads = self.shape.n_heads;
+        let scale = 1.0 / (m as f32).sqrt();
+        out.fill(0.0);
+        let (k_atoms_ptr, k_n) = {
+            let (a, n) = self.atoms(layer, true);
+            (a.as_ptr(), n)
+        };
+        let (v_atoms_ptr, v_n) = {
+            let (a, n) = self.atoms(layer, false);
+            (a.as_ptr(), n)
+        };
+        // SAFETY: atoms live in self and are not mutated during attend.
+        let k_atoms = unsafe { std::slice::from_raw_parts(k_atoms_ptr, k_n * m) };
+        let v_atoms = unsafe { std::slice::from_raw_parts(v_atoms_ptr, v_n * m) };
+
+        // qd[h][n] = q_h · D_k[n] for ALL heads in one streaming pass over
+        // the dictionary (perf pass #1, EXPERIMENTS.md §Perf: one load of
+        // each atom now serves every query head instead of H separate
+        // passes over the N·m array). Set LEXICO_QD_PER_HEAD=1 to use the
+        // pre-optimization per-head layout (kept for the §Perf comparison).
+        if self.qd.len() < n_heads * k_n {
+            self.qd.resize(n_heads * k_n, 0.0);
+        }
+        {
+            let qd = &mut self.qd[..n_heads * k_n];
+            if std::env::var_os("LEXICO_QD_PER_HEAD").is_some() {
+                for h in 0..n_heads {
+                    let qh = &q[h * m..(h + 1) * m];
+                    for n in 0..k_n {
+                        qd[h * k_n + n] = dot(qh, &k_atoms[n * m..(n + 1) * m]);
+                    }
+                }
+            } else {
+                for n in 0..k_n {
+                    let atom = &k_atoms[n * m..(n + 1) * m];
+                    for h in 0..n_heads {
+                        qd[h * k_n + n] = dot(&q[h * m..(h + 1) * m], atom);
+                    }
+                }
+            }
+        }
+
+        for h in 0..n_heads {
+            let g = h / self.shape.group();
+            let hi = self.head_idx(layer, g);
+            let head = &self.heads[hi];
+            let tc = head.k_csr.len();
+            let tb = head.buf_len;
+            let qh = &q[h * m..(h + 1) * m];
+            let qd = &self.qd[h * k_n..(h + 1) * k_n];
+            // compressed scores: O(T·s)
+            self.scores.resize(tc + tb, 0.0);
+            for (ti, row) in head.k_csr.iter().enumerate() {
+                let mut sc = 0.0;
+                for j in 0..row.nnz() {
+                    sc += qd[row.idx[j] as usize] * row.coef(j);
+                }
+                self.scores[ti] = sc * scale;
+            }
+            // buffer scores: dense
+            for ti in 0..tb {
+                self.scores[tc + ti] =
+                    dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+            }
+            softmax(&mut self.scores[..tc + tb]);
+
+            // value side: z-bin accumulation, then atoms·z  (O(T·s + N·m))
+            let oh = &mut out[h * m..(h + 1) * m];
+            let z = &mut self.z[..v_n];
+            z.fill(0.0);
+            for (ti, row) in head.v_csr.iter().enumerate() {
+                let w = self.scores[ti];
+                for j in 0..row.nnz() {
+                    z[row.idx[j] as usize] += w * row.coef(j);
+                }
+            }
+            for (n, &zn) in z.iter().enumerate() {
+                if zn != 0.0 {
+                    axpy(oh, zn, &v_atoms[n * m..(n + 1) * m]);
+                }
+            }
+            for ti in 0..tb {
+                axpy(oh, self.scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+            }
+        }
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        let m = self.shape.head_dim;
+        let mut bytes = 0.0;
+        for head in &self.heads {
+            for row in head.k_csr.iter().chain(&head.v_csr) {
+                bytes += row.bytes() as f64;
+            }
+            bytes += (head.buf_len * 2 * m * 2) as f64; // buffer @ FP16
+        }
+        // adaptive atoms are session-private → charged to KV size (§4.2.4)
+        for ad in self.adaptive_k.iter().chain(&self.adaptive_v).flatten() {
+            bytes += ad.extra_bytes() as f64;
+        }
+        bytes
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        let mut s = format!("lexico_s{}", self.cfg.sparsity);
+        if self.cfg.delta > 0.0 {
+            s += &format!("_d{:.2}", self.cfg.delta);
+        }
+        if self.cfg.adaptive.is_some() {
+            s += "_adaptive";
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n_atoms: usize, cfg: LexicoConfig) -> (CacheShape, LexicoCache) {
+        let shape = CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 16 };
+        let dicts = DictionarySet {
+            keys: (0..2).map(|i| crate::dict::Dictionary::random(16, n_atoms, i)).collect(),
+            values: (0..2).map(|i| crate::dict::Dictionary::random(16, n_atoms, 100 + i)).collect(),
+        };
+        let c = LexicoCache::new(shape, Arc::new(dicts), cfg);
+        (shape, c)
+    }
+
+    #[test]
+    fn buffer_then_compression() {
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, n_approx: 1, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        // 10 tokens, buffer 4 → 6 compressed per head
+        let h = &c.heads[0];
+        assert_eq!(h.buf_len, 4);
+        assert_eq!(h.k_csr.len(), 6);
+        assert!(c.kv_ratio() < 1.0);
+        assert_eq!(c.tokens(), 10);
+    }
+
+    #[test]
+    fn attend_matches_full_cache_when_reconstruction_is_exact() {
+        // Identity dictionary (16 atoms = basis) with s=16 reconstructs
+        // exactly → Lexico attention must equal full-cache attention.
+        let shape = CacheShape { n_layers: 1, n_heads: 2, n_kv_heads: 1, head_dim: 16 };
+        let mut atoms = vec![0.0; 16 * 16];
+        for i in 0..16 {
+            atoms[i * 16 + i] = 1.0;
+        }
+        let d = crate::dict::Dictionary::new(16, 16, atoms);
+        let dicts = DictionarySet { keys: vec![d.clone()], values: vec![d] };
+        let cfg = LexicoConfig {
+            sparsity: 16,
+            n_buffer: 2,
+            precision: CoefPrecision::Fp16,
+            ..Default::default()
+        };
+        let mut lex = LexicoCache::new(shape, Arc::new(dicts), cfg);
+        let mut full = crate::cache::full::FullCache::new(shape);
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            // keep coordinates modest so fp16 rounding stays negligible
+            let k: Vec<f32> = rng.normal_vec(16).iter().map(|x| x * 0.5).collect();
+            let v: Vec<f32> = rng.normal_vec(16).iter().map(|x| x * 0.5).collect();
+            lex.append(0, &k, &v);
+            full.append(0, &k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim());
+        let mut o1 = vec![0.0; shape.q_dim()];
+        let mut o2 = vec![0.0; shape.q_dim()];
+        lex.attend(0, &q, &mut o1);
+        full.attend(0, &q, &mut o2);
+        crate::util::prop::assert_close(&o1, &o2, 2e-2, "lexico≈full").unwrap();
+    }
+
+    #[test]
+    fn prefill_compresses_all_but_buffer() {
+        let cfg = LexicoConfig { sparsity: 2, n_buffer: 3, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(5);
+        let t = 9;
+        let ks = rng.normal_vec(t * shape.kv_dim());
+        let vs = rng.normal_vec(t * shape.kv_dim());
+        for l in 0..shape.n_layers {
+            c.ingest_prefill(l, &ks, &vs, t, &[], 0);
+        }
+        assert_eq!(c.heads[0].buf_len, 3);
+        assert_eq!(c.heads[0].k_csr.len(), 6);
+        assert_eq!(c.tokens(), t);
+    }
+
+    #[test]
+    fn memory_accounting_matches_formula() {
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 2, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(7);
+        for _ in 0..6 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        // per head: 4 csr tokens ≤ (3·4+2)·2 rows... plus 2 buffer tokens
+        // random vectors are dense: every row has exactly s=4 nnz
+        let per_head = 4 * (3 * 4 + 2) * 2 + 2 * 2 * 16 * 2;
+        let total = per_head * shape.n_layers * shape.n_kv_heads;
+        assert_eq!(c.mem_bytes(), total as f64);
+    }
+
+    #[test]
+    fn adaptive_mode_grows_and_charges_memory() {
+        let cfg = LexicoConfig {
+            sparsity: 2,
+            n_buffer: 1,
+            adaptive: Some((8, 0.05)),
+            ..Default::default()
+        };
+        let (shape, mut c) = setup(16, cfg); // tiny dict → adaptation certain
+        let mut rng = Rng::new(11);
+        for _ in 0..6 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let extra: usize = c.adaptive_k.iter().flatten().map(|a| a.n_extra).sum();
+        assert!(extra > 0, "no adaptive growth");
+        let base_mem: f64 = c
+            .heads
+            .iter()
+            .flat_map(|h| h.k_csr.iter().chain(&h.v_csr))
+            .map(|r| r.bytes() as f64)
+            .sum::<f64>();
+        assert!(c.mem_bytes() > base_mem, "adaptive atoms not charged");
+    }
+}

@@ -1,0 +1,129 @@
+//! Pluggable KV-cache backends.
+//!
+//! The engine computes Q/K/V per layer and delegates *storage and
+//! attention* to a [`KvCache`] implementation. Every compression method in
+//! the paper's evaluation is a first-class backend:
+//!
+//! | backend    | paper method                 | knobs                        |
+//! |------------|------------------------------|------------------------------|
+//! | `full`     | FP16 full cache              | —                            |
+//! | `lexico`   | Lexico (§3)                  | s, δ, n_b, n_a, coef prec., adaptive |
+//! | `kivi`     | KIVI (per-channel K / per-token V) | bits, group g, residual n_b |
+//! | `pertoken` | HF per-token quantization    | bits, group g, residual n_b  |
+//! | `zipcache` | ZipCache salient mixed-prec. | salient frac., bits hi/lo    |
+//! | `snapkv`   | SnapKV eviction              | capacity, window, pool       |
+//! | `pyramidkv`| PyramidKV eviction           | capacity, window, slope      |
+//!
+//! Contract (GQA): `append`/`ingest_prefill` receive K/V rows of
+//! `[n_kv_heads × head_dim]`; `attend` receives a query of
+//! `[n_heads × head_dim]` and must write the attention output in the same
+//! layout, attending query head `h` against kv head `h / (H/KV)`.
+//! `attend` is called *after* the new token was appended.
+
+pub mod full;
+pub mod kivi;
+pub mod lexico;
+pub mod pertoken;
+pub mod pyramidkv;
+pub mod snapkv;
+pub mod zipcache;
+
+use crate::tensor::{dot, softmax};
+
+/// Geometry shared by all backends.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheShape {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl CacheShape {
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+    /// FP16 bytes of one token's K+V rows in one layer.
+    pub fn full_token_bytes(&self) -> f64 {
+        (2 * self.kv_dim() * 2) as f64
+    }
+}
+
+/// The backend interface (see module docs for the exact contract).
+pub trait KvCache: Send {
+    /// Bulk-load the prompt's K/V states for one layer (full-precision
+    /// prefill attention has already happened inside the engine, per the
+    /// paper's protocol). `ks`/`vs` are `[t][kv_dim]` row-major;
+    /// `q_win` is `[w][q_dim]`, the *last* `w` prompt queries — observation
+    /// window for attention-score-based methods (SnapKV/PyramidKV).
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      q_win: &[f32], w: usize);
+
+    /// Append one decoded token's K/V rows (`[kv_dim]` each).
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]);
+
+    /// GQA attention of `q` (`[q_dim]`) over everything stored for `layer`,
+    /// writing `[q_dim]` to `out`. `&mut self` so backends may track
+    /// attention-mass statistics (ZipCache salience).
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]);
+
+    /// Logical tokens seen (including evicted ones).
+    fn tokens(&self) -> usize;
+
+    /// Current compressed footprint in bytes (FP16-equivalent accounting).
+    fn mem_bytes(&self) -> f64;
+
+    /// Baseline: the same tokens held as a full FP16 cache.
+    fn full_bytes(&self) -> f64;
+
+    /// "KV size" as the paper reports it.
+    fn kv_ratio(&self) -> f64 {
+        let fb = self.full_bytes();
+        if fb == 0.0 {
+            1.0
+        } else {
+            self.mem_bytes() / fb
+        }
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Dense GQA attention over token-major K/V rows — the shared fallback used
+/// by the dense/dequantized backends. `ks`/`vs` are `[t][kv_dim]`.
+pub fn dense_attend(
+    shape: &CacheShape,
+    ks: &[f32],
+    vs: &[f32],
+    t: usize,
+    q: &[f32],
+    out: &mut [f32],
+    scores_buf: &mut Vec<f32>,
+) {
+    let m = shape.head_dim;
+    let kvd = shape.kv_dim();
+    let scale = 1.0 / (m as f32).sqrt();
+    out.fill(0.0);
+    scores_buf.resize(t, 0.0);
+    for h in 0..shape.n_heads {
+        let g = h / shape.group();
+        let qh = &q[h * m..(h + 1) * m];
+        for ti in 0..t {
+            scores_buf[ti] = dot(qh, &ks[ti * kvd + g * m..ti * kvd + (g + 1) * m]) * scale;
+        }
+        softmax(&mut scores_buf[..t]);
+        let oh = &mut out[h * m..(h + 1) * m];
+        for ti in 0..t {
+            crate::tensor::axpy(oh, scores_buf[ti], &vs[ti * kvd + g * m..ti * kvd + (g + 1) * m]);
+        }
+    }
+}
+
+/// Construct a backend by name + config (used by the CLI / eval sweeps).
+pub mod factory;

@@ -1,0 +1,203 @@
+//! Per-token KV quantization (the HuggingFace `quanto`-style baseline).
+//!
+//! Every token's K and V vectors are quantized independently (asymmetric
+//! uniform, group size `g` along channels) once they are older than the
+//! small residual window; attention dequantizes on the fly.
+
+use super::{dense_attend, CacheShape, KvCache};
+use crate::quant::{dequantize_vector, quantize_vector, QuantGroup};
+
+pub struct PerTokenConfig {
+    pub bits: u8,
+    pub group: usize,
+    /// residual window kept in full precision (HF default: none → 0)
+    pub n_buffer: usize,
+}
+
+impl Default for PerTokenConfig {
+    fn default() -> Self {
+        PerTokenConfig { bits: 4, group: 32, n_buffer: 0 }
+    }
+}
+
+struct LayerState {
+    /// quantized tokens, token-major: each entry = groups for K followed by V
+    qk: Vec<Vec<QuantGroup>>,
+    qv: Vec<Vec<QuantGroup>>,
+    /// fp residual, token-major [t][kv_dim]
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    buf_len: usize,
+}
+
+pub struct PerTokenCache {
+    shape: CacheShape,
+    cfg: PerTokenConfig,
+    layers: Vec<LayerState>,
+    tokens: usize,
+    scores: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+impl PerTokenCache {
+    pub fn new(shape: CacheShape, cfg: PerTokenConfig) -> Self {
+        let layers = (0..shape.n_layers)
+            .map(|_| LayerState {
+                qk: Vec::new(),
+                qv: Vec::new(),
+                k_buf: Vec::new(),
+                v_buf: Vec::new(),
+                buf_len: 0,
+            })
+            .collect();
+        PerTokenCache {
+            shape,
+            cfg,
+            layers,
+            tokens: 0,
+            scores: Vec::new(),
+            dk: Vec::new(),
+            dv: Vec::new(),
+        }
+    }
+
+    fn quantize_oldest(&mut self, layer: usize, n: usize) {
+        let kvd = self.shape.kv_dim();
+        let st = &mut self.layers[layer];
+        for _ in 0..n {
+            if st.buf_len == 0 {
+                break;
+            }
+            let k: Vec<f32> = st.k_buf[..kvd].to_vec();
+            let v: Vec<f32> = st.v_buf[..kvd].to_vec();
+            st.qk.push(quantize_vector(&k, self.cfg.group, self.cfg.bits));
+            st.qv.push(quantize_vector(&v, self.cfg.group, self.cfg.bits));
+            st.k_buf.drain(..kvd);
+            st.v_buf.drain(..kvd);
+            st.buf_len -= 1;
+        }
+    }
+
+    /// Materialize the dequantized K/V (token-major) into self.dk/self.dv.
+    fn materialize(&mut self, layer: usize) -> usize {
+        let kvd = self.shape.kv_dim();
+        let st = &self.layers[layer];
+        let tq = st.qk.len();
+        let t = tq + st.buf_len;
+        self.dk.resize(t * kvd, 0.0);
+        self.dv.resize(t * kvd, 0.0);
+        for ti in 0..tq {
+            dequantize_vector(&st.qk[ti], &mut self.dk[ti * kvd..(ti + 1) * kvd]);
+            dequantize_vector(&st.qv[ti], &mut self.dv[ti * kvd..(ti + 1) * kvd]);
+        }
+        self.dk[tq * kvd..t * kvd].copy_from_slice(&st.k_buf[..st.buf_len * kvd]);
+        self.dv[tq * kvd..t * kvd].copy_from_slice(&st.v_buf[..st.buf_len * kvd]);
+        t
+    }
+}
+
+impl KvCache for PerTokenCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      _q_win: &[f32], _w: usize) {
+        let st = &mut self.layers[layer];
+        st.k_buf.extend_from_slice(ks);
+        st.v_buf.extend_from_slice(vs);
+        st.buf_len += t;
+        let over = st.buf_len.saturating_sub(self.cfg.n_buffer);
+        self.quantize_oldest(layer, over);
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let st = &mut self.layers[layer];
+        st.k_buf.extend_from_slice(k);
+        st.v_buf.extend_from_slice(v);
+        st.buf_len += 1;
+        if st.buf_len > self.cfg.n_buffer {
+            self.quantize_oldest(layer, 1);
+        }
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let t = self.materialize(layer);
+        let mut scores = std::mem::take(&mut self.scores);
+        let dk = std::mem::take(&mut self.dk);
+        let dv = std::mem::take(&mut self.dv);
+        dense_attend(&self.shape, &dk, &dv, t, q, out, &mut scores);
+        self.scores = scores;
+        self.dk = dk;
+        self.dv = dv;
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        let mut bytes = 0.0;
+        for st in &self.layers {
+            for groups in st.qk.iter().chain(&st.qv) {
+                bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
+            }
+            bytes += (st.buf_len * 2 * self.shape.kv_dim() * 2) as f64;
+        }
+        bytes
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("pertoken_int{}", self.cfg.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::full::FullCache;
+    use crate::util::rng::Rng;
+
+    fn shape() -> CacheShape {
+        CacheShape { n_layers: 1, n_heads: 2, n_kv_heads: 1, head_dim: 16 }
+    }
+
+    #[test]
+    fn int8_attention_close_to_full() {
+        let mut c = PerTokenCache::new(shape(), PerTokenConfig { bits: 8, group: 16, n_buffer: 0 });
+        let mut f = FullCache::new(shape());
+        let mut rng = Rng::new(2);
+        for _ in 0..12 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+            f.append(0, &k, &v);
+        }
+        let q = rng.normal_vec(32);
+        let mut o1 = vec![0.0; 32];
+        let mut o2 = vec![0.0; 32];
+        c.attend(0, &q, &mut o1);
+        f.attend(0, &q, &mut o2);
+        crate::util::prop::assert_close(&o1, &o2, 0.05, "int8≈full").unwrap();
+    }
+
+    #[test]
+    fn ratio_matches_bits() {
+        // 2-bit, group 16, m=16: per vector 16*2/8 + 4 = 8 B vs 32 B fp16.
+        let mut c = PerTokenCache::new(shape(), PerTokenConfig { bits: 2, group: 16, n_buffer: 0 });
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+        }
+        assert!((c.kv_ratio() - 0.25).abs() < 1e-9, "{}", c.kv_ratio());
+    }
+}

@@ -1,0 +1,144 @@
+//! PyramidKV (Cai et al. 2024): SnapKV-style eviction with *pyramidal*
+//! per-layer budgets — lower layers (which funnel information broadly)
+//! keep more tokens, upper layers fewer, on a linear schedule whose mean
+//! equals the nominal capacity.
+
+use super::snapkv::{LayerState, SnapKvCache, SnapKvConfig};
+use super::{dense_attend, CacheShape, KvCache};
+
+#[derive(Clone, Debug)]
+pub struct PyramidKvConfig {
+    /// mean retained prompt tokens per layer
+    pub capacity: usize,
+    pub window: usize,
+    pub pool: usize,
+    /// budget ratio between the bottom and top layer (reference uses ~
+    /// arithmetic decay; 3.0 means bottom gets 1.5×mean, top 0.5×mean)
+    pub slope: f32,
+}
+
+impl Default for PyramidKvConfig {
+    fn default() -> Self {
+        PyramidKvConfig { capacity: 64, window: 8, pool: 5, slope: 3.0 }
+    }
+}
+
+pub struct PyramidKvCache {
+    shape: CacheShape,
+    cfg: PyramidKvConfig,
+    layers: Vec<LayerState>,
+    tokens: usize,
+    scores: Vec<f32>,
+}
+
+impl PyramidKvCache {
+    pub fn new(shape: CacheShape, cfg: PyramidKvConfig) -> Self {
+        let layers = (0..shape.n_layers)
+            .map(|_| LayerState { ks: Vec::new(), vs: Vec::new(), kept: 0 })
+            .collect();
+        PyramidKvCache { shape, cfg, layers, tokens: 0, scores: Vec::new() }
+    }
+
+    /// Linear budget schedule: layer 0 gets `hi`, last layer `lo`, with
+    /// mean = capacity and hi/lo = slope.
+    pub fn capacity_for_layer(&self, layer: usize) -> usize {
+        let ll = self.shape.n_layers.max(1) as f32;
+        let c = self.cfg.capacity as f32;
+        let s = self.cfg.slope.max(1.0);
+        let hi = 2.0 * c * s / (s + 1.0);
+        let lo = 2.0 * c / (s + 1.0);
+        let frac = if ll <= 1.0 { 0.0 } else { layer as f32 / (ll - 1.0) };
+        let b = hi + (lo - hi) * frac;
+        (b.round() as usize).max(self.cfg.window + 1)
+    }
+}
+
+impl KvCache for PyramidKvCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      q_win: &[f32], w: usize) {
+        let cap = self.capacity_for_layer(layer);
+        let snap_cfg = SnapKvConfig {
+            capacity: cap,
+            window: self.cfg.window,
+            pool: self.cfg.pool,
+        };
+        SnapKvCache::ingest_with_capacity(
+            &self.shape, &mut self.layers[layer], &snap_cfg, cap, ks, vs, t, q_win, w,
+        );
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let st = &mut self.layers[layer];
+        st.ks.extend_from_slice(k);
+        st.vs.extend_from_slice(v);
+        st.kept += 1;
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let st = &self.layers[layer];
+        let mut scores = std::mem::take(&mut self.scores);
+        dense_attend(&self.shape, &st.ks, &st.vs, st.kept, q, out, &mut scores);
+        self.scores = scores;
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|st| st.kept as f64 * self.shape.full_token_bytes())
+            .sum()
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("pyramidkv_c{}", self.cfg.capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pyramid_schedule_mean_is_capacity() {
+        let shape = CacheShape { n_layers: 8, n_heads: 4, n_kv_heads: 2, head_dim: 8 };
+        let c = PyramidKvCache::new(shape, PyramidKvConfig {
+            capacity: 64, window: 4, pool: 5, slope: 3.0,
+        });
+        let budgets: Vec<usize> = (0..8).map(|l| c.capacity_for_layer(l)).collect();
+        assert!(budgets[0] > budgets[7], "{budgets:?}");
+        let mean: f32 = budgets.iter().sum::<usize>() as f32 / 8.0;
+        assert!((mean - 64.0).abs() < 2.0, "mean {mean} budgets {budgets:?}");
+    }
+
+    #[test]
+    fn lower_layers_keep_more() {
+        let shape = CacheShape { n_layers: 4, n_heads: 2, n_kv_heads: 1, head_dim: 8 };
+        let mut c = PyramidKvCache::new(shape, PyramidKvConfig {
+            capacity: 10, window: 2, pool: 1, slope: 3.0,
+        });
+        let mut rng = Rng::new(1);
+        let t = 30;
+        let ks = rng.normal_vec(t * shape.kv_dim());
+        let vs = rng.normal_vec(t * shape.kv_dim());
+        let q_win = rng.normal_vec(2 * shape.q_dim());
+        for l in 0..4 {
+            c.ingest_prefill(l, &ks, &vs, t, &q_win, 2);
+        }
+        assert!(c.layers[0].kept > c.layers[3].kept);
+        assert!(c.kv_ratio() < 1.0);
+    }
+}

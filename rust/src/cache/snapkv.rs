@@ -1,0 +1,270 @@
+//! SnapKV (Li et al. 2024): prefill-time token eviction.
+//!
+//! The last `window` prompt queries form an observation window; their
+//! softmax attention onto every prompt key is aggregated per kv head
+//! (summed over the GQA query group — the head-granularity sharing the
+//! paper points to as the reason eviction methods struggle with GQA),
+//! max-pooled along the token axis to keep clusters intact, and the top
+//! `capacity − window` tokens are retained along with the window itself.
+//! Generated tokens are kept in full precision, as in the reference.
+
+use super::{dense_attend, CacheShape, KvCache};
+use crate::tensor::{dot, softmax};
+
+#[derive(Clone, Debug)]
+pub struct SnapKvConfig {
+    /// retained prompt tokens per layer (incl. the observation window)
+    pub capacity: usize,
+    /// observation window (last w prompt tokens)
+    pub window: usize,
+    /// max-pool kernel size along tokens
+    pub pool: usize,
+}
+
+impl Default for SnapKvConfig {
+    fn default() -> Self {
+        SnapKvConfig { capacity: 64, window: 8, pool: 5 }
+    }
+}
+
+pub(super) struct LayerState {
+    pub ks: Vec<f32>, // retained tokens, token-major [t][kv_dim]
+    pub vs: Vec<f32>,
+    pub kept: usize,
+}
+
+pub struct SnapKvCache {
+    shape: CacheShape,
+    cfg: SnapKvConfig,
+    layers: Vec<LayerState>,
+    tokens: usize,
+    scores: Vec<f32>,
+}
+
+/// Observation-window importance scores per token (shared with PyramidKV).
+/// Returns, for each kv head, the pooled aggregated attention mass of the
+/// window queries over the first `t` keys. `ks` is `[t][kv_dim]`, `q_win`
+/// is `[w][q_dim]`.
+pub(super) fn window_scores(
+    shape: &CacheShape,
+    ks: &[f32],
+    t: usize,
+    q_win: &[f32],
+    w: usize,
+    pool: usize,
+) -> Vec<Vec<f32>> {
+    let m = shape.head_dim;
+    let kvd = shape.kv_dim();
+    let scale = 1.0 / (m as f32).sqrt();
+    let mut per_head = vec![vec![0.0f32; t]; shape.n_kv_heads];
+    let mut row = vec![0.0f32; t];
+    for wi in 0..w {
+        for h in 0..shape.n_heads {
+            let g = h / shape.group();
+            let qh = &q_win[wi * shape.q_dim() + h * m..wi * shape.q_dim() + (h + 1) * m];
+            for ti in 0..t {
+                row[ti] = dot(qh, &ks[ti * kvd + g * m..ti * kvd + (g + 1) * m]) * scale;
+            }
+            softmax(&mut row[..t]);
+            for ti in 0..t {
+                per_head[g][ti] += row[ti];
+            }
+        }
+    }
+    // 1-D max pool along tokens (cluster preservation)
+    if pool > 1 {
+        let half = pool / 2;
+        for scores in per_head.iter_mut() {
+            let orig = scores.clone();
+            for ti in 0..t {
+                let lo = ti.saturating_sub(half);
+                let hi = (ti + half + 1).min(t);
+                scores[ti] = orig[lo..hi].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            }
+        }
+    }
+    per_head
+}
+
+/// Select which token indices to keep given pooled scores: the window is
+/// always kept; the rest fill up to `capacity` by descending score
+/// (scores summed across kv heads — token granularity, GQA-shared).
+pub(super) fn select_tokens(
+    per_head: &[Vec<f32>],
+    t: usize,
+    w: usize,
+    capacity: usize,
+) -> Vec<usize> {
+    let body = t.saturating_sub(w);
+    let keep_body = capacity.saturating_sub(w.min(t)).min(body);
+    let mut total = vec![0.0f32; body];
+    for scores in per_head {
+        for ti in 0..body {
+            total[ti] += scores[ti];
+        }
+    }
+    let mut order: Vec<usize> = (0..body).collect();
+    order.sort_by(|&a, &b| total[b].partial_cmp(&total[a]).unwrap());
+    let mut keep: Vec<usize> = order[..keep_body].to_vec();
+    keep.extend(body..t); // the observation window itself
+    keep.sort_unstable();
+    keep
+}
+
+impl SnapKvCache {
+    pub fn new(shape: CacheShape, cfg: SnapKvConfig) -> Self {
+        let layers = (0..shape.n_layers)
+            .map(|_| LayerState { ks: Vec::new(), vs: Vec::new(), kept: 0 })
+            .collect();
+        SnapKvCache { shape, cfg, layers, tokens: 0, scores: Vec::new() }
+    }
+
+    pub(super) fn ingest_with_capacity(
+        shape: &CacheShape,
+        st: &mut LayerState,
+        cfg: &SnapKvConfig,
+        capacity: usize,
+        ks: &[f32],
+        vs: &[f32],
+        t: usize,
+        q_win: &[f32],
+        w: usize,
+    ) {
+        let kvd = shape.kv_dim();
+        if t <= capacity || w == 0 {
+            st.ks.extend_from_slice(&ks[..t * kvd]);
+            st.vs.extend_from_slice(&vs[..t * kvd]);
+            st.kept += t;
+            return;
+        }
+        let per_head = window_scores(shape, ks, t, q_win, w, cfg.pool);
+        let keep = select_tokens(&per_head, t, w, capacity);
+        for &ti in &keep {
+            st.ks.extend_from_slice(&ks[ti * kvd..(ti + 1) * kvd]);
+            st.vs.extend_from_slice(&vs[ti * kvd..(ti + 1) * kvd]);
+        }
+        st.kept += keep.len();
+    }
+}
+
+impl KvCache for SnapKvCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      q_win: &[f32], w: usize) {
+        let cfg = self.cfg.clone();
+        Self::ingest_with_capacity(
+            &self.shape, &mut self.layers[layer], &cfg, cfg.capacity, ks, vs, t, q_win, w,
+        );
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let st = &mut self.layers[layer];
+        st.ks.extend_from_slice(k);
+        st.vs.extend_from_slice(v);
+        st.kept += 1;
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let st = &self.layers[layer];
+        let mut scores = std::mem::take(&mut self.scores);
+        dense_attend(&self.shape, &st.ks, &st.vs, st.kept, q, out, &mut scores);
+        self.scores = scores;
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|st| st.kept as f64 * self.shape.full_token_bytes())
+            .sum()
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("snapkv_c{}", self.cfg.capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn shape() -> CacheShape {
+        CacheShape { n_layers: 1, n_heads: 2, n_kv_heads: 1, head_dim: 8 }
+    }
+
+    #[test]
+    fn keeps_high_attention_tokens() {
+        let sh = shape();
+        let kvd = sh.kv_dim();
+        let t = 20;
+        let mut rng = Rng::new(1);
+        // token 3 is the needle: its key equals the window queries' direction
+        let needle = 3usize;
+        let dir: Vec<f32> = (0..8).map(|i| if i == 0 { 3.0 } else { 0.0 }).collect();
+        let mut ks = Vec::new();
+        for ti in 0..t {
+            if ti == needle {
+                ks.extend_from_slice(&dir);
+            } else {
+                ks.extend(rng.normal_vec(kvd).iter().map(|x| x * 0.1));
+            }
+        }
+        let vs = rng.normal_vec(t * kvd);
+        let w = 4;
+        let mut q_win = Vec::new();
+        for _ in 0..w {
+            q_win.extend_from_slice(&dir); // head 0
+            q_win.extend_from_slice(&dir); // head 1
+        }
+        let cfg = SnapKvConfig { capacity: 8, window: w, pool: 1 };
+        let mut c = SnapKvCache::new(sh, cfg);
+        c.ingest_prefill(0, &ks, &vs, t, &q_win, w);
+        assert_eq!(c.layers[0].kept, 8);
+        // the needle key must be among the retained rows
+        let kept = &c.layers[0].ks;
+        let found = (0..8).any(|r| {
+            (0..kvd).all(|i| (kept[r * kvd + i] - dir[i]).abs() < 1e-6)
+        });
+        assert!(found, "needle evicted");
+        assert!((c.kv_ratio() - 8.0 / 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn under_capacity_keeps_everything() {
+        let sh = shape();
+        let mut rng = Rng::new(2);
+        let t = 5;
+        let ks = rng.normal_vec(t * sh.kv_dim());
+        let vs = rng.normal_vec(t * sh.kv_dim());
+        let mut c = SnapKvCache::new(sh, SnapKvConfig { capacity: 16, window: 2, pool: 5 });
+        c.ingest_prefill(0, &ks, &vs, t, &[], 0);
+        assert_eq!(c.layers[0].kept, 5);
+        assert_eq!(c.kv_ratio(), 1.0);
+    }
+
+    #[test]
+    fn decode_tokens_always_kept() {
+        let sh = shape();
+        let mut rng = Rng::new(3);
+        let mut c = SnapKvCache::new(sh, SnapKvConfig { capacity: 4, window: 2, pool: 1 });
+        for _ in 0..6 {
+            let k = rng.normal_vec(sh.kv_dim());
+            let v = rng.normal_vec(sh.kv_dim());
+            c.append(0, &k, &v);
+        }
+        assert_eq!(c.layers[0].kept, 6);
+    }
+}

@@ -1,0 +1,262 @@
+//! ZipCache (He et al. 2024): salient-token mixed-precision quantization.
+//!
+//! Tokens are quantized per token when they leave the recency window; the
+//! precision (hi vs lo bits) is chosen by *accumulated normalized attention
+//! mass* — the saliency metric ZipCache introduces. Saliency is tracked
+//! from every `attend` call (normalized by how many queries a token has
+//! been visible to, so early tokens are not unfairly favoured).
+
+use super::{CacheShape, KvCache};
+use crate::quant::{dequantize_vector, quantize_vector, QuantGroup};
+
+#[derive(Clone, Debug)]
+pub struct ZipCacheConfig {
+    pub bits_hi: u8,
+    pub bits_lo: u8,
+    pub group: usize,
+    /// fraction of tokens treated as salient (paper sweeps ~0.1–0.4)
+    pub salient_frac: f32,
+    /// recency window kept in FP16 while saliency statistics accumulate
+    pub n_buffer: usize,
+}
+
+impl Default for ZipCacheConfig {
+    fn default() -> Self {
+        ZipCacheConfig { bits_hi: 4, bits_lo: 2, group: 16, salient_frac: 0.2, n_buffer: 16 }
+    }
+}
+
+struct LayerState {
+    qk: Vec<Vec<QuantGroup>>,
+    qv: Vec<Vec<QuantGroup>>,
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    buf_len: usize,
+    /// accumulated attention mass per *visible* token (quantized + buffer)
+    salience: Vec<f32>,
+    /// number of attend calls each token has been visible to
+    exposure: Vec<f32>,
+}
+
+pub struct ZipCache {
+    shape: CacheShape,
+    cfg: ZipCacheConfig,
+    layers: Vec<LayerState>,
+    tokens: usize,
+    scores: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+}
+
+impl ZipCache {
+    pub fn new(shape: CacheShape, cfg: ZipCacheConfig) -> Self {
+        let layers = (0..shape.n_layers)
+            .map(|_| LayerState {
+                qk: Vec::new(),
+                qv: Vec::new(),
+                k_buf: Vec::new(),
+                v_buf: Vec::new(),
+                buf_len: 0,
+                salience: Vec::new(),
+                exposure: Vec::new(),
+            })
+            .collect();
+        ZipCache {
+            shape,
+            cfg,
+            layers,
+            tokens: 0,
+            scores: Vec::new(),
+            dk: Vec::new(),
+            dv: Vec::new(),
+        }
+    }
+
+    fn spill(&mut self, layer: usize) {
+        let kvd = self.shape.kv_dim();
+        let cfg = &self.cfg;
+        let st = &mut self.layers[layer];
+        while st.buf_len > cfg.n_buffer {
+            let tid = st.qk.len(); // global index of the token being spilled
+            // normalized saliency of this token vs. the median of all seen
+            let norm = |i: usize, st: &LayerState| {
+                st.salience[i] / st.exposure[i].max(1.0)
+            };
+            let mine = norm(tid, st);
+            let mut all: Vec<f32> = (0..st.salience.len()).map(|i| norm(i, st)).collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let cut = all[(((1.0 - cfg.salient_frac) as f64 * (all.len() - 1) as f64) as usize)
+                .min(all.len() - 1)];
+            let bits = if mine >= cut { cfg.bits_hi } else { cfg.bits_lo };
+            let k: Vec<f32> = st.k_buf[..kvd].to_vec();
+            let v: Vec<f32> = st.v_buf[..kvd].to_vec();
+            st.qk.push(quantize_vector(&k, cfg.group.min(kvd), bits));
+            st.qv.push(quantize_vector(&v, cfg.group.min(kvd), bits));
+            st.k_buf.drain(..kvd);
+            st.v_buf.drain(..kvd);
+            st.buf_len -= 1;
+        }
+    }
+
+    fn materialize(&mut self, layer: usize) -> usize {
+        let kvd = self.shape.kv_dim();
+        let st = &self.layers[layer];
+        let tq = st.qk.len();
+        let t = tq + st.buf_len;
+        self.dk.resize(t * kvd, 0.0);
+        self.dv.resize(t * kvd, 0.0);
+        for ti in 0..tq {
+            dequantize_vector(&st.qk[ti], &mut self.dk[ti * kvd..(ti + 1) * kvd]);
+            dequantize_vector(&st.qv[ti], &mut self.dv[ti * kvd..(ti + 1) * kvd]);
+        }
+        self.dk[tq * kvd..t * kvd].copy_from_slice(&st.k_buf[..st.buf_len * kvd]);
+        self.dv[tq * kvd..t * kvd].copy_from_slice(&st.v_buf[..st.buf_len * kvd]);
+        t
+    }
+}
+
+impl KvCache for ZipCache {
+    fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
+                      q_win: &[f32], w: usize) {
+        {
+            let st = &mut self.layers[layer];
+            st.k_buf.extend_from_slice(ks);
+            st.v_buf.extend_from_slice(vs);
+            st.buf_len += t;
+            st.salience.resize(st.salience.len() + t, 0.0);
+            st.exposure.resize(st.exposure.len() + t, 0.0);
+        }
+        // seed saliency with the observation-window queries so prefill
+        // tokens spill with informed precision
+        if w > 0 {
+            let qd = self.shape.q_dim();
+            for wi in 0..w {
+                let q: Vec<f32> = q_win[wi * qd..(wi + 1) * qd].to_vec();
+                let mut scratch = vec![0.0; qd];
+                self.attend(layer, &q, &mut scratch); // updates salience
+            }
+        }
+        self.spill(layer);
+        if layer == 0 {
+            self.tokens += t;
+        }
+    }
+
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let st = &mut self.layers[layer];
+        st.k_buf.extend_from_slice(k);
+        st.v_buf.extend_from_slice(v);
+        st.buf_len += 1;
+        st.salience.push(0.0);
+        st.exposure.push(0.0);
+        self.spill(layer);
+        if layer == 0 {
+            self.tokens += 1;
+        }
+    }
+
+    fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        let t = self.materialize(layer);
+        let m = self.shape.head_dim;
+        let kvd = self.shape.kv_dim();
+        let scale = 1.0 / (m as f32).sqrt();
+        out.fill(0.0);
+        self.scores.resize(t, 0.0);
+        let st = &mut self.layers[layer];
+        for h in 0..self.shape.n_heads {
+            let g = h / self.shape.group();
+            let qh = &q[h * m..(h + 1) * m];
+            for ti in 0..t {
+                self.scores[ti] = crate::tensor::dot(
+                    qh,
+                    &self.dk[ti * kvd + g * m..ti * kvd + (g + 1) * m],
+                ) * scale;
+            }
+            crate::tensor::softmax(&mut self.scores[..t]);
+            let oh = &mut out[h * m..(h + 1) * m];
+            for ti in 0..t {
+                crate::tensor::axpy(
+                    oh,
+                    self.scores[ti],
+                    &self.dv[ti * kvd + g * m..ti * kvd + (g + 1) * m],
+                );
+                st.salience[ti] += self.scores[ti];
+            }
+        }
+        for ti in 0..t {
+            st.exposure[ti] += 1.0;
+        }
+    }
+
+    fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    fn mem_bytes(&self) -> f64 {
+        let mut bytes = 0.0;
+        for st in &self.layers {
+            for groups in st.qk.iter().chain(&st.qv) {
+                bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
+            }
+            bytes += (st.buf_len * 2 * self.shape.kv_dim() * 2) as f64;
+        }
+        bytes
+    }
+
+    fn full_bytes(&self) -> f64 {
+        self.shape.n_layers as f64 * self.tokens as f64 * self.shape.full_token_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("zipcache_{}_{}", self.cfg.bits_hi, self.cfg.bits_lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn shape() -> CacheShape {
+        CacheShape { n_layers: 1, n_heads: 2, n_kv_heads: 1, head_dim: 16 }
+    }
+
+    #[test]
+    fn mixed_precision_sits_between_lo_and_hi() {
+        let mk = |hi, lo| {
+            let cfg = ZipCacheConfig {
+                bits_hi: hi, bits_lo: lo, group: 16, salient_frac: 0.3, n_buffer: 2,
+            };
+            let mut c = ZipCache::new(shape(), cfg);
+            let mut rng = Rng::new(6);
+            let mut out = vec![0.0; 32];
+            for _ in 0..20 {
+                let k = rng.normal_vec(16);
+                let v = rng.normal_vec(16);
+                c.append(0, &k, &v);
+                let q = rng.normal_vec(32);
+                c.attend(0, &q, &mut out);
+            }
+            c.kv_ratio()
+        };
+        let pure2 = mk(2, 2);
+        let mixed = mk(4, 2);
+        let pure4 = mk(4, 4);
+        assert!(pure2 < mixed && mixed < pure4, "{pure2} {mixed} {pure4}");
+    }
+
+    #[test]
+    fn salience_accumulates() {
+        let mut c = ZipCache::new(shape(), ZipCacheConfig::default());
+        let mut rng = Rng::new(8);
+        let k = rng.normal_vec(16);
+        let v = rng.normal_vec(16);
+        c.append(0, &k, &v);
+        let q = rng.normal_vec(32);
+        let mut out = vec![0.0; 32];
+        c.attend(0, &q, &mut out);
+        // single token takes all attention mass from both heads
+        assert!((c.layers[0].salience[0] - 2.0).abs() < 1e-5);
+        assert_eq!(c.layers[0].exposure[0], 1.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Adaptive dictionary learning at generation time (paper §4.2.4).
+//!
+//! Starting from the pretrained universal dictionary, whenever OMP fails to
+//! meet the relative-error threshold δ for a vector, that vector is
+//! normalized and *added as a new atom*; the vector is then stored with
+//! sparsity 1 (index = the new atom, coefficient = its ℓ2 norm). Added
+//! atoms are session-private and therefore charged to the KV size
+//! (FP16 per element), exactly as the paper accounts for them.
+
+use crate::dict::Dictionary;
+use crate::omp::{omp_encode, rel_error, OmpWorkspace, SparseCode};
+use crate::tensor::norm2;
+
+/// A universal dictionary plus session-local adaptive atoms.
+pub struct AdaptiveDict {
+    /// base + added atoms, atom-major (base occupies the prefix)
+    atoms: Vec<f32>,
+    pub m: usize,
+    pub n_base: usize,
+    pub n_extra: usize,
+    pub max_extra: usize,
+    /// relative reconstruction error threshold δ
+    pub delta: f32,
+}
+
+impl AdaptiveDict {
+    pub fn new(base: &Dictionary, max_extra: usize, delta: f32) -> Self {
+        let mut atoms = base.atoms.clone();
+        atoms.reserve(max_extra * base.m);
+        AdaptiveDict {
+            atoms,
+            m: base.m,
+            n_base: base.n,
+            n_extra: 0,
+            max_extra,
+            delta,
+        }
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.n_base + self.n_extra
+    }
+
+    pub fn atoms(&self) -> &[f32] {
+        &self.atoms
+    }
+
+    /// Encode `x`; if the δ target is unmet at sparsity `s_max` and there is
+    /// room, add x/‖x‖ as a new atom and encode as (new_atom, ‖x‖) with s=1.
+    /// Returns (code, grew_dictionary).
+    pub fn encode(&mut self, x: &[f32], s_max: usize, ws: &mut OmpWorkspace) -> (SparseCode, bool) {
+        let n = self.n_atoms();
+        let code = omp_encode(&self.atoms, n, self.m, x, s_max, self.delta, ws);
+        let err = rel_error(&self.atoms, self.m, x, &code);
+        if err <= self.delta || self.n_extra >= self.max_extra {
+            return (code, false);
+        }
+        let nrm = norm2(x);
+        if nrm < 1e-12 {
+            return (code, false);
+        }
+        let new_id = n;
+        self.atoms.extend(x.iter().map(|&v| v / nrm));
+        self.n_extra += 1;
+        (
+            SparseCode { idx: vec![new_id as u16], val: vec![nrm] },
+            true,
+        )
+    }
+
+    /// Bytes charged to the KV cache for the added atoms (FP16 elements).
+    pub fn extra_bytes(&self) -> usize {
+        self.n_extra * self.m * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grows_on_hard_vectors_then_reuses_them() {
+        let m = 16;
+        let base = Dictionary::random(m, 32, 5);
+        let mut ad = AdaptiveDict::new(&base, 8, 0.05);
+        let mut ws = OmpWorkspace::new(64, m, 4);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(m); // random vector: tiny dict can't hit δ=0.05
+        let (code, grew) = ad.encode(&x, 2, &mut ws);
+        assert!(grew, "should add an atom");
+        assert_eq!(code.nnz(), 1);
+        assert_eq!(code.idx[0] as usize, 32);
+        assert!((code.val[0] - norm2(&x)).abs() < 1e-5);
+        // re-encoding the same vector now succeeds without growth
+        let (code2, grew2) = ad.encode(&x, 2, &mut ws);
+        assert!(!grew2);
+        let err = rel_error(ad.atoms(), m, &x, &code2);
+        assert!(err < 0.05, "err {err}");
+        assert_eq!(ad.extra_bytes(), 16 * 2);
+    }
+
+    #[test]
+    fn respects_max_extra() {
+        let m = 8;
+        let base = Dictionary::random(m, 16, 1);
+        let mut ad = AdaptiveDict::new(&base, 2, 0.01);
+        let mut ws = OmpWorkspace::new(64, m, 2);
+        let mut rng = Rng::new(3);
+        let mut grown = 0;
+        for _ in 0..10 {
+            let x = rng.normal_vec(m);
+            let (_, grew) = ad.encode(&x, 1, &mut ws);
+            grown += grew as usize;
+        }
+        assert_eq!(grown, 2);
+        assert_eq!(ad.n_extra, 2);
+    }
+}

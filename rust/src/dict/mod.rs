@@ -1,0 +1,242 @@
+//! Universal dictionaries: loading (LXDC), random baselines, SAE baseline
+//! (LXSA), native training, and runtime-adaptive extension.
+
+pub mod adaptive;
+pub mod train;
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+use crate::tensor::norm2;
+
+/// One dictionary: `n` unit-norm atoms of dimension `m`, **atom-major**
+/// storage (`atoms[a*m..(a+1)*m]` is atom `a`) — the layout the OMP
+/// correlation loop streams.
+#[derive(Clone, Debug)]
+pub struct Dictionary {
+    pub m: usize,
+    pub n: usize,
+    pub atoms: Vec<f32>,
+}
+
+impl Dictionary {
+    pub fn new(m: usize, n: usize, atoms: Vec<f32>) -> Self {
+        debug_assert_eq!(atoms.len(), n * m);
+        Dictionary { m, n, atoms }
+    }
+
+    /// From column-major [m, N] layout (the LXDC / JAX convention).
+    pub fn from_m_by_n(m: usize, n: usize, data: &[f32]) -> Self {
+        let mut atoms = vec![0.0; n * m];
+        for a in 0..n {
+            for i in 0..m {
+                atoms[a * m + i] = data[i * n + a];
+            }
+        }
+        Dictionary { m, n, atoms }
+    }
+
+    /// Random unit-norm dictionary (Table 1 baseline).
+    pub fn random(m: usize, n: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut atoms = rng.normal_vec(n * m);
+        for a in atoms.chunks_mut(m) {
+            let nrm = norm2(a).max(1e-12);
+            a.iter_mut().for_each(|x| *x /= nrm);
+        }
+        Dictionary { m, n, atoms }
+    }
+
+    pub fn atom(&self, a: usize) -> &[f32] {
+        &self.atoms[a * self.m..(a + 1) * self.m]
+    }
+
+    /// Re-normalize all atoms to unit norm (defensive, applied on load).
+    pub fn renormalize(&mut self) {
+        for a in self.atoms.chunks_mut(self.m) {
+            let nrm = norm2(a).max(1e-12);
+            a.iter_mut().for_each(|x| *x /= nrm);
+        }
+    }
+
+    /// Storage bytes (FP16 accounting — dictionaries are shared, constant
+    /// memory; reported for DESIGN.md context, not charged to KV size).
+    pub fn bytes_fp16(&self) -> usize {
+        self.n * self.m * 2
+    }
+}
+
+/// Per-layer K and V dictionaries for one model (paper §3.3).
+#[derive(Clone, Debug)]
+pub struct DictionarySet {
+    pub keys: Vec<Dictionary>,
+    pub values: Vec<Dictionary>,
+}
+
+impl DictionarySet {
+    /// Load an LXDC file (see `aot.py::save_dict_bin`).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"LXDC" {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut hdr = [0u8; 16];
+        f.read_exact(&mut hdr)?;
+        let u = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+        let (ver, ll, m, n) = (u(0), u(1), u(2), u(3));
+        if ver != 1 {
+            bail!("unsupported LXDC version {ver}");
+        }
+        let read_layer = |f: &mut dyn Read| -> Result<Dictionary> {
+            let mut bytes = vec![0u8; m * n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let mut d = Dictionary::from_m_by_n(m, n, &data);
+            d.renormalize();
+            Ok(d)
+        };
+        let mut keys = Vec::with_capacity(ll);
+        for _ in 0..ll {
+            keys.push(read_layer(&mut f)?);
+        }
+        let mut values = Vec::with_capacity(ll);
+        for _ in 0..ll {
+            values.push(read_layer(&mut f)?);
+        }
+        Ok(DictionarySet { keys, values })
+    }
+
+    /// Random-dictionary set with the same shape (Table 1 baseline).
+    pub fn random_like(&self, seed: u64) -> Self {
+        DictionarySet {
+            keys: self
+                .keys
+                .iter()
+                .enumerate()
+                .map(|(i, d)| Dictionary::random(d.m, d.n, seed ^ (i as u64)))
+                .collect(),
+            values: self
+                .values
+                .iter()
+                .enumerate()
+                .map(|(i, d)| Dictionary::random(d.m, d.n, seed ^ 0x8000 ^ (i as u64)))
+                .collect(),
+        }
+    }
+}
+
+/// Sparse-autoencoder baseline weights (LXSA file; Table 1).
+#[derive(Clone, Debug)]
+pub struct SaePair {
+    pub m: usize,
+    pub n: usize,
+    /// encoders/decoders stored [m, N] row-major as in the file
+    pub enc_k: Vec<f32>,
+    pub dec_k: Vec<f32>,
+    pub enc_v: Vec<f32>,
+    pub dec_v: Vec<f32>,
+}
+
+impl SaePair {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"LXSA" {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr)?;
+        let u = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+        let (ver, m, n) = (u(0), u(1), u(2));
+        if ver != 1 {
+            bail!("unsupported LXSA version {ver}");
+        }
+        let mut read_mat = || -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; m * n * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        Ok(SaePair {
+            m,
+            n,
+            enc_k: read_mat()?,
+            dec_k: read_mat()?,
+            enc_v: read_mat()?,
+            dec_v: read_mat()?,
+        })
+    }
+
+    /// Encode with hard top-k, decode, return relative ℓ2 error of `x`.
+    pub fn rel_error(&self, x: &[f32], s: usize, use_keys: bool) -> f32 {
+        let (enc, dec) = if use_keys {
+            (&self.enc_k, &self.dec_k)
+        } else {
+            (&self.enc_v, &self.dec_v)
+        };
+        // z = x · enc  ([m]·[m,N] → [N])
+        let mut z = vec![0.0f32; self.n];
+        for i in 0..self.m {
+            let xi = x[i];
+            if xi != 0.0 {
+                crate::tensor::axpy(&mut z, xi, &enc[i * self.n..(i + 1) * self.n]);
+            }
+        }
+        // hard top-s by |z|
+        let mut order: Vec<usize> = (0..self.n).collect();
+        order.sort_by(|&a, &b| z[b].abs().partial_cmp(&z[a].abs()).unwrap());
+        let keep = &order[..s.min(self.n)];
+        // recon = Σ z_j dec[:, j]
+        let mut recon = vec![0.0f32; self.m];
+        for &j in keep {
+            for i in 0..self.m {
+                recon[i] += z[j] * dec[i * self.n + j];
+            }
+        }
+        let mut err = 0.0f32;
+        for i in 0..self.m {
+            let d = x[i] - recon[i];
+            err += d * d;
+        }
+        err.sqrt() / norm2(x).max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_layout() {
+        // m=2, n=3 column-major input [m,N]: row0 = atoms' dim0, row1 = dim1
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let d = Dictionary::from_m_by_n(2, 3, &data);
+        assert_eq!(d.atom(0), &[1.0, 4.0]);
+        assert_eq!(d.atom(1), &[2.0, 5.0]);
+        assert_eq!(d.atom(2), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn random_is_unit_norm() {
+        let d = Dictionary::random(16, 64, 7);
+        for a in 0..d.n {
+            let nrm = norm2(d.atom(a));
+            assert!((nrm - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Key-geometry analysis (paper Fig. 3): do key vectors from *different*
+//! inputs cluster in shared low-dimensional subspaces?
+//!
+//! We run the model over two unrelated prompts, collect the post-RoPE keys
+//! of one layer, and compute the pairwise cosine-similarity matrix sorted
+//! by greedy cluster order. The driver reports summary statistics (mean
+//! within-cluster vs. global similarity, and cross-input cluster overlap)
+//! — the quantitative content behind the paper's heat-map figure.
+
+use anyhow::Result;
+
+use crate::cache::full::FullCache;
+use crate::model::Engine;
+use crate::tensor::{dot, norm2};
+
+/// Collect the keys of `layer` for a prompt (all kv heads concatenated).
+/// Returns row-major [n_vecs][head_dim].
+pub fn collect_keys(engine: &Engine, prompt: &[u32], layer: usize) -> Vec<Vec<f32>> {
+    let mut cache = FullCache::new(engine.shape());
+    let _ = engine.prefill(prompt, &mut cache);
+    let kvd = engine.shape().kv_dim();
+    let m = engine.shape().head_dim;
+    let ks = cache.keys(layer);
+    let t = ks.len() / kvd;
+    let mut out = Vec::with_capacity(t * engine.shape().n_kv_heads);
+    for g in 0..engine.shape().n_kv_heads {
+        for ti in 0..t {
+            out.push(ks[ti * kvd + g * m..ti * kvd + (g + 1) * m].to_vec());
+        }
+    }
+    out
+}
+
+/// Pairwise cosine similarity, rows sorted by greedy nearest-neighbour
+/// cluster order (the ordering the paper's figure uses to expose blocks).
+pub fn cosine_matrix_sorted(keys: &[Vec<f32>]) -> (Vec<f32>, Vec<usize>) {
+    let n = keys.len();
+    let norms: Vec<f32> = keys.iter().map(|k| norm2(k).max(1e-12)).collect();
+    let cos = |a: usize, b: usize| dot(&keys[a], &keys[b]) / (norms[a] * norms[b]);
+    // greedy ordering: start anywhere, repeatedly append the unvisited key
+    // most similar to the last placed one
+    let mut order = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    let mut cur = 0usize;
+    used[0] = true;
+    order.push(0);
+    for _ in 1..n {
+        let mut best = usize::MAX;
+        let mut best_sim = f32::NEG_INFINITY;
+        for j in 0..n {
+            if !used[j] {
+                let s = cos(cur, j);
+                if s > best_sim {
+                    best_sim = s;
+                    best = j;
+                }
+            }
+        }
+        used[best] = true;
+        order.push(best);
+        cur = best;
+    }
+    let mut mat = vec![0.0f32; n * n];
+    for (i, &a) in order.iter().enumerate() {
+        for (j, &b) in order.iter().enumerate() {
+            mat[i * n + j] = cos(a, b);
+        }
+    }
+    (mat, order)
+}
+
+/// Summary statistics of a sorted similarity matrix: mean |cos| overall,
+/// mean |cos| in the banded near-diagonal (window w), and the fraction of
+/// keys whose nearest neighbour exceeds 0.9 cosine similarity.
+pub struct GeomStats {
+    pub n: usize,
+    pub mean_abs_all: f64,
+    pub mean_abs_band: f64,
+    pub frac_nn_above_09: f64,
+}
+
+pub fn stats(mat: &[f32], n: usize, band: usize) -> GeomStats {
+    let mut sum_all = 0.0f64;
+    let mut cnt_all = 0usize;
+    let mut sum_band = 0.0f64;
+    let mut cnt_band = 0usize;
+    let mut nn_hits = 0usize;
+    for i in 0..n {
+        let mut best = f32::NEG_INFINITY;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let v = mat[i * n + j];
+            sum_all += v.abs() as f64;
+            cnt_all += 1;
+            if i.abs_diff(j) <= band {
+                sum_band += v.abs() as f64;
+                cnt_band += 1;
+            }
+            best = best.max(v);
+        }
+        nn_hits += (best > 0.9) as usize;
+    }
+    GeomStats {
+        n,
+        mean_abs_all: sum_all / cnt_all.max(1) as f64,
+        mean_abs_band: sum_band / cnt_band.max(1) as f64,
+        frac_nn_above_09: nn_hits as f64 / n.max(1) as f64,
+    }
+}
+
+/// Cross-input analysis: fraction of keys in `b` whose best match in `a`
+/// exceeds the given cosine threshold (Fig. 3 right panel's message:
+/// clusters recur across unrelated inputs).
+pub fn cross_match_fraction(a: &[Vec<f32>], b: &[Vec<f32>], thresh: f32) -> f64 {
+    let na: Vec<f32> = a.iter().map(|k| norm2(k).max(1e-12)).collect();
+    let nb: Vec<f32> = b.iter().map(|k| norm2(k).max(1e-12)).collect();
+    let mut hits = 0usize;
+    for (j, kb) in b.iter().enumerate() {
+        let mut best = f32::NEG_INFINITY;
+        for (i, ka) in a.iter().enumerate() {
+            best = best.max(dot(ka, kb) / (na[i] * nb[j]));
+        }
+        hits += (best > thresh) as usize;
+    }
+    hits as f64 / b.len().max(1) as f64
+}
+
+/// End-to-end Fig. 3 computation for a given engine.
+pub fn fig3(engine: &Engine, layer: usize, seed: u64) -> Result<(GeomStats, f64, f64)> {
+    use crate::tasks;
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let text_a = tasks::gen_lm_text(&mut rng, 220);
+    let inst_b = tasks::gen_needle(&mut rng, 24);
+    let mut pa = vec![tasks::BOS];
+    pa.extend(tasks::encode(&text_a));
+    let mut pb = vec![tasks::BOS];
+    pb.extend(tasks::encode(&inst_b.prompt));
+    let ka = collect_keys(engine, &pa, layer);
+    let kb = collect_keys(engine, &pb, layer);
+    let (mat, _) = cosine_matrix_sorted(&ka);
+    let st = stats(&mat, ka.len(), 4);
+    let cross = cross_match_fraction(&ka, &kb, 0.8);
+    // control: random gaussian vectors at matched dimension
+    let m = engine.shape().head_dim;
+    let rand: Vec<Vec<f32>> = (0..kb.len()).map(|_| rng.normal_vec(m)).collect();
+    let cross_rand = cross_match_fraction(&ka, &rand, 0.8);
+    Ok((st, cross, cross_rand))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn clustered_data_shows_banding() {
+        // three tight clusters → near-diagonal band similarity ≫ global
+        let mut rng = Rng::new(1);
+        let mut keys = Vec::new();
+        for _ in 0..3 {
+            let center = rng.normal_vec(16);
+            for _ in 0..10 {
+                let mut k = center.clone();
+                for x in k.iter_mut() {
+                    *x += 0.05 * rng.normal();
+                }
+                keys.push(k);
+            }
+        }
+        let (mat, order) = cosine_matrix_sorted(&keys);
+        assert_eq!(order.len(), 30);
+        let st = stats(&mat, 30, 3);
+        assert!(
+            st.mean_abs_band > st.mean_abs_all + 0.2,
+            "band {} vs all {}",
+            st.mean_abs_band,
+            st.mean_abs_all
+        );
+        assert!(st.frac_nn_above_09 > 0.9);
+    }
+
+    #[test]
+    fn cross_match_detects_shared_structure() {
+        let mut rng = Rng::new(2);
+        let shared: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(16)).collect();
+        let jitter = |c: &Vec<f32>, rng: &mut Rng| -> Vec<f32> {
+            c.iter().map(|x| x + 0.02 * rng.normal()).collect()
+        };
+        let a: Vec<Vec<f32>> = (0..20).map(|i| jitter(&shared[i % 5], &mut rng)).collect();
+        let b: Vec<Vec<f32>> = (0..20).map(|i| jitter(&shared[i % 5], &mut rng)).collect();
+        let c: Vec<Vec<f32>> = (0..20).map(|_| rng.normal_vec(16)).collect();
+        assert!(cross_match_fraction(&a, &b, 0.9) > 0.9);
+        assert!(cross_match_fraction(&a, &c, 0.9) < 0.3);
+    }
+}

@@ -1,0 +1,37 @@
+//! # Lexico — extreme KV cache compression via sparse coding
+//!
+//! Full-system reproduction of *"Lexico: Extreme KV Cache Compression via
+//! Sparse Coding over Universal Dictionaries"* (ICML 2025) as a three-layer
+//! Rust + JAX + Pallas stack. This crate is Layer 3: the serving
+//! coordinator, the native inference engine, every cache-compression
+//! backend the paper evaluates, and the PJRT runtime that executes the
+//! AOT-compiled L1/L2 artifacts. See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured results.
+
+pub mod cache;
+pub mod dict;
+pub mod eval;
+pub mod model;
+pub mod omp;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod tasks;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory (overridable via `LEXICO_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("LEXICO_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// Default reports directory (overridable via `LEXICO_REPORTS`).
+pub fn reports_dir() -> std::path::PathBuf {
+    std::env::var_os("LEXICO_REPORTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("reports"))
+}

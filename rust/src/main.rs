@@ -1,0 +1,258 @@
+//! `lexico` — the L3 coordinator binary.
+//!
+//! Subcommands (hand-rolled CLI; the offline image has no clap):
+//!   serve       run the serving coordinator (TCP JSON-lines)
+//!   eval        evaluate one cache method on one task
+//!   repro       regenerate a paper table/figure (or `all`)
+//!   pjrt        generate through the PJRT artifacts + cross-check native
+//!   train-dict  native dictionary training demo
+//!   inspect     print model / dictionary / artifact info
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use lexico::repro::{self, ReproOpts};
+use lexico::server::batcher::{self, BatcherConfig};
+use lexico::server::metrics::Metrics;
+use lexico::tasks::Task;
+use lexico::{artifacts_dir, eval, model::Engine, model::Weights};
+
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), "1".to_string());
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "\
+lexico — Lexico KV-cache compression (ICML 2025) reproduction
+
+USAGE:
+  lexico serve  [--addr 127.0.0.1:7077] [--model M] [--method SPEC]
+                [--budget-mb 64] [--max-sessions 32]
+  lexico eval   [--model M] [--task arith] [--method SPEC] [--n 50]
+                [--seed 0] [--dict-n 1024]
+  lexico repro  <fig1|fig3|fig5|fig6|fig7|table1..table7|all> [--fast]
+  lexico pjrt   [--prompt TEXT] [--max-new 16]
+  lexico train-dict [--model M] [--atoms 256] [--s 8] [--epochs 6]
+  lexico inspect [--model M]
+
+Method specs: full | lexico:s=8,nb=32[,delta=..][,fp16][,adaptive=N:d]
+  | kivi:bits=2,g=16,nb=16 | pertoken:bits=4,g=16 | zipcache:hi=4,lo=2
+  | snapkv:cap=64,win=8 | pyramidkv:cap=64,win=8
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = parse_args(&argv[1..]);
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "repro" => cmd_repro(&args),
+        "pjrt" => cmd_pjrt(&args),
+        "train-dict" => cmd_train_dict(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_engine(size: &str) -> Result<Engine> {
+    let path = artifacts_dir().join(format!("model_{size}.bin"));
+    let w = Weights::load(&path)
+        .with_context(|| format!("{} (run `make artifacts` first)", path.display()))?;
+    Ok(Engine::new(w))
+}
+
+fn load_dicts(size: &str, n: usize) -> Result<Arc<lexico::dict::DictionarySet>> {
+    Ok(Arc::new(lexico::dict::DictionarySet::load(
+        artifacts_dir().join(format!("dict_{size}_N{n}.bin")),
+    )?))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let size = args.get("model", "M");
+    let engine = Arc::new(load_engine(&size)?);
+    let dicts = load_dicts(&size, 1024).ok();
+    let cfg = BatcherConfig {
+        default_method: args.get("method", "lexico:s=8,nb=32"),
+        kv_budget_bytes: args.get("budget-mb", "64").parse::<f64>()? * 1024.0 * 1024.0,
+        max_sessions: args.get("max-sessions", "32").parse()?,
+    };
+    let addr = args.get("addr", "127.0.0.1:7077");
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (jtx, jrx) = std::sync::mpsc::channel();
+    let m2 = metrics.clone();
+    let eng2 = engine.clone();
+    let cfg2 = cfg.clone();
+    let batcher = std::thread::spawn(move || batcher::run(eng2, dicts, cfg2, jrx, m2));
+    println!(
+        "lexico serving model {size} on {addr} (default method: {}, budget {} MB)",
+        cfg.default_method,
+        cfg.kv_budget_bytes / 1048576.0
+    );
+    lexico::server::http::serve(&addr, jtx, metrics.clone(), |a| {
+        println!("listening on {a}");
+    })?;
+    drop(batcher);
+    println!("{}", metrics.lock().unwrap().report());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let size = args.get("model", "M");
+    let engine = load_engine(&size)?;
+    let task = Task::from_name(&args.get("task", "arith"))
+        .context("unknown task (arith|arith-hard|needle|copy|sort|lm)")?;
+    let method = args.get("method", "lexico:s=8,nb=32");
+    let n: usize = args.get("n", "50").parse()?;
+    let seed: u64 = args.get("seed", "0").parse()?;
+    let dict_n: usize = args.get("dict-n", "1024").parse()?;
+    let dicts = load_dicts(&size, dict_n).ok();
+    let r = eval::evaluate(&engine, dicts, &method, &eval::EvalConfig::new(task, n, seed))?;
+    println!("{:<28} {:>7} {:>10} {:>9}", "method", "task", "KV size", "score");
+    println!("{}", eval::format_row(&r));
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exhibit = args
+        .positional
+        .first()
+        .context("usage: lexico repro <exhibit|all> [--fast]")?;
+    let opts = ReproOpts { fast: args.has("fast"), ..Default::default() };
+    repro::run(exhibit, &opts)
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    use lexico::tasks;
+    let dir = artifacts_dir();
+    let engine = lexico::runtime::PjrtEngine::load(&dir, &dir.join("model_M.bin"))?;
+    println!("PJRT engine up: {} graphs compiled", 2 + engine.omp.is_some() as usize
+        + engine.lexico_decode.is_some() as usize);
+    let prompt_text = args.get("prompt", "a=3;b=a+4;b?");
+    let max_new: usize = args.get("max-new", "8").parse()?;
+    let mut prompt = vec![tasks::BOS];
+    prompt.extend(tasks::encode_lossy(&prompt_text));
+    let out = engine.generate(&prompt, max_new, Some(tasks::newline_id()))?;
+    let pl = engine.prefill_logits(&prompt)?;
+    println!("pjrt   : {:?} -> {:?}", prompt_text, tasks::decode(&out));
+    // cross-check against the native engine
+    let native = load_engine("M")?;
+    let mut cache = lexico::cache::full::FullCache::new(native.shape());
+    let out2 = native.generate(&prompt, max_new, Some(tasks::newline_id()), &mut cache);
+    println!("native : {:?} -> {:?}", prompt_text, tasks::decode(&out2));
+    let mut cache2 = lexico::cache::full::FullCache::new(native.shape());
+    let nl2 = native.prefill(&prompt, &mut cache2);
+    let maxd = pl.iter().zip(&nl2).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    println!("prefill logits: max |PJRT − native| = {maxd:.2e}");
+    if out == out2 {
+        println!("MATCH: PJRT and native greedy decoding agree");
+    } else if maxd < 1e-3 {
+        println!("logits agree to {maxd:.1e}; token streams diverged on a near-tie argmax");
+    } else {
+        println!("WARNING: engines disagree numerically");
+    }
+    Ok(())
+}
+
+fn cmd_train_dict(args: &Args) -> Result<()> {
+    let size = args.get("model", "M");
+    let engine = load_engine(&size)?;
+    let atoms: usize = args.get("atoms", "256").parse()?;
+    let s: usize = args.get("s", "8").parse()?;
+    let epochs: usize = args.get("epochs", "6").parse()?;
+    println!("collecting KV vectors from model {size}…");
+    let (ks, _vs) = lexico::repro::exhibits::collect_kv_for_training(&engine, 0xDEED, 2000);
+    let m = engine.shape().head_dim;
+    let flat: Vec<f32> = ks.iter().flatten().copied().collect();
+    let opts = lexico::dict::train::TrainOpts {
+        n_atoms: atoms, sparsity: s, epochs, batch: 128, lr: 1e-3, seed: 7,
+    };
+    println!("training dictionary N={atoms} s={s} on {} vectors…", ks.len());
+    let (d, losses) = lexico::dict::train::train_dictionary(&flat, m, &opts);
+    for (i, l) in losses.iter().enumerate() {
+        println!("  epoch {:>2}: loss {l:.5}", i + 1);
+    }
+    // compare against a random dictionary
+    let rand = lexico::dict::Dictionary::random(m, atoms, 42);
+    let (mut e_t, mut e_r) = (0.0f64, 0.0f64);
+    for x in ks.iter().take(300) {
+        let ct = lexico::omp::omp_encode_alloc(&d.atoms, d.n, d.m, x, s, 0.0);
+        let cr = lexico::omp::omp_encode_alloc(&rand.atoms, rand.n, rand.m, x, s, 0.0);
+        e_t += lexico::omp::rel_error(&d.atoms, m, x, &ct) as f64;
+        e_r += lexico::omp::rel_error(&rand.atoms, m, x, &cr) as f64;
+    }
+    println!(
+        "mean rel. error: trained {:.4} vs random {:.4}",
+        e_t / 300.0,
+        e_r / 300.0
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let size = args.get("model", "M");
+    let engine = load_engine(&size)?;
+    let c = engine.weights.cfg;
+    let n_params: usize = engine.weights.by_name.values()
+        .map(|(s, _)| s.iter().product::<usize>())
+        .sum();
+    println!("model {size}: {n_params} params");
+    println!("  layers={} d_model={} heads={}/{} head_dim={} ff={} vocab={} max_seq={}",
+             c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.head_dim, c.d_ff,
+             c.vocab, c.max_seq);
+    for n in [256usize, 1024] {
+        if let Ok(d) = lexico::dict::DictionarySet::load(
+            artifacts_dir().join(format!("dict_{size}_N{n}.bin"))) {
+            println!("  dict N={n}: {} layers × (K,V), {} KB fp16 each",
+                     d.keys.len(), d.keys[0].bytes_fp16() / 1024);
+        }
+    }
+    for s in [1usize, 2, 4, 6, 8] {
+        println!(
+            "  KV ratio at s={s}: {:.1}% (fp8 coefs, no buffer)",
+            100.0 * lexico::sparse::memory::csr_ratio(s, c.head_dim, false)
+        );
+    }
+    Ok(())
+}

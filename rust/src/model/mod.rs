@@ -1,0 +1,10 @@
+//! The native transformer inference engine (GQA + RoPE + RMSNorm + SwiGLU),
+//! bit-compatible with the JAX model in `python/compile/model.py` and fed by
+//! the same `artifacts/model_*.bin` weights.
+
+pub mod engine;
+pub mod testutil;
+pub mod weights;
+
+pub use engine::Engine;
+pub use weights::{ModelConfig, Weights};

@@ -1,0 +1,39 @@
+//! Test fixtures shared by unit tests, integration tests and benches.
+
+use crate::model::weights::{LayerWeights, ModelConfig, Weights};
+use crate::util::rng::Rng;
+
+/// A tiny random-weight model (2L, d=16, 2 heads / 1 kv head, m=8) with the
+/// real tokenizer's vocab. Deterministic in `seed`; used wherever a test
+/// needs a functioning engine without the trained artifacts.
+pub fn tiny_weights(seed: u64) -> Weights {
+    let cfg = ModelConfig {
+        n_layers: 2, d_model: 16, n_heads: 2, n_kv_heads: 1,
+        head_dim: 8, d_ff: 32, vocab: crate::tasks::vocab_size(), max_seq: 128,
+    };
+    let mut rng = Rng::new(seed);
+    let mut mk = |n: usize, fan_in: usize| -> Vec<f32> {
+        let s = 1.0 / (fan_in as f32).sqrt();
+        (0..n).map(|_| rng.normal() * s).collect()
+    };
+    let layers = (0..cfg.n_layers)
+        .map(|_| LayerWeights {
+            ln1: vec![1.0; cfg.d_model],
+            wq: mk(cfg.d_model * cfg.q_dim(), cfg.d_model),
+            wk: mk(cfg.d_model * cfg.kv_dim(), cfg.d_model),
+            wv: mk(cfg.d_model * cfg.kv_dim(), cfg.d_model),
+            wo: mk(cfg.q_dim() * cfg.d_model, cfg.q_dim()),
+            ln2: vec![1.0; cfg.d_model],
+            w1: mk(cfg.d_model * cfg.d_ff, cfg.d_model),
+            w3: mk(cfg.d_model * cfg.d_ff, cfg.d_model),
+            w2: mk(cfg.d_ff * cfg.d_model, cfg.d_ff),
+        })
+        .collect();
+    Weights {
+        cfg,
+        embed: mk(cfg.vocab * cfg.d_model, cfg.d_model),
+        layers,
+        lnf: vec![1.0; cfg.d_model],
+        by_name: Default::default(),
+    }
+}

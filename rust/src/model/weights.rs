@@ -1,0 +1,236 @@
+//! LXMW weight-file reader (written by `python/compile/aot.py::save_model_bin`).
+//!
+//! Format (little-endian):
+//!   magic "LXMW" | u32 version=1
+//!   u32 ×8: n_layers d_model n_heads n_kv_heads head_dim d_ff vocab max_seq
+//!   u32 n_tensors, then per tensor:
+//!     u32 name_len | name | u32 rank | u32 dims[rank] | f32 data
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+/// Architecture hyperparameters (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+    /// Query heads per kv head (GQA group size).
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+/// One transformer layer's weights (all row-major, shapes as in model.py).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,       // [d]
+    pub wq: Vec<f32>,        // [d, H*m]
+    pub wk: Vec<f32>,        // [d, KV*m]
+    pub wv: Vec<f32>,        // [d, KV*m]
+    pub wo: Vec<f32>,        // [H*m, d]
+    pub ln2: Vec<f32>,       // [d]
+    pub w1: Vec<f32>,        // [d, ff]
+    pub w3: Vec<f32>,        // [d, ff]
+    pub w2: Vec<f32>,        // [ff, d]
+}
+
+/// Full model weights. The unembedding is tied to `embed`.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>, // [vocab, d]
+    pub layers: Vec<LayerWeights>,
+    pub lnf: Vec<f32>,   // [d]
+    /// Flat name → tensor map kept for the PJRT runtime (manifest order).
+    pub by_name: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"LXMW" {
+            bail!("{}: bad magic {:?}", path.display(), magic);
+        }
+        let ver = read_u32(&mut f)?;
+        if ver != 1 {
+            bail!("unsupported LXMW version {ver}");
+        }
+        let cfg = ModelConfig {
+            n_layers: read_u32(&mut f)? as usize,
+            d_model: read_u32(&mut f)? as usize,
+            n_heads: read_u32(&mut f)? as usize,
+            n_kv_heads: read_u32(&mut f)? as usize,
+            head_dim: read_u32(&mut f)? as usize,
+            d_ff: read_u32(&mut f)? as usize,
+            vocab: read_u32(&mut f)? as usize,
+            max_seq: read_u32(&mut f)? as usize,
+        };
+        let n_tensors = read_u32(&mut f)? as usize;
+        let mut by_name = BTreeMap::new();
+        for _ in 0..n_tensors {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let data = read_f32s(&mut f, n)?;
+            by_name.insert(name, (shape, data));
+        }
+        Self::assemble(cfg, by_name)
+    }
+
+    fn assemble(cfg: ModelConfig, by_name: BTreeMap<String, (Vec<usize>, Vec<f32>)>) -> Result<Self> {
+        let get = |name: &str, want: &[usize]| -> Result<Vec<f32>> {
+            let (shape, data) = by_name
+                .get(name)
+                .with_context(|| format!("missing tensor {name}"))?;
+            if shape != want {
+                bail!("tensor {name}: shape {shape:?}, expected {want:?}");
+            }
+            Ok(data.clone())
+        };
+        let d = cfg.d_model;
+        let embed = get("embed", &[cfg.vocab, d])?;
+        let lnf = get("lnf", &[d])?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layer{i}.");
+            layers.push(LayerWeights {
+                ln1: get(&format!("{p}ln1"), &[d])?,
+                wq: get(&format!("{p}wq"), &[d, cfg.q_dim()])?,
+                wk: get(&format!("{p}wk"), &[d, cfg.kv_dim()])?,
+                wv: get(&format!("{p}wv"), &[d, cfg.kv_dim()])?,
+                wo: get(&format!("{p}wo"), &[cfg.q_dim(), d])?,
+                ln2: get(&format!("{p}ln2"), &[d])?,
+                w1: get(&format!("{p}w1"), &[d, cfg.d_ff])?,
+                w3: get(&format!("{p}w3"), &[d, cfg.d_ff])?,
+                w2: get(&format!("{p}w2"), &[cfg.d_ff, d])?,
+            });
+        }
+        Ok(Weights { cfg, embed, layers, lnf, by_name })
+    }
+
+    /// Fake-quantize every weight matrix to int4 (group size `g` along the
+    /// input dim) — the Fig. 5 "weights quantized to 4 bits" setting.
+    pub fn fake_quantize_int4(&mut self, g: usize) {
+        let quant = |w: &mut Vec<f32>| crate::quant::fake_quant_rows(w, g, 4);
+        for l in &mut self.layers {
+            quant(&mut l.wq);
+            quant(&mut l.wk);
+            quant(&mut l.wv);
+            quant(&mut l.wo);
+            quant(&mut l.w1);
+            quant(&mut l.w3);
+            quant(&mut l.w2);
+        }
+        quant(&mut self.embed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny LXMW blob in memory and parse it.
+    fn write_tensor(buf: &mut Vec<u8>, name: &str, shape: &[usize], data: &[f32]) {
+        buf.extend((name.len() as u32).to_le_bytes());
+        buf.extend(name.as_bytes());
+        buf.extend((shape.len() as u32).to_le_bytes());
+        for &s in shape {
+            buf.extend((s as u32).to_le_bytes());
+        }
+        for &x in data {
+            buf.extend(x.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn roundtrip_tiny_file() {
+        let cfg = ModelConfig {
+            n_layers: 1, d_model: 4, n_heads: 2, n_kv_heads: 1,
+            head_dim: 2, d_ff: 8, vocab: 5, max_seq: 16,
+        };
+        let mut buf = Vec::new();
+        buf.extend(b"LXMW");
+        for v in [1u32, 1, 4, 2, 1, 2, 8, 5, 16] {
+            buf.extend(v.to_le_bytes());
+        }
+        let names: Vec<(String, Vec<usize>)> = vec![
+            ("embed".into(), vec![5, 4]),
+            ("layer0.ln1".into(), vec![4]),
+            ("layer0.wq".into(), vec![4, 4]),
+            ("layer0.wk".into(), vec![4, 2]),
+            ("layer0.wv".into(), vec![4, 2]),
+            ("layer0.wo".into(), vec![4, 4]),
+            ("layer0.ln2".into(), vec![4]),
+            ("layer0.w1".into(), vec![4, 8]),
+            ("layer0.w3".into(), vec![4, 8]),
+            ("layer0.w2".into(), vec![8, 4]),
+            ("lnf".into(), vec![4]),
+        ];
+        buf.extend((names.len() as u32).to_le_bytes());
+        for (name, shape) in &names {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+            write_tensor(&mut buf, name, shape, &data);
+        }
+        let dir = std::env::temp_dir().join("lexico_test_lxmw.bin");
+        std::fs::write(&dir, &buf).unwrap();
+        let w = Weights::load(&dir).unwrap();
+        assert_eq!(w.cfg, cfg);
+        assert_eq!(w.layers.len(), 1);
+        assert_eq!(w.embed.len(), 20);
+        assert!((w.embed[3] - 0.3).abs() < 1e-6);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("lexico_test_badmagic.bin");
+        std::fs::write(&dir, b"NOPE").unwrap();
+        assert!(Weights::load(&dir).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+}

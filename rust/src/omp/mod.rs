@@ -1,0 +1,320 @@
+//! Orthogonal Matching Pursuit — the L3 hot-path implementation.
+//!
+//! Cholesky-update formulation ("v0" of Zhu, Chen & Wu 2020, the variant the
+//! paper adopts): the Gram matrix of the selected atoms is maintained as a
+//! lower-triangular Cholesky factor updated in O(i²) per iteration, so one
+//! vector costs O(s·N·m) for correlations (the dominant term, matching the
+//! paper's latency analysis) plus O(s³) for the solves.
+//!
+//! Supports the paper's two modes: fixed sparsity `s`, and error-threshold
+//! early termination (`delta` > 0, §4.2.1 — the greedy prefix property
+//! makes early stopping equivalent to having asked for fewer atoms).
+
+use crate::tensor::{axpy, dot, norm2};
+
+/// Result of sparse-coding one vector.
+#[derive(Clone, Debug, Default)]
+pub struct SparseCode {
+    pub idx: Vec<u16>,
+    pub val: Vec<f32>,
+}
+
+impl SparseCode {
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+/// Reusable workspace so the decode hot loop never allocates.
+pub struct OmpWorkspace {
+    corr: Vec<f32>,    // [N] correlation scratch
+    chol: Vec<f32>,    // [s*s] lower-triangular L
+    alpha: Vec<f32>,   // [s] D_Sᵀ x
+    z: Vec<f32>,       // [s] forward-solve scratch
+    y: Vec<f32>,       // [s] coefficients
+    r: Vec<f32>,       // [m] residual
+    b: Vec<f32>,       // [s] new Gram column
+    sel: Vec<usize>,   // selected atom ids
+}
+
+impl OmpWorkspace {
+    pub fn new(n_atoms: usize, m: usize, s_max: usize) -> Self {
+        OmpWorkspace {
+            corr: vec![0.0; n_atoms],
+            chol: vec![0.0; s_max * s_max],
+            alpha: vec![0.0; s_max],
+            z: vec![0.0; s_max],
+            y: vec![0.0; s_max],
+            r: vec![0.0; m],
+            b: vec![0.0; s_max],
+            sel: Vec::with_capacity(s_max),
+        }
+    }
+
+    fn ensure(&mut self, n_atoms: usize, m: usize, s_max: usize) {
+        if self.corr.len() < n_atoms {
+            self.corr.resize(n_atoms, 0.0);
+        }
+        if self.r.len() < m {
+            self.r.resize(m, 0.0);
+        }
+        if self.chol.len() < s_max * s_max {
+            self.chol.resize(s_max * s_max, 0.0);
+            self.alpha.resize(s_max, 0.0);
+            self.z.resize(s_max, 0.0);
+            self.y.resize(s_max, 0.0);
+            self.b.resize(s_max, 0.0);
+        }
+    }
+}
+
+/// Sparse-code `x` [m] over `atoms` [N, m] (atom-major, unit-norm rows).
+///
+/// Runs at most `s_max` iterations; if `delta > 0`, stops once
+/// `‖x − Dy‖ ≤ delta·‖x‖`. Returns (indices, coefficients) of equal length.
+pub fn omp_encode(
+    atoms: &[f32],
+    n_atoms: usize,
+    m: usize,
+    x: &[f32],
+    s_max: usize,
+    delta: f32,
+    ws: &mut OmpWorkspace,
+) -> SparseCode {
+    debug_assert_eq!(atoms.len(), n_atoms * m);
+    debug_assert_eq!(x.len(), m);
+    ws.ensure(n_atoms, m, s_max);
+    ws.sel.clear();
+    ws.r[..m].copy_from_slice(x);
+    let norm_x = norm2(x);
+    let stop = (delta * norm_x).max(1e-12);
+    let s_max = s_max.min(n_atoms).min(m.max(1) * 4); // defensive cap
+
+    for i in 0..s_max {
+        let r = &ws.r[..m];
+        if norm2(r) <= stop {
+            break;
+        }
+        // correlation step: c = D_atoms · r  (the O(N·m) hot loop)
+        let mut best = usize::MAX;
+        let mut best_abs = -1.0f32;
+        for n in 0..n_atoms {
+            let c = dot(&atoms[n * m..(n + 1) * m], r);
+            let a = c.abs();
+            if a > best_abs {
+                best_abs = a;
+                best = n;
+            }
+        }
+        if best == usize::MAX || ws.sel.contains(&best) {
+            break; // numerically exhausted
+        }
+        let aj = &atoms[best * m..(best + 1) * m];
+
+        // Cholesky update: b_k = <a_sel[k], a_j>; w = L⁻¹ b (forward sub);
+        // L[i][..i] = w, L[i][i] = sqrt(1 − wᵀw) (unit-norm atoms).
+        for (k, &p) in ws.sel.iter().enumerate() {
+            ws.b[k] = dot(&atoms[p * m..(p + 1) * m], aj);
+        }
+        for k in 0..i {
+            let mut w = ws.b[k];
+            for l in 0..k {
+                w -= ws.chol[k * s_max + l] * ws.chol[i * s_max + l];
+            }
+            ws.chol[i * s_max + k] = w / ws.chol[k * s_max + k];
+        }
+        let mut diag = 1.0;
+        for l in 0..i {
+            diag -= ws.chol[i * s_max + l] * ws.chol[i * s_max + l];
+        }
+        if diag <= 1e-10 {
+            break; // atom (numerically) in span of selection: stop
+        }
+        ws.chol[i * s_max + i] = diag.sqrt();
+        ws.sel.push(best);
+        ws.alpha[i] = dot(aj, x);
+
+        // Solve L z = alpha, then Lᵀ y = z.
+        let k_sel = ws.sel.len();
+        for k in 0..k_sel {
+            let mut z = ws.alpha[k];
+            for l in 0..k {
+                z -= ws.chol[k * s_max + l] * ws.z[l];
+            }
+            ws.z[k] = z / ws.chol[k * s_max + k];
+        }
+        for k in (0..k_sel).rev() {
+            let mut y = ws.z[k];
+            for l in k + 1..k_sel {
+                y -= ws.chol[l * s_max + k] * ws.y[l];
+            }
+            ws.y[k] = y / ws.chol[k * s_max + k];
+        }
+
+        // residual refresh: r = x − Σ y_k a_k
+        ws.r[..m].copy_from_slice(x);
+        for (k, &p) in ws.sel.iter().enumerate() {
+            axpy(&mut ws.r[..m], -ws.y[k], &atoms[p * m..(p + 1) * m]);
+        }
+    }
+
+    SparseCode {
+        idx: ws.sel.iter().map(|&p| p as u16).collect(),
+        val: ws.y[..ws.sel.len()].to_vec(),
+    }
+}
+
+/// Convenience wrapper allocating its own workspace (tests / cold paths).
+pub fn omp_encode_alloc(
+    atoms: &[f32],
+    n_atoms: usize,
+    m: usize,
+    x: &[f32],
+    s_max: usize,
+    delta: f32,
+) -> SparseCode {
+    let mut ws = OmpWorkspace::new(n_atoms, m, s_max);
+    omp_encode(atoms, n_atoms, m, x, s_max, delta, &mut ws)
+}
+
+/// Dense reconstruction helper.
+pub fn reconstruct(atoms: &[f32], m: usize, code: &SparseCode, out: &mut [f32]) {
+    out.fill(0.0);
+    for (j, &id) in code.idx.iter().enumerate() {
+        axpy(out, code.val[j], &atoms[id as usize * m..(id as usize + 1) * m]);
+    }
+}
+
+/// Relative ℓ2 reconstruction error.
+pub fn rel_error(atoms: &[f32], m: usize, x: &[f32], code: &SparseCode) -> f32 {
+    let mut recon = vec![0.0; m];
+    reconstruct(atoms, m, code, &mut recon);
+    let mut err = 0.0;
+    for i in 0..m {
+        let d = x[i] - recon[i];
+        err += d * d;
+    }
+    (err.sqrt() as f32) / norm2(x).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn random_unit_atoms(rng: &mut Rng, n: usize, m: usize) -> Vec<f32> {
+        let mut atoms = rng.normal_vec(n * m);
+        for a in atoms.chunks_mut(m) {
+            let nrm = norm2(a).max(1e-12);
+            a.iter_mut().for_each(|x| *x /= nrm);
+        }
+        atoms
+    }
+
+    #[test]
+    fn recovers_exact_sparse_signal() {
+        // x built from k atoms of a well-separated dictionary is recovered
+        // exactly (support + coefficients) when k is small.
+        Prop::new(48).check("omp_exact_recovery", |rng, size| {
+            let m = 16 + (size % 3) * 8;
+            let n = 4 * m;
+            let atoms = random_unit_atoms(rng, n, m);
+            let k = 1 + rng.below(3);
+            let mut x = vec![0.0; m];
+            let mut truth = Vec::new();
+            for _ in 0..k {
+                let id = rng.below(n);
+                let c = rng.range_f32(0.5, 2.0) * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                truth.push(id);
+                axpy(&mut x, c, &atoms[id * m..(id + 1) * m]);
+            }
+            let code = omp_encode_alloc(&atoms, n, m, &x, k, 0.0);
+            let err = rel_error(&atoms, m, &x, &code);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("k={k} err={err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn residual_decreases_monotonically() {
+        Prop::new(32).check("omp_monotone", |rng, _| {
+            let (m, n) = (32, 128);
+            let atoms = random_unit_atoms(rng, n, m);
+            let x = rng.normal_vec(m);
+            let mut prev = f32::INFINITY;
+            for s in 1..=8 {
+                let code = omp_encode_alloc(&atoms, n, m, &x, s, 0.0);
+                let err = rel_error(&atoms, m, &x, &code);
+                if err > prev + 1e-4 {
+                    return Err(format!("err rose at s={s}: {prev} → {err}"));
+                }
+                prev = err;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_orthogonal_to_selection() {
+        let mut rng = Rng::new(11);
+        let (m, n, s) = (32, 256, 6);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let x = rng.normal_vec(m);
+        let code = omp_encode_alloc(&atoms, n, m, &x, s, 0.0);
+        let mut recon = vec![0.0; m];
+        reconstruct(&atoms, m, &code, &mut recon);
+        let r: Vec<f32> = x.iter().zip(&recon).map(|(a, b)| a - b).collect();
+        for &id in &code.idx {
+            let c = dot(&r, &atoms[id as usize * m..(id as usize + 1) * m]);
+            assert!(c.abs() < 1e-3, "residual not ⊥ atom {id}: {c}");
+        }
+    }
+
+    #[test]
+    fn threshold_mode_stops_early_with_greedy_prefix() {
+        Prop::new(24).check("omp_threshold", |rng, _| {
+            let (m, n) = (32, 128);
+            let atoms = random_unit_atoms(rng, n, m);
+            let x = rng.normal_vec(m);
+            let full = omp_encode_alloc(&atoms, n, m, &x, 12, 0.0);
+            let thr = omp_encode_alloc(&atoms, n, m, &x, 12, 0.5);
+            // prefix property: thresholded run = prefix of the full run
+            if thr.idx[..] != full.idx[..thr.nnz()] {
+                return Err(format!("not a prefix: {:?} vs {:?}", thr.idx, full.idx));
+            }
+            let err = rel_error(&atoms, m, &x, &thr);
+            // it stopped because the error bound was met (or ran out of iters)
+            if thr.nnz() < 12 && err > 0.5 + 1e-3 {
+                return Err(format!("stopped early but err {err} > δ"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_vector_yields_empty_code() {
+        let mut rng = Rng::new(5);
+        let atoms = random_unit_atoms(&mut rng, 64, 16);
+        let x = vec![0.0; 16];
+        let code = omp_encode_alloc(&atoms, 64, 16, &x, 4, 0.0);
+        assert_eq!(code.nnz(), 0);
+    }
+
+    #[test]
+    fn orthonormal_dictionary_is_exact_at_s_eq_m() {
+        // D = I (m atoms): OMP with s=m must reconstruct exactly.
+        let m = 8;
+        let mut atoms = vec![0.0; m * m];
+        for i in 0..m {
+            atoms[i * m + i] = 1.0;
+        }
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(m);
+        let code = omp_encode_alloc(&atoms, m, m, &x, m, 0.0);
+        assert!(rel_error(&atoms, m, &x, &code) < 1e-5);
+    }
+}

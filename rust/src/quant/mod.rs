@@ -1,0 +1,137 @@
+//! Integer group-quantization primitives used by the baseline methods
+//! (KIVI, per-token quantization, ZipCache) and by Fig. 5's int4 weights.
+//!
+//! Asymmetric uniform quantization: for a group of values, store
+//! `q = round((x - zero) / scale)` in `bits` bits with FP16 scale/zero per
+//! group. `quantize`/`dequantize` round-trip through the *exact* storage
+//! (u8 codes + f16 metadata) so results match a bit-packed implementation.
+
+use crate::sparse::fp8::{f16_to_f32, f32_to_f16};
+
+/// A quantized group: codes plus f16-rounded scale and zero-point.
+#[derive(Clone, Debug)]
+pub struct QuantGroup {
+    pub codes: Vec<u8>,
+    pub scale: f32,
+    pub zero: f32,
+    pub bits: u8,
+}
+
+impl QuantGroup {
+    /// Exact storage bytes: packed codes + 2×2 bytes metadata.
+    pub fn bytes(&self) -> f64 {
+        self.codes.len() as f64 * self.bits as f64 / 8.0 + 4.0
+    }
+}
+
+/// Quantize one group of values to `bits` bits (1..=8).
+pub fn quantize_group(xs: &[f32], bits: u8) -> QuantGroup {
+    debug_assert!((1..=8).contains(&bits));
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let scale = f16_to_f32(f32_to_f16(((hi - lo) / levels).max(1e-8)));
+    let zero = f16_to_f32(f32_to_f16(lo));
+    let codes = xs
+        .iter()
+        .map(|&x| (((x - zero) / scale).round().clamp(0.0, levels)) as u8)
+        .collect();
+    QuantGroup { codes, scale, zero, bits }
+}
+
+/// Dequantize into `out` (len == codes.len()).
+pub fn dequantize_group(g: &QuantGroup, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(&g.codes) {
+        *o = g.zero + g.scale * c as f32;
+    }
+}
+
+/// Fake-quantize a row-major matrix in place, grouping along each row in
+/// chunks of `g` (per-output-channel grouping for weights). Used for the
+/// Fig. 5 "4-bit weights" model variant.
+pub fn fake_quant_rows(w: &mut [f32], g: usize, bits: u8) {
+    for chunk in w.chunks_mut(g) {
+        let q = quantize_group(chunk, bits);
+        dequantize_group(&q, chunk);
+    }
+}
+
+/// Quantize a vector split into groups of `g`; returns groups in order.
+pub fn quantize_vector(xs: &[f32], g: usize, bits: u8) -> Vec<QuantGroup> {
+    xs.chunks(g).map(|c| quantize_group(c, bits)).collect()
+}
+
+/// Dequantize a vector of groups back into a flat buffer.
+pub fn dequantize_vector(groups: &[QuantGroup], out: &mut [f32]) {
+    let mut off = 0;
+    for g in groups {
+        let n = g.codes.len();
+        dequantize_group(g, &mut out[off..off + n]);
+        off += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn quant_error_bound() {
+        // Max abs error ≤ scale/2 + f16 metadata rounding slack.
+        Prop::new(64).check("quant_err", |rng, size| {
+            let n = 4 + rng.below(size * 4 + 4);
+            let xs = rng.normal_vec(n);
+            for bits in [2u8, 4, 8] {
+                let q = quantize_group(&xs, bits);
+                let mut out = vec![0.0; n];
+                dequantize_group(&q, &mut out);
+                let bound = q.scale * 0.501 + q.scale * 0.01 + 1e-4;
+                for (x, o) in xs.iter().zip(&out) {
+                    if (x - o).abs() > bound {
+                        return Err(format!("bits {bits}: {x} → {o}, scale {}", q.scale));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_group() {
+        let xs = vec![3.0; 8];
+        let q = quantize_group(&xs, 2);
+        let mut out = vec![0.0; 8];
+        dequantize_group(&q, &mut out);
+        for o in out {
+            assert!((o - 3.0).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let q = quantize_group(&[0.0; 32], 2);
+        assert_eq!(q.bytes(), 32.0 * 2.0 / 8.0 + 4.0); // 12 B
+        let q = quantize_group(&[0.0; 32], 4);
+        assert_eq!(q.bytes(), 20.0);
+    }
+
+    #[test]
+    fn fake_quant_reduces_precision_but_close() {
+        let mut r = crate::util::rng::Rng::new(3);
+        let mut w = r.normal_vec(64);
+        let orig = w.clone();
+        fake_quant_rows(&mut w, 16, 4);
+        let mse: f32 =
+            w.iter().zip(&orig).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / 64.0;
+        assert!(mse > 0.0);
+        assert!(mse < 0.05, "mse {mse}");
+    }
+}

@@ -1,0 +1,655 @@
+//! Per-exhibit drivers. Each reproduces one table or figure of the paper
+//! (shape, not absolute numbers — see DESIGN.md §1 for the substitutions)
+//! and records paper-vs-measured rows in `reports/`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::ReproOpts;
+
+use crate::cache::full::FullCache;
+use crate::cache::lexico::{LexicoCache, LexicoConfig};
+use crate::dict::{DictionarySet, SaePair};
+use crate::eval::{evaluate, EvalConfig, EvalResult};
+use crate::model::{Engine, Weights};
+use crate::omp::{omp_encode_alloc, rel_error};
+use crate::tasks::{self, Task};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Shared plumbing
+// ---------------------------------------------------------------------------
+
+pub fn load_engine(artifacts: &Path, size: &str) -> Result<Engine> {
+    let w = Weights::load(artifacts.join(format!("model_{size}.bin")))?;
+    Ok(Engine::new(w))
+}
+
+pub fn load_dicts(artifacts: &Path, size: &str, n: usize) -> Result<Arc<DictionarySet>> {
+    Ok(Arc::new(DictionarySet::load(
+        artifacts.join(format!("dict_{size}_N{n}.bin")),
+    )?))
+}
+
+fn write_report(opts: &ReproOpts, name: &str, body: Json) -> Result<()> {
+    let path = opts.reports.join(format!("{name}.json"));
+    std::fs::write(&path, body.to_string())?;
+    println!("[report] {}", path.display());
+    Ok(())
+}
+
+fn result_json(r: &EvalResult) -> Json {
+    let agree = if r.agree.is_nan() { Json::Null } else { json::num(r.agree) };
+    json::obj(vec![
+        ("method", json::s(&r.method)),
+        ("task", json::s(r.task)),
+        ("kv_pct", json::num(100.0 * r.kv_ratio)),
+        ("score", json::num(r.score)),
+        ("agree_pct", agree),
+        ("n", json::num(r.n as f64)),
+    ])
+}
+
+fn print_header() {
+    println!(
+        "{:<34} {:>10} {:>9} {:>9} {:>5}",
+        "method", "task", "KV size", "score", "agree"
+    );
+}
+
+/// Run a list of method specs over a list of tasks; print + collect.
+fn sweep(
+    engine: &Engine,
+    dicts: Option<Arc<DictionarySet>>,
+    specs: &[String],
+    suite: &[Task],
+    n: usize,
+    seed: u64,
+) -> Result<Vec<EvalResult>> {
+    let mut out = Vec::new();
+    for spec in specs {
+        for &task in suite {
+            let r = evaluate(engine, dicts.clone(), spec, &EvalConfig::new(task, n, seed))?;
+            println!("{}", crate::eval::format_row(&r));
+            out.push(r);
+        }
+    }
+    Ok(out)
+}
+
+fn samples(opts: &ReproOpts, full: usize) -> usize {
+    if opts.fast {
+        (full / 5).max(4)
+    } else {
+        full
+    }
+}
+
+/// Default buffer size (scaled from the paper's n_b=128 at ~3.6k contexts to
+/// our ~250-token contexts).
+const NB: usize = 32;
+
+/// Calibrate the Lexico sparsity whose measured KV ratio is closest to a
+/// target (the paper's "s is set to match the KV size of the baseline").
+fn match_sparsity(
+    engine: &Engine,
+    dicts: &Arc<DictionarySet>,
+    task: Task,
+    target: f64,
+    seed: u64,
+) -> Result<usize> {
+    let mut best = (1usize, f64::INFINITY);
+    for s in 1..=8 {
+        let spec = format!("lexico:s={s},nb={NB}");
+        let r = evaluate(
+            engine,
+            Some(dicts.clone()),
+            &spec,
+            &EvalConfig::new(task, 2, seed),
+        )?;
+        let d = (r.kv_ratio - target).abs();
+        if d < best.1 {
+            best = (s, d);
+        }
+    }
+    Ok(best.0)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — KV size vs GSM8K-substitute score, 3 model scales, all methods
+// ---------------------------------------------------------------------------
+
+pub fn fig1(opts: &ReproOpts) -> Result<()> {
+    println!("Fig 1: memory vs performance across model scales (arith ≙ GSM8K)\n");
+    let n = samples(opts, 60);
+    let mut rows = Vec::new();
+    for size in ["S", "M", "L"] {
+        let engine = load_engine(&opts.artifacts, size)?;
+        let dicts = load_dicts(&opts.artifacts, size, 1024)?;
+        println!("--- model {size} ({} params) ---",
+                 engine.weights.by_name.values().map(|(s, _)| s.iter().product::<usize>()).sum::<usize>());
+        print_header();
+        let mut specs = vec!["full".to_string()];
+        for s in [2usize, 3, 4, 6, 8] {
+            specs.push(format!("lexico:s={s},nb={NB}"));
+        }
+        for bits in [2, 4] {
+            specs.push(format!("kivi:bits={bits},g=16,nb=16"));
+            specs.push(format!("pertoken:bits={bits},g=16,nb=4"));
+        }
+        specs.push("zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16".into());
+        for cap in [24usize, 48, 96] {
+            specs.push(format!("snapkv:cap={cap},win=8"));
+            specs.push(format!("pyramidkv:cap={cap},win=8"));
+        }
+        let rs = sweep(&engine, Some(dicts), &specs, &[Task::Arith], n, 100 + size.len() as u64)?;
+        for r in rs {
+            rows.push(json::obj(vec![
+                ("model", json::s(size)),
+                ("row", result_json(&r)),
+            ]));
+        }
+    }
+    write_report(opts, "fig1", json::obj(vec![
+        ("exhibit", json::s("fig1")),
+        ("task", json::s("arith (GSM8K substitute)")),
+        ("rows", json::arr(rows)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 — key clustering across inputs
+// ---------------------------------------------------------------------------
+
+pub fn fig3(opts: &ReproOpts) -> Result<()> {
+    println!("Fig 3: pairwise cosine structure of keys (within & across inputs)\n");
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let layer = engine.shape().n_layers / 2;
+    let (st, cross, cross_rand) = crate::eval::keygeom::fig3(&engine, layer, 42)?;
+    println!("layer {layer}: n={} keys", st.n);
+    println!("mean |cos|  (all pairs)          : {:.3}", st.mean_abs_all);
+    println!("mean |cos|  (sorted near-diag)   : {:.3}  ← cluster blocks", st.mean_abs_band);
+    println!("frac keys with NN cos > 0.9      : {:.3}", st.frac_nn_above_09);
+    println!("cross-input match frac (cos>0.8) : {:.3}  ← clusters recur across inputs", cross);
+    println!("  vs random-vector control       : {:.3}", cross_rand);
+    write_report(opts, "fig3", json::obj(vec![
+        ("exhibit", json::s("fig3")),
+        ("layer", json::num(layer as f64)),
+        ("n_keys", json::num(st.n as f64)),
+        ("mean_abs_all", json::num(st.mean_abs_all)),
+        ("mean_abs_band", json::num(st.mean_abs_band)),
+        ("frac_nn_above_09", json::num(st.frac_nn_above_09)),
+        ("cross_match", json::num(cross)),
+        ("cross_match_random_control", json::num(cross_rand)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — reconstruction error: Lexico vs SAE vs random dictionaries
+// ---------------------------------------------------------------------------
+
+/// Collect mid-layer K and V vectors from engine runs over a corpus family.
+fn collect_kv_vectors(
+    engine: &Engine,
+    corpus: &str,
+    seed: u64,
+    n_tokens: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let layer = engine.shape().n_layers / 2;
+    let shape = engine.shape();
+    let (kvd, m) = (shape.kv_dim(), shape.head_dim);
+    let mut ks = Vec::new();
+    let mut vs = Vec::new();
+    while ks.len() < n_tokens {
+        let text = match corpus {
+            "prose" => tasks::gen_lm_text(&mut rng, 200),
+            "arith" => {
+                let mut t = String::new();
+                for _ in 0..6 {
+                    let steps = 3 + rng.below(4);
+                    let e = tasks::gen_arith_example(&mut rng, steps);
+                    t.push_str(&e.prompt);
+                    t.push_str(&e.answer);
+                    t.push('\n');
+                }
+                t
+            }
+            "retrieval" => {
+                let pairs = 20 + rng.below(10);
+                let e = tasks::gen_needle(&mut rng, pairs);
+                format!("{}{}", e.prompt, e.answer)
+            }
+            _ => {
+                let a = tasks::gen_sort(&mut rng, 5);
+                let b = tasks::gen_copy(&mut rng, 20);
+                format!("{}{}\n{}{}", a.prompt, a.answer, b.prompt, b.answer)
+            }
+        };
+        let mut ids = vec![tasks::BOS];
+        ids.extend(tasks::encode(&text));
+        ids.truncate(engine.weights.cfg.max_seq - 1);
+        let mut cache = FullCache::new(shape);
+        let _ = engine.prefill(&ids, &mut cache);
+        let kd = cache.keys(layer);
+        let t = kd.len() / kvd;
+        // also need values: FullCache only exposes keys; re-derive via a
+        // second accessor — use both kv heads of keys, and values via the
+        // values accessor below.
+        for g in 0..shape.n_kv_heads {
+            for ti in 0..t {
+                ks.push(kd[ti * kvd + g * m..ti * kvd + (g + 1) * m].to_vec());
+            }
+        }
+        let vd = cache.values(layer);
+        for g in 0..shape.n_kv_heads {
+            for ti in 0..t {
+                vs.push(vd[ti * kvd + g * m..ti * kvd + (g + 1) * m].to_vec());
+            }
+        }
+    }
+    ks.truncate(n_tokens);
+    vs.truncate(n_tokens);
+    (ks, vs)
+}
+
+/// Public KV collection used by `lexico train-dict` (prose corpus).
+pub fn collect_kv_for_training(
+    engine: &Engine,
+    seed: u64,
+    n: usize,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    collect_kv_vectors(engine, "prose", seed, n)
+}
+
+pub fn table1(opts: &ReproOpts) -> Result<()> {
+    println!("Table 1: relative reconstruction error by dictionary type\n");
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let dicts = load_dicts(&opts.artifacts, "M", 1024)?;
+    let sae = SaePair::load(opts.artifacts.join("sae_M_N1024.bin"))
+        .context("sae_M_N1024.bin (rebuild artifacts)")?;
+    let layer = engine.shape().n_layers / 2;
+    let rand = crate::dict::Dictionary::random(engine.shape().head_dim, 1024, 777);
+    let s = 8usize; // paper: dictionary-training sparsity (m/4)
+    let n_vecs = samples(opts, 600);
+
+    println!(
+        "{:<12} {:>16} {:>22} {:>22}",
+        "corpus", "Lexico", "Sparse Autoencoder", "Random Dictionaries"
+    );
+    let mut rows = Vec::new();
+    for corpus in ["prose", "arith", "retrieval", "mixed"] {
+        let (ks, vs) = collect_kv_vectors(&engine, corpus, 0xC0 ^ corpus.len() as u64, n_vecs / 2);
+        let mut errs_lex = Vec::new();
+        let mut errs_sae = Vec::new();
+        let mut errs_rand = Vec::new();
+        for (vecs, is_key) in [(&ks, true), (&vs, false)] {
+            let dict = if is_key { &dicts.keys[layer] } else { &dicts.values[layer] };
+            for x in vecs.iter() {
+                let c = omp_encode_alloc(&dict.atoms, dict.n, dict.m, x, s, 0.0);
+                errs_lex.push(rel_error(&dict.atoms, dict.m, x, &c) as f64);
+                errs_sae.push(sae.rel_error(x, s, is_key) as f64);
+                let cr = omp_encode_alloc(&rand.atoms, rand.n, rand.m, x, s, 0.0);
+                errs_rand.push(rel_error(&rand.atoms, rand.m, x, &cr) as f64);
+            }
+        }
+        let ms = |v: &[f64]| {
+            let mean = v.iter().sum::<f64>() / v.len() as f64;
+            let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+            (mean, var.sqrt())
+        };
+        let (ml, sl) = ms(&errs_lex);
+        let (msae, ssae) = ms(&errs_sae);
+        let (mr, sr) = ms(&errs_rand);
+        println!(
+            "{corpus:<12} {ml:>8.3} ± {sl:<5.3} {msae:>14.3} ± {ssae:<5.3} {mr:>14.3} ± {sr:<5.3}"
+        );
+        rows.push(json::obj(vec![
+            ("corpus", json::s(corpus)),
+            ("lexico", json::arr(vec![json::num(ml), json::num(sl)])),
+            ("sae", json::arr(vec![json::num(msae), json::num(ssae)])),
+            ("random", json::arr(vec![json::num(mr), json::num(sr)])),
+        ]));
+    }
+    write_report(opts, "table1", json::obj(vec![
+        ("exhibit", json::s("table1")),
+        ("sparsity", json::num(s as f64)),
+        ("rows", json::arr(rows)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — LongBench substitute at matched KV sizes (M + L models)
+// ---------------------------------------------------------------------------
+
+const LONG_SUITE: [Task; 4] = [Task::Needle, Task::Copy, Task::Sort, Task::Lm];
+
+pub fn table2(opts: &ReproOpts) -> Result<()> {
+    println!("Table 2: long-context suite at matched KV sizes\n");
+    let n = samples(opts, 50);
+    let mut rows = Vec::new();
+    for size in ["M", "L"] {
+        let engine = load_engine(&opts.artifacts, size)?;
+        let dicts = load_dicts(&opts.artifacts, size, 1024)?;
+        println!("--- model {size} ---");
+        print_header();
+        // measure the KIVI operating points first, then match Lexico's s
+        let kivi4 = format!("kivi:bits=4,g=16,nb={NB}");
+        let kivi2 = format!("kivi:bits=2,g=16,nb={NB}");
+        let r4 = evaluate(&engine, None, &kivi4, &EvalConfig::new(Task::Needle, 2, 7))?;
+        let r2 = evaluate(&engine, None, &kivi2, &EvalConfig::new(Task::Needle, 2, 7))?;
+        let s4 = match_sparsity(&engine, &dicts, Task::Needle, r4.kv_ratio, 7)?;
+        let s2 = match_sparsity(&engine, &dicts, Task::Needle, r2.kv_ratio, 7)?;
+        let specs = vec![
+            "full".to_string(),
+            kivi4,
+            format!("lexico:s={s4},nb={NB}"),
+            kivi2,
+            format!("lexico:s={s2},nb={NB}"),
+            format!("lexico:s=2,nb={NB}"), // beyond-2-bit regime
+        ];
+        let rs = sweep(&engine, Some(dicts), &specs, &LONG_SUITE, n, 200)?;
+        for r in rs {
+            rows.push(json::obj(vec![("model", json::s(size)), ("row", result_json(&r))]));
+        }
+    }
+    write_report(opts, "table2", json::obj(vec![
+        ("exhibit", json::s("table2")),
+        ("rows", json::arr(rows)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — GSM8K substitute at matched KV sizes (M + L models)
+// ---------------------------------------------------------------------------
+
+pub fn table3(opts: &ReproOpts) -> Result<()> {
+    println!("Table 3: arith (GSM8K substitute) at matched KV sizes\n");
+    let n = samples(opts, 80);
+    let mut rows = Vec::new();
+    for size in ["M", "L"] {
+        let engine = load_engine(&opts.artifacts, size)?;
+        let dicts = load_dicts(&opts.artifacts, size, 1024)?;
+        println!("--- model {size} ---");
+        print_header();
+        let kivi4 = "kivi:bits=4,g=16,nb=16".to_string();
+        let kivi2 = "kivi:bits=2,g=16,nb=16".to_string();
+        let r4 = evaluate(&engine, None, &kivi4, &EvalConfig::new(Task::Arith, 2, 11))?;
+        let r2 = evaluate(&engine, None, &kivi2, &EvalConfig::new(Task::Arith, 2, 11))?;
+        let s4 = match_sparsity(&engine, &dicts, Task::Arith, r4.kv_ratio, 11)?;
+        let s2 = match_sparsity(&engine, &dicts, Task::Arith, r2.kv_ratio, 11)?;
+        let specs = vec![
+            "full".to_string(),
+            kivi4,
+            format!("lexico:s={s4},nb={NB}"),
+            kivi2,
+            format!("lexico:s={s2},nb={NB}"),
+            format!("lexico:s=1,nb={NB}"), // the paper's s=4 extreme point
+        ];
+        let rs = sweep(&engine, Some(dicts), &specs, &[Task::Arith], n, 300)?;
+        for r in rs {
+            rows.push(json::obj(vec![("model", json::s(size)), ("row", result_json(&r))]));
+        }
+    }
+    write_report(opts, "table3", json::obj(vec![
+        ("exhibit", json::s("table3")),
+        ("rows", json::arr(rows)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5 — 4-bit-weight model: Lexico vs quantization baselines
+// ---------------------------------------------------------------------------
+
+pub fn fig5(opts: &ReproOpts) -> Result<()> {
+    println!("Fig 5: Lexico on a weight-quantized (int4) model (arith)\n");
+    let n = samples(opts, 60);
+    let mut w = Weights::load(opts.artifacts.join("model_L.bin"))?;
+    w.fake_quantize_int4(16);
+    let engine = Engine::new(w);
+    let dicts = load_dicts(&opts.artifacts, "L", 1024)?;
+    print_header();
+    let mut specs = vec!["full".to_string()];
+    for s in [2usize, 4, 6, 8] {
+        specs.push(format!("lexico:s={s},nb={NB}"));
+    }
+    specs.push("kivi:bits=4,g=16,nb=16".into());
+    specs.push("kivi:bits=2,g=16,nb=16".into());
+    specs.push("pertoken:bits=4,g=16,nb=4".into());
+    let rs = sweep(&engine, Some(dicts), &specs, &[Task::Arith], n, 500)?;
+    write_report(opts, "fig5", json::obj(vec![
+        ("exhibit", json::s("fig5")),
+        ("note", json::s("L model, int4 fake-quantized weights (g=16)")),
+        ("rows", json::arr(rs.iter().map(result_json).collect())),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 — MMLU-Pro substitutes (arith-hard / sort) across methods
+// ---------------------------------------------------------------------------
+
+pub fn fig6(opts: &ReproOpts) -> Result<()> {
+    // `sort` instances are shorter than the recency buffer, so every method
+    // reports ~100% KV on them; `copy` is the long-range hard task that
+    // actually exercises compression — used as the second panel here.
+    println!("Fig 6: hard-task tradeoffs (arith-hard ≙ Engineering, copy ≙ Law)\n");
+    let n = samples(opts, 60);
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let dicts = load_dicts(&opts.artifacts, "M", 1024)?;
+    print_header();
+    let mut specs = vec!["full".to_string()];
+    for s in [2usize, 4, 6, 8] {
+        specs.push(format!("lexico:s={s},nb={NB}"));
+    }
+    specs.push("kivi:bits=2,g=16,nb=16".into());
+    specs.push("kivi:bits=4,g=16,nb=16".into());
+    specs.push("pertoken:bits=2,g=16,nb=4".into());
+    specs.push("pertoken:bits=4,g=16,nb=4".into());
+    specs.push("zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16".into());
+    specs.push("snapkv:cap=48,win=8".into());
+    specs.push("pyramidkv:cap=48,win=8".into());
+    let rs = sweep(&engine, Some(dicts), &specs, &[Task::ArithHard, Task::Copy], n, 600)?;
+    write_report(opts, "fig6", json::obj(vec![
+        ("exhibit", json::s("fig6")),
+        ("rows", json::arr(rs.iter().map(result_json).collect())),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — error-threshold (δ) ablation
+// ---------------------------------------------------------------------------
+
+pub fn table4(opts: &ReproOpts) -> Result<()> {
+    println!("Table 4: error-threshold δ ablation (N=256, FP16 coefs, max s=8)\n");
+    let n = samples(opts, 50);
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let dicts = load_dicts(&opts.artifacts, "M", 256)?;
+    print_header();
+    let mut specs = vec!["full".to_string()];
+    for delta in ["0.2", "0.3", "0.4", "0.5"] {
+        specs.push(format!("lexico:s=8,delta={delta},nb={NB},fp16"));
+    }
+    let rs = sweep(&engine, Some(dicts), &specs, &LONG_SUITE, n, 700)?;
+    write_report(opts, "table4", json::obj(vec![
+        ("exhibit", json::s("table4")),
+        ("rows", json::arr(rs.iter().map(result_json).collect())),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — buffer ↔ sparse-representation balance at fixed 25% budget
+// ---------------------------------------------------------------------------
+
+pub fn table5(opts: &ReproOpts) -> Result<()> {
+    println!("Table 5: (s, n_b) frontier at a fixed ~25% KV budget\n");
+    let n = samples(opts, 50);
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let dicts = load_dicts(&opts.artifacts, "M", 256)?;
+    let m = engine.shape().head_dim;
+    // typical context length of the long suite (measured):
+    let t_ctx = 230.0f64;
+    print_header();
+    let mut rows = Vec::new();
+    for s in [1usize, 2, 4, 6, 8] {
+        // FP16 coefficients (paper's Table 5 setting): row = 4s+2 bytes
+        let r = crate::sparse::memory::csr_ratio(s, m, true);
+        // budget: [(T−nb)·r·2m·2 + nb·2m·2] / (T·2m·2) = 0.25
+        let nb = if r < 0.25 {
+            (t_ctx * (0.25 - r) / (1.0 - r)).round() as usize
+        } else {
+            0
+        };
+        let spec = format!("lexico:s={s},nb={nb},fp16");
+        for task in [Task::Needle, Task::Lm, Task::Copy] {
+            let res = evaluate(&engine, Some(dicts.clone()), &spec,
+                               &EvalConfig::new(task, n, 800))?;
+            println!("{}  (nb={nb})", crate::eval::format_row(&res));
+            rows.push(json::obj(vec![
+                ("s", json::num(s as f64)),
+                ("nb", json::num(nb as f64)),
+                ("row", result_json(&res)),
+            ]));
+        }
+    }
+    write_report(opts, "table5", json::obj(vec![
+        ("exhibit", json::s("table5")),
+        ("budget", json::num(0.25)),
+        ("rows", json::arr(rows)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7 / Tables 9–10 — performance without the buffer
+// ---------------------------------------------------------------------------
+
+pub fn fig7(opts: &ReproOpts) -> Result<()> {
+    println!("Fig 7: Lexico with vs without the recency buffer (N=256, FP16)\n");
+    let n = samples(opts, 50);
+    let mut rows = Vec::new();
+    for size in ["M", "L"] {
+        let engine = load_engine(&opts.artifacts, size)?;
+        // N=256 dictionaries ship for M; L falls back to its N=1024 set
+        let dicts = load_dicts(&opts.artifacts, size, 256)
+            .or_else(|_| load_dicts(&opts.artifacts, size, 1024))?;
+        println!("--- model {size} ---");
+        print_header();
+        let mut specs = Vec::new();
+        for s in [2usize, 4, 6, 8] {
+            specs.push(format!("lexico:s={s},nb={NB},fp16"));
+            specs.push(format!("lexico:s={s},nb=0,fp16"));
+        }
+        let rs = sweep(&engine, Some(dicts), &specs,
+                       &[Task::Needle, Task::Copy, Task::Arith], n, 900)?;
+        for r in rs {
+            rows.push(json::obj(vec![("model", json::s(size)), ("row", result_json(&r))]));
+        }
+    }
+    write_report(opts, "fig7", json::obj(vec![
+        ("exhibit", json::s("fig7_tables9_10")),
+        ("rows", json::arr(rows)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — adaptive dictionary learning
+// ---------------------------------------------------------------------------
+
+pub fn table6(opts: &ReproOpts) -> Result<()> {
+    println!("Table 6: adaptive dictionaries on arith (base N=256 + ≤256 atoms)\n");
+    let n = samples(opts, 80);
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let dicts = load_dicts(&opts.artifacts, "M", 256)?;
+    print_header();
+    let mut specs = vec![
+        "full".to_string(),
+        format!("lexico:s=4,nb={NB},fp16"), // w/o adaptation
+    ];
+    for delta in ["0.25", "0.30", "0.35"] {
+        specs.push(format!("lexico:s=4,nb={NB},fp16,adaptive=256:{delta}"));
+    }
+    let rs = sweep(&engine, Some(dicts), &specs, &[Task::Arith], n, 1000)?;
+    write_report(opts, "table6", json::obj(vec![
+        ("exhibit", json::s("table6")),
+        ("rows", json::arr(rs.iter().map(result_json).collect())),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — latency decomposition (also: benches/table7_latency.rs)
+// ---------------------------------------------------------------------------
+
+pub fn table7(opts: &ReproOpts) -> Result<()> {
+    println!("Table 7: per-token latency decomposition (context ≈ 500 tokens)\n");
+    let engine = load_engine(&opts.artifacts, "M")?;
+    let shape = engine.shape();
+    let t_ctx = 500usize.min(engine.weights.cfg.max_seq - 40);
+    let mut rng = Rng::new(3);
+    let prompt: Vec<u32> = {
+        let mut v = vec![tasks::BOS];
+        v.extend(tasks::encode(&tasks::gen_lm_text(&mut rng, t_ctx - 2)));
+        v.truncate(t_ctx);
+        v
+    };
+    let reps = if opts.fast { 20 } else { 100 };
+    let mut rows = Vec::new();
+    // standard forward (full cache)
+    let mut full = FullCache::new(shape);
+    let _ = engine.prefill(&prompt, &mut full);
+    let mut pos = prompt.len();
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let _ = engine.decode_step((5 + i % 30) as u32, pos, &mut full);
+        pos += 1;
+    }
+    let std_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!("standard forward (qKᵀ)                 : {std_ms:>8.3} ms/token");
+    rows.push(json::obj(vec![("what", json::s("standard_forward")), ("ms", json::num(std_ms))]));
+
+    for n_atoms in [256usize, 1024] {
+        let dicts = load_dicts(&opts.artifacts, "M", n_atoms)?;
+        // lexico forward: attend over compressed cache (na=0 during timing
+        // by using a huge buffer margin → no OMP inside the loop)
+        let cfg = LexicoConfig { sparsity: 6, n_buffer: NB, n_approx: 0, ..Default::default() };
+        let mut lex = LexicoCache::new(shape, dicts.clone(), cfg);
+        let _ = engine.prefill(&prompt, &mut lex);
+        let mut pos = prompt.len();
+        let t0 = Instant::now();
+        for i in 0..reps {
+            let _ = engine.decode_step((5 + i % 30) as u32, pos, &mut lex);
+            pos += 1;
+        }
+        let fwd_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        // OMP: compress one token's K+V per layer/kv-head (s=6)
+        let mut ws = crate::omp::OmpWorkspace::new(n_atoms, shape.head_dim, 6);
+        let xs: Vec<Vec<f32>> = (0..shape.n_layers * shape.n_kv_heads * 2)
+            .map(|_| rng.normal_vec(shape.head_dim))
+            .collect();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            for (i, x) in xs.iter().enumerate() {
+                let layer = i / (shape.n_kv_heads * 2);
+                let d = if i % 2 == 0 { &dicts.keys[layer] } else { &dicts.values[layer] };
+                let _ = crate::omp::omp_encode(&d.atoms, d.n, d.m, x, 6, 0.0, &mut ws);
+            }
+        }
+        let omp_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("Lexico forward  q(K_csr·D_kᵀ)ᵀ N={n_atoms:<5}: {fwd_ms:>8.3} ms/token");
+        println!("Lexico OMP (per generated token) N={n_atoms:<4}: {omp_ms:>8.3} ms/token");
+        rows.push(json::obj(vec![
+            ("what", json::s(&format!("lexico_forward_N{n_atoms}"))),
+            ("ms", json::num(fwd_ms)),
+        ]));
+        rows.push(json::obj(vec![
+            ("what", json::s(&format!("omp_N{n_atoms}"))),
+            ("ms", json::num(omp_ms)),
+        ]));
+    }
+    write_report(opts, "table7", json::obj(vec![
+        ("exhibit", json::s("table7")),
+        ("context", json::num(t_ctx as f64)),
+        ("rows", json::arr(rows)),
+    ]))
+}

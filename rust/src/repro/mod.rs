@@ -1,0 +1,59 @@
+//! Repro drivers — one per table/figure of the paper (DESIGN.md §4 index).
+//!
+//! Each driver prints rows in the paper's format and writes a JSON record
+//! under `reports/`. Drivers are registered in [`run`]; `--fast` shrinks
+//! sample counts for smoke runs.
+
+pub mod exhibits;
+
+use anyhow::{bail, Result};
+
+/// Shared driver options.
+#[derive(Clone, Debug)]
+pub struct ReproOpts {
+    pub fast: bool,
+    pub artifacts: std::path::PathBuf,
+    pub reports: std::path::PathBuf,
+}
+
+impl Default for ReproOpts {
+    fn default() -> Self {
+        ReproOpts {
+            fast: false,
+            artifacts: crate::artifacts_dir(),
+            reports: crate::reports_dir(),
+        }
+    }
+}
+
+pub const EXHIBITS: &[&str] = &[
+    "fig1", "fig3", "fig5", "fig6", "fig7",
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+];
+
+/// Dispatch a driver by exhibit name.
+pub fn run(exhibit: &str, opts: &ReproOpts) -> Result<()> {
+    std::fs::create_dir_all(&opts.reports).ok();
+    match exhibit {
+        "fig1" => exhibits::fig1(opts),
+        "fig3" => exhibits::fig3(opts),
+        "fig5" => exhibits::fig5(opts),
+        "fig6" => exhibits::fig6(opts),
+        "fig7" => exhibits::fig7(opts),
+        "table1" => exhibits::table1(opts),
+        "table2" => exhibits::table2(opts),
+        "table3" => exhibits::table3(opts),
+        "table4" => exhibits::table4(opts),
+        "table5" => exhibits::table5(opts),
+        "table6" => exhibits::table6(opts),
+        "table7" => exhibits::table7(opts),
+        "all" => {
+            for e in EXHIBITS {
+                println!("\n================= {e} =================");
+                run(e, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown exhibit '{other}'; known: {EXHIBITS:?} or 'all'"),
+    }
+}

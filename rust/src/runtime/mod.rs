@@ -1,0 +1,264 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once at build time by `python/compile/aot.py`) and executes them on the
+//! PJRT CPU client. This is the path that proves the three layers compose:
+//! the L1 Pallas OMP kernel and the L2 JAX decode graphs run from Rust with
+//! no Python anywhere near the request path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+use crate::model::Weights;
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+pub struct Manifest {
+    pub json: Json,
+    pub weight_order: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let weight_order = json
+            .get("weight_order")
+            .as_arr()
+            .context("manifest missing weight_order")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        Ok(Manifest { json, weight_order })
+    }
+
+    /// Static dims recorded for a graph (e.g. `tc`, `s`, `n_atoms`).
+    pub fn graph_const(&self, graph: &str, key: &str) -> Option<usize> {
+        self.json.get("graphs").get(graph).get("const").get(key).as_usize()
+    }
+
+    pub fn has_graph(&self, graph: &str) -> bool {
+        self.json.get("graphs").get(graph).as_obj().is_some()
+    }
+}
+
+/// A compiled HLO graph plus the weight literals it is fed with.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Graph {
+    /// Execute with `extra` appended after the weight literals; returns the
+    /// decomposed output tuple.
+    pub fn run(&self, weights: &[xla::Literal], extra: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+        let mut args: Vec<&xla::Literal> = weights.iter().collect();
+        for e in &extra {
+            args.push(e);
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with no weight prefix (standalone kernels, e.g. the OMP graph).
+    pub fn run_raw(&self, args: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+        self.run(&[], args)
+    }
+}
+
+/// PJRT-backed engine: dense-cache decode / prefill graphs + the standalone
+/// L1 OMP kernel + the full Lexico decode graph.
+pub struct PjrtEngine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub weights_lit: Vec<xla::Literal>,
+    pub decode: Graph,
+    pub prefill: Graph,
+    pub omp: Option<Graph>,
+    pub lexico_decode: Option<Graph>,
+    pub t_max: usize,
+    pub cfg: crate::model::ModelConfig,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+impl PjrtEngine {
+    /// Compile one artifact file on the client.
+    fn compile(client: &xla::PjRtClient, dir: &Path, file: &str) -> Result<Graph> {
+        let path = dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Graph { exe, name: file.to_string() })
+    }
+
+    /// Load everything from the artifacts directory. `weights_path` is the
+    /// LXMW file matching the exported graphs (model_M.bin).
+    pub fn load(dir: &Path, weights_path: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let weights = Weights::load(weights_path)?;
+        let cfg = weights.cfg;
+        let client = xla::PjRtClient::cpu()?;
+        let decode = Self::compile(&client, dir, "model.hlo.txt")?;
+        let prefill = Self::compile(&client, dir, "prefill_M.hlo.txt")?;
+        let omp = if manifest.has_graph("omp_M.hlo.txt") {
+            Some(Self::compile(&client, dir, "omp_M.hlo.txt")?)
+        } else {
+            None
+        };
+        let lexico_decode = if manifest.has_graph("lexico_decode_M.hlo.txt") {
+            Some(Self::compile(&client, dir, "lexico_decode_M.hlo.txt")?)
+        } else {
+            None
+        };
+        // weight literals in manifest order
+        let mut weights_lit = Vec::with_capacity(manifest.weight_order.len());
+        for name in &manifest.weight_order {
+            let (shape, data) = weights
+                .by_name
+                .get(name)
+                .with_context(|| format!("weights missing {name}"))?;
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            weights_lit.push(lit_f32(data, &dims)?);
+        }
+        let t_max = manifest
+            .graph_const("model.hlo.txt", "t_max")
+            .unwrap_or(cfg.max_seq);
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            weights_lit,
+            decode,
+            prefill,
+            omp,
+            lexico_decode,
+            t_max,
+            cfg,
+        })
+    }
+
+    /// Logits of the last prompt token through the AOT prefill graph
+    /// (numeric cross-check against the native engine).
+    pub fn prefill_logits(&self, prompt: &[u32]) -> Result<Vec<f32>> {
+        let t = prompt.len();
+        if t == 0 || t > self.t_max {
+            bail!("prompt length {t} out of range");
+        }
+        let mut toks = vec![0i32; self.t_max];
+        for (i, &p) in prompt.iter().enumerate() {
+            toks[i] = p as i32;
+        }
+        let out = self.prefill.run(
+            &self.weights_lit,
+            vec![
+                lit_i32(&toks, &[1, self.t_max as i64])?,
+                lit_i32(&[t as i32], &[1])?,
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Dense-cache generation through the PJRT decode graph (batch 1).
+    /// Returns generated token ids (greedy, stop included).
+    pub fn generate(&self, prompt: &[u32], max_new: usize, stop: Option<u32>) -> Result<Vec<u32>> {
+        let cfg = &self.cfg;
+        let t = prompt.len();
+        if t == 0 || t > self.t_max {
+            bail!("prompt length {t} out of range");
+        }
+        // prefill
+        let mut toks = vec![0i32; self.t_max];
+        for (i, &p) in prompt.iter().enumerate() {
+            toks[i] = p as i32;
+        }
+        let out = self.prefill.run(
+            &self.weights_lit,
+            vec![
+                lit_i32(&toks, &[1, self.t_max as i64])?,
+                lit_i32(&[t as i32], &[1])?,
+            ],
+        )?;
+        let (mut logits, mut k_cache, mut v_cache) = {
+            let mut it = out.into_iter();
+            (
+                it.next().context("prefill: missing logits")?,
+                it.next().context("prefill: missing k")?,
+                it.next().context("prefill: missing v")?,
+            )
+        };
+        let mut generated = Vec::with_capacity(max_new);
+        let mut pos = t;
+        let mut next = argmax_lit(&logits, cfg.vocab)?;
+        for _ in 0..max_new {
+            generated.push(next);
+            if Some(next) == stop || pos >= self.t_max {
+                break;
+            }
+            let out = self.decode.run(
+                &self.weights_lit,
+                vec![
+                    lit_i32(&[next as i32], &[1])?,
+                    lit_i32(&[pos as i32], &[1])?,
+                    k_cache,
+                    v_cache,
+                ],
+            )?;
+            let mut it = out.into_iter();
+            logits = it.next().context("decode: missing logits")?;
+            k_cache = it.next().context("decode: missing k")?;
+            v_cache = it.next().context("decode: missing v")?;
+            next = argmax_lit(&logits, cfg.vocab)?;
+            pos += 1;
+        }
+        Ok(generated)
+    }
+
+    /// Run the standalone L1 OMP kernel artifact on a batch of vectors.
+    /// `x` is [batch, m] flattened; returns (idx, val, nnz).
+    pub fn run_omp(&self, dict: &[f32], x: &[f32]) -> Result<(Vec<i32>, Vec<f32>, Vec<i32>)> {
+        let omp = self.omp.as_ref().context("omp artifact not exported")?;
+        let m = self.cfg.head_dim;
+        let n = self
+            .manifest
+            .graph_const("omp_M.hlo.txt", "n_atoms")
+            .context("omp n_atoms")?;
+        let batch = self
+            .manifest
+            .graph_const("omp_M.hlo.txt", "batch")
+            .context("omp batch")?;
+        if x.len() != batch * m {
+            bail!("omp batch mismatch: got {} want {}", x.len() / m, batch);
+        }
+        let out = omp.run_raw(vec![
+            lit_f32(dict, &[m as i64, n as i64])?,
+            lit_f32(x, &[batch as i64, m as i64])?,
+        ])?;
+        let mut it = out.into_iter();
+        let idx = it.next().context("omp: idx")?.to_vec::<i32>()?;
+        let val = it.next().context("omp: val")?.to_vec::<f32>()?;
+        let nnz = it.next().context("omp: nnz")?.to_vec::<i32>()?;
+        Ok((idx, val, nnz))
+    }
+}
+
+fn argmax_lit(logits: &xla::Literal, vocab: usize) -> Result<u32> {
+    let v = logits.to_vec::<f32>()?;
+    let row = &v[v.len() - vocab..]; // batch-1 last row
+    Ok(crate::tensor::argmax(row) as u32)
+}

@@ -1,0 +1,295 @@
+//! Iteration-level (continuous) batching with KV-budget admission control.
+//!
+//! The scheduling loop mirrors Orca/vLLM: each round first *admits* pending
+//! requests while the KV-memory budget allows (running their prefill), then
+//! advances every active session by exactly one decode step, retiring
+//! sessions that emit the stop token or exhaust their budget. Lexico's
+//! smaller per-token KV footprint directly raises the number of concurrent
+//! sessions the budget admits — the paper's memory-bound serving argument.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::{Job, Response};
+use crate::cache::factory::{build_cache, CacheContext};
+use crate::cache::KvCache;
+use crate::dict::DictionarySet;
+use crate::model::Engine;
+use crate::tasks;
+use crate::tensor::argmax;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// default cache method for requests that don't specify one
+    pub default_method: String,
+    /// total KV budget across sessions, bytes (FP16-equivalent accounting)
+    pub kv_budget_bytes: f64,
+    /// hard cap on concurrently decoding sessions
+    pub max_sessions: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            default_method: "lexico:s=8,nb=32".into(),
+            kv_budget_bytes: 64.0 * 1024.0 * 1024.0,
+            max_sessions: 32,
+        }
+    }
+}
+
+struct Session {
+    job: Job,
+    cache: Box<dyn KvCache>,
+    pos: usize,
+    next_token: u32,
+    generated: Vec<u32>,
+    t0: Instant,
+    ttft_ms: f64,
+}
+
+/// The scheduling loop. Runs until the job channel disconnects.
+pub fn run(
+    engine: Arc<Engine>,
+    dicts: Option<Arc<DictionarySet>>,
+    cfg: BatcherConfig,
+    jobs: Receiver<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let ctx = CacheContext { shape: engine.shape(), dicts };
+    let stop = tasks::newline_id();
+    let mut pending: VecDeque<Job> = VecDeque::new();
+    let mut active: Vec<Session> = Vec::new();
+    let max_seq = engine.weights.cfg.max_seq;
+
+    'outer: loop {
+        // ---- intake ---------------------------------------------------
+        loop {
+            match if active.is_empty() && pending.is_empty() {
+                jobs.recv().map_err(|_| RecvTimeoutError::Disconnected)
+            } else {
+                jobs.recv_timeout(Duration::from_millis(0))
+            } {
+                Ok(job) => {
+                    metrics.lock().unwrap().requests += 1;
+                    pending.push_back(job);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if active.is_empty() && pending.is_empty() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+
+        // ---- admission (prefill) --------------------------------------
+        let used: f64 = active.iter().map(|s| s.cache.mem_bytes()).sum();
+        let mut budget_left = cfg.kv_budget_bytes - used;
+        while let Some(job) = pending.front() {
+            if active.len() >= cfg.max_sessions {
+                break;
+            }
+            let prompt_ids: Vec<u32> = {
+                let mut v = vec![tasks::BOS];
+                v.extend(tasks::encode_lossy(&job.request.prompt));
+                v
+            };
+            if prompt_ids.len() + 2 > max_seq {
+                let job = pending.pop_front().unwrap();
+                metrics.lock().unwrap().rejected += 1;
+                let _ = job.reply.send(Response {
+                    id: job.request.id,
+                    text: String::new(),
+                    n_prompt: prompt_ids.len(),
+                    n_generated: 0,
+                    ttft_ms: 0.0,
+                    total_ms: 0.0,
+                    kv_ratio: 0.0,
+                    error: Some("prompt too long".into()),
+                });
+                continue;
+            }
+            // worst-case estimate: full-precision KV for prompt + generation
+            let est = engine.shape().n_layers as f64
+                * (prompt_ids.len() + job.request.max_new) as f64
+                * engine.shape().full_token_bytes();
+            if est > budget_left && !active.is_empty() {
+                break; // wait for a session to retire
+            }
+            let job = pending.pop_front().unwrap();
+            let method = if job.request.method.is_empty() {
+                cfg.default_method.clone()
+            } else {
+                job.request.method.clone()
+            };
+            let t0 = Instant::now();
+            match build_cache(&method, &ctx) {
+                Ok(mut cache) => {
+                    let logits = engine.prefill(&prompt_ids, &mut *cache);
+                    let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let next = argmax(&logits) as u32;
+                    budget_left -= cache.mem_bytes();
+                    active.push(Session {
+                        job,
+                        cache,
+                        pos: prompt_ids.len(),
+                        next_token: next,
+                        generated: Vec::new(),
+                        t0,
+                        ttft_ms,
+                    });
+                }
+                Err(e) => {
+                    metrics.lock().unwrap().rejected += 1;
+                    let _ = job.reply.send(Response {
+                        id: job.request.id,
+                        text: String::new(),
+                        n_prompt: prompt_ids.len(),
+                        n_generated: 0,
+                        ttft_ms: 0.0,
+                        total_ms: 0.0,
+                        kv_ratio: 0.0,
+                        error: Some(format!("bad method '{method}': {e}")),
+                    });
+                }
+            }
+        }
+
+        // ---- one decode step per active session (continuous batching) --
+        let mut retire = Vec::new();
+        for (si, sess) in active.iter_mut().enumerate() {
+            let step_t0 = Instant::now();
+            sess.generated.push(sess.next_token);
+            let done = sess.next_token == stop
+                || sess.generated.len() >= sess.job.request.max_new
+                || sess.pos + 1 >= max_seq;
+            if done {
+                retire.push(si);
+                continue;
+            }
+            let logits = engine.decode_step(sess.next_token, sess.pos, &mut *sess.cache);
+            sess.next_token = argmax(&logits) as u32;
+            sess.pos += 1;
+            metrics
+                .lock()
+                .unwrap()
+                .per_token_ms
+                .push(step_t0.elapsed().as_secs_f64() * 1e3);
+        }
+
+        // ---- retire ----------------------------------------------------
+        for &si in retire.iter().rev() {
+            let sess = active.swap_remove(si);
+            let mut m = metrics.lock().unwrap();
+            m.completed += 1;
+            m.tokens_generated += sess.generated.len() as u64;
+            m.ttft_ms.push(sess.ttft_ms);
+            m.kv_ratios.push(sess.cache.kv_ratio());
+            drop(m);
+            let _ = sess.job.reply.send(Response {
+                id: sess.job.request.id,
+                text: tasks::decode(&sess.generated),
+                n_prompt: sess.pos,
+                n_generated: sess.generated.len(),
+                ttft_ms: sess.ttft_ms,
+                total_ms: sess.t0.elapsed().as_secs_f64() * 1e3,
+                kv_ratio: sess.cache.kv_ratio(),
+                error: None,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_weights;
+    use std::sync::mpsc::channel;
+
+    fn spawn_batcher(cfg: BatcherConfig) -> (std::sync::mpsc::Sender<Job>, Arc<Mutex<Metrics>>) {
+        let engine = Arc::new(Engine::new(tiny_weights(13)));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, rx) = channel();
+        let m2 = metrics.clone();
+        std::thread::spawn(move || run(engine, None, cfg, rx, m2));
+        (tx, metrics)
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
+        let (tx, metrics) = spawn_batcher(cfg);
+        let mut replies = Vec::new();
+        for i in 0..4 {
+            let (rtx, rrx) = channel();
+            tx.send(Job {
+                request: crate::server::Request {
+                    id: i,
+                    prompt: "1+2=".into(),
+                    max_new: 5,
+                    method: String::new(),
+                },
+                reply: rtx,
+            })
+            .unwrap();
+            replies.push(rrx);
+        }
+        for (i, r) in replies.into_iter().enumerate() {
+            let resp = r.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert!(resp.n_generated >= 1);
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.completed, 4);
+        assert!(m.tokens_generated >= 4);
+    }
+
+    #[test]
+    fn rejects_too_long_prompt() {
+        let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
+        let (tx, _metrics) = spawn_batcher(cfg);
+        let (rtx, rrx) = channel();
+        tx.send(Job {
+            request: crate::server::Request {
+                id: 0,
+                prompt: "a".repeat(4000),
+                max_new: 4,
+                method: String::new(),
+            },
+            reply: rtx,
+        })
+        .unwrap();
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_some());
+    }
+
+    #[test]
+    fn per_request_method_override() {
+        let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
+        let (tx, _m) = spawn_batcher(cfg);
+        let (rtx, rrx) = channel();
+        tx.send(Job {
+            request: crate::server::Request {
+                id: 7,
+                prompt: "abc".into(),
+                max_new: 3,
+                method: "pertoken:bits=4,g=8".into(),
+            },
+            reply: rtx,
+        })
+        .unwrap();
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.kv_ratio < 1.0);
+    }
+}

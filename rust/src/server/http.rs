@@ -1,0 +1,182 @@
+//! Network front end: newline-delimited JSON over TCP.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": "...", "max_new": 16, "method": "lexico:s=8,nb=32"}
+//!   ← {"id": 1, "text": "...", "ttft_ms": ..., "total_ms": ...,
+//!      "kv_ratio": ..., "n_generated": ...}
+//! Special request {"cmd": "metrics"} returns the aggregate report;
+//! {"cmd": "shutdown"} stops the listener.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::{Job, Request, Response};
+use crate::util::json::{self, Json};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn response_json(r: &Response) -> String {
+    let mut fields = vec![
+        ("id", json::num(r.id as f64)),
+        ("text", json::s(&r.text)),
+        ("n_prompt", json::num(r.n_prompt as f64)),
+        ("n_generated", json::num(r.n_generated as f64)),
+        ("ttft_ms", json::num(r.ttft_ms)),
+        ("total_ms", json::num(r.total_ms)),
+        ("kv_ratio", json::num(r.kv_ratio)),
+    ];
+    if let Some(e) = &r.error {
+        fields.push(("error", json::s(e)));
+    }
+    json::obj(fields).to_string()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    jobs: Sender<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match Json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(writer, "{}", json::obj(vec![("error", json::s(&e))]).to_string())?;
+                continue;
+            }
+        };
+        match parsed.get("cmd").as_str() {
+            Some("metrics") => {
+                let report = metrics.lock().unwrap().report();
+                writeln!(writer, "{}", json::obj(vec![("metrics", json::s(&report))]).to_string())?;
+                continue;
+            }
+            Some("shutdown") => {
+                shutdown.store(true, Ordering::SeqCst);
+                writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
+                return Ok(());
+            }
+            _ => {}
+        }
+        let request = Request {
+            id: NEXT_ID.fetch_add(1, Ordering::SeqCst),
+            prompt: parsed.get("prompt").as_str().unwrap_or("").to_string(),
+            max_new: parsed.get("max_new").as_usize().unwrap_or(16),
+            method: parsed.get("method").as_str().unwrap_or("").to_string(),
+        };
+        let (rtx, rrx) = channel();
+        if jobs.send(Job { request, reply: rtx }).is_err() {
+            writeln!(
+                writer,
+                "{}",
+                json::obj(vec![("error", json::s("server shutting down"))]).to_string()
+            )?;
+            return Ok(());
+        }
+        match rrx.recv() {
+            Ok(resp) => writeln!(writer, "{}", response_json(&resp))?,
+            Err(_) => writeln!(
+                writer,
+                "{}",
+                json::obj(vec![("error", json::s("batcher dropped request"))]).to_string()
+            )?,
+        }
+    }
+    Ok(())
+}
+
+/// Serve until a `shutdown` command arrives. Returns the bound address
+/// through `on_bound` (useful for tests binding port 0).
+pub fn serve(
+    addr: &str,
+    jobs: Sender<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let jobs = jobs.clone();
+                let metrics = metrics.clone();
+                let sd = shutdown.clone();
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, jobs, metrics, sd);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_weights;
+    use crate::model::Engine;
+    use crate::server::batcher::{self, BatcherConfig};
+    use std::io::{BufRead, BufReader, Write};
+
+    #[test]
+    fn end_to_end_tcp_roundtrip() {
+        let engine = Arc::new(Engine::new(tiny_weights(17)));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (jtx, jrx) = channel();
+        let m2 = metrics.clone();
+        std::thread::spawn(move || {
+            batcher::run(
+                engine,
+                None,
+                BatcherConfig { default_method: "full".into(), ..Default::default() },
+                jrx,
+                m2,
+            )
+        });
+        let (atx, arx) = channel();
+        let m3 = metrics.clone();
+        std::thread::spawn(move || {
+            serve("127.0.0.1:0", jtx, m3, move |a| {
+                let _ = atx.send(a);
+            })
+        });
+        let addr = arx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"prompt": "2,1>", "max_new": 4}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        assert!(v.get("n_generated").as_usize().unwrap() >= 1);
+        // metrics + shutdown
+        writeln!(conn, r#"{{"cmd": "metrics"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("completed"));
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+}

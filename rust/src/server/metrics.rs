@@ -1,0 +1,80 @@
+//! Serving metrics: latency distributions and throughput counters.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_generated: u64,
+    pub ttft_ms: Vec<f64>,
+    pub per_token_ms: Vec<f64>,
+    pub kv_ratios: Vec<f64>,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { started: Some(Instant::now()), ..Default::default() }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        match self.started {
+            Some(t0) => self.tokens_generated as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    pub fn ttft(&self) -> Option<Summary> {
+        (!self.ttft_ms.is_empty()).then(|| summarize(&self.ttft_ms))
+    }
+
+    pub fn tpot(&self) -> Option<Summary> {
+        (!self.per_token_ms.is_empty()).then(|| summarize(&self.per_token_ms))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "requests={} completed={} rejected={} tokens={} throughput={:.1} tok/s",
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.tokens_generated,
+            self.throughput_tok_s()
+        );
+        if let Some(t) = self.ttft() {
+            s += &format!("\nTTFT   ms: p50 {:.2} p95 {:.2} mean {:.2}", t.p50, t.p95, t.mean);
+        }
+        if let Some(t) = self.tpot() {
+            s += &format!("\nTPOT   ms: p50 {:.2} p95 {:.2} mean {:.2}", t.p50, t.p95, t.mean);
+        }
+        if !self.kv_ratios.is_empty() {
+            let mean: f64 = self.kv_ratios.iter().sum::<f64>() / self.kv_ratios.len() as f64;
+            s += &format!("\nKV size : {:.1}% of full cache (mean)", 100.0 * mean);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = Metrics::new();
+        m.requests = 3;
+        m.completed = 2;
+        m.tokens_generated = 20;
+        m.ttft_ms.extend([1.0, 3.0]);
+        m.per_token_ms.extend([0.5, 0.7, 0.6]);
+        m.kv_ratios.push(0.25);
+        let r = m.report();
+        assert!(r.contains("completed=2"));
+        assert!(r.contains("TTFT"));
+        assert!(m.throughput_tok_s() > 0.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! The serving coordinator: request router, continuous batcher,
+//! prefill/decode scheduler with a KV-memory admission budget, metrics.
+//!
+//! Architecture (std-thread based — the image has no async runtime):
+//!
+//! ```text
+//!   TCP clients ──► http.rs (thread per conn, JSON-lines)
+//!        │ mpsc                                   ▲ per-request channel
+//!        ▼                                        │
+//!   batcher.rs  — iteration-level scheduling loop (Orca-style):
+//!     admit pending requests while the KV budget allows (prefill),
+//!     then run ONE decode step per active session per round
+//!     (continuous batching), retiring finished sessions.
+//! ```
+//!
+//! Every session owns its KV cache through the same [`KvCache`] backends
+//! the offline evals use, so serving with `--method lexico:…` exercises
+//! exactly the paper's system: compressed prefix + recency buffer + OMP
+//! compression riding along with decoding.
+
+pub mod batcher;
+pub mod http;
+pub mod metrics;
+
+use std::sync::mpsc::Sender;
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    /// cache-method spec; empty = server default
+    pub method: String,
+}
+
+/// The server's reply.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub kv_ratio: f64,
+    pub error: Option<String>,
+}
+
+/// A request plus its reply channel (what the batcher consumes).
+pub struct Job {
+    pub request: Request,
+    pub reply: Sender<Response>,
+}

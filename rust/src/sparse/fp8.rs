@@ -1,0 +1,210 @@
+//! FP8 (E4M3) and FP16 (IEEE binary16) conversion.
+//!
+//! Lexico stores CSR coefficients in FP8 E4M3 (paper §3.4): 1 sign, 4
+//! exponent (bias 7), 3 mantissa bits; no infinities, S.1111.111 = NaN,
+//! max finite = 448. The ablations (Tables 4/5/9/10) use FP16 values
+//! instead; both are implemented and selectable per cache.
+
+/// Sorted table of the 127 non-negative finite E4M3 values (codes 0..=0x7e).
+/// E4M3 decoding is monotone in the code, so code k is at table index k.
+fn e4m3_table() -> &'static [f32; 127] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[f32; 127]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0f32; 127];
+        for (code, slot) in t.iter_mut().enumerate() {
+            *slot = e4m3_to_f32(code as u8);
+        }
+        t
+    })
+}
+
+/// Encode f32 → E4M3 byte: nearest representable value, ties to the even
+/// code, saturating at ±448 (the E4M3 max-finite; S.1111.111 is NaN).
+pub fn f32_to_e4m3(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7f;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    let t = e4m3_table();
+    if a >= t[126] {
+        return sign | 0x7e;
+    }
+    // binary search for the first table value > a, then pick the nearest of
+    // the two neighbours.
+    let hi = t.partition_point(|&v| v <= a);
+    let code = if hi == 0 {
+        0
+    } else {
+        let lo = hi - 1;
+        let dl = a - t[lo];
+        let dh = t[hi] - a;
+        if dl < dh || (dl == dh && lo & 1 == 0) {
+            lo
+        } else {
+            hi
+        }
+    };
+    sign | code as u8
+}
+
+/// Decode E4M3 byte → f32.
+pub fn e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0xf) as i32;
+    let m = (b & 7) as f32;
+    if e == 15 && b & 7 == 7 {
+        return f32::NAN;
+    }
+    if e == 0 {
+        sign * m * 2f32.powi(-9) // subnormal
+    } else {
+        sign * (1.0 + m / 8.0) * 2f32.powi(e - 7)
+    }
+}
+
+/// Encode f32 → IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16(x: f32) -> u16 {
+    if x.is_nan() {
+        return 0x7e00;
+    }
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32 - 127 + 15;
+    let mant = bits & 0x7fffff;
+    if (bits & 0x7fffffff) == 0 {
+        return sign;
+    }
+    if exp >= 31 {
+        return sign | 0x7c00; // inf / overflow
+    }
+    if exp <= 0 {
+        // subnormal half
+        if exp < -10 {
+            return sign;
+        }
+        let m = mant | 0x800000;
+        let shift = (14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1 << shift) - 1);
+        let mut v = (m >> shift) as u16;
+        if rem > half || (rem == half && v & 1 == 1) {
+            v += 1;
+        }
+        return sign | v;
+    }
+    let rem = mant & 0x1fff;
+    let mut m10 = (mant >> 13) as u16;
+    if rem > 0x1000 || (rem == 0x1000 && m10 & 1 == 1) {
+        m10 += 1;
+        if m10 == 0x400 {
+            m10 = 0;
+            exp += 1;
+            if exp >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+    }
+    sign | ((exp as u16) << 10) | m10
+}
+
+/// Decode binary16 bits → f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((h >> 10) & 0x1f) as i32;
+    let m = (h & 0x3ff) as f32;
+    match e {
+        0 => sign * m * 2f32.powi(-24),
+        31 => {
+            if m == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        _ => sign * (1.0 + m / 1024.0) * 2f32.powi(e - 15),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn e4m3_exact_values() {
+        // Exactly representable values round-trip losslessly.
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 1.5, 2.0, 448.0, -448.0, 0.001953125] {
+            let d = e4m3_to_f32(f32_to_e4m3(v));
+            assert_eq!(d, v, "value {v} → {d}");
+        }
+    }
+
+    #[test]
+    fn e4m3_relative_error_bound() {
+        // For normal-range values, e4m3 relative error ≤ 2^-4 = 6.25%.
+        Prop::new(128).check("e4m3_rel_err", |rng, _| {
+            let v = rng.range_f32(-400.0, 400.0);
+            if v.abs() < 0.02 {
+                return Ok(());
+            }
+            let d = e4m3_to_f32(f32_to_e4m3(v));
+            let rel = (d - v).abs() / v.abs();
+            if rel <= 0.0625 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("{v} → {d}, rel {rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(e4m3_to_f32(f32_to_e4m3(1e9)), 448.0);
+        assert_eq!(e4m3_to_f32(f32_to_e4m3(-1e9)), -448.0);
+    }
+
+    #[test]
+    fn e4m3_monotone() {
+        // Encoding must be monotone in the value.
+        let mut prev = e4m3_to_f32(f32_to_e4m3(-500.0));
+        let mut x = -500.0f32;
+        while x < 500.0 {
+            let d = e4m3_to_f32(f32_to_e4m3(x));
+            assert!(d >= prev - 1e-6, "non-monotone at {x}: {prev} > {d}");
+            prev = d;
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_exact() {
+        for &v in &[0.0f32, 1.0, -2.5, 0.125, 65504.0, -65504.0] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v);
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bound() {
+        Prop::new(128).check("f16_rel_err", |rng, _| {
+            let v = rng.range_f32(-1000.0, 1000.0);
+            if v.abs() < 1e-3 {
+                return Ok(());
+            }
+            let d = f16_to_f32(f32_to_f16(v));
+            let rel = (d - v).abs() / v.abs();
+            if rel <= 1.0 / 2048.0 + 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("{v} → {d}, rel {rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn nan_handling() {
+        assert!(e4m3_to_f32(f32_to_e4m3(f32::NAN)).is_nan());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+}

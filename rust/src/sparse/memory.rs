@@ -1,0 +1,81 @@
+//! KV-cache memory accounting (paper §3.4 and §4 "KV size" columns).
+//!
+//! All methods are charged against the same baseline: the full cache in
+//! FP16, `2·m` bytes per vector, two vectors (K and V) per token per kv
+//! head per layer. "KV size %" = compressed bytes / baseline bytes at the
+//! end of generation, exactly as the paper reports it.
+
+/// Bytes of one full-precision (FP16) K or V vector.
+pub fn full_vector_bytes(head_dim: usize) -> usize {
+    2 * head_dim
+}
+
+/// Paper formula: CSR row of sparsity `s` with FP8 coefficients costs
+/// `3s+2` bytes (s values, 2s u16 indices, 2-byte offset); FP16 costs
+/// `4s+2`.
+pub fn csr_row_bytes(s: usize, fp16_coefs: bool) -> usize {
+    if fp16_coefs {
+        4 * s + 2
+    } else {
+        3 * s + 2
+    }
+}
+
+/// KV-size ratio of a pure-CSR cache (no buffer), as in §3.4:
+/// (3s+2) / (2m)  ≈ 1.17·s% at m=128.
+pub fn csr_ratio(s: usize, head_dim: usize, fp16_coefs: bool) -> f64 {
+    csr_row_bytes(s, fp16_coefs) as f64 / full_vector_bytes(head_dim) as f64
+}
+
+/// Group-quantization cost: `bits` per element plus an FP16 scale and FP16
+/// zero-point per group of `g` elements.
+pub fn quant_vector_bytes(head_dim: usize, bits: usize, group: usize) -> f64 {
+    let n_groups = (head_dim + group - 1) / group;
+    (head_dim * bits) as f64 / 8.0 + (n_groups * 4) as f64
+}
+
+/// Running KV-size accountant shared by every cache backend.
+#[derive(Clone, Debug, Default)]
+pub struct Accountant {
+    pub compressed_bytes: f64,
+    pub baseline_bytes: f64,
+}
+
+impl Accountant {
+    pub fn ratio(&self) -> f64 {
+        if self.baseline_bytes == 0.0 {
+            1.0
+        } else {
+            self.compressed_bytes / self.baseline_bytes
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_formula_at_m128() {
+        // Paper: ~1.17·s % at head_dim 128 (e.g. 37.5% for s=32).
+        let r = csr_ratio(32, 128, false);
+        assert!((r - 0.3828).abs() < 1e-3, "{r}"); // (3*32+2)/256
+        let r4 = csr_ratio(4, 128, false);
+        assert!((r4 - 14.0 / 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn our_m32_operating_points() {
+        assert!((csr_ratio(2, 32, false) - 0.125).abs() < 1e-9);
+        assert!((csr_ratio(4, 32, false) - 0.21875).abs() < 1e-9);
+        assert!((csr_ratio(8, 32, false) - 0.40625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quant_bytes() {
+        // 2-bit, group 32, m=128: 32 B codes + 4 groups * 4 B = 48 B → vs 256 B
+        let b = quant_vector_bytes(128, 2, 32);
+        assert_eq!(b, 48.0);
+        assert!((b / 256.0 - 0.1875).abs() < 1e-9);
+    }
+}

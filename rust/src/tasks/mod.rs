@@ -1,0 +1,391 @@
+//! Synthetic task suite + tokenizer — the Rust side of the data contract.
+//!
+//! Mirrors `python/compile/data.py` exactly (vocabulary, task formats);
+//! a cross-language test asserts `VOCAB_CHARS == artifacts/vocab.txt`.
+//! Evaluation uses different PRNG seeds than training, so eval data is
+//! held out by construction.
+
+use crate::util::rng::Rng;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+const SPECIALS: usize = 3;
+
+/// Must match `data.py::VOCAB_CHARS` byte for byte.
+pub const VOCAB_CHARS: &str = "\n abcdefghijklmnopqrstuvwxyz0123456789=+-*;:,.?#()<>[]";
+
+pub fn vocab_size() -> usize {
+    SPECIALS + VOCAB_CHARS.len()
+}
+
+/// Token id of a character (panics on out-of-vocabulary — a format bug).
+pub fn char_id(c: char) -> u32 {
+    (SPECIALS + VOCAB_CHARS.find(c).unwrap_or_else(|| panic!("OOV char {c:?}"))) as u32
+}
+
+pub fn newline_id() -> u32 {
+    char_id('\n')
+}
+
+pub fn encode(text: &str) -> Vec<u32> {
+    text.chars().map(char_id).collect()
+}
+
+/// Encode, silently dropping out-of-vocabulary characters (server inputs).
+pub fn encode_lossy(text: &str) -> Vec<u32> {
+    text.chars()
+        .filter_map(|c| VOCAB_CHARS.find(c).map(|i| (SPECIALS + i) as u32))
+        .collect()
+}
+
+pub fn decode(ids: &[u32]) -> String {
+    ids.iter()
+        .filter_map(|&i| VOCAB_CHARS.chars().nth((i as usize).checked_sub(SPECIALS)?))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Task instances and scoring
+// ---------------------------------------------------------------------------
+
+/// A generated task instance: prompt text and the expected continuation.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// How a task is scored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Exact match of the generated answer (GSM8K-style accuracy).
+    ExactMatch,
+    /// Normalized edit similarity (LCC/RepoBench-style).
+    EditSim,
+    /// Perplexity (reported as exp(mean NLL); lower better).
+    Perplexity,
+}
+
+/// Task family (see DESIGN.md §1 for the paper-task mapping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// GSM8K substitute: few-shot multi-step arithmetic chains.
+    Arith,
+    /// MMLU-Pro Engineering substitute: deeper chains.
+    ArithHard,
+    /// TREC/TriviaQA-style retrieval: key/value recall over long context.
+    Needle,
+    /// LCC/RepoBench-style: verbatim long-range copy.
+    Copy,
+    /// MMLU-Pro Law substitute: sorting.
+    Sort,
+    /// Summarization-proxy: LM perplexity on held-out prose.
+    Lm,
+}
+
+pub const ALL_TASKS: [Task; 6] =
+    [Task::Arith, Task::ArithHard, Task::Needle, Task::Copy, Task::Sort, Task::Lm];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Arith => "arith",
+            Task::ArithHard => "arith-hard",
+            Task::Needle => "needle",
+            Task::Copy => "copy",
+            Task::Sort => "sort",
+            Task::Lm => "lm",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn metric(&self) -> Metric {
+        match self {
+            Task::Copy => Metric::EditSim,
+            Task::Lm => Metric::Perplexity,
+            _ => Metric::ExactMatch,
+        }
+    }
+
+    /// Generate one instance. `scale` ∈ [0,1] stretches the context length
+    /// (long-context sweeps use scale=1).
+    pub fn gen(&self, rng: &mut Rng, scale: f64) -> Instance {
+        match self {
+            Task::Arith => {
+                let steps = 3 + rng.below(2);
+                gen_arith_prompt(rng, steps, 4)
+            }
+            Task::ArithHard => {
+                let steps = 5 + rng.below(3);
+                gen_arith_prompt(rng, steps, 4)
+            }
+            Task::Needle => {
+                // cap so instances fit inside the training window (256
+                // tokens) — the model never saw longer intact examples
+                let n = (8.0 + 12.0 * scale) as usize + rng.below(8);
+                gen_needle(rng, n)
+            }
+            Task::Copy => {
+                let n = (16.0 + 44.0 * scale) as usize + rng.below(8);
+                gen_copy(rng, n)
+            }
+            Task::Sort => {
+                let n = 5 + rng.below(4);
+                gen_sort(rng, n)
+            }
+            Task::Lm => Instance { prompt: gen_lm_text(rng, 220), answer: String::new() },
+        }
+    }
+}
+
+/// Score one generated answer against the expected one.
+pub fn score(metric: Metric, generated: &str, expected: &str) -> f64 {
+    match metric {
+        Metric::ExactMatch => (generated.trim_end_matches('\n') == expected) as u8 as f64,
+        Metric::EditSim => edit_similarity(generated.trim_end_matches('\n'), expected),
+        Metric::Perplexity => unreachable!("perplexity is computed from NLL, not text"),
+    }
+}
+
+/// 1 − levenshtein/len (the LongBench "edit similarity" metric).
+pub fn edit_similarity(a: &str, b: &str) -> f64 {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 && lb == 0 {
+        return 1.0;
+    }
+    let mut prev: Vec<usize> = (0..=lb).collect();
+    let mut cur = vec![0usize; lb + 1];
+    for i in 1..=la {
+        cur[0] = i;
+        for j in 1..=lb {
+            let sub = prev[j - 1] + (a[i - 1] != b[j - 1]) as usize;
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    1.0 - prev[lb] as f64 / la.max(lb) as f64
+}
+
+// ---------------------------------------------------------------------------
+// Generators (formats identical to data.py)
+// ---------------------------------------------------------------------------
+
+const VARS: &[u8] = b"abcdefghij";
+
+/// One arithmetic chain: (`a=3;b=a+4;...;x?`, answer). Values mod 100.
+pub fn gen_arith_example(rng: &mut Rng, n_steps: usize) -> Instance {
+    let mut vals = [0i64; 10];
+    let mut parts: Vec<String> = Vec::with_capacity(n_steps);
+    for i in 0..n_steps {
+        let var = VARS[i] as char;
+        let v = if i == 0 {
+            let v = 1 + rng.below(9) as i64;
+            parts.push(format!("{var}={v}"));
+            v
+        } else {
+            let src = rng.below(i);
+            let op = *rng.choice(b"+-*") as char;
+            let operand = 1 + rng.below(9) as i64;
+            let sv = vals[src];
+            let v = match op {
+                '+' => (sv + operand as i64).rem_euclid(100),
+                '-' => (sv - operand as i64).rem_euclid(100),
+                _ => (sv * operand as i64).rem_euclid(100),
+            };
+            parts.push(format!("{var}={}{op}{operand}", VARS[src] as char));
+            v
+        };
+        vals[i] = v;
+    }
+    let q = VARS[n_steps - 1] as char;
+    Instance {
+        prompt: format!("{};{q}?", parts.join(";")),
+        answer: vals[n_steps - 1].to_string(),
+    }
+}
+
+/// Few-shot arithmetic prompt: `n_shots` solved chains then a query.
+pub fn gen_arith_prompt(rng: &mut Rng, n_steps: usize, n_shots: usize) -> Instance {
+    let mut lines: Vec<String> = Vec::with_capacity(n_shots + 1);
+    for _ in 0..n_shots {
+        let ex = gen_arith_example(rng, n_steps);
+        lines.push(format!("{}{}", ex.prompt, ex.answer));
+    }
+    let q = gen_arith_example(rng, n_steps);
+    lines.push(q.prompt);
+    Instance { prompt: lines.join("\n"), answer: q.answer }
+}
+
+/// Needle: `k17=v42;...;k17?` → `v42`.
+pub fn gen_needle(rng: &mut Rng, n_pairs: usize) -> Instance {
+    let n_pairs = n_pairs.min(100);
+    let mut keys: Vec<usize> = (0..100).collect();
+    rng.shuffle(&mut keys);
+    let pairs: Vec<(usize, usize)> =
+        keys[..n_pairs].iter().map(|&k| (k, rng.below(100))).collect();
+    let ctx: Vec<String> = pairs.iter().map(|(k, v)| format!("k{k:02}=v{v:02}")).collect();
+    let (qk, qv) = pairs[rng.below(n_pairs)];
+    Instance {
+        prompt: format!("{};k{qk:02}?", ctx.join(";")),
+        answer: format!("v{qv:02}"),
+    }
+}
+
+/// Copy: `<letters>#` → the same letters.
+pub fn gen_copy(rng: &mut Rng, n_chars: usize) -> Instance {
+    let s: String = (0..n_chars)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect();
+    Instance { prompt: format!("{s}#"), answer: s }
+}
+
+/// Sort: `7,3,9,1>` → `1,3,7,9`.
+pub fn gen_sort(rng: &mut Rng, n_digits: usize) -> Instance {
+    let ds: Vec<usize> = (0..n_digits).map(|_| rng.below(10)).collect();
+    let mut sorted = ds.clone();
+    sorted.sort_unstable();
+    let fmt = |v: &[usize]| v.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+    Instance { prompt: format!("{}>", fmt(&ds)), answer: fmt(&sorted) }
+}
+
+// Markov prose (mirrors data.py's word lists and transition table).
+const WORDS: &str = "the a one this that red blue green small large old new dark cold \
+fox dog cat bird fish tree river stone house door city road cloud \
+runs jumps sleeps sings falls rises moves turns stands waits \
+over under near beside into from with without through around \
+quickly slowly quietly loudly gently always never often soon \
+and but then while because";
+
+fn word_kinds() -> Vec<Vec<&'static str>> {
+    let words: Vec<&str> = WORDS.split_whitespace().collect();
+    let bounds = [0usize, 14, 28, 38, 48, 58, words.len()];
+    (0..6).map(|k| words[bounds[k]..bounds[k + 1]].to_vec()).collect()
+}
+
+const NEXT: [[usize; 4]; 6] = [
+    [0, 1, 1, 1],
+    [2, 2, 2, 3],
+    [3, 3, 4, 5],
+    [0, 0, 1, 1],
+    [5, 0, 2, 3],
+    [0, 0, 1, 4],
+];
+
+/// Markov-chain prose of roughly `n_chars` characters.
+pub fn gen_lm_text(rng: &mut Rng, n_chars: usize) -> String {
+    let by_kind = word_kinds();
+    let mut out = String::new();
+    while out.len() < n_chars {
+        let mut kind = 0usize;
+        let sent_len = 5 + rng.below(9);
+        let mut words = Vec::with_capacity(sent_len);
+        for _ in 0..sent_len {
+            words.push(*rng.choice(&by_kind[kind]));
+            kind = *rng.choice(&NEXT[kind]);
+        }
+        out.push_str(&words.join(" "));
+        out.push_str(". ");
+    }
+    out.truncate(n_chars);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_encoding() {
+        let s = "a=3;b=a+4;b?7\nk01=v02";
+        assert_eq!(decode(&encode(s)), s);
+        assert_eq!(vocab_size(), 57);
+    }
+
+    #[test]
+    fn arith_answers_are_correct() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let ex = gen_arith_example(&mut rng, 4);
+            // re-evaluate the chain with a tiny interpreter
+            let mut vals: std::collections::HashMap<String, i64> = std::collections::HashMap::new();
+            let (chain, q) = ex.prompt.rsplit_once(';').unwrap();
+            for stmt in chain.split(';') {
+                let (var, expr) = stmt.split_once('=').unwrap();
+                let v: i64 = if let Some(pos) = expr.find(['+', '-', '*']) {
+                    let (src, rest) = expr.split_at(pos);
+                    let op = rest.chars().next().unwrap();
+                    let operand: i64 = rest[1..].parse().unwrap();
+                    let sv = vals[src];
+                    match op {
+                        '+' => (sv + operand as i64).rem_euclid(100),
+                        '-' => (sv - operand as i64).rem_euclid(100),
+                        _ => (sv * operand as i64).rem_euclid(100),
+                    }
+                } else {
+                    expr.parse().unwrap()
+                };
+                vals.insert(var.to_string(), v);
+            }
+            let qvar = q.trim_end_matches('?');
+            assert_eq!(vals[qvar].to_string(), ex.answer, "{}", ex.prompt);
+        }
+    }
+
+    #[test]
+    fn needle_answer_is_in_context() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let ex = gen_needle(&mut rng, 12);
+            let q = ex.prompt.rsplit(';').next().unwrap().trim_end_matches('?');
+            assert!(ex.prompt.contains(&format!("{q}={}", ex.answer)), "{}", ex.prompt);
+        }
+    }
+
+    #[test]
+    fn sort_is_sorted() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let ex = gen_sort(&mut rng, 6);
+            let mut ds: Vec<i32> =
+                ex.answer.split(',').map(|d| d.parse().unwrap()).collect();
+            let orig = ds.clone();
+            ds.sort_unstable();
+            assert_eq!(ds, orig);
+        }
+    }
+
+    #[test]
+    fn edit_similarity_properties() {
+        assert_eq!(edit_similarity("abc", "abc"), 1.0);
+        assert_eq!(edit_similarity("", ""), 1.0);
+        assert!((edit_similarity("abcd", "abce") - 0.75).abs() < 1e-9);
+        assert_eq!(edit_similarity("abc", ""), 0.0);
+    }
+
+    #[test]
+    fn all_tasks_generate_in_vocab() {
+        let mut rng = Rng::new(4);
+        for task in ALL_TASKS {
+            for _ in 0..5 {
+                let ex = task.gen(&mut rng, 1.0);
+                let _ = encode(&ex.prompt); // panics on OOV
+                let _ = encode(&ex.answer);
+                assert!(!ex.prompt.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn lm_text_statistics() {
+        let mut rng = Rng::new(5);
+        let text = gen_lm_text(&mut rng, 500);
+        assert!(text.len() == 500);
+        assert!(text.contains(". "));
+        let _ = encode(&text);
+    }
+}

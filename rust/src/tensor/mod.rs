@@ -1,0 +1,217 @@
+//! Minimal f32 tensor kernels for the native inference engine.
+//!
+//! Everything is row-major `&[f32]` + explicit dims; the handful of shapes
+//! the transformer needs (GEMM, GEMM with transposed RHS, row softmax,
+//! RMSNorm, SiLU) is implemented directly with cache-friendly loop orders.
+//! The perf pass (EXPERIMENTS.md §Perf) iterates on these kernels.
+
+/// C[M,N] += A[M,K] @ B[K,N]. `C` must be zeroed by the caller if `+=` is
+/// not wanted. i-k-j loop order: the inner loop streams B and C rows.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            axpy(crow, aik, brow);
+        }
+    }
+}
+
+/// C[M,N] = A[M,K] @ B[K,N].
+pub fn matmul(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    matmul_acc(c, a, b, m, k, n);
+}
+
+/// C[M,N] = A[M,K] @ B^T where B is [N,K] (dot-product form; good when both
+/// operands are row-major and N is small, e.g. attention scores).
+pub fn matmul_bt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// y += alpha * x (the GEMM inner kernel; unrolled by 8 for the autovectorizer).
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    // Unrolled main body — LLVM turns this into packed FMA.
+    for c in 0..chunks {
+        let i = c * 8;
+        let yc = &mut y[i..i + 8];
+        let xc = &x[i..i + 8];
+        for l in 0..8 {
+            yc[l] += alpha * xc[l];
+        }
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Dot product, 8-way unrolled with independent accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// In-place numerically-stable softmax over a row.
+pub fn softmax(row: &mut [f32]) {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// out = x * g / rms(x) (RMSNorm, eps matching the JAX model).
+pub fn rmsnorm(out: &mut [f32], x: &[f32], g: &[f32], eps: f32) {
+    let ms = dot(x, x) / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// Argmax over a slice (first max wins, like jnp.argmax).
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        Prop::new(32).check("matmul", |rng, size| {
+            let (m, k, n) = (1 + rng.below(size + 3), 1 + rng.below(size + 7), 1 + rng.below(size + 3));
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let mut c = vec![0.0; m * n];
+            matmul(&mut c, &a, &b, m, k, n);
+            crate::util::prop::assert_close(&c, &naive_matmul(&a, &b, m, k, n), 1e-4, "matmul")
+        });
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        Prop::new(32).check("matmul_bt", |rng, size| {
+            let (m, k, n) = (1 + rng.below(size + 2), 1 + rng.below(size + 8), 1 + rng.below(size + 5));
+            let a = rng.normal_vec(m * k);
+            let bt = rng.normal_vec(n * k); // B^T stored [N,K]
+            // build B [K,N]
+            let mut b = vec![0.0; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    b[kk * n + j] = bt[j * k + kk];
+                }
+            }
+            let mut c1 = vec![0.0; m * n];
+            matmul_bt(&mut c1, &a, &bt, m, k, n);
+            crate::util::prop::assert_close(&c1, &naive_matmul(&a, &b, m, k, n), 1e-4, "bt")
+        });
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut r = Rng::new(5);
+        for _ in 0..20 {
+            let mut row = r.normal_vec(17);
+            softmax(&mut row);
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut row = vec![-1e30, 0.0, -1e30];
+        softmax(&mut row);
+        assert!((row[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0, 4.0];
+        let g = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&mut out, &x, &g, 0.0);
+        // rms = sqrt(12.5); out = x / rms
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-5);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_first_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+}

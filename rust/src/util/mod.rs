@@ -1,0 +1,6 @@
+//! Cross-cutting utilities: PRNG, JSON, property testing, bench statistics.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

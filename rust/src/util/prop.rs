@@ -1,0 +1,102 @@
+//! In-repo property-testing harness (the offline image has no proptest).
+//!
+//! Semantics: run a property over `cases` randomly generated inputs; on the
+//! first failure, report the failing seed so the case replays exactly
+//! (generation is a pure function of the per-case [`Rng`]). A lightweight
+//! shrink pass retries the property with progressively smaller `size`
+//! parameters to present a small counterexample when the generator honours
+//! `size`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: 0xC0FFEE, max_size: 32 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Check `f(rng, size)`, where `f` returns `Err(msg)` on violation.
+    /// `size` ramps from 1 to `max_size` across the cases, so early cases
+    /// are small; on failure a shrink pass retries smaller sizes first.
+    pub fn check<F>(&self, name: &str, mut f: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let size = 1 + (case * self.max_size) / self.cases.max(1);
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = f(&mut rng, size) {
+                // shrink: same seed, smaller sizes
+                for small in 1..size {
+                    let mut r2 = Rng::new(case_seed);
+                    if let Err(msg2) = f(&mut r2, small) {
+                        panic!(
+                            "property '{name}' failed (seed={case_seed:#x}, size={small}, shrunk from {size}): {msg2}"
+                        );
+                    }
+                }
+                panic!("property '{name}' failed (seed={case_seed:#x}, size={size}): {msg}");
+            }
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol + 1e-5 * y.abs() {
+            return Err(format!("{what}: idx {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial() {
+        Prop::new(16).check("trivial", |rng, size| {
+            let v = rng.below(size.max(1) * 10);
+            if v < size * 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        Prop::new(16).check("fails", |_rng, size| {
+            if size < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,84 @@
+//! Timing/statistics helpers for the hand-rolled bench harness
+//! (no criterion in the offline image).
+
+use std::time::Instant;
+
+/// Summary statistics over a set of samples (nanoseconds or any unit).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let pct = |p: f64| v[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        p50: pct(0.5),
+        p95: pct(0.95),
+        max: v[n - 1],
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations; returns
+/// per-iteration wall time in milliseconds.
+pub fn bench_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(&samples)
+}
+
+/// Pretty one-line report used by the `benches/` binaries.
+pub fn report(name: &str, s: &Summary) {
+    println!(
+        "{name:<44} mean {m:>9.4} ms  p50 {p50:>9.4}  p95 {p95:>9.4}  (n={n})",
+        m = s.mean,
+        p50 = s.p50,
+        p95 = s.p95,
+        n = s.n
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench_ms(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+}

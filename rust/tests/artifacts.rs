@@ -1,0 +1,198 @@
+//! Artifact-dependent integration tests: these need `make artifacts` to
+//! have run (trained weights, dictionaries, HLO graphs). Each test skips
+//! gracefully when the artifacts are absent so `cargo test` stays green on
+//! a fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lexico::cache::full::FullCache;
+use lexico::dict::DictionarySet;
+use lexico::model::{Engine, Weights};
+use lexico::runtime::PjrtEngine;
+use lexico::tasks;
+
+fn artifacts() -> Option<PathBuf> {
+    // tests run from the crate root
+    let dir = lexico::artifacts_dir();
+    dir.join("model_M.bin").exists().then_some(dir)
+}
+
+/// Tokenizer contract: Rust VOCAB_CHARS == artifacts/vocab.txt (written by
+/// the Python side — the single source of truth check).
+#[test]
+fn cross_language_vocab_contract() {
+    let Some(dir) = artifacts() else { return };
+    let vocab = std::fs::read_to_string(dir.join("vocab.txt")).unwrap();
+    assert_eq!(vocab, tasks::VOCAB_CHARS, "vocab.txt diverged from tasks::VOCAB_CHARS");
+}
+
+/// The trained M model is a competent LM: held-out perplexity must be far
+/// below both uniform (=vocab) and unigram levels. (Task *accuracy* did not
+/// emerge at the 1-core training budget — see EXPERIMENTS.md §Setup — so
+/// quality comparisons use perplexity + full-cache agreement.)
+#[test]
+fn trained_model_is_a_competent_lm() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(Weights::load(dir.join("model_M.bin")).unwrap());
+    let r = lexico::eval::evaluate(
+        &engine, None, "full",
+        &lexico::eval::EvalConfig::new(tasks::Task::Lm, 3, 4242),
+    )
+    .unwrap();
+    assert!(r.score < 6.0, "held-out ppl {:.2} — model did not train", r.score);
+}
+
+/// Dictionaries load, have unit-norm atoms, and reconstruct real keys much
+/// better than random dictionaries (Table 1's headline claim).
+#[test]
+fn dictionaries_beat_random_on_real_keys() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(Weights::load(dir.join("model_M.bin")).unwrap());
+    let dicts = DictionarySet::load(dir.join("dict_M_N1024.bin")).unwrap();
+    let shape = engine.shape();
+    let layer = shape.n_layers / 2;
+    // collect keys from a held-out prompt
+    let mut rng = lexico::util::rng::Rng::new(777);
+    let text = tasks::gen_lm_text(&mut rng, 200);
+    let mut ids = vec![tasks::BOS];
+    ids.extend(tasks::encode(&text));
+    let mut cache = FullCache::new(shape);
+    let _ = engine.prefill(&ids, &mut cache);
+    let kvd = shape.kv_dim();
+    let m = shape.head_dim;
+    let ks = cache.keys(layer);
+    let t = ks.len() / kvd;
+    let dict = &dicts.keys[layer];
+    let rand = lexico::dict::Dictionary::random(m, dict.n, 5);
+    let (mut e_d, mut e_r) = (0.0f64, 0.0f64);
+    for ti in 0..t {
+        let x = &ks[ti * kvd..ti * kvd + m];
+        let cd = lexico::omp::omp_encode_alloc(&dict.atoms, dict.n, m, x, 8, 0.0);
+        let cr = lexico::omp::omp_encode_alloc(&rand.atoms, rand.n, m, x, 8, 0.0);
+        e_d += lexico::omp::rel_error(&dict.atoms, m, x, &cd) as f64;
+        e_r += lexico::omp::rel_error(&rand.atoms, m, x, &cr) as f64;
+    }
+    // The full Table-1 protocol (K and V, 4 corpora, n=600) shows ~0.75x;
+    // this spot check uses one layer's keys on one prompt, where the gap
+    // is narrower — require strictly better with a small margin.
+    assert!(
+        e_d < 0.97 * e_r,
+        "trained dict ({:.3}) not better than random ({:.3})",
+        e_d / t as f64,
+        e_r / t as f64
+    );
+}
+
+/// Lexico at s=8 (≈40–50% KV incl. buffer) must decode with high fidelity
+/// to the full cache, and fidelity must degrade monotonically-ish with s.
+#[test]
+fn lexico_preserves_fidelity_at_high_sparsity() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::new(Weights::load(dir.join("model_M.bin")).unwrap());
+    let dicts = Arc::new(DictionarySet::load(dir.join("dict_M_N1024.bin")).unwrap());
+    let lex8 = lexico::eval::evaluate(
+        &engine, Some(dicts.clone()), "lexico:s=8,nb=32",
+        &lexico::eval::EvalConfig::new(tasks::Task::Needle, 12, 31),
+    )
+    .unwrap();
+    assert!(lex8.kv_ratio < 0.65, "kv {}", lex8.kv_ratio);
+    assert!(
+        lex8.agree >= 60.0,
+        "lexico s=8 full-cache agreement only {:.1}%",
+        lex8.agree
+    );
+    let lex1 = lexico::eval::evaluate(
+        &engine, Some(dicts), "lexico:s=1,nb=4",
+        &lexico::eval::EvalConfig::new(tasks::Task::Needle, 12, 31),
+    )
+    .unwrap();
+    assert!(
+        lex1.agree <= lex8.agree + 10.0,
+        "s=1 ({:.1}%) should not beat s=8 ({:.1}%)",
+        lex1.agree,
+        lex8.agree
+    );
+}
+
+/// PJRT path: the AOT prefill+decode graphs must produce exactly the same
+/// greedy generation as the native engine (the three-layer composition
+/// proof).
+#[test]
+fn pjrt_matches_native_generation() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("model.hlo.txt").exists() {
+        return;
+    }
+    let pjrt = PjrtEngine::load(&dir, &dir.join("model_M.bin")).unwrap();
+    let native = Engine::new(Weights::load(dir.join("model_M.bin")).unwrap());
+    let mut rng = lexico::util::rng::Rng::new(99);
+    for _ in 0..3 {
+        let inst = tasks::gen_needle(&mut rng, 10);
+        let mut prompt = vec![tasks::BOS];
+        prompt.extend(tasks::encode(&inst.prompt));
+        // numeric equivalence of the prefill logits (argmax chains can flip
+        // on near-tie logits, so token-sequence equality is too strict)
+        let (pl, nl) = (
+            pjrt.prefill_logits(&prompt).unwrap(),
+            {
+                let mut cache = FullCache::new(native.shape());
+                native.prefill(&prompt, &mut cache)
+            },
+        );
+        let maxd = pl
+            .iter()
+            .zip(&nl)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(maxd < 1e-3, "prefill logits diverge: max |Δ| = {maxd}");
+        // and the greedy first token agrees
+        let a = pjrt.generate(&prompt, 1, None).unwrap();
+        let mut cache = FullCache::new(native.shape());
+        let b = native.generate(&prompt, 1, None, &mut cache);
+        assert_eq!(a, b, "first decoded token differs on {:?}", inst.prompt);
+    }
+}
+
+/// The standalone L1 OMP kernel artifact agrees with the native Rust OMP.
+#[test]
+fn pjrt_omp_kernel_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("omp_M.hlo.txt").exists() {
+        return;
+    }
+    let pjrt = PjrtEngine::load(&dir, &dir.join("model_M.bin")).unwrap();
+    let dicts = DictionarySet::load(dir.join("dict_M_N1024.bin")).unwrap();
+    let d = &dicts.keys[0];
+    let batch = 64;
+    let m = d.m;
+    let mut rng = lexico::util::rng::Rng::new(3);
+    let x: Vec<f32> = rng.normal_vec(batch * m);
+    // column-major [m, N] layout for the artifact input
+    let mut dmn = vec![0.0f32; m * d.n];
+    for a in 0..d.n {
+        for i in 0..m {
+            dmn[i * d.n + a] = d.atoms[a * m + i];
+        }
+    }
+    let (idx, val, nnz) = pjrt.run_omp(&dmn, &x).unwrap();
+    let s = 8;
+    for b in 0..batch {
+        let native = lexico::omp::omp_encode_alloc(&d.atoms, d.n, m, &x[b * m..(b + 1) * m], s, 0.0);
+        assert_eq!(nnz[b] as usize, native.nnz(), "row {b} nnz");
+        // same support (order-sensitive: both are greedy OMP)
+        let kernel_idx: Vec<u16> = idx[b * s..b * s + native.nnz()]
+            .iter()
+            .map(|&i| i as u16)
+            .collect();
+        assert_eq!(kernel_idx, native.idx, "row {b} support");
+        for j in 0..native.nnz() {
+            let kv = val[b * s + j];
+            assert!(
+                (kv - native.val[j]).abs() < 1e-3 + 1e-2 * native.val[j].abs(),
+                "row {b} coef {j}: {kv} vs {}",
+                native.val[j]
+            );
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Integration tests across modules: engine × every cache backend,
+//! compression-vs-accuracy invariants, serving end-to-end, eval harness
+//! determinism. These run on a synthetic tiny model (no artifacts needed);
+//! artifact-dependent tests live in `tests/artifacts.rs`.
+
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::full::FullCache;
+use lexico::cache::CacheShape;
+use lexico::dict::{Dictionary, DictionarySet};
+use lexico::model::testutil::tiny_weights;
+use lexico::model::Engine;
+use lexico::tasks::Task;
+use lexico::util::rng::Rng;
+
+fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+    Arc::new(DictionarySet {
+        keys: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 1000 + i as u64))
+            .collect(),
+        values: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 2000 + i as u64))
+            .collect(),
+    })
+}
+
+// NB: the tiny test model has head_dim m=8, so compression demands s ≤ 2
+// ((3s+2)/(2m) < 1 needs s < 4.7; meaningful compression needs less).
+const ALL_SPECS: &[&str] = &[
+    "full",
+    "lexico:s=2,nb=8",
+    "lexico:s=2,nb=8,fp16",
+    "lexico:s=2,nb=0",
+    "lexico:s=2,nb=8,delta=0.4",
+    "lexico:s=1,nb=4,adaptive=16:0.35",
+    "kivi:bits=2,g=8,nb=8",
+    "kivi:bits=4,g=8,nb=8",
+    "pertoken:bits=4,g=8,nb=2",
+    "pertoken:bits=8,g=8,nb=0",
+    "zipcache:hi=4,lo=2,g=8,frac=0.25,nb=8",
+    "snapkv:cap=24,win=4",
+    "pyramidkv:cap=24,win=4",
+];
+
+/// Every backend must run generation end-to-end without panicking and
+/// report a sane KV ratio.
+#[test]
+fn every_backend_generates() {
+    let engine = Engine::new(tiny_weights(40));
+    let dicts = tiny_dicts(engine.shape(), 64);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let mut rng = Rng::new(0);
+    let prompt: Vec<u32> = (0..40).map(|_| 3 + rng.below(50) as u32).collect();
+    for spec in ALL_SPECS {
+        let mut cache = build_cache(spec, &ctx).unwrap();
+        let out = engine.generate(&prompt, 6, None, &mut *cache);
+        assert_eq!(out.len(), 6, "{spec}");
+        let ratio = cache.kv_ratio();
+        assert!(ratio > 0.0 && ratio <= 1.3, "{spec}: ratio {ratio}");
+        assert_eq!(cache.tokens(), 40 + 5, "{spec}");
+    }
+}
+
+/// Compression backends must actually compress on a long context.
+#[test]
+fn compressing_backends_report_compression() {
+    let engine = Engine::new(tiny_weights(41));
+    let dicts = tiny_dicts(engine.shape(), 64);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let mut rng = Rng::new(1);
+    let prompt: Vec<u32> = (0..100).map(|_| 3 + rng.below(50) as u32).collect();
+    for spec in &ALL_SPECS[1..] {
+        if spec.starts_with("pertoken:bits=8") {
+            continue; // int8 is allowed to be "large"
+        }
+        let mut cache = build_cache(spec, &ctx).unwrap();
+        let _ = engine.generate(&prompt, 4, None, &mut *cache);
+        assert!(
+            cache.kv_ratio() < 0.95,
+            "{spec}: ratio {} not compressed",
+            cache.kv_ratio()
+        );
+    }
+}
+
+/// With an orthonormal dictionary and s = head_dim, Lexico reconstruction
+/// is exact (up to fp16 coefs) → generated tokens must match the full cache.
+#[test]
+fn lexico_exact_dictionary_matches_full_cache_generation() {
+    let engine = Engine::new(tiny_weights(42));
+    let shape = engine.shape();
+    let m = shape.head_dim;
+    // orthonormal basis dictionary
+    let mut atoms = vec![0.0; m * m];
+    for i in 0..m {
+        atoms[i * m + i] = 1.0;
+    }
+    let d = Dictionary::new(m, m, atoms);
+    let dicts = Arc::new(DictionarySet {
+        keys: vec![d.clone(); shape.n_layers],
+        values: vec![d; shape.n_layers],
+    });
+    let ctx = CacheContext { shape, dicts: Some(dicts) };
+    let mut rng = Rng::new(2);
+    let prompt: Vec<u32> = (0..30).map(|_| 3 + rng.below(50) as u32).collect();
+    let mut lex = build_cache(&format!("lexico:s={m},nb=4,fp16"), &ctx).unwrap();
+    let mut full = FullCache::new(shape);
+    let a = engine.generate(&prompt, 8, None, &mut *lex);
+    let b = engine.generate(&prompt, 8, None, &mut full);
+    assert_eq!(a, b, "exact-reconstruction Lexico must match full cache");
+}
+
+/// Lower sparsity ⇒ smaller cache (memory monotonicity in s).
+#[test]
+fn lexico_memory_monotone_in_sparsity() {
+    let engine = Engine::new(tiny_weights(43));
+    let dicts = tiny_dicts(engine.shape(), 64);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let mut rng = Rng::new(3);
+    let prompt: Vec<u32> = (0..80).map(|_| 3 + rng.below(50) as u32).collect();
+    let mut prev = 0.0;
+    for s in [1usize, 2, 4, 8] {
+        let mut cache = build_cache(&format!("lexico:s={s},nb=4"), &ctx).unwrap();
+        let _ = engine.generate(&prompt, 4, None, &mut *cache);
+        let r = cache.kv_ratio();
+        assert!(r > prev, "s={s}: {r} !> {prev}");
+        prev = r;
+    }
+}
+
+/// The eval harness is deterministic for a fixed seed.
+#[test]
+fn eval_harness_deterministic() {
+    let engine = Engine::new(tiny_weights(44));
+    let r1 = lexico::eval::evaluate(
+        &engine, None, "pertoken:bits=8,g=8",
+        &lexico::eval::EvalConfig::new(Task::Sort, 4, 99),
+    )
+    .unwrap();
+    let r2 = lexico::eval::evaluate(
+        &engine, None, "pertoken:bits=8,g=8",
+        &lexico::eval::EvalConfig::new(Task::Sort, 4, 99),
+    )
+    .unwrap();
+    assert_eq!(r1.score, r2.score);
+    assert_eq!(r1.kv_ratio, r2.kv_ratio);
+}
+
+/// int8 per-token quantization is near-lossless: its generations should
+/// match the full cache almost always on a random tiny model.
+#[test]
+fn int8_nearly_lossless_generation() {
+    let engine = Engine::new(tiny_weights(45));
+    let ctx = CacheContext { shape: engine.shape(), dicts: None };
+    let mut rng = Rng::new(4);
+    let mut agree = 0;
+    let total = 10;
+    for _ in 0..total {
+        let prompt: Vec<u32> = (0..30).map(|_| 3 + rng.below(50) as u32).collect();
+        let mut q = build_cache("pertoken:bits=8,g=8,nb=0", &ctx).unwrap();
+        let mut f = FullCache::new(engine.shape());
+        let a = engine.generate(&prompt, 6, None, &mut *q);
+        let b = engine.generate(&prompt, 6, None, &mut f);
+        agree += (a == b) as usize;
+    }
+    assert!(agree >= total - 1, "int8 agreed only {agree}/{total}");
+}
+
+/// Eviction methods keep memory bounded as the prompt grows; Lexico keeps
+/// (amortized) per-token cost constant. Both invariants checked here.
+#[test]
+fn memory_scaling_invariants() {
+    let engine = Engine::new(tiny_weights(46));
+    let dicts = tiny_dicts(engine.shape(), 64);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let mut rng = Rng::new(5);
+    let prompt_a: Vec<u32> = (0..40).map(|_| 3 + rng.below(50) as u32).collect();
+    let prompt_b: Vec<u32> = (0..100).map(|_| 3 + rng.below(50) as u32).collect();
+    // snapkv: absolute bytes bounded by capacity regardless of prompt len
+    let (mut ca, mut cb) = (
+        build_cache("snapkv:cap=16,win=4", &ctx).unwrap(),
+        build_cache("snapkv:cap=16,win=4", &ctx).unwrap(),
+    );
+    let _ = engine.generate(&prompt_a, 2, None, &mut *ca);
+    let _ = engine.generate(&prompt_b, 2, None, &mut *cb);
+    assert!((ca.mem_bytes() - cb.mem_bytes()).abs() < 1.0);
+    // lexico: ratio roughly constant in prompt length
+    let (mut la, mut lb) = (
+        build_cache("lexico:s=4,nb=8", &ctx).unwrap(),
+        build_cache("lexico:s=4,nb=8", &ctx).unwrap(),
+    );
+    let _ = engine.generate(&prompt_a, 2, None, &mut *la);
+    let _ = engine.generate(&prompt_b, 2, None, &mut *lb);
+    assert!(lb.kv_ratio() < la.kv_ratio() + 0.05);
+}
+
+/// Serving end-to-end with the Lexico backend under concurrent load.
+#[test]
+fn serve_with_lexico_backend() {
+    use lexico::server::batcher::{run, BatcherConfig};
+    use lexico::server::metrics::Metrics;
+    use lexico::server::{Job, Request};
+    use std::sync::mpsc::channel;
+    use std::sync::Mutex;
+
+    let engine = Arc::new(Engine::new(tiny_weights(47)));
+    let dicts = tiny_dicts(engine.shape(), 64);
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let (tx, rx) = channel();
+    let m2 = metrics.clone();
+    let cfg = BatcherConfig {
+        default_method: "lexico:s=4,nb=8".into(),
+        kv_budget_bytes: 8.0 * 1024.0 * 1024.0,
+        max_sessions: 8,
+    };
+    let handle = std::thread::spawn(move || run(engine, Some(dicts), cfg, rx, m2));
+    let mut replies = Vec::new();
+    for i in 0..6 {
+        let (rtx, rrx) = channel();
+        tx.send(Job {
+            request: Request {
+                id: i,
+                prompt: format!("k0{i}=v42;k0{i}?"),
+                max_new: 6,
+                method: String::new(),
+            },
+            reply: rtx,
+        })
+        .unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    for r in replies {
+        let resp = r.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.kv_ratio > 0.0 && resp.kv_ratio <= 1.0);
+    }
+    handle.join().unwrap().unwrap();
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.completed, 6);
+    assert!(m.kv_ratios.iter().all(|&r| r < 1.0), "lexico should compress");
+}
