@@ -1,12 +1,16 @@
 //! Engine comparison bench: native decode vs PJRT decode (dense cache),
 //! plus native decode across every cache backend at a long context — the
-//! end-to-end per-token cost of each compression method.
+//! end-to-end per-token cost of each compression method — and the
+//! batched-throughput sweep: B concurrent sessions advanced per round by
+//! `Engine::decode_batch` (the batch-first serving pipeline), reporting
+//! per-token latency and aggregate tokens/s at B ∈ {1, 4, 16}.
 //!
 //!   cargo bench --bench decode_engines
 
 use std::sync::Arc;
 
 use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::KvCache;
 use lexico::dict::DictionarySet;
 use lexico::model::{Engine, Weights};
 use lexico::tasks;
@@ -47,6 +51,42 @@ fn main() -> anyhow::Result<()> {
             pos += 1;
         });
         report(spec, &st);
+    }
+
+    // Batched decode throughput: B sessions, each with its own cache on the
+    // same prompt, advanced one token per round via decode_batch. Weight
+    // matrices stream once per layer per ROUND, so per-token cost should
+    // fall markedly with B (acceptance target: ≥2× tokens/s at B=16 vs B=1
+    // for lexico:s=8,nb=32).
+    println!("\nbatched decode (B concurrent sessions) at context {}:\n", prompt.len());
+    for spec in ["full", "lexico:s=8,nb=32", "kivi:bits=2,g=16,nb=16"] {
+        let mut base = f64::NAN;
+        for bsz in [1usize, 4, 16] {
+            let mut caches: Vec<Box<dyn KvCache>> = Vec::with_capacity(bsz);
+            for _ in 0..bsz {
+                let mut c = build_cache(spec, &ctx)?;
+                let _ = engine.prefill(&prompt, &mut *c);
+                caches.push(c);
+            }
+            let toks: Vec<u32> = vec![7; bsz];
+            let mut pos = prompt.len();
+            let st = bench_ms(3, 25, || {
+                let poss: Vec<usize> = vec![pos; bsz];
+                let mut refs: Vec<&mut dyn KvCache> =
+                    caches.iter_mut().map(|c| &mut **c).collect();
+                let _ = engine.decode_batch(&toks, &poss, &mut refs);
+                pos += 1;
+            });
+            let per_tok = st.mean / bsz as f64;
+            if bsz == 1 {
+                base = per_tok;
+            }
+            println!(
+                "{spec:<28} B={bsz:<3} {per_tok:>9.4} ms/token  {:>8.1} tok/s  speedup ×{:.2}",
+                1e3 / per_tok,
+                base / per_tok
+            );
+        }
     }
 
     // PJRT path (dense cache graph) for the cross-engine comparison

@@ -1,6 +1,6 @@
 //! Full-precision (FP16-accounted) KV cache — the paper's "Full Cache" row.
 
-use super::{dense_attend, CacheShape, KvCache};
+use super::{dense_attend, dense_attend_batch, CacheShape, KvCache};
 
 pub struct FullCache {
     shape: CacheShape,
@@ -59,6 +59,21 @@ impl KvCache for FullCache {
         self.scores = scores;
     }
 
+    fn append_batch(&mut self, layer: usize, ks: &[f32], vs: &[f32], b: usize) {
+        self.ks[layer].extend_from_slice(ks);
+        self.vs[layer].extend_from_slice(vs);
+        if layer == 0 {
+            self.tokens += b;
+        }
+    }
+
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32], b: usize) {
+        let t = self.ks[layer].len() / self.shape.kv_dim();
+        let mut scores = std::mem::take(&mut self.scores);
+        dense_attend_batch(&self.shape, &self.ks[layer], &self.vs[layer], t, qs, out, b, &mut scores);
+        self.scores = scores;
+    }
+
     fn tokens(&self) -> usize {
         self.tokens
     }
@@ -101,6 +116,35 @@ mod tests {
         assert!((c.kv_ratio() - 1.0).abs() < 1e-12);
         // 2 layers * 5 tokens * (2 vectors * 16 dims * 2 bytes)
         assert_eq!(c.full_bytes(), (2 * 5 * 2 * 16 * 2) as f64);
+    }
+
+    #[test]
+    fn batch_entry_points_match_sequential_exactly() {
+        let shape = shape2();
+        let (kvd, qd) = (shape.kv_dim(), shape.q_dim());
+        let mut seq = FullCache::new(shape);
+        let mut bat = FullCache::new(shape);
+        let mut rng = Rng::new(9);
+        let n = 5;
+        let ks = rng.normal_vec(n * kvd);
+        let vs = rng.normal_vec(n * kvd);
+        for l in 0..shape.n_layers {
+            for i in 0..n {
+                seq.append(l, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+            }
+            bat.append_batch(l, &ks, &vs, n);
+        }
+        assert_eq!(seq.tokens(), bat.tokens());
+        assert_eq!(seq.mem_bytes(), bat.mem_bytes());
+        let b = 3;
+        let qs = rng.normal_vec(b * qd);
+        let mut o_seq = vec![0.0; b * qd];
+        let mut o_bat = vec![0.0; b * qd];
+        for i in 0..b {
+            seq.attend(0, &qs[i * qd..(i + 1) * qd], &mut o_seq[i * qd..(i + 1) * qd]);
+        }
+        bat.attend_batch(0, &qs, &mut o_bat, b);
+        assert_eq!(o_seq, o_bat, "batched attention must be bitwise identical");
     }
 
     #[test]

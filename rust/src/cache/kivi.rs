@@ -8,7 +8,7 @@
 //! groups of `g` so the per-channel grouping stays aligned — both exactly
 //! as in the reference implementation.
 
-use super::{dense_attend, CacheShape, KvCache};
+use super::{dense_attend, dense_attend_batch, CacheShape, KvCache};
 use crate::quant::{dequantize_group, dequantize_vector, quantize_group, quantize_vector, QuantGroup};
 
 #[derive(Clone, Debug)]
@@ -185,6 +185,32 @@ impl KvCache for KiviCache {
         self.dv = dv;
     }
 
+    fn append_batch(&mut self, layer: usize, ks: &[f32], vs: &[f32], b: usize) {
+        // one bulk extend + one spill: the spill loop moves tokens out
+        // oldest-first until the residual fits, which is exactly the state
+        // `b` sequential append/spill pairs leave behind.
+        let st = &mut self.layers[layer];
+        st.k_buf.extend_from_slice(ks);
+        st.v_buf.extend_from_slice(vs);
+        st.buf_len += b;
+        self.spill(layer);
+        if layer == 0 {
+            self.tokens += b;
+        }
+    }
+
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32], b: usize) {
+        // the win: one dequantization pass serves every query
+        let t = self.materialize(layer);
+        let mut scores = std::mem::take(&mut self.scores);
+        let dk = std::mem::take(&mut self.dk);
+        let dv = std::mem::take(&mut self.dv);
+        dense_attend_batch(&self.shape, &dk, &dv, t, qs, out, b, &mut scores);
+        self.scores = scores;
+        self.dk = dk;
+        self.dv = dv;
+    }
+
     fn tokens(&self) -> usize {
         self.tokens
     }
@@ -241,6 +267,36 @@ mod tests {
         assert_eq!(st.pending_len, 1);
         assert_eq!(st.qv.len(), 9);
         assert_eq!(st.buf_len, 2);
+    }
+
+    #[test]
+    fn batch_entry_points_match_sequential_exactly() {
+        let cfg = KiviConfig { bits: 2, group: 4, n_buffer: 3 };
+        let mut seq = KiviCache::new(shape(), cfg.clone());
+        let mut bat = KiviCache::new(shape(), cfg);
+        let mut rng = Rng::new(21);
+        let (kvd, qd) = (16, 32);
+        let n = 13; // crosses several spill + key-block boundaries
+        let ks = rng.normal_vec(n * kvd);
+        let vs = rng.normal_vec(n * kvd);
+        for i in 0..n {
+            seq.append(0, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+        }
+        bat.append_batch(0, &ks, &vs, n);
+        assert_eq!(seq.tokens(), bat.tokens());
+        assert_eq!(seq.layers[0].key_blocks.len(), bat.layers[0].key_blocks.len());
+        assert_eq!(seq.layers[0].pending_len, bat.layers[0].pending_len);
+        assert_eq!(seq.layers[0].buf_len, bat.layers[0].buf_len);
+        assert_eq!(seq.mem_bytes(), bat.mem_bytes());
+        let b = 3;
+        let qs = rng.normal_vec(b * qd);
+        let mut o_seq = vec![0.0; b * qd];
+        let mut o_bat = vec![0.0; b * qd];
+        for i in 0..b {
+            seq.attend(0, &qs[i * qd..(i + 1) * qd], &mut o_seq[i * qd..(i + 1) * qd]);
+        }
+        bat.attend_batch(0, &qs, &mut o_bat, b);
+        assert_eq!(o_seq, o_bat, "one-dequantization attend must match");
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use super::{CacheShape, KvCache};
 use crate::dict::adaptive::AdaptiveDict;
 use crate::dict::DictionarySet;
-use crate::omp::{omp_encode, OmpWorkspace};
+use crate::omp::{omp_encode, omp_encode_batch, BatchOmpWorkspace, OmpWorkspace};
 use crate::sparse::{CoefPrecision, CsrRow};
 use crate::tensor::{axpy, dot, softmax};
 use std::sync::Arc;
@@ -74,10 +74,17 @@ pub struct LexicoCache {
     heads: Vec<HeadState>,
     tokens: usize,
     ws: OmpWorkspace,
+    /// batched-OMP workspace (overflow compression of all heads at once)
+    bws: BatchOmpWorkspace,
+    // overflow-gather scratch: [total][m] K and V rows pending compression
+    gather_k: Vec<f32>,
+    gather_v: Vec<f32>,
     // attend scratch
     scores: Vec<f32>,
     qd: Vec<f32>,
     z: Vec<f32>,
+    /// attend_batch: per-(query, head) offsets into the flat score buffer
+    score_off: Vec<usize>,
 }
 
 impl LexicoCache {
@@ -110,15 +117,19 @@ impl LexicoCache {
         LexicoCache {
             shape,
             ws: OmpWorkspace::new(n_cap, m, cfg.sparsity.max(1)),
+            bws: BatchOmpWorkspace::new(),
             cfg,
             dicts,
             adaptive_k,
             adaptive_v,
             heads,
             tokens: 0,
+            gather_k: Vec::new(),
+            gather_v: Vec::new(),
             scores: Vec::new(),
             qd: vec![0.0; n_cap],
             z: vec![0.0; n_cap],
+            score_off: Vec::new(),
         }
     }
 
@@ -150,25 +161,73 @@ impl LexicoCache {
     }
 
     /// Compress the oldest `n` buffer tokens of every kv head in `layer`.
+    ///
+    /// Non-adaptive dictionaries take the batch-first path: the pending
+    /// K rows of *all* kv heads are gathered into one `[total, m]` matrix
+    /// and sparse-coded by [`omp_encode_batch`] (one GEMM correlation step
+    /// per pursuit iteration, one dictionary stream for the whole layer),
+    /// then the same for V. Per-vector results are bit-identical to the
+    /// sequential encoder, so cache contents don't depend on the path.
     fn compress_oldest(&mut self, layer: usize, n: usize) {
         let m = self.shape.head_dim;
-        for g in 0..self.shape.n_kv_heads {
-            let hi = self.head_idx(layer, g);
-            for _ in 0..n {
-                if self.heads[hi].buf_len == 0 {
-                    break;
+        if self.cfg.adaptive.is_some() {
+            // Adaptive growth mutates the dictionary per encoded vector, so
+            // results are order-dependent: keep the sequential path.
+            for g in 0..self.shape.n_kv_heads {
+                let hi = self.head_idx(layer, g);
+                for _ in 0..n {
+                    if self.heads[hi].buf_len == 0 {
+                        break;
+                    }
+                    let k: Vec<f32> = self.heads[hi].k_buf[..m].to_vec();
+                    let v: Vec<f32> = self.heads[hi].v_buf[..m].to_vec();
+                    let k_row = self.encode(layer, true, &k);
+                    let v_row = self.encode(layer, false, &v);
+                    let h = &mut self.heads[hi];
+                    h.k_csr.push(k_row);
+                    h.v_csr.push(v_row);
+                    h.k_buf.drain(..m);
+                    h.v_buf.drain(..m);
+                    h.buf_len -= 1;
                 }
-                let k: Vec<f32> = self.heads[hi].k_buf[..m].to_vec();
-                let v: Vec<f32> = self.heads[hi].v_buf[..m].to_vec();
-                let k_row = self.encode(layer, true, &k);
-                let v_row = self.encode(layer, false, &v);
-                let h = &mut self.heads[hi];
-                h.k_csr.push(k_row);
-                h.v_csr.push(v_row);
-                h.k_buf.drain(..m);
-                h.v_buf.drain(..m);
-                h.buf_len -= 1;
             }
+            return;
+        }
+        // gather the oldest rows of every head into one batch
+        self.gather_k.clear();
+        self.gather_v.clear();
+        let n_kv = self.shape.n_kv_heads;
+        let mut takes = vec![0usize; n_kv];
+        for (g, take) in takes.iter_mut().enumerate() {
+            let hi = self.head_idx(layer, g);
+            *take = n.min(self.heads[hi].buf_len);
+            self.gather_k.extend_from_slice(&self.heads[hi].k_buf[..*take * m]);
+            self.gather_v.extend_from_slice(&self.heads[hi].v_buf[..*take * m]);
+        }
+        let total: usize = takes.iter().sum();
+        if total == 0 {
+            return;
+        }
+        let dicts = self.dicts.clone();
+        let (dk, dv) = (&dicts.keys[layer], &dicts.values[layer]);
+        let (s, delta, prec) = (self.cfg.sparsity, self.cfg.delta, self.cfg.precision);
+        let k_codes =
+            omp_encode_batch(&dk.atoms, dk.n, dk.m, &self.gather_k, total, s, delta, &mut self.bws);
+        let v_codes =
+            omp_encode_batch(&dv.atoms, dv.n, dv.m, &self.gather_v, total, s, delta, &mut self.bws);
+        let mut off = 0;
+        for (g, &take) in takes.iter().enumerate() {
+            let hi = self.head_idx(layer, g);
+            let h = &mut self.heads[hi];
+            for code_i in off..off + take {
+                let (kc, vc) = (&k_codes[code_i], &v_codes[code_i]);
+                h.k_csr.push(CsrRow::from_f32(&kc.idx, &kc.val, prec));
+                h.v_csr.push(CsrRow::from_f32(&vc.idx, &vc.val, prec));
+            }
+            h.k_buf.drain(..take * m);
+            h.v_buf.drain(..take * m);
+            h.buf_len -= take;
+            off += take;
         }
     }
 
@@ -228,6 +287,61 @@ impl KvCache for LexicoCache {
         }
         if layer == 0 {
             self.tokens += 1;
+        }
+    }
+
+    fn append_batch(&mut self, layer: usize, ks: &[f32], vs: &[f32], b: usize) {
+        if b == 0 {
+            return;
+        }
+        let m = self.shape.head_dim;
+        let kvd = self.shape.kv_dim();
+        for g in 0..self.shape.n_kv_heads {
+            let hi = self.head_idx(layer, g);
+            for ti in 0..b {
+                self.heads[hi]
+                    .k_buf
+                    .extend_from_slice(&ks[ti * kvd + g * m..ti * kvd + (g + 1) * m]);
+                self.heads[hi]
+                    .v_buf
+                    .extend_from_slice(&vs[ti * kvd + g * m..ti * kvd + (g + 1) * m]);
+            }
+            self.heads[hi].buf_len += b;
+        }
+        // Replay the sequential trigger schedule exactly: each append whose
+        // post-append buffer tops n_buffer compresses min(n_a, buf_len)
+        // tokens (compress_oldest is bounded by the buffer). The compressed
+        // tokens are always the oldest, so the non-adaptive path can run
+        // the whole schedule as ONE compress_oldest call — the entire
+        // overflow goes through the GEMM-batched OMP at once.
+        let len = self.heads[self.head_idx(layer, 0)].buf_len;
+        let (nb, na) = (self.cfg.n_buffer, self.cfg.n_approx);
+        if na > 0 {
+            let adaptive = self.cfg.adaptive.is_some();
+            let mut cur = len - b; // pre-append buffer length
+            let mut total = 0usize;
+            for _ in 0..b {
+                cur += 1;
+                if cur > nb {
+                    let c = na.min(cur);
+                    cur -= c;
+                    if adaptive {
+                        // Adaptive growth is order-dependent and the
+                        // dictionary is shared across kv heads, so the
+                        // per-trigger head interleave of the sequential
+                        // path must be reproduced call-for-call.
+                        self.compress_oldest(layer, c);
+                    } else {
+                        total += c;
+                    }
+                }
+            }
+            if total > 0 {
+                self.compress_oldest(layer, total);
+            }
+        }
+        if layer == 0 {
+            self.tokens += b;
         }
     }
 
@@ -316,6 +430,132 @@ impl KvCache for LexicoCache {
             }
             for ti in 0..tb {
                 axpy(oh, self.scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+            }
+        }
+    }
+
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32], b: usize) {
+        if b == 0 {
+            return;
+        }
+        let m = self.shape.head_dim;
+        let n_heads = self.shape.n_heads;
+        let qdim = self.shape.q_dim();
+        let group = self.shape.group();
+        let scale = 1.0 / (m as f32).sqrt();
+        out.fill(0.0);
+        let (k_atoms_ptr, k_n) = {
+            let (a, n) = self.atoms(layer, true);
+            (a.as_ptr(), n)
+        };
+        let (v_atoms_ptr, v_n) = {
+            let (a, n) = self.atoms(layer, false);
+            (a.as_ptr(), n)
+        };
+        // SAFETY: atoms live in self and are not mutated during attend_batch.
+        let k_atoms = unsafe { std::slice::from_raw_parts(k_atoms_ptr, k_n * m) };
+        let v_atoms = unsafe { std::slice::from_raw_parts(v_atoms_ptr, v_n * m) };
+        let rows = b * n_heads;
+
+        // (1) qd[row][n] = q_row · D_k[n]: ONE streaming pass over the key
+        // dictionary serves every query's every head (extends perf pass #1
+        // across the whole query batch).
+        if self.qd.len() < rows * k_n {
+            self.qd.resize(rows * k_n, 0.0);
+        }
+        {
+            let qd = &mut self.qd[..rows * k_n];
+            for n in 0..k_n {
+                let atom = &k_atoms[n * m..(n + 1) * m];
+                for qi in 0..b {
+                    for h in 0..n_heads {
+                        qd[(qi * n_heads + h) * k_n + n] =
+                            dot(&qs[qi * qdim + h * m..qi * qdim + (h + 1) * m], atom);
+                    }
+                }
+            }
+        }
+
+        // (2) per-row scores + softmax + value-bin accumulation (the flat
+        // score buffer is kept for phase 4; offsets per row).
+        self.score_off.clear();
+        self.score_off.push(0);
+        for _qi in 0..b {
+            for h in 0..n_heads {
+                let hi = self.head_idx(layer, h / group);
+                let len = self.heads[hi].k_csr.len() + self.heads[hi].buf_len;
+                let prev = *self.score_off.last().unwrap();
+                self.score_off.push(prev + len);
+            }
+        }
+        let total_scores = *self.score_off.last().unwrap();
+        if self.scores.len() < total_scores {
+            self.scores.resize(total_scores, 0.0);
+        }
+        if self.z.len() < rows * v_n {
+            self.z.resize(rows * v_n, 0.0);
+        }
+        self.z[..rows * v_n].fill(0.0);
+        for qi in 0..b {
+            for h in 0..n_heads {
+                let row = qi * n_heads + h;
+                let hi = self.head_idx(layer, h / group);
+                let head = &self.heads[hi];
+                let tc = head.k_csr.len();
+                let tb = head.buf_len;
+                let off = self.score_off[row];
+                let qh = &qs[qi * qdim + h * m..qi * qdim + (h + 1) * m];
+                let qdrow = &self.qd[row * k_n..(row + 1) * k_n];
+                for (ti, csr) in head.k_csr.iter().enumerate() {
+                    let mut sc = 0.0;
+                    for j in 0..csr.nnz() {
+                        sc += qdrow[csr.idx[j] as usize] * csr.coef(j);
+                    }
+                    self.scores[off + ti] = sc * scale;
+                }
+                for ti in 0..tb {
+                    self.scores[off + tc + ti] =
+                        dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+                }
+                softmax(&mut self.scores[off..off + tc + tb]);
+                let z = &mut self.z[row * v_n..(row + 1) * v_n];
+                for (ti, csr) in head.v_csr.iter().enumerate() {
+                    let w = self.scores[off + ti];
+                    for j in 0..csr.nnz() {
+                        z[csr.idx[j] as usize] += w * csr.coef(j);
+                    }
+                }
+            }
+        }
+
+        // (3) ONE streaming pass over the value dictionary finishes the
+        // compressed-token term of every (query, head) output. Per output
+        // element contributions still arrive in ascending-atom order, so
+        // this is bitwise identical to the per-head atoms·z pass.
+        for n in 0..v_n {
+            let atom = &v_atoms[n * m..(n + 1) * m];
+            for row in 0..rows {
+                let zn = self.z[row * v_n + n];
+                if zn != 0.0 {
+                    let (qi, h) = (row / n_heads, row % n_heads);
+                    axpy(&mut out[qi * qdim + h * m..qi * qdim + (h + 1) * m], zn, atom);
+                }
+            }
+        }
+
+        // (4) recency-buffer tokens, dense — after the dictionary term,
+        // matching the sequential attend's per-head accumulation order.
+        for qi in 0..b {
+            for h in 0..n_heads {
+                let row = qi * n_heads + h;
+                let hi = self.head_idx(layer, h / group);
+                let head = &self.heads[hi];
+                let tc = head.k_csr.len();
+                let off = self.score_off[row];
+                let oh = &mut out[qi * qdim + h * m..qi * qdim + (h + 1) * m];
+                for ti in 0..head.buf_len {
+                    axpy(oh, self.scores[off + tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+                }
             }
         }
     }
@@ -424,6 +664,69 @@ mod tests {
         lex.attend(0, &q, &mut o1);
         full.attend(0, &q, &mut o2);
         crate::util::prop::assert_close(&o1, &o2, 2e-2, "lexico≈full").unwrap();
+    }
+
+    #[test]
+    fn batch_entry_points_match_sequential_exactly() {
+        // append_batch must leave bit-identical cache state (the batched
+        // OMP is bit-equal to sequential OMP and the overflow schedule
+        // lands in the same place); attend_batch must be bitwise equal to
+        // per-query attends.
+        let cfgs = [
+            LexicoConfig { sparsity: 4, n_buffer: 5, n_approx: 1, ..Default::default() },
+            LexicoConfig { sparsity: 4, n_buffer: 5, n_approx: 3, ..Default::default() },
+            // n_a > n_buffer + 1: each sequential trigger compresses only
+            // min(n_a, buf_len) — the replayed schedule must match that
+            LexicoConfig { sparsity: 4, n_buffer: 2, n_approx: 5, ..Default::default() },
+            // adaptive: shared per-layer dictionary mutates per encode, so
+            // append_batch must reproduce the sequential head interleave
+            LexicoConfig {
+                sparsity: 2,
+                n_buffer: 5,
+                n_approx: 1,
+                adaptive: Some((16, 0.2)),
+                ..Default::default()
+            },
+        ];
+        for cfg in cfgs {
+            let na = cfg.n_approx;
+            let (shape, mut seq) = setup(64, cfg.clone());
+            let (_, mut bat) = setup(64, cfg);
+            let mut rng = Rng::new(31);
+            let kvd = shape.kv_dim();
+            let n = 11;
+            let ks = rng.normal_vec(n * kvd);
+            let vs = rng.normal_vec(n * kvd);
+            for l in 0..shape.n_layers {
+                for i in 0..n {
+                    seq.append(l, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+                }
+                bat.append_batch(l, &ks, &vs, n);
+            }
+            assert_eq!(seq.tokens(), bat.tokens());
+            for (hs, hb) in seq.heads.iter().zip(&bat.heads) {
+                assert_eq!(hs.buf_len, hb.buf_len, "na={na}");
+                assert_eq!(hs.k_csr.len(), hb.k_csr.len(), "na={na}");
+                for (a, b) in hs.k_csr.iter().zip(&hb.k_csr) {
+                    assert_eq!(a.idx, b.idx, "na={na}");
+                    assert_eq!(a.coef_bits, b.coef_bits, "na={na}");
+                }
+                assert_eq!(hs.k_buf, hb.k_buf, "na={na}");
+                assert_eq!(hs.v_buf, hb.v_buf, "na={na}");
+            }
+            assert_eq!(seq.mem_bytes(), bat.mem_bytes(), "na={na}");
+            // attention parity over a query batch
+            let b = 3;
+            let qd = shape.q_dim();
+            let qs = rng.normal_vec(b * qd);
+            let mut o_seq = vec![0.0; b * qd];
+            let mut o_bat = vec![0.0; b * qd];
+            for i in 0..b {
+                seq.attend(0, &qs[i * qd..(i + 1) * qd], &mut o_seq[i * qd..(i + 1) * qd]);
+            }
+            bat.attend_batch(0, &qs, &mut o_bat, b);
+            assert_eq!(o_seq, o_bat, "na={na}: attend_batch diverged");
+        }
     }
 
     #[test]

@@ -68,10 +68,46 @@ pub trait KvCache: Send {
     /// Append one decoded token's K/V rows (`[kv_dim]` each).
     fn append(&mut self, layer: usize, k: &[f32], v: &[f32]);
 
+    /// Append `b` decoded tokens' K/V rows in one call (`ks`/`vs` are
+    /// `[b][kv_dim]` row-major, oldest first). Must be observationally
+    /// identical to `b` sequential [`KvCache::append`] calls; the default
+    /// is exactly that loop. Backends override where batching pays —
+    /// Lexico compresses the whole overflow with one GEMM-batched OMP
+    /// call, KIVI spills once instead of per token.
+    fn append_batch(&mut self, layer: usize, ks: &[f32], vs: &[f32], b: usize) {
+        if b == 0 {
+            return;
+        }
+        let kvd = ks.len() / b;
+        debug_assert_eq!(ks.len(), b * kvd);
+        debug_assert_eq!(vs.len(), b * kvd);
+        for i in 0..b {
+            self.append(layer, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+        }
+    }
+
     /// GQA attention of `q` (`[q_dim]`) over everything stored for `layer`,
     /// writing `[q_dim]` to `out`. `&mut self` so backends may track
     /// attention-mass statistics (ZipCache salience).
     fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]);
+
+    /// Attend `b` independent queries (`qs` is `[b][q_dim]` row-major) over
+    /// the *same* stored state, writing `[b][q_dim]` to `out`. Must equal
+    /// `b` sequential [`KvCache::attend`] calls (the default loop); batched
+    /// overrides amortize per-call work — one dequantization pass (KIVI),
+    /// one streaming pass over K/V (full) or over the dictionaries (Lexico)
+    /// shared by every query.
+    fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32], b: usize) {
+        if b == 0 {
+            return;
+        }
+        let qd = qs.len() / b;
+        debug_assert_eq!(qs.len(), b * qd);
+        debug_assert_eq!(out.len(), b * qd);
+        for i in 0..b {
+            self.attend(layer, &qs[i * qd..(i + 1) * qd], &mut out[i * qd..(i + 1) * qd]);
+        }
+    }
 
     /// Logical tokens seen (including evicted ones).
     fn tokens(&self) -> usize;
@@ -121,6 +157,65 @@ pub fn dense_attend(
         let oh = &mut out[h * m..(h + 1) * m];
         for ti in 0..t {
             crate::tensor::axpy(oh, scores_buf[ti], &vs[ti * kvd + g * m..ti * kvd + (g + 1) * m]);
+        }
+    }
+}
+
+/// Batched dense GQA attention: `b` queries over the same token-major K/V
+/// rows. One streaming pass over K computes every query's scores and one
+/// pass over V accumulates every output, so the (possibly dequantized) K/V
+/// arrays are loaded once per call instead of once per query. Per output
+/// element the arithmetic matches [`dense_attend`] operation-for-operation
+/// (same dots, same per-row softmax, same ascending-token accumulation), so
+/// results are bitwise identical to `b` sequential calls.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attend_batch(
+    shape: &CacheShape,
+    ks: &[f32],
+    vs: &[f32],
+    t: usize,
+    qs: &[f32],
+    out: &mut [f32],
+    b: usize,
+    scores_buf: &mut Vec<f32>,
+) {
+    let m = shape.head_dim;
+    let kvd = shape.kv_dim();
+    let qd = shape.q_dim();
+    let nh = shape.n_heads;
+    let scale = 1.0 / (m as f32).sqrt();
+    out.fill(0.0);
+    if t == 0 {
+        return;
+    }
+    let rows = b * nh;
+    scores_buf.resize(rows * t, 0.0);
+    // score pass: stream K once, fill every (query, head) row
+    for ti in 0..t {
+        for qi in 0..b {
+            for h in 0..nh {
+                let g = h / shape.group();
+                scores_buf[(qi * nh + h) * t + ti] = dot(
+                    &qs[qi * qd + h * m..qi * qd + (h + 1) * m],
+                    &ks[ti * kvd + g * m..ti * kvd + (g + 1) * m],
+                ) * scale;
+            }
+        }
+    }
+    for row in scores_buf.chunks_mut(t).take(rows) {
+        softmax(row);
+    }
+    // value pass: stream V once, accumulate every output head
+    for ti in 0..t {
+        for qi in 0..b {
+            for h in 0..nh {
+                let g = h / shape.group();
+                crate::tensor::axpy(
+                    &mut out[qi * qd + h * m..qi * qd + (h + 1) * m],
+                    scores_buf[(qi * nh + h) * t + ti],
+                    &vs[ti * kvd + g * m..ti * kvd + (g + 1) * m],
+                );
+            }
         }
     }
 }

@@ -3,7 +3,7 @@
 
 use crate::cache::{CacheShape, KvCache};
 use crate::model::weights::Weights;
-use crate::tensor::{argmax, dot, matmul, rmsnorm, silu, softmax};
+use crate::tensor::{argmax, dot, matmul, matmul_kmajor, rmsnorm, silu, softmax};
 
 const RMS_EPS: f32 = 1e-5;
 
@@ -55,11 +55,46 @@ struct Scratch {
     ff3: Vec<f32>,
 }
 
+/// Scratch for the batched decode path: the same buffers as [`Scratch`]
+/// with a leading batch dimension, grown to the largest batch seen.
+#[derive(Default)]
+struct BatchScratch {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    ff1: Vec<f32>,
+    ff3: Vec<f32>,
+}
+
+impl BatchScratch {
+    fn ensure(&mut self, bsz: usize, d: usize, qd: usize, kvd: usize, d_ff: usize) {
+        let grow = |v: &mut Vec<f32>, n: usize| {
+            if v.len() < n {
+                v.resize(n, 0.0);
+            }
+        };
+        grow(&mut self.x, bsz * d);
+        grow(&mut self.h, bsz * d);
+        grow(&mut self.q, bsz * qd);
+        grow(&mut self.k, bsz * kvd);
+        grow(&mut self.v, bsz * kvd);
+        grow(&mut self.attn, bsz * qd);
+        grow(&mut self.proj, bsz * d);
+        grow(&mut self.ff1, bsz * d_ff);
+        grow(&mut self.ff3, bsz * d_ff);
+    }
+}
+
 /// The native engine: owns weights + RoPE tables; caches are passed in.
 pub struct Engine {
     pub weights: Weights,
     rope: Rope,
     scratch: std::sync::Mutex<Scratch>,
+    batch_scratch: std::sync::Mutex<BatchScratch>,
 }
 
 /// How many trailing prompt queries are handed to the cache as the
@@ -81,7 +116,12 @@ impl Engine {
             ff1: vec![0.0; cfg.d_ff],
             ff3: vec![0.0; cfg.d_ff],
         };
-        Engine { weights, rope, scratch: std::sync::Mutex::new(scratch) }
+        Engine {
+            weights,
+            rope,
+            scratch: std::sync::Mutex::new(scratch),
+            batch_scratch: std::sync::Mutex::new(BatchScratch::default()),
+        }
     }
 
     pub fn shape(&self) -> CacheShape {
@@ -229,6 +269,120 @@ impl Engine {
         self.logits(&s.h)
     }
 
+    /// Layer-major batched decode: advance `B` independent sessions by one
+    /// token each. Session `b` decodes `tokens[b]` at absolute position
+    /// `positions[b]` through its own cache `caches[b]` (which must already
+    /// hold positions `0..positions[b]`).
+    ///
+    /// Hidden states are stacked into `[B, d_model]` rows and every weight
+    /// matrix is driven through the k-major GEMM, so each weight streams
+    /// from memory once per layer per round instead of once per session —
+    /// the batch-first serving pipeline. Attention stays per-session (each
+    /// session owns its cache and context length).
+    ///
+    /// Parity: per session this performs the identical floating-point
+    /// operations in the identical order as [`Engine::decode_step`]
+    /// ([`matmul_kmajor`] accumulates bitwise like [`matmul`]), so the
+    /// returned logits — and therefore greedy decoding — are
+    /// token-for-token identical to the sequential path.
+    pub fn decode_batch(
+        &self,
+        tokens: &[u32],
+        positions: &[usize],
+        caches: &mut [&mut dyn KvCache],
+    ) -> Vec<Vec<f32>> {
+        let bsz = tokens.len();
+        assert_eq!(positions.len(), bsz, "tokens/positions length mismatch");
+        assert_eq!(caches.len(), bsz, "tokens/caches length mismatch");
+        if bsz == 0 {
+            return Vec::new();
+        }
+        let cfg = self.weights.cfg;
+        for &p in positions {
+            assert!(p < cfg.max_seq, "position {p} ≥ max_seq");
+        }
+        let d = cfg.d_model;
+        let m = cfg.head_dim;
+        let (qd, kvd) = (cfg.q_dim(), cfg.kv_dim());
+        let mut s = self.batch_scratch.lock().unwrap();
+        let s = &mut *s;
+        s.ensure(bsz, d, qd, kvd, cfg.d_ff);
+        let x = &mut s.x[..bsz * d];
+        let h = &mut s.h[..bsz * d];
+        let q = &mut s.q[..bsz * qd];
+        let k = &mut s.k[..bsz * kvd];
+        let v = &mut s.v[..bsz * kvd];
+        let attn = &mut s.attn[..bsz * qd];
+        let proj = &mut s.proj[..bsz * d];
+        let ff1 = &mut s.ff1[..bsz * cfg.d_ff];
+        let ff3 = &mut s.ff3[..bsz * cfg.d_ff];
+
+        for (bi, &tok) in tokens.iter().enumerate() {
+            x[bi * d..(bi + 1) * d].copy_from_slice(
+                &self.weights.embed[tok as usize * d..(tok as usize + 1) * d],
+            );
+        }
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            for bi in 0..bsz {
+                rmsnorm(&mut h[bi * d..(bi + 1) * d], &x[bi * d..(bi + 1) * d], &lw.ln1, RMS_EPS);
+            }
+            // one stream of each weight matrix serves every session
+            matmul_kmajor(q, h, &lw.wq, bsz, d, qd);
+            matmul_kmajor(k, h, &lw.wk, bsz, d, kvd);
+            matmul_kmajor(v, h, &lw.wv, bsz, d, kvd);
+            for bi in 0..bsz {
+                let pos = positions[bi];
+                for hh in 0..cfg.n_heads {
+                    self.rope.apply(&mut q[bi * qd + hh * m..bi * qd + (hh + 1) * m], pos);
+                }
+                for g in 0..cfg.n_kv_heads {
+                    self.rope.apply(&mut k[bi * kvd + g * m..bi * kvd + (g + 1) * m], pos);
+                }
+            }
+            // per-session cache traffic (each session's own KV state)
+            for bi in 0..bsz {
+                caches[bi].append(li, &k[bi * kvd..(bi + 1) * kvd], &v[bi * kvd..(bi + 1) * kvd]);
+                caches[bi].attend(li, &q[bi * qd..(bi + 1) * qd], &mut attn[bi * qd..(bi + 1) * qd]);
+            }
+            matmul_kmajor(proj, attn, &lw.wo, bsz, qd, d);
+            for i in 0..bsz * d {
+                x[i] += proj[i];
+            }
+            for bi in 0..bsz {
+                rmsnorm(&mut h[bi * d..(bi + 1) * d], &x[bi * d..(bi + 1) * d], &lw.ln2, RMS_EPS);
+            }
+            matmul_kmajor(ff1, h, &lw.w1, bsz, d, cfg.d_ff);
+            matmul_kmajor(ff3, h, &lw.w3, bsz, d, cfg.d_ff);
+            for i in 0..bsz * cfg.d_ff {
+                ff1[i] = silu(ff1[i]) * ff3[i];
+            }
+            matmul_kmajor(proj, ff1, &lw.w2, bsz, cfg.d_ff, d);
+            for i in 0..bsz * d {
+                x[i] += proj[i];
+            }
+        }
+        for bi in 0..bsz {
+            rmsnorm(&mut h[bi * d..(bi + 1) * d], &x[bi * d..(bi + 1) * d], &self.weights.lnf, RMS_EPS);
+        }
+        self.logits_batch(&h[..bsz * d], bsz)
+    }
+
+    /// Tied unembedding for a batch of rows: one streaming pass over the
+    /// embedding matrix serves every session (row values identical to
+    /// [`Engine::logits`] — each logit is the same single dot product).
+    fn logits_batch(&self, hs: &[f32], bsz: usize) -> Vec<Vec<f32>> {
+        let cfg = self.weights.cfg;
+        let d = cfg.d_model;
+        let mut out = vec![vec![0.0f32; cfg.vocab]; bsz];
+        for vtok in 0..cfg.vocab {
+            let erow = &self.weights.embed[vtok * d..(vtok + 1) * d];
+            for (bi, row) in out.iter_mut().enumerate() {
+                row[vtok] = dot(&hs[bi * d..(bi + 1) * d], erow);
+            }
+        }
+        out
+    }
+
     /// Tied unembedding: logits = h · embedᵀ.
     fn logits(&self, h: &[f32]) -> Vec<f32> {
         let cfg = self.weights.cfg;
@@ -304,6 +458,41 @@ pub mod tests {
         let _ = eng.prefill(&toks[..3], &mut c2);
         let l_b = eng.decode_step(toks[3], 3, &mut c2);
         crate::util::prop::assert_close(&l_a, &l_b, 1e-4, "prefill≡decode").unwrap();
+    }
+
+    #[test]
+    fn decode_batch_matches_decode_step_bitwise() {
+        // Three sessions with different prompts and lengths: the batched
+        // path must return the exact logits of three sequential steps.
+        let eng = Engine::new(tiny_weights(9));
+        let prompts: [&[u32]; 3] = [&[1, 4, 7], &[2, 3, 5, 8], &[9, 9]];
+        let mut seq_caches: Vec<FullCache> = Vec::new();
+        let mut bat_caches: Vec<FullCache> = Vec::new();
+        let mut toks = Vec::new();
+        let mut poss = Vec::new();
+        for p in prompts {
+            let mut c1 = FullCache::new(eng.shape());
+            let l = eng.prefill(p, &mut c1);
+            let mut c2 = FullCache::new(eng.shape());
+            let _ = eng.prefill(p, &mut c2);
+            seq_caches.push(c1);
+            bat_caches.push(c2);
+            toks.push(argmax(&l) as u32);
+            poss.push(p.len());
+        }
+        for _round in 0..4 {
+            let seq_logits: Vec<Vec<f32>> = (0..3)
+                .map(|i| eng.decode_step(toks[i], poss[i], &mut seq_caches[i]))
+                .collect();
+            let mut refs: Vec<&mut dyn crate::cache::KvCache> =
+                bat_caches.iter_mut().map(|c| c as &mut dyn crate::cache::KvCache).collect();
+            let bat_logits = eng.decode_batch(&toks, &poss, &mut refs);
+            assert_eq!(seq_logits, bat_logits, "batched logits diverged");
+            for i in 0..3 {
+                toks[i] = argmax(&bat_logits[i]) as u32;
+                poss[i] += 1;
+            }
+        }
     }
 
     #[test]

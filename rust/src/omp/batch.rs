@@ -1,0 +1,355 @@
+//! GEMM-batched Orthogonal Matching Pursuit.
+//!
+//! [`omp_encode`](super::omp_encode) spends almost all of its time in the
+//! correlation step — an O(N·m) streaming pass over the dictionary per
+//! iteration per vector. When many vectors are compressed at once (a layer
+//! overflow compresses `n_a × n_kv_heads` pending tokens; prefill compresses
+//! hundreds), running that step per vector re-streams the same N·m array
+//! once per vector per iteration.
+//!
+//! [`omp_encode_batch`] instead runs the correlation step for *all still
+//! active* vectors as one `matmul_bt` GEMM (`R[A,m] · Dᵀ[m,N]`), so each
+//! dictionary atom is loaded once per iteration and serves every pending
+//! residual — the same amortization the paper uses to justify batched
+//! sparse coding (§3.4) and that CSR applies to whole-cache encoding. The
+//! Cholesky updates and triangular solves remain per vector (they are
+//! O(s²)–O(s³) on s ≤ 16 elements, irrelevant next to the GEMM).
+//!
+//! **Parity contract:** for every input vector the batch encoder performs
+//! the exact same floating-point operations in the exact same order as the
+//! sequential encoder (the GEMM computes `dot(r, atom)` with the identical
+//! accumulation pattern as the sequential `dot(atom, r)`), so
+//! `omp_encode_batch(xs)[i] == omp_encode(xs[i])` bit for bit. A property
+//! test below enforces this.
+
+use super::SparseCode;
+use crate::tensor::{axpy, dot, matmul_bt, norm2};
+
+/// Reusable buffers for [`omp_encode_batch`]; grows monotonically, so one
+/// workspace serves any mix of (batch, N, m, s) shapes without reallocating
+/// in steady state.
+#[derive(Default)]
+pub struct BatchOmpWorkspace {
+    /// compacted residuals of the still-active vectors, `[A, m]`
+    rs: Vec<f32>,
+    /// correlations of the active vectors, `[A, N]`
+    corr: Vec<f32>,
+    /// per-vector residuals, `[B, m]`
+    r: Vec<f32>,
+    /// per-vector lower-triangular Cholesky factors, `[B, s*s]`
+    chol: Vec<f32>,
+    /// per-vector `D_Sᵀ x`, `[B, s]`
+    alpha: Vec<f32>,
+    /// per-vector coefficients, `[B, s]`
+    y: Vec<f32>,
+    /// forward-solve scratch, `[s]` (recomputed fully per solve)
+    z: Vec<f32>,
+    /// new Gram column scratch, `[s]`
+    b: Vec<f32>,
+    /// per-vector selected atom ids
+    sel: Vec<Vec<usize>>,
+    /// indices of vectors still running this iteration
+    active: Vec<usize>,
+    /// per-vector early-termination threshold `δ·‖x‖`
+    stop: Vec<f32>,
+    /// per-vector finished flag
+    done: Vec<bool>,
+}
+
+impl BatchOmpWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, batch: usize, n_atoms: usize, m: usize, s_cap: usize) {
+        if self.rs.len() < batch * m {
+            self.rs.resize(batch * m, 0.0);
+        }
+        if self.corr.len() < batch * n_atoms {
+            self.corr.resize(batch * n_atoms, 0.0);
+        }
+        if self.r.len() < batch * m {
+            self.r.resize(batch * m, 0.0);
+        }
+        if self.chol.len() < batch * s_cap * s_cap {
+            self.chol.resize(batch * s_cap * s_cap, 0.0);
+        }
+        if self.alpha.len() < batch * s_cap {
+            self.alpha.resize(batch * s_cap, 0.0);
+        }
+        if self.y.len() < batch * s_cap {
+            self.y.resize(batch * s_cap, 0.0);
+        }
+        if self.z.len() < s_cap {
+            self.z.resize(s_cap, 0.0);
+        }
+        if self.b.len() < s_cap {
+            self.b.resize(s_cap, 0.0);
+        }
+        if self.sel.len() < batch {
+            self.sel.resize_with(batch, Vec::new);
+        }
+        if self.done.len() < batch {
+            self.done.resize(batch, false);
+        }
+        if self.stop.len() < batch {
+            self.stop.resize(batch, 0.0);
+        }
+    }
+}
+
+/// Sparse-code `batch` vectors (`xs` is `[batch, m]` row-major) over `atoms`
+/// `[N, m]` in one batched pursuit. Semantics per vector are identical to
+/// [`omp_encode`](super::omp_encode): at most `s_max` atoms, optional
+/// `delta` early termination, selected atoms masked out of the argmax scan.
+#[allow(clippy::too_many_arguments)]
+pub fn omp_encode_batch(
+    atoms: &[f32],
+    n_atoms: usize,
+    m: usize,
+    xs: &[f32],
+    batch: usize,
+    s_max: usize,
+    delta: f32,
+    ws: &mut BatchOmpWorkspace,
+) -> Vec<SparseCode> {
+    debug_assert_eq!(atoms.len(), n_atoms * m);
+    debug_assert_eq!(xs.len(), batch * m);
+    let s_cap = s_max.min(n_atoms).min(m.max(1) * 4); // same defensive cap
+    ws.ensure(batch, n_atoms, m, s_cap);
+    for bi in 0..batch {
+        ws.r[bi * m..(bi + 1) * m].copy_from_slice(&xs[bi * m..(bi + 1) * m]);
+        ws.sel[bi].clear();
+        ws.done[bi] = false;
+        ws.stop[bi] = (delta * norm2(&xs[bi * m..(bi + 1) * m])).max(1e-12);
+    }
+
+    for _iter in 0..s_cap {
+        // which vectors still have budget and a residual above threshold?
+        ws.active.clear();
+        for bi in 0..batch {
+            if ws.done[bi] {
+                continue;
+            }
+            if norm2(&ws.r[bi * m..(bi + 1) * m]) <= ws.stop[bi] {
+                ws.done[bi] = true;
+            } else {
+                ws.active.push(bi);
+            }
+        }
+        let a_cnt = ws.active.len();
+        if a_cnt == 0 {
+            break;
+        }
+
+        // THE batched step: compact the active residuals and compute every
+        // correlation in one GEMM — one streaming pass over the dictionary
+        // serves all pending vectors.
+        for ai in 0..a_cnt {
+            let bi = ws.active[ai];
+            ws.rs[ai * m..(ai + 1) * m].copy_from_slice(&ws.r[bi * m..(bi + 1) * m]);
+        }
+        matmul_bt(
+            &mut ws.corr[..a_cnt * n_atoms],
+            &ws.rs[..a_cnt * m],
+            atoms,
+            a_cnt,
+            m,
+            n_atoms,
+        );
+
+        // per-vector selection + Cholesky update + solve + residual refresh
+        for ai in 0..a_cnt {
+            let bi = ws.active[ai];
+            let i = ws.sel[bi].len();
+            let mut best = usize::MAX;
+            let mut best_abs = -1.0f32;
+            {
+                let corr = &ws.corr[ai * n_atoms..(ai + 1) * n_atoms];
+                for n in 0..n_atoms {
+                    let a = corr[n].abs();
+                    // improvement test first (as in the sequential scan):
+                    // the mask check only runs for improvement candidates
+                    if a > best_abs && !ws.sel[bi].contains(&n) {
+                        best_abs = a;
+                        best = n;
+                    }
+                }
+            }
+            if best == usize::MAX {
+                ws.done[bi] = true; // dictionary exhausted
+                continue;
+            }
+            let aj = &atoms[best * m..(best + 1) * m];
+
+            // Gram column against the current selection.
+            for (k, &p) in ws.sel[bi].iter().enumerate() {
+                ws.b[k] = dot(&atoms[p * m..(p + 1) * m], aj);
+            }
+            let chol = &mut ws.chol[bi * s_cap * s_cap..(bi + 1) * s_cap * s_cap];
+            for k in 0..i {
+                let mut w = ws.b[k];
+                for l in 0..k {
+                    w -= chol[k * s_cap + l] * chol[i * s_cap + l];
+                }
+                chol[i * s_cap + k] = w / chol[k * s_cap + k];
+            }
+            let mut diag = 1.0f32;
+            for l in 0..i {
+                diag -= chol[i * s_cap + l] * chol[i * s_cap + l];
+            }
+            if diag <= 1e-10 {
+                ws.done[bi] = true; // atom numerically in span of selection
+                continue;
+            }
+            chol[i * s_cap + i] = diag.sqrt();
+            ws.sel[bi].push(best);
+            ws.alpha[bi * s_cap + i] = dot(aj, &xs[bi * m..(bi + 1) * m]);
+
+            // Solve L z = alpha, then Lᵀ y = z.
+            let k_sel = i + 1;
+            for k in 0..k_sel {
+                let mut zv = ws.alpha[bi * s_cap + k];
+                for l in 0..k {
+                    zv -= chol[k * s_cap + l] * ws.z[l];
+                }
+                ws.z[k] = zv / chol[k * s_cap + k];
+            }
+            for k in (0..k_sel).rev() {
+                let mut yv = ws.z[k];
+                for l in k + 1..k_sel {
+                    yv -= chol[l * s_cap + k] * ws.y[bi * s_cap + l];
+                }
+                ws.y[bi * s_cap + k] = yv / chol[k * s_cap + k];
+            }
+
+            // residual refresh: r = x − Σ y_k a_k
+            let r = &mut ws.r[bi * m..(bi + 1) * m];
+            r.copy_from_slice(&xs[bi * m..(bi + 1) * m]);
+            for (k, &p) in ws.sel[bi].iter().enumerate() {
+                axpy(r, -ws.y[bi * s_cap + k], &atoms[p * m..(p + 1) * m]);
+            }
+        }
+    }
+
+    (0..batch)
+        .map(|bi| {
+            let k = ws.sel[bi].len();
+            SparseCode {
+                idx: ws.sel[bi].iter().map(|&p| p as u16).collect(),
+                val: ws.y[bi * s_cap..bi * s_cap + k].to_vec(),
+            }
+        })
+        .collect()
+}
+
+/// Convenience wrapper allocating its own workspace (tests / cold paths).
+pub fn omp_encode_batch_alloc(
+    atoms: &[f32],
+    n_atoms: usize,
+    m: usize,
+    xs: &[f32],
+    batch: usize,
+    s_max: usize,
+    delta: f32,
+) -> Vec<SparseCode> {
+    let mut ws = BatchOmpWorkspace::new();
+    omp_encode_batch(atoms, n_atoms, m, xs, batch, s_max, delta, &mut ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::{omp_encode_alloc, rel_error};
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn random_unit_atoms(rng: &mut Rng, n: usize, m: usize) -> Vec<f32> {
+        let mut atoms = rng.normal_vec(n * m);
+        for a in atoms.chunks_mut(m) {
+            let nrm = norm2(a).max(1e-12);
+            a.iter_mut().for_each(|x| *x /= nrm);
+        }
+        atoms
+    }
+
+    #[test]
+    fn batch_matches_sequential_vector_for_vector() {
+        // The core parity property: not merely close — bit-identical codes.
+        Prop::new(48).check("omp_batch_parity", |rng, size| {
+            let m = 8 + (size % 3) * 8;
+            let n = 4 * m;
+            let s = 1 + rng.below(6);
+            let delta = if rng.below(2) == 0 { 0.0 } else { 0.4 };
+            let batch = 1 + rng.below(6);
+            let atoms = random_unit_atoms(rng, n, m);
+            let xs = rng.normal_vec(batch * m);
+            let codes = omp_encode_batch_alloc(&atoms, n, m, &xs, batch, s, delta);
+            if codes.len() != batch {
+                return Err(format!("{} codes for batch {batch}", codes.len()));
+            }
+            for bi in 0..batch {
+                let solo = omp_encode_alloc(&atoms, n, m, &xs[bi * m..(bi + 1) * m], s, delta);
+                if codes[bi].idx != solo.idx {
+                    return Err(format!(
+                        "vec {bi}: idx {:?} != {:?}",
+                        codes[bi].idx, solo.idx
+                    ));
+                }
+                if codes[bi].val != solo.val {
+                    return Err(format!(
+                        "vec {bi}: val {:?} != {:?}",
+                        codes[bi].val, solo.val
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        // One workspace, three calls with different (batch, N, m, s): the
+        // monotone-growth buffers must not leak state between calls.
+        let mut ws = BatchOmpWorkspace::new();
+        let mut rng = Rng::new(17);
+        for &(batch, n, m, s) in &[(6usize, 64usize, 16usize, 4usize), (2, 128, 8, 6), (9, 32, 24, 2)] {
+            let atoms = random_unit_atoms(&mut rng, n, m);
+            let xs = rng.normal_vec(batch * m);
+            let codes = omp_encode_batch(&atoms, n, m, &xs, batch, s, 0.0, &mut ws);
+            for bi in 0..batch {
+                let solo = omp_encode_alloc(&atoms, n, m, &xs[bi * m..(bi + 1) * m], s, 0.0);
+                assert_eq!(codes[bi].idx, solo.idx, "batch={batch} n={n} m={m} s={s}");
+                assert_eq!(codes[bi].val, solo.val, "batch={batch} n={n} m={m} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_sparse_vectors_in_one_batch() {
+        // A zero vector (terminates before iteration 1), an exactly-sparse
+        // vector (terminates early under delta), and a dense vector must
+        // coexist: per-vector termination, shared GEMM.
+        let mut rng = Rng::new(5);
+        let (m, n) = (16, 64);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let mut xs = vec![0.0f32; 3 * m];
+        // vec 0: zero. vec 1: 1-sparse in the dictionary. vec 2: dense.
+        xs[m..2 * m].copy_from_slice(&atoms[7 * m..8 * m]);
+        let dense = rng.normal_vec(m);
+        xs[2 * m..3 * m].copy_from_slice(&dense);
+        let codes = omp_encode_batch_alloc(&atoms, n, m, &xs, 3, 4, 0.01);
+        assert_eq!(codes[0].nnz(), 0);
+        assert!(codes[1].nnz() >= 1);
+        assert_eq!(codes[1].idx[0], 7);
+        assert!(rel_error(&atoms, m, &xs[m..2 * m], &codes[1]) < 1e-3);
+        assert!(codes[2].nnz() >= 1);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let atoms = vec![1.0, 0.0, 0.0, 1.0];
+        let codes = omp_encode_batch_alloc(&atoms, 2, 2, &[], 0, 4, 0.0);
+        assert!(codes.is_empty());
+    }
+}

@@ -10,6 +10,10 @@
 //! early termination (`delta` > 0, §4.2.1 — the greedy prefix property
 //! makes early stopping equivalent to having asked for fewer atoms).
 
+pub mod batch;
+
+pub use batch::{omp_encode_batch, omp_encode_batch_alloc, BatchOmpWorkspace};
+
 use crate::tensor::{axpy, dot, norm2};
 
 /// Result of sparse-coding one vector.
@@ -95,19 +99,25 @@ pub fn omp_encode(
         if norm2(r) <= stop {
             break;
         }
-        // correlation step: c = D_atoms · r  (the O(N·m) hot loop)
+        // correlation step: c = D_atoms · r  (the O(N·m) hot loop).
+        // Already-selected atoms are masked out of the scan: the residual is
+        // orthogonal to them only up to rounding, so an unmasked argmax can
+        // re-pick one and would otherwise end the pursuit with sparsity
+        // budget left on the table.
         let mut best = usize::MAX;
         let mut best_abs = -1.0f32;
         for n in 0..n_atoms {
             let c = dot(&atoms[n * m..(n + 1) * m], r);
             let a = c.abs();
-            if a > best_abs {
+            // improvement test first: the O(s) mask scan then only runs for
+            // the few candidates that beat the running max, not all N atoms
+            if a > best_abs && !ws.sel.contains(&n) {
                 best_abs = a;
                 best = n;
             }
         }
-        if best == usize::MAX || ws.sel.contains(&best) {
-            break; // numerically exhausted
+        if best == usize::MAX {
+            break; // every atom selected: dictionary exhausted
         }
         let aj = &atoms[best * m..(best + 1) * m];
 
@@ -292,6 +302,34 @@ mod tests {
                 return Err(format!("stopped early but err {err} > δ"));
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn uses_full_sparsity_budget() {
+        // Regression: an argmax landing on an already-selected atom must be
+        // masked out of the scan, not end the pursuit with sparsity budget
+        // left over. A dense random target can't be represented early, so
+        // the pursuit must either spend all s iterations or have converged.
+        Prop::new(64).check("omp_full_budget", |rng, _| {
+            let (m, n, s) = (16, 64, 8);
+            let atoms = random_unit_atoms(rng, n, m);
+            let x = rng.normal_vec(m);
+            let code = omp_encode_alloc(&atoms, n, m, &x, s, 0.0);
+            for (j, &id) in code.idx.iter().enumerate() {
+                if code.idx[..j].contains(&id) {
+                    return Err(format!("atom {id} selected twice: {:?}", code.idx));
+                }
+            }
+            if code.nnz() == s {
+                return Ok(());
+            }
+            let err = rel_error(&atoms, m, &x, &code);
+            if err < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("stopped at nnz={} with err={err}", code.nnz()))
+            }
         });
     }
 

@@ -2,10 +2,13 @@
 //!
 //! The scheduling loop mirrors Orca/vLLM: each round first *admits* pending
 //! requests while the KV-memory budget allows (running their prefill), then
-//! advances every active session by exactly one decode step, retiring
-//! sessions that emit the stop token or exhaust their budget. Lexico's
-//! smaller per-token KV footprint directly raises the number of concurrent
-//! sessions the budget admits — the paper's memory-bound serving argument.
+//! advances every active session by exactly one token through a single
+//! layer-major [`Engine::decode_batch`] call (weights stream once per layer
+//! per round, not once per session), retiring sessions that emit the stop
+//! token or exhaust their budget. Lexico's smaller per-token KV footprint
+//! directly raises the number of concurrent sessions the budget admits —
+//! the paper's memory-bound serving argument — and the batched round is
+//! what turns those extra sessions into throughput.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
@@ -163,26 +166,48 @@ pub fn run(
             }
         }
 
-        // ---- one decode step per active session (continuous batching) --
+        // ---- one batched decode round for ALL active sessions -----------
+        // Layer-major continuous batching: commit each session's pending
+        // token, retire finished sessions, then advance every remaining
+        // session together through one `decode_batch` call so each weight
+        // matrix streams once per layer per round instead of once per
+        // session (the batch-first pipeline; token-identical to per-session
+        // `decode_step` calls).
         let mut retire = Vec::new();
-        for (si, sess) in active.iter_mut().enumerate() {
-            let step_t0 = Instant::now();
-            sess.generated.push(sess.next_token);
-            let done = sess.next_token == stop
-                || sess.generated.len() >= sess.job.request.max_new
-                || sess.pos + 1 >= max_seq;
-            if done {
-                retire.push(si);
-                continue;
+        {
+            let mut toks: Vec<u32> = Vec::new();
+            let mut poss: Vec<usize> = Vec::new();
+            let mut decoding: Vec<usize> = Vec::new();
+            let mut caches: Vec<&mut dyn KvCache> = Vec::new();
+            for (si, sess) in active.iter_mut().enumerate() {
+                sess.generated.push(sess.next_token);
+                let done = sess.next_token == stop
+                    || sess.generated.len() >= sess.job.request.max_new
+                    || sess.pos + 1 >= max_seq;
+                if done {
+                    retire.push(si);
+                    continue;
+                }
+                toks.push(sess.next_token);
+                poss.push(sess.pos);
+                decoding.push(si);
+                caches.push(&mut *sess.cache);
             }
-            let logits = engine.decode_step(sess.next_token, sess.pos, &mut *sess.cache);
-            sess.next_token = argmax(&logits) as u32;
-            sess.pos += 1;
-            metrics
-                .lock()
-                .unwrap()
-                .per_token_ms
-                .push(step_t0.elapsed().as_secs_f64() * 1e3);
+            if !decoding.is_empty() {
+                let step_t0 = Instant::now();
+                let logits = engine.decode_batch(&toks, &poss, &mut caches);
+                drop(caches);
+                let per_token = step_t0.elapsed().as_secs_f64() * 1e3 / decoding.len() as f64;
+                for (bi, &si) in decoding.iter().enumerate() {
+                    let sess = &mut active[si];
+                    sess.next_token = argmax(&logits[bi]) as u32;
+                    sess.pos += 1;
+                }
+                // one sample per round (amortized ms/token at that round's
+                // batch size) — duplicating it per session would flatten
+                // the percentile summary into the mean
+                metrics.lock().unwrap().per_token_ms.push(per_token);
+            }
         }
 
         // ---- retire ----------------------------------------------------

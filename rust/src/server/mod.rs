@@ -9,8 +9,9 @@
 //!        ▼                                        │
 //!   batcher.rs  — iteration-level scheduling loop (Orca-style):
 //!     admit pending requests while the KV budget allows (prefill),
-//!     then run ONE decode step per active session per round
-//!     (continuous batching), retiring finished sessions.
+//!     then advance ALL active sessions one token per round through a
+//!     single layer-major Engine::decode_batch call (continuous
+//!     batching, batch-first), retiring finished sessions.
 //! ```
 //!
 //! Every session owns its KV cache through the same [`KvCache`] backends

@@ -30,6 +30,33 @@ pub fn matmul(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
     matmul_acc(c, a, b, m, k, n);
 }
 
+/// C[M,N] = A[M,K] @ B[K,N], k-major loop order: each row of B is loaded
+/// exactly once and applied to every row of A, so a weight matrix streams
+/// through memory once per call *regardless of M* (the i-k-j order of
+/// [`matmul`] re-streams B for every row of A). This is the batched-decode
+/// kernel: M = number of concurrent sessions (small), so C stays
+/// cache-resident while B streams.
+///
+/// Per output element the contributions arrive in ascending-k order through
+/// the same [`axpy`] kernel as [`matmul`], so results are bitwise identical
+/// to `matmul` — the batch-parity guarantee rests on this.
+pub fn matmul_kmajor(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for kk in 0..k {
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            axpy(&mut c[i * n..(i + 1) * n], aik, brow);
+        }
+    }
+}
+
 /// C[M,N] = A[M,K] @ B^T where B is [N,K] (dot-product form; good when both
 /// operands are row-major and N is small, e.g. attention scores).
 pub fn matmul_bt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
@@ -157,6 +184,25 @@ mod tests {
             let mut c = vec![0.0; m * n];
             matmul(&mut c, &a, &b, m, k, n);
             crate::util::prop::assert_close(&c, &naive_matmul(&a, &b, m, k, n), 1e-4, "matmul")
+        });
+    }
+
+    #[test]
+    fn matmul_kmajor_is_bitwise_identical_to_matmul() {
+        // Not just close: the batched decode path relies on exact equality.
+        Prop::new(32).check("matmul_kmajor", |rng, size| {
+            let (m, k, n) = (1 + rng.below(size + 3), 1 + rng.below(size + 7), 1 + rng.below(size + 3));
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul(&mut c1, &a, &b, m, k, n);
+            matmul_kmajor(&mut c2, &a, &b, m, k, n);
+            if c1 == c2 {
+                Ok(())
+            } else {
+                Err(format!("kmajor diverged at m={m} k={k} n={n}"))
+            }
         });
     }
 

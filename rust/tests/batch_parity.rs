@@ -1,0 +1,170 @@
+//! Parity tests for the batch-first decode pipeline: `Engine::decode_batch`
+//! over concurrent sessions with *mixed* cache backends must reproduce the
+//! sequential `decode_step` path token-for-token (and logit-for-logit), and
+//! the batched cache entry points must match their sequential fallbacks.
+
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::{CacheShape, KvCache};
+use lexico::dict::{Dictionary, DictionarySet};
+use lexico::model::testutil::tiny_weights;
+use lexico::model::Engine;
+use lexico::tensor::argmax;
+use lexico::util::rng::Rng;
+
+fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+    Arc::new(DictionarySet {
+        keys: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 1000 + i as u64))
+            .collect(),
+        values: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 2000 + i as u64))
+            .collect(),
+    })
+}
+
+/// The serving scenario: ≥3 concurrent sessions, every session on a
+/// different cache backend with a different prompt length, advanced for 12
+/// rounds by `decode_batch` — tokens and logits must be identical to
+/// advancing each session alone with `decode_step`.
+#[test]
+fn decode_batch_reproduces_sequential_decode_across_mixed_backends() {
+    let engine = Engine::new(tiny_weights(60));
+    let dicts = tiny_dicts(engine.shape(), 64);
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let specs = [
+        "full",
+        "lexico:s=2,nb=8",
+        "lexico:s=2,nb=4,delta=0.4,fp16",
+        "lexico:s=1,nb=4,adaptive=16:0.35",
+        "kivi:bits=4,g=8,nb=8",
+        "pertoken:bits=8,g=8,nb=0",
+        "snapkv:cap=24,win=4",
+    ];
+    let mut rng = Rng::new(3);
+    let prompts: Vec<Vec<u32>> = (0..specs.len())
+        .map(|i| (0..16 + 5 * i).map(|_| 3 + rng.below(50) as u32).collect())
+        .collect();
+
+    // Sequential reference: each session advanced alone.
+    let mut seq_tokens: Vec<Vec<u32>> = Vec::new();
+    for (spec, prompt) in specs.iter().zip(&prompts) {
+        let mut cache = build_cache(spec, &ctx).unwrap();
+        let logits = engine.prefill(prompt, &mut *cache);
+        let mut tok = argmax(&logits) as u32;
+        let mut pos = prompt.len();
+        let mut toks = vec![tok];
+        for _ in 0..12 {
+            let logits = engine.decode_step(tok, pos, &mut *cache);
+            tok = argmax(&logits) as u32;
+            pos += 1;
+            toks.push(tok);
+        }
+        seq_tokens.push(toks);
+    }
+
+    // Batched run: all sessions advanced together, one decode_batch/round.
+    let mut caches: Vec<Box<dyn KvCache>> = Vec::new();
+    let mut toks: Vec<u32> = Vec::new();
+    let mut poss: Vec<usize> = Vec::new();
+    let mut bat_tokens: Vec<Vec<u32>> = Vec::new();
+    for (spec, prompt) in specs.iter().zip(&prompts) {
+        let mut cache = build_cache(spec, &ctx).unwrap();
+        let logits = engine.prefill(prompt, &mut *cache);
+        caches.push(cache);
+        toks.push(argmax(&logits) as u32);
+        poss.push(prompt.len());
+        bat_tokens.push(vec![*toks.last().unwrap()]);
+    }
+    for _round in 0..12 {
+        let mut refs: Vec<&mut dyn KvCache> =
+            caches.iter_mut().map(|c| &mut **c).collect();
+        let logits = engine.decode_batch(&toks, &poss, &mut refs);
+        drop(refs);
+        for i in 0..specs.len() {
+            toks[i] = argmax(&logits[i]) as u32;
+            poss[i] += 1;
+            bat_tokens[i].push(toks[i]);
+        }
+    }
+
+    for (i, spec) in specs.iter().enumerate() {
+        assert_eq!(
+            seq_tokens[i], bat_tokens[i],
+            "{spec}: batched decode diverged from sequential"
+        );
+    }
+    // compression still reported where expected
+    for (i, spec) in specs.iter().enumerate() {
+        if i > 0 && !spec.starts_with("pertoken:bits=8") {
+            assert!(caches[i].kv_ratio() < 1.0, "{spec} should compress");
+        }
+    }
+}
+
+/// The batched cache entry points must be observationally identical to
+/// their per-row fallbacks for every backend (trait-default or overridden).
+#[test]
+fn cache_batch_entry_points_match_sequential_for_every_backend() {
+    let shape = CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 8 };
+    let dicts = tiny_dicts(shape, 64);
+    let ctx = CacheContext { shape, dicts: Some(dicts) };
+    let specs = [
+        "full",
+        "lexico:s=2,nb=4",
+        "lexico:s=2,nb=4,fp16",
+        "kivi:bits=2,g=4,nb=4",
+        "pertoken:bits=4,g=8,nb=2",
+        "zipcache:hi=4,lo=2,g=8,frac=0.25,nb=4",
+        "snapkv:cap=24,win=4",
+        "pyramidkv:cap=24,win=4",
+    ];
+    let (kvd, qd) = (shape.kv_dim(), shape.q_dim());
+    for spec in specs {
+        let mut rng = Rng::new(77);
+        let mut seq = build_cache(spec, &ctx).unwrap();
+        let mut bat = build_cache(spec, &ctx).unwrap();
+        let n = 9;
+        let ks = rng.normal_vec(n * kvd);
+        let vs = rng.normal_vec(n * kvd);
+        for l in 0..shape.n_layers {
+            for i in 0..n {
+                seq.append(l, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+            }
+            bat.append_batch(l, &ks, &vs, n);
+        }
+        assert_eq!(seq.tokens(), bat.tokens(), "{spec}");
+        assert_eq!(seq.mem_bytes(), bat.mem_bytes(), "{spec}");
+        let b = 3;
+        let qs = rng.normal_vec(b * qd);
+        let mut o_seq = vec![0.0; b * qd];
+        let mut o_bat = vec![0.0; b * qd];
+        for l in 0..shape.n_layers {
+            for i in 0..b {
+                seq.attend(l, &qs[i * qd..(i + 1) * qd], &mut o_seq[i * qd..(i + 1) * qd]);
+            }
+            bat.attend_batch(l, &qs, &mut o_bat, b);
+            assert_eq!(o_seq, o_bat, "{spec}: attend_batch diverged at layer {l}");
+        }
+    }
+}
+
+/// decode_batch with a single session must equal decode_step outright —
+/// the B=1 degenerate case of the pipeline.
+#[test]
+fn decode_batch_b1_equals_decode_step() {
+    let engine = Engine::new(tiny_weights(61));
+    let ctx = CacheContext { shape: engine.shape(), dicts: None };
+    let prompt: Vec<u32> = vec![5, 6, 7, 8];
+    let mut c1 = build_cache("full", &ctx).unwrap();
+    let mut c2 = build_cache("full", &ctx).unwrap();
+    let l1 = engine.prefill(&prompt, &mut *c1);
+    let l2 = engine.prefill(&prompt, &mut *c2);
+    assert_eq!(l1, l2);
+    let tok = argmax(&l1) as u32;
+    let seq = engine.decode_step(tok, prompt.len(), &mut *c1);
+    let mut refs: Vec<&mut dyn KvCache> = vec![&mut *c2];
+    let bat = engine.decode_batch(&[tok], &[prompt.len()], &mut refs);
+    assert_eq!(seq, bat[0]);
+}
