@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         default_method: "lexico:s=6,nb=32".into(),
         kv_budget_bytes: 2.0 * 1024.0 * 1024.0,
         max_sessions: 16,
+        ..Default::default()
     };
     let (jtx, jrx) = channel();
     let (eng2, m2) = (engine.clone(), metrics.clone());
@@ -55,10 +56,11 @@ fn main() -> anyhow::Result<()> {
                 tasks::gen_arith_prompt(&mut rng, 3, 3)
             };
             let method = if i % 3 == 0 { "full" } else { "" };
+            let fanout = if i % 4 == 1 { 2 } else { 1 };
             let mut conn = TcpStream::connect(addr)?;
             writeln!(
                 conn,
-                r#"{{"prompt": "{}", "max_new": 6, "method": "{method}"}}"#,
+                r#"{{"prompt": "{}", "max_new": 6, "method": "{method}", "best_of": {fanout}}}"#,
                 inst.prompt.replace('\n', "\\n")
             )?;
             let mut line = String::new();
@@ -68,8 +70,9 @@ fn main() -> anyhow::Result<()> {
     }
     for h in handles {
         let (i, v) = h.join().unwrap()?;
+        let n_alts = v.get("alts").as_arr().map_or(0, |a| a.len());
         println!(
-            "req {i:>2}: {:>6.1} ms total, {:>6.1} ms TTFT, KV {:>5.1}%, reply {:?}",
+            "req {i:>2}: {:>6.1} ms total, {:>6.1} ms TTFT, KV {:>5.1}%, alts {n_alts}, reply {:?}",
             v.get("total_ms").as_f64().unwrap_or(0.0),
             v.get("ttft_ms").as_f64().unwrap_or(0.0),
             100.0 * v.get("kv_ratio").as_f64().unwrap_or(0.0),

@@ -2,6 +2,7 @@
 
 use super::{dense_attend, dense_attend_batch, CacheShape, KvCache};
 
+#[derive(Clone)]
 pub struct FullCache {
     shape: CacheShape,
     /// per-layer token-major K/V rows
@@ -72,6 +73,10 @@ impl KvCache for FullCache {
         let mut scores = std::mem::take(&mut self.scores);
         dense_attend_batch(&self.shape, &self.ks[layer], &self.vs[layer], t, qs, out, b, &mut scores);
         self.scores = scores;
+    }
+
+    fn fork(&self) -> Box<dyn KvCache> {
+        Box::new(self.clone())
     }
 
     fn tokens(&self) -> usize {

@@ -28,11 +28,13 @@ impl Default for KiviConfig {
 
 /// One quantized key block: `g` tokens × kv_dim channels, stored as one
 /// QuantGroup per channel (codes indexed by token-within-block).
+#[derive(Clone)]
 struct KeyBlock {
     per_channel: Vec<QuantGroup>, // [kv_dim]
     len: usize,                   // tokens in the block (== g)
 }
 
+#[derive(Clone)]
 struct LayerState {
     key_blocks: Vec<KeyBlock>,
     /// per-token quantized values, in token order
@@ -46,6 +48,7 @@ struct LayerState {
     buf_len: usize,
 }
 
+#[derive(Clone)]
 pub struct KiviCache {
     shape: CacheShape,
     cfg: KiviConfig,
@@ -209,6 +212,10 @@ impl KvCache for KiviCache {
         self.scores = scores;
         self.dk = dk;
         self.dv = dv;
+    }
+
+    fn fork(&self) -> Box<dyn KvCache> {
+        Box::new(self.clone())
     }
 
     fn tokens(&self) -> usize {

@@ -53,14 +53,78 @@ impl Default for LexicoConfig {
     }
 }
 
+/// Tokens per frozen CSR page. Compressed rows are immutable once written,
+/// so they are grouped into fixed-size pages behind an `Arc`: `fork()`
+/// clones the `Arc`s (copy-on-write at page granularity — forks share the
+/// compressed prefix physically) and only the unsealed tail plus the
+/// full-precision recency buffer are deep-copied per fork.
+const PAGE_TOKENS: usize = 32;
+
+/// One frozen page of compressed tokens: parallel K and V rows.
+#[derive(Clone, Default)]
+struct CsrPage {
+    k: Vec<CsrRow>,
+    v: Vec<CsrRow>,
+}
+
+impl CsrPage {
+    fn bytes(&self) -> f64 {
+        self.k.iter().chain(&self.v).map(|r| r.bytes() as f64).sum()
+    }
+}
+
 /// Per-(layer, kv-head) state.
 struct HeadState {
-    k_csr: Vec<CsrRow>,
-    v_csr: Vec<CsrRow>,
+    /// sealed compressed pages, oldest first — shared across forks
+    pages: Vec<Arc<CsrPage>>,
+    /// unsealed compressed rows (< PAGE_TOKENS of them) — fork-private
+    tail_k: Vec<CsrRow>,
+    tail_v: Vec<CsrRow>,
+    /// total compressed tokens (pages + tail)
+    n_csr: usize,
     /// token-major buffer rows, oldest first: [t][m]
     k_buf: Vec<f32>,
     v_buf: Vec<f32>,
     buf_len: usize,
+}
+
+impl HeadState {
+    /// Append one compressed token (K and V rows always arrive in pairs),
+    /// sealing a page whenever the tail fills.
+    fn push_csr(&mut self, k: CsrRow, v: CsrRow) {
+        self.tail_k.push(k);
+        self.tail_v.push(v);
+        self.n_csr += 1;
+        if self.tail_k.len() >= PAGE_TOKENS {
+            self.pages.push(Arc::new(CsrPage {
+                k: std::mem::take(&mut self.tail_k),
+                v: std::mem::take(&mut self.tail_v),
+            }));
+        }
+    }
+
+    /// Compressed K rows in token order (pages, then the unsealed tail).
+    fn k_rows(&self) -> impl Iterator<Item = &CsrRow> {
+        self.pages.iter().flat_map(|p| p.k.iter()).chain(self.tail_k.iter())
+    }
+
+    /// Compressed V rows in token order.
+    fn v_rows(&self) -> impl Iterator<Item = &CsrRow> {
+        self.pages.iter().flat_map(|p| p.v.iter()).chain(self.tail_v.iter())
+    }
+
+    /// Fork-private copy: pages shared by `Arc`, tail and buffer cloned.
+    fn fork(&self) -> HeadState {
+        HeadState {
+            pages: self.pages.clone(),
+            tail_k: self.tail_k.clone(),
+            tail_v: self.tail_v.clone(),
+            n_csr: self.n_csr,
+            k_buf: self.k_buf.clone(),
+            v_buf: self.v_buf.clone(),
+            buf_len: self.buf_len,
+        }
+    }
 }
 
 pub struct LexicoCache {
@@ -95,8 +159,10 @@ impl LexicoCache {
         assert_eq!(dicts.keys[0].m, m, "dict head_dim mismatch");
         let heads = (0..shape.n_layers * shape.n_kv_heads)
             .map(|_| HeadState {
-                k_csr: Vec::new(),
-                v_csr: Vec::new(),
+                pages: Vec::new(),
+                tail_k: Vec::new(),
+                tail_v: Vec::new(),
+                n_csr: 0,
                 k_buf: Vec::new(),
                 v_buf: Vec::new(),
                 buf_len: 0,
@@ -184,8 +250,7 @@ impl LexicoCache {
                     let k_row = self.encode(layer, true, &k);
                     let v_row = self.encode(layer, false, &v);
                     let h = &mut self.heads[hi];
-                    h.k_csr.push(k_row);
-                    h.v_csr.push(v_row);
+                    h.push_csr(k_row, v_row);
                     h.k_buf.drain(..m);
                     h.v_buf.drain(..m);
                     h.buf_len -= 1;
@@ -221,8 +286,10 @@ impl LexicoCache {
             let h = &mut self.heads[hi];
             for code_i in off..off + take {
                 let (kc, vc) = (&k_codes[code_i], &v_codes[code_i]);
-                h.k_csr.push(CsrRow::from_f32(&kc.idx, &kc.val, prec));
-                h.v_csr.push(CsrRow::from_f32(&vc.idx, &vc.val, prec));
+                h.push_csr(
+                    CsrRow::from_f32(&kc.idx, &kc.val, prec),
+                    CsrRow::from_f32(&vc.idx, &vc.val, prec),
+                );
             }
             h.k_buf.drain(..take * m);
             h.v_buf.drain(..take * m);
@@ -393,13 +460,13 @@ impl KvCache for LexicoCache {
             let g = h / self.shape.group();
             let hi = self.head_idx(layer, g);
             let head = &self.heads[hi];
-            let tc = head.k_csr.len();
+            let tc = head.n_csr;
             let tb = head.buf_len;
             let qh = &q[h * m..(h + 1) * m];
             let qd = &self.qd[h * k_n..(h + 1) * k_n];
             // compressed scores: O(T·s)
             self.scores.resize(tc + tb, 0.0);
-            for (ti, row) in head.k_csr.iter().enumerate() {
+            for (ti, row) in head.k_rows().enumerate() {
                 let mut sc = 0.0;
                 for j in 0..row.nnz() {
                     sc += qd[row.idx[j] as usize] * row.coef(j);
@@ -417,7 +484,7 @@ impl KvCache for LexicoCache {
             let oh = &mut out[h * m..(h + 1) * m];
             let z = &mut self.z[..v_n];
             z.fill(0.0);
-            for (ti, row) in head.v_csr.iter().enumerate() {
+            for (ti, row) in head.v_rows().enumerate() {
                 let w = self.scores[ti];
                 for j in 0..row.nnz() {
                     z[row.idx[j] as usize] += w * row.coef(j);
@@ -483,7 +550,7 @@ impl KvCache for LexicoCache {
         for _qi in 0..b {
             for h in 0..n_heads {
                 let hi = self.head_idx(layer, h / group);
-                let len = self.heads[hi].k_csr.len() + self.heads[hi].buf_len;
+                let len = self.heads[hi].n_csr + self.heads[hi].buf_len;
                 let prev = *self.score_off.last().unwrap();
                 self.score_off.push(prev + len);
             }
@@ -501,12 +568,12 @@ impl KvCache for LexicoCache {
                 let row = qi * n_heads + h;
                 let hi = self.head_idx(layer, h / group);
                 let head = &self.heads[hi];
-                let tc = head.k_csr.len();
+                let tc = head.n_csr;
                 let tb = head.buf_len;
                 let off = self.score_off[row];
                 let qh = &qs[qi * qdim + h * m..qi * qdim + (h + 1) * m];
                 let qdrow = &self.qd[row * k_n..(row + 1) * k_n];
-                for (ti, csr) in head.k_csr.iter().enumerate() {
+                for (ti, csr) in head.k_rows().enumerate() {
                     let mut sc = 0.0;
                     for j in 0..csr.nnz() {
                         sc += qdrow[csr.idx[j] as usize] * csr.coef(j);
@@ -519,7 +586,7 @@ impl KvCache for LexicoCache {
                 }
                 softmax(&mut self.scores[off..off + tc + tb]);
                 let z = &mut self.z[row * v_n..(row + 1) * v_n];
-                for (ti, csr) in head.v_csr.iter().enumerate() {
+                for (ti, csr) in head.v_rows().enumerate() {
                     let w = self.scores[off + ti];
                     for j in 0..csr.nnz() {
                         z[csr.idx[j] as usize] += w * csr.coef(j);
@@ -550,7 +617,7 @@ impl KvCache for LexicoCache {
                 let row = qi * n_heads + h;
                 let hi = self.head_idx(layer, h / group);
                 let head = &self.heads[hi];
-                let tc = head.k_csr.len();
+                let tc = head.n_csr;
                 let off = self.score_off[row];
                 let oh = &mut out[qi * qdim + h * m..qi * qdim + (h + 1) * m];
                 for ti in 0..head.buf_len {
@@ -558,6 +625,53 @@ impl KvCache for LexicoCache {
                 }
             }
         }
+    }
+
+    /// Copy-on-write fork: sealed CSR pages are shared (`Arc` clone), the
+    /// unsealed tail, recency buffer, token counter and adaptive overlays
+    /// are deep-copied, and scratch/workspaces start fresh (they carry no
+    /// semantic state — OMP results are workspace-independent). Continuing
+    /// either copy is bitwise identical to continuing the original.
+    fn fork(&self) -> Box<dyn KvCache> {
+        let n = self.dicts.keys[0].n;
+        let m = self.shape.head_dim;
+        let n_cap = n + self.cfg.adaptive.map(|(e, _)| e).unwrap_or(0);
+        Box::new(LexicoCache {
+            shape: self.shape,
+            ws: OmpWorkspace::new(n_cap, m, self.cfg.sparsity.max(1)),
+            bws: BatchOmpWorkspace::new(),
+            cfg: self.cfg.clone(),
+            dicts: self.dicts.clone(),
+            adaptive_k: self.adaptive_k.clone(),
+            adaptive_v: self.adaptive_v.clone(),
+            heads: self.heads.iter().map(|h| h.fork()).collect(),
+            tokens: self.tokens,
+            gather_k: Vec::new(),
+            gather_v: Vec::new(),
+            scores: Vec::new(),
+            qd: vec![0.0; n_cap],
+            z: vec![0.0; n_cap],
+            score_off: Vec::new(),
+        })
+    }
+
+    /// Bytes living in pages whose `Arc` is held by more than one cache —
+    /// the physically shared compressed prefix. Charged once by the page
+    /// owner (prefix-cache prototype or primary fan-out candidate).
+    fn shared_prefix_bytes(&self) -> f64 {
+        self.heads
+            .iter()
+            .flat_map(|h| &h.pages)
+            .filter(|p| Arc::strong_count(p) > 1)
+            .map(|p| p.bytes())
+            .sum()
+    }
+
+    /// Adaptive dictionaries grow per encoded vector, so the encode *order*
+    /// matters and split prefill diverges; the plain universal-dictionary
+    /// path compresses vector-by-vector independently.
+    fn split_prefill_exact(&self) -> bool {
+        self.cfg.adaptive.is_none()
     }
 
     fn tokens(&self) -> usize {
@@ -568,7 +682,7 @@ impl KvCache for LexicoCache {
         let m = self.shape.head_dim;
         let mut bytes = 0.0;
         for head in &self.heads {
-            for row in head.k_csr.iter().chain(&head.v_csr) {
+            for row in head.k_rows().chain(head.v_rows()) {
                 bytes += row.bytes() as f64;
             }
             bytes += (head.buf_len * 2 * m * 2) as f64; // buffer @ FP16
@@ -626,7 +740,7 @@ mod tests {
         // 10 tokens, buffer 4 → 6 compressed per head
         let h = &c.heads[0];
         assert_eq!(h.buf_len, 4);
-        assert_eq!(h.k_csr.len(), 6);
+        assert_eq!(h.n_csr, 6);
         assert!(c.kv_ratio() < 1.0);
         assert_eq!(c.tokens(), 10);
     }
@@ -706,8 +820,8 @@ mod tests {
             assert_eq!(seq.tokens(), bat.tokens());
             for (hs, hb) in seq.heads.iter().zip(&bat.heads) {
                 assert_eq!(hs.buf_len, hb.buf_len, "na={na}");
-                assert_eq!(hs.k_csr.len(), hb.k_csr.len(), "na={na}");
-                for (a, b) in hs.k_csr.iter().zip(&hb.k_csr) {
+                assert_eq!(hs.n_csr, hb.n_csr, "na={na}");
+                for (a, b) in hs.k_rows().zip(hb.k_rows()) {
                     assert_eq!(a.idx, b.idx, "na={na}");
                     assert_eq!(a.coef_bits, b.coef_bits, "na={na}");
                 }
@@ -741,7 +855,7 @@ mod tests {
             c.ingest_prefill(l, &ks, &vs, t, &[], 0);
         }
         assert_eq!(c.heads[0].buf_len, 3);
-        assert_eq!(c.heads[0].k_csr.len(), 6);
+        assert_eq!(c.heads[0].n_csr, 6);
         assert_eq!(c.tokens(), t);
     }
 
@@ -762,6 +876,111 @@ mod tests {
         let per_head = 4 * (3 * 4 + 2) * 2 + 2 * 2 * 16 * 2;
         let total = per_head * shape.n_layers * shape.n_kv_heads;
         assert_eq!(c.mem_bytes(), total as f64);
+    }
+
+    #[test]
+    fn fork_shares_sealed_pages_and_stays_bitwise_identical() {
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 2, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(17);
+        // enough appends to seal at least one PAGE_TOKENS page per head
+        for _ in 0..PAGE_TOKENS + 8 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        assert!(!c.heads[0].pages.is_empty());
+        assert_eq!(c.shared_prefix_bytes(), 0.0, "no forks yet → nothing shared");
+
+        let mut f = c.fork();
+        assert_eq!(f.tokens(), c.tokens());
+        assert_eq!(f.mem_bytes(), c.mem_bytes());
+        assert!(c.shared_prefix_bytes() > 0.0, "sealed pages now shared");
+        assert_eq!(f.shared_prefix_bytes(), c.shared_prefix_bytes());
+        assert!(
+            f.shared_prefix_bytes() < f.mem_bytes(),
+            "tail + buffer stay private"
+        );
+
+        // identical continuations must match bitwise
+        let q = rng.normal_vec(shape.q_dim());
+        let (mut o1, mut o2) = (vec![0.0; shape.q_dim()], vec![0.0; shape.q_dim()]);
+        c.attend(0, &q, &mut o1);
+        f.attend(0, &q, &mut o2);
+        assert_eq!(o1, o2, "fork attend diverged");
+        let k = rng.normal_vec(shape.kv_dim());
+        let v = rng.normal_vec(shape.kv_dim());
+        for l in 0..shape.n_layers {
+            c.append(l, &k, &v);
+            f.append(l, &k, &v);
+        }
+        c.attend(1, &q, &mut o1);
+        f.attend(1, &q, &mut o2);
+        assert_eq!(o1, o2, "fork diverged after post-fork appends");
+
+        // divergent continuation of the fork must not disturb the original
+        let before = o1.clone();
+        let k2 = rng.normal_vec(shape.kv_dim());
+        let v2 = rng.normal_vec(shape.kv_dim());
+        f.append(1, &k2, &v2);
+        c.attend(1, &q, &mut o1);
+        assert_eq!(o1, before, "fork mutation leaked into the original");
+
+        // dropping the fork releases the sharing
+        drop(f);
+        assert_eq!(c.shared_prefix_bytes(), 0.0);
+    }
+
+    #[test]
+    fn split_prefill_matches_cold_prefill_bitwise() {
+        // ingest(prefix) + ingest(suffix) must equal ingest(prefix++suffix)
+        // for the non-adaptive configs (the prefix-cache contract).
+        for cfg in [
+            LexicoConfig { sparsity: 4, n_buffer: 3, ..Default::default() },
+            LexicoConfig {
+                sparsity: 4,
+                n_buffer: 3,
+                precision: CoefPrecision::Fp16,
+                ..Default::default()
+            },
+        ] {
+            let (shape, mut cold) = setup(64, cfg.clone());
+            assert!(cold.split_prefill_exact());
+            let (_, mut split) = setup(64, cfg);
+            let mut rng = Rng::new(23);
+            let (tp, ts) = (9, 5);
+            let ks = rng.normal_vec((tp + ts) * shape.kv_dim());
+            let vs = rng.normal_vec((tp + ts) * shape.kv_dim());
+            let cut = tp * shape.kv_dim();
+            for l in 0..shape.n_layers {
+                cold.ingest_prefill(l, &ks, &vs, tp + ts, &[], 0);
+                split.ingest_prefill(l, &ks[..cut], &vs[..cut], tp, &[], 0);
+                split.ingest_prefill(l, &ks[cut..], &vs[cut..], ts, &[], 0);
+            }
+            assert_eq!(cold.tokens(), split.tokens());
+            assert_eq!(cold.mem_bytes(), split.mem_bytes());
+            for (hc, hs) in cold.heads.iter().zip(&split.heads) {
+                assert_eq!(hc.n_csr, hs.n_csr);
+                for (a, b) in hc.k_rows().zip(hs.k_rows()) {
+                    assert_eq!((&a.idx, &a.coef_bits), (&b.idx, &b.coef_bits));
+                }
+                for (a, b) in hc.v_rows().zip(hs.v_rows()) {
+                    assert_eq!((&a.idx, &a.coef_bits), (&b.idx, &b.coef_bits));
+                }
+                assert_eq!(hc.k_buf, hs.k_buf);
+                assert_eq!(hc.v_buf, hs.v_buf);
+            }
+        }
+        // adaptive mode must *declare* itself split-inexact
+        let (_, c) = setup(16, LexicoConfig {
+            sparsity: 2,
+            n_buffer: 2,
+            adaptive: Some((8, 0.1)),
+            ..Default::default()
+        });
+        assert!(!c.split_prefill_exact());
     }
 
     #[test]
@@ -786,7 +1005,7 @@ mod tests {
         let base_mem: f64 = c
             .heads
             .iter()
-            .flat_map(|h| h.k_csr.iter().chain(&h.v_csr))
+            .flat_map(|h| h.k_rows().chain(h.v_rows()).collect::<Vec<_>>())
             .map(|r| r.bytes() as f64)
             .sum::<f64>();
         assert!(c.mem_bytes() > base_mem, "adaptive atoms not charged");

@@ -109,6 +109,38 @@ pub trait KvCache: Send {
         }
     }
 
+    /// Clone this cache into an independent session. The fork must be
+    /// *observationally identical* to the original: continuing either copy
+    /// (append/attend/decode) produces bitwise-identical results, and
+    /// mutating one copy never affects the other. Backends with immutable
+    /// compressed state may share it between forks (Lexico shares its
+    /// frozen CSR pages behind an `Arc` — copy-on-write at page
+    /// granularity), in which case [`KvCache::shared_prefix_bytes`] reports
+    /// the shared portion so admission control can charge it once.
+    fn fork(&self) -> Box<dyn KvCache>;
+
+    /// Bytes of [`KvCache::mem_bytes`] that are physically shared with at
+    /// least one other live fork of this cache (0 for backends whose fork
+    /// is a deep copy). The serving budget charges shared bytes once — at
+    /// the owner that created them — and each fork only its private rest.
+    fn shared_prefix_bytes(&self) -> f64 {
+        0.0
+    }
+
+    /// Whether `ingest_prefill(prefix)` followed by `ingest_prefill(suffix)`
+    /// leaves state bitwise identical to one `ingest_prefill(prefix ++
+    /// suffix)` call. True for backends whose compression decisions depend
+    /// only on token order (full, lexico without adaptive dictionaries,
+    /// kivi, pertoken); false where prefill-time *score state* spans the
+    /// whole prompt (snapkv/pyramidkv eviction, zipcache salience) or the
+    /// dictionary mutates per encode (adaptive lexico). The batcher's
+    /// shared-prefix cache only serves methods where this holds, so a
+    /// prefix-cache hit stays token-identical to a cold full-prompt
+    /// prefill.
+    fn split_prefill_exact(&self) -> bool {
+        true
+    }
+
     /// Logical tokens seen (including evicted ones).
     fn tokens(&self) -> usize;
 

@@ -7,6 +7,7 @@
 use super::{dense_attend, CacheShape, KvCache};
 use crate::quant::{dequantize_vector, quantize_vector, QuantGroup};
 
+#[derive(Clone)]
 pub struct PerTokenConfig {
     pub bits: u8,
     pub group: usize,
@@ -20,6 +21,7 @@ impl Default for PerTokenConfig {
     }
 }
 
+#[derive(Clone)]
 struct LayerState {
     /// quantized tokens, token-major: each entry = groups for K followed by V
     qk: Vec<Vec<QuantGroup>>,
@@ -30,6 +32,7 @@ struct LayerState {
     buf_len: usize,
 }
 
+#[derive(Clone)]
 pub struct PerTokenCache {
     shape: CacheShape,
     cfg: PerTokenConfig,
@@ -133,6 +136,10 @@ impl KvCache for PerTokenCache {
         self.scores = scores;
         self.dk = dk;
         self.dv = dv;
+    }
+
+    fn fork(&self) -> Box<dyn KvCache> {
+        Box::new(self.clone())
     }
 
     fn tokens(&self) -> usize {

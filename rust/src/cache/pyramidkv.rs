@@ -23,6 +23,7 @@ impl Default for PyramidKvConfig {
     }
 }
 
+#[derive(Clone)]
 pub struct PyramidKvCache {
     shape: CacheShape,
     cfg: PyramidKvConfig,
@@ -85,6 +86,16 @@ impl KvCache for PyramidKvCache {
         let mut scores = std::mem::take(&mut self.scores);
         dense_attend(&self.shape, &st.ks, &st.vs, st.kept, q, out, &mut scores);
         self.scores = scores;
+    }
+
+    fn fork(&self) -> Box<dyn KvCache> {
+        Box::new(self.clone())
+    }
+
+    /// Same reasoning as SnapKV: per-layer eviction budgets apply to the
+    /// whole prompt at once.
+    fn split_prefill_exact(&self) -> bool {
+        false
     }
 
     fn tokens(&self) -> usize {

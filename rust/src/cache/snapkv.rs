@@ -27,12 +27,14 @@ impl Default for SnapKvConfig {
     }
 }
 
+#[derive(Clone)]
 pub(super) struct LayerState {
     pub ks: Vec<f32>, // retained tokens, token-major [t][kv_dim]
     pub vs: Vec<f32>,
     pub kept: usize,
 }
 
+#[derive(Clone)]
 pub struct SnapKvCache {
     shape: CacheShape,
     cfg: SnapKvConfig,
@@ -174,6 +176,20 @@ impl KvCache for SnapKvCache {
         let mut scores = std::mem::take(&mut self.scores);
         dense_attend(&self.shape, &st.ks, &st.vs, st.kept, q, out, &mut scores);
         self.scores = scores;
+    }
+
+    /// Forks carry the retained-token state (the eviction outcome) with
+    /// them; decode-time appends after the fork stay per-fork.
+    fn fork(&self) -> Box<dyn KvCache> {
+        Box::new(self.clone())
+    }
+
+    /// Eviction selects the top tokens of the *whole* prompt under one
+    /// capacity; ingesting the prompt in two pieces applies the budget to
+    /// each piece separately, so split prefill is not bitwise-reproducible
+    /// once the prompt exceeds capacity.
+    fn split_prefill_exact(&self) -> bool {
+        false
     }
 
     fn tokens(&self) -> usize {

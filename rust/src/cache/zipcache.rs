@@ -26,6 +26,7 @@ impl Default for ZipCacheConfig {
     }
 }
 
+#[derive(Clone)]
 struct LayerState {
     qk: Vec<Vec<QuantGroup>>,
     qv: Vec<Vec<QuantGroup>>,
@@ -38,6 +39,7 @@ struct LayerState {
     exposure: Vec<f32>,
 }
 
+#[derive(Clone)]
 pub struct ZipCache {
     shape: CacheShape,
     cfg: ZipCacheConfig,
@@ -186,6 +188,19 @@ impl KvCache for ZipCache {
         for ti in 0..t {
             st.exposure[ti] += 1.0;
         }
+    }
+
+    /// Forks carry the accumulated salience/exposure statistics with them,
+    /// so a fork's future spill decisions match the original's exactly.
+    fn fork(&self) -> Box<dyn KvCache> {
+        Box::new(self.clone())
+    }
+
+    /// Salience accumulates across the *whole* prompt before prefill spill
+    /// decisions are made; splitting the prompt changes the statistics at
+    /// spill time, so split prefill is not bitwise-reproducible.
+    fn split_prefill_exact(&self) -> bool {
+        false
     }
 
     fn tokens(&self) -> usize {

@@ -12,6 +12,10 @@ use crate::omp::{omp_encode, rel_error, OmpWorkspace, SparseCode};
 use crate::tensor::norm2;
 
 /// A universal dictionary plus session-local adaptive atoms.
+///
+/// `Clone` deep-copies the atom storage: adaptive growth is session
+/// state, so a forked session keeps its own overlay from the fork point.
+#[derive(Clone)]
 pub struct AdaptiveDict {
     /// base + added atoms, atom-major (base occupies the prefix)
     atoms: Vec<f32>,

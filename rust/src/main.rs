@@ -117,6 +117,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         default_method: args.get("method", "lexico:s=8,nb=32"),
         kv_budget_bytes: args.get("budget-mb", "64").parse::<f64>()? * 1024.0 * 1024.0,
         max_sessions: args.get("max-sessions", "32").parse()?,
+        prefix_entries: args.get("prefix-entries", "8").parse()?,
+        prefix_min_tokens: args.get("prefix-min-tokens", "8").parse()?,
+        max_fanout: args.get("max-fanout", "8").parse()?,
     };
     let addr = args.get("addr", "127.0.0.1:7077");
     let metrics = Arc::new(Mutex::new(Metrics::new()));

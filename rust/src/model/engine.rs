@@ -101,6 +101,44 @@ pub struct Engine {
 /// observation window (SnapKV/PyramidKV); bounded by the prompt length.
 pub const OBS_WINDOW: usize = 8;
 
+/// Captured prefill state for shared-prefix serving: the dense per-layer
+/// K/V rows (post-RoPE — exactly the arrays prefill hands to the cache)
+/// plus the last-token logits. The server's prefix cache stores one of
+/// these per cached prompt prefix; a later request that shares the prefix
+/// runs [`Engine::prefill_suffix`], whose suffix tokens attend in full
+/// precision over these rows. Because the stored rows *are* the rows a
+/// cold prefill of the full prompt would compute, the suffix pass
+/// reproduces the cold computation bit for bit while doing zero
+/// transformer work (matmuls, attention, OMP compression) on the prefix.
+#[derive(Clone)]
+pub struct PrefixState {
+    /// the prefix token ids (used for longest-prefix matching)
+    pub tokens: Vec<u32>,
+    /// per layer, token-major `[t][kv_dim]`, RoPE already applied
+    pub ks: Vec<Vec<f32>>,
+    /// per layer, token-major `[t][kv_dim]`
+    pub vs: Vec<Vec<f32>>,
+    /// logits of the last prefix token (exact-hit fast path)
+    pub logits: Vec<f32>,
+}
+
+impl PrefixState {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Resident bytes of the stored dense rows (f32), charged against the
+    /// serving KV budget while the entry lives in the prefix cache.
+    pub fn bytes(&self) -> f64 {
+        let rows: usize = self.ks.iter().chain(&self.vs).map(Vec::len).sum();
+        ((rows + self.logits.len()) * 4) as f64
+    }
+}
+
 impl Engine {
     pub fn new(weights: Weights) -> Self {
         let cfg = weights.cfg;
@@ -138,9 +176,76 @@ impl Engine {
     /// handing each layer's K/V states (plus the last-`OBS_WINDOW` queries)
     /// to the cache. Returns the logits of the last prompt token.
     pub fn prefill(&self, tokens: &[u32], cache: &mut dyn KvCache) -> Vec<f32> {
+        self.prefill_part(None, tokens, cache, false).0
+    }
+
+    /// [`Engine::prefill`] that also captures the dense per-layer K/V rows
+    /// as a [`PrefixState`] for the shared-prefix cache. The capture is a
+    /// pure copy of arrays the prefill computes anyway, so the returned
+    /// logits — and the cache state — are bitwise identical to `prefill`.
+    pub fn prefill_capture(
+        &self,
+        tokens: &[u32],
+        cache: &mut dyn KvCache,
+    ) -> (Vec<f32>, PrefixState) {
+        let (logits, state) = self.prefill_part(None, tokens, cache, true);
+        (logits, state.expect("capture requested"))
+    }
+
+    /// Prefill only `suffix`, resuming after a cached prefix: suffix tokens
+    /// attend in full precision over the stored prefix K/V rows plus each
+    /// other (causally), and the cache — which must already hold the prefix
+    /// (typically a fork of the prefix prototype) — ingests the suffix
+    /// rows only. For backends whose [`KvCache::split_prefill_exact`]
+    /// holds, the resulting cache state and logits are bitwise identical
+    /// to a cold [`Engine::prefill`] of `prefix ++ suffix`; the prefix
+    /// itself costs zero transformer work here. An empty suffix returns
+    /// the stored prefix logits untouched.
+    pub fn prefill_suffix(
+        &self,
+        prefix: &PrefixState,
+        suffix: &[u32],
+        cache: &mut dyn KvCache,
+    ) -> Vec<f32> {
+        self.prefill_part(Some(prefix), suffix, cache, false).0
+    }
+
+    /// [`Engine::prefill_suffix`] that also captures the *extended* state
+    /// (prefix rows ++ suffix rows) so the longer prompt can itself be
+    /// inserted into the prefix cache.
+    pub fn prefill_suffix_capture(
+        &self,
+        prefix: &PrefixState,
+        suffix: &[u32],
+        cache: &mut dyn KvCache,
+    ) -> (Vec<f32>, PrefixState) {
+        let (logits, state) = self.prefill_part(Some(prefix), suffix, cache, true);
+        (logits, state.expect("capture requested"))
+    }
+
+    /// Shared prefill core. With `prefix = None` this is the cold path
+    /// (tokens are the whole prompt); with a prefix it is the resume path.
+    /// Loop structure and accumulation order are identical in both cases —
+    /// the prefix rows simply occupy score slots `0..p0` — so resume is
+    /// bitwise equal to cold on the overlapping computation.
+    fn prefill_part(
+        &self,
+        prefix: Option<&PrefixState>,
+        tokens: &[u32],
+        cache: &mut dyn KvCache,
+        capture: bool,
+    ) -> (Vec<f32>, Option<PrefixState>) {
         let cfg = self.weights.cfg;
+        let p0 = prefix.map_or(0, |p| p.len());
         let t = tokens.len();
-        assert!(t > 0 && t <= cfg.max_seq, "prompt length {t}");
+        if t == 0 {
+            let p = prefix.expect("prefill of zero tokens without a prefix");
+            return (p.logits.clone(), capture.then(|| p.clone()));
+        }
+        assert!(p0 + t <= cfg.max_seq, "prompt length {}", p0 + t);
+        if let Some(p) = prefix {
+            assert_eq!(p.ks.len(), cfg.n_layers, "prefix state layer mismatch");
+        }
         let d = cfg.d_model;
         let m = cfg.head_dim;
         let (qd, kvd) = (cfg.q_dim(), cfg.kv_dim());
@@ -157,9 +262,11 @@ impl Engine {
         let mut v = vec![0.0; t * kvd];
         let mut attn = vec![0.0; t * qd];
         let mut proj = vec![0.0; t * d];
-        let mut scores = vec![0.0; t];
+        let mut scores = vec![0.0; p0 + t];
         let mut ff1 = vec![0.0; t * cfg.d_ff];
         let mut ff3 = vec![0.0; t * cfg.d_ff];
+        let mut cap_ks: Vec<Vec<f32>> = Vec::new();
+        let mut cap_vs: Vec<Vec<f32>> = Vec::new();
 
         for (li, lw) in self.weights.layers.iter().enumerate() {
             for ti in 0..t {
@@ -170,28 +277,44 @@ impl Engine {
             matmul(&mut v, &h, &lw.wv, t, d, kvd);
             for ti in 0..t {
                 for hh in 0..cfg.n_heads {
-                    self.rope.apply(&mut q[ti * qd + hh * m..ti * qd + (hh + 1) * m], ti);
+                    self.rope.apply(&mut q[ti * qd + hh * m..ti * qd + (hh + 1) * m], p0 + ti);
                 }
                 for g in 0..cfg.n_kv_heads {
-                    self.rope.apply(&mut k[ti * kvd + g * m..ti * kvd + (g + 1) * m], ti);
+                    self.rope.apply(&mut k[ti * kvd + g * m..ti * kvd + (g + 1) * m], p0 + ti);
                 }
             }
-            // full-precision causal attention (paper: prefill attends in FP)
+            // full-precision causal attention (paper: prefill attends in
+            // FP); prefix rows fill score slots 0..p0
+            let (pks, pvs): (&[f32], &[f32]) = match prefix {
+                Some(p) => (&p.ks[li], &p.vs[li]),
+                None => (&[], &[]),
+            };
             attn.fill(0.0);
             for hh in 0..cfg.n_heads {
                 let g = hh / cfg.group();
                 for ti in 0..t {
                     let qrow = &q[ti * qd + hh * m..ti * qd + (hh + 1) * m];
-                    for tj in 0..=ti {
+                    for tj in 0..p0 {
                         scores[tj] =
+                            dot(qrow, &pks[tj * kvd + g * m..tj * kvd + (g + 1) * m]) * scale;
+                    }
+                    for tj in 0..=ti {
+                        scores[p0 + tj] =
                             dot(qrow, &k[tj * kvd + g * m..tj * kvd + (g + 1) * m]) * scale;
                     }
-                    softmax(&mut scores[..=ti]);
+                    softmax(&mut scores[..p0 + ti + 1]);
                     let orow = &mut attn[ti * qd + hh * m..ti * qd + (hh + 1) * m];
-                    for tj in 0..=ti {
+                    for tj in 0..p0 {
                         crate::tensor::axpy(
                             orow,
                             scores[tj],
+                            &pvs[tj * kvd + g * m..tj * kvd + (g + 1) * m],
+                        );
+                    }
+                    for tj in 0..=ti {
+                        crate::tensor::axpy(
+                            orow,
+                            scores[p0 + tj],
                             &v[tj * kvd + g * m..tj * kvd + (g + 1) * m],
                         );
                     }
@@ -200,6 +323,16 @@ impl Engine {
             // hand the layer's KV states + observation-window queries over
             let w = OBS_WINDOW.min(t);
             cache.ingest_prefill(li, &k, &v, t, &q[(t - w) * qd..], w);
+            if capture {
+                let mut kk = Vec::with_capacity((p0 + t) * kvd);
+                let mut vv = Vec::with_capacity((p0 + t) * kvd);
+                kk.extend_from_slice(pks);
+                kk.extend_from_slice(&k);
+                vv.extend_from_slice(pvs);
+                vv.extend_from_slice(&v);
+                cap_ks.push(kk);
+                cap_vs.push(vv);
+            }
 
             matmul(&mut proj, &attn, &lw.wo, t, qd, d);
             for i in 0..t * d {
@@ -222,7 +355,13 @@ impl Engine {
         let last = &x[(t - 1) * d..t * d];
         let mut hn = vec![0.0; d];
         rmsnorm(&mut hn, last, &self.weights.lnf, RMS_EPS);
-        self.logits(&hn)
+        let logits = self.logits(&hn);
+        let state = capture.then(|| {
+            let mut ids = prefix.map_or_else(Vec::new, |p| p.tokens.clone());
+            ids.extend_from_slice(tokens);
+            PrefixState { tokens: ids, ks: cap_ks, vs: cap_vs, logits: logits.clone() }
+        });
+        (logits, state)
     }
 
     /// One decode step: token at absolute position `pos` (0-based).
@@ -493,6 +632,61 @@ pub mod tests {
                 poss[i] += 1;
             }
         }
+    }
+
+    #[test]
+    fn prefill_suffix_reproduces_cold_prefill_bitwise() {
+        let eng = Engine::new(tiny_weights(12));
+        let toks: Vec<u32> = vec![1, 4, 7, 2, 9, 3, 8, 5];
+        let mut cold = FullCache::new(eng.shape());
+        let l_cold = eng.prefill(&toks, &mut cold);
+
+        let mut c_pref = FullCache::new(eng.shape());
+        let (l_pref, state) = eng.prefill_capture(&toks[..5], &mut c_pref);
+        // capture must not perturb the prefix prefill itself
+        let mut c_plain = FullCache::new(eng.shape());
+        assert_eq!(l_pref, eng.prefill(&toks[..5], &mut c_plain));
+        assert_eq!(state.len(), 5);
+        assert_eq!(state.logits, l_pref);
+        assert!(state.bytes() > 0.0);
+
+        let l_suf = eng.prefill_suffix(&state, &toks[5..], &mut c_pref);
+        assert_eq!(l_cold, l_suf, "suffix prefill logits diverged from cold");
+        // decode continuations must match bitwise too
+        let t1 = argmax(&l_cold) as u32;
+        let a = eng.decode_step(t1, toks.len(), &mut cold);
+        let b = eng.decode_step(t1, toks.len(), &mut c_pref);
+        assert_eq!(a, b, "post-suffix decode diverged");
+
+        // empty suffix: stored logits, cache untouched
+        let mut c0 = FullCache::new(eng.shape());
+        let _ = eng.prefill(&toks[..5], &mut c0);
+        let before = c0.tokens();
+        assert_eq!(eng.prefill_suffix(&state, &[], &mut c0), state.logits);
+        assert_eq!(c0.tokens(), before);
+    }
+
+    #[test]
+    fn prefill_suffix_capture_extends_the_state() {
+        let eng = Engine::new(tiny_weights(13));
+        let toks: Vec<u32> = vec![2, 5, 8, 3, 6, 9, 4];
+        let kvd = eng.shape().kv_dim();
+        let mut c1 = FullCache::new(eng.shape());
+        let (_, st1) = eng.prefill_capture(&toks[..4], &mut c1);
+        let (l2, st2) = eng.prefill_suffix_capture(&st1, &toks[4..], &mut c1);
+        assert_eq!(st2.tokens, toks);
+        for li in 0..eng.shape().n_layers {
+            assert_eq!(st2.ks[li].len(), toks.len() * kvd);
+            assert_eq!(st2.vs[li].len(), toks.len() * kvd);
+            // the extended state's prefix rows are exactly the old state's
+            assert_eq!(&st2.ks[li][..4 * kvd], &st1.ks[li][..]);
+        }
+        // and it must equal a cold capture of the full prompt
+        let mut c2 = FullCache::new(eng.shape());
+        let (l_cold, st_cold) = eng.prefill_capture(&toks, &mut c2);
+        assert_eq!(l2, l_cold);
+        assert_eq!(st2.ks, st_cold.ks);
+        assert_eq!(st2.vs, st_cold.vs);
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod engine;
 pub mod testutil;
 pub mod weights;
 
-pub use engine::Engine;
+pub use engine::{Engine, PrefixState};
 pub use weights::{ModelConfig, Weights};

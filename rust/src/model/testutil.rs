@@ -7,10 +7,24 @@ use crate::util::rng::Rng;
 /// real tokenizer's vocab. Deterministic in `seed`; used wherever a test
 /// needs a functioning engine without the trained artifacts.
 pub fn tiny_weights(seed: u64) -> Weights {
-    let cfg = ModelConfig {
+    tiny_weights_cfg(seed, ModelConfig {
         n_layers: 2, d_model: 16, n_heads: 2, n_kv_heads: 1,
         head_dim: 8, d_ff: 32, vocab: crate::tasks::vocab_size(), max_seq: 128,
-    };
+    })
+}
+
+/// A second, deeper test model (4L, d=32, 4 heads / 2 kv heads, m=8) — the
+/// "M"-shaped fixture the golden-transcript suite pins alongside the 2L
+/// one, so regressions that only bite GQA grouping or deeper stacks show.
+pub fn tiny_weights_deep(seed: u64) -> Weights {
+    tiny_weights_cfg(seed, ModelConfig {
+        n_layers: 4, d_model: 32, n_heads: 4, n_kv_heads: 2,
+        head_dim: 8, d_ff: 64, vocab: crate::tasks::vocab_size(), max_seq: 128,
+    })
+}
+
+/// Random weights for an arbitrary config (deterministic in `seed`).
+pub fn tiny_weights_cfg(seed: u64, cfg: ModelConfig) -> Weights {
     let mut rng = Rng::new(seed);
     let mut mk = |n: usize, fan_in: usize| -> Vec<f32> {
         let s = 1.0 / (fan_in as f32).sqrt();

@@ -1,4 +1,5 @@
-//! Iteration-level (continuous) batching with KV-budget admission control.
+//! Iteration-level (continuous) batching with KV-budget admission control,
+//! a shared-prefix prefill cache, and copy-on-write session fan-out.
 //!
 //! The scheduling loop mirrors Orca/vLLM: each round first *admits* pending
 //! requests while the KV-memory budget allows (running their prefill), then
@@ -9,8 +10,31 @@
 //! directly raises the number of concurrent sessions the budget admits —
 //! the paper's memory-bound serving argument — and the batched round is
 //! what turns those extra sessions into throughput.
+//!
+//! **Shared-prefix cache.** Real traffic overwhelmingly shares a
+//! system-prompt prefix. Admission hashes the request's prompt ids
+//! (rolling FNV-1a, one hash per prefix length) and probes the cache for
+//! the longest entry matching both hash and method. On a hit the entry's
+//! prototype cache is [`KvCache::fork`]ed — for Lexico the compressed
+//! prefix pages are shared behind `Arc`s, copy-on-write — and only the
+//! prompt *suffix* runs through [`Engine::prefill_suffix`], which attends
+//! in full precision over the entry's stored dense K/V rows. Because the
+//! stored rows are exactly what a cold prefill computes, a hit is bitwise
+//! identical to a cold full-prompt prefill for every backend whose
+//! [`KvCache::split_prefill_exact`] holds (the only ones the cache
+//! serves), while the prefix costs zero transformer work and zero OMP
+//! recompression. The budget charges each entry's resident bytes once and
+//! each forked session only its private bytes
+//! (`mem_bytes − shared_prefix_bytes`).
+//!
+//! **Fan-out.** A request with `fanout = n` decodes n candidate
+//! continuations from ONE prefill: candidate i starts from the i-th most
+//! likely first token, candidates 1.. fork candidate 0's freshly prefilled
+//! cache (sharing its compressed prefix), and all n advance in the same
+//! `decode_batch` round. The reply carries the primary continuation plus
+//! the alternates.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -22,7 +46,7 @@ use super::{Job, Response};
 use crate::cache::factory::{build_cache, CacheContext};
 use crate::cache::KvCache;
 use crate::dict::DictionarySet;
-use crate::model::Engine;
+use crate::model::{Engine, PrefixState};
 use crate::tasks;
 use crate::tensor::argmax;
 
@@ -35,6 +59,12 @@ pub struct BatcherConfig {
     pub kv_budget_bytes: f64,
     /// hard cap on concurrently decoding sessions
     pub max_sessions: usize,
+    /// shared-prefix cache capacity in entries (0 disables the cache)
+    pub prefix_entries: usize,
+    /// minimum prompt (or suffix) tokens before a prefix is worth caching
+    pub prefix_min_tokens: usize,
+    /// hard cap on per-request fan-out candidates
+    pub max_fanout: usize,
 }
 
 impl Default for BatcherConfig {
@@ -43,147 +73,536 @@ impl Default for BatcherConfig {
             default_method: "lexico:s=8,nb=32".into(),
             kv_budget_bytes: 64.0 * 1024.0 * 1024.0,
             max_sessions: 32,
+            prefix_entries: 8,
+            prefix_min_tokens: 8,
+            max_fanout: 8,
         }
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared-prefix cache
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_step(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Rolling prefix hashes of `(method, ids[..n])` for every n in 1..=len —
+/// one incremental pass, so probing all prefix lengths is O(len).
+fn prefix_hashes(method: &str, ids: &[u32]) -> Vec<u64> {
+    let mut h = fnv_step(FNV_OFFSET, method.as_bytes());
+    ids.iter()
+        .map(|id| {
+            h = fnv_step(h, &id.to_le_bytes());
+            h
+        })
+        .collect()
+}
+
+/// One cached prompt prefix: the dense prefill state (for exact suffix
+/// resume), a prototype cache to fork, and bookkeeping.
+struct PrefixEntry {
+    /// stable identity, used to hand the charging-owner role to a
+    /// surviving fork when the entry is evicted
+    id: u64,
+    /// rolling hash of (method, state.tokens)
+    hash: u64,
+    method: String,
+    state: PrefixState,
+    proto: Box<dyn KvCache>,
+    last_used: u64,
+}
+
+impl PrefixEntry {
+    /// Bytes this entry keeps resident: the prototype's compressed cache
+    /// (shared pages live here as long as the entry does, so the budget
+    /// charges them exactly once) plus the dense K/V rows.
+    fn bytes(&self) -> f64 {
+        self.proto.mem_bytes() + self.state.bytes()
+    }
+}
+
+/// LRU cache of prompt prefixes, longest-match lookup by rolling hash.
+struct PrefixCache {
+    entries: Vec<PrefixEntry>,
+    capacity: usize,
+    clock: u64,
+    next_id: u64,
+}
+
+impl PrefixCache {
+    fn new(capacity: usize) -> Self {
+        PrefixCache { entries: Vec::new(), capacity, clock: 0, next_id: 0 }
+    }
+
+    /// Bytes the cache keeps resident. Nested entries (a prefix and its
+    /// cached extension) share sealed pages through their prototypes'
+    /// `Arc`s; each prototype reports them fully, so nesting over-charges
+    /// the shared part — deliberately conservative for admission control
+    /// (the safe direction: defer rather than overrun).
+    fn resident_bytes(&self) -> f64 {
+        self.entries.iter().map(|e| e.bytes()).sum()
+    }
+
+    /// Longest cached prefix of `ids` under `method`; bumps LRU + hit
+    /// counters. Returns the entry index.
+    fn lookup(&mut self, method: &str, ids: &[u32]) -> Option<usize> {
+        if self.capacity == 0 || self.entries.is_empty() {
+            return None;
+        }
+        let hashes = prefix_hashes(method, ids);
+        let mut best: Option<usize> = None;
+        let mut best_len = 0usize;
+        for (ei, e) in self.entries.iter().enumerate() {
+            let n = e.state.len();
+            if e.method != method || n == 0 || n > ids.len() {
+                continue;
+            }
+            if e.hash != hashes[n - 1] || e.state.tokens[..] != ids[..n] {
+                continue;
+            }
+            if n > best_len {
+                best = Some(ei);
+                best_len = n;
+            }
+        }
+        if let Some(b) = best {
+            self.clock += 1;
+            self.entries[b].last_used = self.clock;
+        }
+        best
+    }
+
+    /// Insert a new prefix (returns the existing id if an identical one is
+    /// already cached), evicting the least-recently-used entry when full.
+    /// The batcher normally pre-frees capacity through
+    /// [`Batcher::insert_prefix`] so evicted entries can hand their
+    /// charging-owner role to a surviving fork; the internal eviction here
+    /// is the standalone backstop.
+    fn insert(&mut self, method: String, state: PrefixState, proto: Box<dyn KvCache>) -> Option<u64> {
+        if self.capacity == 0 || state.is_empty() {
+            return None;
+        }
+        let hash = *prefix_hashes(&method, &state.tokens).last().unwrap();
+        if let Some(e) = self
+            .entries
+            .iter()
+            .find(|e| e.hash == hash && e.method == method && e.state.tokens == state.tokens)
+        {
+            return Some(e.id);
+        }
+        while self.entries.len() >= self.capacity {
+            if !self.evict_lru() {
+                return None;
+            }
+        }
+        self.clock += 1;
+        self.next_id += 1;
+        let id = self.next_id;
+        self.entries.push(PrefixEntry { id, hash, method, state, proto, last_used: self.clock });
+        Some(id)
+    }
+
+    /// Drop the least-recently-used entry, skipping `keep` (so budget
+    /// pressure never evicts the entry the current request just matched —
+    /// that would turn a cheap suffix prefill into a more expensive cold
+    /// one). Returns the evicted entry's id so the caller can promote a
+    /// surviving fork to charge the pages the prototype used to own.
+    fn evict_lru_except(&mut self, keep: Option<usize>) -> Option<u64> {
+        let lru = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| Some(i) != keep)
+            .min_by_key(|&(_, e)| e.last_used)
+            .map(|(i, _)| i)?;
+        Some(self.entries.swap_remove(lru).id)
+    }
+
+    fn evict_lru(&mut self) -> bool {
+        self.evict_lru_except(None).is_some()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sessions and fan-out groups
+// ---------------------------------------------------------------------------
+
+/// One decoding candidate (a request with fanout = n owns n sessions).
 struct Session {
-    job: Job,
+    /// key into [`Batcher::groups`]
+    group: usize,
+    /// candidate index within the group (0 = primary/greedy)
+    cand: usize,
     cache: Box<dyn KvCache>,
     pos: usize,
     next_token: u32,
     generated: Vec<u32>,
+    /// whether the budget charges this session's shared prefix bytes; false
+    /// when a prefix-cache prototype or the primary candidate already does
+    charges_shared: bool,
+    /// the prefix-cache entry this session forked from, if any — used to
+    /// promote a surviving fork to charging owner when the entry is evicted
+    from_entry: Option<u64>,
+    max_new: usize,
+}
+
+/// Per-request state shared by its candidate sessions; the reply is sent
+/// when the last candidate retires.
+struct Group {
+    job: Job,
+    n_prompt: usize,
+    outputs: Vec<Option<String>>,
+    n_generated_primary: usize,
+    kv_ratio: f64,
+    prefix_hit: bool,
+    remaining: usize,
     t0: Instant,
     ttft_ms: f64,
 }
 
-/// The scheduling loop. Runs until the job channel disconnects.
-pub fn run(
-    engine: Arc<Engine>,
-    dicts: Option<Arc<DictionarySet>>,
-    cfg: BatcherConfig,
-    jobs: Receiver<Job>,
-    metrics: Arc<Mutex<Metrics>>,
-) -> Result<()> {
-    let ctx = CacheContext { shape: engine.shape(), dicts };
-    let stop = tasks::newline_id();
-    let mut pending: VecDeque<Job> = VecDeque::new();
-    let mut active: Vec<Session> = Vec::new();
-    let max_seq = engine.weights.cfg.max_seq;
+// ---------------------------------------------------------------------------
+// The batcher
+// ---------------------------------------------------------------------------
 
-    'outer: loop {
-        // ---- intake ---------------------------------------------------
-        loop {
-            match if active.is_empty() && pending.is_empty() {
-                jobs.recv().map_err(|_| RecvTimeoutError::Disconnected)
-            } else {
-                jobs.recv_timeout(Duration::from_millis(0))
-            } {
-                Ok(job) => {
-                    metrics.lock().unwrap().requests += 1;
-                    pending.push_back(job);
-                }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    if active.is_empty() && pending.is_empty() {
-                        break 'outer;
+/// The scheduling state, factored as a struct so admission control is unit
+/// testable without threads: `enqueue` jobs, call [`Batcher::round`] until
+/// done. [`run`] wraps it in the channel-driven serving loop.
+pub struct Batcher {
+    engine: Arc<Engine>,
+    ctx: CacheContext,
+    cfg: BatcherConfig,
+    metrics: Arc<Mutex<Metrics>>,
+    pending: VecDeque<Job>,
+    active: Vec<Session>,
+    groups: HashMap<usize, Group>,
+    next_gid: usize,
+    prefix: PrefixCache,
+    stop: u32,
+    max_seq: usize,
+}
+
+impl Batcher {
+    pub fn new(
+        engine: Arc<Engine>,
+        dicts: Option<Arc<DictionarySet>>,
+        cfg: BatcherConfig,
+        metrics: Arc<Mutex<Metrics>>,
+    ) -> Self {
+        let ctx = CacheContext { shape: engine.shape(), dicts };
+        let max_seq = engine.weights.cfg.max_seq;
+        let prefix = PrefixCache::new(cfg.prefix_entries);
+        Batcher {
+            engine,
+            ctx,
+            cfg,
+            metrics,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            groups: HashMap::new(),
+            next_gid: 0,
+            prefix,
+            stop: tasks::newline_id(),
+            max_seq,
+        }
+    }
+
+    pub fn enqueue(&mut self, job: Job) {
+        self.metrics.lock().unwrap().requests += 1;
+        self.pending.push_back(job);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || !self.pending.is_empty()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn n_prefix_entries(&self) -> usize {
+        self.prefix.entries.len()
+    }
+
+    /// Budget usage right now: each prefix-cache entry charged once (its
+    /// prototype owns the shared pages) and each session charged only the
+    /// bytes it does not share with a charging owner.
+    pub fn kv_used_bytes(&self) -> f64 {
+        self.prefix.resident_bytes()
+            + self
+                .active
+                .iter()
+                .map(|s| {
+                    if s.charges_shared {
+                        s.cache.mem_bytes()
+                    } else {
+                        (s.cache.mem_bytes() - s.cache.shared_prefix_bytes()).max(0.0)
                     }
-                    break;
-                }
+                })
+                .sum::<f64>()
+    }
+
+    /// One scheduling round: admit while the budget allows, advance every
+    /// active session one token, retire finished sessions — and if any
+    /// retired, run admission again so freed budget seats a waiting job in
+    /// the same round.
+    pub fn round(&mut self) {
+        self.admit();
+        if self.decode_round() > 0 && !self.pending.is_empty() {
+            self.admit();
+        }
+    }
+
+    fn reject(&mut self, job: Job, n_prompt: usize, error: String) {
+        self.metrics.lock().unwrap().rejected += 1;
+        let _ = job.reply.send(Response::failed(job.request.id, n_prompt, error));
+    }
+
+    /// Insert a prefix entry, pre-evicting (with owner promotion) so shared
+    /// pages never lose their charging owner to a capacity eviction.
+    fn insert_prefix(
+        &mut self,
+        method: String,
+        state: PrefixState,
+        proto: Box<dyn KvCache>,
+    ) -> Option<u64> {
+        if self.cfg.prefix_entries == 0 {
+            return None;
+        }
+        while self.prefix.entries.len() >= self.cfg.prefix_entries {
+            match self.prefix.evict_lru_except(None) {
+                Some(id) => self.promote_entry_owner(id),
+                None => return None,
             }
         }
+        self.prefix.insert(method, state, proto)
+    }
 
-        // ---- admission (prefill) --------------------------------------
-        let used: f64 = active.iter().map(|s| s.cache.mem_bytes()).sum();
-        let mut budget_left = cfg.kv_budget_bytes - used;
-        while let Some(job) = pending.front() {
-            if active.len() >= cfg.max_sessions {
+    /// After the entry owning shared pages disappears, hand the
+    /// charging-owner role to one surviving fork: with ≥2 forks still
+    /// sharing the pages, `mem − shared` on every fork would charge the
+    /// pages zero times; promoting exactly one restores charge-once. (With
+    /// a single surviving fork the pages become private automatically —
+    /// `Arc::strong_count` drops to 1 — and the flag is a no-op.)
+    fn promote_entry_owner(&mut self, entry_id: u64) {
+        if let Some(s) = self
+            .active
+            .iter_mut()
+            .find(|s| s.from_entry == Some(entry_id) && !s.charges_shared)
+        {
+            s.charges_shared = true;
+        }
+    }
+
+    /// Admission pass: prefill pending requests in FIFO order while the
+    /// session cap and KV budget allow.
+    pub fn admit(&mut self) {
+        loop {
+            let Some(front) = self.pending.front() else { break };
+            if self.active.len() >= self.cfg.max_sessions {
                 break;
             }
-            let prompt_ids: Vec<u32> = {
-                let mut v = vec![tasks::BOS];
-                v.extend(tasks::encode_lossy(&job.request.prompt));
-                v
-            };
-            if prompt_ids.len() + 2 > max_seq {
-                let job = pending.pop_front().unwrap();
-                metrics.lock().unwrap().rejected += 1;
-                let _ = job.reply.send(Response {
-                    id: job.request.id,
-                    text: String::new(),
-                    n_prompt: prompt_ids.len(),
-                    n_generated: 0,
-                    ttft_ms: 0.0,
-                    total_ms: 0.0,
-                    kv_ratio: 0.0,
-                    error: Some("prompt too long".into()),
-                });
-                continue;
-            }
-            // worst-case estimate: full-precision KV for prompt + generation
-            let est = engine.shape().n_layers as f64
-                * (prompt_ids.len() + job.request.max_new) as f64
-                * engine.shape().full_token_bytes();
-            if est > budget_left && !active.is_empty() {
-                break; // wait for a session to retire
-            }
-            let job = pending.pop_front().unwrap();
-            let method = if job.request.method.is_empty() {
-                cfg.default_method.clone()
-            } else {
-                job.request.method.clone()
-            };
-            let t0 = Instant::now();
-            match build_cache(&method, &ctx) {
-                Ok(mut cache) => {
-                    let logits = engine.prefill(&prompt_ids, &mut *cache);
-                    let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let next = argmax(&logits) as u32;
-                    budget_left -= cache.mem_bytes();
-                    active.push(Session {
-                        job,
-                        cache,
-                        pos: prompt_ids.len(),
-                        next_token: next,
-                        generated: Vec::new(),
-                        t0,
-                        ttft_ms,
-                    });
+            let prompt = front.request.prompt.clone();
+            let max_new = front.request.max_new;
+            let req_fanout = front.request.fanout;
+
+            // ---- validate ---------------------------------------------
+            let ids = match tasks::try_encode(&prompt) {
+                Ok(body) => {
+                    let mut ids = vec![tasks::BOS];
+                    ids.extend(body);
+                    ids
                 }
                 Err(e) => {
-                    metrics.lock().unwrap().rejected += 1;
-                    let _ = job.reply.send(Response {
-                        id: job.request.id,
-                        text: String::new(),
-                        n_prompt: prompt_ids.len(),
-                        n_generated: 0,
-                        ttft_ms: 0.0,
-                        total_ms: 0.0,
-                        kv_ratio: 0.0,
-                        error: Some(format!("bad method '{method}': {e}")),
-                    });
+                    let job = self.pending.pop_front().unwrap();
+                    self.reject(job, 0, format!("bad prompt: {e}"));
+                    continue;
+                }
+            };
+            if ids.len() + 2 > self.max_seq {
+                let job = self.pending.pop_front().unwrap();
+                self.reject(job, ids.len(), "prompt too long".into());
+                continue;
+            }
+            let fanout = req_fanout.clamp(1, self.cfg.max_fanout.min(self.cfg.max_sessions));
+            if self.active.len() + fanout > self.cfg.max_sessions && !self.active.is_empty() {
+                break; // wait for seats
+            }
+            let method = if front.request.method.is_empty() {
+                self.cfg.default_method.clone()
+            } else {
+                front.request.method.clone()
+            };
+
+            // ---- budget gate ------------------------------------------
+            let hit = self.prefix.lookup(&method, &ids);
+            let cold_tokens = match hit {
+                Some(ei) => ids.len() - self.prefix.entries[ei].state.len(),
+                None => ids.len(),
+            };
+            // Worst-case estimate: full-precision KV for the tokens this
+            // admission will materialize. Extra fan-out candidates are
+            // estimated at their generated tokens only (the copy-on-write
+            // case); the true footprint feeds back through
+            // `kv_used_bytes` from the next round on.
+            let shape = self.engine.shape();
+            let est = shape.n_layers as f64
+                * shape.full_token_bytes()
+                * ((cold_tokens + max_new) as f64 + ((fanout - 1) * max_new) as f64);
+            let budget_left = self.cfg.kv_budget_bytes - self.kv_used_bytes();
+            if est > budget_left && !self.active.is_empty() {
+                break; // wait for a session to retire
+            }
+            if est > budget_left {
+                // free prefix residency (never the entry just matched) and
+                // re-evaluate; a surviving fork inherits the page charge
+                if let Some(evicted) = self.prefix.evict_lru_except(hit) {
+                    self.promote_entry_owner(evicted);
+                    continue;
                 }
             }
-        }
 
-        // ---- one batched decode round for ALL active sessions -----------
-        // Layer-major continuous batching: commit each session's pending
-        // token, retire finished sessions, then advance every remaining
-        // session together through one `decode_batch` call so each weight
-        // matrix streams once per layer per round instead of once per
-        // session (the batch-first pipeline; token-identical to per-session
-        // `decode_step` calls).
+            // ---- prefill (cold, or fork + suffix on a prefix hit) -----
+            let job = self.pending.pop_front().unwrap();
+            let t0 = Instant::now();
+            let (cache, logits, prefix_hit, primary_charges_shared, from_entry) = match hit {
+                Some(ei) => {
+                    let entry_id = self.prefix.entries[ei].id;
+                    let (cache, logits, longer) = {
+                        let entry = &self.prefix.entries[ei];
+                        let mut cache = entry.proto.fork();
+                        let suffix = &ids[entry.state.len()..];
+                        let cache_longer = suffix.len() >= self.cfg.prefix_min_tokens;
+                        let (logits, longer) = if suffix.is_empty() {
+                            (entry.state.logits.clone(), None)
+                        } else if cache_longer {
+                            let (l, st) =
+                                self.engine.prefill_suffix_capture(&entry.state, suffix, &mut *cache);
+                            (l, Some(st))
+                        } else {
+                            (self.engine.prefill_suffix(&entry.state, suffix, &mut *cache), None)
+                        };
+                        let mut m = self.metrics.lock().unwrap();
+                        m.prefix_hits += 1;
+                        m.prefill_tokens += suffix.len() as u64;
+                        m.prefill_tokens_total += ids.len() as u64;
+                        m.shared_bytes += cache.shared_prefix_bytes();
+                        (cache, logits, longer)
+                    };
+                    if let Some(st) = longer {
+                        let proto = cache.fork();
+                        self.insert_prefix(method.clone(), st, proto);
+                    }
+                    (cache, logits, true, false, Some(entry_id))
+                }
+                None => match build_cache(&method, &self.ctx) {
+                    Ok(mut cache) => {
+                        let cacheable = self.cfg.prefix_entries > 0
+                            && cache.split_prefill_exact()
+                            && ids.len() >= self.cfg.prefix_min_tokens;
+                        let (logits, entry_id) = if cacheable {
+                            let (l, st) = self.engine.prefill_capture(&ids, &mut *cache);
+                            let proto = cache.fork();
+                            (l, self.insert_prefix(method.clone(), st, proto))
+                        } else {
+                            (self.engine.prefill(&ids, &mut *cache), None)
+                        };
+                        let mut m = self.metrics.lock().unwrap();
+                        m.prefix_misses += 1;
+                        m.prefill_tokens += ids.len() as u64;
+                        m.prefill_tokens_total += ids.len() as u64;
+                        drop(m);
+                        // with a prototype in the cache, the entry charges
+                        // the shared pages; without one the session does
+                        (cache, logits, false, entry_id.is_none(), entry_id)
+                    }
+                    Err(e) => {
+                        self.reject(job, ids.len(), format!("bad method '{method}': {e}"));
+                        continue;
+                    }
+                },
+            };
+
+            // ---- seat the candidate sessions --------------------------
+            let firsts = top_tokens(&logits, fanout);
+            let fanout = firsts.len(); // tiny vocab guard
+            let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let gid = self.next_gid;
+            self.next_gid += 1;
+            self.groups.insert(gid, Group {
+                job,
+                n_prompt: ids.len(),
+                outputs: vec![None; fanout],
+                n_generated_primary: 0,
+                kv_ratio: 0.0,
+                prefix_hit,
+                remaining: fanout,
+                t0,
+                ttft_ms,
+            });
+            for (cand, &tok) in firsts.iter().enumerate().skip(1) {
+                self.active.push(Session {
+                    group: gid,
+                    cand,
+                    cache: cache.fork(),
+                    pos: ids.len(),
+                    next_token: tok,
+                    generated: Vec::new(),
+                    charges_shared: false,
+                    from_entry,
+                    max_new,
+                });
+            }
+            self.active.push(Session {
+                group: gid,
+                cand: 0,
+                cache,
+                pos: ids.len(),
+                next_token: firsts[0],
+                generated: Vec::new(),
+                charges_shared: primary_charges_shared,
+                from_entry,
+                max_new,
+            });
+            if fanout > 1 {
+                self.metrics.lock().unwrap().fanout_sessions += (fanout - 1) as u64;
+            }
+        }
+    }
+
+    /// One batched decode round for ALL active sessions, then retirement.
+    /// Returns how many sessions retired.
+    ///
+    /// Layer-major continuous batching: commit each session's pending
+    /// token, retire finished sessions, then advance every remaining
+    /// session together through one `decode_batch` call so each weight
+    /// matrix streams once per layer per round instead of once per session
+    /// (the batch-first pipeline; token-identical to per-session
+    /// `decode_step` calls).
+    pub fn decode_round(&mut self) -> usize {
         let mut retire = Vec::new();
         {
             let mut toks: Vec<u32> = Vec::new();
             let mut poss: Vec<usize> = Vec::new();
             let mut decoding: Vec<usize> = Vec::new();
             let mut caches: Vec<&mut dyn KvCache> = Vec::new();
-            for (si, sess) in active.iter_mut().enumerate() {
+            for (si, sess) in self.active.iter_mut().enumerate() {
                 sess.generated.push(sess.next_token);
-                let done = sess.next_token == stop
-                    || sess.generated.len() >= sess.job.request.max_new
-                    || sess.pos + 1 >= max_seq;
+                let done = sess.next_token == self.stop
+                    || sess.generated.len() >= sess.max_new
+                    || sess.pos + 1 >= self.max_seq;
                 if done {
                     retire.push(si);
                     continue;
@@ -195,41 +614,133 @@ pub fn run(
             }
             if !decoding.is_empty() {
                 let step_t0 = Instant::now();
-                let logits = engine.decode_batch(&toks, &poss, &mut caches);
+                let logits = self.engine.decode_batch(&toks, &poss, &mut caches);
                 drop(caches);
                 let per_token = step_t0.elapsed().as_secs_f64() * 1e3 / decoding.len() as f64;
                 for (bi, &si) in decoding.iter().enumerate() {
-                    let sess = &mut active[si];
+                    let sess = &mut self.active[si];
                     sess.next_token = argmax(&logits[bi]) as u32;
                     sess.pos += 1;
                 }
                 // one sample per round (amortized ms/token at that round's
                 // batch size) — duplicating it per session would flatten
                 // the percentile summary into the mean
-                metrics.lock().unwrap().per_token_ms.push(per_token);
+                self.metrics.lock().unwrap().per_token_ms.push(per_token);
             }
         }
-
-        // ---- retire ----------------------------------------------------
+        let n_retired = retire.len();
         for &si in retire.iter().rev() {
-            let sess = active.swap_remove(si);
-            let mut m = metrics.lock().unwrap();
-            m.completed += 1;
-            m.tokens_generated += sess.generated.len() as u64;
-            m.ttft_ms.push(sess.ttft_ms);
-            m.kv_ratios.push(sess.cache.kv_ratio());
-            drop(m);
-            let _ = sess.job.reply.send(Response {
-                id: sess.job.request.id,
-                text: tasks::decode(&sess.generated),
-                n_prompt: sess.pos,
-                n_generated: sess.generated.len(),
-                ttft_ms: sess.ttft_ms,
-                total_ms: sess.t0.elapsed().as_secs_f64() * 1e3,
-                kv_ratio: sess.cache.kv_ratio(),
-                error: None,
-            });
+            let sess = self.active.swap_remove(si);
+            if sess.charges_shared {
+                // the retiring session was the charging owner of pages
+                // shared with siblings — hand the role to a survivor so
+                // the pages stay charged exactly once (no-op when nothing
+                // is shared: shared_prefix_bytes is 0 for a lone holder)
+                let heir = sess
+                    .from_entry
+                    .and_then(|id| {
+                        self.active
+                            .iter()
+                            .position(|s| s.from_entry == Some(id) && !s.charges_shared)
+                    })
+                    .or_else(|| {
+                        self.active
+                            .iter()
+                            .position(|s| s.group == sess.group && !s.charges_shared)
+                    });
+                if let Some(i) = heir {
+                    self.active[i].charges_shared = true;
+                }
+            }
+            {
+                let mut m = self.metrics.lock().unwrap();
+                m.tokens_generated += sess.generated.len() as u64;
+            }
+            let g = self.groups.get_mut(&sess.group).expect("session without group");
+            g.outputs[sess.cand] = Some(tasks::decode(&sess.generated));
+            if sess.cand == 0 {
+                g.kv_ratio = sess.cache.kv_ratio();
+                g.n_generated_primary = sess.generated.len();
+            }
+            g.remaining -= 1;
+            if g.remaining == 0 {
+                let g = self.groups.remove(&sess.group).unwrap();
+                let mut m = self.metrics.lock().unwrap();
+                m.completed += 1;
+                m.ttft_ms.push(g.ttft_ms);
+                m.kv_ratios.push(g.kv_ratio);
+                drop(m);
+                let mut outputs: Vec<String> =
+                    g.outputs.into_iter().map(Option::unwrap_or_default).collect();
+                let text = std::mem::take(&mut outputs[0]);
+                let _ = g.job.reply.send(Response {
+                    id: g.job.request.id,
+                    text,
+                    alts: outputs.split_off(1),
+                    n_prompt: g.n_prompt,
+                    n_generated: g.n_generated_primary,
+                    ttft_ms: g.ttft_ms,
+                    total_ms: g.t0.elapsed().as_secs_f64() * 1e3,
+                    kv_ratio: g.kv_ratio,
+                    prefix_hit: g.prefix_hit,
+                    error: None,
+                });
+            }
         }
+        n_retired
+    }
+}
+
+/// The `n` most likely tokens, descending (ties to the lower id, so index
+/// 0 is exactly `argmax` — fan-out candidate 0 is the greedy stream).
+fn top_tokens(logits: &[f32], n: usize) -> Vec<u32> {
+    let n = n.min(logits.len()).max(1);
+    let mut picked = Vec::with_capacity(n);
+    let mut used = vec![false; logits.len()];
+    for _ in 0..n {
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &l) in logits.iter().enumerate() {
+            if !used[i] && l > bv {
+                bv = l;
+                best = i;
+            }
+        }
+        used[best] = true;
+        picked.push(best as u32);
+    }
+    picked
+}
+
+/// The channel-driven scheduling loop. Runs until the job channel
+/// disconnects and all work has drained.
+pub fn run(
+    engine: Arc<Engine>,
+    dicts: Option<Arc<DictionarySet>>,
+    cfg: BatcherConfig,
+    jobs: Receiver<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    let mut b = Batcher::new(engine, dicts, cfg, metrics);
+    'outer: loop {
+        // ---- intake ---------------------------------------------------
+        loop {
+            match if b.has_work() {
+                jobs.recv_timeout(Duration::from_millis(0))
+            } else {
+                jobs.recv().map_err(|_| RecvTimeoutError::Disconnected)
+            } {
+                Ok(job) => b.enqueue(job),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if !b.has_work() {
+                        break 'outer;
+                    }
+                    break;
+                }
+            }
+        }
+        b.round();
     }
     Ok(())
 }
@@ -237,10 +748,50 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::CacheShape;
+    use crate::dict::{Dictionary, DictionarySet};
     use crate::model::testutil::tiny_weights;
-    use std::sync::mpsc::channel;
+    use crate::server::Request;
+    use std::sync::mpsc::{channel, Receiver, Sender};
 
-    fn spawn_batcher(cfg: BatcherConfig) -> (std::sync::mpsc::Sender<Job>, Arc<Mutex<Metrics>>) {
+    fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+        Arc::new(DictionarySet {
+            keys: (0..shape.n_layers)
+                .map(|i| Dictionary::random(shape.head_dim, n_atoms, 500 + i as u64))
+                .collect(),
+            values: (0..shape.n_layers)
+                .map(|i| Dictionary::random(shape.head_dim, n_atoms, 700 + i as u64))
+                .collect(),
+        })
+    }
+
+    fn mk_batcher(cfg: BatcherConfig, with_dicts: bool) -> (Batcher, Arc<Mutex<Metrics>>) {
+        let engine = Arc::new(Engine::new(tiny_weights(13)));
+        let dicts = with_dicts.then(|| tiny_dicts(engine.shape(), 64));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        (Batcher::new(engine, dicts, cfg, metrics.clone()), metrics)
+    }
+
+    fn job(id: u64, prompt: &str, max_new: usize) -> (Job, Receiver<Response>) {
+        job_with(Request::greedy(id, prompt, max_new, ""))
+    }
+
+    fn job_with(request: Request) -> (Job, Receiver<Response>) {
+        let (rtx, rrx) = channel();
+        (Job { request, reply: rtx }, rrx)
+    }
+
+    fn run_to_completion(b: &mut Batcher, max_rounds: usize) {
+        for _ in 0..max_rounds {
+            if !b.has_work() {
+                return;
+            }
+            b.round();
+        }
+        panic!("batcher did not drain in {max_rounds} rounds");
+    }
+
+    fn spawn_batcher(cfg: BatcherConfig) -> (Sender<Job>, Arc<Mutex<Metrics>>) {
         let engine = Arc::new(Engine::new(tiny_weights(13)));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let (tx, rx) = channel();
@@ -255,17 +806,8 @@ mod tests {
         let (tx, metrics) = spawn_batcher(cfg);
         let mut replies = Vec::new();
         for i in 0..4 {
-            let (rtx, rrx) = channel();
-            tx.send(Job {
-                request: crate::server::Request {
-                    id: i,
-                    prompt: "1+2=".into(),
-                    max_new: 5,
-                    method: String::new(),
-                },
-                reply: rtx,
-            })
-            .unwrap();
+            let (job, rrx) = job(i, "1+2=", 5);
+            tx.send(job).unwrap();
             replies.push(rrx);
         }
         for (i, r) in replies.into_iter().enumerate() {
@@ -283,38 +825,345 @@ mod tests {
     fn rejects_too_long_prompt() {
         let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
         let (tx, _metrics) = spawn_batcher(cfg);
-        let (rtx, rrx) = channel();
-        tx.send(Job {
-            request: crate::server::Request {
-                id: 0,
-                prompt: "a".repeat(4000),
-                max_new: 4,
-                method: String::new(),
-            },
-            reply: rtx,
-        })
-        .unwrap();
+        let (job, rrx) = job(0, &"a".repeat(4000), 4);
+        tx.send(job).unwrap();
         let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_some());
+    }
+
+    #[test]
+    fn rejects_oov_prompt_without_crashing() {
+        // satellite: a malformed request must become an error reply, not a
+        // panic in the batcher thread — and the batcher must keep serving.
+        let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
+        let (tx, metrics) = spawn_batcher(cfg);
+        let (bad, bad_rx) = job(1, "caf\u{e9} au lait", 4);
+        tx.send(bad).unwrap();
+        let resp = bad_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let err = resp.error.expect("OOV prompt must error");
+        assert!(err.contains("unsupported character"), "{err}");
+        // still alive: a valid request completes afterwards
+        let (ok, ok_rx) = job(2, "1+2=", 3);
+        tx.send(ok).unwrap();
+        let resp = ok_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(metrics.lock().unwrap().rejected, 1);
     }
 
     #[test]
     fn per_request_method_override() {
         let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
         let (tx, _m) = spawn_batcher(cfg);
-        let (rtx, rrx) = channel();
-        tx.send(Job {
-            request: crate::server::Request {
-                id: 7,
-                prompt: "abc".into(),
-                max_new: 3,
-                method: "pertoken:bits=4,g=8".into(),
-            },
-            reply: rtx,
-        })
-        .unwrap();
+        let (job, rrx) =
+            job_with(Request::greedy(7, "abc", 3, "pertoken:bits=4,g=8"));
+        tx.send(job).unwrap();
         let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none());
         assert!(resp.kv_ratio < 1.0);
+    }
+
+    #[test]
+    fn budget_exhaustion_defers_admission() {
+        // tiny model: full_token_bytes = 2·kvd·2 = 32 B, 2 layers. A
+        // "7,3,1>"-ish prompt is ~8 ids; est ≈ 2·(8+6)·32 ≈ 900 B. Budget
+        // fits one session but not two.
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            kv_budget_bytes: 1000.0,
+            prefix_entries: 0,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let (j1, r1) = job(1, "7,3,1>", 6);
+        let (j2, r2) = job(2, "2,4,8>", 6);
+        b.enqueue(j1);
+        b.enqueue(j2);
+        b.admit();
+        assert_eq!(b.n_active(), 1, "budget admits exactly one");
+        assert_eq!(b.n_pending(), 1, "second defers, not rejected");
+        assert!(b.kv_used_bytes() > 0.0);
+        run_to_completion(&mut b, 64);
+        assert!(r1.try_recv().unwrap().error.is_none());
+        assert!(r2.try_recv().unwrap().error.is_none());
+        assert_eq!(metrics.lock().unwrap().completed, 2);
+        assert_eq!(metrics.lock().unwrap().rejected, 0);
+    }
+
+    #[test]
+    fn max_sessions_cap_holds() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            max_sessions: 2,
+            ..Default::default()
+        };
+        let (mut b, _m) = mk_batcher(cfg, false);
+        let mut replies = Vec::new();
+        for i in 0..3 {
+            let (j, r) = job(i, "1+2=", 4);
+            b.enqueue(j);
+            replies.push(r);
+        }
+        b.admit();
+        assert_eq!(b.n_active(), 2, "cap must hold");
+        assert_eq!(b.n_pending(), 1);
+        run_to_completion(&mut b, 64);
+        for r in replies {
+            assert!(r.try_recv().unwrap().error.is_none());
+        }
+    }
+
+    #[test]
+    fn retirement_frees_budget_that_admits_same_round() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            kv_budget_bytes: 1000.0,
+            prefix_entries: 0,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let (j1, _r1) = job(1, "7,3,1>", 3);
+        let (j2, _r2) = job(2, "2,4,8>", 3);
+        b.enqueue(j1);
+        b.enqueue(j2);
+        for _ in 0..64 {
+            b.round();
+            let done = metrics.lock().unwrap().completed;
+            if done == 1 {
+                // the round that retired job 1 must have re-admitted job 2
+                assert_eq!(b.n_pending(), 0, "freed budget must seat the waiter");
+                assert_eq!(b.n_active(), 1);
+                return;
+            }
+        }
+        panic!("first job never completed");
+    }
+
+    #[test]
+    fn ttft_and_tpot_metrics_populate() {
+        let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let prompts = ["1+2=", "k01=v42;k01?", "2,7>", "abc#"];
+        let mut replies = Vec::new();
+        for (i, p) in prompts.into_iter().enumerate() {
+            let (j, r) = job(i as u64, p, 5);
+            b.enqueue(j);
+            replies.push(r);
+        }
+        run_to_completion(&mut b, 64);
+        for r in replies {
+            assert!(r.try_recv().unwrap().error.is_none());
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.ttft_ms.len(), 4, "one TTFT sample per completed request");
+        assert!(m.ttft_ms.iter().all(|&t| t >= 0.0));
+        assert!(!m.per_token_ms.is_empty(), "TPOT samples from decode rounds");
+        assert!(m.tpot().is_some() && m.ttft().is_some());
+    }
+
+    #[test]
+    fn prefix_hit_prefills_suffix_only_and_charges_shared_once() {
+        let cfg = BatcherConfig {
+            default_method: "lexico:s=2,nb=2".into(),
+            prefix_min_tokens: 4,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg.clone(), true);
+        // a long shared prefix (> PAGE_TOKENS compressed tokens) + suffixes
+        let prefix: String =
+            "k01=v11;k02=v22;k03=v33;k04=v44;k05=v55;k06=v66;k07=v77;k08=v88;".into();
+        let (j1, r1) = job(1, &prefix, 2);
+        b.enqueue(j1);
+        run_to_completion(&mut b, 32);
+        let resp1 = r1.try_recv().unwrap();
+        assert!(resp1.error.is_none(), "{:?}", resp1.error);
+        assert!(!resp1.prefix_hit);
+        assert_eq!(b.n_prefix_entries(), 1, "cold prefill inserted the prefix");
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.prefix_misses, 1);
+            assert_eq!(m.prefill_tokens, 1 + prefix.chars().count() as u64);
+        }
+
+        // second request extends the cached prefix — admission must fork
+        // and prefill the suffix only
+        let full = format!("{prefix}k03?");
+        let (j2, r2) = job(2, &full, 3);
+        b.enqueue(j2);
+        b.admit();
+        assert_eq!(b.n_active(), 1);
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.prefix_hits, 1, "second request must hit");
+            let expect = 1 + prefix.chars().count() as u64 + 4; // cold + "k03?"
+            assert_eq!(m.prefill_tokens, expect, "suffix-only prefill work");
+            assert!(m.shared_bytes > 0.0, "lexico fork shares CSR pages");
+        }
+        // shared bytes charged once: the session's charge excludes what the
+        // prototype already charges
+        let sess = &b.active[0];
+        assert!(!sess.charges_shared);
+        let shared = sess.cache.shared_prefix_bytes();
+        assert!(shared > 0.0);
+        let naive = b.prefix.resident_bytes() + sess.cache.mem_bytes();
+        assert!(
+            (b.kv_used_bytes() - (naive - shared)).abs() < 1e-6,
+            "shared prefix bytes must be charged exactly once"
+        );
+        run_to_completion(&mut b, 64);
+        let resp2 = r2.try_recv().unwrap();
+        assert!(resp2.error.is_none(), "{:?}", resp2.error);
+        assert!(resp2.prefix_hit);
+
+        // fork parity end-to-end: a cold batcher (prefix cache disabled)
+        // must produce the identical continuation for the same request
+        let (mut cold, _m2) = mk_batcher(
+            BatcherConfig { prefix_entries: 0, ..cfg },
+            true,
+        );
+        let (j3, r3) = job(3, &full, 3);
+        cold.enqueue(j3);
+        run_to_completion(&mut cold, 64);
+        let resp3 = r3.try_recv().unwrap();
+        assert_eq!(resp2.text, resp3.text, "prefix-cache hit altered tokens");
+    }
+
+    #[test]
+    fn exact_prefix_hit_does_zero_prefill_work() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            prefix_min_tokens: 4,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let (j1, _r1) = job(1, "1+2=3;4+5=", 2);
+        b.enqueue(j1);
+        run_to_completion(&mut b, 32);
+        let cold_tokens = metrics.lock().unwrap().prefill_tokens;
+        let (j2, r2) = job(2, "1+2=3;4+5=", 2);
+        b.enqueue(j2);
+        run_to_completion(&mut b, 32);
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefill_tokens, cold_tokens, "identical prompt → zero new prefill");
+        drop(m);
+        assert!(r2.try_recv().unwrap().error.is_none());
+    }
+
+    #[test]
+    fn entry_eviction_promotes_a_surviving_fork_to_charge_shared_pages() {
+        // two fan-out candidates fork an entry's pages; when the entry is
+        // evicted, exactly one surviving fork must take over the charge so
+        // kv_used_bytes counts the shared pages once, not zero times.
+        let cfg = BatcherConfig {
+            default_method: "lexico:s=2,nb=2".into(),
+            prefix_min_tokens: 6, // suffix below this → no second entry
+            ..Default::default()
+        };
+        let (mut b, _m) = mk_batcher(cfg, true);
+        let prefix: String =
+            "k01=v11;k02=v22;k03=v33;k04=v44;k05=v55;k06=v66;k07=v77;k08=v88;".into();
+        let (j1, _r1) = job(1, &prefix, 2);
+        b.enqueue(j1);
+        run_to_completion(&mut b, 32);
+        assert_eq!(b.n_prefix_entries(), 1);
+
+        let (j2, _r2) = job_with(Request {
+            id: 2,
+            prompt: format!("{prefix}k05?"),
+            max_new: 8,
+            method: String::new(),
+            fanout: 2,
+        });
+        b.enqueue(j2);
+        b.admit();
+        assert_eq!(b.n_active(), 2);
+        assert_eq!(b.n_prefix_entries(), 1, "short suffix must not insert");
+        assert!(b.active.iter().all(|s| !s.charges_shared));
+
+        let evicted = b.prefix.evict_lru_except(None).unwrap();
+        b.promote_entry_owner(evicted);
+        let owners = b.active.iter().filter(|s| s.charges_shared).count();
+        assert_eq!(owners, 1, "exactly one surviving fork takes the charge");
+        // the sealed pages are still shared between the two forks...
+        let shared = b.active[0].cache.shared_prefix_bytes();
+        assert!(shared > 0.0);
+        assert_eq!(shared, b.active[1].cache.shared_prefix_bytes());
+        // ...and the budget now charges them exactly once
+        let total_mem: f64 = b.active.iter().map(|s| s.cache.mem_bytes()).sum();
+        assert!(
+            (b.kv_used_bytes() - (total_mem - shared)).abs() < 1e-6,
+            "pages must be charged once after the entry is gone"
+        );
+    }
+
+    #[test]
+    fn fanout_decodes_candidates_in_one_round_and_returns_alts() {
+        let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
+        let (mut b, metrics) = mk_batcher(cfg.clone(), false);
+        let (j, r) = job_with(Request {
+            id: 9,
+            prompt: "2,7,4>".into(),
+            max_new: 4,
+            method: String::new(),
+            fanout: 3,
+        });
+        b.enqueue(j);
+        b.admit();
+        assert_eq!(b.n_active(), 3, "one prefill seats all candidates");
+        run_to_completion(&mut b, 64);
+        let resp = r.try_recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.alts.len(), 2);
+        assert_eq!(metrics.lock().unwrap().fanout_sessions, 2);
+        assert_eq!(metrics.lock().unwrap().completed, 1);
+
+        // the primary stream must be exactly the greedy (fanout = 1) stream
+        let (mut b1, _m) = mk_batcher(
+            BatcherConfig { default_method: "full".into(), ..Default::default() },
+            false,
+        );
+        let (j1, r1) = job(10, "2,7,4>", 4);
+        b1.enqueue(j1);
+        run_to_completion(&mut b1, 64);
+        assert_eq!(resp.text, r1.try_recv().unwrap().text);
+    }
+
+    #[test]
+    fn top_tokens_orders_by_logit_and_matches_argmax() {
+        let logits = [0.1f32, 3.0, 2.0, 3.0, -1.0];
+        assert_eq!(top_tokens(&logits, 3), vec![1, 3, 2]);
+        assert_eq!(top_tokens(&logits, 1)[0] as usize, argmax(&logits));
+        assert_eq!(top_tokens(&logits, 99).len(), 5);
+    }
+
+    #[test]
+    fn prefix_cache_longest_match_and_lru() {
+        let mut pc = PrefixCache::new(2);
+        let mk_state = |ids: &[u32]| PrefixState {
+            tokens: ids.to_vec(),
+            ks: vec![vec![0.0; ids.len()]],
+            vs: vec![vec![0.0; ids.len()]],
+            logits: vec![0.0; 4],
+        };
+        let shape = CacheShape { n_layers: 1, n_heads: 2, n_kv_heads: 1, head_dim: 8 };
+        let proto = || -> Box<dyn KvCache> { Box::new(crate::cache::full::FullCache::new(shape)) };
+        pc.insert("full".into(), mk_state(&[1, 2]), proto());
+        pc.insert("full".into(), mk_state(&[1, 2, 3, 4]), proto());
+        // longest match wins
+        let hit = pc.lookup("full", &[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(pc.entries[hit].state.tokens, vec![1, 2, 3, 4]);
+        // method must match
+        assert!(pc.lookup("kivi:bits=2", &[1, 2, 3]).is_none());
+        // non-prefix must miss
+        assert!(pc.lookup("full", &[2, 2, 3]).is_none());
+        // duplicate insert is a no-op
+        pc.insert("full".into(), mk_state(&[1, 2]), proto());
+        assert_eq!(pc.entries.len(), 2);
+        // capacity evicts the LRU ([1,2] was hit less recently than [1,2,3,4])
+        let _ = pc.lookup("full", &[1, 2, 3, 4, 5]);
+        pc.insert("full".into(), mk_state(&[9, 9, 9]), proto());
+        assert_eq!(pc.entries.len(), 2);
+        assert!(pc.lookup("full", &[1, 2]).is_none(), "LRU entry evicted");
+        assert!(pc.lookup("full", &[1, 2, 3, 4]).is_some());
     }
 }

@@ -30,7 +30,11 @@ fn response_json(r: &Response) -> String {
         ("ttft_ms", json::num(r.ttft_ms)),
         ("total_ms", json::num(r.total_ms)),
         ("kv_ratio", json::num(r.kv_ratio)),
+        ("prefix_hit", Json::Bool(r.prefix_hit)),
     ];
+    if !r.alts.is_empty() {
+        fields.push(("alts", json::arr(r.alts.iter().map(|a| json::s(a)).collect())));
+    }
     if let Some(e) = &r.error {
         fields.push(("error", json::s(e)));
     }
@@ -70,11 +74,17 @@ fn handle_conn(
             }
             _ => {}
         }
+        let fanout = parsed
+            .get("fanout")
+            .as_usize()
+            .or_else(|| parsed.get("best_of").as_usize())
+            .unwrap_or(1);
         let request = Request {
             id: NEXT_ID.fetch_add(1, Ordering::SeqCst),
             prompt: parsed.get("prompt").as_str().unwrap_or("").to_string(),
             max_new: parsed.get("max_new").as_usize().unwrap_or(16),
             method: parsed.get("method").as_str().unwrap_or("").to_string(),
+            fanout,
         };
         let (rtx, rrx) = channel();
         if jobs.send(Job { request, reply: rtx }).is_err() {
@@ -141,8 +151,7 @@ mod tests {
     use crate::server::batcher::{self, BatcherConfig};
     use std::io::{BufRead, BufReader, Write};
 
-    #[test]
-    fn end_to_end_tcp_roundtrip() {
+    fn spawn_server() -> std::net::SocketAddr {
         let engine = Arc::new(Engine::new(tiny_weights(17)));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let (jtx, jrx) = channel();
@@ -157,13 +166,17 @@ mod tests {
             )
         });
         let (atx, arx) = channel();
-        let m3 = metrics.clone();
         std::thread::spawn(move || {
-            serve("127.0.0.1:0", jtx, m3, move |a| {
+            serve("127.0.0.1:0", jtx, metrics, move |a| {
                 let _ = atx.send(a);
             })
         });
-        let addr = arx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        arx.recv_timeout(std::time::Duration::from_secs(10)).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_tcp_roundtrip() {
+        let addr = spawn_server();
         let mut conn = std::net::TcpStream::connect(addr).unwrap();
         writeln!(conn, r#"{{"prompt": "2,1>", "max_new": 4}}"#).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -177,6 +190,44 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("completed"));
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn oov_prompt_round_trips_as_error_and_server_survives() {
+        // regression for the tasks::char_id panic: an out-of-vocabulary
+        // character in a request must come back as a JSON error reply on
+        // the same connection, and the batcher must keep serving.
+        let addr = spawn_server();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(conn, "{{\"prompt\": \"caf\u{e9}\", \"max_new\": 3}}").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        let err = v.get("error").as_str().expect("OOV must reply an error");
+        assert!(err.contains("unsupported character"), "{line}");
+        // the same connection and batcher still serve valid requests
+        writeln!(conn, r#"{{"prompt": "1+2=", "max_new": 3}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn fanout_round_trip_returns_alternates() {
+        let addr = spawn_server();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(conn, r#"{{"prompt": "7,3,5>", "max_new": 4, "best_of": 3}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        let alts = v.get("alts").as_arr().expect("fanout reply carries alts");
+        assert_eq!(alts.len(), 2, "{line}");
         writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
     }
 }

@@ -10,6 +10,21 @@ pub struct Metrics {
     pub completed: u64,
     pub rejected: u64,
     pub tokens_generated: u64,
+    /// prompt tokens actually run through the engine's prefill (a
+    /// prefix-cache hit adds only the suffix length — the saved work is
+    /// visible as the gap to `prefill_tokens_total`)
+    pub prefill_tokens: u64,
+    /// prompt tokens across all admitted requests (prefix + suffix)
+    pub prefill_tokens_total: u64,
+    /// admissions served from the shared-prefix cache
+    pub prefix_hits: u64,
+    /// admissions that ran a cold prefill
+    pub prefix_misses: u64,
+    /// accumulated bytes that forks shared with a prototype at admission
+    /// time (charged once by the budget instead of per session)
+    pub shared_bytes: f64,
+    /// sessions created beyond one per request (fan-out candidates)
+    pub fanout_sessions: u64,
     pub ttft_ms: Vec<f64>,
     pub per_token_ms: Vec<f64>,
     pub kv_ratios: Vec<f64>,
@@ -55,6 +70,19 @@ impl Metrics {
             let mean: f64 = self.kv_ratios.iter().sum::<f64>() / self.kv_ratios.len() as f64;
             s += &format!("\nKV size : {:.1}% of full cache (mean)", 100.0 * mean);
         }
+        if self.prefix_hits + self.prefix_misses > 0 {
+            s += &format!(
+                "\nprefix  : {} hits / {} misses, prefilled {}/{} prompt tokens, {:.1} KiB shared",
+                self.prefix_hits,
+                self.prefix_misses,
+                self.prefill_tokens,
+                self.prefill_tokens_total,
+                self.shared_bytes / 1024.0
+            );
+        }
+        if self.fanout_sessions > 0 {
+            s += &format!("\nfanout  : {} extra candidate sessions", self.fanout_sessions);
+        }
         s
     }
 }
@@ -72,9 +100,19 @@ mod tests {
         m.ttft_ms.extend([1.0, 3.0]);
         m.per_token_ms.extend([0.5, 0.7, 0.6]);
         m.kv_ratios.push(0.25);
+        m.prefix_hits = 1;
+        m.prefix_misses = 2;
+        m.prefill_tokens = 30;
+        m.prefill_tokens_total = 50;
+        m.shared_bytes = 2048.0;
+        m.fanout_sessions = 3;
         let r = m.report();
         assert!(r.contains("completed=2"));
         assert!(r.contains("TTFT"));
+        assert!(r.contains("1 hits / 2 misses"), "{r}");
+        assert!(r.contains("30/50 prompt tokens"), "{r}");
+        assert!(r.contains("2.0 KiB shared"), "{r}");
+        assert!(r.contains("3 extra candidate"), "{r}");
         assert!(m.throughput_tok_s() > 0.0);
     }
 }

@@ -33,19 +33,59 @@ pub struct Request {
     pub max_new: usize,
     /// cache-method spec; empty = server default
     pub method: String,
+    /// candidate sessions decoded from one prefill (`best_of` fan-out):
+    /// candidate `i` starts from the i-th most likely first token, all
+    /// candidates fork the same prefilled cache and advance in the same
+    /// decode round. 0 or 1 = a single greedy continuation.
+    pub fanout: usize,
+}
+
+impl Request {
+    /// A plain single-continuation request (the common case in tests).
+    pub fn greedy(
+        id: u64,
+        prompt: impl Into<String>,
+        max_new: usize,
+        method: impl Into<String>,
+    ) -> Self {
+        Request { id, prompt: prompt.into(), max_new, method: method.into(), fanout: 1 }
+    }
 }
 
 /// The server's reply.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// the primary (greedy, top-first-token) continuation
     pub text: String,
+    /// alternate continuations, one per extra fan-out candidate
+    pub alts: Vec<String>,
     pub n_prompt: usize,
     pub n_generated: usize,
     pub ttft_ms: f64,
     pub total_ms: f64,
     pub kv_ratio: f64,
+    /// whether the prompt was served from the shared-prefix cache
+    pub prefix_hit: bool,
     pub error: Option<String>,
+}
+
+impl Response {
+    /// An error reply for a request that never started decoding.
+    pub fn failed(id: u64, n_prompt: usize, error: String) -> Self {
+        Response {
+            id,
+            text: String::new(),
+            alts: Vec::new(),
+            n_prompt,
+            n_generated: 0,
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+            kv_ratio: 0.0,
+            prefix_hit: false,
+            error: Some(error),
+        }
+    }
 }
 
 /// A request plus its reply channel (what the batcher consumes).

@@ -207,4 +207,130 @@ mod tests {
         assert!(e4m3_to_f32(f32_to_e4m3(f32::NAN)).is_nan());
         assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
     }
+
+    // ---- property suite (util/prop.rs): E4M3 ---------------------------
+
+    #[test]
+    fn e4m3_roundtrip_is_identity_on_every_representable_code() {
+        // decode → encode must reproduce every non-NaN code exactly,
+        // including -0.0 (0x80) and the ±448 endpoints.
+        for code in 0..=0xffu16 {
+            let code = code as u8;
+            if code & 0x7f == 0x7f {
+                continue; // NaN patterns
+            }
+            let v = e4m3_to_f32(code);
+            assert_eq!(f32_to_e4m3(v), code, "code {code:#04x} (value {v})");
+        }
+    }
+
+    #[test]
+    fn e4m3_encoding_is_monotone_property() {
+        Prop::new(256).check("e4m3_monotone", |rng, _| {
+            let a = rng.range_f32(-500.0, 500.0);
+            let b = rng.range_f32(-500.0, 500.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let (dl, dh) = (e4m3_to_f32(f32_to_e4m3(lo)), e4m3_to_f32(f32_to_e4m3(hi)));
+            if dl <= dh {
+                Ok(())
+            } else {
+                Err(format!("{lo} → {dl} but {hi} → {dh}"))
+            }
+        });
+    }
+
+    #[test]
+    fn e4m3_ties_round_to_even_codes() {
+        // the exact midpoint of every adjacent pair must take the even code
+        // (both signs; midpoints of adjacent e4m3 values are f32-exact)
+        for lo in 0..126u8 {
+            let (a, b) = (e4m3_to_f32(lo), e4m3_to_f32(lo + 1));
+            let mid = (a + b) / 2.0;
+            let want = if lo & 1 == 0 { lo } else { lo + 1 };
+            assert_eq!(f32_to_e4m3(mid), want, "midpoint of {a} and {b}");
+            assert_eq!(f32_to_e4m3(-mid), 0x80 | want, "negative midpoint");
+        }
+    }
+
+    #[test]
+    fn e4m3_saturates_at_448_property() {
+        assert_eq!(f32_to_e4m3(448.0), 0x7e);
+        assert_eq!(f32_to_e4m3(f32::INFINITY), 0x7e);
+        assert_eq!(f32_to_e4m3(f32::NEG_INFINITY), 0xfe);
+        Prop::new(128).check("e4m3_saturation", |rng, _| {
+            let v = rng.range_f32(448.0, 1e9);
+            let enc = f32_to_e4m3(v);
+            let dec = e4m3_to_f32(enc);
+            if enc == 0x7e && dec == 448.0 && f32_to_e4m3(-v) == 0xfe {
+                Ok(())
+            } else {
+                Err(format!("{v} → code {enc:#04x}, value {dec}"))
+            }
+        });
+    }
+
+    #[test]
+    fn e4m3_nan_maps_to_0x7f() {
+        assert_eq!(f32_to_e4m3(f32::NAN), 0x7f);
+        assert_eq!(f32_to_e4m3(-f32::NAN), 0x7f);
+    }
+
+    // ---- property suite: FP16 ------------------------------------------
+
+    #[test]
+    fn f16_roundtrip_is_identity_on_every_representable_code() {
+        // decode → encode over the whole 16-bit space (minus NaNs),
+        // covering subnormals, ±0, ±inf and both exponent extremes.
+        for h in 0..=0xffffu32 {
+            let h = h as u16;
+            if h & 0x7fff > 0x7c00 {
+                continue; // NaN patterns
+            }
+            let v = f16_to_f32(h);
+            assert_eq!(f32_to_f16(v), h, "bits {h:#06x} (value {v})");
+        }
+    }
+
+    #[test]
+    fn f16_encoding_is_monotone_property() {
+        Prop::new(256).check("f16_monotone", |rng, _| {
+            let a = rng.range_f32(-70000.0, 70000.0);
+            let b = rng.range_f32(-70000.0, 70000.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let (dl, dh) = (f16_to_f32(f32_to_f16(lo)), f16_to_f32(f32_to_f16(hi)));
+            if dl <= dh {
+                Ok(())
+            } else {
+                Err(format!("{lo} → {dl} but {hi} → {dh}"))
+            }
+        });
+    }
+
+    #[test]
+    fn f16_ties_round_to_even_codes() {
+        // midpoints of adjacent finite halves (normal and subnormal, both
+        // exponent-boundary and interior) must take the even code
+        for h in [0x0000u16, 0x0001, 0x03fe, 0x03ff, 0x0400, 0x3bff, 0x3c00, 0x7bfe] {
+            let (a, b) = (f16_to_f32(h), f16_to_f32(h + 1));
+            let mid = (a + b) / 2.0;
+            let want = if h & 1 == 0 { h } else { h + 1 };
+            assert_eq!(f32_to_f16(mid), want, "midpoint of {a} and {b}");
+            assert_eq!(f32_to_f16(-mid), 0x8000 | want, "negative midpoint");
+        }
+    }
+
+    #[test]
+    fn f16_saturates_to_infinity_beyond_max_finite() {
+        assert_eq!(f32_to_f16(65504.0), 0x7bff);
+        assert_eq!(f32_to_f16(70000.0), 0x7c00);
+        assert_eq!(f32_to_f16(-70000.0), 0xfc00);
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_nan_maps_to_quiet_nan_bits() {
+        assert_eq!(f32_to_f16(f32::NAN), 0x7e00);
+        assert!(f16_to_f32(0x7e00).is_nan());
+    }
 }

@@ -19,17 +19,39 @@ pub fn vocab_size() -> usize {
     SPECIALS + VOCAB_CHARS.len()
 }
 
-/// Token id of a character (panics on out-of-vocabulary — a format bug).
+/// Token id of a character, or `None` when out of vocabulary.
+pub fn try_char_id(c: char) -> Option<u32> {
+    VOCAB_CHARS.find(c).map(|i| (SPECIALS + i) as u32)
+}
+
+/// Token id of a character (panics on out-of-vocabulary — a format bug in
+/// *generated* text; external input must go through [`try_encode`]).
 pub fn char_id(c: char) -> u32 {
-    (SPECIALS + VOCAB_CHARS.find(c).unwrap_or_else(|| panic!("OOV char {c:?}"))) as u32
+    try_char_id(c).unwrap_or_else(|| panic!("OOV char {c:?}"))
 }
 
 pub fn newline_id() -> u32 {
     char_id('\n')
 }
 
+/// Encode text that is known to be in-vocabulary (task generators,
+/// round-trips of decoded output). Panics on OOV — see [`try_encode`] for
+/// the fallible path that server requests must take.
 pub fn encode(text: &str) -> Vec<u32> {
     text.chars().map(char_id).collect()
+}
+
+/// Fallible encoding for untrusted input (server requests): reports the
+/// first out-of-vocabulary character and its position instead of
+/// panicking, so a malformed request becomes an error reply rather than a
+/// crashed batcher thread.
+pub fn try_encode(text: &str) -> Result<Vec<u32>, String> {
+    text.chars()
+        .enumerate()
+        .map(|(i, c)| {
+            try_char_id(c).ok_or_else(|| format!("unsupported character {c:?} at position {i}"))
+        })
+        .collect()
 }
 
 /// Encode, silently dropping out-of-vocabulary characters (server inputs).
@@ -304,6 +326,16 @@ mod tests {
         let s = "a=3;b=a+4;b?7\nk01=v02";
         assert_eq!(decode(&encode(s)), s);
         assert_eq!(vocab_size(), 57);
+    }
+
+    #[test]
+    fn try_encode_reports_oov_instead_of_panicking() {
+        assert_eq!(try_encode("a=3;a?").unwrap(), encode("a=3;a?"));
+        let err = try_encode("ab\u{e9}cd").unwrap_err();
+        assert!(err.contains('\u{e9}') && err.contains("position 2"), "{err}");
+        assert!(try_encode("UPPER").is_err(), "uppercase is out of vocab");
+        assert_eq!(try_char_id('a'), Some(char_id('a')));
+        assert_eq!(try_char_id('é'), None);
     }
 
     #[test]

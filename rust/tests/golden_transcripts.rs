@@ -1,0 +1,243 @@
+//! Golden-transcript regression tests: pin the exact greedy token streams
+//! of every cache backend × model size on fixed seeds, and enforce the
+//! fork-parity contract of the shared-prefix serving path.
+//!
+//! **Snapshot mechanics.** The pinned streams live in
+//! `tests/goldens/transcripts.snap`. When the file is missing (fresh
+//! checkout before anyone recorded, or after an intentional `rm` to
+//! re-pin) the test records the current streams and passes with a notice;
+//! when present, any deviation — a kernel tweak, a cache refactor, an OMP
+//! change that silently alters decode output — fails loudly with a diff
+//! hint and writes `transcripts.snap.new` for inspection. CI runs the
+//! suite twice back to back so a fresh runner still verifies record ≡
+//! replay; committing the snapshot pins streams across machines.
+//!
+//! **Fork parity** needs no stored constants: a forked session's
+//! continuation must be token-identical to the original's, and
+//! `fork(prefix prototype)` + suffix prefill + greedy decode must be
+//! token-identical to a cold session prefilled on the full prompt — for
+//! every backend (score-state backends are exercised in regimes where
+//! split prefill is exact; their `split_prefill_exact()` contract is
+//! asserted, which is what keeps the production prefix cache away from
+//! the inexact regimes).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::{CacheShape, KvCache};
+use lexico::dict::{Dictionary, DictionarySet};
+use lexico::model::testutil::{tiny_weights, tiny_weights_deep};
+use lexico::model::Engine;
+use lexico::tasks;
+use lexico::tensor::argmax;
+
+const N_DECODE: usize = 16;
+const PROMPT: &str = "k01=v42;k07=v13;k01?";
+
+/// Backend specs pinned by the snapshot (every backend family, both
+/// coefficient precisions for lexico).
+const SPECS: [&str; 8] = [
+    "full",
+    "lexico:s=2,nb=4",
+    "lexico:s=2,nb=4,fp16",
+    "kivi:bits=4,g=4,nb=4",
+    "pertoken:bits=8,g=8,nb=2",
+    "zipcache:hi=4,lo=2,g=8,frac=0.25,nb=8",
+    "snapkv:cap=24,win=4",
+    "pyramidkv:cap=24,win=4",
+];
+
+fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+    Arc::new(DictionarySet {
+        keys: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 1000 + i as u64))
+            .collect(),
+        values: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 2000 + i as u64))
+            .collect(),
+    })
+}
+
+fn engines() -> Vec<(&'static str, Engine)> {
+    vec![
+        ("S", Engine::new(tiny_weights(101))),
+        ("deep", Engine::new(tiny_weights_deep(202))),
+    ]
+}
+
+fn ctx_for(engine: &Engine) -> CacheContext {
+    CacheContext { shape: engine.shape(), dicts: Some(tiny_dicts(engine.shape(), 64)) }
+}
+
+fn prompt_ids() -> Vec<u32> {
+    let mut ids = vec![tasks::BOS];
+    ids.extend(tasks::encode(PROMPT));
+    ids
+}
+
+/// Greedy generator state: `tok` is the next token to emit, the cache
+/// holds positions `0..pos`.
+#[derive(Clone, Copy)]
+struct Gen {
+    tok: u32,
+    pos: usize,
+}
+
+/// Emit `n` tokens greedily, advancing the cache.
+fn advance(engine: &Engine, cache: &mut dyn KvCache, g: &mut Gen, n: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(g.tok);
+        let logits = engine.decode_step(g.tok, g.pos, cache);
+        g.tok = argmax(&logits) as u32;
+        g.pos += 1;
+    }
+    out
+}
+
+fn cold_stream(engine: &Engine, ctx: &CacheContext, spec: &str, n: usize) -> Vec<u32> {
+    let ids = prompt_ids();
+    let mut cache = build_cache(spec, ctx).unwrap();
+    let logits = engine.prefill(&ids, &mut *cache);
+    let mut g = Gen { tok: argmax(&logits) as u32, pos: ids.len() };
+    advance(engine, &mut *cache, &mut g, n)
+}
+
+fn snap_path(suffix: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("tests/goldens/transcripts{suffix}"))
+}
+
+#[test]
+fn golden_transcripts_pin_greedy_decode_streams() {
+    let mut current = String::new();
+    for (size, engine) in engines() {
+        let ctx = ctx_for(&engine);
+        for spec in SPECS {
+            let stream = cold_stream(&engine, &ctx, spec, N_DECODE);
+            let toks: Vec<String> = stream.iter().map(u32::to_string).collect();
+            current.push_str(&format!("{size}/{spec}: {}\n", toks.join(" ")));
+        }
+    }
+    let path = snap_path(".snap");
+    match std::fs::read_to_string(&path) {
+        Ok(pinned) if !pinned.trim().is_empty() => {
+            if pinned != current {
+                let new_path = snap_path(".snap.new");
+                let _ = std::fs::write(&new_path, &current);
+                let mismatch: Vec<&str> = pinned
+                    .lines()
+                    .zip(current.lines())
+                    .filter(|(a, b)| a != b)
+                    .map(|(a, _)| a.split(':').next().unwrap_or(a))
+                    .collect();
+                panic!(
+                    "greedy decode streams changed for {mismatch:?} — a kernel or cache \
+                     change altered decode output. If intentional, replace {} with {} \
+                     (or delete the .snap and re-run to re-record).",
+                    path.display(),
+                    new_path.display()
+                );
+            }
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &current).unwrap();
+            eprintln!("recorded golden transcripts at {}", path.display());
+        }
+    }
+}
+
+/// A fork taken mid-decode must continue token-identically to the
+/// original, and mutating the fork must not perturb the original — for
+/// every backend, including adaptive lexico (deep-copied overlay).
+#[test]
+fn fork_midstream_continuation_is_token_identical_for_every_backend() {
+    let mut forked_specs = SPECS.to_vec();
+    forked_specs.push("lexico:s=2,nb=4,adaptive=16:0.3");
+    for (size, engine) in engines() {
+        let ctx = ctx_for(&engine);
+        for &spec in &forked_specs {
+            let reference = cold_stream(&engine, &ctx, spec, 12);
+
+            let ids = prompt_ids();
+            let mut cache = build_cache(spec, &ctx).unwrap();
+            let logits = engine.prefill(&ids, &mut *cache);
+            let mut g = Gen { tok: argmax(&logits) as u32, pos: ids.len() };
+            let head = advance(&engine, &mut *cache, &mut g, 4);
+            assert_eq!(head, reference[..4], "{size}/{spec}: pre-fork drift");
+
+            let mut fork = cache.fork();
+            let mut gf = g; // generator state forks with the cache
+            let fork_tail = advance(&engine, &mut *fork, &mut gf, 8);
+            assert_eq!(fork_tail, reference[4..12], "{size}/{spec}: fork diverged");
+            // push the fork further so it mutates past the shared point
+            let _ = advance(&engine, &mut *fork, &mut gf, 2);
+
+            let tail = advance(&engine, &mut *cache, &mut g, 8);
+            assert_eq!(
+                tail,
+                &reference[4..12],
+                "{size}/{spec}: fork mutation leaked into the original"
+            );
+        }
+    }
+}
+
+/// The prefix-cache serving path, end to end at the engine level: fork a
+/// prefix prototype, prefill only the suffix, decode greedily — the token
+/// stream must be identical to a cold session prefilled on the whole
+/// prompt. Score-state backends run in regimes where their prefill
+/// decisions cannot differ (under eviction capacity / inside the
+/// residual window); their `split_prefill_exact()` must still be `false`,
+/// which is what keeps the production prefix cache away from the regimes
+/// where they *would* diverge.
+#[test]
+fn fork_plus_suffix_prefill_matches_cold_prefill_for_every_backend() {
+    // (spec, exact): `exact` mirrors KvCache::split_prefill_exact
+    let cases: [(&str, bool); 8] = [
+        ("full", true),
+        ("lexico:s=2,nb=4", true),
+        ("lexico:s=2,nb=4,fp16", true),
+        ("kivi:bits=4,g=4,nb=4", true),
+        ("pertoken:bits=8,g=8,nb=2", true),
+        // nothing spills within the test horizon → salience never consulted
+        ("zipcache:hi=4,lo=2,g=8,frac=0.25,nb=96", false),
+        // prompt stays under capacity → no eviction decision to differ
+        ("snapkv:cap=100,win=4", false),
+        ("pyramidkv:cap=100,win=4", false),
+    ];
+    for (size, engine) in engines() {
+        let ctx = ctx_for(&engine);
+        let ids = prompt_ids();
+        let split = 12; // prefix "k01=v42;k07" ++ suffix "=v13;k01?"
+        for (spec, exact) in cases {
+            assert_eq!(
+                build_cache(spec, &ctx).unwrap().split_prefill_exact(),
+                exact,
+                "{spec}: split_prefill_exact contract"
+            );
+            // cold reference
+            let mut cold = build_cache(spec, &ctx).unwrap();
+            let logits = engine.prefill(&ids, &mut *cold);
+            let mut gc = Gen { tok: argmax(&logits) as u32, pos: ids.len() };
+            let want = advance(&engine, &mut *cold, &mut gc, 12);
+
+            // prototype prefilled on the prefix, then fork + suffix
+            let mut proto = build_cache(spec, &ctx).unwrap();
+            let (_, state) = engine.prefill_capture(&ids[..split], &mut *proto);
+            let mut sess = proto.fork();
+            let logits = engine.prefill_suffix(&state, &ids[split..], &mut *sess);
+            let mut gs = Gen { tok: argmax(&logits) as u32, pos: ids.len() };
+            let got = advance(&engine, &mut *sess, &mut gs, 12);
+
+            assert_eq!(got, want, "{size}/{spec}: prefix-cache path altered the stream");
+            assert_eq!(
+                sess.mem_bytes(),
+                cold.mem_bytes(),
+                "{size}/{spec}: split prefill left a different footprint"
+            );
+            assert_eq!(sess.tokens(), cold.tokens(), "{size}/{spec}");
+        }
+    }
+}

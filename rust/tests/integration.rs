@@ -213,18 +213,14 @@ fn serve_with_lexico_backend() {
         default_method: "lexico:s=4,nb=8".into(),
         kv_budget_bytes: 8.0 * 1024.0 * 1024.0,
         max_sessions: 8,
+        ..Default::default()
     };
     let handle = std::thread::spawn(move || run(engine, Some(dicts), cfg, rx, m2));
     let mut replies = Vec::new();
     for i in 0..6 {
         let (rtx, rrx) = channel();
         tx.send(Job {
-            request: Request {
-                id: i,
-                prompt: format!("k0{i}=v42;k0{i}?"),
-                max_new: 6,
-                method: String::new(),
-            },
+            request: Request::greedy(i, format!("k0{i}=v42;k0{i}?"), 6, ""),
             reply: rtx,
         })
         .unwrap();
