@@ -1,29 +1,41 @@
 //! Engine comparison bench: native decode vs PJRT decode (dense cache),
 //! plus native decode across every cache backend at a long context — the
-//! end-to-end per-token cost of each compression method — and the
+//! end-to-end per-token cost of each compression method — the
 //! batched-throughput sweep: B concurrent sessions advanced per round by
 //! `Engine::decode_batch` (the batch-first serving pipeline), reporting
-//! per-token latency and aggregate tokens/s at B ∈ {1, 4, 16}.
+//! per-token latency and aggregate tokens/s at B ∈ {1, 4, 16} — and the
+//! thread-scaling sweep T ∈ {1, 2, 4, 8} × B ∈ {1, 4, 16} over the exec
+//! pool, reporting tokens/s and parallel efficiency.
 //!
-//!   cargo bench --bench decode_engines
+//!   cargo bench --bench decode_engines [-- --threads N]
 
 use std::sync::Arc;
 
 use lexico::cache::factory::{build_cache, CacheContext};
 use lexico::cache::KvCache;
 use lexico::dict::DictionarySet;
+use lexico::exec::ExecPool;
 use lexico::model::{Engine, Weights};
 use lexico::tasks;
 use lexico::util::rng::Rng;
 use lexico::util::stats::{bench_ms, report};
 
 fn main() -> anyhow::Result<()> {
+    // --threads N (or --threads=N) sizes the default pool for the backend
+    // comparison sections; the scaling sweep below builds its own pools.
+    let argv: Vec<String> = std::env::args().collect();
+    if let Some(t) = lexico::exec::threads_from_args(&argv).map_err(anyhow::Error::msg)? {
+        if !lexico::exec::configure_default(t) {
+            eprintln!("warning: exec pool already initialized; --threads {t} ignored");
+        }
+    }
     let art = lexico::artifacts_dir();
     if !art.join("model_M.bin").exists() {
         println!("artifacts missing — run `make artifacts` first");
         return Ok(());
     }
     let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
+    println!("default exec pool: {} threads\n", engine.pool().threads());
     let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
     let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
     let mut rng = Rng::new(5);
@@ -86,6 +98,48 @@ fn main() -> anyhow::Result<()> {
                 1e3 / per_tok,
                 base / per_tok
             );
+        }
+    }
+
+    // Thread-scaling sweep: T × B over the exec layer. Each T gets its own
+    // engine pinned to a T-thread pool; sessions fork one prefilled
+    // prototype (cheap, and exactly the serving path). Reported per cell:
+    // amortized ms/token, aggregate tokens/s, speedup over T=1 at the same
+    // B, and parallel efficiency (speedup / T). Determinism means every
+    // cell decodes the identical token stream — only the clock changes.
+    println!("\nthread-scaling sweep (decode_batch, lexico:s=8,nb=32) at context {}:\n", prompt.len());
+    {
+        let spec = "lexico:s=8,nb=32";
+        let mut base_tok_s = std::collections::BTreeMap::new(); // B → tok/s at T=1
+        for &threads in &[1usize, 2, 4, 8] {
+            let pool = Arc::new(ExecPool::new(threads));
+            let eng_t = Engine::with_pool(Weights::load(art.join("model_M.bin"))?, pool.clone());
+            for &bsz in &[1usize, 4, 16] {
+                let mut proto = build_cache(spec, &ctx)?;
+                proto.set_pool(pool.clone());
+                let _ = eng_t.prefill(&prompt, &mut *proto);
+                let mut caches: Vec<Box<dyn KvCache>> =
+                    (0..bsz - 1).map(|_| proto.fork()).collect();
+                caches.push(proto);
+                let toks: Vec<u32> = vec![7; bsz];
+                let mut pos = prompt.len();
+                let st = bench_ms(3, 20, || {
+                    let poss: Vec<usize> = vec![pos; bsz];
+                    let mut refs: Vec<&mut dyn KvCache> =
+                        caches.iter_mut().map(|c| &mut **c).collect();
+                    let _ = eng_t.decode_batch(&toks, &poss, &mut refs);
+                    pos += 1;
+                });
+                let tok_s = bsz as f64 * 1e3 / st.mean;
+                let base = *base_tok_s.entry(bsz).or_insert(tok_s);
+                let speedup = tok_s / base;
+                println!(
+                    "T={threads:<2} B={bsz:<3} {:>9.4} ms/token  {:>8.1} tok/s  speedup ×{speedup:<5.2} efficiency {:>5.1}%",
+                    st.mean / bsz as f64,
+                    tok_s,
+                    100.0 * speedup / threads as f64
+                );
+            }
         }
     }
 

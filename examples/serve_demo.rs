@@ -3,7 +3,11 @@
 //! throughput / KV-size metrics — the memory-bound-serving story of the
 //! paper (§1): smaller KV per session ⇒ more sessions per budget.
 //!
-//!   cargo run --release --example serve_demo
+//!   cargo run --release --example serve_demo [-- --threads N]
+//!
+//! `--threads N` sizes the worker pool the coordinator runs on (default:
+//! LEXICO_THREADS, then available parallelism); token streams are bitwise
+//! identical at every thread count.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -18,8 +22,16 @@ use lexico::tasks;
 use lexico::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
+    // --threads N (or --threads=N): size the exec pool before the engine
+    let argv: Vec<String> = std::env::args().collect();
+    if let Some(t) = lexico::exec::threads_from_args(&argv).map_err(anyhow::Error::msg)? {
+        if !lexico::exec::configure_default(t) {
+            eprintln!("warning: exec pool already initialized; --threads {t} ignored");
+        }
+    }
     let art = lexico::artifacts_dir();
     let engine = Arc::new(Engine::new(Weights::load(art.join("model_M.bin"))?));
+    println!("exec pool: {} threads", engine.pool().threads());
     let dicts = Arc::new(lexico::dict::DictionarySet::load(art.join("dict_M_N1024.bin"))?);
     let metrics = Arc::new(Mutex::new(Metrics::new()));
 

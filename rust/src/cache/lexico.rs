@@ -639,7 +639,7 @@ impl KvCache for LexicoCache {
         Box::new(LexicoCache {
             shape: self.shape,
             ws: OmpWorkspace::new(n_cap, m, self.cfg.sparsity.max(1)),
-            bws: BatchOmpWorkspace::new(),
+            bws: BatchOmpWorkspace::with_pool(self.bws.pool().clone()),
             cfg: self.cfg.clone(),
             dicts: self.dicts.clone(),
             adaptive_k: self.adaptive_k.clone(),
@@ -672,6 +672,12 @@ impl KvCache for LexicoCache {
     /// path compresses vector-by-vector independently.
     fn split_prefill_exact(&self) -> bool {
         self.cfg.adaptive.is_none()
+    }
+
+    /// Overflow compression (the GEMM-batched OMP encoder) runs on `pool`;
+    /// codes are bitwise independent of the pool's thread count.
+    fn set_pool(&mut self, pool: Arc<crate::exec::ExecPool>) {
+        self.bws.set_pool(pool);
     }
 
     fn tokens(&self) -> usize {

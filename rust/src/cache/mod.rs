@@ -127,6 +127,15 @@ pub trait KvCache: Send {
         0.0
     }
 
+    /// Route this cache's internal compute (Lexico's batched-OMP overflow
+    /// compression) onto `pool` — the batcher calls this so every cache it
+    /// builds shares the serving pool. Results are bitwise independent of
+    /// the pool (the exec-layer determinism contract), so backends without
+    /// internal batch compute ignore it.
+    fn set_pool(&mut self, pool: std::sync::Arc<crate::exec::ExecPool>) {
+        let _ = pool;
+    }
+
     /// Whether `ingest_prefill(prefix)` followed by `ingest_prefill(suffix)`
     /// leaves state bitwise identical to one `ingest_prefill(prefix ++
     /// suffix)` call. True for backends whose compression decisions depend

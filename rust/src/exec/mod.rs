@@ -1,0 +1,460 @@
+//! Deterministic multi-core execution layer: a hand-rolled, dependency-free
+//! worker pool that every hot layer (GEMMs, batched OMP, per-session
+//! attention, the batcher round) shards onto.
+//!
+//! **Design.** [`ExecPool::new(threads)`](ExecPool::new) spawns `threads−1`
+//! persistent workers; the calling thread is always the `threads`-th worker,
+//! so a 1-thread pool runs everything inline with zero overhead and zero
+//! behavioural difference. [`ExecPool::parallel_for`] is a *scoped*
+//! parallel-for: it publishes a lifetime-erased reference to the closure,
+//! lets workers claim shard indices from an atomic counter, participates in
+//! the claiming itself, and returns only after every shard completed — so
+//! the closure may freely borrow the caller's stack. Nested `parallel_for`
+//! (a sharded session calling into the sharded OMP encoder) is safe: the
+//! inner caller drains its own shard queue before blocking, so progress
+//! never depends on a worker being free.
+//!
+//! **Determinism contract.** The pool schedules *work*, never *values*:
+//! every parallel kernel built on it partitions disjoint output elements
+//! across shards and computes each element with the exact floating-point
+//! operation sequence of its sequential twin. No partial sums are ever
+//! combined across shards, so results are bitwise identical at every thread
+//! count — the batch-parity and golden-transcript suites pass unchanged at
+//! `T ∈ {1, 2, 4, …}`. See DESIGN.md §7.
+//!
+//! The process-wide default pool ([`default_pool`]) is sized from
+//! `LEXICO_THREADS`, falling back to the machine's available parallelism;
+//! [`configure_default`] (the `--threads` CLI flag) overrides it before
+//! first use.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// One published batch of shards: a lifetime-erased task plus the claim /
+/// completion state. Workers hold it behind an `Arc`, so a worker waking
+/// late (after the job drained) finds `next ≥ n_shards` and goes back to
+/// sleep without ever touching the erased pointer.
+struct Job {
+    /// Erased `&dyn Fn(usize)` — only dereferenced between a successful
+    /// shard claim and the matching `pending` decrement, both of which
+    /// happen while the owning `parallel_for` call is still blocked.
+    task: *const (dyn Fn(usize) + Sync),
+    n_shards: usize,
+    /// next shard index to claim
+    next: AtomicUsize,
+    /// shards claimed-or-unclaimed that have not finished yet
+    pending: AtomicUsize,
+    /// set when any shard panicked; the publisher re-raises after the join
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `task` is only dereferenced while the publishing `parallel_for`
+// frame is alive (it waits for `pending == 0` before returning); all other
+// fields are Sync primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct State {
+    epoch: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+}
+
+/// Erase the borrow lifetime from a task so worker threads can hold it.
+///
+/// # Safety
+/// The returned pointer must only be dereferenced while the originating
+/// `parallel_for` call is still on the stack — the call joins all shards
+/// before returning, so the borrow outlives every dereference.
+#[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+unsafe fn erase_task<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync) {
+    std::mem::transmute(f)
+}
+
+/// Claim and run shards of `job` until its claim counter is exhausted,
+/// signalling completion when this thread finishes the last shard.
+///
+/// A shard that panics is caught here: the panic must not skip the
+/// `pending` decrement (the publisher would block forever) and must not
+/// unwind the publisher's own frame past the unpublish (a stale worker
+/// could then dereference the dangling task pointer). Instead the job is
+/// flagged and the publisher re-raises the panic after all shards joined.
+fn run_shards(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_shards {
+            break;
+        }
+        // SAFETY: a successful claim implies pending > 0, i.e. the
+        // publishing parallel_for is still blocked and the borrow is live.
+        let task = unsafe { &*job.task };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // AcqRel: this thread's shard writes are released to whoever sees
+        // the final decrement, and the final decrementer acquires every
+        // earlier worker's writes through the RMW chain.
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = job.done.lock().unwrap();
+            *done = true;
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(j) = st.job.clone() {
+                        break j;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        run_shards(&job);
+    }
+}
+
+/// A pool of persistent worker threads executing scoped parallel-for jobs
+/// over disjoint output shards. See the module docs for the determinism
+/// contract. Cheap to share behind an [`Arc`]; `Drop` joins the workers.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ExecPool {
+    /// A pool with `threads` total lanes of parallelism (the caller counts
+    /// as one lane, so `threads − 1` worker threads are spawned; `threads`
+    /// is clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lexico-exec-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        ExecPool { shared, handles, threads }
+    }
+
+    /// Pool sized from `LEXICO_THREADS`, falling back to the machine's
+    /// available parallelism (then 1).
+    pub fn from_env() -> Self {
+        let threads = std::env::var("LEXICO_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ExecPool::new(threads)
+    }
+
+    /// Total lanes of parallelism (worker threads + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(shard)` for every shard in `0..n_shards`, distributing shards
+    /// across the pool, and return once all shards completed. `f` may
+    /// borrow the caller's stack. Shards must write disjoint outputs; the
+    /// pool guarantees each index runs exactly once but promises nothing
+    /// about which thread runs it or in what order.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n_shards: usize, f: F) {
+        if n_shards == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n_shards == 1 {
+            for i in 0..n_shards {
+                f(i);
+            }
+            return;
+        }
+        let task_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: this frame blocks until every shard completed (below).
+        let task = unsafe { erase_task(task_ref) };
+        let job = Arc::new(Job {
+            task,
+            n_shards,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_shards),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is a full participant: it drains the claim queue
+        // before it ever blocks, so nested parallel_for cannot deadlock.
+        run_shards(&job);
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        // Unpublish (only if the slot still holds *this* job — a concurrent
+        // caller may already have replaced it) so the erased pointer never
+        // outlives this call.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.job.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+                st.job = None;
+            }
+        }
+        // Re-raise shard panics in the publisher, matching the sequential
+        // path's behaviour — only after the join + unpublish, so no worker
+        // can be left holding live work or a dangling pointer.
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("ExecPool: a parallel_for shard panicked (see output above)");
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Default pool
+// ---------------------------------------------------------------------------
+
+static DEFAULT: OnceLock<Arc<ExecPool>> = OnceLock::new();
+
+/// The process-wide default pool (created on first use from
+/// `LEXICO_THREADS` / available parallelism). `Engine::new` and fresh
+/// `BatchOmpWorkspace` instances run on this pool unless given another one
+/// explicitly.
+pub fn default_pool() -> Arc<ExecPool> {
+    DEFAULT.get_or_init(|| Arc::new(ExecPool::from_env())).clone()
+}
+
+/// Set the default pool size (the `--threads N` CLI flag). Returns `false`
+/// if the default pool was already created — callers should configure
+/// before touching any engine or cache.
+pub fn configure_default(threads: usize) -> bool {
+    DEFAULT.set(Arc::new(ExecPool::new(threads))).is_ok()
+}
+
+/// Parse `--threads N` / `--threads=N` out of a raw argv slice — the shared
+/// front-end for bench binaries and examples (the `lexico` CLI proper
+/// validates through its own flag parser). Returns `Err` on a present but
+/// malformed value so callers can report it instead of silently running on
+/// the default pool.
+pub fn threads_from_args(argv: &[String]) -> Result<Option<usize>, String> {
+    let raw = argv
+        .iter()
+        .position(|a| a == "--threads")
+        .map(|i| argv.get(i + 1).cloned().unwrap_or_default())
+        .or_else(|| argv.iter().find_map(|a| a.strip_prefix("--threads=").map(String::from)));
+    match raw {
+        None => Ok(None),
+        Some(v) => match v.parse::<usize>() {
+            Ok(t) if t >= 1 => Ok(Some(t)),
+            _ => Err(format!("--threads must be a positive integer, got '{v}'")),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SendPtr
+// ---------------------------------------------------------------------------
+
+/// A raw pointer that asserts cross-thread use is safe because every shard
+/// of a `parallel_for` touches a *disjoint* region behind it. This is the
+/// one escape hatch the parallel kernels use to hand each shard its slice
+/// of a shared output buffer.
+///
+/// # Safety
+/// The creator must guarantee that (a) concurrent shards never access
+/// overlapping elements through the pointer and (b) the pointee outlives
+/// the `parallel_for` call — both hold trivially for the
+/// output-partitioning kernels in this crate.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_shard_runs_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = ExecPool::new(threads);
+            for n in [0usize, 1, 2, 3, 17, 64, 257] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.parallel_for(n, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "shard {i} at T={threads} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_writes_are_visible_to_the_caller() {
+        let pool = ExecPool::new(4);
+        let mut out = vec![0u64; 1000];
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        pool.parallel_for(1000, move |i| {
+            // SAFETY: each shard writes exactly element i.
+            unsafe { *ptr.get().add(i) = (i as u64) * 3 + 1 };
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64) * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_rounds() {
+        let pool = ExecPool::new(3);
+        let total = AtomicU64::new(0);
+        for round in 0..200u64 {
+            pool.parallel_for(8, |i| {
+                total.fetch_add(round + i as u64, Ordering::Relaxed);
+            });
+        }
+        // Σ_round Σ_i (round + i) = 200·(0+..+7) + 8·(0+..+199)
+        let expect = 200 * 28 + 8 * (199 * 200 / 2);
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn nested_parallel_for_completes() {
+        let pool = ExecPool::new(4);
+        let grid = vec![AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)];
+        let cells = AtomicUsize::new(0);
+        pool.parallel_for(3, |outer| {
+            grid[outer].fetch_add(1, Ordering::Relaxed);
+            pool.parallel_for(5, |_inner| {
+                cells.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(cells.load(Ordering::Relaxed), 15);
+        for g in &grid {
+            assert_eq!(g.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn borrowed_state_is_safe_to_capture() {
+        // The scoped guarantee: the closure borrows a stack-local Vec.
+        let pool = ExecPool::new(2);
+        let data: Vec<usize> = (0..100).collect();
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(10, |s| {
+            let part: usize = data[s * 10..(s + 1) * 10].iter().sum();
+            sum.fetch_add(part, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline_in_order() {
+        let pool = ExecPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let order = Mutex::new(Vec::new());
+        pool.parallel_for(6, |i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn shard_panic_propagates_to_the_publisher_and_pool_survives() {
+        let pool = ExecPool::new(3);
+        let ran = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.parallel_for(8, |i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 3 {
+                    panic!("boom in shard 3");
+                }
+            });
+        }));
+        assert!(result.is_err(), "shard panic must re-raise in the publisher");
+        assert_eq!(ran.load(Ordering::Relaxed), 8, "panic must not strand other shards");
+        // the pool keeps working afterwards
+        let ok = AtomicUsize::new(0);
+        pool.parallel_for(5, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn threads_from_args_parses_both_flag_forms_and_rejects_garbage() {
+        let argv = |s: &[&str]| -> Vec<String> { s.iter().map(|a| a.to_string()).collect() };
+        assert_eq!(threads_from_args(&argv(&["bench"])), Ok(None));
+        assert_eq!(threads_from_args(&argv(&["bench", "--threads", "4"])), Ok(Some(4)));
+        assert_eq!(threads_from_args(&argv(&["bench", "--threads=2"])), Ok(Some(2)));
+        assert!(threads_from_args(&argv(&["bench", "--threads", "four"])).is_err());
+        assert!(threads_from_args(&argv(&["bench", "--threads", "0"])).is_err());
+        assert!(threads_from_args(&argv(&["bench", "--threads"])).is_err());
+    }
+
+    #[test]
+    fn from_env_and_default_pool_exist() {
+        // No assertions about the exact count (the env is shared), just
+        // that construction succeeds and the default is stable.
+        let p = ExecPool::from_env();
+        assert!(p.threads() >= 1);
+        let a = default_pool();
+        let b = default_pool();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+}

@@ -11,6 +11,7 @@
 pub mod cache;
 pub mod dict;
 pub mod eval;
+pub mod exec;
 pub mod model;
 pub mod omp;
 pub mod quant;

@@ -60,13 +60,18 @@ lexico — Lexico KV-cache compression (ICML 2025) reproduction
 
 USAGE:
   lexico serve  [--addr 127.0.0.1:7077] [--model M] [--method SPEC]
-                [--budget-mb 64] [--max-sessions 32]
+                [--budget-mb 64] [--max-sessions 32] [--threads N]
   lexico eval   [--model M] [--task arith] [--method SPEC] [--n 50]
-                [--seed 0] [--dict-n 1024]
+                [--seed 0] [--dict-n 1024] [--threads N]
   lexico repro  <fig1|fig3|fig5|fig6|fig7|table1..table7|all> [--fast]
+                [--threads N]
   lexico pjrt   [--prompt TEXT] [--max-new 16]
   lexico train-dict [--model M] [--atoms 256] [--s 8] [--epochs 6]
   lexico inspect [--model M]
+
+--threads N sizes the worker pool every hot path runs on (default:
+LEXICO_THREADS, then the machine's available parallelism). Results are
+bitwise identical at every thread count.
 
 Method specs: full | lexico:s=8,nb=32[,delta=..][,fp16][,adaptive=N:d]
   | kivi:bits=2,g=16,nb=16 | pertoken:bits=4,g=16 | zipcache:hi=4,lo=2
@@ -81,6 +86,16 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = parse_args(&argv[1..]);
+    // size the exec pool before any engine or cache exists
+    if let Some(t) = args.flags.get("threads") {
+        let t: usize = t.parse().context("--threads must be a positive integer")?;
+        if t == 0 {
+            bail!("--threads must be ≥ 1");
+        }
+        if !lexico::exec::configure_default(t) {
+            eprintln!("warning: exec pool already initialized; --threads {t} ignored");
+        }
+    }
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
@@ -129,9 +144,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg2 = cfg.clone();
     let batcher = std::thread::spawn(move || batcher::run(eng2, dicts, cfg2, jrx, m2));
     println!(
-        "lexico serving model {size} on {addr} (default method: {}, budget {} MB)",
+        "lexico serving model {size} on {addr} (default method: {}, budget {} MB, {} threads)",
         cfg.default_method,
-        cfg.kv_budget_bytes / 1048576.0
+        cfg.kv_budget_bytes / 1048576.0,
+        engine.pool().threads()
     );
     lexico::server::http::serve(&addr, jtx, metrics.clone(), |a| {
         println!("listening on {a}");

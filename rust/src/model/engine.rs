@@ -1,9 +1,12 @@
 //! Forward passes: prefill (full-precision attention, per the paper's
 //! protocol) and single-token decode through a pluggable [`KvCache`].
 
+use std::sync::Arc;
+
 use crate::cache::{CacheShape, KvCache};
+use crate::exec::{self, ExecPool, SendPtr};
 use crate::model::weights::Weights;
-use crate::tensor::{argmax, dot, matmul, matmul_kmajor, rmsnorm, silu, softmax};
+use crate::tensor::{argmax, dot, par_matmul, par_matmul_kmajor, rmsnorm, silu, softmax};
 
 const RMS_EPS: f32 = 1e-5;
 
@@ -90,9 +93,14 @@ impl BatchScratch {
 }
 
 /// The native engine: owns weights + RoPE tables; caches are passed in.
+/// All hot loops (GEMMs, prefill attention heads, per-session cache traffic
+/// in [`Engine::decode_batch`], the unembedding) run on the engine's
+/// [`ExecPool`]; every parallel kernel partitions disjoint output elements,
+/// so results are bitwise identical at every thread count (DESIGN.md §7).
 pub struct Engine {
     pub weights: Weights,
     rope: Rope,
+    pool: Arc<ExecPool>,
     scratch: std::sync::Mutex<Scratch>,
     batch_scratch: std::sync::Mutex<BatchScratch>,
 }
@@ -140,7 +148,14 @@ impl PrefixState {
 }
 
 impl Engine {
+    /// Engine on the process-default pool (`LEXICO_THREADS`, then available
+    /// parallelism).
     pub fn new(weights: Weights) -> Self {
+        Self::with_pool(weights, exec::default_pool())
+    }
+
+    /// Engine on an explicit pool (thread-count sweeps, determinism tests).
+    pub fn with_pool(weights: Weights, pool: Arc<ExecPool>) -> Self {
         let cfg = weights.cfg;
         let rope = Rope::new(cfg.head_dim, cfg.max_seq, 10000.0);
         let scratch = Scratch {
@@ -157,9 +172,16 @@ impl Engine {
         Engine {
             weights,
             rope,
+            pool,
             scratch: std::sync::Mutex::new(scratch),
             batch_scratch: std::sync::Mutex::new(BatchScratch::default()),
         }
+    }
+
+    /// The pool this engine's kernels run on (the batcher shares it with
+    /// the caches it builds).
+    pub fn pool(&self) -> &Arc<ExecPool> {
+        &self.pool
     }
 
     pub fn shape(&self) -> CacheShape {
@@ -262,7 +284,9 @@ impl Engine {
         let mut v = vec![0.0; t * kvd];
         let mut attn = vec![0.0; t * qd];
         let mut proj = vec![0.0; t * d];
-        let mut scores = vec![0.0; p0 + t];
+        // per-head score buffers for the sharded attention (allocated once
+        // per prefill, reused across layers; each head owns exactly one)
+        let mut head_scores: Vec<Vec<f32>> = vec![vec![0.0f32; p0 + t]; cfg.n_heads];
         let mut ff1 = vec![0.0; t * cfg.d_ff];
         let mut ff3 = vec![0.0; t * cfg.d_ff];
         let mut cap_ks: Vec<Vec<f32>> = Vec::new();
@@ -272,9 +296,9 @@ impl Engine {
             for ti in 0..t {
                 rmsnorm(&mut h[ti * d..(ti + 1) * d], &x[ti * d..(ti + 1) * d], &lw.ln1, RMS_EPS);
             }
-            matmul(&mut q, &h, &lw.wq, t, d, qd);
-            matmul(&mut k, &h, &lw.wk, t, d, kvd);
-            matmul(&mut v, &h, &lw.wv, t, d, kvd);
+            par_matmul(&self.pool, &mut q, &h, &lw.wq, t, d, qd);
+            par_matmul(&self.pool, &mut k, &h, &lw.wk, t, d, kvd);
+            par_matmul(&self.pool, &mut v, &h, &lw.wv, t, d, kvd);
             for ti in 0..t {
                 for hh in 0..cfg.n_heads {
                     self.rope.apply(&mut q[ti * qd + hh * m..ti * qd + (hh + 1) * m], p0 + ti);
@@ -289,36 +313,51 @@ impl Engine {
                 Some(p) => (&p.ks[li], &p.vs[li]),
                 None => (&[], &[]),
             };
+            // one shard per query head: each head owns its own columns of
+            // `attn` and a private score buffer, so the per-head
+            // computation is the exact sequential sequence regardless of
+            // the thread count
             attn.fill(0.0);
-            for hh in 0..cfg.n_heads {
-                let g = hh / cfg.group();
-                for ti in 0..t {
-                    let qrow = &q[ti * qd + hh * m..ti * qd + (hh + 1) * m];
-                    for tj in 0..p0 {
-                        scores[tj] =
-                            dot(qrow, &pks[tj * kvd + g * m..tj * kvd + (g + 1) * m]) * scale;
+            {
+                let group = cfg.group();
+                let (qr, kr, vr): (&[f32], &[f32], &[f32]) = (&q, &k, &v);
+                let attn_ptr = SendPtr::new(attn.as_mut_ptr());
+                let scores_ptr = SendPtr::new(head_scores.as_mut_ptr());
+                self.pool.parallel_for(cfg.n_heads, move |hh| {
+                    let g = hh / group;
+                    // SAFETY: head hh exclusively owns its score buffer.
+                    let scores: &mut Vec<f32> = unsafe { &mut *scores_ptr.get().add(hh) };
+                    for ti in 0..t {
+                        let qrow = &qr[ti * qd + hh * m..ti * qd + (hh + 1) * m];
+                        for tj in 0..p0 {
+                            scores[tj] =
+                                dot(qrow, &pks[tj * kvd + g * m..tj * kvd + (g + 1) * m]) * scale;
+                        }
+                        for tj in 0..=ti {
+                            scores[p0 + tj] =
+                                dot(qrow, &kr[tj * kvd + g * m..tj * kvd + (g + 1) * m]) * scale;
+                        }
+                        softmax(&mut scores[..p0 + ti + 1]);
+                        // SAFETY: head hh exclusively owns this attn column.
+                        let orow = unsafe {
+                            std::slice::from_raw_parts_mut(attn_ptr.get().add(ti * qd + hh * m), m)
+                        };
+                        for tj in 0..p0 {
+                            crate::tensor::axpy(
+                                orow,
+                                scores[tj],
+                                &pvs[tj * kvd + g * m..tj * kvd + (g + 1) * m],
+                            );
+                        }
+                        for tj in 0..=ti {
+                            crate::tensor::axpy(
+                                orow,
+                                scores[p0 + tj],
+                                &vr[tj * kvd + g * m..tj * kvd + (g + 1) * m],
+                            );
+                        }
                     }
-                    for tj in 0..=ti {
-                        scores[p0 + tj] =
-                            dot(qrow, &k[tj * kvd + g * m..tj * kvd + (g + 1) * m]) * scale;
-                    }
-                    softmax(&mut scores[..p0 + ti + 1]);
-                    let orow = &mut attn[ti * qd + hh * m..ti * qd + (hh + 1) * m];
-                    for tj in 0..p0 {
-                        crate::tensor::axpy(
-                            orow,
-                            scores[tj],
-                            &pvs[tj * kvd + g * m..tj * kvd + (g + 1) * m],
-                        );
-                    }
-                    for tj in 0..=ti {
-                        crate::tensor::axpy(
-                            orow,
-                            scores[p0 + tj],
-                            &v[tj * kvd + g * m..tj * kvd + (g + 1) * m],
-                        );
-                    }
-                }
+                });
             }
             // hand the layer's KV states + observation-window queries over
             let w = OBS_WINDOW.min(t);
@@ -334,19 +373,19 @@ impl Engine {
                 cap_vs.push(vv);
             }
 
-            matmul(&mut proj, &attn, &lw.wo, t, qd, d);
+            par_matmul(&self.pool, &mut proj, &attn, &lw.wo, t, qd, d);
             for i in 0..t * d {
                 x[i] += proj[i];
             }
             for ti in 0..t {
                 rmsnorm(&mut h[ti * d..(ti + 1) * d], &x[ti * d..(ti + 1) * d], &lw.ln2, RMS_EPS);
             }
-            matmul(&mut ff1, &h, &lw.w1, t, d, cfg.d_ff);
-            matmul(&mut ff3, &h, &lw.w3, t, d, cfg.d_ff);
+            par_matmul(&self.pool, &mut ff1, &h, &lw.w1, t, d, cfg.d_ff);
+            par_matmul(&self.pool, &mut ff3, &h, &lw.w3, t, d, cfg.d_ff);
             for i in 0..t * cfg.d_ff {
                 ff1[i] = silu(ff1[i]) * ff3[i];
             }
-            matmul(&mut proj, &ff1, &lw.w2, t, cfg.d_ff, d);
+            par_matmul(&self.pool, &mut proj, &ff1, &lw.w2, t, cfg.d_ff, d);
             for i in 0..t * d {
                 x[i] += proj[i];
             }
@@ -378,9 +417,9 @@ impl Engine {
 
         for (li, lw) in self.weights.layers.iter().enumerate() {
             rmsnorm(&mut s.h, &s.x, &lw.ln1, RMS_EPS);
-            matmul(&mut s.q, &s.h, &lw.wq, 1, d, qd);
-            matmul(&mut s.k, &s.h, &lw.wk, 1, d, kvd);
-            matmul(&mut s.v, &s.h, &lw.wv, 1, d, kvd);
+            par_matmul(&self.pool, &mut s.q, &s.h, &lw.wq, 1, d, qd);
+            par_matmul(&self.pool, &mut s.k, &s.h, &lw.wk, 1, d, kvd);
+            par_matmul(&self.pool, &mut s.v, &s.h, &lw.wv, 1, d, kvd);
             for hh in 0..cfg.n_heads {
                 self.rope.apply(&mut s.q[hh * m..(hh + 1) * m], pos);
             }
@@ -389,17 +428,17 @@ impl Engine {
             }
             cache.append(li, &s.k, &s.v);
             cache.attend(li, &s.q, &mut s.attn);
-            matmul(&mut s.proj, &s.attn, &lw.wo, 1, qd, d);
+            par_matmul(&self.pool, &mut s.proj, &s.attn, &lw.wo, 1, qd, d);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
             rmsnorm(&mut s.h, &s.x, &lw.ln2, RMS_EPS);
-            matmul(&mut s.ff1, &s.h, &lw.w1, 1, d, cfg.d_ff);
-            matmul(&mut s.ff3, &s.h, &lw.w3, 1, d, cfg.d_ff);
+            par_matmul(&self.pool, &mut s.ff1, &s.h, &lw.w1, 1, d, cfg.d_ff);
+            par_matmul(&self.pool, &mut s.ff3, &s.h, &lw.w3, 1, d, cfg.d_ff);
             for i in 0..cfg.d_ff {
                 s.ff1[i] = silu(s.ff1[i]) * s.ff3[i];
             }
-            matmul(&mut s.proj, &s.ff1, &lw.w2, 1, cfg.d_ff, d);
+            par_matmul(&self.pool, &mut s.proj, &s.ff1, &lw.w2, 1, cfg.d_ff, d);
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -421,9 +460,11 @@ impl Engine {
     ///
     /// Parity: per session this performs the identical floating-point
     /// operations in the identical order as [`Engine::decode_step`]
-    /// ([`matmul_kmajor`] accumulates bitwise like [`matmul`]), so the
-    /// returned logits — and therefore greedy decoding — are
-    /// token-for-token identical to the sequential path.
+    /// (`par_matmul_kmajor` accumulates bitwise like `matmul`, and the
+    /// per-session pool shards compute disjoint state), so the returned
+    /// logits — and therefore greedy decoding — are token-for-token
+    /// identical to the sequential path at every batch size and thread
+    /// count.
     pub fn decode_batch(
         &self,
         tokens: &[u32],
@@ -465,10 +506,11 @@ impl Engine {
             for bi in 0..bsz {
                 rmsnorm(&mut h[bi * d..(bi + 1) * d], &x[bi * d..(bi + 1) * d], &lw.ln1, RMS_EPS);
             }
-            // one stream of each weight matrix serves every session
-            matmul_kmajor(q, h, &lw.wq, bsz, d, qd);
-            matmul_kmajor(k, h, &lw.wk, bsz, d, kvd);
-            matmul_kmajor(v, h, &lw.wv, bsz, d, kvd);
+            // one stream of each weight matrix serves every session (the
+            // pool shards it by output columns — one pass in total)
+            par_matmul_kmajor(&self.pool, q, h, &lw.wq, bsz, d, qd);
+            par_matmul_kmajor(&self.pool, k, h, &lw.wk, bsz, d, kvd);
+            par_matmul_kmajor(&self.pool, v, h, &lw.wv, bsz, d, kvd);
             for bi in 0..bsz {
                 let pos = positions[bi];
                 for hh in 0..cfg.n_heads {
@@ -478,24 +520,40 @@ impl Engine {
                     self.rope.apply(&mut k[bi * kvd + g * m..bi * kvd + (g + 1) * m], pos);
                 }
             }
-            // per-session cache traffic (each session's own KV state)
-            for bi in 0..bsz {
-                caches[bi].append(li, &k[bi * kvd..(bi + 1) * kvd], &v[bi * kvd..(bi + 1) * kvd]);
-                caches[bi].attend(li, &q[bi * qd..(bi + 1) * qd], &mut attn[bi * qd..(bi + 1) * qd]);
+            // per-session cache traffic, fanned out across the pool: each
+            // session is an independent shard (its own cache, its own K/V/Q
+            // rows, its own attn row), so the per-session computation — and
+            // therefore the whole round — is bitwise identical to the
+            // sequential loop. Fork-shared CSR pages are only ever read
+            // (appends go to fork-private tails), so sibling candidates
+            // decoding in the same round stay safe.
+            {
+                let (kr, vr, qr): (&[f32], &[f32], &[f32]) = (&*k, &*v, &*q);
+                let cache_ptr = SendPtr::new(caches.as_mut_ptr());
+                let attn_ptr = SendPtr::new(attn.as_mut_ptr());
+                self.pool.parallel_for(bsz, move |bi| {
+                    // SAFETY: shard bi exclusively owns caches[bi] and
+                    // attn row bi.
+                    let cache = unsafe { &mut *cache_ptr.get().add(bi) };
+                    let attn_row =
+                        unsafe { std::slice::from_raw_parts_mut(attn_ptr.get().add(bi * qd), qd) };
+                    cache.append(li, &kr[bi * kvd..(bi + 1) * kvd], &vr[bi * kvd..(bi + 1) * kvd]);
+                    cache.attend(li, &qr[bi * qd..(bi + 1) * qd], attn_row);
+                });
             }
-            matmul_kmajor(proj, attn, &lw.wo, bsz, qd, d);
+            par_matmul_kmajor(&self.pool, proj, attn, &lw.wo, bsz, qd, d);
             for i in 0..bsz * d {
                 x[i] += proj[i];
             }
             for bi in 0..bsz {
                 rmsnorm(&mut h[bi * d..(bi + 1) * d], &x[bi * d..(bi + 1) * d], &lw.ln2, RMS_EPS);
             }
-            matmul_kmajor(ff1, h, &lw.w1, bsz, d, cfg.d_ff);
-            matmul_kmajor(ff3, h, &lw.w3, bsz, d, cfg.d_ff);
+            par_matmul_kmajor(&self.pool, ff1, h, &lw.w1, bsz, d, cfg.d_ff);
+            par_matmul_kmajor(&self.pool, ff3, h, &lw.w3, bsz, d, cfg.d_ff);
             for i in 0..bsz * cfg.d_ff {
                 ff1[i] = silu(ff1[i]) * ff3[i];
             }
-            matmul_kmajor(proj, ff1, &lw.w2, bsz, cfg.d_ff, d);
+            par_matmul_kmajor(&self.pool, proj, ff1, &lw.w2, bsz, cfg.d_ff, d);
             for i in 0..bsz * d {
                 x[i] += proj[i];
             }
@@ -508,27 +566,65 @@ impl Engine {
 
     /// Tied unembedding for a batch of rows: one streaming pass over the
     /// embedding matrix serves every session (row values identical to
-    /// [`Engine::logits`] — each logit is the same single dot product).
+    /// [`Engine::logits`] — each logit is the same single dot product),
+    /// sharded by vocab blocks so each embedding row is read by exactly one
+    /// shard.
     fn logits_batch(&self, hs: &[f32], bsz: usize) -> Vec<Vec<f32>> {
         let cfg = self.weights.cfg;
         let d = cfg.d_model;
-        let mut out = vec![vec![0.0f32; cfg.vocab]; bsz];
-        for vtok in 0..cfg.vocab {
-            let erow = &self.weights.embed[vtok * d..(vtok + 1) * d];
-            for (bi, row) in out.iter_mut().enumerate() {
-                row[vtok] = dot(&hs[bi * d..(bi + 1) * d], erow);
+        let vocab = cfg.vocab;
+        let embed: &[f32] = &self.weights.embed;
+        let mut out = vec![vec![0.0f32; vocab]; bsz];
+        let shards = crate::tensor::col_shards(vocab, self.pool.threads(), 8);
+        if shards == 1 || bsz * vocab * d < crate::tensor::PAR_MIN_MACS {
+            // tiny unembedding: a pool launch costs more than it saves
+            for vtok in 0..vocab {
+                let erow = &embed[vtok * d..(vtok + 1) * d];
+                for (bi, row) in out.iter_mut().enumerate() {
+                    row[vtok] = dot(&hs[bi * d..(bi + 1) * d], erow);
+                }
             }
+            return out;
         }
+        let rows: Vec<SendPtr<f32>> = out.iter_mut().map(|r| SendPtr::new(r.as_mut_ptr())).collect();
+        self.pool.parallel_for(shards, |si| {
+            let (lo, hi) = (si * vocab / shards, (si + 1) * vocab / shards);
+            for vtok in lo..hi {
+                let erow = &embed[vtok * d..(vtok + 1) * d];
+                for (bi, rp) in rows.iter().enumerate() {
+                    // SAFETY: shard si exclusively owns vocab slots lo..hi
+                    // of every row.
+                    unsafe { *rp.get().add(vtok) = dot(&hs[bi * d..(bi + 1) * d], erow) };
+                }
+            }
+        });
         out
     }
 
-    /// Tied unembedding: logits = h · embedᵀ.
+    /// Tied unembedding: logits = h · embedᵀ, sharded by vocab blocks (each
+    /// logit is one whole dot product, so thread count cannot change it).
     fn logits(&self, h: &[f32]) -> Vec<f32> {
         let cfg = self.weights.cfg;
         let d = cfg.d_model;
-        (0..cfg.vocab)
-            .map(|v| dot(h, &self.weights.embed[v * d..(v + 1) * d]))
-            .collect()
+        let vocab = cfg.vocab;
+        let embed: &[f32] = &self.weights.embed;
+        let mut out = vec![0.0f32; vocab];
+        let shards = crate::tensor::col_shards(vocab, self.pool.threads(), 8);
+        if shards == 1 || vocab * d < crate::tensor::PAR_MIN_MACS {
+            for (vtok, o) in out.iter_mut().enumerate() {
+                *o = dot(h, &embed[vtok * d..(vtok + 1) * d]);
+            }
+            return out;
+        }
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        self.pool.parallel_for(shards, move |si| {
+            let (lo, hi) = (si * vocab / shards, (si + 1) * vocab / shards);
+            for vtok in lo..hi {
+                // SAFETY: shard si exclusively owns vocab slots lo..hi.
+                unsafe { *out_ptr.get().add(vtok) = dot(h, &embed[vtok * d..(vtok + 1) * d]) };
+            }
+        });
+        out
     }
 
     /// Greedy generation: prefill the prompt, then decode up to `max_new`

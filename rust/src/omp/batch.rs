@@ -11,9 +11,12 @@
 //! active* vectors as one `matmul_bt` GEMM (`R[A,m] · Dᵀ[m,N]`), so each
 //! dictionary atom is loaded once per iteration and serves every pending
 //! residual — the same amortization the paper uses to justify batched
-//! sparse coding (§3.4) and that CSR applies to whole-cache encoding. The
-//! Cholesky updates and triangular solves remain per vector (they are
-//! O(s²)–O(s³) on s ≤ 16 elements, irrelevant next to the GEMM).
+//! sparse coding (§3.4) and that CSR applies to whole-cache encoding. Both
+//! stages run on the workspace's [`ExecPool`]: the correlation GEMM is
+//! sharded by atom blocks, and the per-vector argmax + Cholesky update +
+//! triangular solves + residual refresh fan out one shard per active
+//! vector (each vector's state is private, so shards are disjoint and the
+//! result is bitwise independent of the thread count).
 //!
 //! **Parity contract:** for every input vector the batch encoder performs
 //! the exact same floating-point operations in the exact same order as the
@@ -22,14 +25,21 @@
 //! `omp_encode_batch(xs)[i] == omp_encode(xs[i])` bit for bit. A property
 //! test below enforces this.
 
+use std::sync::Arc;
+
 use super::SparseCode;
-use crate::tensor::{axpy, dot, matmul_bt, norm2};
+use crate::exec::{self, ExecPool, SendPtr};
+use crate::tensor::{axpy, dot, norm2, par_matmul_bt};
 
 /// Reusable buffers for [`omp_encode_batch`]; grows monotonically, so one
 /// workspace serves any mix of (batch, N, m, s) shapes without reallocating
-/// in steady state.
-#[derive(Default)]
+/// in steady state. Carries the [`ExecPool`] the encoder runs on (the
+/// process default unless [`BatchOmpWorkspace::with_pool`] /
+/// [`BatchOmpWorkspace::set_pool`] say otherwise) — results are bitwise
+/// independent of the pool's thread count.
 pub struct BatchOmpWorkspace {
+    /// worker pool for the correlation GEMM + the per-vector solves
+    pool: Arc<ExecPool>,
     /// compacted residuals of the still-active vectors, `[A, m]`
     rs: Vec<f32>,
     /// correlations of the active vectors, `[A, N]`
@@ -42,9 +52,9 @@ pub struct BatchOmpWorkspace {
     alpha: Vec<f32>,
     /// per-vector coefficients, `[B, s]`
     y: Vec<f32>,
-    /// forward-solve scratch, `[s]` (recomputed fully per solve)
+    /// per-vector forward-solve scratch, `[B, s]` (fully rewritten per solve)
     z: Vec<f32>,
-    /// new Gram column scratch, `[s]`
+    /// per-vector new-Gram-column scratch, `[B, s]`
     b: Vec<f32>,
     /// per-vector selected atom ids
     sel: Vec<Vec<usize>>,
@@ -56,9 +66,42 @@ pub struct BatchOmpWorkspace {
     done: Vec<bool>,
 }
 
+impl Default for BatchOmpWorkspace {
+    fn default() -> Self {
+        Self::with_pool(exec::default_pool())
+    }
+}
+
 impl BatchOmpWorkspace {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A workspace whose encodes run on `pool` (e.g. the batcher's pool).
+    pub fn with_pool(pool: Arc<ExecPool>) -> Self {
+        BatchOmpWorkspace {
+            pool,
+            rs: Vec::new(),
+            corr: Vec::new(),
+            r: Vec::new(),
+            chol: Vec::new(),
+            alpha: Vec::new(),
+            y: Vec::new(),
+            z: Vec::new(),
+            b: Vec::new(),
+            sel: Vec::new(),
+            active: Vec::new(),
+            stop: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<ExecPool> {
+        &self.pool
+    }
+
+    pub fn set_pool(&mut self, pool: Arc<ExecPool>) {
+        self.pool = pool;
     }
 
     fn ensure(&mut self, batch: usize, n_atoms: usize, m: usize, s_cap: usize) {
@@ -80,11 +123,11 @@ impl BatchOmpWorkspace {
         if self.y.len() < batch * s_cap {
             self.y.resize(batch * s_cap, 0.0);
         }
-        if self.z.len() < s_cap {
-            self.z.resize(s_cap, 0.0);
+        if self.z.len() < batch * s_cap {
+            self.z.resize(batch * s_cap, 0.0);
         }
-        if self.b.len() < s_cap {
-            self.b.resize(s_cap, 0.0);
+        if self.b.len() < batch * s_cap {
+            self.b.resize(batch * s_cap, 0.0);
         }
         if self.sel.len() < batch {
             self.sel.resize_with(batch, Vec::new);
@@ -144,12 +187,15 @@ pub fn omp_encode_batch(
 
         // THE batched step: compact the active residuals and compute every
         // correlation in one GEMM — one streaming pass over the dictionary
-        // serves all pending vectors.
+        // serves all pending vectors, and the pool shards the pass by atom
+        // blocks (each correlation is one whole dot, so results are bitwise
+        // independent of the thread count).
         for ai in 0..a_cnt {
             let bi = ws.active[ai];
             ws.rs[ai * m..(ai + 1) * m].copy_from_slice(&ws.r[bi * m..(bi + 1) * m]);
         }
-        matmul_bt(
+        par_matmul_bt(
+            &ws.pool,
             &mut ws.corr[..a_cnt * n_atoms],
             &ws.rs[..a_cnt * m],
             atoms,
@@ -158,77 +204,110 @@ pub fn omp_encode_batch(
             n_atoms,
         );
 
-        // per-vector selection + Cholesky update + solve + residual refresh
-        for ai in 0..a_cnt {
-            let bi = ws.active[ai];
-            let i = ws.sel[bi].len();
-            let mut best = usize::MAX;
-            let mut best_abs = -1.0f32;
-            {
-                let corr = &ws.corr[ai * n_atoms..(ai + 1) * n_atoms];
+        // Per-vector selection + Cholesky update + solve + residual
+        // refresh, one shard per active vector. Every mutable buffer below
+        // is per-vector (indexed by `bi`), so shards touch disjoint state;
+        // the shared inputs (the correlation snapshot, the dictionary, the
+        // originals `xs`) are frozen for the iteration — the computation
+        // per vector is the exact sequential sequence, whatever the thread
+        // count.
+        {
+            let pool = ws.pool.clone();
+            let active: &[usize] = &ws.active;
+            let corr: &[f32] = &ws.corr;
+            let sel_ptr = SendPtr::new(ws.sel.as_mut_ptr());
+            let done_ptr = SendPtr::new(ws.done.as_mut_ptr());
+            let chol_ptr = SendPtr::new(ws.chol.as_mut_ptr());
+            let alpha_ptr = SendPtr::new(ws.alpha.as_mut_ptr());
+            let y_ptr = SendPtr::new(ws.y.as_mut_ptr());
+            let z_ptr = SendPtr::new(ws.z.as_mut_ptr());
+            let b_ptr = SendPtr::new(ws.b.as_mut_ptr());
+            let r_ptr = SendPtr::new(ws.r.as_mut_ptr());
+            pool.parallel_for(a_cnt, move |ai| {
+                let bi = active[ai];
+                // SAFETY: each shard owns exactly one (ai, bi) pair and
+                // every view below is that pair's private stripe.
+                let sel = unsafe { &mut *sel_ptr.get().add(bi) };
+                let done = unsafe { &mut *done_ptr.get().add(bi) };
+                let chol = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        chol_ptr.get().add(bi * s_cap * s_cap),
+                        s_cap * s_cap,
+                    )
+                };
+                let alpha =
+                    unsafe { std::slice::from_raw_parts_mut(alpha_ptr.get().add(bi * s_cap), s_cap) };
+                let yv = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * s_cap), s_cap) };
+                let z = unsafe { std::slice::from_raw_parts_mut(z_ptr.get().add(bi * s_cap), s_cap) };
+                let bcol = unsafe { std::slice::from_raw_parts_mut(b_ptr.get().add(bi * s_cap), s_cap) };
+                let r = unsafe { std::slice::from_raw_parts_mut(r_ptr.get().add(bi * m), m) };
+                let x = &xs[bi * m..(bi + 1) * m];
+                let corr_row = &corr[ai * n_atoms..(ai + 1) * n_atoms];
+
+                let i = sel.len();
+                let mut best = usize::MAX;
+                let mut best_abs = -1.0f32;
                 for n in 0..n_atoms {
-                    let a = corr[n].abs();
+                    let a = corr_row[n].abs();
                     // improvement test first (as in the sequential scan):
                     // the mask check only runs for improvement candidates
-                    if a > best_abs && !ws.sel[bi].contains(&n) {
+                    if a > best_abs && !sel.contains(&n) {
                         best_abs = a;
                         best = n;
                     }
                 }
-            }
-            if best == usize::MAX {
-                ws.done[bi] = true; // dictionary exhausted
-                continue;
-            }
-            let aj = &atoms[best * m..(best + 1) * m];
-
-            // Gram column against the current selection.
-            for (k, &p) in ws.sel[bi].iter().enumerate() {
-                ws.b[k] = dot(&atoms[p * m..(p + 1) * m], aj);
-            }
-            let chol = &mut ws.chol[bi * s_cap * s_cap..(bi + 1) * s_cap * s_cap];
-            for k in 0..i {
-                let mut w = ws.b[k];
-                for l in 0..k {
-                    w -= chol[k * s_cap + l] * chol[i * s_cap + l];
+                if best == usize::MAX {
+                    *done = true; // dictionary exhausted
+                    return;
                 }
-                chol[i * s_cap + k] = w / chol[k * s_cap + k];
-            }
-            let mut diag = 1.0f32;
-            for l in 0..i {
-                diag -= chol[i * s_cap + l] * chol[i * s_cap + l];
-            }
-            if diag <= 1e-10 {
-                ws.done[bi] = true; // atom numerically in span of selection
-                continue;
-            }
-            chol[i * s_cap + i] = diag.sqrt();
-            ws.sel[bi].push(best);
-            ws.alpha[bi * s_cap + i] = dot(aj, &xs[bi * m..(bi + 1) * m]);
+                let aj = &atoms[best * m..(best + 1) * m];
 
-            // Solve L z = alpha, then Lᵀ y = z.
-            let k_sel = i + 1;
-            for k in 0..k_sel {
-                let mut zv = ws.alpha[bi * s_cap + k];
-                for l in 0..k {
-                    zv -= chol[k * s_cap + l] * ws.z[l];
+                // Gram column against the current selection.
+                for (k, &p) in sel.iter().enumerate() {
+                    bcol[k] = dot(&atoms[p * m..(p + 1) * m], aj);
                 }
-                ws.z[k] = zv / chol[k * s_cap + k];
-            }
-            for k in (0..k_sel).rev() {
-                let mut yv = ws.z[k];
-                for l in k + 1..k_sel {
-                    yv -= chol[l * s_cap + k] * ws.y[bi * s_cap + l];
+                for k in 0..i {
+                    let mut w = bcol[k];
+                    for l in 0..k {
+                        w -= chol[k * s_cap + l] * chol[i * s_cap + l];
+                    }
+                    chol[i * s_cap + k] = w / chol[k * s_cap + k];
                 }
-                ws.y[bi * s_cap + k] = yv / chol[k * s_cap + k];
-            }
+                let mut diag = 1.0f32;
+                for l in 0..i {
+                    diag -= chol[i * s_cap + l] * chol[i * s_cap + l];
+                }
+                if diag <= 1e-10 {
+                    *done = true; // atom numerically in span of selection
+                    return;
+                }
+                chol[i * s_cap + i] = diag.sqrt();
+                sel.push(best);
+                alpha[i] = dot(aj, x);
 
-            // residual refresh: r = x − Σ y_k a_k
-            let r = &mut ws.r[bi * m..(bi + 1) * m];
-            r.copy_from_slice(&xs[bi * m..(bi + 1) * m]);
-            for (k, &p) in ws.sel[bi].iter().enumerate() {
-                axpy(r, -ws.y[bi * s_cap + k], &atoms[p * m..(p + 1) * m]);
-            }
+                // Solve L z = alpha, then Lᵀ y = z.
+                let k_sel = i + 1;
+                for k in 0..k_sel {
+                    let mut zv = alpha[k];
+                    for l in 0..k {
+                        zv -= chol[k * s_cap + l] * z[l];
+                    }
+                    z[k] = zv / chol[k * s_cap + k];
+                }
+                for k in (0..k_sel).rev() {
+                    let mut val = z[k];
+                    for l in k + 1..k_sel {
+                        val -= chol[l * s_cap + k] * yv[l];
+                    }
+                    yv[k] = val / chol[k * s_cap + k];
+                }
+
+                // residual refresh: r = x − Σ y_k a_k
+                r.copy_from_slice(x);
+                for (k, &p) in sel.iter().enumerate() {
+                    axpy(r, -yv[k], &atoms[p * m..(p + 1) * m]);
+                }
+            });
         }
     }
 
@@ -305,6 +384,32 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn batch_encoder_is_bitwise_identical_at_every_thread_count() {
+        // Exec-layer determinism: the same inputs through workspaces pinned
+        // to 1-, 2- and 4-thread pools produce identical codes — and all of
+        // them equal the sequential encoder.
+        let mut rng = Rng::new(41);
+        let (m, n, s, batch) = (16usize, 128usize, 4usize, 13usize);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let xs = rng.normal_vec(batch * m);
+        let runs: Vec<Vec<SparseCode>> = [1usize, 2, 4]
+            .iter()
+            .map(|&t| {
+                let mut ws =
+                    BatchOmpWorkspace::with_pool(std::sync::Arc::new(crate::exec::ExecPool::new(t)));
+                omp_encode_batch(&atoms, n, m, &xs, batch, s, 0.0, &mut ws)
+            })
+            .collect();
+        for bi in 0..batch {
+            let solo = omp_encode_alloc(&atoms, n, m, &xs[bi * m..(bi + 1) * m], s, 0.0);
+            for (ri, run) in runs.iter().enumerate() {
+                assert_eq!(run[bi].idx, solo.idx, "T-run {ri} vec {bi}: indices diverged");
+                assert_eq!(run[bi].val, solo.val, "T-run {ri} vec {bi}: values diverged");
+            }
+        }
     }
 
     #[test]

@@ -46,6 +46,7 @@ use super::{Job, Response};
 use crate::cache::factory::{build_cache, CacheContext};
 use crate::cache::KvCache;
 use crate::dict::DictionarySet;
+use crate::exec::ExecPool;
 use crate::model::{Engine, PrefixState};
 use crate::tasks;
 use crate::tensor::argmax;
@@ -288,6 +289,11 @@ pub struct Batcher {
     prefix: PrefixCache,
     stop: u32,
     max_seq: usize,
+    /// The worker pool the whole serving path runs on (shared with the
+    /// engine): prefill and decode GEMMs, per-session cache fan-out inside
+    /// `decode_batch`, and the batched-OMP overflow compression of every
+    /// cache this batcher builds. Deterministic at any thread count.
+    pool: Arc<ExecPool>,
 }
 
 impl Batcher {
@@ -300,6 +306,7 @@ impl Batcher {
         let ctx = CacheContext { shape: engine.shape(), dicts };
         let max_seq = engine.weights.cfg.max_seq;
         let prefix = PrefixCache::new(cfg.prefix_entries);
+        let pool = engine.pool().clone();
         Batcher {
             engine,
             ctx,
@@ -312,7 +319,13 @@ impl Batcher {
             prefix,
             stop: tasks::newline_id(),
             max_seq,
+            pool,
         }
+    }
+
+    /// The pool this batcher schedules onto.
+    pub fn pool(&self) -> &Arc<ExecPool> {
+        &self.pool
     }
 
     pub fn enqueue(&mut self, job: Job) {
@@ -483,6 +496,7 @@ impl Batcher {
                     let (cache, logits, longer) = {
                         let entry = &self.prefix.entries[ei];
                         let mut cache = entry.proto.fork();
+                        cache.set_pool(self.pool.clone());
                         let suffix = &ids[entry.state.len()..];
                         let cache_longer = suffix.len() >= self.cfg.prefix_min_tokens;
                         let (logits, longer) = if suffix.is_empty() {
@@ -509,6 +523,7 @@ impl Batcher {
                 }
                 None => match build_cache(&method, &self.ctx) {
                     Ok(mut cache) => {
+                        cache.set_pool(self.pool.clone());
                         let cacheable = self.cfg.prefix_entries > 0
                             && cache.split_prefill_exact()
                             && ids.len() >= self.cfg.prefix_min_tokens;
@@ -616,7 +631,8 @@ impl Batcher {
                 let step_t0 = Instant::now();
                 let logits = self.engine.decode_batch(&toks, &poss, &mut caches);
                 drop(caches);
-                let per_token = step_t0.elapsed().as_secs_f64() * 1e3 / decoding.len() as f64;
+                let round_ms = step_t0.elapsed().as_secs_f64() * 1e3;
+                let per_token = round_ms / decoding.len() as f64;
                 for (bi, &si) in decoding.iter().enumerate() {
                     let sess = &mut self.active[si];
                     sess.next_token = argmax(&logits[bi]) as u32;
@@ -625,7 +641,9 @@ impl Batcher {
                 // one sample per round (amortized ms/token at that round's
                 // batch size) — duplicating it per session would flatten
                 // the percentile summary into the mean
-                self.metrics.lock().unwrap().per_token_ms.push(per_token);
+                let mut m = self.metrics.lock().unwrap();
+                m.per_token_ms.push(per_token);
+                m.decode_round_ms.push(round_ms);
             }
         }
         let n_retired = retire.len();

@@ -217,6 +217,27 @@ mod tests {
     }
 
     #[test]
+    fn emoji_prompt_survives_json_surrogate_pairs_end_to_end() {
+        // Regression for the BMP-only \u parser: a prompt carrying U+1F600
+        // as a surrogate pair must reach the batcher as one code point. The
+        // tiny vocab rejects it, and the error reply must quote the
+        // *intact* emoji — the old parser mangled the pair into two
+        // replacement chars before the batcher ever saw it.
+        let addr = spawn_server();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(conn, r#"{{"prompt": "1+\uD83D\uDE00=", "max_new": 3}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        let err = v.get("error").as_str().expect("OOV emoji must reply an error");
+        assert!(err.contains("unsupported character"), "{line}");
+        assert!(err.contains('\u{1F600}'), "emoji was mangled in transit: {err}");
+        assert!(!err.contains('\u{FFFD}'), "replacement char leaked: {err}");
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
     fn fanout_round_trip_returns_alternates() {
         let addr = spawn_server();
         let mut conn = std::net::TcpStream::connect(addr).unwrap();

@@ -27,6 +27,10 @@ pub struct Metrics {
     pub fanout_sessions: u64,
     pub ttft_ms: Vec<f64>,
     pub per_token_ms: Vec<f64>,
+    /// wall time of each batched decode round (all active sessions advanced
+    /// one token) — the serving loop's unit of work; TPOT is this divided
+    /// by the round's batch size
+    pub decode_round_ms: Vec<f64>,
     pub kv_ratios: Vec<f64>,
     started: Option<Instant>,
 }
@@ -51,6 +55,10 @@ impl Metrics {
         (!self.per_token_ms.is_empty()).then(|| summarize(&self.per_token_ms))
     }
 
+    pub fn decode_round(&self) -> Option<Summary> {
+        (!self.decode_round_ms.is_empty()).then(|| summarize(&self.decode_round_ms))
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
             "requests={} completed={} rejected={} tokens={} throughput={:.1} tok/s",
@@ -61,10 +69,22 @@ impl Metrics {
             self.throughput_tok_s()
         );
         if let Some(t) = self.ttft() {
-            s += &format!("\nTTFT   ms: p50 {:.2} p95 {:.2} mean {:.2}", t.p50, t.p95, t.mean);
+            s += &format!(
+                "\nTTFT   ms: p50 {:.2} p95 {:.2} p99 {:.2} mean {:.2}",
+                t.p50, t.p95, t.p99, t.mean
+            );
         }
         if let Some(t) = self.tpot() {
-            s += &format!("\nTPOT   ms: p50 {:.2} p95 {:.2} mean {:.2}", t.p50, t.p95, t.mean);
+            s += &format!(
+                "\nTPOT   ms: p50 {:.2} p95 {:.2} p99 {:.2} mean {:.2}",
+                t.p50, t.p95, t.p99, t.mean
+            );
+        }
+        if let Some(t) = self.decode_round() {
+            s += &format!(
+                "\nround  ms: p50 {:.2} p95 {:.2} p99 {:.2} mean {:.2} (n={})",
+                t.p50, t.p95, t.p99, t.mean, t.n
+            );
         }
         if !self.kv_ratios.is_empty() {
             let mean: f64 = self.kv_ratios.iter().sum::<f64>() / self.kv_ratios.len() as f64;
@@ -99,6 +119,7 @@ mod tests {
         m.tokens_generated = 20;
         m.ttft_ms.extend([1.0, 3.0]);
         m.per_token_ms.extend([0.5, 0.7, 0.6]);
+        m.decode_round_ms.extend([1.5, 2.1, 1.8]);
         m.kv_ratios.push(0.25);
         m.prefix_hits = 1;
         m.prefix_misses = 2;
@@ -109,6 +130,9 @@ mod tests {
         let r = m.report();
         assert!(r.contains("completed=2"));
         assert!(r.contains("TTFT"));
+        assert!(r.contains("p99"), "{r}");
+        assert!(r.contains("round  ms"), "{r}");
+        assert!(m.decode_round().is_some());
         assert!(r.contains("1 hits / 2 misses"), "{r}");
         assert!(r.contains("30/50 prompt tokens"), "{r}");
         assert!(r.contains("2.0 KiB shared"), "{r}");

@@ -4,6 +4,32 @@
 //! the transformer needs (GEMM, GEMM with transposed RHS, row softmax,
 //! RMSNorm, SiLU) is implemented directly with cache-friendly loop orders.
 //! The perf pass (EXPERIMENTS.md §Perf) iterates on these kernels.
+//!
+//! Each GEMM has a `par_*` twin that shards the *output elements* across an
+//! [`ExecPool`]: contiguous column blocks, each element still accumulated in
+//! the exact floating-point order of the sequential kernel (the inner op is
+//! element-independent — `c[i][j] += a[i][k]·b[k][j]` in ascending-k order
+//! for the axpy kernels, one whole [`dot`] per element for `matmul_bt`), so
+//! the parallel results are **bitwise identical** to the sequential ones at
+//! every thread count. Column sharding (rather than rows) keeps every shard
+//! busy even at `M = 1` (single-session decode) and streams each element of
+//! `B` through memory exactly once across the whole pool.
+
+use crate::exec::{ExecPool, SendPtr};
+
+/// Below roughly this many multiply-adds a parallel launch costs more than
+/// it saves; the `par_*` kernels (and the engine's sharded unembedding)
+/// fall back to their sequential twins.
+pub const PAR_MIN_MACS: usize = 16 * 1024;
+
+/// Shard the column range `0..n` into at most `threads` contiguous blocks
+/// of at least `min_cols` columns. Returns the shard count; shard `si`
+/// covers `si*n/shards .. (si+1)*n/shards`. Shared with the engine's
+/// vocab-sharded unembedding so the sharding policy lives in one place.
+#[inline]
+pub(crate) fn col_shards(n: usize, threads: usize, min_cols: usize) -> usize {
+    threads.min(n / min_cols.max(1)).max(1)
+}
 
 /// C[M,N] += A[M,K] @ B[K,N]. `C` must be zeroed by the caller if `+=` is
 /// not wanted. i-k-j loop order: the inner loop streams B and C rows.
@@ -69,6 +95,118 @@ pub fn matmul_bt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usi
             c[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
         }
     }
+}
+
+/// [`matmul`] on the pool: output columns are sharded, each element keeps
+/// the sequential ascending-k accumulation — bitwise identical to `matmul`.
+pub fn par_matmul(
+    pool: &ExecPool,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let shards = col_shards(n, pool.threads(), 8);
+    if shards == 1 || m * k * n < PAR_MIN_MACS {
+        matmul(c, a, b, m, k, n);
+        return;
+    }
+    c.fill(0.0);
+    let cp = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_for(shards, move |si| {
+        let (lo, hi) = (si * n / shards, (si + 1) * n / shards);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            // SAFETY: shard si exclusively owns columns lo..hi of every row.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.get().add(i * n + lo), hi - lo) };
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy(crow, aik, &b[kk * n + lo..kk * n + hi]);
+            }
+        }
+    });
+}
+
+/// [`matmul_kmajor`] on the pool: output columns are sharded, the k-major
+/// loop order is preserved per shard, and each weight element is read by
+/// exactly one shard — one streaming pass over `B` across the whole pool.
+/// Bitwise identical to `matmul_kmajor` (and therefore to `matmul`).
+pub fn par_matmul_kmajor(
+    pool: &ExecPool,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let shards = col_shards(n, pool.threads(), 8);
+    if shards == 1 || m * k * n < PAR_MIN_MACS {
+        matmul_kmajor(c, a, b, m, k, n);
+        return;
+    }
+    c.fill(0.0);
+    let cp = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_for(shards, move |si| {
+        let (lo, hi) = (si * n / shards, (si + 1) * n / shards);
+        for kk in 0..k {
+            let brow = &b[kk * n + lo..kk * n + hi];
+            for i in 0..m {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                // SAFETY: shard si exclusively owns columns lo..hi of row i.
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(cp.get().add(i * n + lo), hi - lo) };
+                axpy(crow, aik, brow);
+            }
+        }
+    });
+}
+
+/// [`matmul_bt`] on the pool: output columns (rows of `B`) are sharded;
+/// every element is one whole [`dot`], so results are bitwise identical to
+/// `matmul_bt`. Each `B` row is streamed by exactly one shard — this is the
+/// batched-OMP correlation kernel (`R[A,m] · Dᵀ`, atoms sharded).
+pub fn par_matmul_bt(
+    pool: &ExecPool,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let shards = col_shards(n, pool.threads(), 4);
+    if shards == 1 || m * k * n < PAR_MIN_MACS {
+        matmul_bt(c, a, b, m, k, n);
+        return;
+    }
+    let cp = SendPtr::new(c.as_mut_ptr());
+    pool.parallel_for(shards, move |si| {
+        let (lo, hi) = (si * n / shards, (si + 1) * n / shards);
+        for j in lo..hi {
+            let brow = &b[j * k..(j + 1) * k];
+            for i in 0..m {
+                // SAFETY: shard si exclusively owns columns lo..hi.
+                unsafe { *cp.get().add(i * n + j) = dot(&a[i * k..(i + 1) * k], brow) };
+            }
+        }
+    });
 }
 
 /// y += alpha * x (the GEMM inner kernel; unrolled by 8 for the autovectorizer).
@@ -223,6 +361,73 @@ mod tests {
             matmul_bt(&mut c1, &a, &bt, m, k, n);
             crate::util::prop::assert_close(&c1, &naive_matmul(&a, &b, m, k, n), 1e-4, "bt")
         });
+    }
+
+    #[test]
+    fn par_kernels_are_bitwise_identical_on_ragged_shapes() {
+        // The exec-layer determinism contract, as a property: every par_*
+        // kernel equals its sequential twin bit for bit, at several thread
+        // counts, on ragged (non-round, non-aligned) shapes — including
+        // shapes big enough to clear the PAR_MIN_MACS inline fallback.
+        for &threads in &[1usize, 2, 3, 4] {
+            let pool = ExecPool::new(threads);
+            Prop::new(24).seed(0xBEEF + threads as u64).check("par_gemm", |rng, size| {
+                let m = 1 + rng.below(size + 4);
+                let k = 1 + rng.below(size + 9);
+                let n = 1 + rng.below(8 * size + 37);
+                let a = rng.normal_vec(m * k);
+                let b = rng.normal_vec(k * n);
+                let bt = rng.normal_vec(n * k);
+                let mut c_seq = vec![0.0; m * n];
+                let mut c_par = vec![0.0; m * n];
+
+                matmul(&mut c_seq, &a, &b, m, k, n);
+                par_matmul(&pool, &mut c_par, &a, &b, m, k, n);
+                if c_seq != c_par {
+                    return Err(format!("par_matmul diverged at T={threads} m={m} k={k} n={n}"));
+                }
+
+                matmul_kmajor(&mut c_seq, &a, &b, m, k, n);
+                par_matmul_kmajor(&pool, &mut c_par, &a, &b, m, k, n);
+                if c_seq != c_par {
+                    return Err(format!(
+                        "par_matmul_kmajor diverged at T={threads} m={m} k={k} n={n}"
+                    ));
+                }
+
+                matmul_bt(&mut c_seq, &a, &bt, m, k, n);
+                par_matmul_bt(&pool, &mut c_par, &a, &bt, m, k, n);
+                if c_seq != c_par {
+                    return Err(format!(
+                        "par_matmul_bt diverged at T={threads} m={m} k={k} n={n}"
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn par_kernels_handle_degenerate_and_large_shapes() {
+        let pool = ExecPool::new(4);
+        // m = 1 (single-session decode): column sharding must still engage
+        // and still match exactly.
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (1usize, 96usize, 512usize);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        matmul_kmajor(&mut c1, &a, &b, m, k, n);
+        par_matmul_kmajor(&pool, &mut c2, &a, &b, m, k, n);
+        assert_eq!(c1, c2, "m=1 column sharding diverged");
+        // n = 1: collapses to a single shard (inline sequential path).
+        let b1 = rng.normal_vec(k);
+        let mut d1 = vec![0.0; 1];
+        let mut d2 = vec![0.0; 1];
+        matmul(&mut d1, &a, &b1, 1, k, 1);
+        par_matmul(&pool, &mut d2, &a, &b1, 1, k, 1);
+        assert_eq!(d1, d2);
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //!
 //! The parser covers the full JSON grammar we produce/consume here:
 //! `artifacts/manifest.json` (objects, arrays, strings, ints, floats, bools,
-//! null) and the `reports/*.json` experiment outputs. It is strict enough
-//! for round-trip tests but intentionally does not chase exotic escapes
-//! beyond `\uXXXX` (BMP only).
+//! null) and the `reports/*.json` experiment outputs, including `\uXXXX`
+//! escapes with UTF-16 surrogate pairs (`"\uD83D\uDE00"` parses to U+1F600);
+//! lone surrogates decode to U+FFFD, matching the standard lenient
+//! behaviour of `JSON.parse`/serde.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -258,13 +259,35 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = std::str::from_utf8(
-                                self.b.get(self.i + 1..self.i + 5).ok_or("bad \\u")?,
-                            )
-                            .map_err(|_| "bad \\u")?;
-                            let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let cp = self.hex4(self.i + 1)?;
                             self.i += 4;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // high surrogate: pairs with an immediately
+                                // following \uDC00..\uDFFF to form one
+                                // non-BMP code point (e.g. 😀 = D83D DE00)
+                                let lo = if self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u')
+                                {
+                                    self.hex4(self.i + 3).ok()
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo) if (0xDC00..0xE000).contains(&lo) => {
+                                        self.i += 6; // consume the low escape
+                                        let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                    }
+                                    // unpaired high surrogate: replacement
+                                    // char; whatever follows parses on its
+                                    // own
+                                    _ => s.push('\u{fffd}'),
+                                }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                s.push('\u{fffd}'); // unpaired low surrogate
+                            } else {
+                                s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            }
                         }
                         _ => return Err("bad escape".into()),
                     }
@@ -279,6 +302,13 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at byte `at` (does not advance `self.i`).
+    fn hex4(&self, at: usize) -> Result<u32, String> {
+        let hex = std::str::from_utf8(self.b.get(at..at + 4).ok_or("bad \\u")?)
+            .map_err(|_| "bad \\u")?;
+        u32::from_str_radix(hex, 16).map_err(|_| "bad \\u".to_string())
     }
 
     fn number(&mut self) -> Result<Json, String> {
@@ -324,5 +354,42 @@ mod tests {
     fn unicode_escape() {
         let v = Json::parse(r#""Ab""#).unwrap();
         assert_eq!(v.as_str(), Some("Ab"));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_one_code_point() {
+        // U+1F600 GRINNING FACE, escaped as the UTF-16 pair \uD83D\uDE00 --
+        // the BMP-only regression: the pair must become one char, not two
+        // mangled replacement chars.
+        let v = Json::parse(r#""\uD83D\uDE00""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // pair embedded in surrounding text
+        let v = Json::parse(r#""hi \uD83D\uDE00!""#).unwrap();
+        assert_eq!(v.as_str(), Some("hi \u{1F600}!"));
+        // U+1F9EA TEST TUBE = \uD83E\uDDEA
+        let v = Json::parse(r#""\uD83E\uDDEA""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F9EA}"));
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement_chars() {
+        let v = Json::parse(r#""x\uD83Dy""#).unwrap();
+        assert_eq!(v.as_str(), Some("x\u{fffd}y"));
+        let v = Json::parse(r#""x\uDE00y""#).unwrap();
+        assert_eq!(v.as_str(), Some("x\u{fffd}y"));
+        // high surrogate followed by a non-surrogate escape: both survive
+        let v = Json::parse(r#""\uD83DA""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{fffd}A"));
+    }
+
+    #[test]
+    fn non_bmp_round_trips_through_write_and_parse() {
+        let v = Json::Str("prompt 😀🧪".into());
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.as_str(), Some("prompt 😀🧪"));
+        // raw (unescaped) UTF-8 in the source also parses
+        let v = Json::parse("\"😀\"").unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
     }
 }

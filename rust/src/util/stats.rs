@@ -12,6 +12,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -30,6 +31,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         min: v[0],
         p50: pct(0.5),
         p95: pct(0.95),
+        p99: pct(0.99),
         max: v[n - 1],
     }
 }
@@ -72,6 +74,18 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p95, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn p99_sits_between_p95_and_max() {
+        let v: Vec<f64> = (1..=1000).map(|x| x as f64).collect();
+        let s = summarize(&v);
+        assert_eq!(s.p50, 501.0); // round-half-up index: v[round(0.5·999)]
+        assert_eq!(s.p95, 950.0);
+        assert_eq!(s.p99, 990.0);
+        assert_eq!(s.max, 1000.0);
     }
 
     #[test]

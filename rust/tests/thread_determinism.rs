@@ -1,0 +1,228 @@
+//! Exec-layer determinism tests: the worker pool schedules *work*, never
+//! *values*, so greedy token streams, batched decode, and served responses
+//! must be bitwise/token identical at every thread count. These tests pin
+//! engines (and their caches) to explicit 1-, 2- and 4-thread pools and
+//! compare everything against the T = 1 reference — the same contract the
+//! golden-transcript and batch-parity suites verify implicitly when CI runs
+//! them under `LEXICO_THREADS=4`.
+
+use std::sync::{Arc, Mutex};
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::{CacheShape, KvCache};
+use lexico::dict::{Dictionary, DictionarySet};
+use lexico::exec::ExecPool;
+use lexico::model::testutil::tiny_weights;
+use lexico::model::Engine;
+use lexico::server::batcher::{Batcher, BatcherConfig};
+use lexico::server::metrics::Metrics;
+use lexico::server::{Job, Request, Response};
+use lexico::tensor::argmax;
+use lexico::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Backend specs covering every compression family (and both lexico
+/// precisions) — the same families the golden transcripts pin.
+const SPECS: [&str; 8] = [
+    "full",
+    "lexico:s=2,nb=4",
+    "lexico:s=2,nb=4,fp16",
+    "lexico:s=2,nb=4,adaptive=16:0.3",
+    "kivi:bits=4,g=4,nb=4",
+    "pertoken:bits=8,g=8,nb=2",
+    "snapkv:cap=24,win=4",
+    "pyramidkv:cap=24,win=4",
+];
+
+fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+    Arc::new(DictionarySet {
+        keys: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 1000 + i as u64))
+            .collect(),
+        values: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 2000 + i as u64))
+            .collect(),
+    })
+}
+
+fn engine_with_threads(threads: usize) -> Engine {
+    Engine::with_pool(tiny_weights(101), Arc::new(ExecPool::new(threads)))
+}
+
+/// Prefill + greedy decode `n` tokens, with the cache pinned to the
+/// engine's pool (the batcher's wiring). Returns (stream, logit trace of
+/// the first decode step).
+fn greedy_stream(engine: &Engine, spec: &str, prompt: &[u32], n: usize) -> (Vec<u32>, Vec<f32>) {
+    let ctx = CacheContext { shape: engine.shape(), dicts: Some(tiny_dicts(engine.shape(), 64)) };
+    let mut cache = build_cache(spec, &ctx).unwrap();
+    cache.set_pool(engine.pool().clone());
+    let logits = engine.prefill(prompt, &mut *cache);
+    let mut tok = argmax(&logits) as u32;
+    let mut pos = prompt.len();
+    let mut out = Vec::with_capacity(n);
+    let mut first_logits = Vec::new();
+    for i in 0..n {
+        out.push(tok);
+        let logits = engine.decode_step(tok, pos, &mut *cache);
+        if i == 0 {
+            first_logits = logits.clone();
+        }
+        tok = argmax(&logits) as u32;
+        pos += 1;
+    }
+    (out, first_logits)
+}
+
+#[test]
+fn greedy_streams_are_bitwise_identical_across_thread_counts() {
+    let prompt: Vec<u32> = vec![1, 5, 9, 2, 7, 3, 8, 4, 6, 2, 5, 9];
+    let reference: Vec<(Vec<u32>, Vec<f32>)> = {
+        let eng = engine_with_threads(1);
+        SPECS.iter().map(|spec| greedy_stream(&eng, spec, &prompt, 14)).collect()
+    };
+    for &threads in &THREAD_COUNTS[1..] {
+        let eng = engine_with_threads(threads);
+        for (si, spec) in SPECS.iter().enumerate() {
+            let (stream, logits) = greedy_stream(&eng, spec, &prompt, 14);
+            assert_eq!(
+                stream, reference[si].0,
+                "{spec}: token stream diverged at T={threads}"
+            );
+            assert_eq!(
+                logits, reference[si].1,
+                "{spec}: decode logits not bitwise identical at T={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_batch_is_token_identical_across_thread_counts() {
+    // Mixed backends decoded in ONE batch per round, at T ∈ {1, 2, 4}:
+    // every thread count must produce the T=1 streams (this also exercises
+    // the per-session fan-out shards and the parallel batched-OMP overflow
+    // compression, since the lexico sessions overflow their buffers).
+    let prompts: Vec<Vec<u32>> = {
+        let mut rng = Rng::new(7);
+        (0..SPECS.len()).map(|i| (0..12 + 4 * i).map(|_| 3 + rng.below(50) as u32).collect()).collect()
+    };
+    let run = |threads: usize| -> Vec<Vec<u32>> {
+        let eng = engine_with_threads(threads);
+        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        let mut caches: Vec<Box<dyn KvCache>> = Vec::new();
+        let mut toks: Vec<u32> = Vec::new();
+        let mut poss: Vec<usize> = Vec::new();
+        let mut streams: Vec<Vec<u32>> = Vec::new();
+        for (spec, prompt) in SPECS.iter().zip(&prompts) {
+            let mut cache = build_cache(spec, &ctx).unwrap();
+            cache.set_pool(eng.pool().clone());
+            let logits = eng.prefill(prompt, &mut *cache);
+            caches.push(cache);
+            toks.push(argmax(&logits) as u32);
+            poss.push(prompt.len());
+            streams.push(vec![*toks.last().unwrap()]);
+        }
+        for _round in 0..10 {
+            let mut refs: Vec<&mut dyn KvCache> = caches.iter_mut().map(|c| &mut **c).collect();
+            let logits = eng.decode_batch(&toks, &poss, &mut refs);
+            drop(refs);
+            for i in 0..SPECS.len() {
+                toks[i] = argmax(&logits[i]) as u32;
+                poss[i] += 1;
+                streams[i].push(toks[i]);
+            }
+        }
+        streams
+    };
+    let reference = run(1);
+    for &threads in &THREAD_COUNTS[1..] {
+        let streams = run(threads);
+        for (si, spec) in SPECS.iter().enumerate() {
+            assert_eq!(
+                streams[si], reference[si],
+                "{spec}: batched decode diverged at T={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batcher_serves_identical_responses_at_every_thread_count() {
+    // The whole serving path — admission prefill, prefix cache, fan-out,
+    // batched decode rounds — driven synchronously per thread count; the
+    // reply texts (primary + alternates) must match exactly.
+    let run = |threads: usize| -> Vec<Response> {
+        let engine = Arc::new(engine_with_threads(threads));
+        let dicts = tiny_dicts(engine.shape(), 64);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let cfg = BatcherConfig {
+            default_method: "lexico:s=2,nb=4".into(),
+            prefix_min_tokens: 4,
+            ..Default::default()
+        };
+        let mut b = Batcher::new(engine, Some(dicts), cfg, metrics);
+        assert_eq!(b.pool().threads(), threads);
+        let reqs = [
+            Request::greedy(1, "k01=v11;k02=v22;k03=v33;k04=v44;", 6, ""),
+            Request::greedy(2, "k01=v11;k02=v22;k03=v33;k04=v44;k02?", 6, ""),
+            Request::greedy(3, "1+2=", 5, "full"),
+            Request {
+                id: 4,
+                prompt: "2,7,4>".into(),
+                max_new: 5,
+                method: String::new(),
+                fanout: 3,
+            },
+        ];
+        let mut replies = Vec::new();
+        for r in reqs {
+            let (tx, rx) = std::sync::mpsc::channel();
+            b.enqueue(Job { request: r, reply: tx });
+            replies.push(rx);
+        }
+        for _ in 0..128 {
+            if !b.has_work() {
+                break;
+            }
+            b.round();
+        }
+        replies.into_iter().map(|r| r.try_recv().expect("reply pending")).collect()
+    };
+    let reference = run(1);
+    for &threads in &THREAD_COUNTS[1..] {
+        let got = run(threads);
+        assert_eq!(got.len(), reference.len());
+        for (g, want) in got.iter().zip(&reference) {
+            assert!(g.error.is_none(), "T={threads}: {:?}", g.error);
+            assert_eq!(g.text, want.text, "T={threads}: primary stream diverged");
+            assert_eq!(g.alts, want.alts, "T={threads}: fan-out alternates diverged");
+            assert_eq!(g.n_generated, want.n_generated, "T={threads}");
+            assert_eq!(g.prefix_hit, want.prefix_hit, "T={threads}");
+        }
+    }
+}
+
+#[test]
+fn prefill_capture_and_suffix_resume_are_thread_invariant() {
+    // The shared-prefix serving path under threads: captured prefix state
+    // and suffix-resumed logits must be bitwise equal to the T=1 run.
+    let toks: Vec<u32> = vec![1, 4, 7, 2, 9, 3, 8, 5, 6, 2];
+    let reference = {
+        let eng = engine_with_threads(1);
+        let mut c = lexico::cache::full::FullCache::new(eng.shape());
+        let (l, st) = eng.prefill_capture(&toks[..6], &mut c);
+        let l2 = eng.prefill_suffix(&st, &toks[6..], &mut c);
+        (l, st.ks, st.vs, l2)
+    };
+    for &threads in &THREAD_COUNTS[1..] {
+        let eng = engine_with_threads(threads);
+        let mut c = lexico::cache::full::FullCache::new(eng.shape());
+        let (l, st) = eng.prefill_capture(&toks[..6], &mut c);
+        let l2 = eng.prefill_suffix(&st, &toks[6..], &mut c);
+        assert_eq!(l, reference.0, "T={threads}: prefix logits diverged");
+        assert_eq!(st.ks, reference.1, "T={threads}: captured K rows diverged");
+        assert_eq!(st.vs, reference.2, "T={threads}: captured V rows diverged");
+        assert_eq!(l2, reference.3, "T={threads}: suffix logits diverged");
+    }
+}
