@@ -3,22 +3,263 @@
 //! end-to-end per-token cost of each compression method — the
 //! batched-throughput sweep: B concurrent sessions advanced per round by
 //! `Engine::decode_batch` (the batch-first serving pipeline), reporting
-//! per-token latency and aggregate tokens/s at B ∈ {1, 4, 16} — and the
+//! per-token latency and aggregate tokens/s at B ∈ {1, 4, 16} — the
 //! thread-scaling sweep T ∈ {1, 2, 4, 8} × B ∈ {1, 4, 16} over the exec
-//! pool, reporting tokens/s and parallel efficiency.
+//! pool, reporting tokens/s and parallel efficiency — and the PR 4
+//! long-context compressed-attention sweep (flat CSR slabs + SIMD kernels
+//! vs the retained row-iterator baseline), which needs no artifacts and
+//! emits `BENCH_PR4.json` for the perf trajectory.
 //!
-//!   cargo bench --bench decode_engines [-- --threads N]
+//!   cargo bench --bench decode_engines [-- --threads N] [-- --smoke]
+//!
+//! `--smoke` runs only a reduced long-context sweep (CI smoke step).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use lexico::cache::factory::{build_cache, CacheContext};
-use lexico::cache::KvCache;
-use lexico::dict::DictionarySet;
+use lexico::cache::lexico::{LexicoCache, LexicoConfig};
+use lexico::cache::{CacheShape, KvCache};
+use lexico::dict::{Dictionary, DictionarySet};
 use lexico::exec::ExecPool;
 use lexico::model::{Engine, Weights};
+use lexico::sparse::CsrRow;
 use lexico::tasks;
+use lexico::tensor::softmax;
 use lexico::util::rng::Rng;
 use lexico::util::stats::{bench_ms, report};
+
+/// The pre-PR scalar `dot`: 8 independent lanes combined by a LINEAR fold
+/// plus a sequential tail — the kernel the row-iterator baseline ran on
+/// (no SIMD dispatch, lane sums folded left to right).
+fn dot_linear(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// The pre-PR scalar `axpy` (8-way unrolled, no SIMD dispatch).
+fn axpy_scalar(y: &mut [f32], alpha: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        let yc = &mut y[i..i + 8];
+        let xc = &x[i..i + 8];
+        for l in 0..8 {
+            yc[l] += alpha * xc[l];
+        }
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Row-iterator baseline storage: per-token `CsrRow` vectors (two heap
+/// `Vec`s per compressed token), exactly the pre-PR layout.
+struct RowHead {
+    k: Vec<CsrRow>,
+    v: Vec<CsrRow>,
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    buf_len: usize,
+}
+
+/// The pre-PR Lexico attend: row-iterator score/z loops over `Vec<CsrRow>`
+/// plus the scalar kernels above. Structure matches the old
+/// `LexicoCache::attend` operation for operation.
+#[allow(clippy::too_many_arguments)]
+fn row_attend(
+    shape: &CacheShape,
+    heads: &[RowHead],
+    k_atoms: &[f32],
+    k_n: usize,
+    v_atoms: &[f32],
+    v_n: usize,
+    q: &[f32],
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+    qd: &mut Vec<f32>,
+    z: &mut Vec<f32>,
+) {
+    let m = shape.head_dim;
+    let n_heads = shape.n_heads;
+    let scale = 1.0 / (m as f32).sqrt();
+    out.fill(0.0);
+    qd.resize(n_heads * k_n, 0.0);
+    for n in 0..k_n {
+        let atom = &k_atoms[n * m..(n + 1) * m];
+        for h in 0..n_heads {
+            qd[h * k_n + n] = dot_linear(&q[h * m..(h + 1) * m], atom);
+        }
+    }
+    z.resize(v_n, 0.0);
+    for h in 0..n_heads {
+        let head = &heads[h / shape.group()];
+        let (tc, tb) = (head.k.len(), head.buf_len);
+        let qh = &q[h * m..(h + 1) * m];
+        let qdh = &qd[h * k_n..(h + 1) * k_n];
+        scores.resize(tc + tb, 0.0);
+        for (ti, row) in head.k.iter().enumerate() {
+            let mut sc = 0.0;
+            for j in 0..row.nnz() {
+                sc += qdh[row.idx[j] as usize] * row.coef(j);
+            }
+            scores[ti] = sc * scale;
+        }
+        for ti in 0..tb {
+            scores[tc + ti] = dot_linear(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+        }
+        softmax(&mut scores[..tc + tb]);
+        let oh = &mut out[h * m..(h + 1) * m];
+        z[..v_n].fill(0.0);
+        for (ti, row) in head.v.iter().enumerate() {
+            let w = scores[ti];
+            for j in 0..row.nnz() {
+                z[row.idx[j] as usize] += w * row.coef(j);
+            }
+        }
+        for (n, &zn) in z[..v_n].iter().enumerate() {
+            if zn != 0.0 {
+                axpy_scalar(oh, zn, &v_atoms[n * m..(n + 1) * m]);
+            }
+        }
+        for ti in 0..tb {
+            axpy_scalar(oh, scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+        }
+    }
+}
+
+/// Long-context compressed-attention sweep: fill a Lexico cache to T
+/// compressed tokens, then time (a) the flat-slab attend single-thread,
+/// (b) the same attend with the score sweep sharded on the default pool,
+/// and (c) the retained row-iterator baseline — and report the OMP encode
+/// throughput observed during the fill. Emits `BENCH_PR4.json`.
+fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<()> {
+    // smoke stays past PAR_SCORE_MIN_TOKENS (1024) so the pool-sharded
+    // score path is genuinely exercised, not silently skipped
+    let sizes: &[usize] = if smoke { &[1536] } else { &[2048, 8192] };
+    let (warm, iters) = if smoke { (3, 10) } else { (10, 40) };
+    let shape = CacheShape { n_layers: 1, n_heads: 8, n_kv_heads: 4, head_dim: 64 };
+    let (n_atoms, m) = (512usize, shape.head_dim);
+    let cfg = LexicoConfig { sparsity: 8, n_buffer: 32, ..Default::default() };
+    let pool_threads = lexico::exec::default_pool().threads();
+    println!(
+        "PR4 long-context compressed attention (s={}, N={n_atoms}, m={m}, kv_heads={}) — \
+         simd={}, pool T={pool_threads}:\n",
+        cfg.sparsity,
+        shape.n_kv_heads,
+        lexico::tensor::simd::active().name
+    );
+    let mut entries = Vec::new();
+    for &t_tokens in sizes {
+        let dicts = Arc::new(DictionarySet {
+            keys: vec![Dictionary::random(m, n_atoms, 11)],
+            values: vec![Dictionary::random(m, n_atoms, 12)],
+        });
+        let mut cache = LexicoCache::new(shape, dicts.clone(), cfg.clone());
+        cache.set_pool(Arc::new(ExecPool::new(1)));
+        let mut rng = Rng::new(7);
+        let kvd = shape.kv_dim();
+        // fill through the real append path → batched OMP compression
+        let fill_t0 = Instant::now();
+        let mut done = 0usize;
+        while done < t_tokens {
+            let chunk = 512.min(t_tokens - done);
+            let ks = rng.normal_vec(chunk * kvd);
+            let vs = rng.normal_vec(chunk * kvd);
+            cache.append_batch(0, &ks, &vs, chunk);
+            done += chunk;
+        }
+        let fill_s = fill_t0.elapsed().as_secs_f64();
+        let encoded_vecs = (t_tokens - cfg.n_buffer) * shape.n_kv_heads * 2;
+        let encode_vecs_s = encoded_vecs as f64 / fill_s;
+
+        let q = rng.normal_vec(shape.q_dim());
+        let mut out = vec![0.0; shape.q_dim()];
+        // (a) flat slabs, single-thread
+        let st_slab = bench_ms(warm, iters, || cache.attend(0, &q, &mut out));
+        // (b) flat slabs, score sweep sharded on the default pool
+        cache.set_pool(lexico::exec::default_pool());
+        let st_pool = bench_ms(warm, iters, || cache.attend(0, &q, &mut out));
+        cache.set_pool(Arc::new(ExecPool::new(1)));
+
+        // (c) row-iterator baseline on identical contents
+        let heads: Vec<RowHead> = (0..shape.n_kv_heads)
+            .map(|g| {
+                let (k, v) = cache.csr_rows(0, g);
+                let (kb, vb, bl) = cache.buffer(0, g);
+                RowHead { k, v, k_buf: kb.to_vec(), v_buf: vb.to_vec(), buf_len: bl }
+            })
+            .collect();
+        let (mut scores, mut qd, mut z) = (Vec::new(), Vec::new(), Vec::new());
+        let (dk, dv) = (&dicts.keys[0], &dicts.values[0]);
+        let mut out_rows = vec![0.0; shape.q_dim()];
+        let st_rows = bench_ms(warm, iters, || {
+            row_attend(
+                &shape, &heads, &dk.atoms, dk.n, &dv.atoms, dv.n, &q, &mut out_rows,
+                &mut scores, &mut qd, &mut z,
+            )
+        });
+
+        let ns_tok = |mean_ms: f64| mean_ms * 1e6 / t_tokens as f64;
+        let speedup = st_rows.mean / st_slab.mean;
+        println!(
+            "T={t_tokens:<6} slab {:>9.4} ms ({:>7.1} ns/tok)  pool[T={pool_threads}] {:>9.4} ms  \
+             row-iter {:>9.4} ms ({:>7.1} ns/tok)  speedup ×{speedup:.2}  \
+             encode {encode_vecs_s:>9.0} vecs/s",
+            st_slab.mean,
+            ns_tok(st_slab.mean),
+            st_pool.mean,
+            st_rows.mean,
+            ns_tok(st_rows.mean),
+        );
+        entries.push(format!(
+            "    {{\"tokens\": {t_tokens}, \"attend_ms\": {:.6}, \"attend_ns_per_token\": {:.2}, \
+             \"attend_tokens_per_s\": {:.0}, \"attend_pool_ms\": {:.6}, \"pool_threads\": {pool_threads}, \
+             \"row_baseline_ms\": {:.6}, \"row_baseline_ns_per_token\": {:.2}, \
+             \"speedup_vs_row_iter\": {:.3}, \"omp_encode_vecs_per_s\": {:.0}}}",
+            st_slab.mean,
+            ns_tok(st_slab.mean),
+            t_tokens as f64 / (st_slab.mean / 1e3),
+            st_pool.mean,
+            st_rows.mean,
+            ns_tok(st_rows.mean),
+            speedup,
+            encode_vecs_s,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"pr4_longcontext_attend\",\n  \"simd\": \"{}\",\n  \"smoke\": {smoke},\n  \
+         \"config\": {{\"sparsity\": {}, \"n_buffer\": {}, \"n_atoms\": {n_atoms}, \"head_dim\": {m}, \
+         \"n_kv_heads\": {}}},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        lexico::tensor::simd::active().name,
+        cfg.sparsity,
+        cfg.n_buffer,
+        shape.n_kv_heads,
+        entries.join(",\n")
+    );
+    // cargo runs bench binaries with cwd = package root (rust/); anchor the
+    // report at the workspace root where the trajectory tooling expects it
+    let out_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_PR4.json"))
+        .unwrap_or_else(|| "BENCH_PR4.json".into());
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {}\n", out_path.display());
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     // --threads N (or --threads=N) sizes the default pool for the backend
@@ -28,6 +269,14 @@ fn main() -> anyhow::Result<()> {
         if !lexico::exec::configure_default(t) {
             eprintln!("warning: exec pool already initialized; --threads {t} ignored");
         }
+    }
+    // The PR 4 sweep is artifact-free: it always runs (reduced under
+    // --smoke, which then skips the artifact-bound sections — CI's bench
+    // smoke step).
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    longcontext_attend_sweep(smoke)?;
+    if smoke {
+        return Ok(());
     }
     let art = lexico::artifacts_dir();
     if !art.join("model_M.bin").exists() {

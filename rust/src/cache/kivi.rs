@@ -54,6 +54,10 @@ pub struct KiviCache {
     cfg: KiviConfig,
     layers: Vec<LayerState>,
     tokens: usize,
+    /// incremental compressed-footprint bytes (kept in sync on every
+    /// buffer push, value spill, pending move and key-block seal →
+    /// `mem_bytes` is O(1))
+    mem: f64,
     scores: Vec<f32>,
     dk: Vec<f32>,
     dv: Vec<f32>,
@@ -77,6 +81,7 @@ impl KiviCache {
             cfg,
             layers,
             tokens: 0,
+            mem: 0.0,
             scores: Vec::new(),
             dk: Vec::new(),
             dv: Vec::new(),
@@ -90,10 +95,14 @@ impl KiviCache {
         let kvd = self.shape.kv_dim();
         let g = self.cfg.group;
         let bits = self.cfg.bits;
+        let mut dm = 0.0;
         let st = &mut self.layers[layer];
         while st.buf_len > self.cfg.n_buffer {
             let v: Vec<f32> = st.v_buf[..kvd].to_vec();
             st.qv.push(quantize_vector(&v, g.min(kvd), bits));
+            // residual (2·kvd·2 B) → quantized value + FP16 pending key
+            dm += st.qv.last().unwrap().iter().map(|q| q.bytes()).sum::<f64>();
+            dm += (kvd * 2) as f64 - (2 * kvd * 2) as f64;
             st.k_pending.extend_from_slice(&st.k_buf[..kvd]);
             st.pending_len += 1;
             st.k_buf.drain(..kvd);
@@ -110,10 +119,14 @@ impl KiviCache {
                 }
                 per_channel.push(quantize_group(&col, bits));
             }
+            // g FP16 pending keys → one per-channel block
+            dm += per_channel.iter().map(|q| q.bytes()).sum::<f64>();
+            dm -= (g * kvd * 2) as f64;
             st.key_blocks.push(KeyBlock { per_channel, len: g });
             st.k_pending.drain(..g * kvd);
             st.pending_len -= g;
         }
+        self.mem += dm;
     }
 
     /// Dequantize everything (blocks + pending keys + residual) token-major.
@@ -160,6 +173,7 @@ impl KvCache for KiviCache {
         st.k_buf.extend_from_slice(ks);
         st.v_buf.extend_from_slice(vs);
         st.buf_len += t;
+        self.mem += (t * 2 * self.shape.kv_dim() * 2) as f64;
         self.spill(layer);
         if layer == 0 {
             self.tokens += t;
@@ -171,6 +185,7 @@ impl KvCache for KiviCache {
         st.k_buf.extend_from_slice(k);
         st.v_buf.extend_from_slice(v);
         st.buf_len += 1;
+        self.mem += (2 * self.shape.kv_dim() * 2) as f64;
         self.spill(layer);
         if layer == 0 {
             self.tokens += 1;
@@ -196,6 +211,7 @@ impl KvCache for KiviCache {
         st.k_buf.extend_from_slice(ks);
         st.v_buf.extend_from_slice(vs);
         st.buf_len += b;
+        self.mem += (b * 2 * self.shape.kv_dim() * 2) as f64;
         self.spill(layer);
         if layer == 0 {
             self.tokens += b;
@@ -222,21 +238,10 @@ impl KvCache for KiviCache {
         self.tokens
     }
 
+    /// O(1): maintained incrementally on push/spill/block-seal instead of
+    /// re-walking every quant group per call.
     fn mem_bytes(&self) -> f64 {
-        let kvd = self.shape.kv_dim() as f64;
-        let mut bytes = 0.0;
-        for st in &self.layers {
-            for b in &st.key_blocks {
-                bytes += b.per_channel.iter().map(|g| g.bytes()).sum::<f64>();
-            }
-            for groups in &st.qv {
-                bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
-            }
-            // pending keys + residual, FP16-accounted
-            bytes += st.pending_len as f64 * kvd * 2.0;
-            bytes += st.buf_len as f64 * 2.0 * kvd * 2.0;
-        }
-        bytes
+        self.mem
     }
 
     fn full_bytes(&self) -> f64 {
@@ -304,6 +309,44 @@ mod tests {
         }
         bat.attend_batch(0, &qs, &mut o_bat, b);
         assert_eq!(o_seq, o_bat, "one-dequantization attend must match");
+    }
+
+    #[test]
+    fn incremental_mem_equals_walked_groups() {
+        // the O(1) counter vs the full walk (the pre-PR formula), exactly —
+        // across value spills, pending keys, and key-block seals
+        let cfg = KiviConfig { bits: 2, group: 4, n_buffer: 2 };
+        let mut c = KiviCache::new(shape(), cfg);
+        let mut rng = Rng::new(14);
+        let walk = |c: &KiviCache| -> f64 {
+            let kvd = c.shape.kv_dim() as f64;
+            let mut bytes = 0.0;
+            for st in &c.layers {
+                for b in &st.key_blocks {
+                    bytes += b.per_channel.iter().map(|g| g.bytes()).sum::<f64>();
+                }
+                for groups in &st.qv {
+                    bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
+                }
+                bytes += st.pending_len as f64 * kvd * 2.0;
+                bytes += st.buf_len as f64 * 2.0 * kvd * 2.0;
+            }
+            bytes
+        };
+        let t = 6;
+        let ks = rng.normal_vec(t * 16);
+        let vs = rng.normal_vec(t * 16);
+        c.ingest_prefill(0, &ks, &vs, t, &[], 0);
+        assert_eq!(c.mem_bytes(), walk(&c), "after prefill");
+        for i in 0..13 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+            assert_eq!(c.mem_bytes(), walk(&c), "after append {i}");
+        }
+        assert!(!c.layers[0].key_blocks.is_empty(), "block seal exercised");
+        let f = c.fork();
+        assert_eq!(f.mem_bytes(), c.mem_bytes(), "fork accounting");
     }
 
     #[test]

@@ -14,12 +14,22 @@
 //! one softmax spans both. The value side accumulates coefficients into a
 //! dictionary-bin vector `z` and finishes with atoms·z — the same
 //! O(N·m + T·s) complexity the paper reports.
+//!
+//! Compressed tokens live in struct-of-arrays [`CsrSlab`]s (DESIGN.md §8):
+//! sealed pages and the unsealed tail each hold one flat index array, one
+//! flat coefficient array and a row-offset array, so the O(T·s) score and
+//! z-bin passes are linear sweeps over contiguous memory. Long compressed
+//! contexts additionally shard the score sweep over the cache's
+//! [`ExecPool`] (disjoint score ranges, per-element order unchanged —
+//! bitwise identical at every thread count).
 
 use super::{CacheShape, KvCache};
 use crate::dict::adaptive::AdaptiveDict;
 use crate::dict::DictionarySet;
-use crate::omp::{omp_encode, omp_encode_batch, BatchOmpWorkspace, OmpWorkspace};
-use crate::sparse::{CoefPrecision, CsrRow};
+use crate::exec::{self, ExecPool, SendPtr};
+use crate::omp::{omp_encode, omp_encode_batch, BatchOmpWorkspace, OmpWorkspace, SparseCode};
+use crate::sparse::memory::csr_row_bytes;
+use crate::sparse::{CoefPrecision, CsrRow, CsrSlab};
 use crate::tensor::{axpy, dot, softmax};
 use std::sync::Arc;
 
@@ -60,16 +70,27 @@ impl Default for LexicoConfig {
 /// full-precision recency buffer are deep-copied per fork.
 const PAGE_TOKENS: usize = 32;
 
-/// One frozen page of compressed tokens: parallel K and V rows.
-#[derive(Clone, Default)]
+/// Compressed contexts at or above this many tokens shard the per-token
+/// score sweep over the exec pool; below it a parallel launch costs more
+/// than the sweep itself (the O(T·s) pass is ~sparsity MACs per token).
+/// Shards are kept to at least a quarter of this (so claim overhead stays
+/// negligible); tests lower the cache's `par_score_min` to exercise the
+/// sharded path on small contexts.
+const PAR_SCORE_MIN_TOKENS: usize = 1024;
+
+/// One frozen page of compressed tokens: parallel K and V slabs, exactly
+/// [`PAGE_TOKENS`] rows each (pages seal only when full). No `Default`:
+/// pages are only ever created by sealing the tail (`CsrSlab::take`),
+/// which is what carries the cache's coefficient precision through.
+#[derive(Clone)]
 struct CsrPage {
-    k: Vec<CsrRow>,
-    v: Vec<CsrRow>,
+    k: CsrSlab,
+    v: CsrSlab,
 }
 
 impl CsrPage {
     fn bytes(&self) -> f64 {
-        self.k.iter().chain(&self.v).map(|r| r.bytes() as f64).sum()
+        (self.k.bytes() + self.v.bytes()) as f64
     }
 }
 
@@ -78,8 +99,8 @@ struct HeadState {
     /// sealed compressed pages, oldest first — shared across forks
     pages: Vec<Arc<CsrPage>>,
     /// unsealed compressed rows (< PAGE_TOKENS of them) — fork-private
-    tail_k: Vec<CsrRow>,
-    tail_v: Vec<CsrRow>,
+    tail_k: CsrSlab,
+    tail_v: CsrSlab,
     /// total compressed tokens (pages + tail)
     n_csr: usize,
     /// token-major buffer rows, oldest first: [t][m]
@@ -89,28 +110,128 @@ struct HeadState {
 }
 
 impl HeadState {
-    /// Append one compressed token (K and V rows always arrive in pairs),
-    /// sealing a page whenever the tail fills.
-    fn push_csr(&mut self, k: CsrRow, v: CsrRow) {
-        self.tail_k.push(k);
-        self.tail_v.push(v);
-        self.n_csr += 1;
-        if self.tail_k.len() >= PAGE_TOKENS {
-            self.pages.push(Arc::new(CsrPage {
-                k: std::mem::take(&mut self.tail_k),
-                v: std::mem::take(&mut self.tail_v),
-            }));
+    fn new(prec: CoefPrecision) -> Self {
+        HeadState {
+            pages: Vec::new(),
+            tail_k: CsrSlab::new(prec),
+            tail_v: CsrSlab::new(prec),
+            n_csr: 0,
+            k_buf: Vec::new(),
+            v_buf: Vec::new(),
+            buf_len: 0,
         }
     }
 
-    /// Compressed K rows in token order (pages, then the unsealed tail).
-    fn k_rows(&self) -> impl Iterator<Item = &CsrRow> {
-        self.pages.iter().flat_map(|p| p.k.iter()).chain(self.tail_k.iter())
+    /// Append one compressed token (K and V codes always arrive in pairs),
+    /// quantizing through the slab precision and sealing a page whenever
+    /// the tail fills.
+    fn push_code(&mut self, k_idx: &[u16], k_val: &[f32], v_idx: &[u16], v_val: &[f32]) {
+        self.tail_k.push_f32(k_idx, k_val);
+        self.tail_v.push_f32(v_idx, v_val);
+        self.n_csr += 1;
+        if self.tail_k.rows() >= PAGE_TOKENS {
+            self.pages
+                .push(Arc::new(CsrPage { k: self.tail_k.take(), v: self.tail_v.take() }));
+        }
     }
 
-    /// Compressed V rows in token order.
-    fn v_rows(&self) -> impl Iterator<Item = &CsrRow> {
-        self.pages.iter().flat_map(|p| p.v.iter()).chain(self.tail_v.iter())
+    /// Compressed K slabs in token order (pages, then the unsealed tail).
+    fn k_slabs(&self) -> impl Iterator<Item = &CsrSlab> {
+        self.pages.iter().map(|p| &p.k).chain(std::iter::once(&self.tail_k))
+    }
+
+    /// Compressed V slabs in token order.
+    fn v_slabs(&self) -> impl Iterator<Item = &CsrSlab> {
+        self.pages.iter().map(|p| &p.v).chain(std::iter::once(&self.tail_v))
+    }
+
+    /// The K slab holding compressed token `t`, plus `t`'s row within it.
+    /// Every sealed page holds exactly [`PAGE_TOKENS`] rows, so this is
+    /// pure index math.
+    fn k_slab_at(&self, t: usize) -> (&CsrSlab, usize) {
+        let p = t / PAGE_TOKENS;
+        if p < self.pages.len() {
+            (&self.pages[p].k, t % PAGE_TOKENS)
+        } else {
+            (&self.tail_k, t - self.pages.len() * PAGE_TOKENS)
+        }
+    }
+
+    /// Score compressed tokens `lo..hi` into `out` (`out[0]` = token `lo`):
+    /// a linear sweep over the slabs the range touches. Each score is one
+    /// independent ascending-order accumulation, so any partition of the
+    /// token range composes bitwise.
+    fn score_range(&self, lo: usize, hi: usize, qd: &[f32], scale: f32, out: &mut [f32]) {
+        let mut t = lo;
+        let mut o = 0;
+        while t < hi {
+            let (slab, row) = self.k_slab_at(t);
+            let take = (slab.rows() - row).min(hi - t);
+            slab.score_rows(row, row + take, qd, scale, &mut out[o..o + take]);
+            t += take;
+            o += take;
+        }
+    }
+
+    /// The compressed-token score pass (`scores[t] = scale·(q·D)·c_t`),
+    /// sharded over `pool` when the context is long. Shards own disjoint
+    /// score ranges and the per-element operation order never changes, so
+    /// the result is bitwise identical at every thread count.
+    fn score_compressed(
+        &self,
+        pool: &ExecPool,
+        qd: &[f32],
+        scale: f32,
+        out: &mut [f32],
+        par_min: usize,
+    ) {
+        let tc = self.n_csr;
+        debug_assert_eq!(out.len(), tc);
+        if tc == 0 {
+            return;
+        }
+        let shard_min = (par_min / 4).max(1);
+        let shards = pool.threads().min(tc / shard_min).max(1);
+        if tc < par_min || shards == 1 {
+            self.score_range(0, tc, qd, scale, out);
+            return;
+        }
+        let op = SendPtr::new(out.as_mut_ptr());
+        pool.parallel_for(shards, move |si| {
+            let (lo, hi) = (si * tc / shards, (si + 1) * tc / shards);
+            // SAFETY: shard si exclusively owns scores lo..hi.
+            let shard = unsafe { std::slice::from_raw_parts_mut(op.get().add(lo), hi - lo) };
+            self.score_range(lo, hi, qd, scale, shard);
+        });
+    }
+
+    /// Value-side z-bin accumulation over every compressed token:
+    /// `z[idx] += scores[t]·coef`, as linear slab sweeps in token order.
+    fn accumulate_value_bins(&self, scores: &[f32], z: &mut [f32]) {
+        let mut t0 = 0;
+        for slab in self.v_slabs() {
+            slab.accumulate_bins(&scores[t0..t0 + slab.rows()], z);
+            t0 += slab.rows();
+        }
+    }
+
+    /// Compressed K rows in token order — the retained row-iterator
+    /// reference view (tests, parity suites, the row-baseline bench).
+    fn k_rows(&self) -> Vec<CsrRow> {
+        let mut rows = Vec::with_capacity(self.n_csr);
+        for slab in self.k_slabs() {
+            rows.extend(slab.to_rows());
+        }
+        rows
+    }
+
+    /// Compressed V rows in token order (reference view).
+    fn v_rows(&self) -> Vec<CsrRow> {
+        let mut rows = Vec::with_capacity(self.n_csr);
+        for slab in self.v_slabs() {
+            rows.extend(slab.to_rows());
+        }
+        rows
     }
 
     /// Fork-private copy: pages shared by `Arc`, tail and buffer cloned.
@@ -140,6 +261,19 @@ pub struct LexicoCache {
     ws: OmpWorkspace,
     /// batched-OMP workspace (overflow compression of all heads at once)
     bws: BatchOmpWorkspace,
+    /// pool the long-context score sweep shards onto (shared with `bws`)
+    pool: Arc<ExecPool>,
+    /// `LEXICO_QD_PER_HEAD` (the §Perf comparison layout), read once at
+    /// construction — the decode hot loop must not issue an env syscall
+    /// per layer per step
+    qd_per_head: bool,
+    /// shard threshold for the compressed score sweep (the constant;
+    /// overridable in tests to exercise sharding on small contexts)
+    par_score_min: usize,
+    /// running byte count of every stored CSR row (incremental `mem_bytes`)
+    csr_bytes: f64,
+    /// total buffer tokens across all heads (incremental `mem_bytes`)
+    buf_tokens: usize,
     // overflow-gather scratch: [total][m] K and V rows pending compression
     gather_k: Vec<f32>,
     gather_v: Vec<f32>,
@@ -158,15 +292,7 @@ impl LexicoCache {
         let m = shape.head_dim;
         assert_eq!(dicts.keys[0].m, m, "dict head_dim mismatch");
         let heads = (0..shape.n_layers * shape.n_kv_heads)
-            .map(|_| HeadState {
-                pages: Vec::new(),
-                tail_k: Vec::new(),
-                tail_v: Vec::new(),
-                n_csr: 0,
-                k_buf: Vec::new(),
-                v_buf: Vec::new(),
-                buf_len: 0,
-            })
+            .map(|_| HeadState::new(cfg.precision))
             .collect();
         let (adaptive_k, adaptive_v) = if let Some((max_extra, d)) = cfg.adaptive {
             (
@@ -180,10 +306,16 @@ impl LexicoCache {
             )
         };
         let n_cap = n + cfg.adaptive.map(|(e, _)| e).unwrap_or(0);
+        let pool = exec::default_pool();
         LexicoCache {
             shape,
             ws: OmpWorkspace::new(n_cap, m, cfg.sparsity.max(1)),
-            bws: BatchOmpWorkspace::new(),
+            bws: BatchOmpWorkspace::with_pool(pool.clone()),
+            pool,
+            qd_per_head: std::env::var_os("LEXICO_QD_PER_HEAD").is_some(),
+            par_score_min: PAR_SCORE_MIN_TOKENS,
+            csr_bytes: 0.0,
+            buf_tokens: 0,
             cfg,
             dicts,
             adaptive_k,
@@ -205,15 +337,14 @@ impl LexicoCache {
     }
 
     /// Compress one vector with the layer's K or V dictionary.
-    fn encode(&mut self, layer: usize, is_key: bool, x: &[f32]) -> CsrRow {
-        let prec = self.cfg.precision;
+    fn encode(&mut self, layer: usize, is_key: bool, x: &[f32]) -> SparseCode {
         let (s, delta) = (self.cfg.sparsity, self.cfg.delta);
         let adapt = if is_key {
             &mut self.adaptive_k[layer]
         } else {
             &mut self.adaptive_v[layer]
         };
-        let code = if let Some(ad) = adapt.as_mut() {
+        if let Some(ad) = adapt.as_mut() {
             ad.encode(x, s, &mut self.ws).0
         } else {
             let d = if is_key {
@@ -222,8 +353,7 @@ impl LexicoCache {
                 &self.dicts.values[layer]
             };
             omp_encode(&d.atoms, d.n, d.m, x, s, delta, &mut self.ws)
-        };
-        CsrRow::from_f32(&code.idx, &code.val, prec)
+        }
     }
 
     /// Compress the oldest `n` buffer tokens of every kv head in `layer`.
@@ -236,6 +366,7 @@ impl LexicoCache {
     /// sequential encoder, so cache contents don't depend on the path.
     fn compress_oldest(&mut self, layer: usize, n: usize) {
         let m = self.shape.head_dim;
+        let fp16 = self.cfg.precision == CoefPrecision::Fp16;
         if self.cfg.adaptive.is_some() {
             // Adaptive growth mutates the dictionary per encoded vector, so
             // results are order-dependent: keep the sequential path.
@@ -247,10 +378,13 @@ impl LexicoCache {
                     }
                     let k: Vec<f32> = self.heads[hi].k_buf[..m].to_vec();
                     let v: Vec<f32> = self.heads[hi].v_buf[..m].to_vec();
-                    let k_row = self.encode(layer, true, &k);
-                    let v_row = self.encode(layer, false, &v);
+                    let k_code = self.encode(layer, true, &k);
+                    let v_code = self.encode(layer, false, &v);
+                    self.csr_bytes += (csr_row_bytes(k_code.nnz(), fp16)
+                        + csr_row_bytes(v_code.nnz(), fp16)) as f64;
+                    self.buf_tokens -= 1;
                     let h = &mut self.heads[hi];
-                    h.push_csr(k_row, v_row);
+                    h.push_code(&k_code.idx, &k_code.val, &v_code.idx, &v_code.val);
                     h.k_buf.drain(..m);
                     h.v_buf.drain(..m);
                     h.buf_len -= 1;
@@ -275,7 +409,7 @@ impl LexicoCache {
         }
         let dicts = self.dicts.clone();
         let (dk, dv) = (&dicts.keys[layer], &dicts.values[layer]);
-        let (s, delta, prec) = (self.cfg.sparsity, self.cfg.delta, self.cfg.precision);
+        let (s, delta) = (self.cfg.sparsity, self.cfg.delta);
         let k_codes =
             omp_encode_batch(&dk.atoms, dk.n, dk.m, &self.gather_k, total, s, delta, &mut self.bws);
         let v_codes =
@@ -284,16 +418,17 @@ impl LexicoCache {
         for (g, &take) in takes.iter().enumerate() {
             let hi = self.head_idx(layer, g);
             let h = &mut self.heads[hi];
+            let mut new_bytes = 0usize;
             for code_i in off..off + take {
                 let (kc, vc) = (&k_codes[code_i], &v_codes[code_i]);
-                h.push_csr(
-                    CsrRow::from_f32(&kc.idx, &kc.val, prec),
-                    CsrRow::from_f32(&vc.idx, &vc.val, prec),
-                );
+                new_bytes += csr_row_bytes(kc.nnz(), fp16) + csr_row_bytes(vc.nnz(), fp16);
+                h.push_code(&kc.idx, &kc.val, &vc.idx, &vc.val);
             }
             h.k_buf.drain(..take * m);
             h.v_buf.drain(..take * m);
             h.buf_len -= take;
+            self.csr_bytes += new_bytes as f64;
+            self.buf_tokens -= take;
             off += take;
         }
     }
@@ -309,6 +444,27 @@ impl LexicoCache {
             Some(a) => (a.atoms(), a.n_atoms()),
             None => (&base.atoms, base.n),
         }
+    }
+
+    /// Row-iterator view of one (layer, kv head)'s compressed K/V tokens —
+    /// the reference representation for parity tests and the row-baseline
+    /// bench. Token order matches the slab sweep exactly.
+    pub fn csr_rows(&self, layer: usize, g: usize) -> (Vec<CsrRow>, Vec<CsrRow>) {
+        let h = &self.heads[self.head_idx(layer, g)];
+        (h.k_rows(), h.v_rows())
+    }
+
+    /// One (layer, kv head)'s full-precision recency buffer:
+    /// (token-major K rows, token-major V rows, token count).
+    pub fn buffer(&self, layer: usize, g: usize) -> (&[f32], &[f32], usize) {
+        let m = self.shape.head_dim;
+        let h = &self.heads[self.head_idx(layer, g)];
+        (&h.k_buf[..h.buf_len * m], &h.v_buf[..h.buf_len * m], h.buf_len)
+    }
+
+    #[cfg(test)]
+    fn set_par_score_min(&mut self, min: usize) {
+        self.par_score_min = min;
     }
 }
 
@@ -330,6 +486,7 @@ impl KvCache for LexicoCache {
             }
             self.heads[hi].buf_len += t;
         }
+        self.buf_tokens += t * self.shape.n_kv_heads;
         let overflow = self.heads[self.head_idx(layer, 0)]
             .buf_len
             .saturating_sub(self.cfg.n_buffer);
@@ -349,6 +506,7 @@ impl KvCache for LexicoCache {
             self.heads[hi].v_buf.extend_from_slice(&v[g * m..(g + 1) * m]);
             self.heads[hi].buf_len += 1;
         }
+        self.buf_tokens += self.shape.n_kv_heads;
         if self.heads[self.head_idx(layer, 0)].buf_len > self.cfg.n_buffer {
             self.compress_oldest(layer, self.cfg.n_approx);
         }
@@ -375,6 +533,7 @@ impl KvCache for LexicoCache {
             }
             self.heads[hi].buf_len += b;
         }
+        self.buf_tokens += b * self.shape.n_kv_heads;
         // Replay the sequential trigger schedule exactly: each append whose
         // post-append buffer tops n_buffer compresses min(n_a, buf_len)
         // tokens (compress_oldest is bounded by the buffer). The compressed
@@ -432,14 +591,16 @@ impl KvCache for LexicoCache {
         // qd[h][n] = q_h · D_k[n] for ALL heads in one streaming pass over
         // the dictionary (perf pass #1, EXPERIMENTS.md §Perf: one load of
         // each atom now serves every query head instead of H separate
-        // passes over the N·m array). Set LEXICO_QD_PER_HEAD=1 to use the
-        // pre-optimization per-head layout (kept for the §Perf comparison).
+        // passes over the N·m array). Set LEXICO_QD_PER_HEAD=1 *at cache
+        // construction* to use the pre-optimization per-head layout (kept
+        // for the §Perf comparison — the flag is latched into
+        // `self.qd_per_head` so the hot loop never touches the env).
         if self.qd.len() < n_heads * k_n {
             self.qd.resize(n_heads * k_n, 0.0);
         }
         {
             let qd = &mut self.qd[..n_heads * k_n];
-            if std::env::var_os("LEXICO_QD_PER_HEAD").is_some() {
+            if self.qd_per_head {
                 for h in 0..n_heads {
                     let qh = &q[h * m..(h + 1) * m];
                     for n in 0..k_n {
@@ -464,15 +625,10 @@ impl KvCache for LexicoCache {
             let tb = head.buf_len;
             let qh = &q[h * m..(h + 1) * m];
             let qd = &self.qd[h * k_n..(h + 1) * k_n];
-            // compressed scores: O(T·s)
+            // compressed scores: O(T·s), one linear sweep over the flat
+            // slabs, pool-sharded when the context is long
             self.scores.resize(tc + tb, 0.0);
-            for (ti, row) in head.k_rows().enumerate() {
-                let mut sc = 0.0;
-                for j in 0..row.nnz() {
-                    sc += qd[row.idx[j] as usize] * row.coef(j);
-                }
-                self.scores[ti] = sc * scale;
-            }
+            head.score_compressed(&self.pool, qd, scale, &mut self.scores[..tc], self.par_score_min);
             // buffer scores: dense
             for ti in 0..tb {
                 self.scores[tc + ti] =
@@ -484,12 +640,7 @@ impl KvCache for LexicoCache {
             let oh = &mut out[h * m..(h + 1) * m];
             let z = &mut self.z[..v_n];
             z.fill(0.0);
-            for (ti, row) in head.v_rows().enumerate() {
-                let w = self.scores[ti];
-                for j in 0..row.nnz() {
-                    z[row.idx[j] as usize] += w * row.coef(j);
-                }
-            }
+            head.accumulate_value_bins(&self.scores[..tc], z);
             for (n, &zn) in z.iter().enumerate() {
                 if zn != 0.0 {
                     axpy(oh, zn, &v_atoms[n * m..(n + 1) * m]);
@@ -573,25 +724,20 @@ impl KvCache for LexicoCache {
                 let off = self.score_off[row];
                 let qh = &qs[qi * qdim + h * m..qi * qdim + (h + 1) * m];
                 let qdrow = &self.qd[row * k_n..(row + 1) * k_n];
-                for (ti, csr) in head.k_rows().enumerate() {
-                    let mut sc = 0.0;
-                    for j in 0..csr.nnz() {
-                        sc += qdrow[csr.idx[j] as usize] * csr.coef(j);
-                    }
-                    self.scores[off + ti] = sc * scale;
-                }
+                head.score_compressed(
+                    &self.pool,
+                    qdrow,
+                    scale,
+                    &mut self.scores[off..off + tc],
+                    self.par_score_min,
+                );
                 for ti in 0..tb {
                     self.scores[off + tc + ti] =
                         dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
                 }
                 softmax(&mut self.scores[off..off + tc + tb]);
                 let z = &mut self.z[row * v_n..(row + 1) * v_n];
-                for (ti, csr) in head.v_rows().enumerate() {
-                    let w = self.scores[off + ti];
-                    for j in 0..csr.nnz() {
-                        z[csr.idx[j] as usize] += w * csr.coef(j);
-                    }
-                }
+                head.accumulate_value_bins(&self.scores[off..off + tc], z);
             }
         }
 
@@ -639,7 +785,12 @@ impl KvCache for LexicoCache {
         Box::new(LexicoCache {
             shape: self.shape,
             ws: OmpWorkspace::new(n_cap, m, self.cfg.sparsity.max(1)),
-            bws: BatchOmpWorkspace::with_pool(self.bws.pool().clone()),
+            bws: BatchOmpWorkspace::with_pool(self.pool.clone()),
+            pool: self.pool.clone(),
+            qd_per_head: self.qd_per_head,
+            par_score_min: self.par_score_min,
+            csr_bytes: self.csr_bytes,
+            buf_tokens: self.buf_tokens,
             cfg: self.cfg.clone(),
             dicts: self.dicts.clone(),
             adaptive_k: self.adaptive_k.clone(),
@@ -674,9 +825,11 @@ impl KvCache for LexicoCache {
         self.cfg.adaptive.is_none()
     }
 
-    /// Overflow compression (the GEMM-batched OMP encoder) runs on `pool`;
-    /// codes are bitwise independent of the pool's thread count.
+    /// Overflow compression (the GEMM-batched OMP encoder) and the
+    /// long-context score sweep both run on `pool`; results are bitwise
+    /// independent of the pool's thread count.
     fn set_pool(&mut self, pool: Arc<crate::exec::ExecPool>) {
+        self.pool = pool.clone();
         self.bws.set_pool(pool);
     }
 
@@ -684,15 +837,15 @@ impl KvCache for LexicoCache {
         self.tokens
     }
 
+    /// O(1) in context length: CSR bytes accumulate as rows are pushed
+    /// (`csr_bytes`, paper §3.4 per-row formula — exact, all summands are
+    /// integers) and buffer tokens are counted on push/drain
+    /// (`buf_tokens`); only the per-layer adaptive overlays are consulted
+    /// per call. The batcher's admission loop calls this every round for
+    /// every session, so it must not re-walk the stored rows.
     fn mem_bytes(&self) -> f64 {
         let m = self.shape.head_dim;
-        let mut bytes = 0.0;
-        for head in &self.heads {
-            for row in head.k_rows().chain(head.v_rows()) {
-                bytes += row.bytes() as f64;
-            }
-            bytes += (head.buf_len * 2 * m * 2) as f64; // buffer @ FP16
-        }
+        let mut bytes = self.csr_bytes + (self.buf_tokens * 2 * m * 2) as f64; // buffer @ FP16
         // adaptive atoms are session-private → charged to KV size (§4.2.4)
         for ad in self.adaptive_k.iter().chain(&self.adaptive_v).flatten() {
             bytes += ad.extra_bytes() as f64;
@@ -827,7 +980,7 @@ mod tests {
             for (hs, hb) in seq.heads.iter().zip(&bat.heads) {
                 assert_eq!(hs.buf_len, hb.buf_len, "na={na}");
                 assert_eq!(hs.n_csr, hb.n_csr, "na={na}");
-                for (a, b) in hs.k_rows().zip(hb.k_rows()) {
+                for (a, b) in hs.k_rows().iter().zip(&hb.k_rows()) {
                     assert_eq!(a.idx, b.idx, "na={na}");
                     assert_eq!(a.coef_bits, b.coef_bits, "na={na}");
                 }
@@ -969,10 +1122,10 @@ mod tests {
             assert_eq!(cold.mem_bytes(), split.mem_bytes());
             for (hc, hs) in cold.heads.iter().zip(&split.heads) {
                 assert_eq!(hc.n_csr, hs.n_csr);
-                for (a, b) in hc.k_rows().zip(hs.k_rows()) {
+                for (a, b) in hc.k_rows().iter().zip(&hs.k_rows()) {
                     assert_eq!((&a.idx, &a.coef_bits), (&b.idx, &b.coef_bits));
                 }
-                for (a, b) in hc.v_rows().zip(hs.v_rows()) {
+                for (a, b) in hc.v_rows().iter().zip(&hs.v_rows()) {
                     assert_eq!((&a.idx, &a.coef_bits), (&b.idx, &b.coef_bits));
                 }
                 assert_eq!(hc.k_buf, hs.k_buf);
@@ -987,6 +1140,237 @@ mod tests {
             ..Default::default()
         });
         assert!(!c.split_prefill_exact());
+    }
+
+    /// The retained row-iterator reference: the pre-slab attend, written
+    /// against `k_rows()`/`v_rows()` exactly as the old storage walked its
+    /// per-token `Vec<CsrRow>`s. Uses the same canonical `dot`/`axpy`
+    /// kernels, so the flat-slab attend must match it bit for bit.
+    fn reference_attend_rows(c: &LexicoCache, layer: usize, q: &[f32], out: &mut [f32]) {
+        let m = c.shape.head_dim;
+        let n_heads = c.shape.n_heads;
+        let scale = 1.0 / (m as f32).sqrt();
+        out.fill(0.0);
+        let (k_atoms, k_n) = {
+            let (a, n) = c.atoms(layer, true);
+            (a.to_vec(), n)
+        };
+        let (v_atoms, v_n) = {
+            let (a, n) = c.atoms(layer, false);
+            (a.to_vec(), n)
+        };
+        let mut qd = vec![0.0f32; n_heads * k_n];
+        for n in 0..k_n {
+            let atom = &k_atoms[n * m..(n + 1) * m];
+            for h in 0..n_heads {
+                qd[h * k_n + n] = dot(&q[h * m..(h + 1) * m], atom);
+            }
+        }
+        let mut scores = Vec::new();
+        let mut z = vec![0.0f32; v_n];
+        for h in 0..n_heads {
+            let g = h / c.shape.group();
+            let head = &c.heads[c.head_idx(layer, g)];
+            let (k_rows, v_rows) = (head.k_rows(), head.v_rows());
+            let tc = head.n_csr;
+            let tb = head.buf_len;
+            let qh = &q[h * m..(h + 1) * m];
+            let qdh = &qd[h * k_n..(h + 1) * k_n];
+            scores.clear();
+            scores.resize(tc + tb, 0.0);
+            for (ti, row) in k_rows.iter().enumerate() {
+                let mut sc = 0.0;
+                for j in 0..row.nnz() {
+                    sc += qdh[row.idx[j] as usize] * row.coef(j);
+                }
+                scores[ti] = sc * scale;
+            }
+            for ti in 0..tb {
+                scores[tc + ti] = dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+            }
+            softmax(&mut scores[..tc + tb]);
+            let oh = &mut out[h * m..(h + 1) * m];
+            z.fill(0.0);
+            for (ti, row) in v_rows.iter().enumerate() {
+                let w = scores[ti];
+                for j in 0..row.nnz() {
+                    z[row.idx[j] as usize] += w * row.coef(j);
+                }
+            }
+            for (n, &zn) in z.iter().enumerate() {
+                if zn != 0.0 {
+                    axpy(oh, zn, &v_atoms[n * m..(n + 1) * m]);
+                }
+            }
+            for ti in 0..tb {
+                axpy(oh, scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_slab_attend_matches_row_iterator_reference_bitwise() {
+        // The tentpole parity property: the linear slab sweeps must equal
+        // the retained row-by-row reference bit for bit — per precision,
+        // with sealed pages AND an unsealed tail, and through attend_batch.
+        use crate::util::prop::Prop;
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            Prop::new(6).seed(0x51AB + prec.bytes_per_coef() as u64).check(
+                "slab_vs_rows",
+                |rng, _| {
+                    let cfg = LexicoConfig {
+                        sparsity: 4,
+                        n_buffer: 3,
+                        precision: prec,
+                        ..Default::default()
+                    };
+                    let (shape, mut c) = setup(64, cfg);
+                    // enough tokens to seal ≥1 page and leave a ragged tail
+                    let n_tok = PAGE_TOKENS + 3 + rng.below(PAGE_TOKENS);
+                    for _ in 0..n_tok {
+                        let k = rng.normal_vec(shape.kv_dim());
+                        let v = rng.normal_vec(shape.kv_dim());
+                        for l in 0..shape.n_layers {
+                            c.append(l, &k, &v);
+                        }
+                    }
+                    assert!(!c.heads[0].pages.is_empty());
+                    let q = rng.normal_vec(shape.q_dim());
+                    let mut got = vec![0.0; shape.q_dim()];
+                    let mut want = vec![0.0; shape.q_dim()];
+                    c.attend(0, &q, &mut got);
+                    reference_attend_rows(&c, 0, &q, &mut want);
+                    if got != want {
+                        return Err(format!("slab attend diverged from row reference ({prec:?})"));
+                    }
+                    // attend_batch over the same state must agree too
+                    let b = 2;
+                    let qs = rng.normal_vec(b * shape.q_dim());
+                    let mut ob = vec![0.0; b * shape.q_dim()];
+                    c.attend_batch(1, &qs, &mut ob, b);
+                    for qi in 0..b {
+                        let mut w = vec![0.0; shape.q_dim()];
+                        reference_attend_rows(
+                            &c,
+                            1,
+                            &qs[qi * shape.q_dim()..(qi + 1) * shape.q_dim()],
+                            &mut w,
+                        );
+                        if ob[qi * shape.q_dim()..(qi + 1) * shape.q_dim()] != w[..] {
+                            return Err(format!("attend_batch row {qi} diverged ({prec:?})"));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn pool_sharded_score_sweep_is_bitwise_identical_at_every_thread_count() {
+        // Lower the shard threshold so a ~3-page context exercises the
+        // sharded path, then compare attend outputs across pool sizes —
+        // and against the unsharded sweep — bitwise. Each pool size gets
+        // its own cache fed the identical token stream (OMP codes are
+        // bitwise pool-independent, so the stored state is identical too).
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, ..Default::default() };
+        let n_tok = 3 * PAGE_TOKENS + 7;
+        let mut rng = Rng::new(61);
+        let shape = CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 16 };
+        let ks = rng.normal_vec(n_tok * shape.kv_dim());
+        let vs = rng.normal_vec(n_tok * shape.kv_dim());
+        let q = rng.normal_vec(shape.q_dim());
+        let qs = rng.normal_vec(3 * shape.q_dim());
+        let fill = |c: &mut LexicoCache| {
+            for i in 0..n_tok {
+                for l in 0..shape.n_layers {
+                    c.append(
+                        l,
+                        &ks[i * shape.kv_dim()..(i + 1) * shape.kv_dim()],
+                        &vs[i * shape.kv_dim()..(i + 1) * shape.kv_dim()],
+                    );
+                }
+            }
+        };
+        // reference: default threshold → the serial sweep
+        let (_, mut serial) = setup(64, cfg.clone());
+        fill(&mut serial);
+        let mut want = vec![0.0; shape.q_dim()];
+        serial.attend(0, &q, &mut want);
+        let mut want_b = vec![0.0; 3 * shape.q_dim()];
+        serial.attend_batch(1, &qs, &mut want_b, 3);
+        for threads in [1usize, 2, 4] {
+            let (_, mut c) = setup(64, cfg.clone());
+            c.set_pool(Arc::new(crate::exec::ExecPool::new(threads)));
+            c.set_par_score_min(16);
+            fill(&mut c);
+            assert!(c.heads[0].n_csr >= 16, "context long enough to shard");
+            let mut got = vec![0.0; shape.q_dim()];
+            c.attend(0, &q, &mut got);
+            assert_eq!(got, want, "sharded attend diverged at T={threads}");
+            let mut got_b = vec![0.0; 3 * shape.q_dim()];
+            c.attend_batch(1, &qs, &mut got_b, 3);
+            assert_eq!(got_b, want_b, "sharded attend_batch diverged at T={threads}");
+        }
+    }
+
+    #[test]
+    fn incremental_mem_bytes_equals_walked_row_bytes() {
+        // The O(1) accounting must equal the full walk (the pre-PR
+        // formula) exactly — after appends, prefill, batch appends, and
+        // across a fork.
+        let walk = |c: &LexicoCache| -> f64 {
+            let m = c.shape.head_dim;
+            let mut bytes = 0.0;
+            for head in &c.heads {
+                let mut rows = head.k_rows();
+                rows.extend(head.v_rows());
+                for row in &rows {
+                    bytes += row.bytes() as f64;
+                }
+                bytes += (head.buf_len * 2 * m * 2) as f64;
+            }
+            for ad in c.adaptive_k.iter().chain(&c.adaptive_v).flatten() {
+                bytes += ad.extra_bytes() as f64;
+            }
+            bytes
+        };
+        for cfg in [
+            LexicoConfig { sparsity: 4, n_buffer: 3, ..Default::default() },
+            LexicoConfig {
+                sparsity: 3,
+                n_buffer: 2,
+                precision: CoefPrecision::Fp16,
+                ..Default::default()
+            },
+            LexicoConfig { sparsity: 2, n_buffer: 2, adaptive: Some((8, 0.1)), ..Default::default() },
+        ] {
+            let (shape, mut c) = setup(32, cfg);
+            let mut rng = Rng::new(43);
+            let t = 7;
+            let ks = rng.normal_vec(t * shape.kv_dim());
+            let vs = rng.normal_vec(t * shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.ingest_prefill(l, &ks, &vs, t, &[], 0);
+            }
+            assert_eq!(c.mem_bytes(), walk(&c), "after prefill");
+            for _ in 0..PAGE_TOKENS + 5 {
+                let k = rng.normal_vec(shape.kv_dim());
+                let v = rng.normal_vec(shape.kv_dim());
+                for l in 0..shape.n_layers {
+                    c.append(l, &k, &v);
+                }
+            }
+            assert_eq!(c.mem_bytes(), walk(&c), "after appends");
+            let kb = rng.normal_vec(4 * shape.kv_dim());
+            let vb = rng.normal_vec(4 * shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append_batch(l, &kb, &vb, 4);
+            }
+            assert_eq!(c.mem_bytes(), walk(&c), "after append_batch");
+            let f = c.fork();
+            assert_eq!(f.mem_bytes(), c.mem_bytes(), "fork accounting");
+        }
     }
 
     #[test]
@@ -1011,7 +1395,11 @@ mod tests {
         let base_mem: f64 = c
             .heads
             .iter()
-            .flat_map(|h| h.k_rows().chain(h.v_rows()).collect::<Vec<_>>())
+            .flat_map(|h| {
+                let mut rows = h.k_rows();
+                rows.extend(h.v_rows());
+                rows
+            })
             .map(|r| r.bytes() as f64)
             .sum::<f64>();
         assert!(c.mem_bytes() > base_mem, "adaptive atoms not charged");

@@ -38,6 +38,9 @@ pub struct PerTokenCache {
     cfg: PerTokenConfig,
     layers: Vec<LayerState>,
     tokens: usize,
+    /// incremental compressed-footprint bytes (kept in sync on every
+    /// buffer push and quantization spill → `mem_bytes` is O(1))
+    mem: f64,
     scores: Vec<f32>,
     dk: Vec<f32>,
     dv: Vec<f32>,
@@ -59,15 +62,23 @@ impl PerTokenCache {
             cfg,
             layers,
             tokens: 0,
+            mem: 0.0,
             scores: Vec::new(),
             dk: Vec::new(),
             dv: Vec::new(),
         }
     }
 
+    /// FP16 accounting of one buffered token (K + V rows).
+    fn buf_token_bytes(&self) -> f64 {
+        (2 * self.shape.kv_dim() * 2) as f64
+    }
+
     fn quantize_oldest(&mut self, layer: usize, n: usize) {
         let kvd = self.shape.kv_dim();
+        let buf_bytes = self.buf_token_bytes();
         let st = &mut self.layers[layer];
+        let mut dm = 0.0;
         for _ in 0..n {
             if st.buf_len == 0 {
                 break;
@@ -76,10 +87,14 @@ impl PerTokenCache {
             let v: Vec<f32> = st.v_buf[..kvd].to_vec();
             st.qk.push(quantize_vector(&k, self.cfg.group, self.cfg.bits));
             st.qv.push(quantize_vector(&v, self.cfg.group, self.cfg.bits));
+            dm += st.qk.last().unwrap().iter().map(|g| g.bytes()).sum::<f64>();
+            dm += st.qv.last().unwrap().iter().map(|g| g.bytes()).sum::<f64>();
+            dm -= buf_bytes;
             st.k_buf.drain(..kvd);
             st.v_buf.drain(..kvd);
             st.buf_len -= 1;
         }
+        self.mem += dm;
     }
 
     /// Materialize the dequantized K/V (token-major) into self.dk/self.dv.
@@ -107,7 +122,8 @@ impl KvCache for PerTokenCache {
         st.k_buf.extend_from_slice(ks);
         st.v_buf.extend_from_slice(vs);
         st.buf_len += t;
-        let over = st.buf_len.saturating_sub(self.cfg.n_buffer);
+        self.mem += t as f64 * self.buf_token_bytes();
+        let over = self.layers[layer].buf_len.saturating_sub(self.cfg.n_buffer);
         self.quantize_oldest(layer, over);
         if layer == 0 {
             self.tokens += t;
@@ -119,7 +135,8 @@ impl KvCache for PerTokenCache {
         st.k_buf.extend_from_slice(k);
         st.v_buf.extend_from_slice(v);
         st.buf_len += 1;
-        if st.buf_len > self.cfg.n_buffer {
+        self.mem += self.buf_token_bytes();
+        if self.layers[layer].buf_len > self.cfg.n_buffer {
             self.quantize_oldest(layer, 1);
         }
         if layer == 0 {
@@ -146,15 +163,11 @@ impl KvCache for PerTokenCache {
         self.tokens
     }
 
+    /// O(1): maintained incrementally on push/spill instead of re-walking
+    /// every quant group per call (the batcher admission loop calls this
+    /// every round for every session).
     fn mem_bytes(&self) -> f64 {
-        let mut bytes = 0.0;
-        for st in &self.layers {
-            for groups in st.qk.iter().chain(&st.qv) {
-                bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
-            }
-            bytes += (st.buf_len * 2 * self.shape.kv_dim() * 2) as f64;
-        }
-        bytes
+        self.mem
     }
 
     fn full_bytes(&self) -> f64 {
@@ -193,6 +206,36 @@ mod tests {
         c.attend(0, &q, &mut o1);
         f.attend(0, &q, &mut o2);
         crate::util::prop::assert_close(&o1, &o2, 0.05, "int8≈full").unwrap();
+    }
+
+    #[test]
+    fn incremental_mem_equals_walked_groups() {
+        // the O(1) counter vs the full walk (the pre-PR formula), exactly
+        let mut c = PerTokenCache::new(shape(), PerTokenConfig { bits: 2, group: 8, n_buffer: 3 });
+        let mut rng = Rng::new(12);
+        let walk = |c: &PerTokenCache| -> f64 {
+            let mut bytes = 0.0;
+            for st in &c.layers {
+                for groups in st.qk.iter().chain(&st.qv) {
+                    bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
+                }
+                bytes += (st.buf_len * 2 * c.shape.kv_dim() * 2) as f64;
+            }
+            bytes
+        };
+        let t = 5;
+        let ks = rng.normal_vec(t * 16);
+        let vs = rng.normal_vec(t * 16);
+        c.ingest_prefill(0, &ks, &vs, t, &[], 0);
+        assert_eq!(c.mem_bytes(), walk(&c), "after prefill");
+        for _ in 0..9 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+            assert_eq!(c.mem_bytes(), walk(&c), "after append");
+        }
+        let f = c.fork();
+        assert_eq!(f.mem_bytes(), c.mem_bytes(), "fork accounting");
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub struct PyramidKvCache {
     cfg: PyramidKvConfig,
     layers: Vec<LayerState>,
     tokens: usize,
+    /// Σ kept over layers, maintained on ingest/append → O(1) `mem_bytes`
+    kept_total: usize,
     scores: Vec<f32>,
 }
 
@@ -37,7 +39,7 @@ impl PyramidKvCache {
         let layers = (0..shape.n_layers)
             .map(|_| LayerState { ks: Vec::new(), vs: Vec::new(), kept: 0 })
             .collect();
-        PyramidKvCache { shape, cfg, layers, tokens: 0, scores: Vec::new() }
+        PyramidKvCache { shape, cfg, layers, tokens: 0, kept_total: 0, scores: Vec::new() }
     }
 
     /// Linear budget schedule: layer 0 gets `hi`, last layer `lo`, with
@@ -63,9 +65,11 @@ impl KvCache for PyramidKvCache {
             window: self.cfg.window,
             pool: self.cfg.pool,
         };
+        let before = self.layers[layer].kept;
         SnapKvCache::ingest_with_capacity(
             &self.shape, &mut self.layers[layer], &snap_cfg, cap, ks, vs, t, q_win, w,
         );
+        self.kept_total += self.layers[layer].kept - before;
         if layer == 0 {
             self.tokens += t;
         }
@@ -76,6 +80,7 @@ impl KvCache for PyramidKvCache {
         st.ks.extend_from_slice(k);
         st.vs.extend_from_slice(v);
         st.kept += 1;
+        self.kept_total += 1;
         if layer == 0 {
             self.tokens += 1;
         }
@@ -102,11 +107,10 @@ impl KvCache for PyramidKvCache {
         self.tokens
     }
 
+    /// O(1): the kept-token count is maintained on ingest/append instead
+    /// of being re-summed over layers per call.
     fn mem_bytes(&self) -> f64 {
-        self.layers
-            .iter()
-            .map(|st| st.kept as f64 * self.shape.full_token_bytes())
-            .sum()
+        self.kept_total as f64 * self.shape.full_token_bytes()
     }
 
     fn full_bytes(&self) -> f64 {

@@ -40,6 +40,8 @@ pub struct SnapKvCache {
     cfg: SnapKvConfig,
     layers: Vec<LayerState>,
     tokens: usize,
+    /// Σ kept over layers, maintained on ingest/append → O(1) `mem_bytes`
+    kept_total: usize,
     scores: Vec<f32>,
 }
 
@@ -118,7 +120,7 @@ impl SnapKvCache {
         let layers = (0..shape.n_layers)
             .map(|_| LayerState { ks: Vec::new(), vs: Vec::new(), kept: 0 })
             .collect();
-        SnapKvCache { shape, cfg, layers, tokens: 0, scores: Vec::new() }
+        SnapKvCache { shape, cfg, layers, tokens: 0, kept_total: 0, scores: Vec::new() }
     }
 
     pub(super) fn ingest_with_capacity(
@@ -153,9 +155,11 @@ impl KvCache for SnapKvCache {
     fn ingest_prefill(&mut self, layer: usize, ks: &[f32], vs: &[f32], t: usize,
                       q_win: &[f32], w: usize) {
         let cfg = self.cfg.clone();
+        let before = self.layers[layer].kept;
         Self::ingest_with_capacity(
             &self.shape, &mut self.layers[layer], &cfg, cfg.capacity, ks, vs, t, q_win, w,
         );
+        self.kept_total += self.layers[layer].kept - before;
         if layer == 0 {
             self.tokens += t;
         }
@@ -166,6 +170,7 @@ impl KvCache for SnapKvCache {
         st.ks.extend_from_slice(k);
         st.vs.extend_from_slice(v);
         st.kept += 1;
+        self.kept_total += 1;
         if layer == 0 {
             self.tokens += 1;
         }
@@ -196,11 +201,10 @@ impl KvCache for SnapKvCache {
         self.tokens
     }
 
+    /// O(1): the kept-token count is maintained on ingest/append instead
+    /// of being re-summed over layers per call.
     fn mem_bytes(&self) -> f64 {
-        self.layers
-            .iter()
-            .map(|st| st.kept as f64 * self.shape.full_token_bytes())
-            .sum()
+        self.kept_total as f64 * self.shape.full_token_bytes()
     }
 
     fn full_bytes(&self) -> f64 {

@@ -45,6 +45,9 @@ pub struct ZipCache {
     cfg: ZipCacheConfig,
     layers: Vec<LayerState>,
     tokens: usize,
+    /// incremental compressed-footprint bytes (kept in sync on every
+    /// buffer push and spill → `mem_bytes` is O(1))
+    mem: f64,
     scores: Vec<f32>,
     dk: Vec<f32>,
     dv: Vec<f32>,
@@ -68,14 +71,22 @@ impl ZipCache {
             cfg,
             layers,
             tokens: 0,
+            mem: 0.0,
             scores: Vec::new(),
             dk: Vec::new(),
             dv: Vec::new(),
         }
     }
 
+    /// FP16 accounting of one buffered token (K + V rows).
+    fn buf_token_bytes(&self) -> f64 {
+        (2 * self.shape.kv_dim() * 2) as f64
+    }
+
     fn spill(&mut self, layer: usize) {
         let kvd = self.shape.kv_dim();
+        let buf_bytes = self.buf_token_bytes();
+        let mut dm = 0.0;
         let cfg = &self.cfg;
         let st = &mut self.layers[layer];
         while st.buf_len > cfg.n_buffer {
@@ -94,10 +105,14 @@ impl ZipCache {
             let v: Vec<f32> = st.v_buf[..kvd].to_vec();
             st.qk.push(quantize_vector(&k, cfg.group.min(kvd), bits));
             st.qv.push(quantize_vector(&v, cfg.group.min(kvd), bits));
+            dm += st.qk.last().unwrap().iter().map(|g| g.bytes()).sum::<f64>();
+            dm += st.qv.last().unwrap().iter().map(|g| g.bytes()).sum::<f64>();
+            dm -= buf_bytes;
             st.k_buf.drain(..kvd);
             st.v_buf.drain(..kvd);
             st.buf_len -= 1;
         }
+        self.mem += dm;
     }
 
     fn materialize(&mut self, layer: usize) -> usize {
@@ -128,6 +143,7 @@ impl KvCache for ZipCache {
             st.salience.resize(st.salience.len() + t, 0.0);
             st.exposure.resize(st.exposure.len() + t, 0.0);
         }
+        self.mem += t as f64 * self.buf_token_bytes();
         // seed saliency with the observation-window queries so prefill
         // tokens spill with informed precision
         if w > 0 {
@@ -151,6 +167,7 @@ impl KvCache for ZipCache {
         st.buf_len += 1;
         st.salience.push(0.0);
         st.exposure.push(0.0);
+        self.mem += self.buf_token_bytes();
         self.spill(layer);
         if layer == 0 {
             self.tokens += 1;
@@ -207,15 +224,10 @@ impl KvCache for ZipCache {
         self.tokens
     }
 
+    /// O(1): maintained incrementally on push/spill instead of re-walking
+    /// every quant group per call.
     fn mem_bytes(&self) -> f64 {
-        let mut bytes = 0.0;
-        for st in &self.layers {
-            for groups in st.qk.iter().chain(&st.qv) {
-                bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
-            }
-            bytes += (st.buf_len * 2 * self.shape.kv_dim() * 2) as f64;
-        }
-        bytes
+        self.mem
     }
 
     fn full_bytes(&self) -> f64 {
@@ -258,6 +270,38 @@ mod tests {
         let mixed = mk(4, 2);
         let pure4 = mk(4, 4);
         assert!(pure2 < mixed && mixed < pure4, "{pure2} {mixed} {pure4}");
+    }
+
+    #[test]
+    fn incremental_mem_equals_walked_groups() {
+        // the O(1) counter vs the full walk (the pre-PR formula), exactly —
+        // spill precision varies per token (hi/lo), so group bytes differ
+        let cfg = ZipCacheConfig {
+            bits_hi: 4, bits_lo: 2, group: 8, salient_frac: 0.3, n_buffer: 2,
+        };
+        let mut c = ZipCache::new(shape(), cfg);
+        let mut rng = Rng::new(20);
+        let walk = |c: &ZipCache| -> f64 {
+            let mut bytes = 0.0;
+            for st in &c.layers {
+                for groups in st.qk.iter().chain(&st.qv) {
+                    bytes += groups.iter().map(|g| g.bytes()).sum::<f64>();
+                }
+                bytes += (st.buf_len * 2 * c.shape.kv_dim() * 2) as f64;
+            }
+            bytes
+        };
+        let mut out = vec![0.0; 32];
+        for i in 0..12 {
+            let k = rng.normal_vec(16);
+            let v = rng.normal_vec(16);
+            c.append(0, &k, &v);
+            let q = rng.normal_vec(32);
+            c.attend(0, &q, &mut out); // accumulate salience → mixed spills
+            assert_eq!(c.mem_bytes(), walk(&c), "after append {i}");
+        }
+        let f = c.fork();
+        assert_eq!(f.mem_bytes(), c.mem_bytes(), "fork accounting");
     }
 
     #[test]

@@ -19,6 +19,23 @@ fn e4m3_table() -> &'static [f32; 127] {
     })
 }
 
+/// Full 256-entry decode table: `e4m3_lut()[code] == e4m3_to_f32(code)`
+/// for every byte (including both NaN patterns and all negative codes).
+/// The CSR-slab attention sweep indexes this instead of calling
+/// [`e4m3_to_f32`] per coefficient — same values, no exponent math in the
+/// hot loop.
+pub fn e4m3_lut() -> &'static [f32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[f32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0f32; 256];
+        for (code, slot) in t.iter_mut().enumerate() {
+            *slot = e4m3_to_f32(code as u8);
+        }
+        t
+    })
+}
+
 /// Encode f32 → E4M3 byte: nearest representable value, ties to the even
 /// code, saturating at ±448 (the E4M3 max-finite; S.1111.111 is NaN).
 pub fn f32_to_e4m3(x: f32) -> u8 {
@@ -267,6 +284,20 @@ mod tests {
                 Err(format!("{v} → code {enc:#04x}, value {dec}"))
             }
         });
+    }
+
+    #[test]
+    fn e4m3_lut_matches_decoder_on_every_code() {
+        let lut = e4m3_lut();
+        for code in 0..=0xffu16 {
+            let code = code as u8;
+            let direct = e4m3_to_f32(code);
+            if direct.is_nan() {
+                assert!(lut[code as usize].is_nan(), "code {code:#04x}");
+            } else {
+                assert_eq!(lut[code as usize].to_bits(), direct.to_bits(), "code {code:#04x}");
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,18 @@
-//! Sparse KV-cache storage: CSR rows, coefficient precision, byte accounting.
+//! Sparse KV-cache storage: CSR slabs (struct-of-arrays), CSR rows,
+//! coefficient precision, byte accounting.
+//!
+//! The hot-path storage type is [`CsrSlab`]: one contiguous `idx` array,
+//! one contiguous `coef_bits` array, and a row-offset array — so scoring
+//! and bin-accumulation over thousands of compressed tokens are linear
+//! sweeps over three flat buffers instead of a pointer chase through
+//! per-token `Vec`s. [`CsrRow`] remains as the one-row interchange /
+//! reference type (the property suites check the slab sweeps against a
+//! row-by-row reference built from it).
 
 pub mod fp8;
 pub mod memory;
 
-use fp8::{e4m3_to_f32, f16_to_f32, f32_to_e4m3, f32_to_f16};
+use fp8::{e4m3_lut, e4m3_to_f32, f16_to_f32, f32_to_e4m3, f32_to_f16};
 
 /// Precision of the stored CSR coefficients.
 ///
@@ -85,6 +94,187 @@ impl CsrRow {
     }
 }
 
+/// Struct-of-arrays slab of CSR rows — the flat storage the compressed
+/// attention hot path sweeps (DESIGN.md §8).
+///
+/// Layout: `idx`/`coef_bits` hold the concatenated (index, coefficient)
+/// pairs of every row; `row_off` (length `rows + 1`, starting at 0) marks
+/// each row's span, so row `r` is `idx[row_off[r]..row_off[r+1]]`.
+/// Coefficients are stored *already quantized through* the slab's
+/// precision, exactly like [`CsrRow`]; byte accounting is O(1) from the
+/// aggregate counts (`nnz·(per+2) + rows·2`, the paper's §3.4 formula
+/// summed over rows).
+#[derive(Clone, Debug)]
+pub struct CsrSlab {
+    idx: Vec<u16>,
+    /// quantized coefficient bits: low byte = e4m3, or full u16 = f16
+    coef_bits: Vec<u16>,
+    /// row r spans `row_off[r]..row_off[r+1]`; always starts with 0
+    row_off: Vec<u32>,
+    precision_fp16: bool,
+}
+
+impl Default for CsrSlab {
+    fn default() -> Self {
+        CsrSlab::new(CoefPrecision::Fp8)
+    }
+}
+
+impl CsrSlab {
+    pub fn new(prec: CoefPrecision) -> Self {
+        CsrSlab {
+            idx: Vec::new(),
+            coef_bits: Vec::new(),
+            row_off: vec![0],
+            precision_fp16: prec == CoefPrecision::Fp16,
+        }
+    }
+
+    pub fn precision(&self) -> CoefPrecision {
+        if self.precision_fp16 {
+            CoefPrecision::Fp16
+        } else {
+            CoefPrecision::Fp8
+        }
+    }
+
+    /// Number of rows (compressed tokens) in the slab.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.row_off.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows() == 0
+    }
+
+    /// Total stored (index, coefficient) pairs across all rows.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        *self.row_off.last().unwrap() as usize
+    }
+
+    /// Append one row, quantizing `vals` through the slab's precision.
+    pub fn push_f32(&mut self, idx: &[u16], vals: &[f32]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        self.idx.extend_from_slice(idx);
+        if self.precision_fp16 {
+            self.coef_bits.extend(vals.iter().map(|&v| f32_to_f16(v)));
+        } else {
+            self.coef_bits.extend(vals.iter().map(|&v| f32_to_e4m3(v) as u16));
+        }
+        self.row_off.push(self.idx.len() as u32);
+    }
+
+    /// Append one already-quantized row (bits in this slab's precision).
+    pub fn push_bits(&mut self, idx: &[u16], bits: &[u16]) {
+        debug_assert_eq!(idx.len(), bits.len());
+        self.idx.extend_from_slice(idx);
+        self.coef_bits.extend_from_slice(bits);
+        self.row_off.push(self.idx.len() as u32);
+    }
+
+    /// Move the contents out, leaving an empty slab of the same precision
+    /// (the page-sealing primitive).
+    pub fn take(&mut self) -> CsrSlab {
+        std::mem::replace(self, CsrSlab::new(self.precision()))
+    }
+
+    /// Row `r` as (indices, quantized bits).
+    pub fn row(&self, r: usize) -> (&[u16], &[u16]) {
+        let (s, e) = (self.row_off[r] as usize, self.row_off[r + 1] as usize);
+        (&self.idx[s..e], &self.coef_bits[s..e])
+    }
+
+    /// Decode one stored coefficient word to f32.
+    #[inline]
+    pub fn decode(&self, bits: u16) -> f32 {
+        if self.precision_fp16 {
+            f16_to_f32(bits)
+        } else {
+            e4m3_to_f32(bits as u8)
+        }
+    }
+
+    /// Exact storage bytes (paper §3.4 summed over rows) — O(1).
+    pub fn bytes(&self) -> usize {
+        let per = if self.precision_fp16 { 2 } else { 1 };
+        self.nnz() * (per + 2) + self.rows() * 2
+    }
+
+    /// `out[r - lo] = scale · Σ_j qd[idx[j]] · coef[j]` for rows
+    /// `lo..hi` — the split-computation score sweep (`q·D` is already in
+    /// `qd`). Per row the products accumulate in ascending storage order
+    /// into a single f32 accumulator, identical to the row-iterator
+    /// reference, so sub-range calls (pool shards) compose bitwise.
+    pub fn score_rows(&self, lo: usize, hi: usize, qd: &[f32], scale: f32, out: &mut [f32]) {
+        debug_assert!(hi <= self.rows() && lo <= hi);
+        debug_assert!(out.len() >= hi - lo);
+        let offs = &self.row_off[lo..=hi];
+        if self.precision_fp16 {
+            for (r, w) in offs.windows(2).enumerate() {
+                let (s, e) = (w[0] as usize, w[1] as usize);
+                let mut sc = 0.0f32;
+                for j in s..e {
+                    sc += qd[self.idx[j] as usize] * f16_to_f32(self.coef_bits[j]);
+                }
+                out[r] = sc * scale;
+            }
+        } else {
+            let lut = e4m3_lut();
+            for (r, w) in offs.windows(2).enumerate() {
+                let (s, e) = (w[0] as usize, w[1] as usize);
+                let mut sc = 0.0f32;
+                for j in s..e {
+                    sc += qd[self.idx[j] as usize] * lut[(self.coef_bits[j] & 0xff) as usize];
+                }
+                out[r] = sc * scale;
+            }
+        }
+    }
+
+    /// `z[idx[j]] += weights[r] · coef[j]` for every row `r` — the value
+    /// side's dictionary-bin accumulation, as one linear sweep. Rows are
+    /// processed in storage order with each row's pairs in ascending
+    /// order, matching the row-iterator reference exactly.
+    pub fn accumulate_bins(&self, weights: &[f32], z: &mut [f32]) {
+        debug_assert!(weights.len() >= self.rows());
+        if self.precision_fp16 {
+            for (r, w) in self.row_off.windows(2).enumerate() {
+                let (s, e) = (w[0] as usize, w[1] as usize);
+                let wr = weights[r];
+                for j in s..e {
+                    z[self.idx[j] as usize] += wr * f16_to_f32(self.coef_bits[j]);
+                }
+            }
+        } else {
+            let lut = e4m3_lut();
+            for (r, w) in self.row_off.windows(2).enumerate() {
+                let (s, e) = (w[0] as usize, w[1] as usize);
+                let wr = weights[r];
+                for j in s..e {
+                    z[self.idx[j] as usize] += wr * lut[(self.coef_bits[j] & 0xff) as usize];
+                }
+            }
+        }
+    }
+
+    /// Materialize as per-token [`CsrRow`]s — the retained row-iterator
+    /// view used by reference implementations in tests and benches.
+    pub fn to_rows(&self) -> Vec<CsrRow> {
+        (0..self.rows())
+            .map(|r| {
+                let (idx, bits) = self.row(r);
+                CsrRow {
+                    idx: idx.to_vec(),
+                    coef_bits: bits.to_vec(),
+                    precision_fp16: self.precision_fp16,
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +297,105 @@ mod tests {
         assert!((out[0] - 2.0).abs() < 1e-3);
         assert!((out[1] + 0.5).abs() < 1e-3);
         assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn slab_matches_rows_and_bytes_are_o1_exact() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            let mut slab = CsrSlab::new(prec);
+            let mut rows = Vec::new();
+            let mut want_bytes = 0usize;
+            for r in 0..17 {
+                let nnz = r % 5; // includes empty rows
+                let idx: Vec<u16> = (0..nnz as u16).map(|j| j * 3 + r as u16).collect();
+                let vals = rng.normal_vec(nnz);
+                slab.push_f32(&idx, &vals);
+                let row = CsrRow::from_f32(&idx, &vals, prec);
+                want_bytes += row.bytes();
+                rows.push(row);
+            }
+            assert_eq!(slab.rows(), 17);
+            assert_eq!(slab.bytes(), want_bytes, "O(1) bytes must equal summed row bytes");
+            // per-row bit equality with the CsrRow reference
+            for (r, row) in rows.iter().enumerate() {
+                let (idx, bits) = slab.row(r);
+                assert_eq!(idx, &row.idx[..]);
+                assert_eq!(bits, &row.coef_bits[..]);
+                for (j, &b) in bits.iter().enumerate() {
+                    assert_eq!(slab.decode(b).to_bits(), row.coef(j).to_bits());
+                }
+            }
+            // to_rows round-trips
+            let back = slab.to_rows();
+            for (a, b) in back.iter().zip(&rows) {
+                assert_eq!((&a.idx, &a.coef_bits), (&b.idx, &b.coef_bits));
+            }
+        }
+    }
+
+    #[test]
+    fn slab_sweeps_match_row_iterator_reference_bitwise() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            let n_bins = 64usize;
+            let mut slab = CsrSlab::new(prec);
+            for _ in 0..23 {
+                let nnz = 1 + rng.below(6);
+                let idx: Vec<u16> = (0..nnz).map(|_| rng.below(n_bins) as u16).collect();
+                let vals = rng.normal_vec(nnz);
+                slab.push_f32(&idx, &vals);
+            }
+            let rows = slab.to_rows();
+            let qd = rng.normal_vec(n_bins);
+            let scale = 0.25f32;
+            // score sweep vs row-by-row reference (the pre-slab loop shape)
+            let mut got = vec![0.0f32; slab.rows()];
+            slab.score_rows(0, slab.rows(), &qd, scale, &mut got);
+            for (ti, row) in rows.iter().enumerate() {
+                let mut sc = 0.0f32;
+                for j in 0..row.nnz() {
+                    sc += qd[row.idx[j] as usize] * row.coef(j);
+                }
+                assert_eq!(got[ti].to_bits(), (sc * scale).to_bits(), "row {ti}");
+            }
+            // sub-range calls compose to the full sweep (pool-shard shape)
+            let mut parts = vec![0.0f32; slab.rows()];
+            let mid = slab.rows() / 3;
+            slab.score_rows(0, mid, &qd, scale, &mut parts[..mid]);
+            slab.score_rows(mid, slab.rows(), &qd, scale, &mut parts[mid..]);
+            assert_eq!(parts, got);
+            // bin accumulation vs reference
+            let weights = rng.normal_vec(slab.rows());
+            let mut z_got = vec![0.0f32; n_bins];
+            slab.accumulate_bins(&weights, &mut z_got);
+            let mut z_want = vec![0.0f32; n_bins];
+            for (ti, row) in rows.iter().enumerate() {
+                for j in 0..row.nnz() {
+                    z_want[row.idx[j] as usize] += weights[ti] * row.coef(j);
+                }
+            }
+            for (a, b) in z_got.iter().zip(&z_want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn slab_take_seals_and_resets() {
+        let mut slab = CsrSlab::new(CoefPrecision::Fp16);
+        slab.push_f32(&[1, 2], &[0.5, -0.5]);
+        slab.push_bits(&[3], &[0x3c00]); // 1.0 in f16
+        let sealed = slab.take();
+        assert_eq!(sealed.rows(), 2);
+        assert_eq!(sealed.nnz(), 3);
+        assert_eq!(sealed.decode(sealed.row(1).1[0]), 1.0);
+        assert_eq!(slab.rows(), 0);
+        assert_eq!(slab.nnz(), 0);
+        assert_eq!(slab.precision(), CoefPrecision::Fp16);
+        assert_eq!(slab.bytes(), 0);
     }
 
     #[test]

@@ -14,6 +14,15 @@
 //! every thread count. Column sharding (rather than rows) keeps every shard
 //! busy even at `M = 1` (single-session decode) and streams each element of
 //! `B` through memory exactly once across the whole pool.
+//!
+//! [`dot`] and [`axpy`] — the inner kernels of every GEMM here — follow the
+//! canonical blocked reduction order defined in [`simd`] and dispatch once
+//! per process to the best vectorized implementation the host offers
+//! (AVX2/SSE2/NEON); all implementations are bitwise identical to the
+//! blocked scalar, so vector dispatch never perturbs the determinism
+//! contract. See DESIGN.md §8.
+
+pub mod simd;
 
 use crate::exec::{ExecPool, SendPtr};
 
@@ -209,42 +218,21 @@ pub fn par_matmul_bt(
     });
 }
 
-/// y += alpha * x (the GEMM inner kernel; unrolled by 8 for the autovectorizer).
+/// y += alpha * x (the GEMM inner kernel), in the canonical element-wise
+/// order of [`simd`] — dispatched once per process to the best vectorized
+/// implementation the host supports; every implementation is bitwise
+/// identical to [`simd::axpy_blocked`].
 #[inline]
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
-    let n = y.len().min(x.len());
-    let chunks = n / 8;
-    // Unrolled main body — LLVM turns this into packed FMA.
-    for c in 0..chunks {
-        let i = c * 8;
-        let yc = &mut y[i..i + 8];
-        let xc = &x[i..i + 8];
-        for l in 0..8 {
-            yc[l] += alpha * xc[l];
-        }
-    }
-    for i in chunks * 8..n {
-        y[i] += alpha * x[i];
-    }
+    (simd::active().axpy)(y, alpha, x)
 }
 
-/// Dot product, 8-way unrolled with independent accumulators.
+/// Dot product in the canonical 8-lane blocked order of [`simd`] (fixed
+/// accumulator tree, sequential tail) — dispatched once per process;
+/// every implementation is bitwise identical to [`simd::dot_blocked`].
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len().min(b.len());
-    let chunks = n / 8;
-    let mut acc = [0f32; 8];
-    for c in 0..chunks {
-        let i = c * 8;
-        for l in 0..8 {
-            acc[l] += a[i + l] * b[i + l];
-        }
-    }
-    let mut s: f32 = acc.iter().sum();
-    for i in chunks * 8..n {
-        s += a[i] * b[i];
-    }
-    s
+    (simd::active().dot)(a, b)
 }
 
 /// In-place numerically-stable softmax over a row.

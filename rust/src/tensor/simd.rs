@@ -1,0 +1,431 @@
+//! Runtime-dispatched SIMD kernels for [`dot`](crate::tensor::dot) and
+//! [`axpy`](crate::tensor::axpy) under one **canonical reduction order**.
+//!
+//! The canonical order (DESIGN.md §8) is what every implementation —
+//! blocked scalar, SSE2, AVX2, NEON — must reproduce bit for bit:
+//!
+//! * `dot`: the main body runs in chunks of 8 elements; lane `l`
+//!   accumulates `a[8c+l] * b[8c+l]` with a separate multiply and add
+//!   (never a fused multiply-add — FMA rounds once where mul+add rounds
+//!   twice, so contraction would break cross-kernel bit-equality). The 8
+//!   lane sums are then combined by a fixed binary tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — exactly the shape a vector
+//!   register's horizontal reduction produces — and the `n % 8` tail
+//!   elements are added sequentially to the tree sum.
+//! * `axpy`: `y[i] += alpha * x[i]` element-wise (mul, then add). Each
+//!   element is independent, so any vector width reproduces the scalar
+//!   result exactly; only FMA contraction is forbidden.
+//!
+//! Because every kernel performs identical per-lane IEEE operations in
+//! identical order, the dispatch choice (scalar vs SSE2 vs AVX2 vs NEON,
+//! `target-cpu=native` or not) can never change a result — the exec-layer
+//! determinism contract (DESIGN.md §7) extends across instruction sets.
+//! The property tests below enforce bit-equality of every available
+//! kernel against the blocked scalar on all lane remainders.
+//!
+//! Dispatch is resolved once per process: `LEXICO_SIMD`
+//! (`scalar|sse2|avx2|neon`) forces a kernel when that kernel is
+//! available on the host, otherwise the best detected instruction set
+//! wins (AVX2 → SSE2 on x86_64, NEON on aarch64, blocked scalar
+//! elsewhere).
+
+use std::sync::OnceLock;
+
+/// One dot/axpy implementation pair. All pairs compute bitwise-identical
+/// results; they differ only in speed.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    pub name: &'static str,
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    pub axpy: fn(&mut [f32], f32, &[f32]),
+}
+
+/// The canonical 8-lane combine: a fixed binary tree, matching the
+/// horizontal reduction of one 8-wide (or two 4-wide) vector registers.
+#[inline(always)]
+fn lane_tree8(l: &[f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Blocked-scalar `dot` in the canonical order — the reference every
+/// vectorized kernel is tested against (and the fallback dispatch).
+pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = lane_tree8(&acc);
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Blocked-scalar `axpy` (8-way unrolled for the autovectorizer;
+/// element-independent, so the unroll shape carries no numeric meaning).
+pub fn axpy_blocked(y: &mut [f32], alpha: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        let yc = &mut y[i..i + 8];
+        let xc = &x[i..i + 8];
+        for l in 0..8 {
+            yc[l] += alpha * xc[l];
+        }
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+const SCALAR: Kernels = Kernels { name: "scalar", dot: dot_blocked, axpy: axpy_blocked };
+
+// ---------------------------------------------------------------------------
+// x86_64: SSE2 (baseline, always present) and AVX2 (detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::lane_tree8;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure SSE2 is available (baseline on x86_64).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        // two 4-lane accumulators = lanes 0..4 and 4..8 of the canonical
+        // 8-lane block; mul then add, never FMA
+        let mut acc_lo = _mm_setzero_ps();
+        let mut acc_hi = _mm_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let a_lo = _mm_loadu_ps(a.as_ptr().add(i));
+            let b_lo = _mm_loadu_ps(b.as_ptr().add(i));
+            acc_lo = _mm_add_ps(acc_lo, _mm_mul_ps(a_lo, b_lo));
+            let a_hi = _mm_loadu_ps(a.as_ptr().add(i + 4));
+            let b_hi = _mm_loadu_ps(b.as_ptr().add(i + 4));
+            acc_hi = _mm_add_ps(acc_hi, _mm_mul_ps(a_hi, b_hi));
+        }
+        let mut lanes = [0f32; 8];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc_lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut s = lane_tree8(&lanes);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure SSE2 is available (baseline on x86_64).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_sse2(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let chunks = n / 4;
+        let va = _mm_set1_ps(alpha);
+        for c in 0..chunks {
+            let i = c * 4;
+            let vy = _mm_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(y.as_mut_ptr().add(i), _mm_add_ps(vy, _mm_mul_ps(va, vx)));
+        }
+        for i in chunks * 4..n {
+            y[i] += alpha * x[i];
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available (checked at dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            // vmulps + vaddps: per-lane identical to the scalar mul + add
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = lane_tree8(&lanes);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available (checked at dispatch).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let chunks = n / 8;
+        let va = _mm256_set1_ps(alpha);
+        for c in 0..chunks {
+            let i = c * 8;
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+        }
+        for i in chunks * 8..n {
+            y[i] += alpha * x[i];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: SSE2 is part of the x86_64 baseline.
+    unsafe { x86::dot_sse2(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_sse2(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: SSE2 is part of the x86_64 baseline.
+    unsafe { x86::axpy_sse2(y, alpha, x) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: only reachable through dispatch/tests after AVX2 detection.
+    unsafe { x86::dot_avx2(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: only reachable through dispatch/tests after AVX2 detection.
+    unsafe { x86::axpy_avx2(y, alpha, x) }
+}
+
+#[cfg(target_arch = "x86_64")]
+const SSE2: Kernels = Kernels { name: "sse2", dot: dot_sse2, axpy: axpy_sse2 };
+
+#[cfg(target_arch = "x86_64")]
+const AVX2: Kernels = Kernels { name: "avx2", dot: dot_avx2, axpy: axpy_avx2 };
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON (baseline, always present)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::lane_tree8;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must ensure NEON is available (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * 8;
+            acc_lo = vaddq_f32(
+                acc_lo,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i))),
+            );
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4))),
+            );
+        }
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut s = lane_tree8(&lanes);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let chunks = n / 4;
+        let va = vdupq_n_f32(alpha);
+        for c in 0..chunks {
+            let i = c * 4;
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+        }
+        for i in chunks * 4..n {
+            y[i] += alpha * x[i];
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { arm::dot_neon(a, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { arm::axpy_neon(y, alpha, x) }
+}
+
+#[cfg(target_arch = "aarch64")]
+const NEON: Kernels = Kernels { name: "neon", dot: dot_neon, axpy: axpy_neon };
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// Every kernel implementation usable on this host, best first. The blocked
+/// scalar is always present and always last.
+pub fn available() -> Vec<Kernels> {
+    let mut v = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(AVX2);
+        }
+        v.push(SSE2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(NEON);
+    v.push(SCALAR);
+    v
+}
+
+fn select() -> Kernels {
+    let avail = available();
+    if let Ok(forced) = std::env::var("LEXICO_SIMD") {
+        let want = forced.trim();
+        if let Some(k) = avail.iter().find(|k| k.name == want) {
+            return *k;
+        }
+        eprintln!(
+            "warning: LEXICO_SIMD={want} not available on this host (have: {}); auto-selecting",
+            avail.iter().map(|k| k.name).collect::<Vec<_>>().join(",")
+        );
+    }
+    avail[0]
+}
+
+static ACTIVE: OnceLock<Kernels> = OnceLock::new();
+
+/// The kernel pair the process dispatches to (resolved once, then free).
+#[inline]
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(select)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Lengths covering every lane remainder (0..8 twice), the chunk
+    /// boundaries, and sizes past several chunks.
+    fn probe_lengths() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..=17).collect();
+        v.extend([23, 31, 32, 33, 63, 64, 65, 96, 127, 128, 129, 255, 1000]);
+        v
+    }
+
+    #[test]
+    fn every_available_kernel_matches_blocked_scalar_bitwise() {
+        let mut rng = Rng::new(0xD07);
+        for kern in available() {
+            for &n in &probe_lengths() {
+                for rep in 0..4 {
+                    let a = rng.normal_vec(n);
+                    let b = rng.normal_vec(n);
+                    let want = dot_blocked(&a, &b);
+                    let got = (kern.dot)(&a, &b);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{} dot diverged at n={n} rep={rep}: {got} vs {want}",
+                        kern.name
+                    );
+                    let alpha = if rep == 3 { 0.0 } else { rng.range_f32(-2.0, 2.0) };
+                    let y0 = rng.normal_vec(n);
+                    let mut y_want = y0.clone();
+                    let mut y_got = y0;
+                    axpy_blocked(&mut y_want, alpha, &b);
+                    (kern.axpy)(&mut y_got, alpha, &b);
+                    for i in 0..n {
+                        assert_eq!(
+                            y_got[i].to_bits(),
+                            y_want[i].to_bits(),
+                            "{} axpy diverged at n={n} i={i} alpha={alpha}",
+                            kern.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_tolerate_mismatched_slice_lengths() {
+        // dot/axpy contract: operate on the shorter length (callers rely on
+        // this for strided views).
+        let a = vec![1.0f32; 20];
+        let b = vec![2.0f32; 13];
+        for kern in available() {
+            assert_eq!((kern.dot)(&a, &b), dot_blocked(&a, &b), "{}", kern.name);
+            let mut y1 = vec![1.0f32; 11];
+            let mut y2 = y1.clone();
+            axpy_blocked(&mut y1, 0.5, &a);
+            (kern.axpy)(&mut y2, 0.5, &a);
+            assert_eq!(y1, y2, "{}", kern.name);
+        }
+    }
+
+    #[test]
+    fn lane_tree_matches_register_reduction_shape() {
+        // sanity-pin the canonical combine: NOT a linear left fold
+        let l = [1e8f32, 1.0, -1e8, 1.0, 3.0, 4.0, 5.0, 6.0];
+        let tree = ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]));
+        assert_eq!(lane_tree8(&l), tree);
+        // and the linear fold genuinely differs on this input, so the test
+        // would catch a silent reversion to the old order
+        let linear: f32 = l.iter().sum();
+        assert_ne!(tree.to_bits(), linear.to_bits());
+    }
+
+    #[test]
+    fn active_is_one_of_available() {
+        let a = active();
+        assert!(available().iter().any(|k| k.name == a.name), "{}", a.name);
+        // and it computes the canonical result
+        let x = vec![0.25f32; 37];
+        let y = vec![-1.5f32; 37];
+        assert_eq!((a.dot)(&x, &y).to_bits(), dot_blocked(&x, &y).to_bits());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        for kern in available() {
+            assert_eq!((kern.dot)(&[], &[]), 0.0, "{}", kern.name);
+            assert_eq!((kern.dot)(&[2.0], &[3.0]), 6.0, "{}", kern.name);
+            let mut y: [f32; 0] = [];
+            (kern.axpy)(&mut y, 1.0, &[]);
+            let mut y = [1.0f32];
+            (kern.axpy)(&mut y, 2.0, &[3.0]);
+            assert_eq!(y[0], 7.0, "{}", kern.name);
+        }
+    }
+}
