@@ -1,0 +1,159 @@
+//! Perf-regression gate: diff a fresh `BENCH_PR5.json` against the
+//! committed `benches/baseline.json` and fail (non-zero exit) on a >25%
+//! regression in any gated metric — attend ns/token (lower is better) or
+//! decode tokens/s (higher is better). CI runs this after the bench smoke
+//! step on every PR, so a kernel or scheduler regression fails the job
+//! instead of merging silently.
+//!
+//!   cargo bench --bench decode_engines -- --smoke        # writes BENCH_PR5.json
+//!   cargo bench --bench compare -- BENCH_PR5.json benches/baseline.json
+//!
+//! Bootstrapping: a baseline with `"bootstrap": true` (or an empty `gate`
+//! object) applies no gate — the committed placeholder until someone runs
+//! the smoke bench on the reference machine and records real numbers:
+//!
+//!   cargo bench --bench compare -- BENCH_PR5.json benches/baseline.json --write-baseline
+//!
+//! Metric direction is inferred from the key: `*_per_s` regresses when it
+//! falls, `*_ns_*`/`*_ms_*` regress when they rise.
+
+use anyhow::{bail, Context, Result};
+use lexico::util::json::Json;
+use std::path::{Path, PathBuf};
+
+const MAX_REGRESSION: f64 = 0.25;
+
+/// Bench binaries run with cwd = the package root (`rust/`); resolve
+/// workspace-root-relative paths (where the smoke bench writes its JSON)
+/// so CI can pass plain `BENCH_PR5.json` / `benches/baseline.json`.
+fn resolve(p: &str) -> PathBuf {
+    let direct = PathBuf::from(p);
+    if direct.exists() || direct.is_absolute() {
+        return direct;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|root| root.join(p))
+        .filter(|q| q.exists())
+        .unwrap_or(direct)
+}
+
+fn load(path: &Path) -> Result<Json> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let files: Vec<&String> = argv.iter().filter(|a| !a.starts_with("--")).collect();
+    let write_baseline = argv.iter().any(|a| a == "--write-baseline");
+    if files.is_empty() {
+        // a bare `cargo bench` runs every harness=false target with no
+        // args — that must stay green; the gate only engages when CI
+        // passes the two report files explicitly
+        println!(
+            "compare: no reports given, nothing to gate.\n\
+             usage: cargo bench --bench compare -- <current.json> <baseline.json> [--write-baseline]"
+        );
+        return Ok(());
+    }
+    if files.len() != 2 {
+        bail!("usage: cargo bench --bench compare -- <current.json> <baseline.json> [--write-baseline]");
+    }
+    let cur_path = resolve(files[0]);
+    let cur = load(&cur_path)?;
+    let gate = cur.get("gate");
+    let Some(gate_obj) = gate.as_obj() else {
+        bail!("{}: no \"gate\" object — not a PR5 bench report", cur_path.display());
+    };
+
+    if write_baseline {
+        let base_path = resolve(files[1]);
+        let smoke = cur.get("smoke").as_bool().unwrap_or(false);
+        let fields = vec![
+            ("bench", cur.get("bench").clone()),
+            ("bootstrap", Json::Bool(false)),
+            ("recorded_from", Json::Str(format!("smoke={smoke}"))),
+            ("gate", gate.clone()),
+        ];
+        let obj = lexico::util::json::obj(fields);
+        std::fs::write(&base_path, obj.to_string() + "\n")
+            .with_context(|| format!("writing {}", base_path.display()))?;
+        println!(
+            "recorded baseline with {} gated metrics to {}",
+            gate_obj.len(),
+            base_path.display()
+        );
+        return Ok(());
+    }
+
+    let base_path = resolve(files[1]);
+    let base = match load(&base_path) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("no baseline ({e}); perf gate skipped — commit one with --write-baseline");
+            return Ok(());
+        }
+    };
+    // a baseline recorded from a full run is not comparable to a --smoke
+    // run (different sweep sizes and round counts shift every gated
+    // metric systematically) — refuse to gate across workloads
+    if let Some(recorded) = base.get("recorded_from").as_str() {
+        let cur_workload = format!("smoke={}", cur.get("smoke").as_bool().unwrap_or(false));
+        if recorded != cur_workload {
+            println!(
+                "baseline was recorded from '{recorded}' but this run is '{cur_workload}' — \
+                 workloads differ, perf gate skipped. Re-record the baseline from the same \
+                 bench mode CI runs (--smoke)."
+            );
+            return Ok(());
+        }
+    }
+    let bootstrap = base.get("bootstrap").as_bool().unwrap_or(false);
+    let base_gate = base.get("gate").as_obj().cloned().unwrap_or_default();
+    if bootstrap || base_gate.is_empty() {
+        println!(
+            "baseline {} is bootstrap-only — no gate applied.\n\
+             Record real numbers on the reference machine with:\n  \
+             cargo bench --bench decode_engines -- --smoke\n  \
+             cargo bench --bench compare -- BENCH_PR5.json benches/baseline.json --write-baseline",
+            base_path.display()
+        );
+        return Ok(());
+    }
+
+    let mut failures = Vec::new();
+    for (key, bval) in &base_gate {
+        let Some(b) = bval.as_f64() else { continue };
+        let Some(c) = gate.get(key).as_f64() else {
+            failures.push(format!("{key}: present in baseline but missing from the current run"));
+            continue;
+        };
+        // direction by key convention: throughputs regress downward,
+        // latencies regress upward
+        let higher_is_better = key.contains("per_s");
+        let regression = if higher_is_better { (b - c) / b } else { (c - b) / b };
+        let verdict = if regression > MAX_REGRESSION { "FAIL" } else { "ok" };
+        println!(
+            "{verdict:<4} {key:<24} baseline {b:>12.2}  current {c:>12.2}  change {:+.1}%",
+            -regression * 100.0 * if higher_is_better { 1.0 } else { -1.0 }
+        );
+        if regression > MAX_REGRESSION {
+            failures.push(format!(
+                "{key}: {:.1}% regression (baseline {b:.2} → current {c:.2}, limit {:.0}%)",
+                regression * 100.0,
+                MAX_REGRESSION * 100.0
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        bail!("perf regression gate failed:\n  {}", failures.join("\n  "));
+    }
+    println!(
+        "perf gate passed ({} metrics within {:.0}%)",
+        base_gate.len(),
+        MAX_REGRESSION * 100.0
+    );
+    Ok(())
+}

@@ -145,8 +145,10 @@ fn row_attend(
 /// compressed tokens, then time (a) the flat-slab attend single-thread,
 /// (b) the same attend with the score sweep sharded on the default pool,
 /// and (c) the retained row-iterator baseline — and report the OMP encode
-/// throughput observed during the fill. Emits `BENCH_PR4.json`.
-fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<()> {
+/// throughput observed during the fill. Emits `BENCH_PR4.json` and returns
+/// the smallest size's flat-slab attend ns/token (the PR5 perf gate's
+/// attend metric).
+fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<f64> {
     // smoke stays past PAR_SCORE_MIN_TOKENS (1024) so the pool-sharded
     // score path is genuinely exercised, not silently skipped
     let sizes: &[usize] = if smoke { &[1536] } else { &[2048, 8192] };
@@ -163,6 +165,7 @@ fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<()> {
         lexico::tensor::simd::active().name
     );
     let mut entries = Vec::new();
+    let mut gate_ns_per_token = f64::NAN;
     for &t_tokens in sizes {
         let dicts = Arc::new(DictionarySet {
             keys: vec![Dictionary::random(m, n_atoms, 11)],
@@ -214,6 +217,9 @@ fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<()> {
         });
 
         let ns_tok = |mean_ms: f64| mean_ms * 1e6 / t_tokens as f64;
+        if gate_ns_per_token.is_nan() {
+            gate_ns_per_token = ns_tok(st_slab.mean);
+        }
         let speedup = st_rows.mean / st_slab.mean;
         println!(
             "T={t_tokens:<6} slab {:>9.4} ms ({:>7.1} ns/tok)  pool[T={pool_threads}] {:>9.4} ms  \
@@ -258,6 +264,163 @@ fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<()> {
         .unwrap_or_else(|| "BENCH_PR4.json".into());
     std::fs::write(&out_path, &json)?;
     println!("\nwrote {}\n", out_path.display());
+    Ok(gate_ns_per_token)
+}
+
+/// Serving-round sweep (artifact-free, tiny random weights): 8 sessions
+/// decode in steady state, then one 2k-token prompt is admitted mid-stream
+/// and prefilled through the batcher's chunked scheduler. Reports decode
+/// throughput, round-latency p50, and the admission stall ratio
+/// (max round ms during the prefill window ÷ steady p50) per chunk size —
+/// chunk 0 (monolithic) shows the TPOT cliff the chunked path removes.
+/// Emits `BENCH_PR5.json`; its `gate` object is what
+/// `benches/compare.rs` diffs against the committed baseline in CI.
+fn serving_round_sweep(smoke: bool, attend_ns_per_token: f64) -> anyhow::Result<()> {
+    use lexico::model::testutil::tiny_weights_cfg;
+    use lexico::model::ModelConfig;
+    use lexico::server::batcher::{Batcher, BatcherConfig};
+    use lexico::server::metrics::Metrics;
+    use lexico::server::{Job, Request};
+    use std::sync::Mutex;
+
+    let n_sessions = 8usize;
+    let long_tokens = 2048usize;
+    let steady_rounds = if smoke { 15 } else { 40 };
+    let cfg_model = ModelConfig {
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 4,
+        n_kv_heads: 2,
+        head_dim: 8,
+        d_ff: 64,
+        vocab: tasks::vocab_size(),
+        max_seq: long_tokens + 256,
+    };
+    let engine = Arc::new(Engine::new(tiny_weights_cfg(33, cfg_model)));
+    let dicts = Arc::new(DictionarySet {
+        keys: (0..cfg_model.n_layers)
+            .map(|i| Dictionary::random(cfg_model.head_dim, 64, 100 + i as u64))
+            .collect(),
+        values: (0..cfg_model.n_layers)
+            .map(|i| Dictionary::random(cfg_model.head_dim, 64, 200 + i as u64))
+            .collect(),
+    });
+    let long_prompt = tasks::gen_lm_text(&mut Rng::new(42), long_tokens - 1);
+    let chunks: &[usize] = if smoke { &[256, 0] } else { &[64, 256, 1024, 0] };
+    println!(
+        "PR5 serving rounds: {n_sessions} decode sessions + one {long_tokens}-token admission \
+         (lexico:s=2,nb=8, pool T={}):\n",
+        engine.pool().threads()
+    );
+    let mut gate_decode_tok_s = f64::NAN;
+    let mut gate_stall_chunked = f64::NAN;
+    let mut stall_monolithic = f64::NAN;
+    let mut info = Vec::new();
+    for &chunk in chunks {
+        let cfg = BatcherConfig {
+            default_method: "lexico:s=2,nb=8".into(),
+            prefix_entries: 0,
+            prefill_chunk: chunk,
+            ..Default::default()
+        };
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let mut b = Batcher::new(engine.clone(), Some(dicts.clone()), cfg, metrics);
+        let mut replies = Vec::new();
+        for i in 0..n_sessions {
+            let prompt = tasks::gen_lm_text(&mut Rng::new(900 + i as u64), 16);
+            let (tx, rx) = std::sync::mpsc::channel();
+            b.enqueue(Job::new(Request::greedy(i as u64, prompt, 200, ""), tx));
+            replies.push(rx);
+        }
+        // warm-up: admission + short prefills + first decode rounds
+        for _ in 0..3 {
+            b.round();
+        }
+        // steady state: decode rounds only
+        let mut round_ms = Vec::with_capacity(steady_rounds);
+        let mut steady_tokens = 0u64;
+        for _ in 0..steady_rounds {
+            let decoders = (b.n_active() - b.n_prefilling()) as u64;
+            let t0 = Instant::now();
+            b.round();
+            round_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            steady_tokens += decoders;
+        }
+        let steady = lexico::util::stats::summarize(&round_ms);
+        let steady_s: f64 = round_ms.iter().sum::<f64>() / 1e3;
+        let decode_tok_s = steady_tokens as f64 / steady_s.max(1e-9);
+
+        // the long admission, mid-stream
+        let (tx, rl) = std::sync::mpsc::channel();
+        b.enqueue(Job::new(Request::greedy(99, long_prompt.clone(), 2, ""), tx));
+        let mut max_round_ms = 0.0f64;
+        let mut window_rounds = 0usize;
+        let window_t0 = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            b.round();
+            max_round_ms = max_round_ms.max(t0.elapsed().as_secs_f64() * 1e3);
+            window_rounds += 1;
+            if b.n_prefilling() == 0 {
+                break;
+            }
+            assert!(window_rounds < 8192, "admission never completed");
+        }
+        let prefill_tok_s = long_tokens as f64 / window_t0.elapsed().as_secs_f64().max(1e-9);
+        let stall = max_round_ms / steady.p50.max(1e-9);
+        if chunk == 256 {
+            gate_decode_tok_s = decode_tok_s;
+            gate_stall_chunked = stall;
+        }
+        if chunk == 0 {
+            stall_monolithic = stall;
+        }
+        println!(
+            "chunk={:<5} decode {decode_tok_s:>8.1} tok/s  round p50 {:>7.4} ms  \
+             admission: {window_rounds:>3} rounds, max {max_round_ms:>8.3} ms, stall ×{stall:<8.2} \
+             prefill {prefill_tok_s:>8.0} tok/s",
+            if chunk == 0 { "mono".into() } else { chunk.to_string() },
+            steady.p50,
+        );
+        info.push(format!(
+            "    {{\"prefill_chunk\": {chunk}, \"decode_tokens_per_s\": {decode_tok_s:.1}, \
+             \"decode_round_p50_ms\": {:.6}, \"admission_rounds\": {window_rounds}, \
+             \"admission_max_round_ms\": {max_round_ms:.6}, \"stall_ratio\": {stall:.3}, \
+             \"prefill_tokens_per_s\": {prefill_tok_s:.0}}}",
+            steady.p50,
+        ));
+        // drain so the next config starts clean (and the long reply is real)
+        for _ in 0..4096 {
+            if !b.has_work() {
+                break;
+            }
+            b.round();
+        }
+        let long_reply = rl.try_recv().expect("long admission never replied");
+        assert!(long_reply.error.is_none(), "{:?}", long_reply.error);
+    }
+    if stall_monolithic.is_finite() && gate_stall_chunked.is_finite() {
+        println!(
+            "\nchunked admission cuts the worst round ×{:.1} vs monolithic\n",
+            stall_monolithic / gate_stall_chunked.max(1e-9)
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"pr5_serving\",\n  \"smoke\": {smoke},\n  \
+         \"config\": {{\"sessions\": {n_sessions}, \"long_prompt_tokens\": {long_tokens}, \
+         \"method\": \"lexico:s=2,nb=8\", \"pool_threads\": {}}},\n  \
+         \"gate\": {{\n    \"attend_ns_per_token\": {attend_ns_per_token:.2},\n    \
+         \"decode_tokens_per_s\": {gate_decode_tok_s:.1}\n  }},\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        engine.pool().threads(),
+        info.join(",\n")
+    );
+    let out_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_PR5.json"))
+        .unwrap_or_else(|| "BENCH_PR5.json".into());
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}\n", out_path.display());
     Ok(())
 }
 
@@ -270,11 +433,12 @@ fn main() -> anyhow::Result<()> {
             eprintln!("warning: exec pool already initialized; --threads {t} ignored");
         }
     }
-    // The PR 4 sweep is artifact-free: it always runs (reduced under
-    // --smoke, which then skips the artifact-bound sections — CI's bench
-    // smoke step).
+    // The PR 4 and PR 5 sweeps are artifact-free: they always run (reduced
+    // under --smoke, which then skips the artifact-bound sections — CI's
+    // bench smoke + perf-gate steps).
     let smoke = argv.iter().any(|a| a == "--smoke");
-    longcontext_attend_sweep(smoke)?;
+    let attend_ns = longcontext_attend_sweep(smoke)?;
+    serving_round_sweep(smoke, attend_ns)?;
     if smoke {
         return Ok(());
     }

@@ -35,11 +35,13 @@ fn main() -> anyhow::Result<()> {
     let dicts = Arc::new(lexico::dict::DictionarySet::load(art.join("dict_M_N1024.bin"))?);
     let metrics = Arc::new(Mutex::new(Metrics::new()));
 
-    // coordinator: Lexico default method, a deliberately small KV budget
+    // coordinator: Lexico default method, a deliberately small KV budget,
+    // and a small prefill chunk so long admissions visibly interleave
     let cfg = BatcherConfig {
         default_method: "lexico:s=6,nb=32".into(),
         kv_budget_bytes: 2.0 * 1024.0 * 1024.0,
         max_sessions: 16,
+        prefill_chunk: 64,
         ..Default::default()
     };
     let (jtx, jrx) = channel();
@@ -90,6 +92,35 @@ fn main() -> anyhow::Result<()> {
             100.0 * v.get("kv_ratio").as_f64().unwrap_or(0.0),
             v.get("text").as_str().unwrap_or("").trim_end()
         );
+    }
+
+    // token streaming: one {"id","token","i"} line per generated token,
+    // terminated by the usual final-response line
+    println!("\n=== streaming ===");
+    {
+        let mut conn = TcpStream::connect(addr)?;
+        writeln!(conn, r#"{{"prompt": "1+2=", "max_new": 8, "stream": true}}"#)?;
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        let mut tokens = 0usize;
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let v = Json::parse(&line).map_err(|e| anyhow::anyhow!(e))?;
+            if let Some(tok) = v.get("token").as_str() {
+                tokens += 1;
+                println!("  delta {:>2}: {:?}", v.get("i").as_usize().unwrap_or(0), tok);
+            } else {
+                println!(
+                    "  final  : {} tokens streamed, text {:?}",
+                    tokens,
+                    v.get("text").as_str().unwrap_or("").trim_end()
+                );
+                break;
+            }
+        }
     }
 
     println!("\n=== aggregate metrics ===");

@@ -61,6 +61,7 @@ lexico — Lexico KV-cache compression (ICML 2025) reproduction
 USAGE:
   lexico serve  [--addr 127.0.0.1:7077] [--model M] [--method SPEC]
                 [--budget-mb 64] [--max-sessions 32] [--threads N]
+                [--prefill-chunk 256]
   lexico eval   [--model M] [--task arith] [--method SPEC] [--n 50]
                 [--seed 0] [--dict-n 1024] [--threads N]
   lexico repro  <fig1|fig3|fig5|fig6|fig7|table1..table7|all> [--fast]
@@ -72,6 +73,13 @@ USAGE:
 --threads N sizes the worker pool every hot path runs on (default:
 LEXICO_THREADS, then the machine's available parallelism). Results are
 bitwise identical at every thread count.
+
+--prefill-chunk N bounds the prompt tokens a prefilling session consumes
+per scheduling round (0 = monolithic). Chunking keeps one long admission
+from stalling active sessions' decode cadence; token streams are bitwise
+identical at every chunk size. Send {"stream": true} with a request to
+receive one {"id","token","i"} JSON line per generated token ahead of the
+final response line.
 
 Method specs: full | lexico:s=8,nb=32[,delta=..][,fp16][,adaptive=N:d]
   | kivi:bits=2,g=16,nb=16 | pertoken:bits=4,g=16 | zipcache:hi=4,lo=2
@@ -135,6 +143,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefix_entries: args.get("prefix-entries", "8").parse()?,
         prefix_min_tokens: args.get("prefix-min-tokens", "8").parse()?,
         max_fanout: args.get("max-fanout", "8").parse()?,
+        prefill_chunk: args.get("prefill-chunk", "256").parse()?,
     };
     let addr = args.get("addr", "127.0.0.1:7077");
     let metrics = Arc::new(Mutex::new(Metrics::new()));

@@ -131,6 +131,18 @@ pub struct PrefixState {
 }
 
 impl PrefixState {
+    /// A zero-token state: the starting point of a chunked prefill
+    /// ([`Engine::prefill_chunk`] extends it in place, one chunk at a
+    /// time, until the whole prompt has landed).
+    pub fn empty(n_layers: usize) -> Self {
+        PrefixState {
+            tokens: Vec::new(),
+            ks: vec![Vec::new(); n_layers],
+            vs: vec![Vec::new(); n_layers],
+            logits: Vec::new(),
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
@@ -245,11 +257,57 @@ impl Engine {
         (logits, state.expect("capture requested"))
     }
 
-    /// Shared prefill core. With `prefix = None` this is the cold path
-    /// (tokens are the whole prompt); with a prefix it is the resume path.
-    /// Loop structure and accumulation order are identical in both cases —
-    /// the prefix rows simply occupy score slots `0..p0` — so resume is
-    /// bitwise equal to cold on the overlapping computation.
+    /// Advance a *chunked* prefill by `chunk` prompt tokens: processes
+    /// positions `[state.len(), state.len() + chunk.len())` against the
+    /// session's existing cache (which must already hold exactly the
+    /// `state.len()` prefix tokens) and extends `state` in place with the
+    /// chunk's dense K/V rows, so the next chunk attends causally over
+    /// everything before it. Returns the logits of the chunk's last token.
+    ///
+    /// Parity: a chunked prefill — any partition of the prompt into
+    /// chunks, down to one token at a time — performs the identical
+    /// floating-point operations in the identical order as one monolithic
+    /// [`Engine::prefill`] for every position (each chunk is exactly a
+    /// [`Engine::prefill_suffix`] resume, and the prefix rows occupy the
+    /// same score slots either way), so the final logits are bitwise
+    /// identical and the cache state is bitwise identical for every
+    /// backend whose [`KvCache::split_prefill_exact`] holds. The batcher
+    /// relies on this to schedule prefill one budgeted chunk per round
+    /// without perturbing pinned transcripts (DESIGN.md §9).
+    ///
+    /// Start from [`PrefixState::empty`] for a cold prompt, or from a
+    /// clone of a prefix-cache entry's state to resume after a shared
+    /// prefix. An empty chunk returns the stored logits untouched.
+    pub fn prefill_chunk(
+        &self,
+        state: &mut PrefixState,
+        chunk: &[u32],
+        cache: &mut dyn KvCache,
+    ) -> Vec<f32> {
+        let cfg = self.weights.cfg;
+        assert_eq!(
+            state.ks.len(),
+            cfg.n_layers,
+            "state must come from PrefixState::empty(n_layers) or a capture"
+        );
+        if chunk.is_empty() {
+            return state.logits.clone();
+        }
+        let (logits, rows) = self.prefill_core(Some(&*state), chunk, cache, true);
+        let (nks, nvs) = rows.expect("rows requested");
+        for (li, (nk, nv)) in nks.into_iter().zip(nvs).enumerate() {
+            state.ks[li].extend_from_slice(&nk);
+            state.vs[li].extend_from_slice(&nv);
+        }
+        state.tokens.extend_from_slice(chunk);
+        state.logits = logits.clone();
+        logits
+    }
+
+    /// [`Engine::prefill_core`] plus full-state capture: concatenates the
+    /// prefix rows with the chunk's new rows into a complete
+    /// [`PrefixState`] (what `prefill_capture`/`prefill_suffix_capture`
+    /// hand to the prefix cache).
     fn prefill_part(
         &self,
         prefix: Option<&PrefixState>,
@@ -257,13 +315,56 @@ impl Engine {
         cache: &mut dyn KvCache,
         capture: bool,
     ) -> (Vec<f32>, Option<PrefixState>) {
-        let cfg = self.weights.cfg;
-        let p0 = prefix.map_or(0, |p| p.len());
-        let t = tokens.len();
-        if t == 0 {
+        if tokens.is_empty() {
             let p = prefix.expect("prefill of zero tokens without a prefix");
             return (p.logits.clone(), capture.then(|| p.clone()));
         }
+        let (logits, rows) = self.prefill_core(prefix, tokens, cache, capture);
+        let state = rows.map(|(nks, nvs)| {
+            let cfg = self.weights.cfg;
+            let mut ks = Vec::with_capacity(cfg.n_layers);
+            let mut vs = Vec::with_capacity(cfg.n_layers);
+            for li in 0..cfg.n_layers {
+                let (pk, pv): (&[f32], &[f32]) = match prefix {
+                    Some(p) => (&p.ks[li], &p.vs[li]),
+                    None => (&[], &[]),
+                };
+                let mut kk = Vec::with_capacity(pk.len() + nks[li].len());
+                kk.extend_from_slice(pk);
+                kk.extend_from_slice(&nks[li]);
+                let mut vv = Vec::with_capacity(pv.len() + nvs[li].len());
+                vv.extend_from_slice(pv);
+                vv.extend_from_slice(&nvs[li]);
+                ks.push(kk);
+                vs.push(vv);
+            }
+            let mut ids = prefix.map_or_else(Vec::new, |p| p.tokens.clone());
+            ids.extend_from_slice(tokens);
+            PrefixState { tokens: ids, ks, vs, logits: logits.clone() }
+        });
+        (logits, state)
+    }
+
+    /// Shared prefill core. With `prefix = None` (or an empty prefix) this
+    /// is the cold path (tokens are the whole prompt); with a prefix it is
+    /// the resume path. Loop structure and accumulation order are
+    /// identical in both cases — the prefix rows simply occupy score slots
+    /// `0..p0` — so resume is bitwise equal to cold on the overlapping
+    /// computation. With `want_rows` it also returns the per-layer dense
+    /// K/V rows of `tokens` *only* (the chunk's new rows, post-RoPE), so
+    /// chunked prefill can extend its state without re-copying the prefix
+    /// every chunk.
+    fn prefill_core(
+        &self,
+        prefix: Option<&PrefixState>,
+        tokens: &[u32],
+        cache: &mut dyn KvCache,
+        want_rows: bool,
+    ) -> (Vec<f32>, Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)>) {
+        let cfg = self.weights.cfg;
+        let p0 = prefix.map_or(0, |p| p.len());
+        let t = tokens.len();
+        assert!(t > 0, "prefill_core needs at least one token");
         assert!(p0 + t <= cfg.max_seq, "prompt length {}", p0 + t);
         if let Some(p) = prefix {
             assert_eq!(p.ks.len(), cfg.n_layers, "prefix state layer mismatch");
@@ -289,8 +390,8 @@ impl Engine {
         let mut head_scores: Vec<Vec<f32>> = vec![vec![0.0f32; p0 + t]; cfg.n_heads];
         let mut ff1 = vec![0.0; t * cfg.d_ff];
         let mut ff3 = vec![0.0; t * cfg.d_ff];
-        let mut cap_ks: Vec<Vec<f32>> = Vec::new();
-        let mut cap_vs: Vec<Vec<f32>> = Vec::new();
+        let mut new_ks: Vec<Vec<f32>> = Vec::new();
+        let mut new_vs: Vec<Vec<f32>> = Vec::new();
 
         for (li, lw) in self.weights.layers.iter().enumerate() {
             for ti in 0..t {
@@ -362,15 +463,11 @@ impl Engine {
             // hand the layer's KV states + observation-window queries over
             let w = OBS_WINDOW.min(t);
             cache.ingest_prefill(li, &k, &v, t, &q[(t - w) * qd..], w);
-            if capture {
-                let mut kk = Vec::with_capacity((p0 + t) * kvd);
-                let mut vv = Vec::with_capacity((p0 + t) * kvd);
-                kk.extend_from_slice(pks);
-                kk.extend_from_slice(&k);
-                vv.extend_from_slice(pvs);
-                vv.extend_from_slice(&v);
-                cap_ks.push(kk);
-                cap_vs.push(vv);
+            if want_rows {
+                // the chunk's rows only — the caller already owns the
+                // prefix rows, so chunked prefill stays O(chunk) per chunk
+                new_ks.push(k.clone());
+                new_vs.push(v.clone());
             }
 
             par_matmul(&self.pool, &mut proj, &attn, &lw.wo, t, qd, d);
@@ -395,12 +492,8 @@ impl Engine {
         let mut hn = vec![0.0; d];
         rmsnorm(&mut hn, last, &self.weights.lnf, RMS_EPS);
         let logits = self.logits(&hn);
-        let state = capture.then(|| {
-            let mut ids = prefix.map_or_else(Vec::new, |p| p.tokens.clone());
-            ids.extend_from_slice(tokens);
-            PrefixState { tokens: ids, ks: cap_ks, vs: cap_vs, logits: logits.clone() }
-        });
-        (logits, state)
+        let rows = want_rows.then_some((new_ks, new_vs));
+        (logits, rows)
     }
 
     /// One decode step: token at absolute position `pos` (0-based).
@@ -783,6 +876,69 @@ pub mod tests {
         assert_eq!(l2, l_cold);
         assert_eq!(st2.ks, st_cold.ks);
         assert_eq!(st2.vs, st_cold.vs);
+    }
+
+    #[test]
+    fn prefill_chunk_reproduces_monolithic_prefill_bitwise() {
+        // Any chunking of the prompt — including one token at a time —
+        // must land the identical cache state and final logits.
+        let eng = Engine::new(tiny_weights(21));
+        let toks: Vec<u32> = vec![1, 4, 7, 2, 9, 3, 8, 5, 6, 2, 4, 1, 7];
+        let mut cold = FullCache::new(eng.shape());
+        let (l_cold, st_cold) = eng.prefill_capture(&toks, &mut cold);
+        for chunk in [1usize, 3, 5, toks.len()] {
+            let mut cache = FullCache::new(eng.shape());
+            let mut state = PrefixState::empty(eng.shape().n_layers);
+            let mut logits = Vec::new();
+            for c in toks.chunks(chunk) {
+                logits = eng.prefill_chunk(&mut state, c, &mut cache);
+            }
+            assert_eq!(logits, l_cold, "C={chunk}: final logits diverged");
+            assert_eq!(state.tokens, st_cold.tokens, "C={chunk}");
+            assert_eq!(state.ks, st_cold.ks, "C={chunk}: K rows diverged");
+            assert_eq!(state.vs, st_cold.vs, "C={chunk}: V rows diverged");
+            assert_eq!(state.logits, st_cold.logits, "C={chunk}");
+            // the landed cache must continue bitwise like the cold one
+            let t1 = argmax(&l_cold) as u32;
+            let mut cold2 = cold.fork();
+            let a = eng.decode_step(t1, toks.len(), &mut *cold2);
+            let b = eng.decode_step(t1, toks.len(), &mut cache);
+            assert_eq!(a, b, "C={chunk}: post-prefill decode diverged");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_empty_chunk_is_a_noop() {
+        let eng = Engine::new(tiny_weights(22));
+        let toks: Vec<u32> = vec![2, 5, 8, 3];
+        let mut cache = FullCache::new(eng.shape());
+        let mut state = PrefixState::empty(eng.shape().n_layers);
+        let l = eng.prefill_chunk(&mut state, &toks, &mut cache);
+        let before = cache.tokens();
+        assert_eq!(eng.prefill_chunk(&mut state, &[], &mut cache), l);
+        assert_eq!(cache.tokens(), before);
+        assert_eq!(state.len(), toks.len());
+    }
+
+    #[test]
+    fn prefill_chunk_resumes_a_captured_prefix() {
+        // Chunked continuation from a prefix-cache entry's state must equal
+        // the monolithic suffix resume (the batcher's prefix-hit path).
+        let eng = Engine::new(tiny_weights(23));
+        let toks: Vec<u32> = vec![1, 4, 7, 2, 9, 3, 8, 5, 6, 2];
+        let mut c1 = FullCache::new(eng.shape());
+        let (_, st) = eng.prefill_capture(&toks[..4], &mut c1);
+        let l_mono = eng.prefill_suffix(&st, &toks[4..], &mut c1);
+
+        let mut c2 = FullCache::new(eng.shape());
+        let _ = eng.prefill(&toks[..4], &mut c2);
+        let mut state = st.clone();
+        let mut l_chunk = Vec::new();
+        for c in toks[4..].chunks(2) {
+            l_chunk = eng.prefill_chunk(&mut state, c, &mut c2);
+        }
+        assert_eq!(l_chunk, l_mono, "chunked suffix resume diverged");
+        assert_eq!(state.tokens, toks);
     }
 
     #[test]

@@ -4,22 +4,39 @@
 //!   → {"prompt": "...", "max_new": 16, "method": "lexico:s=8,nb=32"}
 //!   ← {"id": 1, "text": "...", "ttft_ms": ..., "total_ms": ...,
 //!      "kv_ratio": ..., "n_generated": ...}
+//!
+//! With `"stream": true` the reply is one `{"id", "token", "i"}` line per
+//! generated token (primary candidate, in order, emitted the round each
+//! token is produced), terminated by the usual final-response line. If the
+//! client disconnects mid-stream the handler flags the job cancelled and
+//! the batcher retires its sessions the same round, returning their KV
+//! bytes to the admission budget.
+//!
 //! Special request {"cmd": "metrics"} returns the aggregate report;
-//! {"cmd": "shutdown"} stops the listener.
+//! {"cmd": "shutdown"} stops the listener. Reads poll with a short
+//! timeout (accumulating partial lines), so shutdown unblocks every
+//! handler — including idle connections and handlers waiting on in-flight
+//! decodes, whose jobs are cancelled — instead of hanging serve()'s join
+//! on a blocking read.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::{Job, Request, Response};
+use super::{Job, Request, Response, StreamDelta};
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// How long reads and reply waits block before re-checking the shutdown
+/// flag — bounds how long a shutdown can go unnoticed by any handler.
+const POLL: Duration = Duration::from_millis(25);
 
 fn response_json(r: &Response) -> String {
     let mut fields = vec![
@@ -41,70 +58,161 @@ fn response_json(r: &Response) -> String {
     json::obj(fields).to_string()
 }
 
+fn delta_json(d: &StreamDelta) -> String {
+    json::obj(vec![
+        ("id", json::num(d.id as f64)),
+        ("token", json::s(&d.token)),
+        ("i", json::num(d.i as f64)),
+    ])
+    .to_string()
+}
+
 fn handle_conn(
     stream: TcpStream,
     jobs: Sender<Job>,
     metrics: Arc<Mutex<Metrics>>,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let parsed = match Json::parse(&line) {
-            Ok(v) => v,
-            Err(e) => {
-                writeln!(writer, "{}", json::obj(vec![("error", json::s(&e))]).to_string())?;
+    stream.set_read_timeout(Some(POLL))?;
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream;
+    // hand-rolled line assembly: a request may arrive split across reads
+    // (partial lines accumulate) or several lines may arrive in one read
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(nl) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=nl).collect();
+            let line = String::from_utf8_lossy(&line).trim().to_string();
+            if line.is_empty() {
                 continue;
             }
-        };
-        match parsed.get("cmd").as_str() {
-            Some("metrics") => {
-                let report = metrics.lock().unwrap().report();
-                writeln!(writer, "{}", json::obj(vec![("metrics", json::s(&report))]).to_string())?;
-                continue;
-            }
-            Some("shutdown") => {
-                shutdown.store(true, Ordering::SeqCst);
-                writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
+            if !handle_line(&line, &mut writer, &jobs, &metrics, &shutdown)? {
                 return Ok(());
             }
-            _ => {}
         }
-        let fanout = parsed
-            .get("fanout")
-            .as_usize()
-            .or_else(|| parsed.get("best_of").as_usize())
-            .unwrap_or(1);
-        let request = Request {
-            id: NEXT_ID.fetch_add(1, Ordering::SeqCst),
-            prompt: parsed.get("prompt").as_str().unwrap_or("").to_string(),
-            max_new: parsed.get("max_new").as_usize().unwrap_or(16),
-            method: parsed.get("method").as_str().unwrap_or("").to_string(),
-            fanout,
-        };
-        let (rtx, rrx) = channel();
-        if jobs.send(Job { request, reply: rtx }).is_err() {
-            writeln!(
-                writer,
-                "{}",
-                json::obj(vec![("error", json::s("server shutting down"))]).to_string()
-            )?;
+        if shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
-        match rrx.recv() {
-            Ok(resp) => writeln!(writer, "{}", response_json(&resp))?,
-            Err(_) => writeln!(
-                writer,
-                "{}",
-                json::obj(vec![("error", json::s("batcher dropped request"))]).to_string()
-            )?,
+        match reader.read(&mut chunk) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
         }
     }
-    Ok(())
+}
+
+/// Process one request line. Returns `Ok(false)` when the connection
+/// should close (shutdown acknowledged, or the server is draining).
+fn handle_line(
+    line: &str,
+    writer: &mut TcpStream,
+    jobs: &Sender<Job>,
+    metrics: &Arc<Mutex<Metrics>>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<bool> {
+    let parsed = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            writeln!(writer, "{}", json::obj(vec![("error", json::s(&e))]).to_string())?;
+            return Ok(true);
+        }
+    };
+    match parsed.get("cmd").as_str() {
+        Some("metrics") => {
+            let report = metrics.lock().unwrap().report();
+            writeln!(writer, "{}", json::obj(vec![("metrics", json::s(&report))]).to_string())?;
+            return Ok(true);
+        }
+        Some("shutdown") => {
+            shutdown.store(true, Ordering::SeqCst);
+            writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
+            return Ok(false);
+        }
+        _ => {}
+    }
+    let fanout = parsed
+        .get("fanout")
+        .as_usize()
+        .or_else(|| parsed.get("best_of").as_usize())
+        .unwrap_or(1);
+    let request = Request {
+        id: NEXT_ID.fetch_add(1, Ordering::SeqCst),
+        prompt: parsed.get("prompt").as_str().unwrap_or("").to_string(),
+        max_new: parsed.get("max_new").as_usize().unwrap_or(16),
+        method: parsed.get("method").as_str().unwrap_or("").to_string(),
+        fanout,
+    };
+    let (rtx, rrx) = channel();
+    let mut job = Job::new(request, rtx);
+    let cancel = job.cancel.clone();
+    let deltas = parsed.get("stream").as_bool().unwrap_or(false).then(|| {
+        let (stx, srx) = channel();
+        job.stream = Some(stx);
+        srx
+    });
+    if jobs.send(job).is_err() {
+        writeln!(
+            writer,
+            "{}",
+            json::obj(vec![("error", json::s("server shutting down"))]).to_string()
+        )?;
+        return Ok(false);
+    }
+    if let Some(srx) = deltas {
+        // relay token lines until the batcher finishes the request and
+        // drops the sender (the final response is then waiting in `rrx`)
+        loop {
+            match srx.recv_timeout(POLL) {
+                Ok(d) => {
+                    if writeln!(writer, "{}", delta_json(&d)).is_err() {
+                        // client gone mid-stream: cancel so the batcher
+                        // retires the sessions and frees their KV bytes
+                        // in its next round
+                        cancel.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        cancel.store(true, Ordering::SeqCst);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+    // final response (the batcher always replies, including for cancelled
+    // jobs); keep polling so a shutdown cancels in-flight decodes instead
+    // of waiting out their full generation
+    loop {
+        match rrx.recv_timeout(POLL) {
+            Ok(resp) => {
+                let _ = writeln!(writer, "{}", response_json(&resp));
+                return Ok(true);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    cancel.store(true, Ordering::SeqCst);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    json::obj(vec![("error", json::s("batcher dropped request"))]).to_string()
+                );
+                return Ok(true);
+            }
+        }
+    }
 }
 
 /// Serve until a `shutdown` command arrives. Returns the bound address
@@ -250,5 +358,190 @@ mod tests {
         let alts = v.get("alts").as_arr().expect("fanout reply carries alts");
         assert_eq!(alts.len(), 2, "{line}");
         writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn streamed_tokens_concatenate_to_the_buffered_text() {
+        let addr = spawn_server();
+        // buffered reference
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(conn, r#"{{"prompt": "2,1>", "max_new": 6}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let buffered = Json::parse(&line).unwrap();
+        assert!(buffered.get("error").as_str().is_none(), "{line}");
+        let text = buffered.get("text").as_str().unwrap().to_string();
+        let n_generated = buffered.get("n_generated").as_usize().unwrap();
+
+        // streamed: one delta line per token, then the final response line
+        writeln!(conn, r#"{{"prompt": "2,1>", "max_new": 6, "stream": true}}"#).unwrap();
+        let mut tokens = Vec::new();
+        let finale = loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let v = Json::parse(&line).unwrap();
+            if v.get("token").as_str().is_some() {
+                assert_eq!(
+                    v.get("i").as_usize().unwrap(),
+                    tokens.len(),
+                    "deltas must arrive in order: {line}"
+                );
+                tokens.push(v.get("token").as_str().unwrap().to_string());
+            } else {
+                break v;
+            }
+        };
+        assert!(finale.get("error").as_str().is_none());
+        assert_eq!(tokens.len(), n_generated, "one delta per generated token");
+        let concat: String = tokens.concat();
+        assert_eq!(concat, text, "streamed tokens must reproduce the buffered text");
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn partial_line_requests_are_assembled_across_reads() {
+        let addr = spawn_server();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // a request split into three writes, with pauses longer than the
+        // server's read timeout — the handler must assemble the line
+        conn.write_all(br#"{"prompt": "#).unwrap();
+        conn.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        conn.write_all(br#""1+2=", "#).unwrap();
+        conn.flush().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        conn.write_all(b"\"max_new\": 3}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        // and two requests in a single write both get replies
+        conn.write_all(b"{\"prompt\": \"1+2=\", \"max_new\": 2}\n{\"cmd\": \"metrics\"}\n")
+            .unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("n_generated").as_usize().is_some(), "{line}");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("completed"), "{line}");
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn disconnect_mid_stream_cancels_the_session_and_frees_its_budget() {
+        let addr = spawn_server();
+        // pick a prompt whose greedy stream runs long (streams are
+        // deterministic under the fixed test weights; the probe just
+        // avoids hard-coding which prompt that is)
+        let probe = |prompt: &str| -> usize {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            writeln!(conn, "{{\"prompt\": \"{prompt}\", \"max_new\": 100}}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(&line).unwrap().get("n_generated").as_usize().unwrap_or(0)
+        };
+        let prompt = ["2,7,4>", "1+2=", "k01=v11;k01?", "9,9,1>", "abc#"]
+            .into_iter()
+            .find(|p| probe(p) >= 40)
+            .expect("no probe prompt decodes ≥40 tokens under the test weights");
+
+        // the idle baseline (prefix-cache residency only) the budget must
+        // return to once the cancelled session's bytes are freed
+        let fetch_metrics = || -> String {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            writeln!(conn, r#"{{"cmd": "metrics"}}"#).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            line
+        };
+        let kv_used = |report: &str| -> String {
+            report
+                .split("kv_used=")
+                .nth(1)
+                .map(|s| s.split(' ').next().unwrap_or("").to_string())
+                .unwrap_or_default()
+        };
+        let baseline = kv_used(&fetch_metrics());
+
+        // stream it, read one delta, vanish
+        {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            writeln!(conn, "{{\"prompt\": \"{prompt}\", \"max_new\": 100, \"stream\": true}}")
+                .unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(Json::parse(&line).unwrap().get("token").as_str().is_some(), "{line}");
+            // conn drops here — the server's next delta write fails
+        }
+
+        // the batcher must notice within a round and return the bytes
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let line = fetch_metrics();
+            if line.contains("cancelled=1")
+                && line.contains("active=0")
+                && kv_used(&line) == baseline
+            {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "cancelled session never freed its budget: {line}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn shutdown_returns_promptly_despite_idle_and_busy_connections() {
+        // spawn the server by hand so the test can observe serve() return
+        let engine = Arc::new(Engine::new(tiny_weights(17)));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (jtx, jrx) = channel();
+        let m2 = metrics.clone();
+        std::thread::spawn(move || {
+            batcher::run(
+                engine,
+                None,
+                BatcherConfig { default_method: "full".into(), ..Default::default() },
+                jrx,
+                m2,
+            )
+        });
+        let (atx, arx) = channel();
+        let (dtx, drx) = channel();
+        std::thread::spawn(move || {
+            let r = serve("127.0.0.1:0", jtx, metrics, move |a| {
+                let _ = atx.send(a);
+            });
+            let _ = dtx.send(r.is_ok());
+        });
+        let addr = arx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+
+        // an idle connection that never sends a byte (the old blocking
+        // reader made serve()'s join hang on exactly this)
+        let _idle = std::net::TcpStream::connect(addr).unwrap();
+        // a session mid-decode whose handler is blocked awaiting the reply
+        let mut busy = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(busy, r#"{{"prompt": "2,7,4>", "max_new": 100}}"#).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+
+        let mut sd = std::net::TcpStream::connect(addr).unwrap();
+        let mut sd_reader = BufReader::new(sd.try_clone().unwrap());
+        writeln!(sd, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        let mut ack = String::new();
+        sd_reader.read_line(&mut ack).unwrap();
+        assert!(ack.contains("ok"), "{ack}");
+        let ok = drx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("serve() hung after shutdown (idle/busy connections not unblocked)");
+        assert!(ok, "serve() returned an error");
     }
 }

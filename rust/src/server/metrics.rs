@@ -25,6 +25,21 @@ pub struct Metrics {
     pub shared_bytes: f64,
     /// sessions created beyond one per request (fan-out candidates)
     pub fanout_sessions: u64,
+    /// requests abandoned by their client (disconnect mid-stream or while
+    /// queued) and retired by the batcher before finishing
+    pub cancelled: u64,
+    /// tokens forwarded through `"stream": true` delta channels
+    pub streamed_tokens: u64,
+    /// prompt chunks landed by the chunked-prefill scheduler
+    pub prefill_chunks: u64,
+    /// most prompt tokens any single round prefilled — bounded by
+    /// `prefill_chunk × prefilling sessions`; with one admission in
+    /// flight, by the chunk budget itself (the TPOT-cliff guard)
+    pub max_round_prefill_tokens: u64,
+    /// gauges refreshed at the end of every scheduling round
+    pub active_sessions: u64,
+    pub prefilling_sessions: u64,
+    pub kv_used_bytes: f64,
     pub ttft_ms: Vec<f64>,
     pub per_token_ms: Vec<f64>,
     /// wall time of each batched decode round (all active sessions advanced
@@ -61,12 +76,19 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests={} completed={} rejected={} tokens={} throughput={:.1} tok/s",
+            "requests={} completed={} rejected={} cancelled={} tokens={} throughput={:.1} tok/s",
             self.requests,
             self.completed,
             self.rejected,
+            self.cancelled,
             self.tokens_generated,
             self.throughput_tok_s()
+        );
+        s += &format!(
+            "\nsessions: active={} prefilling={} kv_used={:.1} KiB",
+            self.active_sessions,
+            self.prefilling_sessions,
+            self.kv_used_bytes / 1024.0
         );
         if let Some(t) = self.ttft() {
             s += &format!(
@@ -100,6 +122,15 @@ impl Metrics {
                 self.shared_bytes / 1024.0
             );
         }
+        if self.prefill_chunks > 0 {
+            s += &format!(
+                "\nchunks  : {} prefill chunks, max {} prompt tokens in one round",
+                self.prefill_chunks, self.max_round_prefill_tokens
+            );
+        }
+        if self.streamed_tokens > 0 {
+            s += &format!("\nstream  : {} tokens streamed", self.streamed_tokens);
+        }
         if self.fanout_sessions > 0 {
             s += &format!("\nfanout  : {} extra candidate sessions", self.fanout_sessions);
         }
@@ -127,8 +158,19 @@ mod tests {
         m.prefill_tokens_total = 50;
         m.shared_bytes = 2048.0;
         m.fanout_sessions = 3;
+        m.cancelled = 1;
+        m.streamed_tokens = 7;
+        m.prefill_chunks = 5;
+        m.max_round_prefill_tokens = 256;
+        m.active_sessions = 4;
+        m.prefilling_sessions = 1;
+        m.kv_used_bytes = 4096.0;
         let r = m.report();
         assert!(r.contains("completed=2"));
+        assert!(r.contains("cancelled=1"), "{r}");
+        assert!(r.contains("active=4 prefilling=1 kv_used=4.0 KiB"), "{r}");
+        assert!(r.contains("5 prefill chunks, max 256"), "{r}");
+        assert!(r.contains("7 tokens streamed"), "{r}");
         assert!(r.contains("TTFT"));
         assert!(r.contains("p99"), "{r}");
         assert!(r.contains("round  ms"), "{r}");

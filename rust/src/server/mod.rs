@@ -23,7 +23,9 @@ pub mod batcher;
 pub mod http;
 pub mod metrics;
 
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -88,8 +90,41 @@ impl Response {
     }
 }
 
-/// A request plus its reply channel (what the batcher consumes).
+/// One streamed token (`"stream": true` requests): emitted by the batcher
+/// the round the token is committed, relayed by the front end as one JSON
+/// line `{"id", "token", "i"}` ahead of the final response line. Only the
+/// primary (greedy) candidate streams; fan-out alternates arrive in the
+/// final response as usual.
+#[derive(Clone, Debug)]
+pub struct StreamDelta {
+    pub id: u64,
+    /// decoded text of this token (concatenating all deltas in `i` order
+    /// reproduces the final response's `text` exactly)
+    pub token: String,
+    /// 0-based index of the token in the generated stream
+    pub i: usize,
+}
+
+/// A request plus its reply channels (what the batcher consumes).
 pub struct Job {
     pub request: Request,
     pub reply: Sender<Response>,
+    /// per-token delta channel for streaming requests (None = buffered)
+    pub stream: Option<Sender<StreamDelta>>,
+    /// set by the front end when the client vanishes (or on shutdown); the
+    /// batcher retires the request's sessions the same round, returning
+    /// their KV bytes to the admission budget
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl Job {
+    /// A buffered (non-streaming) job with a fresh cancellation flag.
+    pub fn new(request: Request, reply: Sender<Response>) -> Self {
+        Job { request, reply, stream: None, cancel: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Whether the front end has abandoned this job.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(std::sync::atomic::Ordering::SeqCst)
+    }
 }

@@ -31,6 +31,13 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -341,6 +348,9 @@ mod tests {
         assert_eq!(v.get("a").idx(1).as_f64(), Some(2.5));
         assert_eq!(v.get("b").get("c").as_str(), Some("x\ny"));
         assert_eq!(v.get("b").get("d"), &Json::Bool(true));
+        assert_eq!(v.get("b").get("d").as_bool(), Some(true));
+        assert_eq!(v.get("b").get("e").as_bool(), None);
+        assert_eq!(v.get("a").idx(0).as_bool(), None, "numbers are not booleans");
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Chunked-prefill parity: [`Engine::prefill_chunk`] with ANY partition of
+//! the prompt — C ∈ {1, 7, 256, len} — must reproduce monolithic prefill
+//! bitwise for every backend whose `split_prefill_exact` holds: identical
+//! final logits, identical compressed cache bytes, and a bitwise-identical
+//! decode trace afterwards. This is the contract that lets the batcher
+//! schedule prefill one budgeted chunk per round (DESIGN.md §9) without
+//! perturbing a single pinned transcript.
+
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::{CacheShape, KvCache};
+use lexico::dict::{Dictionary, DictionarySet};
+use lexico::model::testutil::{tiny_weights, tiny_weights_deep};
+use lexico::model::{Engine, PrefixState};
+use lexico::tensor::argmax;
+use lexico::util::rng::Rng;
+
+/// Backends the chunked scheduler serves chunked (split-exact families,
+/// both lexico coefficient precisions).
+const SPLIT_EXACT_SPECS: [&str; 6] = [
+    "full",
+    "lexico:s=2,nb=4",
+    "lexico:s=2,nb=4,fp16",
+    "lexico:s=4,nb=8",
+    "kivi:bits=4,g=4,nb=4",
+    "pertoken:bits=8,g=8,nb=2",
+];
+
+fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+    Arc::new(DictionarySet {
+        keys: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 4000 + i as u64))
+            .collect(),
+        values: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 5000 + i as u64))
+            .collect(),
+    })
+}
+
+/// Greedy-decode `n` steps from `logits`, returning every logit vector
+/// (bitwise comparison material for the post-prefill continuation).
+fn decode_trace(
+    eng: &Engine,
+    cache: &mut dyn KvCache,
+    logits: Vec<f32>,
+    pos0: usize,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let mut out = vec![logits];
+    let mut pos = pos0;
+    for _ in 0..n {
+        let tok = argmax(out.last().unwrap()) as u32;
+        let l = eng.decode_step(tok, pos, cache);
+        out.push(l);
+        pos += 1;
+    }
+    out
+}
+
+#[test]
+fn chunked_prefill_is_bitwise_identical_for_every_split_exact_backend() {
+    for (wi, weights) in [tiny_weights(55), tiny_weights_deep(56)].into_iter().enumerate() {
+        let eng = Engine::new(weights);
+        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        let mut rng = Rng::new(77 + wi as u64);
+        // long enough that lexico overflows its residual buffer and
+        // compresses mid-prompt — across chunk boundaries
+        let prompt: Vec<u32> = (0..40).map(|_| 3 + rng.below(50) as u32).collect();
+
+        for spec in SPLIT_EXACT_SPECS {
+            let mut mono = build_cache(spec, &ctx).unwrap();
+            assert!(mono.split_prefill_exact(), "{spec} must be split-exact");
+            let l_mono = eng.prefill(&prompt, &mut *mono);
+            let bytes_mono = mono.mem_bytes();
+            let trace_mono = decode_trace(&eng, &mut *mono, l_mono.clone(), prompt.len(), 3);
+
+            for chunk in [1usize, 7, 256, prompt.len()] {
+                let mut cache = build_cache(spec, &ctx).unwrap();
+                let mut state = PrefixState::empty(eng.shape().n_layers);
+                let mut logits = Vec::new();
+                for c in prompt.chunks(chunk) {
+                    logits = eng.prefill_chunk(&mut state, c, &mut *cache);
+                }
+                assert_eq!(state.len(), prompt.len());
+                assert_eq!(
+                    logits, l_mono,
+                    "{spec} (model {wi}): C={chunk} final logits diverged"
+                );
+                assert_eq!(
+                    cache.mem_bytes(),
+                    bytes_mono,
+                    "{spec} (model {wi}): C={chunk} cache bytes diverged"
+                );
+                assert_eq!(cache.tokens(), prompt.len(), "{spec}: C={chunk}");
+                let trace = decode_trace(&eng, &mut *cache, logits, prompt.len(), 3);
+                assert_eq!(
+                    trace, trace_mono,
+                    "{spec} (model {wi}): C={chunk} post-prefill decode diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_state_matches_monolithic_capture() {
+    // The rolling PrefixState a chunked prefill maintains must be exactly
+    // the state a monolithic capture produces — it is what the batcher
+    // seals into the shared-prefix cache when the prompt qualifies.
+    let eng = Engine::new(tiny_weights(57));
+    let mut rng = Rng::new(91);
+    let prompt: Vec<u32> = (0..23).map(|_| 3 + rng.below(50) as u32).collect();
+    let mut c1 = lexico::cache::full::FullCache::new(eng.shape());
+    let (_, st_mono) = eng.prefill_capture(&prompt, &mut c1);
+    for chunk in [1usize, 7, 256] {
+        let mut c2 = lexico::cache::full::FullCache::new(eng.shape());
+        let mut state = PrefixState::empty(eng.shape().n_layers);
+        for c in prompt.chunks(chunk) {
+            let _ = eng.prefill_chunk(&mut state, c, &mut c2);
+        }
+        assert_eq!(state.tokens, st_mono.tokens, "C={chunk}");
+        assert_eq!(state.ks, st_mono.ks, "C={chunk}: K rows diverged");
+        assert_eq!(state.vs, st_mono.vs, "C={chunk}: V rows diverged");
+        assert_eq!(state.logits, st_mono.logits, "C={chunk}");
+    }
+}
+
+#[test]
+fn non_split_exact_backends_reject_nothing_but_differ_when_chunked() {
+    // SnapKV scores its observation window over whatever each ingest call
+    // delivers, so chunking is NOT bitwise-neutral for it — which is
+    // exactly why the batcher prefills such backends monolithically
+    // (asserted at the batcher level in server::batcher::tests). Here we
+    // pin the trait flag that gates that decision.
+    let eng = Engine::new(tiny_weights(58));
+    let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+    for spec in ["snapkv:cap=24,win=4", "pyramidkv:cap=24,win=4"] {
+        let cache = build_cache(spec, &ctx).unwrap();
+        assert!(
+            !cache.split_prefill_exact(),
+            "{spec}: observation-window backends must opt out of chunked prefill"
+        );
+    }
+}

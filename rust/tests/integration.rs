@@ -219,11 +219,8 @@ fn serve_with_lexico_backend() {
     let mut replies = Vec::new();
     for i in 0..6 {
         let (rtx, rrx) = channel();
-        tx.send(Job {
-            request: Request::greedy(i, format!("k0{i}=v42;k0{i}?"), 6, ""),
-            reply: rtx,
-        })
-        .unwrap();
+        tx.send(Job::new(Request::greedy(i, format!("k0{i}=v42;k0{i}?"), 6, ""), rtx))
+            .unwrap();
         replies.push(rrx);
     }
     drop(tx);

@@ -178,7 +178,7 @@ fn batcher_serves_identical_responses_at_every_thread_count() {
         let mut replies = Vec::new();
         for r in reqs {
             let (tx, rx) = std::sync::mpsc::channel();
-            b.enqueue(Job { request: r, reply: tx });
+            b.enqueue(Job::new(r, tx));
             replies.push(rx);
         }
         for _ in 0..128 {
@@ -224,5 +224,74 @@ fn prefill_capture_and_suffix_resume_are_thread_invariant() {
         assert_eq!(st.ks, reference.1, "T={threads}: captured K rows diverged");
         assert_eq!(st.vs, reference.2, "T={threads}: captured V rows diverged");
         assert_eq!(l2, reference.3, "T={threads}: suffix logits diverged");
+    }
+}
+
+#[test]
+fn mixed_prefilling_and_decoding_rounds_are_thread_invariant() {
+    // Chunked prefill interleaved with decode at T ∈ {1, 2, 4}: a long
+    // prompt admitted mid-stream consumes one 3-token chunk per round
+    // while earlier sessions keep decoding (and a fan-out request seats
+    // its candidates when its last chunk lands). Every thread count must
+    // reproduce the T = 1 responses byte for byte — the chunked-prefill
+    // path runs the same sharded kernels as monolithic prefill, so the
+    // determinism contract spans scheduling phases too.
+    let run = |threads: usize| -> Vec<Response> {
+        let engine = Arc::new(engine_with_threads(threads));
+        let dicts = tiny_dicts(engine.shape(), 64);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let cfg = BatcherConfig {
+            default_method: "lexico:s=2,nb=4".into(),
+            prefix_min_tokens: 4,
+            prefill_chunk: 3,
+            ..Default::default()
+        };
+        let mut b = Batcher::new(engine, Some(dicts), cfg, metrics);
+        let mut replies = Vec::new();
+        // two sessions decoding first
+        for r in [
+            Request::greedy(1, "1+2=", 8, ""),
+            Request::greedy(2, "2,7,4>", 8, "full"),
+        ] {
+            let (tx, rx) = std::sync::mpsc::channel();
+            b.enqueue(Job::new(r, tx));
+            replies.push(rx);
+        }
+        for _ in 0..3 {
+            b.round();
+        }
+        // a long prompt and a fan-out request admitted mid-stream
+        for r in [
+            Request::greedy(3, "k01=v11;k02=v22;k03=v33;k04=v44;k02?", 6, ""),
+            Request {
+                id: 4,
+                prompt: "7,3,5>".into(),
+                max_new: 5,
+                method: String::new(),
+                fanout: 2,
+            },
+        ] {
+            let (tx, rx) = std::sync::mpsc::channel();
+            b.enqueue(Job::new(r, tx));
+            replies.push(rx);
+        }
+        for _ in 0..128 {
+            if !b.has_work() {
+                break;
+            }
+            b.round();
+        }
+        replies.into_iter().map(|r| r.try_recv().expect("reply pending")).collect()
+    };
+    let reference = run(1);
+    assert!(reference.iter().all(|r| r.error.is_none()));
+    for &threads in &THREAD_COUNTS[1..] {
+        let got = run(threads);
+        assert_eq!(got.len(), reference.len());
+        for (g, want) in got.iter().zip(&reference) {
+            assert_eq!(g.text, want.text, "T={threads}: primary stream diverged");
+            assert_eq!(g.alts, want.alts, "T={threads}: alternates diverged");
+            assert_eq!(g.n_generated, want.n_generated, "T={threads}");
+        }
     }
 }
