@@ -8,11 +8,18 @@
 //! pool, reporting tokens/s and parallel efficiency — and the PR 4
 //! long-context compressed-attention sweep (flat CSR slabs + SIMD kernels
 //! vs the retained row-iterator baseline), which needs no artifacts and
-//! emits `BENCH_PR4.json` for the perf trajectory.
+//! emits `BENCH_PR4.json` for the perf trajectory — and the PR 6
+//! shared-dictionary round sweep: per-session attend vs the round-level
+//! shared-qd protocol (one qᵀD GEMM + one value pass for all sessions)
+//! vs the same under the fast-math kernel tier, across session count B
+//! and atom count N, emitting `BENCH_PR6.json`.
 //!
 //!   cargo bench --bench decode_engines [-- --threads N] [-- --smoke]
 //!
-//! `--smoke` runs only a reduced long-context sweep (CI smoke step).
+//! `--smoke` runs only the reduced artifact-free sweeps (CI smoke step).
+//! `--pr6-child <out>` is internal: the PR 6 sweep re-execs itself with
+//! `LEXICO_FAST_MATH=1` to measure the fast tier under its own frozen
+//! kernel dispatch (a process-wide `OnceLock`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,7 +32,7 @@ use lexico::exec::ExecPool;
 use lexico::model::{Engine, Weights};
 use lexico::sparse::CsrRow;
 use lexico::tasks;
-use lexico::tensor::softmax;
+use lexico::tensor::{axpy, par_matmul_bt, softmax};
 use lexico::util::rng::Rng;
 use lexico::util::stats::{bench_ms, report};
 
@@ -424,6 +431,293 @@ fn serving_round_sweep(smoke: bool, attend_ns_per_token: f64) -> anyhow::Result<
     Ok(())
 }
 
+/// Sweep parameters shared by the parent run and the `--pr6-child`
+/// re-exec — both must measure identical shapes for the series to line up.
+fn pr6_params(smoke: bool) -> (usize, &'static [usize], &'static [usize], usize, usize) {
+    let t_tokens = if smoke { 512 } else { 1024 };
+    let atom_counts: &[usize] = if smoke { &[1024, 4096] } else { &[1024, 4096, 16384] };
+    let sessions: &[usize] = if smoke { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    let (warm, iters) = if smoke { (2, 8) } else { (5, 20) };
+    (t_tokens, atom_counts, sessions, warm, iters)
+}
+
+const PR6_SHAPE: CacheShape = CacheShape { n_layers: 1, n_heads: 8, n_kv_heads: 4, head_dim: 64 };
+
+fn pr6_dicts(n_atoms: usize) -> Arc<DictionarySet> {
+    let m = PR6_SHAPE.head_dim;
+    Arc::new(DictionarySet {
+        keys: vec![Dictionary::random(m, n_atoms, 21)],
+        values: vec![Dictionary::random(m, n_atoms, 22)],
+    })
+}
+
+/// Fill one prototype through the real append path, then fork it B−1
+/// times — sessions share compressed pages physically (the serving
+/// shape), so only the per-session scratch and buffers differ.
+fn pr6_sessions(
+    dicts: &Arc<DictionarySet>,
+    t_tokens: usize,
+    b: usize,
+) -> Vec<Box<dyn KvCache>> {
+    let shape = PR6_SHAPE;
+    let cfg = LexicoConfig { sparsity: 8, n_buffer: 32, ..Default::default() };
+    let mut proto = LexicoCache::new(shape, dicts.clone(), cfg);
+    proto.set_pool(lexico::exec::default_pool());
+    let mut rng = Rng::new(17);
+    let kvd = shape.kv_dim();
+    let mut done = 0usize;
+    while done < t_tokens {
+        let chunk = 512.min(t_tokens - done);
+        let ks = rng.normal_vec(chunk * kvd);
+        let vs = rng.normal_vec(chunk * kvd);
+        proto.append_batch(0, &ks, &vs, chunk);
+        done += chunk;
+    }
+    let mut caches: Vec<Box<dyn KvCache>> = (0..b - 1).map(|_| proto.fork()).collect();
+    caches.push(Box::new(proto));
+    caches
+}
+
+/// One round of the shared-qd protocol over B sessions, exactly as
+/// `Engine::decode_batch` drives it per layer: one GEMM of all B·n_heads
+/// query rows against D_k, per-session begin (scores + softmax + base
+/// z-bins), one ascending-atom value pass over every session's bins,
+/// per-session finish (adaptive extras + buffer).
+fn pr6_round_attend(
+    pool: &ExecPool,
+    caches: &mut [Box<dyn KvCache>],
+    dicts: &DictionarySet,
+    qs: &[f32],
+    out: &mut [f32],
+    qd_round: &mut Vec<f32>,
+    z_round: &mut Vec<f32>,
+) {
+    let shape = PR6_SHAPE;
+    let (m, nh, qd) = (shape.head_dim, shape.n_heads, shape.q_dim());
+    let b = caches.len();
+    let (dk, dv) = (&dicts.keys[0], &dicts.values[0]);
+    qd_round.resize(b * nh * dk.n, 0.0);
+    par_matmul_bt(pool, qd_round, qs, &dk.atoms, b * nh, m, dk.n);
+    z_round.resize(b * nh * dv.n, 0.0);
+    for (bi, c) in caches.iter_mut().enumerate() {
+        out[bi * qd..(bi + 1) * qd].fill(0.0);
+        c.begin_shared_attend(
+            0,
+            &qs[bi * qd..(bi + 1) * qd],
+            &qd_round[bi * nh * dk.n..(bi + 1) * nh * dk.n],
+            &mut z_round[bi * nh * dv.n..(bi + 1) * nh * dv.n],
+        );
+    }
+    for n in 0..dv.n {
+        let atom = &dv.atoms[n * m..(n + 1) * m];
+        for r in 0..b * nh {
+            let zn = z_round[r * dv.n + n];
+            if zn != 0.0 {
+                let (bi, h) = (r / nh, r % nh);
+                axpy(&mut out[bi * qd + h * m..bi * qd + (h + 1) * m], zn, atom);
+            }
+        }
+    }
+    for (bi, c) in caches.iter_mut().enumerate() {
+        c.finish_shared_attend(0, &mut out[bi * qd..(bi + 1) * qd]);
+    }
+}
+
+/// `--pr6-child <out>`: round-path timings only, under whatever kernel
+/// tier the environment selected. The parent re-execs us with
+/// `LEXICO_FAST_MATH=1` because kernel dispatch freezes per process.
+fn pr6_child(out_path: &str, smoke: bool) -> anyhow::Result<()> {
+    let (t_tokens, atom_counts, sessions, warm, iters) = pr6_params(smoke);
+    let pool = lexico::exec::default_pool();
+    let qd_dim = PR6_SHAPE.q_dim();
+    let mut lines = String::new();
+    for &n_atoms in atom_counts {
+        let dicts = pr6_dicts(n_atoms);
+        for &b in sessions {
+            let mut caches = pr6_sessions(&dicts, t_tokens, b);
+            let mut rng = Rng::new(99);
+            let qs = rng.normal_vec(b * qd_dim);
+            let mut out = vec![0.0; b * qd_dim];
+            let (mut qd_round, mut z_round) = (Vec::new(), Vec::new());
+            let st = bench_ms(warm, iters, || {
+                pr6_round_attend(
+                    &pool, &mut caches, &dicts, &qs, &mut out, &mut qd_round, &mut z_round,
+                );
+            });
+            lines.push_str(&format!(
+                "b={b} n={n_atoms} ns_per_token={:.2}\n",
+                st.mean * 1e6 / (b * t_tokens) as f64
+            ));
+        }
+    }
+    std::fs::write(out_path, lines)?;
+    Ok(())
+}
+
+/// Run the fast-math series in a child process (fresh kernel dispatch)
+/// and collect its (B, N) → ns/token map. A child failure degrades to an
+/// empty map — the fast series is reported as `null`, not a bench abort.
+fn pr6_fast_series(
+    smoke: bool,
+) -> std::collections::BTreeMap<(usize, usize), f64> {
+    let mut map = std::collections::BTreeMap::new();
+    let exe = match std::env::current_exe() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("warning: current_exe failed ({e}); fast-math series omitted");
+            return map;
+        }
+    };
+    let tmp = std::env::temp_dir().join(format!("lexico_pr6_fast_{}.txt", std::process::id()));
+    let mut cmd = std::process::Command::new(&exe);
+    cmd.arg("--pr6-child")
+        .arg(&tmp)
+        .arg("--threads")
+        .arg(lexico::exec::default_pool().threads().to_string())
+        .env("LEXICO_FAST_MATH", "1");
+    if smoke {
+        cmd.arg("--smoke");
+    }
+    match cmd.status() {
+        Ok(s) if s.success() => {}
+        other => {
+            eprintln!("warning: fast-math child failed ({other:?}); fast-math series omitted");
+            return map;
+        }
+    }
+    let text = std::fs::read_to_string(&tmp).unwrap_or_default();
+    let _ = std::fs::remove_file(&tmp);
+    for line in text.lines() {
+        let (mut b, mut n, mut v) = (None, None, None);
+        for part in line.split_whitespace() {
+            if let Some(x) = part.strip_prefix("b=") {
+                b = x.parse::<usize>().ok();
+            } else if let Some(x) = part.strip_prefix("n=") {
+                n = x.parse::<usize>().ok();
+            } else if let Some(x) = part.strip_prefix("ns_per_token=") {
+                v = x.parse::<f64>().ok();
+            }
+        }
+        if let (Some(b), Some(n), Some(v)) = (b, n, v) {
+            map.insert((b, n), v);
+        }
+    }
+    map
+}
+
+/// PR 6 shared-dictionary round sweep: per-session attend (the old path,
+/// every cache projecting q against D_k itself) vs the round-level
+/// shared-qd protocol, vs the same protocol under the fast-math tier, at
+/// B sessions × N atoms. The round path is asserted bitwise-identical to
+/// the per-session path at every cell before timing; the fast series is
+/// tolerance-equal only (separate process, separate series). Emits
+/// `BENCH_PR6.json`; its `gate` object feeds `benches/compare.rs` against
+/// `benches/baseline_pr6.json`.
+fn shared_qd_round_sweep(smoke: bool) -> anyhow::Result<()> {
+    let (t_tokens, atom_counts, sessions, warm, iters) = pr6_params(smoke);
+    let pool = lexico::exec::default_pool();
+    let shape = PR6_SHAPE;
+    let qd_dim = shape.q_dim();
+    println!(
+        "PR6 shared-dictionary round attend (s=8, m={}, kv_heads={}, T={t_tokens}) — \
+         simd={}, pool T={}:\n",
+        shape.head_dim,
+        shape.n_kv_heads,
+        lexico::tensor::simd::active().name,
+        pool.threads()
+    );
+    let fast = pr6_fast_series(smoke);
+    let mut entries = Vec::new();
+    let mut gate_old = f64::NAN;
+    let mut gate_round = f64::NAN;
+    for &n_atoms in atom_counts {
+        let dicts = pr6_dicts(n_atoms);
+        for &b in sessions {
+            let mut caches = pr6_sessions(&dicts, t_tokens, b);
+            let mut rng = Rng::new(99);
+            let qs = rng.normal_vec(b * qd_dim);
+            let mut out_old = vec![0.0; b * qd_dim];
+            let mut out_round = vec![0.0; b * qd_dim];
+            let (mut qd_round, mut z_round) = (Vec::new(), Vec::new());
+            // parity first: the round protocol must be bit-identical to
+            // per-session attend on the exact contents it will be timed on
+            for (bi, c) in caches.iter_mut().enumerate() {
+                c.attend(
+                    0,
+                    &qs[bi * qd_dim..(bi + 1) * qd_dim],
+                    &mut out_old[bi * qd_dim..(bi + 1) * qd_dim],
+                );
+            }
+            pr6_round_attend(
+                &pool, &mut caches, &dicts, &qs, &mut out_round, &mut qd_round, &mut z_round,
+            );
+            assert!(
+                out_old.iter().zip(&out_round).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "round-level shared-qd attend diverged from per-session attend \
+                 (N={n_atoms} B={b})"
+            );
+            let st_old = bench_ms(warm, iters, || {
+                for (bi, c) in caches.iter_mut().enumerate() {
+                    c.attend(
+                        0,
+                        &qs[bi * qd_dim..(bi + 1) * qd_dim],
+                        &mut out_old[bi * qd_dim..(bi + 1) * qd_dim],
+                    );
+                }
+            });
+            let st_round = bench_ms(warm, iters, || {
+                pr6_round_attend(
+                    &pool, &mut caches, &dicts, &qs, &mut out_round, &mut qd_round, &mut z_round,
+                );
+            });
+            let ns_tok = |mean_ms: f64| mean_ms * 1e6 / (b * t_tokens) as f64;
+            let (old_ns, round_ns) = (ns_tok(st_old.mean), ns_tok(st_round.mean));
+            let fast_ns = fast.get(&(b, n_atoms)).copied();
+            if n_atoms == atom_counts[0] && b == *sessions.last().unwrap() {
+                gate_old = old_ns;
+                gate_round = round_ns;
+            }
+            println!(
+                "N={n_atoms:<6} B={b:<3} per-session {old_ns:>8.1} ns/tok  \
+                 round-gemm {round_ns:>8.1} ns/tok  speedup ×{:<5.2} fast {}",
+                old_ns / round_ns.max(1e-9),
+                fast_ns
+                    .map(|v| format!("{v:.1} ns/tok"))
+                    .unwrap_or_else(|| "n/a".into()),
+            );
+            entries.push(format!(
+                "    {{\"n_atoms\": {n_atoms}, \"sessions\": {b}, \"tokens\": {t_tokens}, \
+                 \"old_attend_ns_per_token\": {old_ns:.2}, \
+                 \"round_attend_ns_per_token\": {round_ns:.2}, \
+                 \"speedup_round_vs_old\": {:.3}, \
+                 \"fast_round_attend_ns_per_token\": {}}}",
+                old_ns / round_ns.max(1e-9),
+                fast_ns.map(|v| format!("{v:.2}")).unwrap_or_else(|| "null".into()),
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"pr6_shared_qd_round\",\n  \"simd\": \"{}\",\n  \"smoke\": {smoke},\n  \
+         \"config\": {{\"sparsity\": 8, \"n_buffer\": 32, \"head_dim\": {}, \"n_heads\": {}, \
+         \"n_kv_heads\": {}, \"tokens\": {t_tokens}, \"pool_threads\": {}}},\n  \
+         \"gate\": {{\n    \"round_attend_ns_per_token\": {gate_round:.2},\n    \
+         \"old_attend_ns_per_token\": {gate_old:.2}\n  }},\n  \"entries\": [\n{}\n  ]\n}}\n",
+        lexico::tensor::simd::active().name,
+        shape.head_dim,
+        shape.n_heads,
+        shape.n_kv_heads,
+        pool.threads(),
+        entries.join(",\n")
+    );
+    let out_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_PR6.json"))
+        .unwrap_or_else(|| "BENCH_PR6.json".into());
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {}\n", out_path.display());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     // --threads N (or --threads=N) sizes the default pool for the backend
     // comparison sections; the scaling sweep below builds its own pools.
@@ -433,12 +727,22 @@ fn main() -> anyhow::Result<()> {
             eprintln!("warning: exec pool already initialized; --threads {t} ignored");
         }
     }
-    // The PR 4 and PR 5 sweeps are artifact-free: they always run (reduced
-    // under --smoke, which then skips the artifact-bound sections — CI's
-    // bench smoke + perf-gate steps).
     let smoke = argv.iter().any(|a| a == "--smoke");
+    // internal re-exec target for the PR 6 fast-math series — must run
+    // before anything else touches the kernels so dispatch freezes on the
+    // tier LEXICO_FAST_MATH selected
+    if let Some(i) = argv.iter().position(|a| a == "--pr6-child") {
+        let out = argv
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("--pr6-child needs an output path"))?;
+        return pr6_child(out, smoke);
+    }
+    // The PR 4, PR 5 and PR 6 sweeps are artifact-free: they always run
+    // (reduced under --smoke, which then skips the artifact-bound
+    // sections — CI's bench smoke + perf-gate steps).
     let attend_ns = longcontext_attend_sweep(smoke)?;
     serving_round_sweep(smoke, attend_ns)?;
+    shared_qd_round_sweep(smoke)?;
     if smoke {
         return Ok(());
     }

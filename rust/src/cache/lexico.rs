@@ -78,6 +78,23 @@ const PAGE_TOKENS: usize = 32;
 /// sharded path on small contexts.
 const PAR_SCORE_MIN_TOKENS: usize = 1024;
 
+/// Attend scratch is allowed to retain up to this many × the current
+/// single-query footprint before `attend_batch` releases the excess: small
+/// round-to-round batch-size jitter keeps its buffers, a one-off wide round
+/// gives the memory back.
+const SCRATCH_SHRINK_FACTOR: usize = 4;
+
+/// Shrink a scratch vector back to `keep` elements when its capacity has
+/// grown past [`SCRATCH_SHRINK_FACTOR`]× that. `shrink_to` only promises an
+/// upper bound loosely (capacity stays ≥ `keep`), which is all the session
+/// footprint accounting needs.
+fn shrink_scratch<T>(v: &mut Vec<T>, keep: usize) {
+    if v.capacity() > keep.saturating_mul(SCRATCH_SHRINK_FACTOR) {
+        v.truncate(keep);
+        v.shrink_to(keep);
+    }
+}
+
 /// One frozen page of compressed tokens: parallel K and V slabs, exactly
 /// [`PAGE_TOKENS`] rows each (pages seal only when full). No `Default`:
 /// pages are only ever created by sealing the tail (`CsrSlab::take`),
@@ -576,17 +593,16 @@ impl KvCache for LexicoCache {
         let n_heads = self.shape.n_heads;
         let scale = 1.0 / (m as f32).sqrt();
         out.fill(0.0);
-        let (k_atoms_ptr, k_n) = {
-            let (a, n) = self.atoms(layer, true);
-            (a.as_ptr(), n)
-        };
-        let (v_atoms_ptr, v_n) = {
-            let (a, n) = self.atoms(layer, false);
-            (a.as_ptr(), n)
-        };
-        // SAFETY: atoms live in self and are not mutated during attend.
-        let k_atoms = unsafe { std::slice::from_raw_parts(k_atoms_ptr, k_n * m) };
-        let v_atoms = unsafe { std::slice::from_raw_parts(v_atoms_ptr, v_n * m) };
+        // Detach the scratch vectors from `self` for the duration of the
+        // pass: the dictionary views below hold `&self` borrows, and with
+        // the scratch moved out the borrow checker can see that scratch
+        // writes never alias the atoms (this used to be papered over with
+        // a raw-pointer `from_raw_parts` hack).
+        let mut qd = std::mem::take(&mut self.qd);
+        let mut scores = std::mem::take(&mut self.scores);
+        let mut z = std::mem::take(&mut self.z);
+        let (k_atoms, k_n) = self.atoms(layer, true);
+        let (v_atoms, v_n) = self.atoms(layer, false);
 
         // qd[h][n] = q_h · D_k[n] for ALL heads in one streaming pass over
         // the dictionary (perf pass #1, EXPERIMENTS.md §Perf: one load of
@@ -595,28 +611,28 @@ impl KvCache for LexicoCache {
         // construction* to use the pre-optimization per-head layout (kept
         // for the §Perf comparison — the flag is latched into
         // `self.qd_per_head` so the hot loop never touches the env).
-        if self.qd.len() < n_heads * k_n {
-            self.qd.resize(n_heads * k_n, 0.0);
+        if qd.len() < n_heads * k_n {
+            qd.resize(n_heads * k_n, 0.0);
         }
-        {
-            let qd = &mut self.qd[..n_heads * k_n];
-            if self.qd_per_head {
-                for h in 0..n_heads {
-                    let qh = &q[h * m..(h + 1) * m];
-                    for n in 0..k_n {
-                        qd[h * k_n + n] = dot(qh, &k_atoms[n * m..(n + 1) * m]);
-                    }
-                }
-            } else {
+        if self.qd_per_head {
+            for h in 0..n_heads {
+                let qh = &q[h * m..(h + 1) * m];
                 for n in 0..k_n {
-                    let atom = &k_atoms[n * m..(n + 1) * m];
-                    for h in 0..n_heads {
-                        qd[h * k_n + n] = dot(&q[h * m..(h + 1) * m], atom);
-                    }
+                    qd[h * k_n + n] = dot(qh, &k_atoms[n * m..(n + 1) * m]);
+                }
+            }
+        } else {
+            for n in 0..k_n {
+                let atom = &k_atoms[n * m..(n + 1) * m];
+                for h in 0..n_heads {
+                    qd[h * k_n + n] = dot(&q[h * m..(h + 1) * m], atom);
                 }
             }
         }
 
+        if z.len() < v_n {
+            z.resize(v_n, 0.0);
+        }
         for h in 0..n_heads {
             let g = h / self.shape.group();
             let hi = self.head_idx(layer, g);
@@ -624,32 +640,34 @@ impl KvCache for LexicoCache {
             let tc = head.n_csr;
             let tb = head.buf_len;
             let qh = &q[h * m..(h + 1) * m];
-            let qd = &self.qd[h * k_n..(h + 1) * k_n];
+            let qdh = &qd[h * k_n..(h + 1) * k_n];
             // compressed scores: O(T·s), one linear sweep over the flat
             // slabs, pool-sharded when the context is long
-            self.scores.resize(tc + tb, 0.0);
-            head.score_compressed(&self.pool, qd, scale, &mut self.scores[..tc], self.par_score_min);
+            scores.resize(tc + tb, 0.0);
+            head.score_compressed(&self.pool, qdh, scale, &mut scores[..tc], self.par_score_min);
             // buffer scores: dense
             for ti in 0..tb {
-                self.scores[tc + ti] =
-                    dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+                scores[tc + ti] = dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
             }
-            softmax(&mut self.scores[..tc + tb]);
+            softmax(&mut scores[..tc + tb]);
 
             // value side: z-bin accumulation, then atoms·z  (O(T·s + N·m))
             let oh = &mut out[h * m..(h + 1) * m];
-            let z = &mut self.z[..v_n];
-            z.fill(0.0);
-            head.accumulate_value_bins(&self.scores[..tc], z);
-            for (n, &zn) in z.iter().enumerate() {
+            let zh = &mut z[..v_n];
+            zh.fill(0.0);
+            head.accumulate_value_bins(&scores[..tc], zh);
+            for (n, &zn) in zh.iter().enumerate() {
                 if zn != 0.0 {
                     axpy(oh, zn, &v_atoms[n * m..(n + 1) * m]);
                 }
             }
             for ti in 0..tb {
-                axpy(oh, self.scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+                axpy(oh, scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
             }
         }
+        self.qd = qd;
+        self.scores = scores;
+        self.z = z;
     }
 
     fn attend_batch(&mut self, layer: usize, qs: &[f32], out: &mut [f32], b: usize) {
@@ -662,58 +680,53 @@ impl KvCache for LexicoCache {
         let group = self.shape.group();
         let scale = 1.0 / (m as f32).sqrt();
         out.fill(0.0);
-        let (k_atoms_ptr, k_n) = {
-            let (a, n) = self.atoms(layer, true);
-            (a.as_ptr(), n)
-        };
-        let (v_atoms_ptr, v_n) = {
-            let (a, n) = self.atoms(layer, false);
-            (a.as_ptr(), n)
-        };
-        // SAFETY: atoms live in self and are not mutated during attend_batch.
-        let k_atoms = unsafe { std::slice::from_raw_parts(k_atoms_ptr, k_n * m) };
-        let v_atoms = unsafe { std::slice::from_raw_parts(v_atoms_ptr, v_n * m) };
+        // Scratch detached from `self` so the dictionary borrows below can
+        // coexist with scratch writes (same pattern as `attend`; replaces
+        // the old raw-pointer aliasing hack).
+        let mut qd = std::mem::take(&mut self.qd);
+        let mut scores = std::mem::take(&mut self.scores);
+        let mut z = std::mem::take(&mut self.z);
+        let mut score_off = std::mem::take(&mut self.score_off);
+        let (k_atoms, k_n) = self.atoms(layer, true);
+        let (v_atoms, v_n) = self.atoms(layer, false);
         let rows = b * n_heads;
 
         // (1) qd[row][n] = q_row · D_k[n]: ONE streaming pass over the key
         // dictionary serves every query's every head (extends perf pass #1
         // across the whole query batch).
-        if self.qd.len() < rows * k_n {
-            self.qd.resize(rows * k_n, 0.0);
+        if qd.len() < rows * k_n {
+            qd.resize(rows * k_n, 0.0);
         }
-        {
-            let qd = &mut self.qd[..rows * k_n];
-            for n in 0..k_n {
-                let atom = &k_atoms[n * m..(n + 1) * m];
-                for qi in 0..b {
-                    for h in 0..n_heads {
-                        qd[(qi * n_heads + h) * k_n + n] =
-                            dot(&qs[qi * qdim + h * m..qi * qdim + (h + 1) * m], atom);
-                    }
+        for n in 0..k_n {
+            let atom = &k_atoms[n * m..(n + 1) * m];
+            for qi in 0..b {
+                for h in 0..n_heads {
+                    qd[(qi * n_heads + h) * k_n + n] =
+                        dot(&qs[qi * qdim + h * m..qi * qdim + (h + 1) * m], atom);
                 }
             }
         }
 
         // (2) per-row scores + softmax + value-bin accumulation (the flat
         // score buffer is kept for phase 4; offsets per row).
-        self.score_off.clear();
-        self.score_off.push(0);
+        score_off.clear();
+        score_off.push(0);
         for _qi in 0..b {
             for h in 0..n_heads {
                 let hi = self.head_idx(layer, h / group);
                 let len = self.heads[hi].n_csr + self.heads[hi].buf_len;
-                let prev = *self.score_off.last().unwrap();
-                self.score_off.push(prev + len);
+                let prev = *score_off.last().unwrap();
+                score_off.push(prev + len);
             }
         }
-        let total_scores = *self.score_off.last().unwrap();
-        if self.scores.len() < total_scores {
-            self.scores.resize(total_scores, 0.0);
+        let total_scores = *score_off.last().unwrap();
+        if scores.len() < total_scores {
+            scores.resize(total_scores, 0.0);
         }
-        if self.z.len() < rows * v_n {
-            self.z.resize(rows * v_n, 0.0);
+        if z.len() < rows * v_n {
+            z.resize(rows * v_n, 0.0);
         }
-        self.z[..rows * v_n].fill(0.0);
+        z[..rows * v_n].fill(0.0);
         for qi in 0..b {
             for h in 0..n_heads {
                 let row = qi * n_heads + h;
@@ -721,23 +734,22 @@ impl KvCache for LexicoCache {
                 let head = &self.heads[hi];
                 let tc = head.n_csr;
                 let tb = head.buf_len;
-                let off = self.score_off[row];
+                let off = score_off[row];
                 let qh = &qs[qi * qdim + h * m..qi * qdim + (h + 1) * m];
-                let qdrow = &self.qd[row * k_n..(row + 1) * k_n];
+                let qdrow = &qd[row * k_n..(row + 1) * k_n];
                 head.score_compressed(
                     &self.pool,
                     qdrow,
                     scale,
-                    &mut self.scores[off..off + tc],
+                    &mut scores[off..off + tc],
                     self.par_score_min,
                 );
                 for ti in 0..tb {
-                    self.scores[off + tc + ti] =
-                        dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+                    scores[off + tc + ti] = dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
                 }
-                softmax(&mut self.scores[off..off + tc + tb]);
-                let z = &mut self.z[row * v_n..(row + 1) * v_n];
-                head.accumulate_value_bins(&self.scores[off..off + tc], z);
+                softmax(&mut scores[off..off + tc + tb]);
+                let zrow = &mut z[row * v_n..(row + 1) * v_n];
+                head.accumulate_value_bins(&scores[off..off + tc], zrow);
             }
         }
 
@@ -748,7 +760,7 @@ impl KvCache for LexicoCache {
         for n in 0..v_n {
             let atom = &v_atoms[n * m..(n + 1) * m];
             for row in 0..rows {
-                let zn = self.z[row * v_n + n];
+                let zn = z[row * v_n + n];
                 if zn != 0.0 {
                     let (qi, h) = (row / n_heads, row % n_heads);
                     axpy(&mut out[qi * qdim + h * m..qi * qdim + (h + 1) * m], zn, atom);
@@ -764,11 +776,161 @@ impl KvCache for LexicoCache {
                 let hi = self.head_idx(layer, h / group);
                 let head = &self.heads[hi];
                 let tc = head.n_csr;
-                let off = self.score_off[row];
+                let off = score_off[row];
                 let oh = &mut out[qi * qdim + h * m..qi * qdim + (h + 1) * m];
                 for ti in 0..head.buf_len {
-                    axpy(oh, self.scores[off + tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+                    axpy(oh, scores[off + tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
                 }
+            }
+        }
+
+        // Release oversized scratch: a one-off wide round (large `b`) would
+        // otherwise pin the high-water allocation — and every future fork's
+        // clone cost — for the rest of the session. Shrink back towards the
+        // single-query footprint whenever the round left >SHRINK_FACTOR×
+        // that behind.
+        let one_query_scores = score_off[n_heads];
+        shrink_scratch(&mut qd, n_heads * k_n);
+        shrink_scratch(&mut scores, one_query_scores);
+        shrink_scratch(&mut z, v_n);
+        self.qd = qd;
+        self.scores = scores;
+        self.z = z;
+        self.score_off = score_off;
+    }
+
+    /// Every session built from the same `Arc<DictionarySet>` reports the
+    /// same pointer, letting the engine batch the `qᵀD_k` projection of a
+    /// whole decode round into one GEMM (DESIGN.md §10). Adaptive sessions
+    /// participate too: their *base* atoms are the shared set, and only the
+    /// session-private extension atoms are scored locally.
+    fn shared_dicts(&self) -> Option<Arc<DictionarySet>> {
+        Some(self.dicts.clone())
+    }
+
+    /// Round-level attend, phase 1 (engine protocol; see the trait docs).
+    /// `qd_base` is `[n_heads][nk_base]` — this session's rows of the
+    /// round's `qᵀD_k` GEMM over the shared base key dictionary; the GEMM
+    /// computes each element with the same canonical `dot`, so the rows are
+    /// bitwise identical to what `attend` would have produced. Scores,
+    /// softmax and the value z-bins run exactly as in `attend`; base-atom
+    /// bins land in `z_base` (`[n_heads][nv_base]`) for the engine's shared
+    /// value pass, while softmaxed scores — and, under adaptive mode, the
+    /// full-width z rows covering extension atoms — stay in scratch for
+    /// [`Self::finish_shared_attend`].
+    fn begin_shared_attend(&mut self, layer: usize, q: &[f32], qd_base: &[f32], z_base: &mut [f32]) {
+        let m = self.shape.head_dim;
+        let n_heads = self.shape.n_heads;
+        let scale = 1.0 / (m as f32).sqrt();
+        let nk_base = self.dicts.keys[layer].n;
+        let nv_base = self.dicts.values[layer].n;
+        debug_assert_eq!(qd_base.len(), n_heads * nk_base);
+        debug_assert_eq!(z_base.len(), n_heads * nv_base);
+        let mut qd = std::mem::take(&mut self.qd);
+        let mut scores = std::mem::take(&mut self.scores);
+        let mut z = std::mem::take(&mut self.z);
+        let mut score_off = std::mem::take(&mut self.score_off);
+        let (k_atoms, k_n) = self.atoms(layer, true);
+        let (_, v_n) = self.atoms(layer, false);
+
+        // Assemble per-head qd rows: base atoms arrive precomputed from the
+        // round GEMM; adaptive extension atoms (indices ≥ nk_base) are
+        // session-private and scored here, in ascending-atom order, exactly
+        // as `attend`'s per-head projection loop would have reached them.
+        if qd.len() < n_heads * k_n {
+            qd.resize(n_heads * k_n, 0.0);
+        }
+        for h in 0..n_heads {
+            let row = &mut qd[h * k_n..(h + 1) * k_n];
+            row[..nk_base].copy_from_slice(&qd_base[h * nk_base..(h + 1) * nk_base]);
+            let qh = &q[h * m..(h + 1) * m];
+            for n in nk_base..k_n {
+                row[n] = dot(qh, &k_atoms[n * m..(n + 1) * m]);
+            }
+        }
+
+        // Per-head score offsets into the flat score buffer (kept for
+        // finish_shared_attend's buffer pass).
+        score_off.clear();
+        score_off.push(0);
+        for h in 0..n_heads {
+            let hi = self.head_idx(layer, h / self.shape.group());
+            let len = self.heads[hi].n_csr + self.heads[hi].buf_len;
+            let prev = *score_off.last().unwrap();
+            score_off.push(prev + len);
+        }
+        let total_scores = *score_off.last().unwrap();
+        if scores.len() < total_scores {
+            scores.resize(total_scores, 0.0);
+        }
+        let has_extras = v_n > nv_base;
+        if has_extras {
+            if z.len() < n_heads * v_n {
+                z.resize(n_heads * v_n, 0.0);
+            }
+            z[..n_heads * v_n].fill(0.0);
+        }
+        z_base.fill(0.0);
+        for h in 0..n_heads {
+            let g = h / self.shape.group();
+            let head = &self.heads[self.head_idx(layer, g)];
+            let tc = head.n_csr;
+            let tb = head.buf_len;
+            let off = score_off[h];
+            let qh = &q[h * m..(h + 1) * m];
+            let qdh = &qd[h * k_n..(h + 1) * k_n];
+            head.score_compressed(&self.pool, qdh, scale, &mut scores[off..off + tc], self.par_score_min);
+            for ti in 0..tb {
+                scores[off + tc + ti] = dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+            }
+            softmax(&mut scores[off..off + tc + tb]);
+            if has_extras {
+                // Adaptive rows may index extension atoms (≥ nv_base):
+                // accumulate into a full-width local row, then hand the
+                // base prefix to the engine's shared pass.
+                let zrow = &mut z[h * v_n..(h + 1) * v_n];
+                head.accumulate_value_bins(&scores[off..off + tc], zrow);
+                z_base[h * nv_base..(h + 1) * nv_base].copy_from_slice(&zrow[..nv_base]);
+            } else {
+                head.accumulate_value_bins(
+                    &scores[off..off + tc],
+                    &mut z_base[h * nv_base..(h + 1) * nv_base],
+                );
+            }
+        }
+        self.qd = qd;
+        self.scores = scores;
+        self.z = z;
+        self.score_off = score_off;
+    }
+
+    /// Round-level attend, phase 2: `out` already holds the shared
+    /// base-atom value contribution (applied by the engine in ascending
+    /// atom order); add the adaptive extension atoms (ascending, continuing
+    /// where the base left off) and then the recency buffer — the same
+    /// per-element order as `attend`, so the round path stays bitwise
+    /// identical to the per-session path.
+    fn finish_shared_attend(&mut self, layer: usize, out: &mut [f32]) {
+        let m = self.shape.head_dim;
+        let n_heads = self.shape.n_heads;
+        let nv_base = self.dicts.values[layer].n;
+        let (v_atoms, v_n) = self.atoms(layer, false);
+        for h in 0..n_heads {
+            let g = h / self.shape.group();
+            let head = &self.heads[self.head_idx(layer, g)];
+            let tc = head.n_csr;
+            let off = self.score_off[h];
+            let oh = &mut out[h * m..(h + 1) * m];
+            if v_n > nv_base {
+                for n in nv_base..v_n {
+                    let zn = self.z[h * v_n + n];
+                    if zn != 0.0 {
+                        axpy(oh, zn, &v_atoms[n * m..(n + 1) * m]);
+                    }
+                }
+            }
+            for ti in 0..head.buf_len {
+                axpy(oh, self.scores[off + tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
             }
         }
     }
@@ -1371,6 +1533,145 @@ mod tests {
             let f = c.fork();
             assert_eq!(f.mem_bytes(), c.mem_bytes(), "fork accounting");
         }
+    }
+
+    /// The tentpole parity property at the cache layer: driving the
+    /// engine's round protocol by hand — `par_matmul_bt` over the shared
+    /// base key dictionary, `begin_shared_attend`, the engine's
+    /// ascending-atom shared value pass, `finish_shared_attend` — must be
+    /// bitwise identical to per-session `attend`, per precision, with
+    /// sealed pages + ragged tail + buffer, under adaptive extensions, and
+    /// at every pool size (sharded score sweep exercised via a lowered
+    /// threshold).
+    #[test]
+    fn shared_qd_attend_matches_per_session_attend_bitwise() {
+        use crate::tensor::par_matmul_bt;
+        let cfgs = [
+            LexicoConfig { sparsity: 4, n_buffer: 3, ..Default::default() },
+            LexicoConfig {
+                sparsity: 4,
+                n_buffer: 3,
+                precision: CoefPrecision::Fp16,
+                ..Default::default()
+            },
+            LexicoConfig {
+                sparsity: 2,
+                n_buffer: 2,
+                adaptive: Some((8, 0.05)),
+                ..Default::default()
+            },
+        ];
+        for cfg in cfgs {
+            let adaptive = cfg.adaptive.is_some();
+            // tiny dictionary under adaptive mode → extension growth certain
+            let n_atoms = if adaptive { 16 } else { 64 };
+            for threads in [1usize, 2, 4] {
+                let (shape, mut c) = setup(n_atoms, cfg.clone());
+                let pool = Arc::new(crate::exec::ExecPool::new(threads));
+                c.set_pool(pool.clone());
+                c.set_par_score_min(16);
+                let mut rng = Rng::new(77);
+                let n_tok = PAGE_TOKENS + 9; // ≥1 sealed page + ragged tail
+                for _ in 0..n_tok {
+                    let k = rng.normal_vec(shape.kv_dim());
+                    let v = rng.normal_vec(shape.kv_dim());
+                    for l in 0..shape.n_layers {
+                        c.append(l, &k, &v);
+                    }
+                }
+                assert!(!c.heads[0].pages.is_empty());
+                if adaptive {
+                    let extra: usize =
+                        c.adaptive_k.iter().flatten().map(|a| a.n_extra).sum();
+                    assert!(extra > 0, "adaptive dict never grew — extensions unexercised");
+                }
+                let dicts = c.shared_dicts().expect("lexico reports shared dicts");
+                assert!(Arc::ptr_eq(&dicts, &c.dicts));
+                let q = rng.normal_vec(shape.q_dim());
+                let m = shape.head_dim;
+                for layer in 0..shape.n_layers {
+                    let mut want = vec![0.0; shape.q_dim()];
+                    c.attend(layer, &q, &mut want);
+
+                    let (dk, dv) = (&dicts.keys[layer], &dicts.values[layer]);
+                    let mut qd_base = vec![0.0; shape.n_heads * dk.n];
+                    par_matmul_bt(&pool, &mut qd_base, &q, &dk.atoms, shape.n_heads, m, dk.n);
+                    let mut z_base = vec![0.0; shape.n_heads * dv.n];
+                    c.begin_shared_attend(layer, &q, &qd_base, &mut z_base);
+                    // the engine's shared value pass: base atoms ascending,
+                    // zero bins skipped (matches attend's axpy loop)
+                    let mut got = vec![0.0; shape.q_dim()];
+                    for n in 0..dv.n {
+                        let atom = &dv.atoms[n * m..(n + 1) * m];
+                        for h in 0..shape.n_heads {
+                            let zn = z_base[h * dv.n + n];
+                            if zn != 0.0 {
+                                axpy(&mut got[h * m..(h + 1) * m], zn, atom);
+                            }
+                        }
+                    }
+                    c.finish_shared_attend(layer, &mut got);
+                    assert_eq!(
+                        got, want,
+                        "shared-qd attend diverged (adaptive={adaptive}, T={threads}, layer={layer})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attend_batch_scratch_shrinks_after_oversized_rounds() {
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(91);
+        for _ in 0..PAGE_TOKENS + 5 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let qdim = shape.q_dim();
+        let q = rng.normal_vec(qdim);
+        let mut want = vec![0.0; qdim];
+        c.attend(0, &q, &mut want);
+
+        // one oversized B=16 round...
+        let b = 16;
+        let qs = rng.normal_vec(b * qdim);
+        let mut out = vec![0.0; b * qdim];
+        c.attend_batch(0, &qs, &mut out, b);
+
+        // ...must not pin the high-water scratch for the session's life
+        let k_n = c.dicts.keys[0].n;
+        let v_n = c.dicts.values[0].n;
+        assert!(
+            c.qd.capacity() < b * shape.n_heads * k_n,
+            "qd scratch kept the B={b} high-water mark ({} elems)",
+            c.qd.capacity()
+        );
+        assert!(
+            c.z.capacity() < b * shape.n_heads * v_n,
+            "z scratch kept the B={b} high-water mark ({} elems)",
+            c.z.capacity()
+        );
+        let one_query_scores: usize = (0..shape.n_heads)
+            .map(|h| {
+                let head = &c.heads[c.head_idx(0, h / shape.group())];
+                head.n_csr + head.buf_len
+            })
+            .sum();
+        assert!(
+            c.scores.capacity() < b * one_query_scores,
+            "score scratch kept the B={b} high-water mark ({} elems)",
+            c.scores.capacity()
+        );
+
+        // and subsequent single-query attends still match exactly
+        let mut got = vec![0.0; qdim];
+        c.attend(0, &q, &mut got);
+        assert_eq!(got, want, "attend diverged after scratch shrink");
     }
 
     #[test]

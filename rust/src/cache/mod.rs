@@ -136,6 +136,44 @@ pub trait KvCache: Send {
         let _ = pool;
     }
 
+    /// The shared dictionary set this cache scores against, if its attend
+    /// path factors through a query–dictionary projection that the engine
+    /// can batch across sessions (Lexico). Backends return the *same*
+    /// `Arc` they were built with, so the engine can group sessions by
+    /// `Arc::ptr_eq` and run one `qᵀD` GEMM per (round, layer, dictionary)
+    /// instead of one per session. `None` (the default) keeps the backend
+    /// on the plain [`KvCache::attend`] fan-out.
+    fn shared_dicts(&self) -> Option<std::sync::Arc<crate::dict::DictionarySet>> {
+        None
+    }
+
+    /// Engine-internal protocol, phase 1 of the round-level shared-qd
+    /// attend (see DESIGN.md §10). Called only on caches that returned
+    /// `Some` from [`KvCache::shared_dicts`], with `qd_base` =
+    /// `[n_heads][n_k]` precomputed `qᵀD_k` rows for this session's query
+    /// against the *base* (shared) key dictionary of `layer`. The cache
+    /// scores its compressed tokens + buffer, softmaxes, and accumulates
+    /// the base-atom value bins into `z_base` (`[n_heads][n_v]`, zeroed
+    /// here); softmaxed scores and any adaptive-extension z-bins stay in
+    /// internal scratch for [`KvCache::finish_shared_attend`]. The engine
+    /// then applies `z_base · D_v` itself in one sharded pass over the
+    /// shared value atoms.
+    fn begin_shared_attend(&mut self, layer: usize, q: &[f32], qd_base: &[f32], z_base: &mut [f32]) {
+        let _ = (layer, q, qd_base, z_base);
+        unreachable!("begin_shared_attend called on a backend without shared_dicts()");
+    }
+
+    /// Engine-internal protocol, phase 2: after the engine applied the
+    /// shared value atoms, add the per-cache remainder to `out`
+    /// (`[q_dim]`, already holding the base-atom contribution) — adaptive
+    /// dictionary extension atoms, then the uncompressed buffer — in the
+    /// same per-element order as [`KvCache::attend`], preserving bitwise
+    /// parity with the per-session path.
+    fn finish_shared_attend(&mut self, layer: usize, out: &mut [f32]) {
+        let _ = (layer, out);
+        unreachable!("finish_shared_attend called on a backend without shared_dicts()");
+    }
+
     /// Whether `ingest_prefill(prefix)` followed by `ingest_prefill(suffix)`
     /// leaves state bitwise identical to one `ingest_prefill(prefix ++
     /// suffix)` call. True for backends whose compression decisions depend

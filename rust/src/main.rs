@@ -74,6 +74,15 @@ USAGE:
 LEXICO_THREADS, then the machine's available parallelism). Results are
 bitwise identical at every thread count.
 
+--fast-math (any subcommand) opts into the fused-kernel tier: dot/axpy
+dispatch to FMA variants (fast-scalar | fma | avx512-fma | neon-fma).
+Equivalent to LEXICO_FAST_MATH=1. Fast-tier results are bitwise
+reproducible within the tier but only tolerance-equal to the default
+canonical tier (max |Δlogit| pinned by goldens); leave it off when
+comparing transcripts against canonical runs. LEXICO_SIMD=<name> pins a
+specific kernel in whichever tier is active
+(scalar|sse2|avx2|neon, or a fast-tier name under --fast-math).
+
 --prefill-chunk N bounds the prompt tokens a prefilling session consumes
 per scheduling round (0 = monolithic). Chunking keeps one long admission
 from stalling active sessions' decode cadence; token streams are bitwise
@@ -94,6 +103,11 @@ fn main() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = parse_args(&argv[1..]);
+    // opt into the fast-math kernel tier before the first dot/axpy call
+    // freezes dispatch (simd::active is a process-wide OnceLock)
+    if args.has("fast-math") {
+        std::env::set_var("LEXICO_FAST_MATH", "1");
+    }
     // size the exec pool before any engine or cache exists
     if let Some(t) = args.flags.get("threads") {
         let t: usize = t.parse().context("--threads must be a positive integer")?;

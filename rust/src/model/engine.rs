@@ -4,9 +4,12 @@
 use std::sync::Arc;
 
 use crate::cache::{CacheShape, KvCache};
+use crate::dict::DictionarySet;
 use crate::exec::{self, ExecPool, SendPtr};
 use crate::model::weights::Weights;
-use crate::tensor::{argmax, dot, par_matmul, par_matmul_kmajor, rmsnorm, silu, softmax};
+use crate::tensor::{
+    argmax, axpy, dot, par_matmul, par_matmul_bt, par_matmul_kmajor, rmsnorm, silu, softmax,
+};
 
 const RMS_EPS: f32 = 1e-5;
 
@@ -71,6 +74,13 @@ struct BatchScratch {
     proj: Vec<f32>,
     ff1: Vec<f32>,
     ff3: Vec<f32>,
+    /// round-level shared-qd path (DESIGN.md §10): gathered member query
+    /// rows (`qg`), the per-round `qᵀD_k` GEMM output (`qd_round`) and the
+    /// per-session base value z-bins (`z_round`). Sized per layer inside
+    /// `decode_batch` — their extents depend on each group's dictionary.
+    qg: Vec<f32>,
+    qd_round: Vec<f32>,
+    z_round: Vec<f32>,
 }
 
 impl BatchScratch {
@@ -103,6 +113,12 @@ pub struct Engine {
     pool: Arc<ExecPool>,
     scratch: std::sync::Mutex<Scratch>,
     batch_scratch: std::sync::Mutex<BatchScratch>,
+    /// Round-level shared-dictionary query GEMM in [`Engine::decode_batch`]
+    /// (DESIGN.md §10). On by default; `LEXICO_ROUND_QD=0` (read once at
+    /// construction) or [`Engine::set_round_shared_qd`] falls back to the
+    /// per-session attend fan-out. Both paths are bitwise identical — the
+    /// switch exists for benchmarking and bisection, not correctness.
+    round_shared_qd: bool,
 }
 
 /// How many trailing prompt queries are handed to the cache as the
@@ -187,6 +203,7 @@ impl Engine {
             pool,
             scratch: std::sync::Mutex::new(scratch),
             batch_scratch: std::sync::Mutex::new(BatchScratch::default()),
+            round_shared_qd: std::env::var("LEXICO_ROUND_QD").map(|v| v != "0").unwrap_or(true),
         }
     }
 
@@ -194,6 +211,13 @@ impl Engine {
     /// the caches it builds).
     pub fn pool(&self) -> &Arc<ExecPool> {
         &self.pool
+    }
+
+    /// Toggle the round-level shared-qd decode path (parity tests, the
+    /// old-vs-round bench series). Both settings produce bitwise-identical
+    /// logits.
+    pub fn set_round_shared_qd(&mut self, on: bool) {
+        self.round_shared_qd = on;
     }
 
     pub fn shape(&self) -> CacheShape {
@@ -548,16 +572,22 @@ impl Engine {
     /// Hidden states are stacked into `[B, d_model]` rows and every weight
     /// matrix is driven through the k-major GEMM, so each weight streams
     /// from memory once per layer per round instead of once per session —
-    /// the batch-first serving pipeline. Attention stays per-session (each
-    /// session owns its cache and context length).
+    /// the batch-first serving pipeline. Sessions whose caches share a
+    /// dictionary set additionally share the query–dictionary projection
+    /// and the value-atom pass: one `qᵀD_k` GEMM and one streaming pass
+    /// over `D_v` per (round, layer, dictionary) serve every member
+    /// session (DESIGN.md §10); scoring, softmax, adaptive extensions and
+    /// the recency buffer stay per-session. Other backends keep the plain
+    /// per-session attend.
     ///
     /// Parity: per session this performs the identical floating-point
     /// operations in the identical order as [`Engine::decode_step`]
-    /// (`par_matmul_kmajor` accumulates bitwise like `matmul`, and the
-    /// per-session pool shards compute disjoint state), so the returned
-    /// logits — and therefore greedy decoding — are token-for-token
-    /// identical to the sequential path at every batch size and thread
-    /// count.
+    /// (`par_matmul_kmajor` accumulates bitwise like `matmul`, each round
+    /// GEMM element is one whole canonical dot, and the per-session pool
+    /// shards compute disjoint state), so the returned logits — and
+    /// therefore greedy decoding — are token-for-token identical to the
+    /// sequential path at every batch size and thread count, with the
+    /// shared-qd path on or off.
     pub fn decode_batch(
         &self,
         tokens: &[u32],
@@ -589,6 +619,36 @@ impl Engine {
         let proj = &mut s.proj[..bsz * d];
         let ff1 = &mut s.ff1[..bsz * cfg.d_ff];
         let ff3 = &mut s.ff3[..bsz * cfg.d_ff];
+        let qg = &mut s.qg;
+        let qd_round = &mut s.qd_round;
+        let z_round = &mut s.z_round;
+
+        // Round-level shared-dictionary grouping (DESIGN.md §10): sessions
+        // whose caches score against the *same* `Arc<DictionarySet>` share
+        // one `qᵀD_k` GEMM and one value-atom streaming pass per layer —
+        // Lexico's universal dictionary makes the projection input-agnostic
+        // across sessions, so the round pays O(N·m) once instead of once
+        // per session. `slot[bi] = (group, member)` locates a session's
+        // rows inside its group's blocks; `None` keeps the plain per-cache
+        // attend fan-out (the 6 non-lexico backends).
+        let nh = cfg.n_heads;
+        let mut groups: Vec<(Arc<DictionarySet>, Vec<usize>)> = Vec::new();
+        let mut slot: Vec<Option<(usize, usize)>> = vec![None; bsz];
+        if self.round_shared_qd {
+            for bi in 0..bsz {
+                if let Some(dicts) = caches[bi].shared_dicts() {
+                    let gi = match groups.iter().position(|(dset, _)| Arc::ptr_eq(dset, &dicts)) {
+                        Some(gi) => gi,
+                        None => {
+                            groups.push((dicts, Vec::new()));
+                            groups.len() - 1
+                        }
+                    };
+                    slot[bi] = Some((gi, groups[gi].1.len()));
+                    groups[gi].1.push(bi);
+                }
+            }
+        }
 
         for (bi, &tok) in tokens.iter().enumerate() {
             x[bi * d..(bi + 1) * d].copy_from_slice(
@@ -613,17 +673,64 @@ impl Engine {
                     self.rope.apply(&mut k[bi * kvd + g * m..bi * kvd + (g + 1) * m], pos);
                 }
             }
-            // per-session cache traffic, fanned out across the pool: each
-            // session is an independent shard (its own cache, its own K/V/Q
-            // rows, its own attn row), so the per-session computation — and
-            // therefore the whole round — is bitwise identical to the
-            // sequential loop. Fork-shared CSR pages are only ever read
-            // (appends go to fork-private tails), so sibling candidates
-            // decoding in the same round stay safe.
+            // Phase 0 — round-level shared-dictionary query GEMM: for each
+            // dictionary group, gather the member sessions' query rows
+            // contiguously and project ALL of them onto the shared base key
+            // dictionary with one `par_matmul_bt` (each output element is
+            // one whole canonical dot — bitwise identical to the
+            // per-session projection loops it replaces). Per-layer block
+            // offsets, since dictionary sizes may differ by layer.
+            let mut qd_off: Vec<usize> = vec![0];
+            let mut z_off: Vec<usize> = vec![0];
+            for (dicts, members) in &groups {
+                qd_off.push(qd_off.last().unwrap() + members.len() * nh * dicts.keys[li].n);
+                z_off.push(z_off.last().unwrap() + members.len() * nh * dicts.values[li].n);
+            }
+            if !groups.is_empty() {
+                if qd_round.len() < *qd_off.last().unwrap() {
+                    qd_round.resize(*qd_off.last().unwrap(), 0.0);
+                }
+                if z_round.len() < *z_off.last().unwrap() {
+                    z_round.resize(*z_off.last().unwrap(), 0.0);
+                }
+                for (gi, (dicts, members)) in groups.iter().enumerate() {
+                    let dk = &dicts.keys[li];
+                    let rows = members.len() * nh;
+                    if qg.len() < members.len() * qd {
+                        qg.resize(members.len() * qd, 0.0);
+                    }
+                    for (mi, &bi) in members.iter().enumerate() {
+                        qg[mi * qd..(mi + 1) * qd].copy_from_slice(&q[bi * qd..(bi + 1) * qd]);
+                    }
+                    par_matmul_bt(
+                        &self.pool,
+                        &mut qd_round[qd_off[gi]..qd_off[gi + 1]],
+                        &qg[..rows * m],
+                        &dk.atoms,
+                        rows,
+                        m,
+                        dk.n,
+                    );
+                }
+            }
+            // Phase A — per-session cache traffic, fanned out across the
+            // pool: each session is an independent shard (its own cache,
+            // its own K/V/Q rows, its own attn row, its own z block), so
+            // the per-session computation — and therefore the whole round —
+            // is bitwise identical to the sequential loop. Fork-shared CSR
+            // pages are only ever read (appends go to fork-private tails),
+            // so sibling candidates decoding in the same round stay safe.
+            // Shared-dictionary sessions score + softmax against their
+            // precomputed qd rows and emit base value z-bins; the rest run
+            // their plain attend.
             {
                 let (kr, vr, qr): (&[f32], &[f32], &[f32]) = (&*k, &*v, &*q);
                 let cache_ptr = SendPtr::new(caches.as_mut_ptr());
                 let attn_ptr = SendPtr::new(attn.as_mut_ptr());
+                let z_ptr = SendPtr::new(z_round.as_mut_ptr());
+                let qd_round_r: &[f32] = qd_round;
+                let (slot_r, groups_r) = (&slot, &groups);
+                let (qd_off_r, z_off_r) = (&qd_off, &z_off);
                 self.pool.parallel_for(bsz, move |bi| {
                     // SAFETY: shard bi exclusively owns caches[bi] and
                     // attn row bi.
@@ -631,7 +738,82 @@ impl Engine {
                     let attn_row =
                         unsafe { std::slice::from_raw_parts_mut(attn_ptr.get().add(bi * qd), qd) };
                     cache.append(li, &kr[bi * kvd..(bi + 1) * kvd], &vr[bi * kvd..(bi + 1) * kvd]);
-                    cache.attend(li, &qr[bi * qd..(bi + 1) * qd], attn_row);
+                    let qrow = &qr[bi * qd..(bi + 1) * qd];
+                    match slot_r[bi] {
+                        Some((gi, mi)) => {
+                            let nk = groups_r[gi].0.keys[li].n;
+                            let nv = groups_r[gi].0.values[li].n;
+                            let qd_s = &qd_round_r
+                                [qd_off_r[gi] + mi * nh * nk..qd_off_r[gi] + (mi + 1) * nh * nk];
+                            // SAFETY: session bi exclusively owns its z block.
+                            let z_s = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    z_ptr.get().add(z_off_r[gi] + mi * nh * nv),
+                                    nh * nv,
+                                )
+                            };
+                            attn_row.fill(0.0);
+                            cache.begin_shared_attend(li, qrow, qd_s, z_s);
+                        }
+                        None => cache.attend(li, qrow, attn_row),
+                    }
+                });
+            }
+            // Phase B — one streaming pass over each group's shared value
+            // dictionary applies every member's base z-bins. Row-sharded:
+            // each shard owns whole (member, head) output rows, and within
+            // a shard atoms are visited in ascending order — per output
+            // element this is exactly the per-session atoms·z order (zero
+            // bins skipped, matching `attend`), so the result is bitwise
+            // identical at every thread count.
+            for (gi, (dicts, members)) in groups.iter().enumerate() {
+                let dv = &dicts.values[li];
+                let nv = dv.n;
+                let rows = members.len() * nh;
+                let z_g: &[f32] = &z_round[z_off[gi]..z_off[gi] + rows * nv];
+                let members_r: &[usize] = members;
+                let attn_ptr = SendPtr::new(attn.as_mut_ptr());
+                let shards = self.pool.threads().min(rows).max(1);
+                self.pool.parallel_for(shards, move |si| {
+                    let (lo, hi) = (si * rows / shards, (si + 1) * rows / shards);
+                    for n in 0..nv {
+                        let atom = &dv.atoms[n * m..(n + 1) * m];
+                        for r in lo..hi {
+                            let zn = z_g[r * nv + n];
+                            if zn != 0.0 {
+                                let bi = members_r[r / nh];
+                                let hh = r % nh;
+                                // SAFETY: shard si exclusively owns output
+                                // rows lo..hi (disjoint (bi, hh) pairs).
+                                let oh = unsafe {
+                                    std::slice::from_raw_parts_mut(
+                                        attn_ptr.get().add(bi * qd + hh * m),
+                                        m,
+                                    )
+                                };
+                                axpy(oh, zn, atom);
+                            }
+                        }
+                    }
+                });
+            }
+            // Phase C — per-session remainder: adaptive extension atoms and
+            // the recency buffer, in the same per-element order as the
+            // per-session attend.
+            if !groups.is_empty() {
+                let cache_ptr = SendPtr::new(caches.as_mut_ptr());
+                let attn_ptr = SendPtr::new(attn.as_mut_ptr());
+                let slot_r: &[Option<(usize, usize)>] = &slot;
+                self.pool.parallel_for(bsz, move |bi| {
+                    if slot_r[bi].is_some() {
+                        // SAFETY: shard bi exclusively owns caches[bi] and
+                        // attn row bi.
+                        let cache = unsafe { &mut *cache_ptr.get().add(bi) };
+                        let attn_row = unsafe {
+                            std::slice::from_raw_parts_mut(attn_ptr.get().add(bi * qd), qd)
+                        };
+                        cache.finish_shared_attend(li, attn_row);
+                    }
                 });
             }
             par_matmul_kmajor(&self.pool, proj, attn, &lw.wo, bsz, qd, d);
@@ -819,6 +1001,90 @@ pub mod tests {
             for i in 0..3 {
                 toks[i] = argmax(&bat_logits[i]) as u32;
                 poss[i] += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn round_shared_qd_decode_matches_per_session_bitwise() {
+        // The tentpole end-to-end parity: mixed backends (two plain lexico
+        // sessions sharing one Arc<DictionarySet>, one adaptive lexico on
+        // the same base dicts, one FullCache fallback) decoded with the
+        // round-level shared-qd GEMM must produce logits bitwise identical
+        // to the flag-off fan-out AND to per-session decode_step — at
+        // T ∈ {1, 2, 4}.
+        use crate::cache::lexico::{LexicoCache, LexicoConfig};
+        use crate::dict::{Dictionary, DictionarySet};
+        use crate::exec::ExecPool;
+        let prompts: [&[u32]; 4] = [&[1, 4, 7], &[2, 3, 5, 8], &[9, 9, 3], &[5, 6]];
+        for threads in [1usize, 2, 4] {
+            let pool = Arc::new(ExecPool::new(threads));
+            let mut eng_on = Engine::with_pool(tiny_weights(9), pool.clone());
+            eng_on.set_round_shared_qd(true);
+            let mut eng_off = Engine::with_pool(tiny_weights(9), pool.clone());
+            eng_off.set_round_shared_qd(false);
+            let shape = eng_on.shape();
+            let dicts = Arc::new(DictionarySet {
+                keys: (0..shape.n_layers)
+                    .map(|i| Dictionary::random(shape.head_dim, 24, 300 + i as u64))
+                    .collect(),
+                values: (0..shape.n_layers)
+                    .map(|i| Dictionary::random(shape.head_dim, 24, 400 + i as u64))
+                    .collect(),
+            });
+            let mk_set = |eng: &Engine| -> (Vec<Box<dyn crate::cache::KvCache>>, Vec<u32>, Vec<usize>) {
+                let lex = LexicoConfig { sparsity: 2, n_buffer: 4, ..Default::default() };
+                let ada = LexicoConfig {
+                    sparsity: 2,
+                    n_buffer: 4,
+                    adaptive: Some((8, 0.05)),
+                    ..Default::default()
+                };
+                let mut caches: Vec<Box<dyn crate::cache::KvCache>> = vec![
+                    Box::new(LexicoCache::new(shape, dicts.clone(), lex.clone())),
+                    Box::new(LexicoCache::new(shape, dicts.clone(), lex)),
+                    Box::new(LexicoCache::new(shape, dicts.clone(), ada)),
+                    Box::new(FullCache::new(shape)),
+                ];
+                let mut toks = Vec::new();
+                let mut poss = Vec::new();
+                for (ci, p) in prompts.iter().enumerate() {
+                    caches[ci].set_pool(pool.clone());
+                    let l = eng.prefill(p, &mut *caches[ci]);
+                    toks.push(argmax(&l) as u32);
+                    poss.push(p.len());
+                }
+                (caches, toks, poss)
+            };
+            let (mut on_caches, mut toks, mut poss) = mk_set(&eng_on);
+            let (mut off_caches, toks_b, poss_b) = mk_set(&eng_off);
+            let (mut step_caches, toks_c, poss_c) = mk_set(&eng_off);
+            assert_eq!(toks, toks_b);
+            assert_eq!(toks, toks_c);
+            assert_eq!(poss, poss_b);
+            assert_eq!(poss, poss_c);
+            for round in 0..5 {
+                let step_logits: Vec<Vec<f32>> = (0..prompts.len())
+                    .map(|i| eng_off.decode_step(toks[i], poss[i], &mut *step_caches[i]))
+                    .collect();
+                let mut on_refs: Vec<&mut dyn crate::cache::KvCache> =
+                    on_caches.iter_mut().map(|c| &mut **c).collect();
+                let on_logits = eng_on.decode_batch(&toks, &poss, &mut on_refs);
+                let mut off_refs: Vec<&mut dyn crate::cache::KvCache> =
+                    off_caches.iter_mut().map(|c| &mut **c).collect();
+                let off_logits = eng_off.decode_batch(&toks, &poss, &mut off_refs);
+                assert_eq!(
+                    on_logits, off_logits,
+                    "T={threads} round={round}: shared-qd path diverged from fan-out"
+                );
+                assert_eq!(
+                    on_logits, step_logits,
+                    "T={threads} round={round}: shared-qd path diverged from decode_step"
+                );
+                for i in 0..prompts.len() {
+                    toks[i] = argmax(&on_logits[i]) as u32;
+                    poss[i] += 1;
+                }
             }
         }
     }

@@ -857,6 +857,15 @@ impl Batcher {
     /// matrix streams once per layer per round instead of once per session
     /// (the batch-first pipeline; token-identical to per-session
     /// `decode_step` calls).
+    ///
+    /// Inside that call the engine also batches the *dictionary* work:
+    /// sessions whose caches share an `Arc<DictionarySet>` get their
+    /// qᵀD_k projection computed in one per-layer GEMM and their base
+    /// value reconstruction in one shared per-atom pass (the round-level
+    /// shared-qd path). The batcher needs no awareness of this — the
+    /// grouping happens per round over whatever mix of backends the
+    /// admission policy produced, and is bitwise-identical to the
+    /// per-session path.
     pub fn decode_round(&mut self) -> usize {
         let mut retire = Vec::new();
         let mut streamed = 0u64;
@@ -1129,6 +1138,47 @@ mod tests {
         let m = metrics.lock().unwrap();
         assert_eq!(m.completed, 4);
         assert!(m.tokens_generated >= 4);
+    }
+
+    #[test]
+    fn served_streams_identical_with_round_shared_qd_on_and_off() {
+        // The round-level shared-qd path must be invisible at the serving
+        // layer: same mixed-method requests, same continuations, whether
+        // the engine groups shared-dictionary caches per round or falls
+        // back to per-session attend.
+        let serve = |shared_qd: bool| -> Vec<String> {
+            let mut engine = Engine::new(tiny_weights(13));
+            engine.set_round_shared_qd(shared_qd);
+            let engine = Arc::new(engine);
+            let dicts = Some(tiny_dicts(engine.shape(), 64));
+            let cfg = BatcherConfig {
+                default_method: "lexico:s=2,nb=8".into(),
+                prefix_entries: 0,
+                ..Default::default()
+            };
+            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            let mut b = Batcher::new(engine, dicts, cfg, metrics);
+            // mix lexico sessions (shared-qd eligible) with a full-cache
+            // session (fallback) in the same rounds
+            let specs: [(&str, &str); 4] =
+                [("1+2=", ""), ("9*9=", "full"), ("a=3;b=a+4;b?", ""), ("5-2=", "")];
+            let mut replies = Vec::new();
+            for (i, (p, method)) in specs.iter().enumerate() {
+                let (job, rrx) = job_with(Request::greedy(i as u64, *p, 6, *method));
+                b.enqueue(job);
+                replies.push(rrx);
+            }
+            run_to_completion(&mut b, 300);
+            replies
+                .into_iter()
+                .map(|r| {
+                    let resp = r.recv_timeout(Duration::from_secs(30)).unwrap();
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    resp.text
+                })
+                .collect()
+        };
+        assert_eq!(serve(true), serve(false));
     }
 
     #[test]

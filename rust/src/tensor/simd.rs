@@ -23,16 +23,38 @@
 //! The property tests below enforce bit-equality of every available
 //! kernel against the blocked scalar on all lane remainders.
 //!
+//! # Dispatch tiers
+//!
+//! | tier      | kernels                                   | contract |
+//! |-----------|-------------------------------------------|----------|
+//! | canonical | `scalar`, `sse2`, `avx2`, `neon`          | bitwise identical to [`dot_blocked`]/[`axpy_blocked`]; mul-then-add, FMA forbidden |
+//! | fast-math | `fast-scalar`, `fma`, `avx512-fma`, `neon-fma` | bitwise identical to [`dot_fast_blocked`]/[`axpy_fast_blocked`] (fused canonical order); within ~1 ulp per operation of the canonical tier, pinned by tolerance goldens |
+//!
+//! The **fast-math tier** is opt-in (`--fast-math` on the CLI, or
+//! `LEXICO_FAST_MATH=1`/`LEXICO_FAST_MATH=<kernel>` in the environment)
+//! and trades the cross-tier bitwise contract for fused multiply-adds —
+//! one rounding per lane step instead of two, which both sharpens and
+//! speeds up the reduction (FMA ports on x86, `vfmaq` on NEON). The tier
+//! keeps its *own* canonical order: every fast kernel performs the same
+//! correctly-rounded `mul_add` per lane in the same blocked/tree shape,
+//! so results within the tier are still bitwise reproducible across
+//! hosts, thread counts and instruction sets — only comparisons *across*
+//! tiers are relaxed, and those are pinned by tolerance goldens (kernel
+//! ulp bounds + an end-to-end max |Δlogit| bound) instead of exact
+//! snapshots.
+//!
 //! Dispatch is resolved once per process: `LEXICO_SIMD`
-//! (`scalar|sse2|avx2|neon`) forces a kernel when that kernel is
-//! available on the host, otherwise the best detected instruction set
+//! (`scalar|sse2|avx2|neon`) forces a canonical kernel when available on
+//! the host; `LEXICO_FAST_MATH` (truthy, or a fast-kernel name) opts into
+//! the fast tier. Otherwise the best detected canonical instruction set
 //! wins (AVX2 → SSE2 on x86_64, NEON on aarch64, blocked scalar
 //! elsewhere).
 
 use std::sync::OnceLock;
 
-/// One dot/axpy implementation pair. All pairs compute bitwise-identical
-/// results; they differ only in speed.
+/// One dot/axpy implementation pair. All pairs within a tier compute
+/// bitwise-identical results; they differ only in speed. Across tiers
+/// (canonical vs fast-math) results agree to tolerance, not bits.
 #[derive(Clone, Copy)]
 pub struct Kernels {
     pub name: &'static str,
@@ -85,6 +107,56 @@ pub fn axpy_blocked(y: &mut [f32], alpha: f32, x: &[f32]) {
 }
 
 const SCALAR: Kernels = Kernels { name: "scalar", dot: dot_blocked, axpy: axpy_blocked };
+
+// ---------------------------------------------------------------------------
+// Fast-math tier: fused canonical order (opt-in, see module doc)
+// ---------------------------------------------------------------------------
+
+/// Blocked-scalar fused `dot` — the reference for the fast-math tier.
+///
+/// Same blocked/tree shape as [`dot_blocked`], but each lane step is one
+/// correctly-rounded `f32::mul_add` instead of mul-then-add, and the tail
+/// is fused too. Every fast-tier vector kernel must match this bit for
+/// bit (hardware FMA and `mul_add` are both correctly rounded, so they
+/// agree exactly); it matches the canonical tier only to tolerance.
+pub fn dot_fast_blocked(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] = a[i + l].mul_add(b[i + l], acc[l]);
+        }
+    }
+    let mut s = lane_tree8(&acc);
+    for i in chunks * 8..n {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
+}
+
+/// Blocked-scalar fused `axpy` — `y[i] = alpha.mul_add(x[i], y[i])`.
+/// Element-independent, so vector width carries no numeric meaning; the
+/// only contract is one fused rounding per element.
+pub fn axpy_fast_blocked(y: &mut [f32], alpha: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        let yc = &mut y[i..i + 8];
+        let xc = &x[i..i + 8];
+        for l in 0..8 {
+            yc[l] = alpha.mul_add(xc[l], yc[l]);
+        }
+    }
+    for i in chunks * 8..n {
+        y[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+const FAST_SCALAR: Kernels =
+    Kernels { name: "fast-scalar", dot: dot_fast_blocked, axpy: axpy_fast_blocked };
 
 // ---------------------------------------------------------------------------
 // x86_64: SSE2 (baseline, always present) and AVX2 (detected)
@@ -214,6 +286,103 @@ const SSE2: Kernels = Kernels { name: "sse2", dot: dot_sse2, axpy: axpy_sse2 };
 #[cfg(target_arch = "x86_64")]
 const AVX2: Kernels = Kernels { name: "avx2", dot: dot_avx2, axpy: axpy_avx2 };
 
+#[cfg(target_arch = "x86_64")]
+mod x86_fast {
+    use super::lane_tree8;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available (checked at dispatch).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 8;
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            // vfmadd231ps: per-lane identical to the scalar mul_add
+            acc = _mm256_fmadd_ps(va, vb, acc);
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = lane_tree8(&lanes);
+        for i in chunks * 8..n {
+            s = a[i].mul_add(b[i], s);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available (checked at dispatch).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_fma(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let chunks = n / 8;
+        let va = _mm256_set1_ps(alpha);
+        for c in 0..chunks {
+            let i = c * 8;
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+        }
+        for i in chunks * 8..n {
+            y[i] = alpha.mul_add(x[i], y[i]);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: only reachable through dispatch/tests after avx2+fma detection.
+    unsafe { x86_fast::dot_fma(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_fma(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: only reachable through dispatch/tests after avx2+fma detection.
+    unsafe { x86_fast::axpy_fma(y, alpha, x) }
+}
+
+#[cfg(target_arch = "x86_64")]
+const FMA: Kernels = Kernels { name: "fma", dot: dot_fma, axpy: axpy_fma };
+
+// AVX-512 variant: compile-time gated (target-cpu=native on an avx512f
+// host, as in the CI test-native job). The loops below stay in safe code
+// and autovectorize to 16-wide zmm FMAs; the numeric result is defined
+// by the per-lane mul_adds and the lane_tree8 combine, not by the vector
+// width the compiler picks, so it remains bitwise within the fast tier.
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+fn dot_avx512_fma(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        for l in 0..8 {
+            acc[l] = a[i + l].mul_add(b[i + l], acc[l]);
+        }
+    }
+    let mut s = lane_tree8(&acc);
+    for i in chunks * 8..n {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
+}
+
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+fn axpy_avx512_fma(y: &mut [f32], alpha: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    for i in 0..n {
+        y[i] = alpha.mul_add(x[i], y[i]);
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+const AVX512_FMA: Kernels =
+    Kernels { name: "avx512-fma", dot: dot_avx512_fma, axpy: axpy_avx512_fma };
+
 // ---------------------------------------------------------------------------
 // aarch64: NEON (baseline, always present)
 // ---------------------------------------------------------------------------
@@ -286,6 +455,73 @@ fn axpy_neon(y: &mut [f32], alpha: f32, x: &[f32]) {
 #[cfg(target_arch = "aarch64")]
 const NEON: Kernels = Kernels { name: "neon", dot: dot_neon, axpy: axpy_neon };
 
+#[cfg(target_arch = "aarch64")]
+mod arm_fast {
+    use super::lane_tree8;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must ensure NEON is available (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon_fma(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let i = c * 8;
+            // vfmaq: per-lane identical to the scalar mul_add
+            acc_lo = vfmaq_f32(acc_lo, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            acc_hi = vfmaq_f32(
+                acc_hi,
+                vld1q_f32(a.as_ptr().add(i + 4)),
+                vld1q_f32(b.as_ptr().add(i + 4)),
+            );
+        }
+        let mut lanes = [0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut s = lane_tree8(&lanes);
+        for i in chunks * 8..n {
+            s = a[i].mul_add(b[i], s);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON is available (baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon_fma(y: &mut [f32], alpha: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let chunks = n / 4;
+        let va = vdupq_n_f32(alpha);
+        for c in 0..chunks {
+            let i = c * 4;
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vfmaq_f32(vy, va, vx));
+        }
+        for i in chunks * 4..n {
+            y[i] = alpha.mul_add(x[i], y[i]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn dot_neon_fma(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { arm_fast::dot_neon_fma(a, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon_fma(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: NEON is part of the aarch64 baseline.
+    unsafe { arm_fast::axpy_neon_fma(y, alpha, x) }
+}
+
+#[cfg(target_arch = "aarch64")]
+const NEON_FMA: Kernels = Kernels { name: "neon-fma", dot: dot_neon_fma, axpy: axpy_neon_fma };
+
 // ---------------------------------------------------------------------------
 // Dispatch
 // ---------------------------------------------------------------------------
@@ -307,15 +543,65 @@ pub fn available() -> Vec<Kernels> {
     v
 }
 
+/// Every fast-math kernel usable on this host, best first. The fused
+/// blocked scalar is always present and always last. All entries compute
+/// bitwise-identical results *within this tier* (see module doc).
+pub fn fast_available() -> Vec<Kernels> {
+    let mut v = Vec::new();
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+    v.push(AVX512_FMA);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            v.push(FMA);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(NEON_FMA);
+    v.push(FAST_SCALAR);
+    v
+}
+
+/// Whether the process has opted into the fast-math tier: `--fast-math`
+/// on the CLI (which sets the env var before dispatch) or any
+/// `LEXICO_FAST_MATH` value other than empty/`0`.
+pub fn fast_math_requested() -> bool {
+    match std::env::var("LEXICO_FAST_MATH") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => false,
+    }
+}
+
 fn select() -> Kernels {
+    let forced = std::env::var("LEXICO_SIMD").ok();
+    let want = forced.as_deref().map(str::trim).filter(|w| !w.is_empty());
+    if fast_math_requested() {
+        let fast = fast_available();
+        // LEXICO_SIMD may name a fast kernel to pin one explicitly; a
+        // canonical name under the fast-math flag is a contradiction we
+        // resolve in favor of the explicit flag, with a warning.
+        if let Some(w) = want {
+            if let Some(k) = fast.iter().find(|k| k.name == w) {
+                return *k;
+            }
+            eprintln!(
+                "warning: LEXICO_SIMD={w} is not a fast-math kernel (have: {}); \
+                 LEXICO_FAST_MATH is set, auto-selecting from the fast tier",
+                fast.iter().map(|k| k.name).collect::<Vec<_>>().join(",")
+            );
+        }
+        return fast[0];
+    }
     let avail = available();
-    if let Ok(forced) = std::env::var("LEXICO_SIMD") {
-        let want = forced.trim();
-        if let Some(k) = avail.iter().find(|k| k.name == want) {
+    if let Some(w) = want {
+        if let Some(k) = avail.iter().find(|k| k.name == w) {
             return *k;
         }
         eprintln!(
-            "warning: LEXICO_SIMD={want} not available on this host (have: {}); auto-selecting",
+            "warning: LEXICO_SIMD={w} not available on this host (have: {}); auto-selecting",
             avail.iter().map(|k| k.name).collect::<Vec<_>>().join(",")
         );
     }
@@ -379,6 +665,121 @@ mod tests {
     }
 
     #[test]
+    fn every_fast_kernel_matches_fast_blocked_scalar_bitwise() {
+        // The fast tier has its own canonical order (fused lane steps);
+        // every fast kernel must reproduce dot_fast_blocked/axpy_fast_blocked
+        // bit for bit — hardware FMA and f32::mul_add are both correctly
+        // rounded, so exact agreement is the contract, not an aspiration.
+        let mut rng = Rng::new(0xFA57);
+        for kern in fast_available() {
+            for &n in &probe_lengths() {
+                for rep in 0..4 {
+                    let a = rng.normal_vec(n);
+                    let b = rng.normal_vec(n);
+                    let want = dot_fast_blocked(&a, &b);
+                    let got = (kern.dot)(&a, &b);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{} dot diverged at n={n} rep={rep}: {got} vs {want}",
+                        kern.name
+                    );
+                    let alpha = if rep == 3 { 0.0 } else { rng.range_f32(-2.0, 2.0) };
+                    let y0 = rng.normal_vec(n);
+                    let mut y_want = y0.clone();
+                    let mut y_got = y0;
+                    axpy_fast_blocked(&mut y_want, alpha, &b);
+                    (kern.axpy)(&mut y_got, alpha, &b);
+                    for i in 0..n {
+                        assert_eq!(
+                            y_got[i].to_bits(),
+                            y_want[i].to_bits(),
+                            "{} axpy diverged at n={n} i={i} alpha={alpha}",
+                            kern.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_tier_matches_canonical_within_tolerance() {
+        // Cross-tier contract: fused vs mul-then-add differ by at most one
+        // rounding per lane step, so |fast - canonical| is bounded by a few
+        // ulps of the magnitude sum Σ|a_i·b_i| (the worst case when terms
+        // cancel). Pin that bound so a fast kernel that silently reorders
+        // the reduction (not just fuses it) fails loudly.
+        let mut rng = Rng::new(0x70E5);
+        for &n in &probe_lengths() {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let want = dot_blocked(&a, &b);
+            let got = dot_fast_blocked(&a, &b);
+            let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            let tol = (mag * 2e-6).max(1e-6);
+            assert!(
+                (got - want).abs() <= tol,
+                "fast dot drifted past tolerance at n={n}: {got} vs {want} (tol {tol})"
+            );
+            let y0 = rng.normal_vec(n);
+            let alpha = rng.range_f32(-2.0, 2.0);
+            let mut y_want = y0.clone();
+            let mut y_fast = y0;
+            axpy_blocked(&mut y_want, alpha, &b);
+            axpy_fast_blocked(&mut y_fast, alpha, &b);
+            for i in 0..n {
+                let tol = ((alpha * b[i]).abs() * 2e-6).max(1e-6);
+                assert!(
+                    (y_fast[i] - y_want[i]).abs() <= tol,
+                    "fast axpy drifted past tolerance at n={n} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_tier_attention_readout_tolerance_golden() {
+        // End-to-end tolerance golden for the fast tier on the shape that
+        // matters: compressed-attention readout (scores → softmax → axpy
+        // accumulate → logit dots). Bounds max |Δlogit| between canonical
+        // and every fast kernel, pinning the tier's user-visible drift.
+        let mut rng = Rng::new(0x10617);
+        let (m, n_tok, n_logit) = (64usize, 96usize, 32usize);
+        let q = rng.normal_vec(m);
+        let keys: Vec<Vec<f32>> = (0..n_tok).map(|_| rng.normal_vec(m)).collect();
+        let vals: Vec<Vec<f32>> = (0..n_tok).map(|_| rng.normal_vec(m)).collect();
+        let heads: Vec<Vec<f32>> = (0..n_logit).map(|_| rng.normal_vec(m)).collect();
+        let readout = |kern: &Kernels| -> Vec<f32> {
+            let mut scores: Vec<f32> = keys.iter().map(|k| (kern.dot)(&q, k)).collect();
+            let scale = 1.0 / (m as f32).sqrt();
+            for s in &mut scores {
+                *s *= scale;
+            }
+            crate::tensor::softmax(&mut scores);
+            let mut o = vec![0f32; m];
+            for (w, v) in scores.iter().zip(&vals) {
+                (kern.axpy)(&mut o, *w, v);
+            }
+            heads.iter().map(|h| (kern.dot)(&o, h)).collect()
+        };
+        let want = readout(&SCALAR);
+        for kern in fast_available() {
+            let got = readout(&kern);
+            let max_dlogit = got
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0f32, f32::max);
+            assert!(
+                max_dlogit < 1e-4,
+                "{}: max |Δlogit| = {max_dlogit} exceeds the fast-math golden bound",
+                kern.name
+            );
+        }
+    }
+
+    #[test]
     fn kernels_tolerate_mismatched_slice_lengths() {
         // dot/axpy contract: operate on the shorter length (callers rely on
         // this for strided views).
@@ -389,6 +790,14 @@ mod tests {
             let mut y1 = vec![1.0f32; 11];
             let mut y2 = y1.clone();
             axpy_blocked(&mut y1, 0.5, &a);
+            (kern.axpy)(&mut y2, 0.5, &a);
+            assert_eq!(y1, y2, "{}", kern.name);
+        }
+        for kern in fast_available() {
+            assert_eq!((kern.dot)(&a, &b), dot_fast_blocked(&a, &b), "{}", kern.name);
+            let mut y1 = vec![1.0f32; 11];
+            let mut y2 = y1.clone();
+            axpy_fast_blocked(&mut y1, 0.5, &a);
             (kern.axpy)(&mut y2, 0.5, &a);
             assert_eq!(y1, y2, "{}", kern.name);
         }
@@ -408,17 +817,24 @@ mod tests {
 
     #[test]
     fn active_is_one_of_available() {
+        // Dispatch is frozen per process, so respect whichever tier the
+        // environment selected: the active kernel must come from that
+        // tier's list and reproduce that tier's reference bit for bit.
         let a = active();
-        assert!(available().iter().any(|k| k.name == a.name), "{}", a.name);
-        // and it computes the canonical result
         let x = vec![0.25f32; 37];
         let y = vec![-1.5f32; 37];
-        assert_eq!((a.dot)(&x, &y).to_bits(), dot_blocked(&x, &y).to_bits());
+        if fast_math_requested() {
+            assert!(fast_available().iter().any(|k| k.name == a.name), "{}", a.name);
+            assert_eq!((a.dot)(&x, &y).to_bits(), dot_fast_blocked(&x, &y).to_bits());
+        } else {
+            assert!(available().iter().any(|k| k.name == a.name), "{}", a.name);
+            assert_eq!((a.dot)(&x, &y).to_bits(), dot_blocked(&x, &y).to_bits());
+        }
     }
 
     #[test]
     fn empty_and_tiny_inputs() {
-        for kern in available() {
+        for kern in available().into_iter().chain(fast_available()) {
             assert_eq!((kern.dot)(&[], &[]), 0.0, "{}", kern.name);
             assert_eq!((kern.dot)(&[2.0], &[3.0]), 6.0, "{}", kern.name);
             let mut y: [f32; 0] = [];

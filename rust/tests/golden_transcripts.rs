@@ -110,14 +110,30 @@ fn snap_path(suffix: &str) -> PathBuf {
 
 #[test]
 fn golden_transcripts_pin_greedy_decode_streams() {
-    let mut current = String::new();
-    for (size, engine) in engines() {
-        let ctx = ctx_for(&engine);
-        for spec in SPECS {
-            let stream = cold_stream(&engine, &ctx, spec, N_DECODE);
-            let toks: Vec<String> = stream.iter().map(u32::to_string).collect();
-            current.push_str(&format!("{size}/{spec}: {}\n", toks.join(" ")));
+    let render = || {
+        let mut current = String::new();
+        for (size, engine) in engines() {
+            let ctx = ctx_for(&engine);
+            for spec in SPECS {
+                let stream = cold_stream(&engine, &ctx, spec, N_DECODE);
+                let toks: Vec<String> = stream.iter().map(u32::to_string).collect();
+                current.push_str(&format!("{size}/{spec}: {}\n", toks.join(" ")));
+            }
         }
+        current
+    };
+    let current = render();
+    if lexico::tensor::simd::fast_math_requested() {
+        // The snapshot pins the *canonical* tier; fast-math is excluded
+        // from the bitwise contract (it's pinned by tolerance goldens in
+        // tensor::simd instead). Still assert the fast tier is internally
+        // deterministic: record ≡ replay within this process.
+        assert_eq!(current, render(), "fast-math decode streams are not reproducible");
+        eprintln!(
+            "LEXICO_FAST_MATH set: skipping canonical snapshot compare \
+             (fast tier verified record ≡ replay instead)"
+        );
+        return;
     }
     let path = snap_path(".snap");
     match std::fs::read_to_string(&path) {
