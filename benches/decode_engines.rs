@@ -12,7 +12,11 @@
 //! shared-dictionary round sweep: per-session attend vs the round-level
 //! shared-qd protocol (one qᵀD GEMM + one value pass for all sessions)
 //! vs the same under the fast-math kernel tier, across session count B
-//! and atom count N, emitting `BENCH_PR6.json`.
+//! and atom count N, emitting `BENCH_PR6.json` — and the PR 7 tiered-
+//! residency sweep: spill/fault throughput through the page store, the
+//! first-touch attend penalty after a spill (lazy faulting), and resident
+//! decode cost while half the fleet is hibernated on disk, emitting
+//! `BENCH_PR7.json`.
 //!
 //!   cargo bench --bench decode_engines [-- --threads N] [-- --smoke]
 //!
@@ -31,6 +35,7 @@ use lexico::dict::{Dictionary, DictionarySet};
 use lexico::exec::ExecPool;
 use lexico::model::{Engine, Weights};
 use lexico::sparse::CsrRow;
+use lexico::store::SpillStore;
 use lexico::tasks;
 use lexico::tensor::{axpy, par_matmul_bt, softmax};
 use lexico::util::rng::Rng;
@@ -718,6 +723,164 @@ fn shared_qd_round_sweep(smoke: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fill one Lexico cache to `t_tokens` through the real append path (same
+/// shape and config as the PR 4 sweep) and attach it to `store`.
+fn pr7_filled_cache(store: &Arc<SpillStore>, t_tokens: usize) -> LexicoCache {
+    let shape = PR6_SHAPE;
+    let cfg = LexicoConfig { sparsity: 8, n_buffer: 32, ..Default::default() };
+    let dicts = pr6_dicts(512);
+    let mut cache = LexicoCache::new(shape, dicts, cfg);
+    cache.set_pool(Arc::new(ExecPool::new(1)));
+    cache.set_spill_store(store.clone());
+    let mut rng = Rng::new(23);
+    let kvd = shape.kv_dim();
+    let mut done = 0usize;
+    while done < t_tokens {
+        let chunk = 512.min(t_tokens - done);
+        let ks = rng.normal_vec(chunk * kvd);
+        let vs = rng.normal_vec(chunk * kvd);
+        cache.append_batch(0, &ks, &vs, chunk);
+        done += chunk;
+    }
+    cache
+}
+
+/// PR 7 tiered-residency sweep (artifact-free): sealed pages round-trip
+/// through the append-only page store. Measures spill and fault throughput
+/// (MB of resident KV state moved per second), per-page fault latency, the
+/// first-touch attend penalty after a full spill (pages fault lazily inside
+/// attend), and the resident fleet's attend cost while half its sessions
+/// are hibernated on disk. Emits `BENCH_PR7.json`; its `gate` object feeds
+/// `benches/compare.rs` against `benches/baseline_pr7.json`.
+fn spill_residency_sweep(smoke: bool) -> anyhow::Result<()> {
+    let sizes: &[usize] = if smoke { &[1536] } else { &[2048, 8192] };
+    let rounds = if smoke { 8 } else { 20 };
+    let dir = std::env::temp_dir().join(format!("lexico_pr7_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "PR7 tiered KV residency (s=8, N=512, m={}, kv_heads={}):\n",
+        PR6_SHAPE.head_dim, PR6_SHAPE.n_kv_heads
+    );
+    let mut entries = Vec::new();
+    let mut gate_spill = f64::NAN;
+    let mut gate_fault = f64::NAN;
+    for (si, &t_tokens) in sizes.iter().enumerate() {
+        let size_dir = dir.join(format!("sz{si}"));
+        let store = Arc::new(SpillStore::open(&size_dir).map_err(anyhow::Error::msg)?);
+        let mut cache = pr7_filled_cache(&store, t_tokens);
+        // spill ⇄ fault round trips: every sealed page through the page
+        // file and back, `rounds` times (the file is append-only, so disk
+        // usage grows; the ref the cache holds always points at its latest
+        // copy)
+        let (mut spill_s, mut fault_s) = (0.0f64, 0.0f64);
+        let (mut moved, mut pages) = (0.0f64, 0usize);
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            let (n, bytes) = cache.spill_cold().map_err(anyhow::Error::msg)?;
+            spill_s += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let (nf, _) = cache.fault_resident().map_err(anyhow::Error::msg)?;
+            fault_s += t0.elapsed().as_secs_f64();
+            assert_eq!(n, nf, "every spilled page must fault back");
+            moved += bytes;
+            pages += n;
+        }
+        let spill_mb_s = moved / 1e6 / spill_s.max(1e-9);
+        let fault_mb_s = moved / 1e6 / fault_s.max(1e-9);
+        let fault_us_page = fault_s * 1e6 / (pages as f64).max(1.0);
+        // first-touch attend after a full spill: attend faults the pages it
+        // needs lazily, so one call pays the whole wake-up
+        let mut rng = Rng::new(31);
+        let q = rng.normal_vec(PR6_SHAPE.q_dim());
+        let mut out = vec![0.0; PR6_SHAPE.q_dim()];
+        let mut cold_s = 0.0f64;
+        for _ in 0..rounds {
+            let _ = cache.spill_cold().map_err(anyhow::Error::msg)?;
+            let t0 = Instant::now();
+            cache.attend(0, &q, &mut out);
+            cold_s += t0.elapsed().as_secs_f64();
+        }
+        let cold_ms = cold_s * 1e3 / rounds as f64;
+        let warm = bench_ms(3, 4 * rounds, || cache.attend(0, &q, &mut out));
+        if gate_spill.is_nan() {
+            gate_spill = spill_mb_s;
+            gate_fault = fault_mb_s;
+        }
+        println!(
+            "T={t_tokens:<6} spill {spill_mb_s:>8.1} MB/s  fault {fault_mb_s:>8.1} MB/s \
+             ({fault_us_page:>6.1} µs/page)  first-touch attend {cold_ms:>8.4} ms  \
+             warm {:>8.4} ms",
+            warm.mean
+        );
+        entries.push(format!(
+            "    {{\"tokens\": {t_tokens}, \"pages_per_round\": {}, \
+             \"spill_mb_per_s\": {spill_mb_s:.1}, \"fault_mb_per_s\": {fault_mb_s:.1}, \
+             \"fault_us_per_page\": {fault_us_page:.2}, \
+             \"cold_first_attend_ms\": {cold_ms:.6}, \"warm_attend_ms\": {:.6}}}",
+            pages / rounds,
+            warm.mean
+        ));
+    }
+    // half-hibernated fleet: 8 forked sessions sharing one prefilled
+    // prototype; 4 spill to disk, the resident 4 keep decoding. Their
+    // attend cost must not move — hibernated neighbours cost disk, not time.
+    let fleet_t = sizes[0];
+    let store = Arc::new(SpillStore::open(&dir.join("fleet")).map_err(anyhow::Error::msg)?);
+    let proto = pr7_filled_cache(&store, fleet_t);
+    let mut fleet: Vec<Box<dyn KvCache>> = (0..7).map(|_| proto.fork()).collect();
+    fleet.push(Box::new(proto));
+    let mut rng = Rng::new(37);
+    let q = rng.normal_vec(PR6_SHAPE.q_dim());
+    let mut out = vec![0.0; PR6_SHAPE.q_dim()];
+    let all_resident = bench_ms(3, 2 * rounds, || {
+        for c in fleet.iter_mut().take(4) {
+            c.attend(0, &q, &mut out);
+        }
+    });
+    let mut freed = 0.0f64;
+    for c in fleet.iter_mut().skip(4) {
+        let (_, bytes) = c.spill_cold().map_err(anyhow::Error::msg)?;
+        freed += bytes;
+    }
+    let half_spilled = bench_ms(3, 2 * rounds, || {
+        for c in fleet.iter_mut().take(4) {
+            c.attend(0, &q, &mut out);
+        }
+    });
+    let ns_tok = |mean_ms: f64| mean_ms * 1e6 / (4 * fleet_t) as f64;
+    println!(
+        "\nfleet of 8 @ T={fleet_t}: resident-4 attend {:.1} ns/tok all-resident, \
+         {:.1} ns/tok with 4 sessions hibernated ({:.1} KiB freed to disk)\n",
+        ns_tok(all_resident.mean),
+        ns_tok(half_spilled.mean),
+        freed / 1024.0
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"pr7_tiered_residency\",\n  \"smoke\": {smoke},\n  \
+         \"config\": {{\"sparsity\": 8, \"n_buffer\": 32, \"n_atoms\": 512, \"head_dim\": {}, \
+         \"n_kv_heads\": {}, \"rounds\": {rounds}}},\n  \
+         \"gate\": {{\n    \"spill_mb_per_s\": {gate_spill:.1},\n    \
+         \"fault_mb_per_s\": {gate_fault:.1}\n  }},\n  \
+         \"fleet\": {{\"sessions\": 8, \"hibernated\": 4, \"tokens\": {fleet_t}, \
+         \"all_resident_attend_ns_per_token\": {:.2}, \
+         \"half_hibernated_attend_ns_per_token\": {:.2}, \"freed_bytes\": {freed:.0}}},\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        PR6_SHAPE.head_dim,
+        PR6_SHAPE.n_kv_heads,
+        ns_tok(all_resident.mean),
+        ns_tok(half_spilled.mean),
+        entries.join(",\n")
+    );
+    let out_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_PR7.json"))
+        .unwrap_or_else(|| "BENCH_PR7.json".into());
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}\n", out_path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     // --threads N (or --threads=N) sizes the default pool for the backend
     // comparison sections; the scaling sweep below builds its own pools.
@@ -737,12 +900,13 @@ fn main() -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--pr6-child needs an output path"))?;
         return pr6_child(out, smoke);
     }
-    // The PR 4, PR 5 and PR 6 sweeps are artifact-free: they always run
-    // (reduced under --smoke, which then skips the artifact-bound
-    // sections — CI's bench smoke + perf-gate steps).
+    // The PR 4–7 sweeps are artifact-free: they always run (reduced under
+    // --smoke, which then skips the artifact-bound sections — CI's bench
+    // smoke + perf-gate steps).
     let attend_ns = longcontext_attend_sweep(smoke)?;
     serving_round_sweep(smoke, attend_ns)?;
     shared_qd_round_sweep(smoke)?;
+    spill_residency_sweep(smoke)?;
     if smoke {
         return Ok(());
     }

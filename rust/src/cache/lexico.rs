@@ -30,8 +30,14 @@ use crate::exec::{self, ExecPool, SendPtr};
 use crate::omp::{omp_encode, omp_encode_batch, BatchOmpWorkspace, OmpWorkspace, SparseCode};
 use crate::sparse::memory::csr_row_bytes;
 use crate::sparse::{CoefPrecision, CsrRow, CsrSlab};
+use crate::store::{self, wire, PageRef, SpillStore};
 use crate::tensor::{axpy, dot, softmax};
 use std::sync::Arc;
+
+/// Session-snapshot magic (`"LXSS"`) / version for
+/// [`KvCache::hibernate_state`] blobs.
+const SNAP_MAGIC: u32 = 0x4c58_5353;
+const SNAP_VERSION: u16 = 1;
 
 /// Lexico knobs (paper defaults in comments).
 #[derive(Clone, Debug)]
@@ -111,10 +117,52 @@ impl CsrPage {
     }
 }
 
+/// Residency state of one sealed page (DESIGN.md §11). The slot keeps its
+/// position in `HeadState::pages` through every transition, so the pure
+/// `t / PAGE_TOKENS` index math of `k_slab_at` is residency-independent.
+///
+/// Transitions: `Resident → Mirrored` (page written to the spill store's
+/// append-only file, RAM copy kept — hibernation persists without losing
+/// residency), `Mirrored → Spilled` (eviction: drop the `Arc`, zero I/O —
+/// the disk copy already exists), `Spilled → Mirrored` (fault). A page is
+/// written to disk at most once per session lifetime; refs stay valid
+/// across process restarts.
+#[derive(Clone)]
+enum PageSlot {
+    /// in RAM only
+    Resident(Arc<CsrPage>),
+    /// in RAM *and* on disk at `at` (disk copy may be cold-recompressed)
+    Mirrored { page: Arc<CsrPage>, at: PageRef },
+    /// on disk only; `bytes` = resident bytes this slot frees while evicted
+    Spilled { at: PageRef, bytes: f64 },
+}
+
+impl PageSlot {
+    /// The resident page. Scoring paths only run after
+    /// `LexicoCache::ensure_resident`, so a spilled slot here is a protocol
+    /// violation, not an I/O condition.
+    #[inline]
+    fn page(&self) -> &Arc<CsrPage> {
+        match self {
+            PageSlot::Resident(p) | PageSlot::Mirrored { page: p, .. } => p,
+            PageSlot::Spilled { .. } => {
+                panic!("lexico: sealed page accessed while spilled (fault before scoring)")
+            }
+        }
+    }
+
+    fn resident(&self) -> Option<&Arc<CsrPage>> {
+        match self {
+            PageSlot::Resident(p) | PageSlot::Mirrored { page: p, .. } => Some(p),
+            PageSlot::Spilled { .. } => None,
+        }
+    }
+}
+
 /// Per-(layer, kv-head) state.
 struct HeadState {
     /// sealed compressed pages, oldest first — shared across forks
-    pages: Vec<Arc<CsrPage>>,
+    pages: Vec<PageSlot>,
     /// unsealed compressed rows (< PAGE_TOKENS of them) — fork-private
     tail_k: CsrSlab,
     tail_v: CsrSlab,
@@ -147,19 +195,22 @@ impl HeadState {
         self.tail_v.push_f32(v_idx, v_val);
         self.n_csr += 1;
         if self.tail_k.rows() >= PAGE_TOKENS {
-            self.pages
-                .push(Arc::new(CsrPage { k: self.tail_k.take(), v: self.tail_v.take() }));
+            self.pages.push(PageSlot::Resident(Arc::new(CsrPage {
+                k: self.tail_k.take(),
+                v: self.tail_v.take(),
+            })));
         }
     }
 
     /// Compressed K slabs in token order (pages, then the unsealed tail).
+    /// Requires every page resident (the attend entry points fault first).
     fn k_slabs(&self) -> impl Iterator<Item = &CsrSlab> {
-        self.pages.iter().map(|p| &p.k).chain(std::iter::once(&self.tail_k))
+        self.pages.iter().map(|p| &p.page().k).chain(std::iter::once(&self.tail_k))
     }
 
     /// Compressed V slabs in token order.
     fn v_slabs(&self) -> impl Iterator<Item = &CsrSlab> {
-        self.pages.iter().map(|p| &p.v).chain(std::iter::once(&self.tail_v))
+        self.pages.iter().map(|p| &p.page().v).chain(std::iter::once(&self.tail_v))
     }
 
     /// The K slab holding compressed token `t`, plus `t`'s row within it.
@@ -168,7 +219,7 @@ impl HeadState {
     fn k_slab_at(&self, t: usize) -> (&CsrSlab, usize) {
         let p = t / PAGE_TOKENS;
         if p < self.pages.len() {
-            (&self.pages[p].k, t % PAGE_TOKENS)
+            (&self.pages[p].page().k, t % PAGE_TOKENS)
         } else {
             (&self.tail_k, t - self.pages.len() * PAGE_TOKENS)
         }
@@ -287,10 +338,15 @@ pub struct LexicoCache {
     /// shard threshold for the compressed score sweep (the constant;
     /// overridable in tests to exercise sharding on small contexts)
     par_score_min: usize,
-    /// running byte count of every stored CSR row (incremental `mem_bytes`)
+    /// running byte count of every RESIDENT stored CSR row (incremental
+    /// `mem_bytes`; spilled pages move their bytes to `spilled_bytes`)
     csr_bytes: f64,
     /// total buffer tokens across all heads (incremental `mem_bytes`)
     buf_tokens: usize,
+    /// shared on-disk page store (None ⇒ RAM-only residency)
+    spill: Option<Arc<SpillStore>>,
+    /// resident bytes currently evicted to the store (Σ `Spilled.bytes`)
+    spilled_bytes: f64,
     // overflow-gather scratch: [total][m] K and V rows pending compression
     gather_k: Vec<f32>,
     gather_v: Vec<f32>,
@@ -333,6 +389,8 @@ impl LexicoCache {
             par_score_min: PAR_SCORE_MIN_TOKENS,
             csr_bytes: 0.0,
             buf_tokens: 0,
+            spill: None,
+            spilled_bytes: 0.0,
             cfg,
             dicts,
             adaptive_k,
@@ -479,6 +537,113 @@ impl LexicoCache {
         (&h.k_buf[..h.buf_len * m], &h.v_buf[..h.buf_len * m], h.buf_len)
     }
 
+    /// Make every sealed page resident before a scoring pass. O(1) when
+    /// nothing is spilled (the decode-hot case). The batcher faults
+    /// explicitly via [`KvCache::fault_resident`] — where a corrupt page
+    /// file becomes a clean session error — before scheduling a session, so
+    /// this in-attend fallback only fires for direct cache users (tests,
+    /// benches, eval sweeps), for whom a panic on a corrupt file is the
+    /// right failure mode.
+    fn ensure_resident(&mut self) {
+        if self.spilled_bytes == 0.0 {
+            return;
+        }
+        if let Err(e) = self.fault_all() {
+            panic!("lexico: page fault during attend failed: {e}");
+        }
+    }
+
+    /// Evict every sole-owned sealed page: `Resident` pages are written to
+    /// the spill store first (`Mirrored`), already-mirrored pages drop
+    /// their RAM copy with zero I/O. Pages whose `Arc` is shared with a
+    /// live fork stay resident — their memory would not actually be freed,
+    /// and the serving budget charges them to the owner. Returns
+    /// `(pages evicted, resident bytes freed)`.
+    fn spill_all(&mut self) -> Result<(usize, f64), String> {
+        let Some(store) = self.spill.clone() else {
+            return Ok((0, 0.0));
+        };
+        let mut n_pages = 0usize;
+        let mut freed = 0.0f64;
+        for h in &mut self.heads {
+            for slot in &mut h.pages {
+                let (at, bytes) = match slot {
+                    PageSlot::Resident(p) if Arc::strong_count(p) == 1 => {
+                        let at = store.spill(&p.k, &p.v).map_err(|e| e.to_string())?;
+                        (at, p.bytes())
+                    }
+                    PageSlot::Mirrored { page, at } if Arc::strong_count(page) == 1 => {
+                        (*at, page.bytes())
+                    }
+                    _ => continue,
+                };
+                *slot = PageSlot::Spilled { at, bytes };
+                n_pages += 1;
+                freed += bytes;
+                self.csr_bytes -= bytes;
+                self.spilled_bytes += bytes;
+            }
+        }
+        Ok((n_pages, freed))
+    }
+
+    /// Fault every spilled page back to `Mirrored` residency, restoring
+    /// resident-byte accounting from the page actually read (under a cold
+    /// tier the faulted page is smaller than what was evicted). Returns
+    /// `(pages faulted, resident bytes restored)`.
+    fn fault_all(&mut self) -> Result<(usize, f64), String> {
+        if self.spilled_bytes == 0.0 {
+            return Ok((0, 0.0));
+        }
+        let store = self
+            .spill
+            .clone()
+            .ok_or_else(|| "lexico: spilled pages but no spill store attached".to_string())?;
+        let mut n_pages = 0usize;
+        let mut restored = 0.0f64;
+        for h in &mut self.heads {
+            for slot in &mut h.pages {
+                if let PageSlot::Spilled { at, bytes } = *slot {
+                    let (k, v) = store.fault(at).map_err(|e| e.to_string())?;
+                    if k.rows() != PAGE_TOKENS {
+                        return Err(format!(
+                            "lexico: faulted page at offset {} has {} rows (want {PAGE_TOKENS})",
+                            at.offset,
+                            k.rows()
+                        ));
+                    }
+                    let page = Arc::new(CsrPage { k, v });
+                    let nb = page.bytes();
+                    *slot = PageSlot::Mirrored { page, at };
+                    n_pages += 1;
+                    restored += nb;
+                    self.csr_bytes += nb;
+                    self.spilled_bytes -= bytes;
+                }
+            }
+        }
+        Ok((n_pages, restored))
+    }
+
+    /// Mirror every `Resident` page to the spill store (keeping residency)
+    /// so the session state is serializable by reference. No accounting
+    /// changes — mirroring frees nothing.
+    fn mirror_pages(&mut self) -> Result<(), String> {
+        let store = self
+            .spill
+            .clone()
+            .ok_or_else(|| "lexico: hibernation requires a spill store (--spill-dir)".to_string())?;
+        for h in &mut self.heads {
+            for slot in &mut h.pages {
+                if let PageSlot::Resident(p) = slot {
+                    let at = store.spill(&p.k, &p.v).map_err(|e| e.to_string())?;
+                    *slot = PageSlot::Mirrored { page: p.clone(), at };
+                }
+            }
+        }
+        Ok(())
+    }
+
     #[cfg(test)]
     fn set_par_score_min(&mut self, min: usize) {
         self.par_score_min = min;
@@ -589,6 +754,7 @@ impl KvCache for LexicoCache {
     }
 
     fn attend(&mut self, layer: usize, q: &[f32], out: &mut [f32]) {
+        self.ensure_resident();
         let m = self.shape.head_dim;
         let n_heads = self.shape.n_heads;
         let scale = 1.0 / (m as f32).sqrt();
@@ -674,6 +840,7 @@ impl KvCache for LexicoCache {
         if b == 0 {
             return;
         }
+        self.ensure_resident();
         let m = self.shape.head_dim;
         let n_heads = self.shape.n_heads;
         let qdim = self.shape.q_dim();
@@ -819,6 +986,7 @@ impl KvCache for LexicoCache {
     /// full-width z rows covering extension atoms — stay in scratch for
     /// [`Self::finish_shared_attend`].
     fn begin_shared_attend(&mut self, layer: usize, q: &[f32], qd_base: &[f32], z_base: &mut [f32]) {
+        self.ensure_resident();
         let m = self.shape.head_dim;
         let n_heads = self.shape.n_heads;
         let scale = 1.0 / (m as f32).sqrt();
@@ -953,6 +1121,8 @@ impl KvCache for LexicoCache {
             par_score_min: self.par_score_min,
             csr_bytes: self.csr_bytes,
             buf_tokens: self.buf_tokens,
+            spill: self.spill.clone(),
+            spilled_bytes: self.spilled_bytes,
             cfg: self.cfg.clone(),
             dicts: self.dicts.clone(),
             adaptive_k: self.adaptive_k.clone(),
@@ -975,6 +1145,7 @@ impl KvCache for LexicoCache {
         self.heads
             .iter()
             .flat_map(|h| &h.pages)
+            .filter_map(|s| s.resident())
             .filter(|p| Arc::strong_count(p) > 1)
             .map(|p| p.bytes())
             .sum()
@@ -993,6 +1164,157 @@ impl KvCache for LexicoCache {
     fn set_pool(&mut self, pool: Arc<crate::exec::ExecPool>) {
         self.pool = pool.clone();
         self.bws.set_pool(pool);
+    }
+
+    fn set_spill_store(&mut self, store: Arc<SpillStore>) {
+        self.spill = Some(store);
+    }
+
+    fn spill_cold(&mut self) -> Result<(usize, f64), String> {
+        self.spill_all()
+    }
+
+    fn fault_resident(&mut self) -> Result<(usize, f64), String> {
+        self.fault_all()
+    }
+
+    fn spilled_bytes(&self) -> f64 {
+        self.spilled_bytes
+    }
+
+    /// Serialize the session for hibernation (DESIGN.md §11): every sealed
+    /// page is mirrored into the store's page file and written here as a
+    /// `(offset, len, resident-bytes)` ref; the unsealed tail travels as
+    /// one embedded page blob (ragged row count), the dense recency buffer
+    /// as exact f32 bits. Residency and accounting are unchanged — pairing
+    /// with [`Self::spill_all`] afterwards frees the page memory for free.
+    /// Adaptive sessions are rejected: their dictionary overlay mutates per
+    /// encode and is not captured by the page format.
+    fn hibernate_state(&mut self) -> Result<Vec<u8>, String> {
+        if self.cfg.adaptive.is_some() {
+            return Err("lexico: hibernation unsupported with adaptive dictionaries".into());
+        }
+        self.mirror_pages()?;
+        let m = self.shape.head_dim;
+        let mut buf = Vec::new();
+        wire::put_u32(&mut buf, SNAP_MAGIC);
+        wire::put_u16(&mut buf, SNAP_VERSION);
+        buf.push(if self.cfg.precision == CoefPrecision::Fp16 { 1 } else { 0 });
+        wire::put_u32(&mut buf, self.shape.n_layers as u32);
+        wire::put_u32(&mut buf, self.shape.n_kv_heads as u32);
+        wire::put_u32(&mut buf, m as u32);
+        wire::put_u64(&mut buf, self.tokens as u64);
+        wire::put_u32(&mut buf, self.heads.len() as u32);
+        for h in &self.heads {
+            wire::put_u32(&mut buf, h.pages.len() as u32);
+            for slot in &h.pages {
+                let (at, bytes) = match slot {
+                    PageSlot::Mirrored { page, at } => (*at, page.bytes()),
+                    PageSlot::Spilled { at, bytes } => (*at, *bytes),
+                    PageSlot::Resident(_) => unreachable!("mirror_pages left a Resident slot"),
+                };
+                wire::put_u64(&mut buf, at.offset);
+                wire::put_u32(&mut buf, at.len);
+                wire::put_u64(&mut buf, bytes.to_bits());
+            }
+            wire::put_bytes(&mut buf, &store::encode_page(&h.tail_k, &h.tail_v));
+            wire::put_u32(&mut buf, h.n_csr as u32);
+            wire::put_u32(&mut buf, h.buf_len as u32);
+            wire::put_f32s(&mut buf, &h.k_buf[..h.buf_len * m]);
+            wire::put_f32s(&mut buf, &h.v_buf[..h.buf_len * m]);
+        }
+        Ok(buf)
+    }
+
+    /// Rebuild from a [`Self::hibernate_state`] blob into a freshly built
+    /// cache of the same configuration. Pages come back as `Spilled` refs
+    /// (resident bytes stay freed until [`Self::fault_all`]); the tail and
+    /// buffer are restored bit-exactly, so the continued decode stream is
+    /// bitwise identical to the never-hibernated session.
+    fn restore_hibernated(&mut self, blob: &[u8]) -> Result<(), String> {
+        if self.tokens != 0 {
+            return Err("lexico: restore_hibernated requires a freshly built cache".into());
+        }
+        if self.cfg.adaptive.is_some() {
+            return Err("lexico: hibernation unsupported with adaptive dictionaries".into());
+        }
+        if self.spill.is_none() {
+            return Err("lexico: restore requires a spill store (--spill-dir)".into());
+        }
+        let m = self.shape.head_dim;
+        let mut r = wire::Reader::new(blob);
+        if r.take_u32()? != SNAP_MAGIC {
+            return Err("lexico snapshot: bad magic".into());
+        }
+        if r.take_u16()? != SNAP_VERSION {
+            return Err("lexico snapshot: unsupported version".into());
+        }
+        let fp16 = r.take_u8()? == 1;
+        if fp16 != (self.cfg.precision == CoefPrecision::Fp16) {
+            return Err("lexico snapshot: coefficient precision mismatch".into());
+        }
+        let (nl, nkv, sm) = (r.take_u32()?, r.take_u32()?, r.take_u32()?);
+        if (nl as usize, nkv as usize, sm as usize)
+            != (self.shape.n_layers, self.shape.n_kv_heads, m)
+        {
+            return Err(format!(
+                "lexico snapshot: shape mismatch (snapshot {nl}x{nkv}x{sm}, cache {}x{}x{})",
+                self.shape.n_layers, self.shape.n_kv_heads, m
+            ));
+        }
+        let tokens = r.take_u64()? as usize;
+        let n_heads = r.take_u32()? as usize;
+        if n_heads != self.heads.len() {
+            return Err("lexico snapshot: head count mismatch".into());
+        }
+        let mut heads = Vec::with_capacity(n_heads);
+        let mut csr_bytes = 0.0f64;
+        let mut spilled_bytes = 0.0f64;
+        let mut buf_tokens = 0usize;
+        for _ in 0..n_heads {
+            let n_pages = r.take_u32()? as usize;
+            let mut pages = Vec::with_capacity(n_pages);
+            for _ in 0..n_pages {
+                let at = PageRef { offset: r.take_u64()?, len: r.take_u32()? };
+                let bytes = f64::from_bits(r.take_u64()?);
+                if !bytes.is_finite() || bytes < 0.0 {
+                    return Err("lexico snapshot: corrupt page byte count".into());
+                }
+                spilled_bytes += bytes;
+                pages.push(PageSlot::Spilled { at, bytes });
+            }
+            let tail_blob = r.take_bytes()?;
+            let (tail_k, tail_v) =
+                store::decode_page(&tail_blob, 0).map_err(|e| format!("lexico snapshot: {e}"))?;
+            if tail_k.rows() >= PAGE_TOKENS {
+                return Err("lexico snapshot: tail at or above page size".into());
+            }
+            if tail_k.precision() != self.cfg.precision {
+                return Err("lexico snapshot: tail precision mismatch".into());
+            }
+            let n_csr = r.take_u32()? as usize;
+            if n_csr != n_pages * PAGE_TOKENS + tail_k.rows() {
+                return Err("lexico snapshot: token count inconsistent with pages + tail".into());
+            }
+            let buf_len = r.take_u32()? as usize;
+            let k_buf = r.take_f32s()?;
+            let v_buf = r.take_f32s()?;
+            if k_buf.len() != buf_len * m || v_buf.len() != buf_len * m {
+                return Err("lexico snapshot: buffer length mismatch".into());
+            }
+            csr_bytes += (tail_k.bytes() + tail_v.bytes()) as f64;
+            buf_tokens += buf_len;
+            heads.push(HeadState { pages, tail_k, tail_v, n_csr, k_buf, v_buf, buf_len });
+        }
+        if !r.is_empty() {
+            return Err("lexico snapshot: trailing bytes".into());
+        }
+        self.heads = heads;
+        self.tokens = tokens;
+        self.csr_bytes = csr_bytes;
+        self.spilled_bytes = spilled_bytes;
+        self.buf_tokens = buf_tokens;
+        Ok(())
     }
 
     fn tokens(&self) -> usize {
@@ -1672,6 +1994,235 @@ mod tests {
         let mut got = vec![0.0; qdim];
         c.attend(0, &q, &mut got);
         assert_eq!(got, want, "attend diverged after scratch shrink");
+    }
+
+    fn tmp_store(tag: &str) -> (std::path::PathBuf, Arc<SpillStore>) {
+        let dir = std::env::temp_dir()
+            .join(format!("lexico_cache_spill_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        (dir.clone(), Arc::new(SpillStore::open(&dir).unwrap()))
+    }
+
+    #[test]
+    fn spill_fault_round_trip_is_bitwise() {
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, precision: prec, ..Default::default() };
+            let (shape, mut c) = setup(64, cfg);
+            let mut rng = Rng::new(111);
+            for _ in 0..2 * PAGE_TOKENS + 7 {
+                let k = rng.normal_vec(shape.kv_dim());
+                let v = rng.normal_vec(shape.kv_dim());
+                for l in 0..shape.n_layers {
+                    c.append(l, &k, &v);
+                }
+            }
+            let q = rng.normal_vec(shape.q_dim());
+            let mut want = vec![0.0; shape.q_dim()];
+            c.attend(0, &q, &mut want);
+            let mem_before = c.mem_bytes();
+
+            let (dir, store) = tmp_store(&format!("rt{}", prec.bytes_per_coef()));
+            c.set_spill_store(store.clone());
+            let (n_pages, freed) = c.spill_cold().unwrap();
+            assert!(n_pages > 0 && freed > 0.0);
+            assert_eq!(c.mem_bytes(), mem_before - freed, "resident-only accounting");
+            assert_eq!(c.spilled_bytes, freed);
+
+            // attend faults lazily and must reproduce the stream bit for bit
+            let mut got = vec![0.0; shape.q_dim()];
+            c.attend(0, &q, &mut got);
+            assert_eq!(got, want, "spill→fault changed attend output ({prec:?})");
+            assert_eq!(c.spilled_bytes, 0.0);
+            assert_eq!(c.mem_bytes(), mem_before, "accounting must restore exactly");
+
+            // a second evict round needs no I/O (pages already mirrored) and
+            // still faults back bitwise
+            let disk_before = store.counters().1;
+            let (n2, freed2) = c.spill_cold().unwrap();
+            assert_eq!(n2, n_pages);
+            assert_eq!(freed2, freed);
+            assert_eq!(store.counters().1, disk_before, "re-evict must not rewrite pages");
+            c.fault_resident().unwrap();
+            c.attend(0, &q, &mut got);
+            assert_eq!(got, want);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn eviction_skips_pages_shared_with_forks() {
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 2, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(113);
+        for _ in 0..PAGE_TOKENS + 4 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let (dir, store) = tmp_store("forkskip");
+        c.set_spill_store(store);
+        let f = c.fork();
+        let (n_pages, freed) = c.spill_cold().unwrap();
+        assert_eq!((n_pages, freed), (0, 0.0), "shared pages must stay resident");
+        drop(f);
+        let (n_pages, freed) = c.spill_cold().unwrap();
+        assert!(n_pages > 0 && freed > 0.0, "sole-owned pages spill after the fork drops");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hibernate_restore_reproduces_the_session_bitwise() {
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, precision: prec, ..Default::default() };
+            let (shape, mut c) = setup(64, cfg.clone());
+            let mut rng = Rng::new(117);
+            for _ in 0..PAGE_TOKENS + 9 {
+                let k = rng.normal_vec(shape.kv_dim());
+                let v = rng.normal_vec(shape.kv_dim());
+                for l in 0..shape.n_layers {
+                    c.append(l, &k, &v);
+                }
+            }
+            let (dir, store) = tmp_store(&format!("hib{}", prec.bytes_per_coef()));
+            c.set_spill_store(store.clone());
+            let blob = c.hibernate_state().unwrap();
+
+            let (_, mut back) = setup(64, cfg);
+            back.set_spill_store(store);
+            back.restore_hibernated(&blob).unwrap();
+            assert_eq!(back.tokens(), c.tokens());
+            assert!(back.spilled_bytes > 0.0, "pages restore as spilled refs");
+            back.fault_resident().unwrap();
+            assert_eq!(back.mem_bytes(), c.mem_bytes());
+
+            // identical continuations, bitwise
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            let q = rng.normal_vec(shape.q_dim());
+            let (mut o1, mut o2) = (vec![0.0; shape.q_dim()], vec![0.0; shape.q_dim()]);
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+                back.append(l, &k, &v);
+            }
+            for l in 0..shape.n_layers {
+                c.attend(l, &q, &mut o1);
+                back.attend(l, &q, &mut o2);
+                assert_eq!(o1, o2, "restored session diverged ({prec:?}, layer {l})");
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_corrupt_snapshots_cleanly() {
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg.clone());
+        let mut rng = Rng::new(119);
+        // 2 pages' worth so the snapshot carries real page refs
+        for _ in 0..2 * PAGE_TOKENS + 8 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let (dir, store) = tmp_store("corrupt");
+        c.set_spill_store(store.clone());
+        let blob = c.hibernate_state().unwrap();
+        let fresh = || {
+            let (_, mut b) = setup(64, cfg.clone());
+            b.set_spill_store(store.clone());
+            b
+        };
+        // truncated mid-snapshot
+        assert!(fresh().restore_hibernated(&blob[..blob.len() / 2]).is_err());
+        // truncated by one byte: the final buffer's length prefix overruns
+        assert!(fresh().restore_hibernated(&blob[..blob.len() - 1]).is_err());
+        // bad magic
+        let mut bad = blob.clone();
+        bad[0] ^= 0xff;
+        assert!(fresh().restore_hibernated(&bad).is_err());
+        // mismatched precision config
+        let (_, mut wrong) = setup(
+            64,
+            LexicoConfig {
+                sparsity: 4,
+                n_buffer: 4,
+                precision: CoefPrecision::Fp16,
+                ..Default::default()
+            },
+        );
+        wrong.set_spill_store(store.clone());
+        assert!(wrong.restore_hibernated(&blob).is_err());
+        // a page ref pointing past the page file fails at fault time
+        let mut back = fresh();
+        back.restore_hibernated(&blob).unwrap();
+        for h in &mut back.heads {
+            for slot in &mut h.pages {
+                if let PageSlot::Spilled { at, .. } = slot {
+                    at.offset += 1u64 << 20;
+                }
+            }
+        }
+        assert!(back.fault_resident().is_err(), "dangling page ref must error, not panic");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_tier_recompression_is_lossy_but_bounded() {
+        use crate::store::ColdTier;
+        let cfg = LexicoConfig {
+            sparsity: 6,
+            n_buffer: 2,
+            precision: CoefPrecision::Fp16,
+            ..Default::default()
+        };
+        let (shape, mut c) = setup(64, cfg);
+        let mut rng = Rng::new(121);
+        for _ in 0..2 * PAGE_TOKENS {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let q = rng.normal_vec(shape.q_dim());
+        let mut want = vec![0.0; shape.q_dim()];
+        c.attend(0, &q, &mut want);
+        let mem_before = c.mem_bytes();
+
+        let dir = std::env::temp_dir()
+            .join(format!("lexico_cache_spill_cold_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(
+            SpillStore::open(&dir)
+                .unwrap()
+                .with_cold_tier(ColdTier { keep_atoms: Some(3), to_fp8: true }),
+        );
+        c.set_spill_store(store);
+        c.spill_cold().unwrap();
+        c.fault_resident().unwrap();
+        assert!(c.mem_bytes() < mem_before, "cold tier must shrink the faulted pages");
+
+        // tolerance golden: the recompressed stream differs (lossy by
+        // design) but stays a bounded approximation of the exact one
+        let mut got = vec![0.0; shape.q_dim()];
+        c.attend(0, &q, &mut got);
+        assert_ne!(got, want, "cold tier is expected to change bits");
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, b) in got.iter().zip(&want) {
+            assert!(a.is_finite());
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        assert!(
+            num.sqrt() <= 0.75 * den.sqrt(),
+            "cold-tier attend error too large: {} vs {}",
+            num.sqrt(),
+            den.sqrt()
+        );
     }
 
     #[test]

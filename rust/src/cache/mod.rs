@@ -188,6 +188,57 @@ pub trait KvCache: Send {
         true
     }
 
+    /// Attach the shared on-disk page store (DESIGN.md §11). Backends with
+    /// spillable immutable state (Lexico's sealed CSR pages) keep the
+    /// handle for [`KvCache::spill_cold`]/[`KvCache::fault_resident`];
+    /// everyone else ignores it and stays RAM-only.
+    fn set_spill_store(&mut self, store: std::sync::Arc<crate::store::SpillStore>) {
+        let _ = store;
+    }
+
+    /// Evict this cache's sole-owned sealed pages to the spill store,
+    /// returning `(pages evicted, resident bytes freed)`. Pages shared
+    /// with a live fork stay resident (their memory would not be freed and
+    /// is charged to the owner). Requires a store from
+    /// [`KvCache::set_spill_store`]; the default backend has nothing
+    /// spillable.
+    fn spill_cold(&mut self) -> Result<(usize, f64), String> {
+        Ok((0, 0.0))
+    }
+
+    /// Fault every spilled page back to residency, returning `(pages
+    /// faulted, resident bytes restored)`. A corrupt or truncated page
+    /// file fails here with a message — the caller turns it into a session
+    /// error, never a panic.
+    fn fault_resident(&mut self) -> Result<(usize, f64), String> {
+        Ok((0, 0.0))
+    }
+
+    /// Resident bytes [`KvCache::mem_bytes`] would additionally report if
+    /// every spilled page were faulted back in (0 when fully resident).
+    fn spilled_bytes(&self) -> f64 {
+        0.0
+    }
+
+    /// Serialize the full cache state for session hibernation: sealed
+    /// pages are mirrored to the spill store's page file and referenced by
+    /// offset, everything else (tail slabs, dense buffer, counters) is
+    /// embedded. Restoring the blob into a freshly built cache of the same
+    /// configuration via [`KvCache::restore_hibernated`] must reproduce
+    /// the decode stream bitwise.
+    fn hibernate_state(&mut self) -> Result<Vec<u8>, String> {
+        Err(format!("{}: hibernation is not supported by this backend", self.name()))
+    }
+
+    /// Rebuild state from a [`KvCache::hibernate_state`] blob. The cache
+    /// must be freshly built with the same configuration and have the same
+    /// spill store attached; pages come back as spilled refs (fault them
+    /// via [`KvCache::fault_resident`] before decoding).
+    fn restore_hibernated(&mut self, blob: &[u8]) -> Result<(), String> {
+        let _ = blob;
+        Err(format!("{}: hibernation is not supported by this backend", self.name()))
+    }
+
     /// Logical tokens seen (including evicted ones).
     fn tokens(&self) -> usize;
 

@@ -19,6 +19,7 @@ pub mod repro;
 pub mod runtime;
 pub mod server;
 pub mod sparse;
+pub mod store;
 pub mod tasks;
 pub mod tensor;
 pub mod util;

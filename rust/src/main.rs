@@ -61,7 +61,8 @@ lexico — Lexico KV-cache compression (ICML 2025) reproduction
 USAGE:
   lexico serve  [--addr 127.0.0.1:7077] [--model M] [--method SPEC]
                 [--budget-mb 64] [--max-sessions 32] [--threads N]
-                [--prefill-chunk 256]
+                [--prefill-chunk 256] [--spill-dir DIR]
+                [--resident-budget MB]
   lexico eval   [--model M] [--task arith] [--method SPEC] [--n 50]
                 [--seed 0] [--dict-n 1024] [--threads N]
   lexico repro  <fig1|fig3|fig5|fig6|fig7|table1..table7|all> [--fast]
@@ -89,6 +90,15 @@ from stalling active sessions' decode cadence; token streams are bitwise
 identical at every chunk size. Send {"stream": true} with a request to
 receive one {"id","token","i"} JSON line per generated token ahead of the
 final response line.
+
+--spill-dir DIR enables tiered KV residency: cold sessions' sealed pages
+page out to an append-only file under DIR and fault back on demand,
+bitwise-identically. Requests carrying \"session\": \"name\" hibernate on
+completion instead of retiring; {\"cmd\": \"resume\", \"session\": \"name\"}
+continues them — across server restarts, since hibernation snapshots to
+DIR. --resident-budget MB caps resident KV bytes below --budget-mb
+(default: equal), forcing cold sessions to disk under pressure.
+(LEXICO_SPILL_DIR / LEXICO_RESIDENT_BUDGET set the same defaults.)
 
 Method specs: full | lexico:s=8,nb=32[,delta=..][,fp16][,adaptive=N:d]
   | kivi:bits=2,g=16,nb=16 | pertoken:bits=4,g=16 | zipcache:hi=4,lo=2
@@ -150,7 +160,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let size = args.get("model", "M");
     let engine = Arc::new(load_engine(&size)?);
     let dicts = load_dicts(&size, 1024).ok();
-    let cfg = BatcherConfig {
+    let mut cfg = BatcherConfig {
         default_method: args.get("method", "lexico:s=8,nb=32"),
         kv_budget_bytes: args.get("budget-mb", "64").parse::<f64>()? * 1024.0 * 1024.0,
         max_sessions: args.get("max-sessions", "32").parse()?,
@@ -158,7 +168,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefix_min_tokens: args.get("prefix-min-tokens", "8").parse()?,
         max_fanout: args.get("max-fanout", "8").parse()?,
         prefill_chunk: args.get("prefill-chunk", "256").parse()?,
+        // spill_dir / resident_budget_bytes: env-derived defaults
+        ..Default::default()
     };
+    if let Some(dir) = args.flags.get("spill-dir") {
+        // explicit flag: use the directory exactly as given (resumable
+        // across restarts), unlike the env default's per-process subdir
+        cfg.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(mb) = args.flags.get("resident-budget") {
+        cfg.resident_budget_bytes =
+            mb.parse::<f64>().context("--resident-budget takes MB")? * 1024.0 * 1024.0;
+    }
     let addr = args.get("addr", "127.0.0.1:7077");
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let (jtx, jrx) = std::sync::mpsc::channel();
@@ -176,7 +197,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("listening on {a}");
     })?;
     drop(batcher);
-    println!("{}", metrics.lock().unwrap().report());
+    println!("{}", lexico::server::lock_tolerant(&metrics).report());
     Ok(())
 }
 

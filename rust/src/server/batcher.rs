@@ -53,20 +53,22 @@
 //! the alternates.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::Ordering;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::{Job, Response, StreamDelta};
+use super::{lock_tolerant, Job, Response, SessionVerb, StreamDelta};
 use crate::cache::factory::{build_cache, CacheContext};
 use crate::cache::KvCache;
 use crate::dict::DictionarySet;
 use crate::exec::ExecPool;
 use crate::model::{Engine, PrefixState};
+use crate::store::{wire, SpillStore};
 use crate::tasks;
 use crate::tensor::argmax;
 
@@ -94,7 +96,22 @@ pub struct BatcherConfig {
     /// hold (SnapKV/PyramidKV/ZipCache observation-window state) are
     /// prefilled monolithically regardless.
     pub prefill_chunk: usize,
+    /// spill directory for the tiered-residency page store (None disables
+    /// spill, hibernation persistence and `save`/`resume` across restarts).
+    /// The directory is used exactly as given — two batchers that must see
+    /// each other's snapshots (restart recovery) pass the same path.
+    pub spill_dir: Option<PathBuf>,
+    /// resident-byte target for hibernated sessions: when `kv_used_bytes`
+    /// exceeds this, cold hibernated sessions' sealed pages are evicted to
+    /// the spill store, LRU by last-touch round — never the sessions in
+    /// the current decode batch. 0 = use `kv_budget_bytes`.
+    pub resident_budget_bytes: f64,
 }
+
+/// Distinguishes spill directories of batchers that share the
+/// `LEXICO_SPILL_DIR` root (parallel tests, several servers on one box):
+/// concurrent appenders on one page file would corrupt it.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl Default for BatcherConfig {
     fn default() -> Self {
@@ -106,6 +123,20 @@ impl Default for BatcherConfig {
             prefix_min_tokens: 8,
             max_fanout: 8,
             prefill_chunk: 256,
+            // env defaults let CI run the whole suite with spill active
+            // without threading flags through every test; each defaulted
+            // config gets a private subdirectory (see SPILL_SEQ)
+            spill_dir: std::env::var_os("LEXICO_SPILL_DIR").map(|root| {
+                PathBuf::from(root).join(format!(
+                    "spill_{}_{}",
+                    std::process::id(),
+                    SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+                ))
+            }),
+            resident_budget_bytes: std::env::var("LEXICO_RESIDENT_BUDGET")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.0),
         }
     }
 }
@@ -290,6 +321,24 @@ enum Phase {
         insert_on_done: bool,
     },
     Decoding,
+    /// A named session parked after its request finished (or its client
+    /// vanished): it holds no seat, joins no decode batch, and its sealed
+    /// pages are evicted to the spill store under residency pressure — LRU
+    /// by `last_touch`. A `resume` request wakes it in place.
+    Hibernated {
+        /// the client-chosen session name (`Request::session`)
+        name: String,
+        /// resolved cache-method spec (for the on-disk snapshot)
+        method: String,
+        /// prompt length, echoed in the resume reply
+        n_prompt: usize,
+        /// whether `next_token` was already committed to `generated`
+        /// (finished stream) or is still pending (client vanished before
+        /// the commit) — decides whether the wake round skips the commit
+        committed: bool,
+        /// round number of the last admission/decode activity (LRU key)
+        last_touch: u64,
+    },
 }
 
 /// One decoding candidate (a request with fanout = n owns n sessions).
@@ -310,12 +359,35 @@ struct Session {
     from_entry: Option<u64>,
     max_new: usize,
     phase: Phase,
+    /// set when a resumed session's `next_token` was already committed
+    /// before hibernation: the first wake round feeds it straight into
+    /// `decode_batch` without re-appending it to `generated`
+    skip_commit: bool,
+    /// tokens already added to `Metrics::tokens_generated` at an earlier
+    /// hibernation — a resumed session must not re-count them at its next
+    /// retirement
+    counted: usize,
 }
 
 impl Session {
     fn is_prefilling(&self) -> bool {
         matches!(self.phase, Phase::Prefilling { .. })
     }
+
+    fn is_hibernated(&self) -> bool {
+        matches!(self.phase, Phase::Hibernated { .. })
+    }
+}
+
+/// Why a session leaves the decode loop this round.
+enum Retire {
+    /// stream finished (stop token / max_new / max_seq) — `next_token`
+    /// already committed
+    Done,
+    /// client cancelled — `next_token` still pending
+    Cancelled,
+    /// page fault or backend failure: the whole group replies this error
+    Failed(String),
 }
 
 /// Per-request state shared by its candidate sessions; the reply is sent
@@ -330,6 +402,11 @@ struct Group {
     remaining: usize,
     t0: Instant,
     ttft_ms: f64,
+    /// a candidate failed (e.g. corrupt page fault): the reply is this
+    /// error instead of the outputs
+    error: Option<String>,
+    /// resumed sessions have no prefill, so no TTFT sample is recorded
+    resumed: bool,
 }
 
 // ---------------------------------------------------------------------------
@@ -356,6 +433,11 @@ pub struct Batcher {
     /// `decode_batch`, and the batched-OMP overflow compression of every
     /// cache this batcher builds. Deterministic at any thread count.
     pool: Arc<ExecPool>,
+    /// tiered-residency page store (None = spill disabled); every cache
+    /// this batcher builds is attached to it
+    spill: Option<Arc<SpillStore>>,
+    /// scheduling-round counter — the LRU clock for hibernated sessions
+    round_no: u64,
 }
 
 impl Batcher {
@@ -369,6 +451,14 @@ impl Batcher {
         let max_seq = engine.weights.cfg.max_seq;
         let prefix = PrefixCache::new(cfg.prefix_entries);
         let pool = engine.pool().clone();
+        let spill = cfg.spill_dir.as_ref().and_then(|dir| match SpillStore::open(dir) {
+            Ok(s) => Some(Arc::new(s)),
+            Err(e) => {
+                // serve without spill rather than refuse to start
+                eprintln!("warning: spill store at {} unavailable ({e}); spill disabled", dir.display());
+                None
+            }
+        });
         Batcher {
             engine,
             ctx,
@@ -382,7 +472,15 @@ impl Batcher {
             stop: tasks::newline_id(),
             max_seq,
             pool,
+            spill,
+            round_no: 0,
         }
+    }
+
+    /// Poison-tolerant metrics lock (see [`lock_tolerant`]): one panicking
+    /// request thread must not poison every later scheduling round.
+    fn lock_metrics(&self) -> MutexGuard<'_, Metrics> {
+        lock_tolerant(&self.metrics)
     }
 
     /// The pool this batcher schedules onto.
@@ -391,16 +489,29 @@ impl Batcher {
     }
 
     pub fn enqueue(&mut self, job: Job) {
-        self.metrics.lock().unwrap().requests += 1;
+        self.lock_metrics().requests += 1;
         self.pending.push_back(job);
     }
 
+    /// Whether a scheduling round would make progress. Hibernated sessions
+    /// don't count: they sit parked (possibly for days) and must not keep
+    /// the serving loop spinning while the queue is empty.
     pub fn has_work(&self) -> bool {
-        !self.active.is_empty() || !self.pending.is_empty()
+        self.has_schedulable() || !self.pending.is_empty()
     }
 
+    fn has_schedulable(&self) -> bool {
+        self.active.iter().any(|s| !s.is_hibernated())
+    }
+
+    /// Sessions currently prefilling or decoding (hibernated excluded).
     pub fn n_active(&self) -> usize {
-        self.active.len()
+        self.active.iter().filter(|s| !s.is_hibernated()).count()
+    }
+
+    /// Named sessions parked for a later `resume`.
+    pub fn n_hibernated(&self) -> usize {
+        self.active.iter().filter(|s| s.is_hibernated()).count()
     }
 
     pub fn n_pending(&self) -> usize {
@@ -418,16 +529,16 @@ impl Batcher {
 
     /// Seats the session cap must account for: live sessions plus the
     /// fan-out candidates a prefilling session will seat on completion.
+    /// Hibernated sessions hold no seat — parking is what frees it.
     fn seats_used(&self) -> usize {
-        self.active.len()
-            + self
-                .active
-                .iter()
-                .map(|s| match &s.phase {
-                    Phase::Prefilling { fanout, .. } => fanout - 1,
-                    Phase::Decoding => 0,
-                })
-                .sum::<usize>()
+        self.active
+            .iter()
+            .map(|s| match &s.phase {
+                Phase::Prefilling { fanout, .. } => *fanout,
+                Phase::Decoding => 1,
+                Phase::Hibernated { .. } => 0,
+            })
+            .sum()
     }
 
     /// Bytes the admission gate must hold against in-flight prefills: the
@@ -448,7 +559,7 @@ impl Batcher {
                 Phase::Prefilling { ids, state, .. } => {
                     tb * (ids.len() - state.len()) as f64 + state.bytes()
                 }
-                Phase::Decoding => 0.0,
+                Phase::Decoding | Phase::Hibernated { .. } => 0.0,
             })
             .sum()
     }
@@ -477,19 +588,116 @@ impl Batcher {
     /// run admission again so freed budget seats a waiting job in the same
     /// round.
     pub fn round(&mut self) {
+        self.round_no += 1;
         self.admit();
         self.advance_prefills();
         if self.decode_round() > 0 && !self.pending.is_empty() {
             self.admit();
         }
-        let mut m = self.metrics.lock().unwrap();
-        m.active_sessions = self.active.len() as u64;
+        self.enforce_residency();
+        self.debug_budget_invariant();
+        let kv_used = self.kv_used_bytes();
+        let n_hib = self.n_hibernated() as u64;
+        let mut m = self.lock_metrics();
+        m.active_sessions = self.n_active() as u64;
         m.prefilling_sessions = self.n_prefilling() as u64;
-        m.kv_used_bytes = self.kv_used_bytes();
+        m.kv_used_bytes = kv_used;
+        m.hibernated_sessions = n_hib;
+        if let Some(store) = &self.spill {
+            let (spilled_pages, spill_bytes, faults, _) = store.counters();
+            m.spilled_pages = spilled_pages;
+            m.spill_bytes = spill_bytes as f64;
+            m.faults = faults;
+        }
+    }
+
+    /// Evict cold hibernated sessions' sealed pages until resident KV
+    /// bytes fit the residency target — LRU by last-touch round, never a
+    /// session in the current decode batch (those are by definition not
+    /// hibernated). Eviction is cheap: pages already mirrored to the spill
+    /// store drop their RAM copy with zero I/O.
+    fn enforce_residency(&mut self) {
+        if self.spill.is_none() {
+            return;
+        }
+        let budget = if self.cfg.resident_budget_bytes > 0.0 {
+            self.cfg.resident_budget_bytes
+        } else {
+            self.cfg.kv_budget_bytes
+        };
+        while self.kv_used_bytes() > budget {
+            if self.spill_coldest_hibernated_except(None) == 0.0 {
+                break; // nothing left that spilling would free
+            }
+        }
+    }
+
+    /// Spill the least-recently-touched hibernated session that still has
+    /// sole-owned resident pages, skipping `except` (the session being
+    /// woken must not churn through the store it is about to fault from).
+    /// Returns the bytes freed (0.0 = nothing could be spilled).
+    fn spill_coldest_hibernated_except(&mut self, except: Option<usize>) -> f64 {
+        let mut order: Vec<(u64, usize)> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter_map(|(si, s)| match &s.phase {
+                Phase::Hibernated { last_touch, .. } if Some(si) != except => {
+                    Some((*last_touch, si))
+                }
+                _ => None,
+            })
+            .collect();
+        order.sort_unstable();
+        for (_, si) in order {
+            // an I/O error here only means this session's pages stay
+            // resident; eviction moves on to the next candidate
+            if let Ok((n, freed)) = self.active[si].cache.spill_cold() {
+                if n > 0 {
+                    return freed;
+                }
+            }
+        }
+        0.0
+    }
+
+    /// Accounting-drift tripwire (debug builds only): resident KV usage
+    /// must stay within the configured budget, allowing for the two
+    /// legitimate carve-outs — the bootstrap admission (one request larger
+    /// than the whole budget is admitted when nothing else runs, rather
+    /// than deadlocking the queue) and hibernated residency (parked
+    /// sessions hold no seat but their un-spillable tail/buffer bytes stay
+    /// resident). Catches double-charging or unreturned bytes in tests
+    /// instead of as mystery over-admission in production.
+    fn debug_budget_invariant(&self) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        let hibernated: f64 = self
+            .active
+            .iter()
+            .filter(|s| s.is_hibernated())
+            .map(|s| s.cache.mem_bytes())
+            .sum();
+        let max_single = self
+            .active
+            .iter()
+            .filter(|s| !s.is_hibernated())
+            .map(|s| s.cache.mem_bytes())
+            .fold(0.0f64, f64::max);
+        let limit = self.cfg.kv_budget_bytes.max(max_single) + hibernated + 1024.0;
+        debug_assert!(
+            self.kv_used_bytes() <= limit,
+            "KV accounting drift: used {} B > limit {} B (budget {} B, hibernated {} B)",
+            self.kv_used_bytes(),
+            limit,
+            self.cfg.kv_budget_bytes,
+            hibernated
+        );
     }
 
     fn reject(&mut self, job: Job, n_prompt: usize, error: String) {
-        self.metrics.lock().unwrap().rejected += 1;
+        self.lock_metrics().rejected += 1;
         let _ = job.reply.send(Response::failed(job.request.id, n_prompt, error));
     }
 
@@ -542,7 +750,7 @@ impl Batcher {
             if front.cancelled() {
                 // the client vanished while the job was still queued
                 let job = self.pending.pop_front().unwrap();
-                self.metrics.lock().unwrap().cancelled += 1;
+                self.lock_metrics().cancelled += 1;
                 let _ = job.reply.send(Response::failed(
                     job.request.id,
                     0,
@@ -550,12 +758,39 @@ impl Batcher {
                 ));
                 continue;
             }
+            match front.request.verb {
+                SessionVerb::Save => {
+                    let job = self.pending.pop_front().unwrap();
+                    self.handle_save(job);
+                    continue;
+                }
+                SessionVerb::Resume => {
+                    if self.try_resume() {
+                        continue;
+                    }
+                    break; // defer (seats or budget); stays at the front
+                }
+                SessionVerb::Generate => {}
+            }
             if self.seats_used() >= self.cfg.max_sessions {
                 break;
             }
             let prompt = front.request.prompt.clone();
             let max_new = front.request.max_new;
             let req_fanout = front.request.fanout;
+            let session_name = front.request.session.clone();
+            if !session_name.is_empty() {
+                if !valid_session_name(&session_name) {
+                    let job = self.pending.pop_front().unwrap();
+                    self.reject(job, 0, format!("invalid session name {session_name:?}"));
+                    continue;
+                }
+                if req_fanout > 1 {
+                    let job = self.pending.pop_front().unwrap();
+                    self.reject(job, 0, "named sessions cannot fan out".into());
+                    continue;
+                }
+            }
 
             // ---- validate ---------------------------------------------
             let ids = match tasks::try_encode(&prompt) {
@@ -576,7 +811,7 @@ impl Batcher {
                 continue;
             }
             let fanout = req_fanout.clamp(1, self.cfg.max_fanout.min(self.cfg.max_sessions));
-            if self.seats_used() + fanout > self.cfg.max_sessions && !self.active.is_empty() {
+            if self.seats_used() + fanout > self.cfg.max_sessions && self.has_schedulable() {
                 break; // wait for seats
             }
             let method = if front.request.method.is_empty() {
@@ -599,7 +834,7 @@ impl Batcher {
                             && in_ids.len() <= ids.len()
                             && in_ids[..] == ids[..in_ids.len()]
                     }
-                    Phase::Decoding => false,
+                    _ => false,
                 });
                 if inflight {
                     break;
@@ -627,12 +862,24 @@ impl Batcher {
                 * shape.full_token_bytes()
                 * ((cold_tokens + max_new) as f64 + ((fanout - 1) * max_new) as f64)
                 + hit_state_bytes;
-            let budget_left =
-                self.cfg.kv_budget_bytes - self.kv_used_bytes() - self.reserved_prompt_bytes();
-            if est > budget_left && !self.active.is_empty() {
-                break; // wait for a session to retire
-            }
+            // Clamped at zero: right after a hibernated session wakes, its
+            // faulted pages can push usage transiently past the budget —
+            // a negative headroom here would wrap the comparison instead
+            // of just deferring admission.
+            let budget_left = (self.cfg.kv_budget_bytes
+                - self.kv_used_bytes()
+                - self.reserved_prompt_bytes())
+            .max(0.0);
             if est > budget_left {
+                // hibernated sessions' resident pages are the coldest
+                // bytes in the process: page them out before deferring
+                // admission or evicting prefix entries
+                if self.spill_coldest_hibernated_except(None) > 0.0 {
+                    continue;
+                }
+                if self.has_schedulable() {
+                    break; // wait for a session to retire
+                }
                 // free prefix residency (never the entry just matched) and
                 // re-evaluate; a surviving fork inherits the page charge
                 if let Some(evicted) = self.prefix.evict_lru_except(hit) {
@@ -668,7 +915,7 @@ impl Batcher {
                         // suffix token's attention over those same rows
                         entry.state.clone()
                     };
-                    let mut m = self.metrics.lock().unwrap();
+                    let mut m = self.lock_metrics();
                     m.prefix_hits += 1;
                     m.prefill_tokens_total += ids.len() as u64;
                     m.shared_bytes += cache.shared_prefix_bytes();
@@ -679,10 +926,16 @@ impl Batcher {
                 None => match build_cache(&method, &self.ctx) {
                     Ok(mut cache) => {
                         cache.set_pool(self.pool.clone());
+                        // every cache this batcher builds can page out to
+                        // the spill store; forks (prefix hits, fan-out
+                        // candidates) inherit the attachment
+                        if let Some(store) = &self.spill {
+                            cache.set_spill_store(store.clone());
+                        }
                         let cacheable = self.cfg.prefix_entries > 0
                             && cache.split_prefill_exact()
                             && ids.len() >= self.cfg.prefix_min_tokens;
-                        let mut m = self.metrics.lock().unwrap();
+                        let mut m = self.lock_metrics();
                         m.prefix_misses += 1;
                         m.prefill_tokens_total += ids.len() as u64;
                         drop(m);
@@ -715,6 +968,8 @@ impl Batcher {
                 remaining: 1,
                 t0,
                 ttft_ms: 0.0,
+                error: None,
+                resumed: false,
             });
             self.active.push(Session {
                 group: gid,
@@ -727,6 +982,8 @@ impl Batcher {
                 from_entry,
                 max_new,
                 phase: Phase::Prefilling { ids, state, method, fanout, insert_on_done },
+                skip_commit: false,
+                counted: 0,
             });
         }
     }
@@ -827,6 +1084,8 @@ impl Batcher {
                     from_entry,
                     max_new,
                     phase: Phase::Decoding,
+                    skip_commit: false,
+                    counted: 0,
                 });
             }
             extra_candidates += (firsts.len() - 1) as u64;
@@ -840,7 +1099,7 @@ impl Batcher {
         }
         self.active.extend(forks);
         if round_tokens > 0 || extra_candidates > 0 {
-            let mut m = self.metrics.lock().unwrap();
+            let mut m = self.lock_metrics();
             m.prefill_tokens += round_tokens;
             m.prefill_chunks += round_chunks;
             m.max_round_prefill_tokens = m.max_round_prefill_tokens.max(round_tokens);
@@ -867,7 +1126,7 @@ impl Batcher {
     /// admission policy produced, and is bitwise-identical to the
     /// per-session path.
     pub fn decode_round(&mut self) -> usize {
-        let mut retire = Vec::new();
+        let mut retire: Vec<(usize, Retire)> = Vec::new();
         let mut streamed = 0u64;
         {
             let mut toks: Vec<u32> = Vec::new();
@@ -876,40 +1135,58 @@ impl Batcher {
             let mut caches: Vec<&mut dyn KvCache> = Vec::new();
             let groups = &self.groups;
             for (si, sess) in self.active.iter_mut().enumerate() {
+                if sess.is_hibernated() {
+                    continue; // parked; its group is long gone
+                }
                 let g = groups.get(&sess.group).expect("session without group");
                 if g.job.cancelled() {
                     // abandoned mid-stream (or mid-prefill): retire before
                     // committing a token so the bytes return to the budget
                     // this round
-                    retire.push(si);
+                    retire.push((si, Retire::Cancelled));
                     continue;
                 }
                 if sess.is_prefilling() {
                     continue; // still consuming prompt chunks
                 }
-                sess.generated.push(sess.next_token);
-                if sess.cand == 0 {
-                    if let Some(tx) = &g.job.stream {
-                        let delta = StreamDelta {
-                            id: g.job.request.id,
-                            token: tasks::decode(&[sess.next_token]),
-                            i: sess.generated.len() - 1,
-                        };
-                        if tx.send(delta).is_err() {
-                            // the front end is gone — cancel; the session
-                            // retires next round
-                            g.job.cancel.store(true, Ordering::SeqCst);
-                        } else {
-                            streamed += 1;
+                if sess.skip_commit {
+                    // first round after a resume whose `next_token` was
+                    // already committed before hibernation: feed it to
+                    // decode_batch without re-appending it
+                    sess.skip_commit = false;
+                } else {
+                    sess.generated.push(sess.next_token);
+                    if sess.cand == 0 {
+                        if let Some(tx) = &g.job.stream {
+                            let delta = StreamDelta {
+                                id: g.job.request.id,
+                                token: tasks::decode(&[sess.next_token]),
+                                i: sess.generated.len() - 1,
+                            };
+                            if tx.send(delta).is_err() {
+                                // the front end is gone — cancel; the
+                                // session retires next round
+                                g.job.cancel.store(true, Ordering::SeqCst);
+                            } else {
+                                streamed += 1;
+                            }
                         }
                     }
+                    let done = sess.next_token == self.stop
+                        || sess.generated.len() >= sess.max_new
+                        || sess.pos + 1 >= self.max_seq;
+                    if done {
+                        retire.push((si, Retire::Done));
+                        continue;
+                    }
                 }
-                let done = sess.next_token == self.stop
-                    || sess.generated.len() >= sess.max_new
-                    || sess.pos + 1 >= self.max_seq;
-                if done {
-                    retire.push(si);
-                    continue;
+                // fault spilled pages back before attention reads them
+                // (a freshly resumed session, or one evicted while queued)
+                if sess.cache.spilled_bytes() > 0.0 {
+                    if let Err(e) = sess.cache.fault_resident() {
+                        retire.push((si, Retire::Failed(format!("page fault failed: {e}"))));
+                        continue;
+                    }
                 }
                 toks.push(sess.next_token);
                 poss.push(sess.pos);
@@ -930,18 +1207,35 @@ impl Batcher {
                 // one sample per round (amortized ms/token at that round's
                 // batch size) — duplicating it per session would flatten
                 // the percentile summary into the mean
-                let mut m = self.metrics.lock().unwrap();
+                let mut m = self.lock_metrics();
                 m.per_token_ms.push(per_token);
                 m.decode_round_ms.push(round_ms);
             }
         }
         if streamed > 0 {
-            self.metrics.lock().unwrap().streamed_tokens += streamed;
+            self.lock_metrics().streamed_tokens += streamed;
         }
         let n_retired = retire.len();
-        for &si in retire.iter().rev() {
-            let sess = self.active.swap_remove(si);
-            if sess.charges_shared {
+        for (si, why) in retire.into_iter().rev() {
+            let mut sess = self.active.swap_remove(si);
+            let gid = sess.group;
+            let (name, method, n_prompt) = {
+                let g = &self.groups[&gid];
+                let m = if g.job.request.method.is_empty() {
+                    self.cfg.default_method.clone()
+                } else {
+                    g.job.request.method.clone()
+                };
+                (g.job.request.session.clone(), m, g.n_prompt)
+            };
+            // a named session parks for a later `resume` instead of
+            // dropping its cache — unless the candidate failed, never got
+            // past prefill, or spill is disabled
+            let will_hibernate = !name.is_empty()
+                && !matches!(why, Retire::Failed(_))
+                && !sess.is_prefilling()
+                && self.spill.is_some();
+            if sess.charges_shared && !will_hibernate {
                 // the retiring session was the charging owner of pages
                 // shared with siblings — hand the role to a survivor so
                 // the pages stay charged exactly once (no-op when nothing
@@ -954,60 +1248,410 @@ impl Batcher {
                             .position(|s| s.from_entry == Some(id) && !s.charges_shared)
                     })
                     .or_else(|| {
-                        self.active
-                            .iter()
-                            .position(|s| s.group == sess.group && !s.charges_shared)
+                        self.active.iter().position(|s| s.group == gid && !s.charges_shared)
                     });
                 if let Some(i) = heir {
                     self.active[i].charges_shared = true;
                 }
             }
             {
-                let mut m = self.metrics.lock().unwrap();
-                m.tokens_generated += sess.generated.len() as u64;
+                let mut m = self.lock_metrics();
+                m.tokens_generated += (sess.generated.len() - sess.counted) as u64;
             }
-            let g = self.groups.get_mut(&sess.group).expect("session without group");
+            let g = self.groups.get_mut(&gid).expect("session without group");
+            if let Retire::Failed(e) = &why {
+                g.error = Some(e.clone());
+            }
             g.outputs[sess.cand] = Some(tasks::decode(&sess.generated));
             if sess.cand == 0 {
                 g.kv_ratio = sess.cache.kv_ratio();
                 g.n_generated_primary = sess.generated.len();
             }
             g.remaining -= 1;
-            if g.remaining == 0 {
-                let g = self.groups.remove(&sess.group).unwrap();
-                if g.job.cancelled() {
-                    self.metrics.lock().unwrap().cancelled += 1;
+            let group_done = g.remaining == 0;
+            if will_hibernate {
+                let committed = matches!(why, Retire::Done);
+                sess.counted = sess.generated.len();
+                if let Err(e) = self.hibernate_session(sess, name, method, n_prompt, committed) {
+                    // best effort: the reply below still goes out; only the
+                    // resume capability is lost
+                    eprintln!("warning: session hibernation failed ({e}); state dropped");
+                }
+            }
+            if group_done {
+                let g = self.groups.remove(&gid).unwrap();
+                if let Some(err) = g.error {
+                    let _ =
+                        g.job.reply.send(Response::failed(g.job.request.id, g.n_prompt, err));
+                } else if g.job.cancelled() {
+                    self.lock_metrics().cancelled += 1;
                     let _ = g.job.reply.send(Response::failed(
                         g.job.request.id,
                         g.n_prompt,
                         "cancelled: client disconnected".into(),
                     ));
-                    continue;
+                } else {
+                    let mut m = self.lock_metrics();
+                    m.completed += 1;
+                    if !g.resumed {
+                        // a resume has no prefill; a 0 ms sample would
+                        // skew the TTFT percentiles
+                        m.ttft_ms.push(g.ttft_ms);
+                    }
+                    m.kv_ratios.push(g.kv_ratio);
+                    drop(m);
+                    let mut outputs: Vec<String> =
+                        g.outputs.into_iter().map(Option::unwrap_or_default).collect();
+                    let text = std::mem::take(&mut outputs[0]);
+                    let _ = g.job.reply.send(Response {
+                        id: g.job.request.id,
+                        text,
+                        alts: outputs.split_off(1),
+                        n_prompt: g.n_prompt,
+                        n_generated: g.n_generated_primary,
+                        ttft_ms: g.ttft_ms,
+                        total_ms: g.t0.elapsed().as_secs_f64() * 1e3,
+                        kv_ratio: g.kv_ratio,
+                        prefix_hit: g.prefix_hit,
+                        error: None,
+                    });
                 }
-                let mut m = self.metrics.lock().unwrap();
-                m.completed += 1;
-                m.ttft_ms.push(g.ttft_ms);
-                m.kv_ratios.push(g.kv_ratio);
-                drop(m);
-                let mut outputs: Vec<String> =
-                    g.outputs.into_iter().map(Option::unwrap_or_default).collect();
-                let text = std::mem::take(&mut outputs[0]);
-                let _ = g.job.reply.send(Response {
-                    id: g.job.request.id,
-                    text,
-                    alts: outputs.split_off(1),
-                    n_prompt: g.n_prompt,
-                    n_generated: g.n_generated_primary,
-                    ttft_ms: g.ttft_ms,
-                    total_ms: g.t0.elapsed().as_secs_f64() * 1e3,
-                    kv_ratio: g.kv_ratio,
-                    prefix_hit: g.prefix_hit,
-                    error: None,
-                });
             }
         }
         n_retired
     }
+
+    // -----------------------------------------------------------------
+    // Session hibernation: park / save / resume
+    // -----------------------------------------------------------------
+
+    fn hibernated_index(&self, name: &str) -> Option<usize> {
+        self.active
+            .iter()
+            .position(|s| matches!(&s.phase, Phase::Hibernated { name: n, .. } if n == name))
+    }
+
+    /// Park a finished (or abandoned) named session: snapshot it to the
+    /// spill store — so a `resume` survives a batcher restart — then keep
+    /// it in `active` as [`Phase::Hibernated`], holding no seat.
+    fn hibernate_session(
+        &mut self,
+        mut sess: Session,
+        name: String,
+        method: String,
+        n_prompt: usize,
+        committed: bool,
+    ) -> Result<(), String> {
+        let store = self
+            .spill
+            .clone()
+            .ok_or_else(|| "hibernation requires a spill store (--spill-dir)".to_string())?;
+        let cache_blob = sess.cache.hibernate_state()?;
+        let snap = encode_session_snapshot(&method, n_prompt, &sess, committed, &cache_blob);
+        store.save_snapshot(&name, &snap).map_err(|e| e.to_string())?;
+        let old = self.hibernated_index(&name);
+        sess.group = usize::MAX; // no group while parked
+        sess.skip_commit = false;
+        sess.phase =
+            Phase::Hibernated { name, method, n_prompt, committed, last_touch: self.round_no };
+        match old {
+            // latest wins — replace in place: the caller (the retirement
+            // loop) still holds indices into `active`, so the slot must not
+            // shift other elements the way a swap_remove would
+            Some(i) => self.active[i] = sess,
+            None => self.active.push(sess),
+        }
+        Ok(())
+    }
+
+    /// `{"cmd":"save"}`: the named session's snapshot is already on disk
+    /// (written at hibernation); saving evicts its RAM pages so a client
+    /// can detach knowing the parked session costs almost nothing to keep.
+    fn handle_save(&mut self, job: Job) {
+        let name = job.request.session.clone();
+        let id = job.request.id;
+        if !valid_session_name(&name) {
+            self.reject(job, 0, format!("save requires a valid session name, got {name:?}"));
+            return;
+        }
+        let Some(si) = self.hibernated_index(&name) else {
+            let msg = if self.session_is_live(&name) {
+                format!("session '{name}' is still running")
+            } else {
+                format!("unknown session '{name}'")
+            };
+            self.reject(job, 0, msg);
+            return;
+        };
+        match self.active[si].cache.spill_cold() {
+            Ok(_) => {
+                let sess = &self.active[si];
+                let n_prompt = match &sess.phase {
+                    Phase::Hibernated { n_prompt, .. } => *n_prompt,
+                    _ => 0,
+                };
+                let _ = job.reply.send(Response {
+                    id,
+                    text: String::new(),
+                    alts: Vec::new(),
+                    n_prompt,
+                    n_generated: sess.generated.len(),
+                    ttft_ms: 0.0,
+                    total_ms: 0.0,
+                    kv_ratio: sess.cache.kv_ratio(),
+                    prefix_hit: false,
+                    error: None,
+                });
+            }
+            Err(e) => self.reject(job, 0, format!("save failed: {e}")),
+        }
+    }
+
+    /// Whether a non-hibernated session with this name is active.
+    fn session_is_live(&self, name: &str) -> bool {
+        self.active.iter().any(|s| {
+            !s.is_hibernated()
+                && self
+                    .groups
+                    .get(&s.group)
+                    .is_some_and(|g| g.job.request.session == name)
+        })
+    }
+
+    /// `{"cmd":"resume"}` at the queue front: wake the named session (in
+    /// RAM, or rebuilt from its on-disk snapshot after a restart) and seat
+    /// it decoding for `max_new` more tokens. Returns false to defer the
+    /// job — seats or budget are tight but other sessions can still retire.
+    fn try_resume(&mut self) -> bool {
+        let front = self.pending.front().expect("resume without job");
+        let name = front.request.session.clone();
+        let max_new = front.request.max_new;
+        if !valid_session_name(&name) {
+            let job = self.pending.pop_front().unwrap();
+            self.reject(job, 0, format!("resume requires a valid session name, got {name:?}"));
+            return true;
+        }
+        if self.session_is_live(&name) {
+            let job = self.pending.pop_front().unwrap();
+            self.reject(job, 0, format!("session '{name}' is still running"));
+            return true;
+        }
+        let si = match self.hibernated_index(&name) {
+            Some(si) => si,
+            None => match self.revive_from_disk(&name) {
+                Ok(Some(si)) => si,
+                Ok(None) => {
+                    let job = self.pending.pop_front().unwrap();
+                    self.reject(job, 0, format!("unknown session '{name}'"));
+                    return true;
+                }
+                Err(e) => {
+                    let job = self.pending.pop_front().unwrap();
+                    self.reject(job, 0, format!("resume failed: {e}"));
+                    return true;
+                }
+            },
+        };
+        if self.seats_used() + 1 > self.cfg.max_sessions {
+            return false;
+        }
+        let shape = self.engine.shape();
+        let est = self.active[si].cache.spilled_bytes()
+            + shape.n_layers as f64 * shape.full_token_bytes() * max_new as f64;
+        loop {
+            let budget_left = (self.cfg.kv_budget_bytes
+                - self.kv_used_bytes()
+                - self.reserved_prompt_bytes())
+            .max(0.0);
+            if est <= budget_left {
+                break;
+            }
+            if self.spill_coldest_hibernated_except(Some(si)) > 0.0 {
+                continue;
+            }
+            if self.has_schedulable() {
+                return false;
+            }
+            break; // bootstrap: wake anyway rather than deadlock the queue
+        }
+        let job = self.pending.pop_front().unwrap();
+        let Phase::Hibernated { name, method, n_prompt, committed, .. } =
+            std::mem::replace(&mut self.active[si].phase, Phase::Decoding)
+        else {
+            unreachable!()
+        };
+        let ended_on_stop =
+            committed && self.active[si].generated.last() == Some(&self.stop);
+        if ended_on_stop || self.active[si].pos + 1 >= self.max_seq {
+            // the stream already ended (stop token / context limit): reply
+            // the full transcript unchanged and park again
+            let sess = &mut self.active[si];
+            let resp = Response {
+                id: job.request.id,
+                text: tasks::decode(&sess.generated),
+                alts: Vec::new(),
+                n_prompt,
+                n_generated: sess.generated.len(),
+                ttft_ms: 0.0,
+                total_ms: 0.0,
+                kv_ratio: sess.cache.kv_ratio(),
+                prefix_hit: false,
+                error: None,
+            };
+            sess.phase = Phase::Hibernated {
+                name,
+                method,
+                n_prompt,
+                committed,
+                last_touch: self.round_no,
+            };
+            let _ = job.reply.send(resp);
+            return true;
+        }
+        let gid = self.next_gid;
+        self.next_gid += 1;
+        self.groups.insert(gid, Group {
+            job,
+            n_prompt,
+            outputs: vec![None],
+            n_generated_primary: 0,
+            kv_ratio: 0.0,
+            prefix_hit: false,
+            remaining: 1,
+            t0: Instant::now(),
+            ttft_ms: 0.0,
+            error: None,
+            resumed: true,
+        });
+        let sess = &mut self.active[si];
+        sess.group = gid;
+        sess.cand = 0;
+        // `max_new` more tokens on top of what the session already holds
+        sess.max_new = sess.generated.len() + max_new;
+        sess.skip_commit = committed;
+        self.lock_metrics().resumed += 1;
+        true
+    }
+
+    /// Rebuild a hibernated session from its on-disk snapshot (the
+    /// post-restart resume path). The revived session enters `active` as
+    /// [`Phase::Hibernated`] with every sealed page spilled; the first
+    /// decode round faults them back.
+    fn revive_from_disk(&mut self, name: &str) -> Result<Option<usize>, String> {
+        let Some(store) = self.spill.clone() else { return Ok(None) };
+        let Some(blob) = store.load_snapshot(name).map_err(|e| e.to_string())? else {
+            return Ok(None);
+        };
+        let snap = decode_session_snapshot(&blob)?;
+        let mut cache = build_cache(&snap.method, &self.ctx)
+            .map_err(|e| format!("snapshot method '{}': {e}", snap.method))?;
+        cache.set_pool(self.pool.clone());
+        cache.set_spill_store(store);
+        cache.restore_hibernated(&snap.cache_blob)?;
+        if cache.tokens() != snap.pos {
+            return Err(format!(
+                "snapshot inconsistent: cache holds {} tokens, session position is {}",
+                cache.tokens(),
+                snap.pos
+            ));
+        }
+        let si = self.active.len();
+        // the hibernating batcher already counted these tokens
+        let counted = snap.generated.len();
+        self.active.push(Session {
+            group: usize::MAX,
+            cand: 0,
+            cache,
+            pos: snap.pos,
+            next_token: snap.next_token,
+            generated: snap.generated,
+            charges_shared: true,
+            from_entry: None,
+            max_new: 0,
+            phase: Phase::Hibernated {
+                name: name.to_string(),
+                method: snap.method,
+                n_prompt: snap.n_prompt,
+                committed: snap.committed,
+                last_touch: self.round_no,
+            },
+            skip_commit: false,
+            counted,
+        });
+        Ok(Some(si))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session snapshots (scheduler state riding alongside the cache blob)
+// ---------------------------------------------------------------------------
+
+/// Magic ("LXSE") + version of the `sess_<name>.lxs` snapshot blob.
+const SESS_MAGIC: u32 = 0x4c58_5345;
+const SESS_VERSION: u16 = 1;
+
+/// Session names travel in JSON and become file names in the spill dir:
+/// restrict to a filesystem-safe alphabet up front.
+fn valid_session_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+}
+
+struct SessionSnapshot {
+    method: String,
+    n_prompt: usize,
+    pos: usize,
+    next_token: u32,
+    committed: bool,
+    generated: Vec<u32>,
+    cache_blob: Vec<u8>,
+}
+
+fn encode_session_snapshot(
+    method: &str,
+    n_prompt: usize,
+    sess: &Session,
+    committed: bool,
+    cache_blob: &[u8],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + cache_blob.len() + 4 * sess.generated.len());
+    wire::put_u32(&mut buf, SESS_MAGIC);
+    wire::put_u16(&mut buf, SESS_VERSION);
+    wire::put_str(&mut buf, method);
+    wire::put_u32(&mut buf, n_prompt as u32);
+    wire::put_u64(&mut buf, sess.pos as u64);
+    wire::put_u32(&mut buf, sess.next_token);
+    buf.push(committed as u8);
+    wire::put_u32s(&mut buf, &sess.generated);
+    wire::put_bytes(&mut buf, cache_blob);
+    buf
+}
+
+fn decode_session_snapshot(blob: &[u8]) -> Result<SessionSnapshot, String> {
+    let mut r = wire::Reader::new(blob);
+    if r.take_u32()? != SESS_MAGIC {
+        return Err("not a session snapshot (bad magic)".into());
+    }
+    let v = r.take_u16()?;
+    if v != SESS_VERSION {
+        return Err(format!("unsupported session snapshot version {v}"));
+    }
+    let method = r.take_str()?;
+    let n_prompt = r.take_u32()? as usize;
+    let pos = r.take_u64()? as usize;
+    let next_token = r.take_u32()?;
+    let committed = match r.take_u8()? {
+        0 => false,
+        1 => true,
+        x => return Err(format!("bad committed flag {x}")),
+    };
+    let generated = r.take_u32s()?;
+    let cache_blob = r.take_bytes()?;
+    if !r.is_empty() {
+        return Err("trailing bytes after session snapshot".into());
+    }
+    Ok(SessionSnapshot { method, n_prompt, pos, next_token, committed, generated, cache_blob })
 }
 
 /// The `n` most likely tokens, descending (ties to the lower id, so index
@@ -1435,11 +2079,8 @@ mod tests {
         assert_eq!(b.n_prefix_entries(), 1);
 
         let (j2, _r2) = job_with(Request {
-            id: 2,
-            prompt: format!("{prefix}k05?"),
-            max_new: 8,
-            method: String::new(),
             fanout: 2,
+            ..Request::greedy(2, format!("{prefix}k05?"), 8, "")
         });
         b.enqueue(j2);
         b.admit();
@@ -1468,13 +2109,7 @@ mod tests {
     fn fanout_decodes_candidates_in_one_round_and_returns_alts() {
         let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
         let (mut b, metrics) = mk_batcher(cfg.clone(), false);
-        let (j, r) = job_with(Request {
-            id: 9,
-            prompt: "2,7,4>".into(),
-            max_new: 4,
-            method: String::new(),
-            fanout: 3,
-        });
+        let (j, r) = job_with(Request { fanout: 3, ..Request::greedy(9, "2,7,4>", 4, "") });
         b.enqueue(j);
         b.admit();
         b.advance_prefills();
@@ -1507,13 +2142,7 @@ mod tests {
                 Request::greedy(1, "k01=v11;k02=v22;k03=v33;k04=v44;k05=v55;", 6, ""),
                 Request::greedy(2, "k01=v11;k02=v22;k03=v33;k04=v44;k05=v55;k02?", 6, ""),
                 Request::greedy(3, "1+2=", 5, "full"),
-                Request {
-                    id: 4,
-                    prompt: "2,7,4>".into(),
-                    max_new: 5,
-                    method: String::new(),
-                    fanout: 3,
-                },
+                Request { fanout: 3, ..Request::greedy(4, "2,7,4>", 5, "") },
             ]
         };
         let run = |chunk: usize| -> Vec<Response> {
@@ -1778,5 +2407,202 @@ mod tests {
         assert_eq!(pc.entries.len(), 2);
         assert!(pc.lookup("full", &[1, 2]).is_none(), "LRU entry evicted");
         assert!(pc.lookup("full", &[1, 2, 3, 4]).is_some());
+    }
+
+    // ---- tiered residency: hibernate / save / resume ---------------------
+
+    /// Long enough (45 chars + BOS, plus generated tokens) that the lexico
+    /// cache seals at least one CSR page past its recency buffer — so
+    /// hibernation and `save` have pages to actually spill.
+    const LONG_PROMPT: &str = "k01=v11;k02=v12;k03=v13;k04=v14;k05=v15;k01?";
+
+    fn tmp_spill(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lexico_batcher_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn spill_cfg(dir: &std::path::Path) -> BatcherConfig {
+        BatcherConfig {
+            default_method: "lexico:s=2,nb=8".into(),
+            spill_dir: Some(dir.to_path_buf()),
+            ..Default::default()
+        }
+    }
+
+    fn named_job(id: u64, prompt: &str, max_new: usize, sess: &str) -> (Job, Receiver<Response>) {
+        let mut req = Request::greedy(id, prompt, max_new, "");
+        req.session = sess.into();
+        job_with(req)
+    }
+
+    fn verb_job(id: u64, sess: &str, verb: SessionVerb, max_new: usize) -> (Job, Receiver<Response>) {
+        let mut req = Request::greedy(id, "", max_new, "");
+        req.session = sess.into();
+        req.verb = verb;
+        job_with(req)
+    }
+
+    #[test]
+    fn named_session_save_resume_matches_uninterrupted_run() {
+        // uninterrupted reference: one request for the full token budget
+        let dir_ref = tmp_spill("resume_ref");
+        let (mut b, _) = mk_batcher(spill_cfg(&dir_ref), true);
+        let (j, r) = job(1, LONG_PROMPT, 10);
+        b.enqueue(j);
+        run_to_completion(&mut b, 400);
+        let full = r.recv().unwrap();
+        assert!(full.error.is_none(), "{:?}", full.error);
+
+        // the same stream split: 2 tokens under a session name, save
+        // (evict to disk), resume for 8 more
+        let dir = tmp_spill("resume_split");
+        let (mut b2, m2) = mk_batcher(spill_cfg(&dir), true);
+        let (j, r) = named_job(2, LONG_PROMPT, 2, "chat-1");
+        b2.enqueue(j);
+        run_to_completion(&mut b2, 400);
+        let part = r.recv().unwrap();
+        assert!(part.error.is_none(), "{:?}", part.error);
+        assert_eq!(b2.n_hibernated(), 1, "named session must park, not retire");
+        assert_eq!(b2.n_active(), 0);
+
+        let (j, r) = verb_job(3, "chat-1", SessionVerb::Save, 0);
+        b2.enqueue(j);
+        b2.round();
+        let saved = r.recv().unwrap();
+        assert!(saved.error.is_none(), "{:?}", saved.error);
+        assert!(
+            lock_tolerant(&m2).spilled_pages > 0,
+            "save must evict the parked session's sealed pages"
+        );
+
+        let (j, r) = verb_job(4, "chat-1", SessionVerb::Resume, 8);
+        b2.enqueue(j);
+        run_to_completion(&mut b2, 400);
+        let resumed = r.recv().unwrap();
+        assert!(resumed.error.is_none(), "{:?}", resumed.error);
+        assert_eq!(resumed.text, full.text, "resumed continuation diverged");
+        assert_eq!(resumed.n_generated, full.n_generated);
+        assert_eq!(b2.n_hibernated(), 1, "the resumed session parks again");
+        let m = lock_tolerant(&m2);
+        assert_eq!(m.resumed, 1);
+        if full.n_generated > 2 {
+            assert!(m.faults > 0, "resume past the save must fault pages back");
+        }
+    }
+
+    #[test]
+    fn hibernated_session_survives_a_batcher_restart() {
+        let dir_ref = tmp_spill("restart_ref");
+        let (mut b, _) = mk_batcher(spill_cfg(&dir_ref), true);
+        let (j, r) = job(1, LONG_PROMPT, 10);
+        b.enqueue(j);
+        run_to_completion(&mut b, 400);
+        let full = r.recv().unwrap();
+        assert!(full.error.is_none(), "{:?}", full.error);
+
+        let dir = tmp_spill("restart");
+        {
+            let (mut a, _) = mk_batcher(spill_cfg(&dir), true);
+            let (j, r) = named_job(2, LONG_PROMPT, 2, "boot");
+            a.enqueue(j);
+            run_to_completion(&mut a, 400);
+            assert!(r.recv().unwrap().error.is_none());
+        } // batcher dropped — only the on-disk snapshot survives
+
+        let (mut b2, m2) = mk_batcher(spill_cfg(&dir), true);
+        assert_eq!(b2.n_hibernated(), 0);
+        let (j, r) = verb_job(3, "boot", SessionVerb::Resume, 8);
+        b2.enqueue(j);
+        run_to_completion(&mut b2, 400);
+        let resumed = r.recv().unwrap();
+        assert!(resumed.error.is_none(), "{:?}", resumed.error);
+        assert_eq!(resumed.text, full.text, "post-restart continuation diverged");
+        assert_eq!(resumed.n_generated, full.n_generated);
+        if full.n_generated > 2 {
+            assert!(lock_tolerant(&m2).faults > 0, "revived pages must fault from disk");
+        }
+    }
+
+    #[test]
+    fn resume_of_unknown_or_invalid_sessions_is_rejected() {
+        let dir = tmp_spill("unknown");
+        let (mut b, _) = mk_batcher(spill_cfg(&dir), true);
+        let (j, r) = verb_job(1, "nope", SessionVerb::Resume, 4);
+        b.enqueue(j);
+        b.round();
+        assert!(r.recv().unwrap().error.unwrap().contains("unknown session"));
+        let (j, r) = verb_job(2, "../etc/passwd", SessionVerb::Resume, 4);
+        b.enqueue(j);
+        b.round();
+        assert!(r.recv().unwrap().error.unwrap().contains("valid session name"));
+        let (j, r) = verb_job(3, "nope", SessionVerb::Save, 0);
+        b.enqueue(j);
+        b.round();
+        assert!(r.recv().unwrap().error.unwrap().contains("unknown session"));
+        // fan-out on a named session is rejected up front
+        let (j, r) = job_with(Request {
+            fanout: 3,
+            session: "s".into(),
+            ..Request::greedy(4, "1+2=", 4, "")
+        });
+        b.enqueue(j);
+        b.round();
+        assert!(r.recv().unwrap().error.unwrap().contains("fan out"));
+    }
+
+    #[test]
+    fn residency_pressure_spills_hibernated_sessions() {
+        let dir = tmp_spill("pressure");
+        let mut cfg = spill_cfg(&dir);
+        cfg.resident_budget_bytes = 1.0; // practically zero: all cold bytes must go
+        let (mut b, m) = mk_batcher(cfg, true);
+        let (j, r) = named_job(1, LONG_PROMPT, 2, "cold");
+        b.enqueue(j);
+        run_to_completion(&mut b, 400);
+        assert!(r.recv().unwrap().error.is_none());
+        assert_eq!(b.n_hibernated(), 1);
+        let m = lock_tolerant(&m);
+        assert!(m.spilled_pages > 0, "residency pressure must spill the parked session");
+        assert!(m.spill_bytes > 0.0);
+        assert_eq!(m.hibernated_sessions, 1);
+    }
+
+    #[test]
+    fn corrupt_page_file_fails_the_resume_cleanly_and_server_survives() {
+        let dir = tmp_spill("corrupt");
+        let (mut b, _) = mk_batcher(spill_cfg(&dir), true);
+        let (j, r) = named_job(1, LONG_PROMPT, 2, "frag");
+        b.enqueue(j);
+        run_to_completion(&mut b, 400);
+        let first = r.recv().unwrap();
+        assert!(first.error.is_none(), "{:?}", first.error);
+        if first.text.ends_with('\n') {
+            return; // stream already hit the stop token; a resume would not decode
+        }
+        // evict the pages, then corrupt the page file on disk
+        let (j, r) = verb_job(2, "frag", SessionVerb::Save, 0);
+        b.enqueue(j);
+        b.round();
+        assert!(r.recv().unwrap().error.is_none());
+        let pages = dir.join("pages.lxp");
+        let mut bytes = std::fs::read(&pages).unwrap();
+        assert!(!bytes.is_empty(), "save left no pages on disk");
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&pages, &bytes).unwrap();
+
+        let (j, r) = verb_job(3, "frag", SessionVerb::Resume, 4);
+        b.enqueue(j);
+        run_to_completion(&mut b, 400);
+        let resp = r.recv().unwrap();
+        let err = resp.error.expect("corrupt pages must fail the resume with an error reply");
+        assert!(err.contains("fault"), "{err}");
+
+        // the batcher keeps serving after the failed fault
+        let (j, r) = job(4, "1+2=", 3);
+        b.enqueue(j);
+        run_to_completion(&mut b, 400);
+        assert!(r.recv().unwrap().error.is_none());
     }
 }

@@ -29,7 +29,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::{Job, Request, Response, StreamDelta};
+use super::{lock_tolerant, Job, Request, Response, SessionVerb, StreamDelta};
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
@@ -125,9 +125,10 @@ fn handle_line(
             return Ok(true);
         }
     };
+    let mut verb = SessionVerb::Generate;
     match parsed.get("cmd").as_str() {
         Some("metrics") => {
-            let report = metrics.lock().unwrap().report();
+            let report = lock_tolerant(metrics).report();
             writeln!(writer, "{}", json::obj(vec![("metrics", json::s(&report))]).to_string())?;
             return Ok(true);
         }
@@ -136,6 +137,10 @@ fn handle_line(
             writeln!(writer, "{}", json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
             return Ok(false);
         }
+        // session verbs ride the normal request path: they queue a Job and
+        // reply with a Response line (error field set on failure)
+        Some("save") => verb = SessionVerb::Save,
+        Some("resume") => verb = SessionVerb::Resume,
         _ => {}
     }
     let fanout = parsed
@@ -149,6 +154,8 @@ fn handle_line(
         max_new: parsed.get("max_new").as_usize().unwrap_or(16),
         method: parsed.get("method").as_str().unwrap_or("").to_string(),
         fanout,
+        session: parsed.get("session").as_str().unwrap_or("").to_string(),
+        verb,
     };
     let (rtx, rrx) = channel();
     let mut job = Job::new(request, rtx);
@@ -496,6 +503,76 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(20));
         }
         let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn session_save_resume_round_trip_over_tcp() {
+        use crate::dict::{Dictionary, DictionarySet};
+        let engine = Arc::new(Engine::new(tiny_weights(17)));
+        let shape = engine.shape();
+        let dicts = Some(Arc::new(DictionarySet {
+            keys: (0..shape.n_layers)
+                .map(|i| Dictionary::random(shape.head_dim, 64, 500 + i as u64))
+                .collect(),
+            values: (0..shape.n_layers)
+                .map(|i| Dictionary::random(shape.head_dim, 64, 700 + i as u64))
+                .collect(),
+        }));
+        let dir = std::env::temp_dir().join(format!("lexico_http_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (jtx, jrx) = channel();
+        let m2 = metrics.clone();
+        let cfg = BatcherConfig {
+            default_method: "lexico:s=2,nb=8".into(),
+            spill_dir: Some(dir),
+            ..Default::default()
+        };
+        std::thread::spawn(move || batcher::run(engine, dicts, cfg, jrx, m2));
+        let (atx, arx) = channel();
+        std::thread::spawn(move || {
+            serve("127.0.0.1:0", jtx, metrics, move |a| {
+                let _ = atx.send(a);
+            })
+        });
+        let addr = arx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        // a named session generates a couple of tokens, then parks
+        writeln!(
+            conn,
+            r#"{{"prompt": "k01=v11;k02=v12;k03=v13;k04=v14;k05=v15;k01?", "max_new": 2, "session": "tcp-chat"}}"#
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        let text_a = v.get("text").as_str().unwrap().to_string();
+        // save: evict its pages to disk
+        writeln!(conn, r#"{{"cmd": "save", "session": "tcp-chat"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").as_str().is_none(), "{line}");
+        // resume: the stream continues from where it parked
+        writeln!(conn, r#"{{"cmd": "resume", "session": "tcp-chat", "max_new": 6}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        let text_b = v.get("text").as_str().unwrap().to_string();
+        assert!(
+            text_b.starts_with(&text_a),
+            "resume must extend the saved stream: {text_a:?} -> {text_b:?}"
+        );
+        // resuming a bogus session errors without killing the server
+        writeln!(conn, r#"{{"cmd": "resume", "session": "ghost", "max_new": 2}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let err = Json::parse(&line).unwrap();
+        assert!(err.get("error").as_str().unwrap().contains("unknown session"), "{line}");
         writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
     }
 

@@ -36,10 +36,20 @@ pub struct Metrics {
     /// `prefill_chunk × prefilling sessions`; with one admission in
     /// flight, by the chunk budget itself (the TPOT-cliff guard)
     pub max_round_prefill_tokens: u64,
+    /// named sessions woken by a `resume` request
+    pub resumed: u64,
     /// gauges refreshed at the end of every scheduling round
     pub active_sessions: u64,
     pub prefilling_sessions: u64,
     pub kv_used_bytes: f64,
+    /// named sessions parked for a later `resume` (gauge)
+    pub hibernated_sessions: u64,
+    /// CSR pages written to the spill store over the server's lifetime
+    pub spilled_pages: u64,
+    /// bytes of KV state currently evicted to disk (gauge)
+    pub spill_bytes: f64,
+    /// spilled pages read back because a decode round needed them
+    pub faults: u64,
     pub ttft_ms: Vec<f64>,
     pub per_token_ms: Vec<f64>,
     /// wall time of each batched decode round (all active sessions advanced
@@ -90,6 +100,16 @@ impl Metrics {
             self.prefilling_sessions,
             self.kv_used_bytes / 1024.0
         );
+        if self.spilled_pages + self.faults + self.hibernated_sessions + self.resumed > 0 {
+            s += &format!(
+                "\nspill   : hibernated={} resumed={} spilled_pages={} spill_bytes={:.1} KiB faults={}",
+                self.hibernated_sessions,
+                self.resumed,
+                self.spilled_pages,
+                self.spill_bytes / 1024.0,
+                self.faults
+            );
+        }
         if let Some(t) = self.ttft() {
             s += &format!(
                 "\nTTFT   ms: p50 {:.2} p95 {:.2} p99 {:.2} mean {:.2}",
@@ -165,10 +185,19 @@ mod tests {
         m.active_sessions = 4;
         m.prefilling_sessions = 1;
         m.kv_used_bytes = 4096.0;
+        m.hibernated_sessions = 2;
+        m.resumed = 1;
+        m.spilled_pages = 6;
+        m.spill_bytes = 3072.0;
+        m.faults = 4;
         let r = m.report();
         assert!(r.contains("completed=2"));
         assert!(r.contains("cancelled=1"), "{r}");
         assert!(r.contains("active=4 prefilling=1 kv_used=4.0 KiB"), "{r}");
+        assert!(
+            r.contains("hibernated=2 resumed=1 spilled_pages=6 spill_bytes=3.0 KiB faults=4"),
+            "{r}"
+        );
         assert!(r.contains("5 prefill chunks, max 256"), "{r}");
         assert!(r.contains("7 tokens streamed"), "{r}");
         assert!(r.contains("TTFT"));

@@ -25,7 +25,30 @@ pub mod metrics;
 
 use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Poison-tolerant mutex lock: a panic on another thread while it held the
+/// lock must not cascade into every later lock site panicking too (one
+/// crashed request would otherwise kill the whole server). The protected
+/// data is plain counters/gauges, always valid, so recovering the guard
+/// from a poisoned lock is safe.
+pub fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// What a request asks the batcher to do with its (optional) named session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SessionVerb {
+    /// run the prompt; if `session` is named, hibernate on completion
+    #[default]
+    Generate,
+    /// `{"cmd":"save"}`: persist the named hibernated session's snapshot
+    /// and evict its pages from RAM
+    Save,
+    /// `{"cmd":"resume"}`: wake the named session (from RAM or from its
+    /// on-disk snapshot after a restart) and continue decoding
+    Resume,
+}
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -40,6 +63,12 @@ pub struct Request {
     /// candidates fork the same prefilled cache and advance in the same
     /// decode round. 0 or 1 = a single greedy continuation.
     pub fanout: usize,
+    /// session name (`[A-Za-z0-9_-]`); empty = anonymous. A named session
+    /// hibernates instead of retiring — on completion or on client
+    /// disconnect — so a later `resume` continues it bitwise-identically.
+    pub session: String,
+    /// what to do with the named session (generate / save / resume)
+    pub verb: SessionVerb,
 }
 
 impl Request {
@@ -50,7 +79,15 @@ impl Request {
         max_new: usize,
         method: impl Into<String>,
     ) -> Self {
-        Request { id, prompt: prompt.into(), max_new, method: method.into(), fanout: 1 }
+        Request {
+            id,
+            prompt: prompt.into(),
+            max_new,
+            method: method.into(),
+            fanout: 1,
+            session: String::new(),
+            verb: SessionVerb::Generate,
+        }
     }
 }
 

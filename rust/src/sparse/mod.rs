@@ -259,6 +259,99 @@ impl CsrSlab {
         }
     }
 
+    /// Borrow the three flat storage arrays `(idx, coef_bits, row_off)` —
+    /// the serialization view used by the page store (`store::page`).
+    pub fn raw_parts(&self) -> (&[u16], &[u16], &[u32]) {
+        (&self.idx, &self.coef_bits, &self.row_off)
+    }
+
+    /// Rebuild a slab from its flat arrays, validating the CSR invariants
+    /// (`row_off` starts at 0, is monotone, and its last entry equals the
+    /// pair-array length). This is the deserialization entry point: a slab
+    /// built from a well-formed page file is field-for-field identical to
+    /// the slab that was serialized, so every downstream sweep is bitwise
+    /// unchanged.
+    pub fn from_raw_parts(
+        idx: Vec<u16>,
+        coef_bits: Vec<u16>,
+        row_off: Vec<u32>,
+        prec: CoefPrecision,
+    ) -> Result<CsrSlab, String> {
+        if idx.len() != coef_bits.len() {
+            return Err(format!(
+                "csr: idx/coef length mismatch ({} vs {})",
+                idx.len(),
+                coef_bits.len()
+            ));
+        }
+        if row_off.first() != Some(&0) {
+            return Err("csr: row_off must start at 0".into());
+        }
+        if row_off.windows(2).any(|w| w[0] > w[1]) {
+            return Err("csr: row_off must be monotone non-decreasing".into());
+        }
+        if *row_off.last().unwrap() as usize != idx.len() {
+            return Err(format!(
+                "csr: row_off end {} != nnz {}",
+                row_off.last().unwrap(),
+                idx.len()
+            ));
+        }
+        Ok(CsrSlab {
+            idx,
+            coef_bits,
+            row_off,
+            precision_fp16: prec == CoefPrecision::Fp16,
+        })
+    }
+
+    /// Cold-tier recompression: keep at most `keep` atoms per row, dropping
+    /// the lowest-|coefficient| ones first (ties broken toward keeping the
+    /// earlier storage position). Survivors stay in their original storage
+    /// order, so the result is a valid, smaller slab of the same precision.
+    /// Lossy by construction — never applied inside the bitwise contract.
+    pub fn retain_top(&self, keep: usize) -> CsrSlab {
+        let mut out = CsrSlab::new(self.precision());
+        let mut order: Vec<usize> = Vec::new();
+        for r in 0..self.rows() {
+            let (idx, bits) = self.row(r);
+            if idx.len() <= keep {
+                out.push_bits(idx, bits);
+                continue;
+            }
+            order.clear();
+            order.extend(0..idx.len());
+            // sort by descending |coef|, ascending position on ties
+            order.sort_by(|&a, &b| {
+                let (ma, mb) = (self.decode(bits[a]).abs(), self.decode(bits[b]).abs());
+                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            let mut kept: Vec<usize> = order[..keep].to_vec();
+            kept.sort_unstable();
+            let ki: Vec<u16> = kept.iter().map(|&j| idx[j]).collect();
+            let kb: Vec<u16> = kept.iter().map(|&j| bits[j]).collect();
+            out.push_bits(&ki, &kb);
+        }
+        out
+    }
+
+    /// Cold-tier precision tightening: requantize every coefficient through
+    /// `prec` (meaningful for FP16 → FP8; FP8 → FP8 is the identity since
+    /// stored bits already round-trip through e4m3). Lossy for FP16 inputs
+    /// — never applied inside the bitwise contract.
+    pub fn to_precision(&self, prec: CoefPrecision) -> CsrSlab {
+        if prec == self.precision() {
+            return self.clone();
+        }
+        let mut out = CsrSlab::new(prec);
+        for r in 0..self.rows() {
+            let (idx, bits) = self.row(r);
+            let vals: Vec<f32> = bits.iter().map(|&b| self.decode(b)).collect();
+            out.push_f32(idx, &vals);
+        }
+        out
+    }
+
     /// Materialize as per-token [`CsrRow`]s — the retained row-iterator
     /// view used by reference implementations in tests and benches.
     pub fn to_rows(&self) -> Vec<CsrRow> {
@@ -396,6 +489,78 @@ mod tests {
         assert_eq!(slab.nnz(), 0);
         assert_eq!(slab.precision(), CoefPrecision::Fp16);
         assert_eq!(slab.bytes(), 0);
+    }
+
+    #[test]
+    fn raw_parts_round_trip_is_field_exact() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            let mut slab = CsrSlab::new(prec);
+            for r in 0..9 {
+                let nnz = r % 4;
+                let idx: Vec<u16> = (0..nnz as u16).map(|j| j * 7 + r as u16).collect();
+                slab.push_f32(&idx, &rng.normal_vec(nnz));
+            }
+            let (i, c, o) = slab.raw_parts();
+            let back =
+                CsrSlab::from_raw_parts(i.to_vec(), c.to_vec(), o.to_vec(), prec).unwrap();
+            let (bi, bc, bo) = back.raw_parts();
+            assert_eq!((i, c, o), (bi, bc, bo));
+            assert_eq!(back.precision(), prec);
+            assert_eq!(back.bytes(), slab.bytes());
+        }
+    }
+
+    #[test]
+    fn from_raw_parts_rejects_malformed_csr() {
+        let prec = CoefPrecision::Fp8;
+        // idx/coef length mismatch
+        assert!(CsrSlab::from_raw_parts(vec![1, 2], vec![3], vec![0, 2], prec).is_err());
+        // row_off not starting at 0
+        assert!(CsrSlab::from_raw_parts(vec![1], vec![3], vec![1, 1], prec).is_err());
+        // row_off decreasing
+        assert!(CsrSlab::from_raw_parts(vec![1, 2], vec![3, 4], vec![0, 2, 1], prec).is_err());
+        // row_off end != nnz
+        assert!(CsrSlab::from_raw_parts(vec![1, 2], vec![3, 4], vec![0, 1], prec).is_err());
+        // empty row_off
+        assert!(CsrSlab::from_raw_parts(vec![], vec![], vec![], prec).is_err());
+    }
+
+    #[test]
+    fn retain_top_keeps_largest_coefs_in_storage_order() {
+        let mut slab = CsrSlab::new(CoefPrecision::Fp16);
+        slab.push_f32(&[4, 9, 2, 7], &[0.25, -2.0, 1.0, 0.5]);
+        slab.push_f32(&[1], &[3.0]); // shorter than keep: untouched
+        slab.push_f32(&[], &[]); // empty row survives as empty
+        let top = slab.retain_top(2);
+        assert_eq!(top.rows(), 3);
+        // row 0: keeps |-2.0| (idx 9) and |1.0| (idx 2), original order
+        let (idx, bits) = top.row(0);
+        assert_eq!(idx, &[9, 2]);
+        assert_eq!(top.decode(bits[0]), -2.0);
+        assert_eq!(top.decode(bits[1]), 1.0);
+        let (idx, _) = top.row(1);
+        assert_eq!(idx, &[1]);
+        assert_eq!(top.row(2).0.len(), 0);
+        assert!(top.bytes() < slab.bytes());
+    }
+
+    #[test]
+    fn to_precision_requantizes_through_e4m3() {
+        let mut slab = CsrSlab::new(CoefPrecision::Fp16);
+        slab.push_f32(&[0, 3], &[0.3, -1.7]);
+        let cold = slab.to_precision(CoefPrecision::Fp8);
+        assert_eq!(cold.precision(), CoefPrecision::Fp8);
+        let (idx, bits) = cold.row(0);
+        assert_eq!(idx, slab.row(0).0);
+        for (j, &b) in bits.iter().enumerate() {
+            let want = fp8::e4m3_to_f32(fp8::f32_to_e4m3(slab.decode(slab.row(0).1[j])));
+            assert_eq!(cold.decode(b).to_bits(), want.to_bits());
+        }
+        // identity for matching precision
+        let same = slab.to_precision(CoefPrecision::Fp16);
+        assert_eq!(same.raw_parts(), slab.raw_parts());
     }
 
     #[test]

@@ -1,0 +1,660 @@
+//! Tiered KV residency: the on-disk page store (DESIGN.md §11).
+//!
+//! Sealed [`crate::cache`] pages are immutable, position-independent pairs
+//! of CSR slabs — exactly the property that makes them spillable. This
+//! module provides the disk half of the residency tier:
+//!
+//! - [`wire`]: little-endian encode/decode helpers shared by every
+//!   serialized artifact (pages, session snapshots).
+//! - a binary page format (`encode_page`/`decode_page`): a fixed header
+//!   carrying magic, version, per-side precision, row/nnz counts and an
+//!   FNV-1a 64 payload checksum, followed by the six flat CSR arrays.
+//! - [`PageFile`]: an append-only file of pages with an in-memory index,
+//!   rebuilt by a validating scan on reopen (a torn tail from a crash
+//!   mid-append is truncated away rather than poisoning the file).
+//! - [`SpillStore`]: the shared, thread-safe handle sessions spill through,
+//!   with cumulative spill/fault counters and the opt-in cold-tier
+//!   recompression pass (drop lowest-|coef| atoms and/or tighten FP16
+//!   coefficients to FP8) applied at spill time.
+//!
+//! Contract: without a cold tier, `fault(spill(page))` is field-for-field
+//! identical to the page that was spilled, so a spilled-then-faulted
+//! session's decode stream is bitwise-identical to a never-spilled one.
+//! Cold-tier recompression is lossy by design and excluded from that
+//! contract (tolerance goldens pin it instead).
+
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::sparse::{CoefPrecision, CsrSlab};
+
+pub mod wire;
+
+/// Page header magic: `"LXPG"`.
+pub const PAGE_MAGIC: u32 = 0x4c58_5047;
+/// Page format version.
+pub const PAGE_VERSION: u16 = 1;
+/// Fixed page header length in bytes.
+pub const HEADER_LEN: usize = 28;
+
+/// FNV-1a 64-bit hash — the page payload checksum.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Errors from the page store. `Corrupt` carries the file offset so a bad
+/// page is diagnosable; both render as a plain message for session-level
+/// error replies (the server never panics on a bad page file).
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    Corrupt { offset: u64, what: String },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "page store io: {e}"),
+            StoreError::Corrupt { offset, what } => {
+                write!(f, "page store corrupt at offset {offset}: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+/// Location of one page inside the page file. Self-describing (offset +
+/// total length including header), so refs stay valid across process
+/// restarts — the append-only file never moves a written page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageRef {
+    pub offset: u64,
+    pub len: u32,
+}
+
+fn prec_byte(p: CoefPrecision) -> u8 {
+    match p {
+        CoefPrecision::Fp8 => 0,
+        CoefPrecision::Fp16 => 1,
+    }
+}
+
+fn byte_prec(b: u8, offset: u64) -> Result<CoefPrecision, StoreError> {
+    match b {
+        0 => Ok(CoefPrecision::Fp8),
+        1 => Ok(CoefPrecision::Fp16),
+        _ => Err(StoreError::Corrupt {
+            offset,
+            what: format!("bad precision byte {b}"),
+        }),
+    }
+}
+
+fn slab_payload(buf: &mut Vec<u8>, s: &CsrSlab) {
+    let (idx, bits, off) = s.raw_parts();
+    wire::put_u16_slice_raw(buf, idx);
+    wire::put_u16_slice_raw(buf, bits);
+    wire::put_u32_slice_raw(buf, off);
+}
+
+/// Serialize a (K, V) slab pair into the page wire format.
+///
+/// Layout (little-endian): `magic u32 | version u16 | k_prec u8 | v_prec u8
+/// | rows u32 | k_nnz u32 | v_nnz u32 | checksum u64 | payload`, where the
+/// payload is the six flat arrays `k.idx, k.coef_bits, k.row_off, v.idx,
+/// v.coef_bits, v.row_off` and the checksum is FNV-1a 64 over the payload.
+/// Both slabs must have the same row count (a page covers one token span).
+pub fn encode_page(k: &CsrSlab, v: &CsrSlab) -> Vec<u8> {
+    assert_eq!(k.rows(), v.rows(), "page K/V slabs must cover the same rows");
+    let mut payload = Vec::with_capacity(4 * (k.nnz() + v.nnz()) + 8 * (k.rows() + 1));
+    slab_payload(&mut payload, k);
+    slab_payload(&mut payload, v);
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    wire::put_u32(&mut buf, PAGE_MAGIC);
+    wire::put_u16(&mut buf, PAGE_VERSION);
+    buf.push(prec_byte(k.precision()));
+    buf.push(prec_byte(v.precision()));
+    wire::put_u32(&mut buf, k.rows() as u32);
+    wire::put_u32(&mut buf, k.nnz() as u32);
+    wire::put_u32(&mut buf, v.nnz() as u32);
+    wire::put_u64(&mut buf, fnv1a64(&payload));
+    buf.extend_from_slice(&payload);
+    buf
+}
+
+struct PageHeader {
+    k_prec: CoefPrecision,
+    v_prec: CoefPrecision,
+    rows: u32,
+    k_nnz: u32,
+    v_nnz: u32,
+    checksum: u64,
+}
+
+impl PageHeader {
+    fn payload_len(&self) -> usize {
+        let per_side_off = 4 * (self.rows as usize + 1);
+        2 * (self.k_nnz as usize + self.v_nnz as usize) * 2 + 2 * per_side_off
+    }
+
+    fn total_len(&self) -> usize {
+        HEADER_LEN + self.payload_len()
+    }
+}
+
+fn decode_header(buf: &[u8], offset: u64) -> Result<PageHeader, StoreError> {
+    if buf.len() < HEADER_LEN {
+        return Err(StoreError::Corrupt {
+            offset,
+            what: format!("truncated header ({} of {HEADER_LEN} bytes)", buf.len()),
+        });
+    }
+    let mut r = wire::Reader::new(&buf[..HEADER_LEN]);
+    let magic = r.take_u32().unwrap();
+    if magic != PAGE_MAGIC {
+        return Err(StoreError::Corrupt {
+            offset,
+            what: format!("bad magic {magic:#010x}"),
+        });
+    }
+    let version = r.take_u16().unwrap();
+    if version != PAGE_VERSION {
+        return Err(StoreError::Corrupt {
+            offset,
+            what: format!("unsupported page version {version}"),
+        });
+    }
+    let k_prec = byte_prec(r.take_u8().unwrap(), offset)?;
+    let v_prec = byte_prec(r.take_u8().unwrap(), offset)?;
+    let rows = r.take_u32().unwrap();
+    let k_nnz = r.take_u32().unwrap();
+    let v_nnz = r.take_u32().unwrap();
+    let checksum = r.take_u64().unwrap();
+    Ok(PageHeader { k_prec, v_prec, rows, k_nnz, v_nnz, checksum })
+}
+
+fn decode_slab(
+    r: &mut wire::Reader<'_>,
+    nnz: usize,
+    rows: usize,
+    prec: CoefPrecision,
+    offset: u64,
+) -> Result<CsrSlab, StoreError> {
+    let corrupt = |what: String| StoreError::Corrupt { offset, what };
+    let idx = r.take_u16_slice_raw(nnz).map_err(&corrupt)?;
+    let bits = r.take_u16_slice_raw(nnz).map_err(&corrupt)?;
+    let off = r.take_u32_slice_raw(rows + 1).map_err(&corrupt)?;
+    CsrSlab::from_raw_parts(idx, bits, off, prec).map_err(&corrupt)
+}
+
+/// Decode one page produced by [`encode_page`], verifying magic, version,
+/// checksum, and the CSR invariants of both slabs. `offset` is only used to
+/// label errors.
+pub fn decode_page(buf: &[u8], offset: u64) -> Result<(CsrSlab, CsrSlab), StoreError> {
+    let h = decode_header(buf, offset)?;
+    if buf.len() != h.total_len() {
+        return Err(StoreError::Corrupt {
+            offset,
+            what: format!("length {} != header-implied {}", buf.len(), h.total_len()),
+        });
+    }
+    let payload = &buf[HEADER_LEN..];
+    let got = fnv1a64(payload);
+    if got != h.checksum {
+        return Err(StoreError::Corrupt {
+            offset,
+            what: format!("checksum mismatch (stored {:#018x}, computed {got:#018x})", h.checksum),
+        });
+    }
+    let mut r = wire::Reader::new(payload);
+    let rows = h.rows as usize;
+    let k = decode_slab(&mut r, h.k_nnz as usize, rows, h.k_prec, offset)?;
+    let v = decode_slab(&mut r, h.v_nnz as usize, rows, h.v_prec, offset)?;
+    Ok((k, v))
+}
+
+/// Append-only file of encoded pages plus the in-memory index of every
+/// page it holds. Reopening an existing file rebuilds the index with a
+/// validating header scan; a torn tail (crash mid-append) is truncated.
+pub struct PageFile {
+    file: File,
+    path: PathBuf,
+    end: u64,
+    index: Vec<PageRef>,
+}
+
+impl PageFile {
+    /// Open (or create) the page file at `path`, scanning any existing
+    /// contents to rebuild the index.
+    pub fn open(path: &Path) -> Result<PageFile, StoreError> {
+        let mut file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut index = Vec::new();
+        let mut off = 0u64;
+        let mut header = [0u8; HEADER_LEN];
+        while off + HEADER_LEN as u64 <= file_len {
+            file.seek(SeekFrom::Start(off))?;
+            file.read_exact(&mut header)?;
+            let h = match decode_header(&header, off) {
+                Ok(h) => h,
+                // garbage header mid-file: stop indexing here, truncate tail
+                Err(_) => break,
+            };
+            let total = h.total_len() as u64;
+            if off + total > file_len {
+                break; // torn append: page body incomplete
+            }
+            index.push(PageRef { offset: off, len: total as u32 });
+            off += total;
+        }
+        if off < file_len {
+            file.set_len(off)?; // drop the torn tail
+        }
+        file.seek(SeekFrom::Start(off))?;
+        Ok(PageFile { file, path: path.to_path_buf(), end: off, index })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of pages in the file.
+    pub fn pages(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Total bytes of appended pages.
+    pub fn bytes(&self) -> u64 {
+        self.end
+    }
+
+    /// The in-memory index, in append order.
+    pub fn index(&self) -> &[PageRef] {
+        &self.index
+    }
+
+    /// Append one page, returning its stable ref.
+    pub fn append(&mut self, k: &CsrSlab, v: &CsrSlab) -> Result<PageRef, StoreError> {
+        let buf = encode_page(k, v);
+        self.file.seek(SeekFrom::Start(self.end))?;
+        self.file.write_all(&buf)?;
+        self.file.flush()?;
+        let r = PageRef { offset: self.end, len: buf.len() as u32 };
+        self.end += buf.len() as u64;
+        self.index.push(r);
+        Ok(r)
+    }
+
+    /// Read and validate the page at `r`.
+    pub fn read(&mut self, r: PageRef) -> Result<(CsrSlab, CsrSlab), StoreError> {
+        if r.offset + r.len as u64 > self.end {
+            return Err(StoreError::Corrupt {
+                offset: r.offset,
+                what: format!(
+                    "page ref past end of file ({} + {} > {})",
+                    r.offset, r.len, self.end
+                ),
+            });
+        }
+        let mut buf = vec![0u8; r.len as usize];
+        self.file.seek(SeekFrom::Start(r.offset))?;
+        self.file.read_exact(&mut buf)?;
+        decode_page(&buf, r.offset)
+    }
+}
+
+/// Opt-in cold-tier recompression applied at spill time: keep at most
+/// `keep_atoms` per row (largest |coef| first) and/or requantize FP16
+/// coefficients to FP8. Lossy — excluded from the bitwise contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ColdTier {
+    pub keep_atoms: Option<usize>,
+    pub to_fp8: bool,
+}
+
+impl ColdTier {
+    pub fn is_active(&self) -> bool {
+        self.keep_atoms.is_some() || self.to_fp8
+    }
+
+    fn apply(&self, s: &CsrSlab) -> CsrSlab {
+        let mut out = match self.keep_atoms {
+            Some(k) => s.retain_top(k),
+            None => s.clone(),
+        };
+        if self.to_fp8 {
+            out = out.to_precision(CoefPrecision::Fp8);
+        }
+        out
+    }
+}
+
+/// Shared, thread-safe spill handle: one page file behind a poison-tolerant
+/// mutex, cumulative counters, and session-snapshot storage in the same
+/// directory. Cheaply clonable via `Arc` at the call sites.
+pub struct SpillStore {
+    file: Mutex<PageFile>,
+    dir: PathBuf,
+    cold: ColdTier,
+    spilled_pages: AtomicU64,
+    spilled_bytes: AtomicU64,
+    faults: AtomicU64,
+    faulted_bytes: AtomicU64,
+}
+
+impl SpillStore {
+    /// Open (or create) a spill directory; pages live in `dir/pages.lxp`.
+    pub fn open(dir: &Path) -> Result<SpillStore, StoreError> {
+        fs::create_dir_all(dir)?;
+        let file = PageFile::open(&dir.join("pages.lxp"))?;
+        Ok(SpillStore {
+            file: Mutex::new(file),
+            dir: dir.to_path_buf(),
+            cold: ColdTier::default(),
+            spilled_pages: AtomicU64::new(0),
+            spilled_bytes: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            faulted_bytes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn with_cold_tier(mut self, cold: ColdTier) -> SpillStore {
+        self.cold = cold;
+        self
+    }
+
+    pub fn cold_tier(&self) -> ColdTier {
+        self.cold
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file(&self) -> MutexGuard<'_, PageFile> {
+        // a panic while appending must not brick every other session
+        self.file.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Spill one page, applying the cold tier if configured. Returns the
+    /// page ref the caller stores in place of the resident page.
+    pub fn spill(&self, k: &CsrSlab, v: &CsrSlab) -> Result<PageRef, StoreError> {
+        let r = if self.cold.is_active() {
+            let (ck, cv) = (self.cold.apply(k), self.cold.apply(v));
+            self.file().append(&ck, &cv)?
+        } else {
+            self.file().append(k, v)?
+        };
+        self.spilled_pages.fetch_add(1, Ordering::Relaxed);
+        self.spilled_bytes.fetch_add(r.len as u64, Ordering::Relaxed);
+        Ok(r)
+    }
+
+    /// Fault one page back in, validating header + checksum + CSR shape.
+    pub fn fault(&self, r: PageRef) -> Result<(CsrSlab, CsrSlab), StoreError> {
+        let kv = self.file().read(r)?;
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        self.faulted_bytes.fetch_add(r.len as u64, Ordering::Relaxed);
+        Ok(kv)
+    }
+
+    /// Cumulative (pages spilled, bytes spilled, faults, bytes faulted).
+    pub fn counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.spilled_pages.load(Ordering::Relaxed),
+            self.spilled_bytes.load(Ordering::Relaxed),
+            self.faults.load(Ordering::Relaxed),
+            self.faulted_bytes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Pages currently in the page file (append-only: never shrinks).
+    pub fn pages_on_disk(&self) -> usize {
+        self.file().pages()
+    }
+
+    fn snapshot_path(&self, name: &str) -> Result<PathBuf, StoreError> {
+        if name.is_empty()
+            || name.len() > 128
+            || !name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+        {
+            return Err(StoreError::Corrupt {
+                offset: 0,
+                what: format!("invalid session name {name:?} (want [A-Za-z0-9_-]{{1,128}})"),
+            });
+        }
+        Ok(self.dir.join(format!("sess_{name}.lxs")))
+    }
+
+    /// Persist a session snapshot (atomically: temp file + rename). The
+    /// blob is opaque to the store; pages it references stay in the shared
+    /// page file.
+    pub fn save_snapshot(&self, name: &str, blob: &[u8]) -> Result<(), StoreError> {
+        let path = self.snapshot_path(name)?;
+        let tmp = path.with_extension("tmp");
+        let mut f = File::create(&tmp)?;
+        f.write_all(blob)?;
+        f.sync_all()?;
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Load a session snapshot; `Ok(None)` when no such session is saved.
+    pub fn load_snapshot(&self, name: &str) -> Result<Option<Vec<u8>>, StoreError> {
+        let path = self.snapshot_path(name)?;
+        match fs::read(&path) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Remove a saved session snapshot (idempotent).
+    pub fn drop_snapshot(&self, name: &str) -> Result<(), StoreError> {
+        let path = self.snapshot_path(name)?;
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn slab_pair(rng: &mut Rng, rows: usize, prec: CoefPrecision) -> (CsrSlab, CsrSlab) {
+        let mut k = CsrSlab::new(prec);
+        let mut v = CsrSlab::new(prec);
+        for _ in 0..rows {
+            let nnz = 1 + rng.below(8);
+            let idx: Vec<u16> = (0..nnz).map(|_| rng.below(512) as u16).collect();
+            k.push_f32(&idx, &rng.normal_vec(nnz));
+            let nnz = 1 + rng.below(8);
+            let idx: Vec<u16> = (0..nnz).map(|_| rng.below(512) as u16).collect();
+            v.push_f32(&idx, &rng.normal_vec(nnz));
+        }
+        (k, v)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lexico_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn assert_slab_eq(a: &CsrSlab, b: &CsrSlab) {
+        assert_eq!(a.precision(), b.precision());
+        assert_eq!(a.raw_parts(), b.raw_parts());
+    }
+
+    #[test]
+    fn encode_decode_round_trip_is_field_exact() {
+        let mut rng = Rng::new(7);
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            for rows in [0usize, 1, 5, 32] {
+                let (k, v) = slab_pair(&mut rng, rows, prec);
+                let buf = encode_page(&k, &v);
+                let (k2, v2) = decode_page(&buf, 0).unwrap();
+                assert_slab_eq(&k, &k2);
+                assert_slab_eq(&v, &v2);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let mut rng = Rng::new(8);
+        let (k, v) = slab_pair(&mut rng, 4, CoefPrecision::Fp8);
+        let good = encode_page(&k, &v);
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(decode_page(&bad, 0), Err(StoreError::Corrupt { .. })));
+        // bad version
+        let mut bad = good.clone();
+        bad[4] = 0x7f;
+        assert!(matches!(decode_page(&bad, 0), Err(StoreError::Corrupt { .. })));
+        // flipped payload bit -> checksum mismatch
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x01;
+        let err = decode_page(&bad, 0).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // truncated
+        assert!(decode_page(&good[..good.len() - 3], 0).is_err());
+        assert!(decode_page(&good[..HEADER_LEN - 1], 0).is_err());
+        // header row count inflated -> length mismatch (checked before payload walk)
+        let mut bad = good.clone();
+        bad[8] = bad[8].wrapping_add(1);
+        assert!(decode_page(&bad, 0).is_err());
+    }
+
+    #[test]
+    fn page_file_appends_reads_and_rebuilds_index() {
+        let dir = tmpdir("pagefile");
+        let path = dir.join("pages.lxp");
+        let mut rng = Rng::new(9);
+        let mut pages = Vec::new();
+        let mut refs = Vec::new();
+        {
+            let mut pf = PageFile::open(&path).unwrap();
+            for i in 0..6 {
+                let prec = if i % 2 == 0 { CoefPrecision::Fp8 } else { CoefPrecision::Fp16 };
+                let (k, v) = slab_pair(&mut rng, 1 + i, prec);
+                refs.push(pf.append(&k, &v).unwrap());
+                pages.push((k, v));
+            }
+            assert_eq!(pf.pages(), 6);
+            // read back out of order
+            for (i, r) in refs.iter().enumerate().rev() {
+                let (k, v) = pf.read(*r).unwrap();
+                assert_slab_eq(&k, &pages[i].0);
+                assert_slab_eq(&v, &pages[i].1);
+            }
+        }
+        // reopen: index rebuilt by scan, refs unchanged
+        let mut pf = PageFile::open(&path).unwrap();
+        assert_eq!(pf.index(), &refs[..]);
+        let (k, _) = pf.read(refs[3]).unwrap();
+        assert_slab_eq(&k, &pages[3].0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_truncates_torn_tail() {
+        let dir = tmpdir("torn");
+        let path = dir.join("pages.lxp");
+        let mut rng = Rng::new(10);
+        let (k, v) = slab_pair(&mut rng, 3, CoefPrecision::Fp8);
+        let good_end;
+        {
+            let mut pf = PageFile::open(&path).unwrap();
+            pf.append(&k, &v).unwrap();
+            good_end = pf.bytes();
+            pf.append(&k, &v).unwrap();
+        }
+        // tear the second page mid-body
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(good_end + HEADER_LEN as u64 + 2).unwrap();
+        drop(f);
+        let pf = PageFile::open(&path).unwrap();
+        assert_eq!(pf.pages(), 1, "torn tail must be dropped");
+        assert_eq!(pf.bytes(), good_end, "file truncated back to last good page");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_store_counts_and_round_trips() {
+        let dir = tmpdir("spill");
+        let store = SpillStore::open(&dir).unwrap();
+        let mut rng = Rng::new(11);
+        let (k, v) = slab_pair(&mut rng, 32, CoefPrecision::Fp16);
+        let r = store.spill(&k, &v).unwrap();
+        let (k2, v2) = store.fault(r).unwrap();
+        assert_slab_eq(&k, &k2);
+        assert_slab_eq(&v, &v2);
+        let (sp, sb, fa, fb) = store.counters();
+        assert_eq!((sp, fa), (1, 1));
+        assert_eq!(sb, r.len as u64);
+        assert_eq!(fb, r.len as u64);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_tier_shrinks_pages_and_is_lossy_but_valid() {
+        let dir = tmpdir("cold");
+        let store = SpillStore::open(&dir)
+            .unwrap()
+            .with_cold_tier(ColdTier { keep_atoms: Some(2), to_fp8: true });
+        let mut rng = Rng::new(12);
+        let (k, v) = slab_pair(&mut rng, 16, CoefPrecision::Fp16);
+        let r = store.spill(&k, &v).unwrap();
+        let (ck, cv) = store.fault(r).unwrap();
+        assert_eq!(ck.rows(), k.rows());
+        assert_eq!(cv.rows(), v.rows());
+        assert_eq!(ck.precision(), CoefPrecision::Fp8);
+        assert!(ck.bytes() + cv.bytes() < k.bytes() + v.bytes());
+        for row in 0..ck.rows() {
+            assert!(ck.row(row).0.len() <= 2);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshots_save_load_drop() {
+        let dir = tmpdir("snap");
+        let store = SpillStore::open(&dir).unwrap();
+        assert!(store.load_snapshot("alice").unwrap().is_none());
+        store.save_snapshot("alice", b"state-bytes").unwrap();
+        assert_eq!(store.load_snapshot("alice").unwrap().unwrap(), b"state-bytes");
+        store.save_snapshot("alice", b"newer").unwrap(); // overwrite
+        assert_eq!(store.load_snapshot("alice").unwrap().unwrap(), b"newer");
+        store.drop_snapshot("alice").unwrap();
+        assert!(store.load_snapshot("alice").unwrap().is_none());
+        store.drop_snapshot("alice").unwrap(); // idempotent
+        // bad names rejected
+        assert!(store.save_snapshot("../escape", b"x").is_err());
+        assert!(store.load_snapshot("").is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

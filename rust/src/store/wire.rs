@@ -1,0 +1,224 @@
+//! Little-endian wire helpers shared by every serialized residency
+//! artifact (page files, session snapshots). Scalars and raw slices carry
+//! no framing; the `*s` variants are u32-length-prefixed for self-framing
+//! snapshot fields. Floats travel as IEEE-754 bits (`to_bits`/`from_bits`),
+//! so encode → decode is bit-exact by construction.
+
+pub fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    put_u32(buf, v.to_bits());
+}
+
+/// Raw (unframed) u16 slice — caller must know the count to read it back.
+pub fn put_u16_slice_raw(buf: &mut Vec<u8>, s: &[u16]) {
+    for &v in s {
+        put_u16(buf, v);
+    }
+}
+
+/// Raw (unframed) u32 slice — caller must know the count to read it back.
+pub fn put_u32_slice_raw(buf: &mut Vec<u8>, s: &[u32]) {
+    for &v in s {
+        put_u32(buf, v);
+    }
+}
+
+/// u32-length-prefixed u16 slice.
+pub fn put_u16s(buf: &mut Vec<u8>, s: &[u16]) {
+    put_u32(buf, s.len() as u32);
+    put_u16_slice_raw(buf, s);
+}
+
+/// u32-length-prefixed u32 slice.
+pub fn put_u32s(buf: &mut Vec<u8>, s: &[u32]) {
+    put_u32(buf, s.len() as u32);
+    put_u32_slice_raw(buf, s);
+}
+
+/// u32-length-prefixed f32 slice (stored as bits — exact).
+pub fn put_f32s(buf: &mut Vec<u8>, s: &[f32]) {
+    put_u32(buf, s.len() as u32);
+    for &v in s {
+        put_f32(buf, v);
+    }
+}
+
+/// u32-length-prefixed byte string.
+pub fn put_bytes(buf: &mut Vec<u8>, s: &[u8]) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s);
+}
+
+/// u32-length-prefixed UTF-8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_bytes(buf, s.as_bytes());
+}
+
+/// Bounds-checked cursor over a byte buffer. Every `take_*` fails with a
+/// plain message instead of panicking, so a truncated or corrupt artifact
+/// surfaces as a session error, never a server crash.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    /// Raw (unframed) u16 slice of known count.
+    pub fn take_u16_slice_raw(&mut self, n: usize) -> Result<Vec<u16>, String> {
+        let b = self.take(n * 2)?;
+        Ok(b.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    /// Raw (unframed) u32 slice of known count.
+    pub fn take_u32_slice_raw(&mut self, n: usize) -> Result<Vec<u32>, String> {
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn take_len(&mut self) -> Result<usize, String> {
+        let n = self.take_u32()? as usize;
+        // a length prefix can never exceed what's left in the buffer: catch
+        // corrupt lengths before attempting a huge allocation
+        if n > self.remaining() {
+            return Err(format!("corrupt length prefix {n} (only {} bytes left)", self.remaining()));
+        }
+        Ok(n)
+    }
+
+    pub fn take_u16s(&mut self) -> Result<Vec<u16>, String> {
+        let n = self.take_u32()? as usize;
+        self.take_u16_slice_raw(n)
+    }
+
+    pub fn take_u32s(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.take_u32()? as usize;
+        self.take_u32_slice_raw(n)
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.take_u32()? as usize;
+        let b = self.take(n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    pub fn take_bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.take_len()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn take_str(&mut self) -> Result<String, String> {
+        let b = self.take_bytes()?;
+        String::from_utf8(b).map_err(|_| "invalid utf-8 in string field".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_slices_round_trip_exactly() {
+        let mut buf = Vec::new();
+        put_u16(&mut buf, 0xbeef);
+        put_u32(&mut buf, 0xdead_beef);
+        put_u64(&mut buf, 0x0123_4567_89ab_cdef);
+        put_f32(&mut buf, -0.0); // signed zero survives bit transport
+        put_f32(&mut buf, f32::NAN);
+        put_u16s(&mut buf, &[1, 2, 3]);
+        put_u32s(&mut buf, &[]);
+        put_f32s(&mut buf, &[1.5, -2.25e-30]);
+        put_str(&mut buf, "sess-α");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.take_u16().unwrap(), 0xbeef);
+        assert_eq!(r.take_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.take_u64().unwrap(), 0x0123_4567_89ab_cdef);
+        assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.take_f32().unwrap().is_nan());
+        assert_eq!(r.take_u16s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.take_u32s().unwrap(), Vec::<u32>::new());
+        let f = r.take_f32s().unwrap();
+        assert_eq!(f[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(f[1].to_bits(), (-2.25e-30f32).to_bits());
+        assert_eq!(r.take_str().unwrap(), "sess-α");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncation_and_bad_lengths_error_instead_of_panicking() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(r.take_u32().is_err());
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX); // absurd length prefix
+        let mut r = Reader::new(&buf);
+        assert!(r.take_bytes().is_err());
+        // u16 slice with length prefix past the end
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 9);
+        put_u16(&mut buf, 7);
+        let mut r = Reader::new(&buf);
+        assert!(r.take_u16s().is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Tiered-residency integration tests: the spill → fault round trip is
+//! bitwise-invisible to decoding at every thread count, hibernation
+//! snapshots reproduce the session exactly, and corrupt page files fail
+//! cleanly instead of poisoning the process.
+//!
+//! The bitwise contract under test (DESIGN.md §11): sealed CSR pages that
+//! leave RAM through the spill store and come back through a fault must
+//! produce decode logits whose `to_bits()` match a twin cache that never
+//! spilled — across random spill/wake schedules, both coefficient
+//! precisions, ragged tails, and T ∈ {1, 2, 4} worker threads.
+
+use std::sync::Arc;
+
+use lexico::cache::factory::{build_cache, CacheContext};
+use lexico::cache::{CacheShape, KvCache};
+use lexico::dict::{Dictionary, DictionarySet};
+use lexico::exec::ExecPool;
+use lexico::model::testutil::tiny_weights;
+use lexico::model::Engine;
+use lexico::store::SpillStore;
+use lexico::tensor::argmax;
+use lexico::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Both coefficient precisions; sparsity 2 so the tiny prompts still
+/// overflow the recency buffer and seal pages.
+const SPECS: [&str; 2] = ["lexico:s=2,nb=4", "lexico:s=2,nb=4,fp16"];
+
+fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
+    Arc::new(DictionarySet {
+        keys: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 1000 + i as u64))
+            .collect(),
+        values: (0..shape.n_layers)
+            .map(|i| Dictionary::random(shape.head_dim, n_atoms, 2000 + i as u64))
+            .collect(),
+    })
+}
+
+fn engine_with_threads(threads: usize) -> Engine {
+    Engine::with_pool(tiny_weights(101), Arc::new(ExecPool::new(threads)))
+}
+
+fn tmp_store(tag: &str) -> (Arc<SpillStore>, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!("lexico_spill_it_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (Arc::new(SpillStore::open(&dir).expect("spill store")), dir)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Property test: twin caches decode the same stream while one of them is
+/// driven through a random spill / fault / leave-alone schedule between
+/// steps. Sealed pages round-trip through the page file; the ragged tail
+/// and recency buffer stay resident. Any divergence — even one ULP — fails.
+#[test]
+fn random_spill_wake_schedules_are_bitwise_identical() {
+    for &threads in &THREAD_COUNTS {
+        let eng = engine_with_threads(threads);
+        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        for (pi, spec) in SPECS.iter().enumerate() {
+            let (store, _dir) = tmp_store(&format!("prop_t{threads}_p{pi}"));
+            let mut rng = Rng::new(0xC0FFEE + 31 * threads as u64 + pi as u64);
+            // 80-token prompt: 76 CSR tokens per head = 2 sealed pages + a
+            // 12-row ragged tail past the 4-token recency buffer
+            let prompt: Vec<u32> = (0..80).map(|_| 3 + rng.below(50) as u32).collect();
+            let mut plain = build_cache(spec, &ctx).unwrap();
+            plain.set_pool(eng.pool().clone());
+            let mut spilly = build_cache(spec, &ctx).unwrap();
+            spilly.set_pool(eng.pool().clone());
+            spilly.set_spill_store(store.clone());
+            let l0 = eng.prefill(&prompt, &mut *plain);
+            let l1 = eng.prefill(&prompt, &mut *spilly);
+            assert_eq!(bits(&l0), bits(&l1), "T={threads} {spec}: prefill diverged");
+            let mut tok = argmax(&l0) as u32;
+            let mut pos = prompt.len();
+            for step in 0..40 {
+                match rng.below(4) {
+                    0 => {
+                        spilly.spill_cold().unwrap();
+                    }
+                    1 => {
+                        spilly.fault_resident().unwrap();
+                    }
+                    _ => {} // attend faults lazily when pages are cold
+                }
+                let a = eng.decode_step(tok, pos, &mut *plain);
+                let b = eng.decode_step(tok, pos, &mut *spilly);
+                assert_eq!(
+                    bits(&a),
+                    bits(&b),
+                    "T={threads} {spec}: logits diverged at step {step} \
+                     (spilled {} B)",
+                    spilly.spilled_bytes()
+                );
+                tok = argmax(&a) as u32;
+                pos += 1;
+            }
+            let (spilled_pages, _, faults, _) = store.counters();
+            assert!(spilled_pages > 0, "T={threads} {spec}: schedule never spilled (vacuous)");
+            assert!(faults > 0, "T={threads} {spec}: schedule never faulted (vacuous)");
+        }
+    }
+}
+
+/// Hibernate → restore (the cross-process snapshot path) must reproduce
+/// the exact stream the un-snapshotted cache would have produced.
+#[test]
+fn hibernate_restore_continues_the_stream_bitwise_across_thread_counts() {
+    for &threads in &THREAD_COUNTS {
+        let eng = engine_with_threads(threads);
+        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        for (pi, spec) in SPECS.iter().enumerate() {
+            let (store, _dir) = tmp_store(&format!("snap_t{threads}_p{pi}"));
+            let mut rng = Rng::new(0xBEEF + threads as u64 + 7 * pi as u64);
+            let prompt: Vec<u32> = (0..70).map(|_| 3 + rng.below(50) as u32).collect();
+            let mut live = build_cache(spec, &ctx).unwrap();
+            live.set_pool(eng.pool().clone());
+            live.set_spill_store(store.clone());
+            let logits = eng.prefill(&prompt, &mut *live);
+            let mut tok = argmax(&logits) as u32;
+            let mut pos = prompt.len();
+            for _ in 0..8 {
+                let l = eng.decode_step(tok, pos, &mut *live);
+                tok = argmax(&l) as u32;
+                pos += 1;
+            }
+            let blob = live.hibernate_state().expect("hibernate");
+            let mut revived = build_cache(spec, &ctx).unwrap();
+            revived.set_pool(eng.pool().clone());
+            revived.set_spill_store(store.clone());
+            revived.restore_hibernated(&blob).expect("restore");
+            assert_eq!(revived.tokens(), live.tokens());
+            // both continue 10 more steps — identical logits every step
+            let mut tok2 = tok;
+            let mut pos2 = pos;
+            for step in 0..10 {
+                let a = eng.decode_step(tok, pos, &mut *live);
+                let b = eng.decode_step(tok2, pos2, &mut *revived);
+                assert_eq!(
+                    bits(&a),
+                    bits(&b),
+                    "T={threads} {spec}: revived stream diverged at step {step}"
+                );
+                tok = argmax(&a) as u32;
+                tok2 = argmax(&b) as u32;
+                pos += 1;
+                pos2 += 1;
+            }
+        }
+    }
+}
+
+/// Fault-injection: truncated and bit-flipped page files must surface as
+/// clean `Err`s from the fault path — never a panic, never silent garbage.
+#[test]
+fn corrupt_and_truncated_page_files_fail_faults_cleanly() {
+    let eng = engine_with_threads(1);
+    let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+    let mk_spilled = |tag: &str| -> (Box<dyn KvCache>, std::path::PathBuf) {
+        let (store, dir) = tmp_store(tag);
+        let mut c = build_cache("lexico:s=2,nb=4", &ctx).unwrap();
+        c.set_pool(eng.pool().clone());
+        c.set_spill_store(store.clone());
+        let prompt: Vec<u32> = (0..70).map(|i| 3 + (i % 50) as u32).collect();
+        let _ = eng.prefill(&prompt, &mut *c);
+        let (n, freed) = c.spill_cold().unwrap();
+        assert!(n > 0 && freed > 0.0, "nothing spilled — fixture broken");
+        (c, dir.join("pages.lxp"))
+    };
+
+    // bit flip in the middle of the file: checksum (or header) validation
+    // must reject the page
+    let (mut c, pages) = mk_spilled("flip");
+    let mut bytes = std::fs::read(&pages).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&pages, &bytes).unwrap();
+    assert!(c.fault_resident().is_err(), "bit-flipped page must fail the fault");
+
+    // truncation: a fault whose page extends past EOF must error, not read
+    // garbage
+    let (mut c, pages) = mk_spilled("trunc");
+    let bytes = std::fs::read(&pages).unwrap();
+    std::fs::write(&pages, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(c.fault_resident().is_err(), "truncated page file must fail the fault");
+
+    // and a healthy twin still faults fine (the harness itself is sound)
+    let (mut c, _pages) = mk_spilled("ok");
+    c.fault_resident().expect("clean fault");
+    assert_eq!(c.spilled_bytes(), 0.0);
+}

@@ -167,13 +167,7 @@ fn batcher_serves_identical_responses_at_every_thread_count() {
             Request::greedy(1, "k01=v11;k02=v22;k03=v33;k04=v44;", 6, ""),
             Request::greedy(2, "k01=v11;k02=v22;k03=v33;k04=v44;k02?", 6, ""),
             Request::greedy(3, "1+2=", 5, "full"),
-            Request {
-                id: 4,
-                prompt: "2,7,4>".into(),
-                max_new: 5,
-                method: String::new(),
-                fanout: 3,
-            },
+            Request { fanout: 3, ..Request::greedy(4, "2,7,4>", 5, "") },
         ];
         let mut replies = Vec::new();
         for r in reqs {
@@ -263,13 +257,7 @@ fn mixed_prefilling_and_decoding_rounds_are_thread_invariant() {
         // a long prompt and a fan-out request admitted mid-stream
         for r in [
             Request::greedy(3, "k01=v11;k02=v22;k03=v33;k04=v44;k02?", 6, ""),
-            Request {
-                id: 4,
-                prompt: "7,3,5>".into(),
-                max_new: 5,
-                method: String::new(),
-                fanout: 2,
-            },
+            Request { fanout: 2, ..Request::greedy(4, "7,3,5>", 5, "") },
         ] {
             let (tx, rx) = std::sync::mpsc::channel();
             b.enqueue(Job::new(r, tx));
