@@ -16,7 +16,11 @@
 //! residency sweep: spill/fault throughput through the page store, the
 //! first-touch attend penalty after a spill (lazy faulting), and resident
 //! decode cost while half the fleet is hibernated on disk, emitting
-//! `BENCH_PR7.json`.
+//! `BENCH_PR7.json` — and the PR 8 precomputed-Gram Batch-OMP sweep:
+//! canonical residual-space pursuit vs the coefficient-space Gram tier
+//! across batch size B × atom count N × sparsity s (one-time Gram build
+//! timed separately), plus end-to-end prefill tok/s through a tiny
+//! engine on each tier, emitting `BENCH_PR8.json`.
 //!
 //!   cargo bench --bench decode_engines [-- --threads N] [-- --smoke]
 //!
@@ -881,6 +885,159 @@ fn spill_residency_sweep(smoke: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// PR 8 precomputed-Gram Batch-OMP sweep: the canonical residual-space
+/// pursuit vs the coefficient-space Gram tier on identical inputs, across
+/// batch size B × atom count N × sparsity s at m = 64. The one-time Gram
+/// build (`par_syrk` at dictionary load) is timed separately — at serve
+/// time it is paid once per process, not per compression. Also measures
+/// end-to-end prefill tok/s through a tiny engine with a `LexicoCache`
+/// on each tier (`set_gram_omp`), the overflow-compression path the
+/// server actually runs. Emits `BENCH_PR8.json`; its `gate` object feeds
+/// `benches/compare.rs` against `benches/baseline_pr8.json`.
+fn gram_encode_sweep(smoke: bool) -> anyhow::Result<()> {
+    use lexico::omp::{omp_encode_batch, omp_encode_batch_gram, BatchOmpWorkspace};
+
+    let m = 64usize;
+    let delta = 0.0f32;
+    let atom_counts: &[usize] = &[1024, 4096];
+    let batches: &[usize] = if smoke { &[32, 256] } else { &[32, 256, 1024] };
+    let sparsities: &[usize] = if smoke { &[8] } else { &[4, 8, 16] };
+    let (warm, iters) = if smoke { (1, 3) } else { (2, 8) };
+    let pool = lexico::exec::default_pool();
+    println!(
+        "PR8 precomputed-Gram Batch-OMP encode (m={m}, delta={delta}) — simd={}, pool T={}:\n",
+        lexico::tensor::simd::active().name,
+        pool.threads()
+    );
+    let max_b = *batches.iter().max().unwrap();
+    let mut rng = Rng::new(41);
+    let xs_all = rng.normal_vec(max_b * m);
+    let mut ws_canon = BatchOmpWorkspace::with_pool(pool.clone());
+    let mut ws_gram = BatchOmpWorkspace::with_pool(pool.clone());
+    let mut entries = Vec::new();
+    let mut builds = Vec::new();
+    let mut gate_canon = f64::NAN;
+    let mut gate_gram = f64::NAN;
+    for &n_atoms in atom_counts {
+        let dict = Dictionary::random(m, n_atoms, 51);
+        let t0 = Instant::now();
+        let gram = dict.gram(&pool);
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "N={n_atoms:<6} gram build {build_ms:>9.3} ms ({:.1} MB, once per dictionary)",
+            dict.gram_bytes() as f64 / 1e6
+        );
+        builds.push(format!(
+            "    {{\"n_atoms\": {n_atoms}, \"build_ms\": {build_ms:.4}, \"gram_mb\": {:.2}}}",
+            dict.gram_bytes() as f64 / 1e6
+        ));
+        for &s in sparsities {
+            for &b in batches {
+                let xs = &xs_all[..b * m];
+                let st_canon = bench_ms(warm, iters, || {
+                    let _ = omp_encode_batch(
+                        &dict.atoms, n_atoms, m, xs, b, s, delta, &mut ws_canon,
+                    );
+                });
+                let st_gram = bench_ms(warm, iters, || {
+                    let _ = omp_encode_batch_gram(
+                        &dict.atoms, n_atoms, m, &gram, xs, b, s, delta, &mut ws_gram,
+                    );
+                });
+                let vecs_s = |mean_ms: f64| b as f64 / (mean_ms / 1e3).max(1e-12);
+                let (canon_v, gram_v) = (vecs_s(st_canon.mean), vecs_s(st_gram.mean));
+                let speedup = gram_v / canon_v.max(1e-9);
+                if n_atoms == 4096 && s == 8 && b == 256 {
+                    gate_canon = canon_v;
+                    gate_gram = gram_v;
+                }
+                println!(
+                    "N={n_atoms:<6} s={s:<3} B={b:<5} canonical {canon_v:>10.0} vecs/s  \
+                     gram {gram_v:>10.0} vecs/s  speedup ×{speedup:.2}",
+                );
+                entries.push(format!(
+                    "    {{\"n_atoms\": {n_atoms}, \"sparsity\": {s}, \"batch\": {b}, \
+                     \"canon_vecs_per_s\": {canon_v:.0}, \"gram_vecs_per_s\": {gram_v:.0}, \
+                     \"gram_speedup\": {speedup:.3}}}"
+                ));
+            }
+        }
+    }
+
+    // End-to-end prefill on each tier: a tiny engine drives the real
+    // overflow-compression path; the Gram matrices are realized before
+    // timing so both series measure steady state.
+    use lexico::model::testutil::tiny_weights_cfg;
+    use lexico::model::ModelConfig;
+    let prefill_tokens = if smoke { 320 } else { 640 };
+    let cfg_model = ModelConfig {
+        n_layers: 2,
+        d_model: 128,
+        n_heads: 2,
+        n_kv_heads: 2,
+        head_dim: 64,
+        d_ff: 128,
+        vocab: tasks::vocab_size(),
+        max_seq: prefill_tokens + 64,
+    };
+    let engine = Engine::new(tiny_weights_cfg(57, cfg_model));
+    let dicts = Arc::new(DictionarySet {
+        keys: (0..cfg_model.n_layers)
+            .map(|i| Dictionary::random(cfg_model.head_dim, 1024, 300 + i as u64))
+            .collect(),
+        values: (0..cfg_model.n_layers)
+            .map(|i| Dictionary::random(cfg_model.head_dim, 1024, 400 + i as u64))
+            .collect(),
+    });
+    for d in dicts.keys.iter().chain(dicts.values.iter()) {
+        let _ = d.gram(&pool);
+    }
+    let mut ids = vec![tasks::BOS];
+    ids.extend(tasks::encode(&tasks::gen_lm_text(&mut Rng::new(43), prefill_tokens)));
+    ids.truncate(prefill_tokens);
+    let cache_cfg = LexicoConfig { sparsity: 8, n_buffer: 32, ..Default::default() };
+    let mut prefill_tok_s = [f64::NAN; 2];
+    for (ti, &gram_on) in [false, true].iter().enumerate() {
+        let st = bench_ms(warm, iters, || {
+            let mut cache = LexicoCache::new(engine.shape(), dicts.clone(), cache_cfg.clone());
+            cache.set_pool(pool.clone());
+            cache.set_gram_omp(gram_on);
+            let _ = engine.prefill(&ids, &mut cache);
+        });
+        prefill_tok_s[ti] = prefill_tokens as f64 / (st.mean / 1e3).max(1e-12);
+    }
+    let prefill_speedup = prefill_tok_s[1] / prefill_tok_s[0].max(1e-9);
+    println!(
+        "\nprefill {prefill_tokens} tokens (2-layer tiny engine, lexico s=8 nb=32 N=1024): \
+         canonical {:.0} tok/s  gram {:.0} tok/s  speedup ×{prefill_speedup:.2}\n",
+        prefill_tok_s[0], prefill_tok_s[1]
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"pr8_gram_encode\",\n  \"simd\": \"{}\",\n  \"smoke\": {smoke},\n  \
+         \"config\": {{\"m\": {m}, \"delta\": {delta}, \"pool_threads\": {}}},\n  \
+         \"gate\": {{\n    \"canon_encode_vecs_per_s\": {gate_canon:.0},\n    \
+         \"gram_encode_vecs_per_s\": {gate_gram:.0}\n  }},\n  \
+         \"gram_build\": [\n{}\n  ],\n  \
+         \"prefill\": {{\"tokens\": {prefill_tokens}, \"canon_tokens_per_s\": {:.0}, \
+         \"gram_tokens_per_s\": {:.0}, \"gram_speedup\": {prefill_speedup:.3}}},\n  \
+         \"entries\": [\n{}\n  ]\n}}\n",
+        lexico::tensor::simd::active().name,
+        pool.threads(),
+        builds.join(",\n"),
+        prefill_tok_s[0],
+        prefill_tok_s[1],
+        entries.join(",\n")
+    );
+    let out_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_PR8.json"))
+        .unwrap_or_else(|| "BENCH_PR8.json".into());
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}\n", out_path.display());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     // --threads N (or --threads=N) sizes the default pool for the backend
     // comparison sections; the scaling sweep below builds its own pools.
@@ -900,13 +1057,14 @@ fn main() -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--pr6-child needs an output path"))?;
         return pr6_child(out, smoke);
     }
-    // The PR 4–7 sweeps are artifact-free: they always run (reduced under
+    // The PR 4–8 sweeps are artifact-free: they always run (reduced under
     // --smoke, which then skips the artifact-bound sections — CI's bench
     // smoke + perf-gate steps).
     let attend_ns = longcontext_attend_sweep(smoke)?;
     serving_round_sweep(smoke, attend_ns)?;
     shared_qd_round_sweep(smoke)?;
     spill_residency_sweep(smoke)?;
+    gram_encode_sweep(smoke)?;
     if smoke {
         return Ok(());
     }

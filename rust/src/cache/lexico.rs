@@ -27,7 +27,10 @@ use super::{CacheShape, KvCache};
 use crate::dict::adaptive::AdaptiveDict;
 use crate::dict::DictionarySet;
 use crate::exec::{self, ExecPool, SendPtr};
-use crate::omp::{omp_encode, omp_encode_batch, BatchOmpWorkspace, OmpWorkspace, SparseCode};
+use crate::omp::{
+    omp_encode, omp_encode_batch, omp_encode_batch_gram, BatchOmpWorkspace, OmpWorkspace,
+    SparseCode,
+};
 use crate::sparse::memory::csr_row_bytes;
 use crate::sparse::{CoefPrecision, CsrRow, CsrSlab};
 use crate::store::{self, wire, PageRef, SpillStore};
@@ -335,6 +338,10 @@ pub struct LexicoCache {
     /// construction — the decode hot loop must not issue an env syscall
     /// per layer per step
     qd_per_head: bool,
+    /// route batched overflow compression through the precomputed-Gram
+    /// Batch-OMP tier (DESIGN.md §12); snapshot of
+    /// [`crate::omp::gram_omp_requested`] taken at construction
+    gram_omp: bool,
     /// shard threshold for the compressed score sweep (the constant;
     /// overridable in tests to exercise sharding on small contexts)
     par_score_min: usize,
@@ -386,6 +393,7 @@ impl LexicoCache {
             bws: BatchOmpWorkspace::with_pool(pool.clone()),
             pool,
             qd_per_head: std::env::var_os("LEXICO_QD_PER_HEAD").is_some(),
+            gram_omp: crate::omp::gram_omp_requested(),
             par_score_min: PAR_SCORE_MIN_TOKENS,
             csr_bytes: 0.0,
             buf_tokens: 0,
@@ -439,6 +447,11 @@ impl LexicoCache {
     /// per pursuit iteration, one dictionary stream for the whole layer),
     /// then the same for V. Per-vector results are bit-identical to the
     /// sequential encoder, so cache contents don't depend on the path.
+    /// Under the opt-in gram tier ([`omp_encode_batch_gram`], DESIGN.md
+    /// §12) the batch instead runs one α⁰ GEMM total and iterates in
+    /// coefficient space against the dictionary's cached Gram matrix —
+    /// tolerance-equal to canonical, bitwise self-identical at any thread
+    /// count.
     fn compress_oldest(&mut self, layer: usize, n: usize) {
         let m = self.shape.head_dim;
         let fp16 = self.cfg.precision == CoefPrecision::Fp16;
@@ -485,10 +498,30 @@ impl LexicoCache {
         let dicts = self.dicts.clone();
         let (dk, dv) = (&dicts.keys[layer], &dicts.values[layer]);
         let (s, delta) = (self.cfg.sparsity, self.cfg.delta);
-        let k_codes =
-            omp_encode_batch(&dk.atoms, dk.n, dk.m, &self.gather_k, total, s, delta, &mut self.bws);
-        let v_codes =
-            omp_encode_batch(&dv.atoms, dv.n, dv.m, &self.gather_v, total, s, delta, &mut self.bws);
+        let (k_codes, v_codes) = if self.gram_omp {
+            // gram tier: the per-dictionary Gram cache is realized on first
+            // touch (par_syrk on this cache's pool) and shared process-wide
+            // through the Arc<DictionarySet>
+            let gk = dk.gram(&self.pool);
+            let gv = dv.gram(&self.pool);
+            (
+                omp_encode_batch_gram(
+                    &dk.atoms, dk.n, dk.m, &gk, &self.gather_k, total, s, delta, &mut self.bws,
+                ),
+                omp_encode_batch_gram(
+                    &dv.atoms, dv.n, dv.m, &gv, &self.gather_v, total, s, delta, &mut self.bws,
+                ),
+            )
+        } else {
+            (
+                omp_encode_batch(
+                    &dk.atoms, dk.n, dk.m, &self.gather_k, total, s, delta, &mut self.bws,
+                ),
+                omp_encode_batch(
+                    &dv.atoms, dv.n, dv.m, &self.gather_v, total, s, delta, &mut self.bws,
+                ),
+            )
+        };
         let mut off = 0;
         for (g, &take) in takes.iter().enumerate() {
             let hi = self.head_idx(layer, g);
@@ -535,6 +568,17 @@ impl LexicoCache {
         let m = self.shape.head_dim;
         let h = &self.heads[self.head_idx(layer, g)];
         (&h.k_buf[..h.buf_len * m], &h.v_buf[..h.buf_len * m], h.buf_len)
+    }
+
+    /// Override the encode tier for this cache (tests / benches). The
+    /// process-wide default is the `--gram-omp` / `LEXICO_GRAM_OMP=1`
+    /// snapshot taken at construction; forks inherit the current setting.
+    /// Only the batched non-adaptive overflow path dispatches on it —
+    /// adaptive mode always encodes sequentially with the canonical
+    /// pursuit (its dictionary mutates per vector, so a frozen Gram matrix
+    /// would go stale mid-batch).
+    pub fn set_gram_omp(&mut self, on: bool) {
+        self.gram_omp = on;
     }
 
     /// Make every sealed page resident before a scoring pass. O(1) when
@@ -1118,6 +1162,7 @@ impl KvCache for LexicoCache {
             bws: BatchOmpWorkspace::with_pool(self.pool.clone()),
             pool: self.pool.clone(),
             qd_per_head: self.qd_per_head,
+            gram_omp: self.gram_omp,
             par_score_min: self.par_score_min,
             csr_bytes: self.csr_bytes,
             buf_tokens: self.buf_tokens,
@@ -1484,6 +1529,140 @@ mod tests {
             bat.attend_batch(0, &qs, &mut o_bat, b);
             assert_eq!(o_seq, o_bat, "na={na}: attend_batch diverged");
         }
+    }
+
+    #[test]
+    fn gram_tier_cache_parity_across_precisions_and_delta() {
+        // The gram encode tier through the real overflow path, across both
+        // coefficient precisions and both termination modes: whenever a row
+        // compresses to the same support as the canonical tier it must be
+        // bit-identical (indices AND quantized coefficient bits — identical
+        // selections force identical pursuits); on an argmax near-tie flip
+        // the stored reconstruction may differ but can be no worse than
+        // canonical beyond the 1e-4 tolerance.
+        fn relerr(orig: &[f32], rec: &[f32]) -> f32 {
+            let mut e = 0.0f32;
+            let mut n = 0.0f32;
+            for i in 0..orig.len() {
+                let d = orig[i] - rec[i];
+                e += d * d;
+                n += orig[i] * orig[i];
+            }
+            e.sqrt() / n.sqrt().max(1e-12)
+        }
+        for &prec in &[CoefPrecision::Fp8, CoefPrecision::Fp16] {
+            for &delta in &[0.0f32, 0.4] {
+                let cfg = LexicoConfig {
+                    sparsity: 4,
+                    delta,
+                    n_buffer: 4,
+                    n_approx: 2,
+                    precision: prec,
+                    ..Default::default()
+                };
+                let (shape, mut canon) = setup(64, cfg.clone());
+                let (_, mut gram) = setup(64, cfg);
+                gram.set_gram_omp(true);
+                let mut rng = Rng::new(97);
+                let kvd = shape.kv_dim();
+                let m = shape.head_dim;
+                let n_tok = 14;
+                let ks = rng.normal_vec(n_tok * kvd);
+                let vs = rng.normal_vec(n_tok * kvd);
+                for i in 0..n_tok {
+                    for l in 0..shape.n_layers {
+                        canon.append(l, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+                        gram.append(l, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+                    }
+                }
+                // dispatch proof: only the gram cache realized Gram caches
+                assert_eq!(canon.dicts.gram_bytes(), 0, "canonical cache built a Gram matrix");
+                assert!(gram.dicts.gram_bytes() > 0, "gram tier never realized its Gram matrix");
+                let (mut rec_c, mut rec_g) = (vec![0.0f32; m], vec![0.0f32; m]);
+                for l in 0..shape.n_layers {
+                    for g in 0..shape.n_kv_heads {
+                        let (kc, vc) = canon.csr_rows(l, g);
+                        let (kg, vg) = gram.csr_rows(l, g);
+                        assert_eq!(kc.len(), kg.len(), "compressed-token counts diverged");
+                        for (is_key, (rows_c, rows_g)) in
+                            [(true, (&kc, &kg)), (false, (&vc, &vg))]
+                        {
+                            let (src, atoms) = if is_key {
+                                (&ks, &canon.dicts.keys[l].atoms)
+                            } else {
+                                (&vs, &canon.dicts.values[l].atoms)
+                            };
+                            for (t, (rc, rg)) in rows_c.iter().zip(rows_g.iter()).enumerate() {
+                                if rc.idx == rg.idx && rc.coef_bits == rg.coef_bits {
+                                    continue; // identical row, nothing to bound
+                                }
+                                let orig = &src[t * kvd + g * m..t * kvd + (g + 1) * m];
+                                rc.reconstruct(atoms, m, &mut rec_c);
+                                rg.reconstruct(atoms, m, &mut rec_g);
+                                let (ec, eg) = (relerr(orig, &rec_c), relerr(orig, &rec_g));
+                                assert!(
+                                    eg <= ec + 1e-4,
+                                    "l={l} g={g} t={t} key={is_key} prec={prec:?} δ={delta}: \
+                                     gram {eg} > canon {ec} + 1e-4"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_tier_append_batch_and_fork_stay_bitwise_identical() {
+        // Under the gram tier the cache's own determinism contract must
+        // hold exactly as under canonical: append_batch replays the
+        // sequential trigger schedule bit-identically (per-vector pursuits
+        // are independent of batch composition), and a fork inherits the
+        // tier and stays bitwise aligned with the original.
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 5, n_approx: 2, ..Default::default() };
+        let (shape, mut seq) = setup(64, cfg.clone());
+        let (_, mut bat) = setup(64, cfg);
+        seq.set_gram_omp(true);
+        bat.set_gram_omp(true);
+        let mut rng = Rng::new(53);
+        let kvd = shape.kv_dim();
+        let n = 13;
+        let ks = rng.normal_vec(n * kvd);
+        let vs = rng.normal_vec(n * kvd);
+        for l in 0..shape.n_layers {
+            for i in 0..n {
+                seq.append(l, &ks[i * kvd..(i + 1) * kvd], &vs[i * kvd..(i + 1) * kvd]);
+            }
+            bat.append_batch(l, &ks, &vs, n);
+        }
+        for (hs, hb) in seq.heads.iter().zip(&bat.heads) {
+            assert_eq!(hs.buf_len, hb.buf_len);
+            assert_eq!(hs.n_csr, hb.n_csr);
+            for (a, b) in hs.k_rows().iter().zip(&hb.k_rows()) {
+                assert_eq!(a.idx, b.idx, "gram tier: append_batch K support diverged");
+                assert_eq!(a.coef_bits, b.coef_bits, "gram tier: append_batch K coefs diverged");
+            }
+            for (a, b) in hs.v_rows().iter().zip(&hb.v_rows()) {
+                assert_eq!(a.idx, b.idx, "gram tier: append_batch V support diverged");
+                assert_eq!(a.coef_bits, b.coef_bits, "gram tier: append_batch V coefs diverged");
+            }
+        }
+        // fork inherits the tier: continuing both sides stays bit-identical
+        let mut f = seq.fork();
+        let k = rng.normal_vec(kvd);
+        let v = rng.normal_vec(kvd);
+        for _ in 0..6 {
+            for l in 0..shape.n_layers {
+                seq.append(l, &k, &v);
+                f.append(l, &k, &v);
+            }
+        }
+        let q = rng.normal_vec(shape.q_dim());
+        let (mut o1, mut o2) = (vec![0.0; shape.q_dim()], vec![0.0; shape.q_dim()]);
+        seq.attend(0, &q, &mut o1);
+        f.attend(0, &q, &mut o2);
+        assert_eq!(o1, o2, "gram tier: fork attend diverged after overflow compression");
     }
 
     #[test]

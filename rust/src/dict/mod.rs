@@ -7,8 +7,10 @@ pub mod train;
 use anyhow::{bail, Context, Result};
 use std::io::Read;
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
-use crate::tensor::norm2;
+use crate::exec::ExecPool;
+use crate::tensor::{norm2, par_syrk};
 
 /// One dictionary: `n` unit-norm atoms of dimension `m`, **atom-major**
 /// storage (`atoms[a*m..(a+1)*m]` is atom `a`) — the layout the OMP
@@ -18,12 +20,19 @@ pub struct Dictionary {
     pub m: usize,
     pub n: usize,
     pub atoms: Vec<f32>,
+    /// Lazily realized Gram matrix G = D·Dᵀ (`[n, n]`, full symmetric
+    /// storage) for the precomputed-Gram OMP tier — computed once per
+    /// dictionary instance, then shared by every session/layer/head for
+    /// the life of the process (cloning a `Dictionary` clones the `Arc`,
+    /// not the 4·n² bytes). Realize only after the atoms are final: the
+    /// cache is never invalidated by later atom mutation.
+    gram: OnceLock<Arc<Vec<f32>>>,
 }
 
 impl Dictionary {
     pub fn new(m: usize, n: usize, atoms: Vec<f32>) -> Self {
         debug_assert_eq!(atoms.len(), n * m);
-        Dictionary { m, n, atoms }
+        Dictionary { m, n, atoms, gram: OnceLock::new() }
     }
 
     /// From column-major [m, N] layout (the LXDC / JAX convention).
@@ -34,7 +43,7 @@ impl Dictionary {
                 atoms[a * m + i] = data[i * n + a];
             }
         }
-        Dictionary { m, n, atoms }
+        Dictionary { m, n, atoms, gram: OnceLock::new() }
     }
 
     /// Random unit-norm dictionary (Table 1 baseline).
@@ -45,7 +54,28 @@ impl Dictionary {
             let nrm = norm2(a).max(1e-12);
             a.iter_mut().for_each(|x| *x /= nrm);
         }
-        Dictionary { m, n, atoms }
+        Dictionary { m, n, atoms, gram: OnceLock::new() }
+    }
+
+    /// The dictionary's Gram matrix G = D·Dᵀ, realized on first request via
+    /// [`par_syrk`] on `pool` and cached for the life of the instance —
+    /// every later caller (any thread) gets the same `Arc`. Costs 4·n²
+    /// bytes (~64 MB at n = 4096); see [`Dictionary::gram_bytes`] for the
+    /// memory-reporting side.
+    pub fn gram(&self, pool: &ExecPool) -> Arc<Vec<f32>> {
+        self.gram
+            .get_or_init(|| {
+                let mut g = vec![0.0f32; self.n * self.n];
+                par_syrk(pool, &mut g, &self.atoms, self.n, self.m);
+                Arc::new(g)
+            })
+            .clone()
+    }
+
+    /// Bytes held by the realized Gram cache (0 until [`Dictionary::gram`]
+    /// first runs).
+    pub fn gram_bytes(&self) -> usize {
+        self.gram.get().map(|g| g.len() * 4).unwrap_or(0)
     }
 
     pub fn atom(&self, a: usize) -> &[f32] {
@@ -131,6 +161,17 @@ impl DictionarySet {
                 .map(|(i, d)| Dictionary::random(d.m, d.n, seed ^ 0x8000 ^ (i as u64)))
                 .collect(),
         }
+    }
+
+    /// Total bytes held by realized Gram caches across every layer's K and
+    /// V dictionaries — the `gram_bytes` metrics gauge the server reports
+    /// (0 until some cache opts into the gram tier and touches a layer).
+    pub fn gram_bytes(&self) -> usize {
+        self.keys
+            .iter()
+            .chain(self.values.iter())
+            .map(|d| d.gram_bytes())
+            .sum()
     }
 }
 
@@ -238,5 +279,26 @@ mod tests {
             let nrm = norm2(d.atom(a));
             assert!((nrm - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn gram_is_lazy_shared_and_counted() {
+        let d = Dictionary::random(8, 32, 3);
+        assert_eq!(d.gram_bytes(), 0, "gram must not exist before first use");
+        let pool = ExecPool::new(2);
+        let g1 = d.gram(&pool);
+        let g2 = d.gram(&pool);
+        assert!(Arc::ptr_eq(&g1, &g2), "second request must share the Arc");
+        assert_eq!(d.gram_bytes(), 32 * 32 * 4);
+        // clones share the realized cache (Arc clone, not a recompute)
+        let c = d.clone();
+        assert!(Arc::ptr_eq(&c.gram(&pool), &g1));
+        // unit-norm atoms: the diagonal is each atom's squared norm
+        for i in 0..32 {
+            assert!((g1[i * 32 + i] - 1.0).abs() < 1e-5, "diag[{i}]");
+        }
+        // set-level accounting sums only realized caches
+        let set = DictionarySet { keys: vec![d], values: vec![Dictionary::random(8, 16, 4)] };
+        assert_eq!(set.gram_bytes(), 32 * 32 * 4);
     }
 }

@@ -84,6 +84,18 @@ comparing transcripts against canonical runs. LEXICO_SIMD=<name> pins a
 specific kernel in whichever tier is active
 (scalar|sse2|avx2|neon, or a fast-tier name under --fast-math).
 
+--gram-omp (any subcommand) opts into the precomputed-Gram Batch-OMP
+encode tier: each dictionary's Gram matrix G = D·Dᵀ is realized once
+(4·N² bytes, reported as the `gram` gauge) and every compression runs
+coefficient-space pursuit — one GEMM for the whole batch's initial
+projections, O(N·s) per iteration instead of O(N·m), no residual
+vectors. Equivalent to LEXICO_GRAM_OMP=1. Gram-tier results are bitwise
+reproducible at every thread count but only tolerance-equal to the
+default canonical pursuit (same supports on well-separated
+dictionaries); leave it off when comparing transcripts against
+canonical runs. Adaptive-dictionary methods always use the canonical
+path (atom mutation would stale the Gram cache).
+
 --prefill-chunk N bounds the prompt tokens a prefilling session consumes
 per scheduling round (0 = monolithic). Chunking keeps one long admission
 from stalling active sessions' decode cadence; token streams are bitwise
@@ -117,6 +129,11 @@ fn main() -> Result<()> {
     // freezes dispatch (simd::active is a process-wide OnceLock)
     if args.has("fast-math") {
         std::env::set_var("LEXICO_FAST_MATH", "1");
+    }
+    // opt into the precomputed-Gram OMP tier before any cache snapshots
+    // the request flag at construction
+    if args.has("gram-omp") {
+        std::env::set_var("LEXICO_GRAM_OMP", "1");
     }
     // size the exec pool before any engine or cache exists
     if let Some(t) = args.flags.get("threads") {

@@ -39,31 +39,53 @@ use crate::tensor::{axpy, dot, norm2, par_matmul_bt};
 /// independent of the pool's thread count.
 pub struct BatchOmpWorkspace {
     /// worker pool for the correlation GEMM + the per-vector solves
-    pool: Arc<ExecPool>,
+    pub(crate) pool: Arc<ExecPool>,
     /// compacted residuals of the still-active vectors, `[A, m]`
-    rs: Vec<f32>,
-    /// correlations of the active vectors, `[A, N]`
-    corr: Vec<f32>,
+    pub(crate) rs: Vec<f32>,
+    /// correlations of the active vectors, `[A, N]` (the gram tier reuses
+    /// this as the per-vector working correlations, `[B, N]`)
+    pub(crate) corr: Vec<f32>,
     /// per-vector residuals, `[B, m]`
-    r: Vec<f32>,
+    pub(crate) r: Vec<f32>,
     /// per-vector lower-triangular Cholesky factors, `[B, s*s]`
-    chol: Vec<f32>,
+    pub(crate) chol: Vec<f32>,
     /// per-vector `D_Sᵀ x`, `[B, s]`
-    alpha: Vec<f32>,
+    pub(crate) alpha: Vec<f32>,
     /// per-vector coefficients, `[B, s]`
-    y: Vec<f32>,
+    pub(crate) y: Vec<f32>,
     /// per-vector forward-solve scratch, `[B, s]` (fully rewritten per solve)
-    z: Vec<f32>,
+    pub(crate) z: Vec<f32>,
     /// per-vector new-Gram-column scratch, `[B, s]`
-    b: Vec<f32>,
+    pub(crate) b: Vec<f32>,
     /// per-vector selected atom ids
-    sel: Vec<Vec<usize>>,
+    pub(crate) sel: Vec<Vec<usize>>,
+    /// per-vector selected-atom bitmask, `[B, N]` (O(1) argmax mask scan)
+    pub(crate) mask: Vec<bool>,
     /// indices of vectors still running this iteration
-    active: Vec<usize>,
+    pub(crate) active: Vec<usize>,
     /// per-vector early-termination threshold `δ·‖x‖`
-    stop: Vec<f32>,
+    pub(crate) stop: Vec<f32>,
     /// per-vector finished flag
-    done: Vec<bool>,
+    pub(crate) done: Vec<bool>,
+    /// gram tier: initial projections α⁰ = X·Dᵀ, `[B, N]`
+    pub(crate) alpha0: Vec<f32>,
+    /// gram tier: per-vector ‖x‖² (seed of the residual-norm recurrence)
+    pub(crate) xnorm2: Vec<f32>,
+    /// gram tier: per-vector current ‖r‖² via the scalar recurrence
+    pub(crate) err2: Vec<f32>,
+}
+
+/// Scratch-release policy shared with the attend path (DESIGN.md §10): a
+/// buffer whose capacity exceeds this factor times the current call's need
+/// is truncated and shrunk, so a one-off giant batch cannot pin its
+/// high-water mark for the life of the workspace.
+const SCRATCH_SHRINK_FACTOR: usize = 4;
+
+fn shrink_scratch<T>(v: &mut Vec<T>, keep: usize) {
+    if v.capacity() > keep.saturating_mul(SCRATCH_SHRINK_FACTOR) {
+        v.truncate(keep);
+        v.shrink_to(keep);
+    }
 }
 
 impl Default for BatchOmpWorkspace {
@@ -90,9 +112,13 @@ impl BatchOmpWorkspace {
             z: Vec::new(),
             b: Vec::new(),
             sel: Vec::new(),
+            mask: Vec::new(),
             active: Vec::new(),
             stop: Vec::new(),
             done: Vec::new(),
+            alpha0: Vec::new(),
+            xnorm2: Vec::new(),
+            err2: Vec::new(),
         }
     }
 
@@ -104,12 +130,15 @@ impl BatchOmpWorkspace {
         self.pool = pool;
     }
 
-    fn ensure(&mut self, batch: usize, n_atoms: usize, m: usize, s_cap: usize) {
+    pub(crate) fn ensure(&mut self, batch: usize, n_atoms: usize, m: usize, s_cap: usize) {
         if self.rs.len() < batch * m {
             self.rs.resize(batch * m, 0.0);
         }
         if self.corr.len() < batch * n_atoms {
             self.corr.resize(batch * n_atoms, 0.0);
+        }
+        if self.mask.len() < batch * n_atoms {
+            self.mask.resize(batch * n_atoms, false);
         }
         if self.r.len() < batch * m {
             self.r.resize(batch * m, 0.0);
@@ -139,6 +168,43 @@ impl BatchOmpWorkspace {
             self.stop.resize(batch, 0.0);
         }
     }
+
+    /// Gram-tier extras on top of [`BatchOmpWorkspace::ensure`].
+    pub(crate) fn ensure_gram(&mut self, batch: usize, n_atoms: usize) {
+        if self.alpha0.len() < batch * n_atoms {
+            self.alpha0.resize(batch * n_atoms, 0.0);
+        }
+        if self.xnorm2.len() < batch {
+            self.xnorm2.resize(batch, 0.0);
+        }
+        if self.err2.len() < batch {
+            self.err2.resize(batch, 0.0);
+        }
+    }
+
+    /// Release over-grown scratch after a call (the PR 6 attend-scratch
+    /// policy): buffers grow monotonically while encoding, but any buffer
+    /// whose capacity exceeds 4× this call's need is truncated + shrunk.
+    /// `sel`'s outer Vec is shrunk the same way (dropping a slot drops its
+    /// inner Vec); inner `sel` vectors are bounded by `s_cap` and stay.
+    pub(crate) fn shrink(&mut self, batch: usize, n_atoms: usize, m: usize, s_cap: usize) {
+        shrink_scratch(&mut self.rs, batch * m);
+        shrink_scratch(&mut self.corr, batch * n_atoms);
+        shrink_scratch(&mut self.mask, batch * n_atoms);
+        shrink_scratch(&mut self.r, batch * m);
+        shrink_scratch(&mut self.chol, batch * s_cap * s_cap);
+        shrink_scratch(&mut self.alpha, batch * s_cap);
+        shrink_scratch(&mut self.y, batch * s_cap);
+        shrink_scratch(&mut self.z, batch * s_cap);
+        shrink_scratch(&mut self.b, batch * s_cap);
+        shrink_scratch(&mut self.sel, batch);
+        shrink_scratch(&mut self.active, batch);
+        shrink_scratch(&mut self.stop, batch);
+        shrink_scratch(&mut self.done, batch);
+        shrink_scratch(&mut self.alpha0, batch * n_atoms);
+        shrink_scratch(&mut self.xnorm2, batch);
+        shrink_scratch(&mut self.err2, batch);
+    }
 }
 
 /// Sparse-code `batch` vectors (`xs` is `[batch, m]` row-major) over `atoms`
@@ -163,6 +229,7 @@ pub fn omp_encode_batch(
     for bi in 0..batch {
         ws.r[bi * m..(bi + 1) * m].copy_from_slice(&xs[bi * m..(bi + 1) * m]);
         ws.sel[bi].clear();
+        ws.mask[bi * n_atoms..(bi + 1) * n_atoms].fill(false);
         ws.done[bi] = false;
         ws.stop[bi] = (delta * norm2(&xs[bi * m..(bi + 1) * m])).max(1e-12);
     }
@@ -216,6 +283,7 @@ pub fn omp_encode_batch(
             let active: &[usize] = &ws.active;
             let corr: &[f32] = &ws.corr;
             let sel_ptr = SendPtr::new(ws.sel.as_mut_ptr());
+            let mask_ptr = SendPtr::new(ws.mask.as_mut_ptr());
             let done_ptr = SendPtr::new(ws.done.as_mut_ptr());
             let chol_ptr = SendPtr::new(ws.chol.as_mut_ptr());
             let alpha_ptr = SendPtr::new(ws.alpha.as_mut_ptr());
@@ -228,6 +296,9 @@ pub fn omp_encode_batch(
                 // SAFETY: each shard owns exactly one (ai, bi) pair and
                 // every view below is that pair's private stripe.
                 let sel = unsafe { &mut *sel_ptr.get().add(bi) };
+                let mask = unsafe {
+                    std::slice::from_raw_parts_mut(mask_ptr.get().add(bi * n_atoms), n_atoms)
+                };
                 let done = unsafe { &mut *done_ptr.get().add(bi) };
                 let chol = unsafe {
                     std::slice::from_raw_parts_mut(
@@ -249,9 +320,10 @@ pub fn omp_encode_batch(
                 let mut best_abs = -1.0f32;
                 for n in 0..n_atoms {
                     let a = corr_row[n].abs();
-                    // improvement test first (as in the sequential scan):
-                    // the mask check only runs for improvement candidates
-                    if a > best_abs && !sel.contains(&n) {
+                    // improvement test first (as in the sequential scan),
+                    // then the O(1) bitmask — same selection as the old
+                    // O(s) `sel.contains` scan, bit for bit
+                    if a > best_abs && !mask[n] {
                         best_abs = a;
                         best = n;
                     }
@@ -283,6 +355,7 @@ pub fn omp_encode_batch(
                 }
                 chol[i * s_cap + i] = diag.sqrt();
                 sel.push(best);
+                mask[best] = true;
                 alpha[i] = dot(aj, x);
 
                 // Solve L z = alpha, then Lᵀ y = z.
@@ -311,7 +384,7 @@ pub fn omp_encode_batch(
         }
     }
 
-    (0..batch)
+    let codes = (0..batch)
         .map(|bi| {
             let k = ws.sel[bi].len();
             SparseCode {
@@ -319,7 +392,9 @@ pub fn omp_encode_batch(
                 val: ws.y[bi * s_cap..bi * s_cap + k].to_vec(),
             }
         })
-        .collect()
+        .collect();
+    ws.shrink(batch, n_atoms, m, s_cap);
+    codes
 }
 
 /// Convenience wrapper allocating its own workspace (tests / cold paths).
@@ -427,6 +502,47 @@ mod tests {
                 assert_eq!(codes[bi].idx, solo.idx, "batch={batch} n={n} m={m} s={s}");
                 assert_eq!(codes[bi].val, solo.val, "batch={batch} n={n} m={m} s={s}");
             }
+        }
+    }
+
+    #[test]
+    fn workspace_releases_overgrown_scratch() {
+        // The attend-scratch policy applied to the encoder: a one-off giant
+        // batch must not pin its high-water mark for the workspace's life.
+        // After a small follow-up call, every sized buffer's capacity is
+        // back within the policy bound (4× that call's need).
+        let mut ws = BatchOmpWorkspace::new();
+        let mut rng = Rng::new(3);
+        let (n, m, s) = (64usize, 16usize, 4usize);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let big = 128usize;
+        let xs = rng.normal_vec(big * m);
+        let _ = omp_encode_batch(&atoms, n, m, &xs, big, s, 0.0, &mut ws);
+        assert!(ws.corr.capacity() >= big * n, "big call must have grown corr");
+        assert!(ws.chol.capacity() >= big * s * s, "big call must have grown chol");
+
+        let small = 2usize;
+        let codes = omp_encode_batch(&atoms, n, m, &xs[..small * m], small, s, 0.0, &mut ws);
+        assert_eq!(codes.len(), small);
+        let bound = |need: usize| need * SCRATCH_SHRINK_FACTOR;
+        assert!(ws.corr.capacity() <= bound(small * n), "corr still pinned: {}", ws.corr.capacity());
+        assert!(ws.mask.capacity() <= bound(small * n), "mask still pinned: {}", ws.mask.capacity());
+        assert!(ws.r.capacity() <= bound(small * m), "r still pinned: {}", ws.r.capacity());
+        assert!(ws.rs.capacity() <= bound(small * m), "rs still pinned: {}", ws.rs.capacity());
+        assert!(
+            ws.chol.capacity() <= bound(small * s * s),
+            "chol still pinned: {}",
+            ws.chol.capacity()
+        );
+        assert!(ws.y.capacity() <= bound(small * s), "y still pinned: {}", ws.y.capacity());
+        assert!(ws.sel.capacity() <= bound(small), "sel still pinned: {}", ws.sel.capacity());
+
+        // and the shrunken workspace still encodes correctly (ensure regrows)
+        let codes = omp_encode_batch(&atoms, n, m, &xs, big, s, 0.0, &mut ws);
+        for bi in (0..big).step_by(37) {
+            let solo = omp_encode_alloc(&atoms, n, m, &xs[bi * m..(bi + 1) * m], s, 0.0);
+            assert_eq!(codes[bi].idx, solo.idx);
+            assert_eq!(codes[bi].val, solo.val);
         }
     }
 

@@ -1,0 +1,458 @@
+//! Precomputed-Gram Batch-OMP — the encode-path twin of the PR 6 shared-
+//! dictionary decode GEMM (DESIGN.md §12).
+//!
+//! The canonical pursuit pays O(N·m) per iteration per vector to re-stream
+//! the dictionary for correlations. But the universal dictionary is fixed
+//! and input-agnostic, so its Gram matrix G = D·Dᵀ can be computed once per
+//! process ([`crate::tensor::par_syrk`], cached on the
+//! [`Dictionary`](crate::dict::Dictionary)) and every pursuit rewritten in
+//! coefficient space (Rubinstein, Zibulevsky & Elad 2008):
+//!
+//! - initial projections α⁰ = X·Dᵀ for the **whole batch** are one GEMM —
+//!   the only pass over the dictionary this tier ever makes;
+//! - each iteration updates the working correlations as α ← α⁰ − G_S·β,
+//!   O(N·s) per vector instead of O(N·m);
+//! - the Cholesky's new Gram column is a row read of G instead of s dots;
+//! - the residual norm follows the scalar recurrence ‖r‖² = ‖x‖² − βᵀα⁰_S
+//!   (exact because β solves G_S·β = α⁰_S, which kills the quadratic
+//!   term), so **no residual vectors exist at all**.
+//!
+//! **Determinism contract** (the fast-math precedent, DESIGN.md §10): the
+//! tier is bitwise self-identical at every thread count — every mutable
+//! stripe is per-vector, every shared FP op (the α⁰ GEMM, the axpy
+//! refresh) runs the canonical kernels in a fixed order. Against the
+//! canonical encoder it is tolerance-pinned, not bitwise: correlations are
+//! updated by recurrence rather than recomputed from the residual, so
+//! low-order bits differ and argmax near-ties may resolve differently. On
+//! identical selection orders the coefficients *are* bitwise equal,
+//! because `par_syrk` built every G entry with the same canonical `dot`
+//! the canonical tier would have issued (and `dot` is bitwise
+//! commutative: same multiplies, same fixed reduction tree). Opt-in via
+//! `--gram-omp` / `LEXICO_GRAM_OMP=1`; canonical stays the default.
+
+use super::batch::BatchOmpWorkspace;
+use super::SparseCode;
+use crate::exec::SendPtr;
+use crate::tensor::{axpy, dot, par_matmul_bt};
+
+/// Sparse-code `batch` vectors (`xs` is `[batch, m]` row-major) over
+/// `atoms` `[N, m]` using the precomputed Gram matrix `gram` (`[N, N]`,
+/// full symmetric storage as produced by [`crate::tensor::par_syrk`]).
+/// Termination semantics match [`omp_encode`](super::omp_encode): at most
+/// `s_max` atoms, optional `delta` early termination — evaluated on the
+/// recurrence-tracked residual norm.
+#[allow(clippy::too_many_arguments)]
+pub fn omp_encode_batch_gram(
+    atoms: &[f32],
+    n_atoms: usize,
+    m: usize,
+    gram: &[f32],
+    xs: &[f32],
+    batch: usize,
+    s_max: usize,
+    delta: f32,
+    ws: &mut BatchOmpWorkspace,
+) -> Vec<SparseCode> {
+    debug_assert_eq!(atoms.len(), n_atoms * m);
+    debug_assert_eq!(gram.len(), n_atoms * n_atoms);
+    debug_assert_eq!(xs.len(), batch * m);
+    let s_cap = s_max.min(n_atoms).min(m.max(1) * 4); // same defensive cap
+    ws.ensure(batch, n_atoms, m, s_cap);
+    ws.ensure_gram(batch, n_atoms);
+
+    // THE amortized step: initial projections for the whole batch in one
+    // GEMM (each α⁰ entry is one whole canonical dot — bitwise equal to
+    // the canonical tier's iteration-0 correlations, at any thread count).
+    {
+        let pool = ws.pool.clone();
+        par_matmul_bt(
+            &pool,
+            &mut ws.alpha0[..batch * n_atoms],
+            xs,
+            atoms,
+            batch,
+            m,
+            n_atoms,
+        );
+    }
+
+    for bi in 0..batch {
+        let x = &xs[bi * m..(bi + 1) * m];
+        ws.sel[bi].clear();
+        ws.mask[bi * n_atoms..(bi + 1) * n_atoms].fill(false);
+        ws.done[bi] = false;
+        let n2 = dot(x, x);
+        ws.xnorm2[bi] = n2;
+        ws.err2[bi] = n2;
+        ws.stop[bi] = (delta * n2.sqrt()).max(1e-12);
+        // working correlations start at α⁰
+        ws.corr[bi * n_atoms..(bi + 1) * n_atoms]
+            .copy_from_slice(&ws.alpha0[bi * n_atoms..(bi + 1) * n_atoms]);
+    }
+
+    for _iter in 0..s_cap {
+        // which vectors still have budget and a residual above threshold?
+        // (‖r‖ comes from the scalar recurrence — clamp guards the tiny
+        // negative dust FP cancellation can leave once r ≈ 0)
+        ws.active.clear();
+        for bi in 0..batch {
+            if ws.done[bi] {
+                continue;
+            }
+            if ws.err2[bi].max(0.0).sqrt() <= ws.stop[bi] {
+                ws.done[bi] = true;
+            } else {
+                ws.active.push(bi);
+            }
+        }
+        let a_cnt = ws.active.len();
+        if a_cnt == 0 {
+            break;
+        }
+
+        // Per-vector: argmax over working correlations, Cholesky via Gram
+        // row reads, triangular solves, then the two recurrences. One
+        // shard per active vector; every mutable view below is that
+        // vector's private stripe, so shards are disjoint and the result
+        // is bitwise independent of the thread count.
+        {
+            let pool = ws.pool.clone();
+            let active: &[usize] = &ws.active;
+            let alpha0: &[f32] = &ws.alpha0;
+            let xnorm2: &[f32] = &ws.xnorm2;
+            let corr_ptr = SendPtr::new(ws.corr.as_mut_ptr());
+            let mask_ptr = SendPtr::new(ws.mask.as_mut_ptr());
+            let sel_ptr = SendPtr::new(ws.sel.as_mut_ptr());
+            let done_ptr = SendPtr::new(ws.done.as_mut_ptr());
+            let chol_ptr = SendPtr::new(ws.chol.as_mut_ptr());
+            let alpha_ptr = SendPtr::new(ws.alpha.as_mut_ptr());
+            let y_ptr = SendPtr::new(ws.y.as_mut_ptr());
+            let z_ptr = SendPtr::new(ws.z.as_mut_ptr());
+            let b_ptr = SendPtr::new(ws.b.as_mut_ptr());
+            let err2_ptr = SendPtr::new(ws.err2.as_mut_ptr());
+            pool.parallel_for(a_cnt, move |ai| {
+                let bi = active[ai];
+                // SAFETY: each shard owns exactly one `bi`; every view
+                // below is that vector's private stripe.
+                let sel = unsafe { &mut *sel_ptr.get().add(bi) };
+                let mask = unsafe {
+                    std::slice::from_raw_parts_mut(mask_ptr.get().add(bi * n_atoms), n_atoms)
+                };
+                let done = unsafe { &mut *done_ptr.get().add(bi) };
+                let corr = unsafe {
+                    std::slice::from_raw_parts_mut(corr_ptr.get().add(bi * n_atoms), n_atoms)
+                };
+                let chol = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        chol_ptr.get().add(bi * s_cap * s_cap),
+                        s_cap * s_cap,
+                    )
+                };
+                let alpha =
+                    unsafe { std::slice::from_raw_parts_mut(alpha_ptr.get().add(bi * s_cap), s_cap) };
+                let yv = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * s_cap), s_cap) };
+                let z = unsafe { std::slice::from_raw_parts_mut(z_ptr.get().add(bi * s_cap), s_cap) };
+                let bcol = unsafe { std::slice::from_raw_parts_mut(b_ptr.get().add(bi * s_cap), s_cap) };
+                let err2 = unsafe { &mut *err2_ptr.get().add(bi) };
+                let a0 = &alpha0[bi * n_atoms..(bi + 1) * n_atoms];
+
+                let i = sel.len();
+                let mut best = usize::MAX;
+                let mut best_abs = -1.0f32;
+                for n in 0..n_atoms {
+                    let a = corr[n].abs();
+                    // same scan shape as the canonical tiers: improvement
+                    // test first, then the O(1) selected-atom bitmask
+                    if a > best_abs && !mask[n] {
+                        best_abs = a;
+                        best = n;
+                    }
+                }
+                if best == usize::MAX {
+                    *done = true; // dictionary exhausted
+                    return;
+                }
+
+                // Cholesky update: the new Gram column is a row read of G —
+                // the very dots the canonical tier computes on the fly,
+                // precomputed once per process.
+                let g_best = &gram[best * n_atoms..(best + 1) * n_atoms];
+                for (k, &p) in sel.iter().enumerate() {
+                    bcol[k] = g_best[p];
+                }
+                for k in 0..i {
+                    let mut w = bcol[k];
+                    for l in 0..k {
+                        w -= chol[k * s_cap + l] * chol[i * s_cap + l];
+                    }
+                    chol[i * s_cap + k] = w / chol[k * s_cap + k];
+                }
+                let mut diag = 1.0f32;
+                for l in 0..i {
+                    diag -= chol[i * s_cap + l] * chol[i * s_cap + l];
+                }
+                if diag <= 1e-10 {
+                    *done = true; // atom numerically in span of selection
+                    return;
+                }
+                chol[i * s_cap + i] = diag.sqrt();
+                sel.push(best);
+                mask[best] = true;
+                alpha[i] = a0[best]; // = ⟨x, atom⟩, already computed
+
+                // Solve L z = α⁰_S, then Lᵀ y = z (identical to canonical).
+                let k_sel = i + 1;
+                for k in 0..k_sel {
+                    let mut zv = alpha[k];
+                    for l in 0..k {
+                        zv -= chol[k * s_cap + l] * z[l];
+                    }
+                    z[k] = zv / chol[k * s_cap + k];
+                }
+                for k in (0..k_sel).rev() {
+                    let mut val = z[k];
+                    for l in k + 1..k_sel {
+                        val -= chol[l * s_cap + k] * yv[l];
+                    }
+                    yv[k] = val / chol[k * s_cap + k];
+                }
+
+                // correlation refresh in coefficient space:
+                // α ← α⁰ − Σ_k y_k · G[sel_k] — O(N·|S|), replacing the
+                // canonical tier's O(N·m) dictionary pass.
+                corr.copy_from_slice(a0);
+                for (k, &p) in sel.iter().enumerate() {
+                    axpy(corr, -yv[k], &gram[p * n_atoms..(p + 1) * n_atoms]);
+                }
+                // residual-norm recurrence: ‖r‖² = ‖x‖² − βᵀα⁰_S, exact
+                // because β solves G_S·β = α⁰_S — no residual vector.
+                let mut e = xnorm2[bi];
+                for k in 0..k_sel {
+                    e -= yv[k] * alpha[k];
+                }
+                *err2 = e;
+            });
+        }
+    }
+
+    let codes = (0..batch)
+        .map(|bi| {
+            let k = ws.sel[bi].len();
+            SparseCode {
+                idx: ws.sel[bi].iter().map(|&p| p as u16).collect(),
+                val: ws.y[bi * s_cap..bi * s_cap + k].to_vec(),
+            }
+        })
+        .collect();
+    ws.shrink(batch, n_atoms, m, s_cap);
+    codes
+}
+
+/// Convenience wrapper allocating its own workspace (tests / cold paths).
+#[allow(clippy::too_many_arguments)]
+pub fn omp_encode_batch_gram_alloc(
+    atoms: &[f32],
+    n_atoms: usize,
+    m: usize,
+    gram: &[f32],
+    xs: &[f32],
+    batch: usize,
+    s_max: usize,
+    delta: f32,
+) -> Vec<SparseCode> {
+    let mut ws = BatchOmpWorkspace::new();
+    omp_encode_batch_gram(atoms, n_atoms, m, gram, xs, batch, s_max, delta, &mut ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecPool;
+    use crate::omp::{omp_encode_alloc, rel_error};
+    use crate::tensor::{norm2, syrk};
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn random_unit_atoms(rng: &mut Rng, n: usize, m: usize) -> Vec<f32> {
+        let mut atoms = rng.normal_vec(n * m);
+        for a in atoms.chunks_mut(m) {
+            let nrm = norm2(a).max(1e-12);
+            a.iter_mut().for_each(|x| *x /= nrm);
+        }
+        atoms
+    }
+
+    fn gram_of(atoms: &[f32], n: usize, m: usize) -> Vec<f32> {
+        let mut g = vec![0.0; n * n];
+        syrk(&mut g, atoms, n, m);
+        g
+    }
+
+    #[test]
+    fn gram_tier_is_bitwise_self_identical_at_every_thread_count() {
+        // (a) of the parity suite: the tier's own determinism contract —
+        // identical codes through 1-, 2- and 4-thread pools, and across
+        // repeated calls on a reused workspace.
+        let mut rng = Rng::new(71);
+        let (m, n, s, batch) = (16usize, 128usize, 6usize, 17usize);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let g = gram_of(&atoms, n, m);
+        let xs = rng.normal_vec(batch * m);
+        let runs: Vec<Vec<SparseCode>> = [1usize, 2, 4]
+            .iter()
+            .map(|&t| {
+                let mut ws = BatchOmpWorkspace::with_pool(Arc::new(ExecPool::new(t)));
+                omp_encode_batch_gram(&atoms, n, m, &g, &xs, batch, s, 0.0, &mut ws)
+            })
+            .collect();
+        for bi in 0..batch {
+            for (ri, run) in runs.iter().enumerate().skip(1) {
+                assert_eq!(runs[0][bi].idx, run[bi].idx, "T-run {ri} vec {bi}: indices diverged");
+                assert_eq!(runs[0][bi].val, run[bi].val, "T-run {ri} vec {bi}: values diverged");
+            }
+        }
+        let mut ws = BatchOmpWorkspace::with_pool(Arc::new(ExecPool::new(2)));
+        let first = omp_encode_batch_gram(&atoms, n, m, &g, &xs, batch, s, 0.0, &mut ws);
+        let second = omp_encode_batch_gram(&atoms, n, m, &g, &xs, batch, s, 0.0, &mut ws);
+        for bi in 0..batch {
+            assert_eq!(first[bi].idx, second[bi].idx, "workspace reuse changed vec {bi}");
+            assert_eq!(first[bi].val, second[bi].val, "workspace reuse changed vec {bi}");
+        }
+    }
+
+    #[test]
+    fn gram_tier_recovers_exact_supports_like_canonical() {
+        // (b): on k-sparse signals over well-separated dictionaries the
+        // gram tier finds the same support as canonical OMP; when the
+        // selection *order* also matches, the coefficients are bitwise
+        // equal (the Cholesky reads from G the same dots the canonical
+        // tier computes on the fly).
+        Prop::new(48).check("gram_support_recovery", |rng, size| {
+            let m = 16 + (size % 3) * 8;
+            let n = 4 * m;
+            let atoms = random_unit_atoms(rng, n, m);
+            let g = gram_of(&atoms, n, m);
+            let k = 1 + rng.below(3);
+            let mut x = vec![0.0; m];
+            for _ in 0..k {
+                let id = rng.below(n);
+                let c = rng.range_f32(0.5, 2.0) * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                crate::tensor::axpy(&mut x, c, &atoms[id * m..(id + 1) * m]);
+            }
+            let canon = omp_encode_alloc(&atoms, n, m, &x, k, 0.0);
+            let gcodes = omp_encode_batch_gram_alloc(&atoms, n, m, &g, &x, 1, k, 0.0);
+            let mut sc = canon.idx.clone();
+            let mut sg = gcodes[0].idx.clone();
+            sc.sort_unstable();
+            sg.sort_unstable();
+            if sg != sc {
+                return Err(format!("supports diverged: {sg:?} vs {sc:?}"));
+            }
+            if gcodes[0].idx == canon.idx && gcodes[0].val != canon.val {
+                return Err("identical selection order but coefficients diverged".into());
+            }
+            let err = rel_error(&atoms, m, &x, &gcodes[0]);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("k={k} err={err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn gram_tier_rel_error_within_tolerance_of_canonical() {
+        // (c): on arbitrary signals the tiers may resolve argmax near-ties
+        // differently, but the gram tier's reconstruction can be no worse
+        // than canonical beyond a 1e-4 slack — across random shapes,
+        // batches and both termination modes.
+        for &delta in &[0.0f32, 0.4] {
+            Prop::new(24).seed(0x67A1 + delta.to_bits() as u64).check(
+                "gram_rel_error",
+                |rng, size| {
+                    let m = 8 + (size % 4) * 8;
+                    let n = 4 * m;
+                    let s = 1 + rng.below(8);
+                    let batch = 1 + rng.below(5);
+                    let atoms = random_unit_atoms(rng, n, m);
+                    let g = gram_of(&atoms, n, m);
+                    let xs = rng.normal_vec(batch * m);
+                    let gcodes =
+                        omp_encode_batch_gram_alloc(&atoms, n, m, &g, &xs, batch, s, delta);
+                    for bi in 0..batch {
+                        let x = &xs[bi * m..(bi + 1) * m];
+                        let canon = omp_encode_alloc(&atoms, n, m, x, s, delta);
+                        let ec = rel_error(&atoms, m, x, &canon);
+                        let eg = rel_error(&atoms, m, x, &gcodes[bi]);
+                        if eg > ec + 1e-4 {
+                            return Err(format!(
+                                "vec {bi} (m={m} n={n} s={s} δ={delta}): gram {eg} > canon {ec} + 1e-4"
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_and_gram_calls_share_one_workspace() {
+        // Tier interleaving on one workspace (the cache owns exactly one
+        // `BatchOmpWorkspace`): neither tier may corrupt the other's calls.
+        let mut ws = BatchOmpWorkspace::new();
+        let mut rng = Rng::new(29);
+        let (m, n, s, batch) = (16usize, 64usize, 4usize, 7usize);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let g = gram_of(&atoms, n, m);
+        for round in 0..3 {
+            let xs = rng.normal_vec(batch * m);
+            let gshared = omp_encode_batch_gram(&atoms, n, m, &g, &xs, batch, s, 0.0, &mut ws);
+            let gfresh = omp_encode_batch_gram_alloc(&atoms, n, m, &g, &xs, batch, s, 0.0);
+            let cshared =
+                crate::omp::omp_encode_batch(&atoms, n, m, &xs, batch, s, 0.0, &mut ws);
+            for bi in 0..batch {
+                assert_eq!(gshared[bi].idx, gfresh[bi].idx, "round {round} vec {bi}");
+                assert_eq!(gshared[bi].val, gfresh[bi].val, "round {round} vec {bi}");
+                let solo = omp_encode_alloc(&atoms, n, m, &xs[bi * m..(bi + 1) * m], s, 0.0);
+                assert_eq!(cshared[bi].idx, solo.idx, "round {round} vec {bi} (canonical)");
+                assert_eq!(cshared[bi].val, solo.val, "round {round} vec {bi} (canonical)");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_and_empty_batch() {
+        let mut rng = Rng::new(5);
+        let (m, n) = (16usize, 64usize);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let g = gram_of(&atoms, n, m);
+        let xs = vec![0.0f32; m];
+        let codes = omp_encode_batch_gram_alloc(&atoms, n, m, &g, &xs, 1, 4, 0.0);
+        assert_eq!(codes[0].nnz(), 0, "zero vector must terminate before iteration 1");
+        let none = omp_encode_batch_gram_alloc(&atoms, n, m, &g, &[], 0, 4, 0.0);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn delta_termination_tracks_the_recurrence() {
+        // The recurrence-tracked norm must actually stop the pursuit: with
+        // a generous delta the gram tier stops early, and the achieved
+        // error respects the bound (or the budget ran out).
+        let mut rng = Rng::new(13);
+        let (m, n, s) = (32usize, 128usize, 12usize);
+        let atoms = random_unit_atoms(&mut rng, n, m);
+        let g = gram_of(&atoms, n, m);
+        let x = rng.normal_vec(m);
+        let code = &omp_encode_batch_gram_alloc(&atoms, n, m, &g, &x, 1, s, 0.5)[0];
+        let err = rel_error(&atoms, m, &x, code);
+        assert!(
+            code.nnz() == s || err <= 0.5 + 1e-3,
+            "stopped at nnz={} with err={err}",
+            code.nnz()
+        );
+        let full = &omp_encode_batch_gram_alloc(&atoms, n, m, &g, &x, 1, s, 0.0)[0];
+        assert!(full.nnz() >= code.nnz(), "delta run selected more atoms than full run");
+    }
+}

@@ -11,10 +11,29 @@
 //! makes early stopping equivalent to having asked for fewer atoms).
 
 pub mod batch;
+pub mod gram;
 
 pub use batch::{omp_encode_batch, omp_encode_batch_alloc, BatchOmpWorkspace};
+pub use gram::{omp_encode_batch_gram, omp_encode_batch_gram_alloc};
 
 use crate::tensor::{axpy, dot, norm2};
+
+/// True when the process opted into the precomputed-Gram Batch-OMP encode
+/// tier: `--gram-omp` on any CLI subcommand, or `LEXICO_GRAM_OMP` set to
+/// anything other than empty/`0`. Mirrors the fast-math tier's opt-in
+/// (DESIGN.md §10): the canonical encoder stays the default. Cached after
+/// the first read — consumers snapshot it at construction time (see
+/// `LexicoCache::new`), so the hot paths never issue env syscalls.
+pub fn gram_omp_requested() -> bool {
+    static REQUESTED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *REQUESTED.get_or_init(|| match std::env::var("LEXICO_GRAM_OMP") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => false,
+    })
+}
 
 /// Result of sparse-coding one vector.
 #[derive(Clone, Debug, Default)]
@@ -39,6 +58,7 @@ pub struct OmpWorkspace {
     r: Vec<f32>,       // [m] residual
     b: Vec<f32>,       // [s] new Gram column
     sel: Vec<usize>,   // selected atom ids
+    mask: Vec<bool>,   // [N] selected-atom bitmask (O(1) argmax mask scan)
 }
 
 impl OmpWorkspace {
@@ -52,21 +72,37 @@ impl OmpWorkspace {
             r: vec![0.0; m],
             b: vec![0.0; s_max],
             sel: Vec::with_capacity(s_max),
+            mask: vec![false; n_atoms],
         }
     }
 
     fn ensure(&mut self, n_atoms: usize, m: usize, s_max: usize) {
+        // Each buffer's growth is independent: a call mix that enlarges one
+        // dimension after a warmup on another must never leave a companion
+        // buffer behind (regression: alpha/z/y/b previously grew only when
+        // `chol` did, coupling the s-sized buffers to chol's history).
         if self.corr.len() < n_atoms {
             self.corr.resize(n_atoms, 0.0);
+        }
+        if self.mask.len() < n_atoms {
+            self.mask.resize(n_atoms, false);
         }
         if self.r.len() < m {
             self.r.resize(m, 0.0);
         }
         if self.chol.len() < s_max * s_max {
             self.chol.resize(s_max * s_max, 0.0);
+        }
+        if self.alpha.len() < s_max {
             self.alpha.resize(s_max, 0.0);
+        }
+        if self.z.len() < s_max {
             self.z.resize(s_max, 0.0);
+        }
+        if self.y.len() < s_max {
             self.y.resize(s_max, 0.0);
+        }
+        if self.b.len() < s_max {
             self.b.resize(s_max, 0.0);
         }
     }
@@ -89,6 +125,7 @@ pub fn omp_encode(
     debug_assert_eq!(x.len(), m);
     ws.ensure(n_atoms, m, s_max);
     ws.sel.clear();
+    ws.mask[..n_atoms].fill(false);
     ws.r[..m].copy_from_slice(x);
     let norm_x = norm2(x);
     let stop = (delta * norm_x).max(1e-12);
@@ -109,9 +146,10 @@ pub fn omp_encode(
         for n in 0..n_atoms {
             let c = dot(&atoms[n * m..(n + 1) * m], r);
             let a = c.abs();
-            // improvement test first: the O(s) mask scan then only runs for
-            // the few candidates that beat the running max, not all N atoms
-            if a > best_abs && !ws.sel.contains(&n) {
+            // improvement test first, then the O(1) bitmask lookup — same
+            // selection as the old O(s) `sel.contains` scan, bit for bit
+            // (the mask is exactly the membership test it replaces)
+            if a > best_abs && !ws.mask[n] {
                 best_abs = a;
                 best = n;
             }
@@ -142,6 +180,7 @@ pub fn omp_encode(
         }
         ws.chol[i * s_max + i] = diag.sqrt();
         ws.sel.push(best);
+        ws.mask[best] = true;
         ws.alpha[i] = dot(aj, x);
 
         // Solve L z = alpha, then Lᵀ y = z.
@@ -331,6 +370,33 @@ mod tests {
                 Err(format!("stopped at nnz={} with err={err}", code.nnz()))
             }
         });
+    }
+
+    #[test]
+    fn workspace_buffers_grow_independently_across_shape_cycles() {
+        // Regression for the coupled-growth bug: `alpha`/`z`/`y`/`b` used to
+        // resize only inside the `chol` growth branch, so their sizes were a
+        // function of chol's history rather than the current call. One
+        // workspace cycled through adversarial (n, m, s) shapes — each
+        // dimension growing after a warmup on the others — must keep every
+        // call bit-identical to a fresh workspace.
+        let mut ws = OmpWorkspace::new(8, 4, 2);
+        let mut rng = Rng::new(33);
+        for &(n, m, s) in &[
+            (8usize, 4usize, 2usize), // matches construction
+            (64, 4, 2),               // n grows alone
+            (64, 32, 2),              // m grows alone
+            (16, 8, 12),              // s grows while n/m shrink
+            (128, 16, 5),             // n grows again, s shrinks
+            (32, 48, 16),             // m and s grow together
+        ] {
+            let atoms = random_unit_atoms(&mut rng, n, m);
+            let x = rng.normal_vec(m);
+            let code = omp_encode(&atoms, n, m, &x, s, 0.0, &mut ws);
+            let solo = omp_encode_alloc(&atoms, n, m, &x, s, 0.0);
+            assert_eq!(code.idx, solo.idx, "idx diverged at n={n} m={m} s={s}");
+            assert_eq!(code.val, solo.val, "val diverged at n={n} m={m} s={s}");
+        }
     }
 
     #[test]

@@ -602,6 +602,8 @@ impl Batcher {
         m.active_sessions = self.n_active() as u64;
         m.prefilling_sessions = self.n_prefilling() as u64;
         m.kv_used_bytes = kv_used;
+        m.gram_bytes =
+            self.ctx.dicts.as_ref().map(|d| d.gram_bytes() as f64).unwrap_or(0.0);
         m.hibernated_sessions = n_hib;
         if let Some(store) = &self.spill {
             let (spilled_pages, spill_bytes, faults, _) = store.counters();

@@ -42,6 +42,9 @@ pub struct Metrics {
     pub active_sessions: u64,
     pub prefilling_sessions: u64,
     pub kv_used_bytes: f64,
+    /// bytes held by realized dictionary Gram caches (gauge; nonzero only
+    /// once some cache opts into the precomputed-Gram OMP tier)
+    pub gram_bytes: f64,
     /// named sessions parked for a later `resume` (gauge)
     pub hibernated_sessions: u64,
     /// CSR pages written to the spill store over the server's lifetime
@@ -100,6 +103,9 @@ impl Metrics {
             self.prefilling_sessions,
             self.kv_used_bytes / 1024.0
         );
+        if self.gram_bytes > 0.0 {
+            s += &format!(" gram={:.1} KiB", self.gram_bytes / 1024.0);
+        }
         if self.spilled_pages + self.faults + self.hibernated_sessions + self.resumed > 0 {
             s += &format!(
                 "\nspill   : hibernated={} resumed={} spilled_pages={} spill_bytes={:.1} KiB faults={}",
@@ -185,6 +191,7 @@ mod tests {
         m.active_sessions = 4;
         m.prefilling_sessions = 1;
         m.kv_used_bytes = 4096.0;
+        m.gram_bytes = 65536.0;
         m.hibernated_sessions = 2;
         m.resumed = 1;
         m.spilled_pages = 6;
@@ -193,7 +200,7 @@ mod tests {
         let r = m.report();
         assert!(r.contains("completed=2"));
         assert!(r.contains("cancelled=1"), "{r}");
-        assert!(r.contains("active=4 prefilling=1 kv_used=4.0 KiB"), "{r}");
+        assert!(r.contains("active=4 prefilling=1 kv_used=4.0 KiB gram=64.0 KiB"), "{r}");
         assert!(
             r.contains("hibernated=2 resumed=1 spilled_pages=6 spill_bytes=3.0 KiB faults=4"),
             "{r}"

@@ -218,6 +218,68 @@ pub fn par_matmul_bt(
     });
 }
 
+/// Symmetric rank-k product G[N,N] = A·Aᵀ for row-major `A` [N,K] — the
+/// Gram kernel behind the precomputed-Gram OMP tier (DESIGN.md §12). Only
+/// the lower triangle is computed (one canonical [`dot`] per element,
+/// j ≤ i); each strict-lower element is mirrored into the upper triangle,
+/// so `g` holds the full symmetric matrix and consumers get unit-stride
+/// row access to any Gram column.
+pub fn syrk(g: &mut [f32], a: &[f32], n: usize, k: usize) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(g.len(), n * n);
+    for i in 0..n {
+        let ai = &a[i * k..(i + 1) * k];
+        for j in 0..=i {
+            let v = dot(ai, &a[j * k..(j + 1) * k]);
+            g[i * n + j] = v;
+            if j != i {
+                g[j * n + i] = v;
+            }
+        }
+    }
+}
+
+/// [`syrk`] on the pool: rows of the lower triangle are claimed round-robin
+/// (row `i` to shard `i % shards`), balancing the triangle's linearly
+/// growing per-row cost without splitting any element — each element is
+/// still one whole canonical [`dot`], so the result is bitwise identical to
+/// `syrk` at every thread count. Write disjointness: the shard owning row
+/// `i` writes the lower-triangle row `(i, j ≤ i)` and its mirror, the
+/// strict-upper column `(j < i, i)`. Lower writes from different rows live
+/// in different rows; upper writes from different rows live in different
+/// columns; and no lower write (j ≤ i) can collide with an upper write
+/// (row < column), so every cell has exactly one writer.
+pub fn par_syrk(pool: &ExecPool, g: &mut [f32], a: &[f32], n: usize, k: usize) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(g.len(), n * n);
+    let shards = pool.threads().min(n).max(1);
+    if shards == 1 || n * (n + 1) / 2 * k < PAR_MIN_MACS {
+        syrk(g, a, n, k);
+        return;
+    }
+    let gp = SendPtr::new(g.as_mut_ptr());
+    pool.parallel_for(shards, move |si| {
+        let mut i = si;
+        while i < n {
+            let ai = &a[i * k..(i + 1) * k];
+            for j in 0..=i {
+                let v = dot(ai, &a[j * k..(j + 1) * k]);
+                // SAFETY: shard si exclusively owns row i of the lower
+                // triangle and column i of the strict upper triangle (rows
+                // are claimed round-robin; see the disjointness argument in
+                // the doc comment).
+                unsafe {
+                    *gp.get().add(i * n + j) = v;
+                    if j != i {
+                        *gp.get().add(j * n + i) = v;
+                    }
+                }
+            }
+            i += shards;
+        }
+    });
+}
+
 /// y += alpha * x (the GEMM inner kernel), in the canonical element-wise
 /// order of [`simd`] — dispatched once per process to the best vectorized
 /// implementation the host supports; every implementation is bitwise
@@ -416,6 +478,75 @@ mod tests {
         matmul(&mut d1, &a, &b1, 1, k, 1);
         par_matmul(&pool, &mut d2, &a, &b1, 1, k, 1);
         assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn syrk_matches_naive_and_is_symmetric() {
+        Prop::new(32).check("syrk", |rng, size| {
+            let n = 1 + rng.below(size + 9);
+            let k = 1 + rng.below(size + 7);
+            let a = rng.normal_vec(n * k);
+            let mut g = vec![0.0; n * n];
+            syrk(&mut g, &a, n, k);
+            // reference: A·Aᵀ via the naive matmul with B = Aᵀ
+            let mut at = vec![0.0; k * n];
+            for i in 0..n {
+                for kk in 0..k {
+                    at[kk * n + i] = a[i * k + kk];
+                }
+            }
+            let naive = naive_matmul(&a, &at, n, k, n);
+            crate::util::prop::assert_close(&g, &naive, 1e-3, "syrk")?;
+            for i in 0..n {
+                for j in 0..i {
+                    if g[i * n + j] != g[j * n + i] {
+                        return Err(format!("not symmetric at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn par_syrk_is_bitwise_identical_at_every_thread_count() {
+        // The gram-tier determinism contract starts here: the Gram matrix
+        // itself must be bitwise independent of the pool width, including
+        // shapes large enough to clear the PAR_MIN_MACS inline fallback.
+        for &threads in &[1usize, 2, 3, 4] {
+            let pool = ExecPool::new(threads);
+            Prop::new(16).seed(0xC0DE + threads as u64).check("par_syrk", |rng, size| {
+                let n = 1 + rng.below(16 * size + 61);
+                let k = 1 + rng.below(size + 17);
+                let a = rng.normal_vec(n * k);
+                let mut g_seq = vec![0.0; n * n];
+                let mut g_par = vec![0.0; n * n];
+                syrk(&mut g_seq, &a, n, k);
+                par_syrk(&pool, &mut g_par, &a, n, k);
+                if g_seq != g_par {
+                    return Err(format!("par_syrk diverged at T={threads} n={n} k={k}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn syrk_entries_match_canonical_dot() {
+        // Gram entries must be the very dots the canonical OMP Cholesky
+        // computes on the fly — this is what makes the gram tier's factor
+        // bitwise equal to the canonical tier's on identical selections.
+        let mut rng = Rng::new(23);
+        let (n, k) = (37usize, 19usize);
+        let a = rng.normal_vec(n * k);
+        let mut g = vec![0.0; n * n];
+        syrk(&mut g, &a, n, k);
+        for i in 0..n {
+            for j in 0..n {
+                let d = dot(&a[i * k..(i + 1) * k], &a[j * k..(j + 1) * k]);
+                assert_eq!(g[i * n + j], d, "G[{i},{j}] != dot");
+            }
+        }
     }
 
     #[test]
