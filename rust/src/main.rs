@@ -62,7 +62,9 @@ USAGE:
   lexico serve  [--addr 127.0.0.1:7077] [--model M] [--method SPEC]
                 [--budget-mb 64] [--max-sessions 32] [--threads N]
                 [--prefill-chunk 256] [--spill-dir DIR]
-                [--resident-budget MB]
+                [--resident-budget MB] [--max-queue 1024]
+                [--max-decode-batch 0] [--ttft-slo MS] [--tpot-slo MS]
+                [--tenant-quota SPEC] [--max-conns 256]
   lexico eval   [--model M] [--task arith] [--method SPEC] [--n 50]
                 [--seed 0] [--dict-n 1024] [--threads N]
   lexico repro  <fig1|fig3|fig5|fig6|fig7|table1..table7|all> [--fast]
@@ -102,6 +104,19 @@ from stalling active sessions' decode cadence; token streams are bitwise
 identical at every chunk size. Send {"stream": true} with a request to
 receive one {"id","token","i"} JSON line per generated token ahead of the
 final response line.
+
+SLO-aware admission: requests may carry \"tenant\", \"priority\" (higher
+admits first; FIFO within a class) and \"deadline_ms\" (0 = none;
+past-deadline jobs retire with a deadline_expired error, freeing their
+budget the same round). --tenant-quota \"free=seats:2,kv_mb:4;*=seats:8\"
+caps per-tenant seats/KV bytes (\"*\" = every other tenant). --max-queue
+bounds the admission queue: overflow sheds the lowest-priority, newest
+queued request with {\"error\":\"overloaded\",\"retry_after_ms\":N}.
+--ttft-slo / --tpot-slo (ms) steer the per-round prefill chunk budget and
+decode batch composition under load; --max-decode-batch hard-caps the
+decode batch (0 = all; pacing only — token streams never change).
+--max-conns caps concurrent connections; excess accepts get
+{\"error\":\"busy\"} with a retry hint.
 
 --spill-dir DIR enables tiered KV residency: cold sessions' sealed pages
 page out to an append-only file under DIR and fault back on demand,
@@ -185,6 +200,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefix_min_tokens: args.get("prefix-min-tokens", "8").parse()?,
         max_fanout: args.get("max-fanout", "8").parse()?,
         prefill_chunk: args.get("prefill-chunk", "256").parse()?,
+        max_queue: args.get("max-queue", "1024").parse()?,
+        max_decode_batch: args.get("max-decode-batch", "0").parse()?,
+        slo: lexico::server::sched::SloTargets {
+            ttft_ms: args.get("ttft-slo", "0").parse()?,
+            tpot_ms: args.get("tpot-slo", "0").parse()?,
+        },
+        tenant_quotas: lexico::server::sched::TenantQuotas::parse(&args.get("tenant-quota", ""))
+            .map_err(|e| anyhow::anyhow!("--tenant-quota: {e}"))?,
         // spill_dir / resident_budget_bytes: env-derived defaults
         ..Default::default()
     };
@@ -210,7 +233,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.kv_budget_bytes / 1048576.0,
         engine.pool().threads()
     );
-    lexico::server::http::serve(&addr, jtx, metrics.clone(), |a| {
+    let opts =
+        lexico::server::http::ServeOpts { max_conns: args.get("max-conns", "256").parse()? };
+    lexico::server::http::serve_opts(&addr, opts, jtx, metrics.clone(), |a| {
         println!("listening on {a}");
     })?;
     drop(batcher);

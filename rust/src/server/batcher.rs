@@ -52,16 +52,17 @@
 //! `decode_batch` round. The reply carries the primary continuation plus
 //! the alternates.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::metrics::Metrics;
+use super::sched::{self, BatchGovernor, ChunkGovernor, Clock, SloTargets, TenantQuotas};
 use super::{lock_tolerant, Job, Response, SessionVerb, StreamDelta};
 use crate::cache::factory::{build_cache, CacheContext};
 use crate::cache::KvCache;
@@ -106,6 +107,18 @@ pub struct BatcherConfig {
     /// the spill store, LRU by last-touch round — never the sessions in
     /// the current decode batch. 0 = use `kv_budget_bytes`.
     pub resident_budget_bytes: f64,
+    /// graceful-overload queue bound: when the pending queue grows past
+    /// this, the lowest-priority (newest within its class) queued generate
+    /// request is shed with a structured `overloaded` + `retry_after_ms`
+    /// reply instead of waiting forever
+    pub max_queue: usize,
+    /// hard cap on sessions advanced per decode round (0 = all); the
+    /// TPOT governor can cap further under latency pressure
+    pub max_decode_batch: usize,
+    /// TTFT/TPOT targets steering the round budgets (0 = off)
+    pub slo: SloTargets,
+    /// per-tenant seat/KV-byte admission quotas (empty = unlimited)
+    pub tenant_quotas: TenantQuotas,
 }
 
 /// Distinguishes spill directories of batchers that share the
@@ -137,6 +150,10 @@ impl Default for BatcherConfig {
                 .ok()
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(0.0),
+            max_queue: 1024,
+            max_decode_batch: 0,
+            slo: SloTargets::default(),
+            tenant_quotas: TenantQuotas::default(),
         }
     }
 }
@@ -367,6 +384,9 @@ struct Session {
     /// hibernation — a resumed session must not re-count them at its next
     /// retirement
     counted: usize,
+    /// round this session last advanced a token — the aging key the capped
+    /// decode selection rotates on within a priority class
+    last_step_round: u64,
 }
 
 impl Session {
@@ -386,6 +406,9 @@ enum Retire {
     Done,
     /// client cancelled — `next_token` still pending
     Cancelled,
+    /// the request's deadline passed — `next_token` still pending; the
+    /// group replies `deadline_expired` and its budget frees this round
+    Expired,
     /// page fault or backend failure: the whole group replies this error
     Failed(String),
 }
@@ -407,6 +430,57 @@ struct Group {
     error: Option<String>,
     /// resumed sessions have no prefill, so no TTFT sample is recorded
     resumed: bool,
+    /// scheduler-clock time the job entered the queue (TTFT-rush ages
+    /// against this — a deterministic input under a manual clock)
+    enqueue_ms: f64,
+    /// scheduler-clock time the job expires (`f64::INFINITY` = none)
+    deadline_at: f64,
+    /// set at round top when `deadline_at` passes; every candidate retires
+    /// with [`Retire::Expired`] the same round
+    expired: bool,
+}
+
+/// A queued job plus the scheduling facts stamped at enqueue: its arrival
+/// sequence number (the deterministic FIFO key within a priority class)
+/// and its scheduler-clock arrival time (the deadline/aging origin).
+struct QueuedJob {
+    job: Job,
+    seq: u64,
+    enqueue_ms: f64,
+}
+
+impl QueuedJob {
+    fn deadline_at(&self) -> f64 {
+        if self.job.request.deadline_ms == 0 {
+            f64::INFINITY
+        } else {
+            self.enqueue_ms + self.job.request.deadline_ms as f64
+        }
+    }
+
+    fn slot(&self) -> sched::QueueSlot {
+        sched::QueueSlot {
+            seq: self.seq,
+            priority: self.job.request.priority,
+            sheddable: self.job.request.verb == SessionVerb::Generate,
+        }
+    }
+}
+
+/// What one admission attempt did, steering the pass loop in
+/// [`Batcher::admit`].
+enum Admit {
+    /// the queue (or budget state) changed — restart the pass so the
+    /// admission order is recomputed over the new queue
+    Progress,
+    /// this job cannot admit right now for a reason private to it (tenant
+    /// over quota, waiting on an in-flight shared prefill, a deferred
+    /// resume) — other queued jobs may still admit past it
+    Skip,
+    /// a global resource (seats, KV budget) is exhausted until a session
+    /// retires — end the pass; admitting anything lower-priority past this
+    /// point would invert the priority order
+    Stall,
 }
 
 // ---------------------------------------------------------------------------
@@ -421,7 +495,7 @@ pub struct Batcher {
     ctx: CacheContext,
     cfg: BatcherConfig,
     metrics: Arc<Mutex<Metrics>>,
-    pending: VecDeque<Job>,
+    pending: VecDeque<QueuedJob>,
     active: Vec<Session>,
     groups: HashMap<usize, Group>,
     next_gid: usize,
@@ -438,6 +512,18 @@ pub struct Batcher {
     spill: Option<Arc<SpillStore>>,
     /// scheduling-round counter — the LRU clock for hibernated sessions
     round_no: u64,
+    /// arrival-sequence stamp for the next enqueued job (the deterministic
+    /// FIFO key the priority order falls back on)
+    next_seq: u64,
+    /// the scheduler's time source: wall in production, manual under test
+    /// so deadline/aging decisions replay bitwise
+    clock: Clock,
+    /// TPOT governor over the per-round prefill chunk budget
+    chunk_gov: ChunkGovernor,
+    /// TPOT governor over the decode batch cap
+    batch_gov: BatchGovernor,
+    /// smoothed decode-round latency (the `retry_after_ms` hint scale)
+    round_ms_ema: f64,
 }
 
 impl Batcher {
@@ -459,6 +545,7 @@ impl Batcher {
                 None
             }
         });
+        let chunk_gov = ChunkGovernor::new(cfg.prefill_chunk);
         Batcher {
             engine,
             ctx,
@@ -474,7 +561,18 @@ impl Batcher {
             pool,
             spill,
             round_no: 0,
+            next_seq: 0,
+            clock: Clock::wall(),
+            chunk_gov,
+            batch_gov: BatchGovernor::new(),
+            round_ms_ema: sched::DEFAULT_ROUND_MS,
         }
+    }
+
+    /// Pin the scheduler clock to a fixed time (tests): every deadline and
+    /// aging decision becomes a pure function of queue state + this value.
+    pub fn set_manual_time(&mut self, ms: f64) {
+        self.clock = Clock::Manual(ms);
     }
 
     /// Poison-tolerant metrics lock (see [`lock_tolerant`]): one panicking
@@ -490,7 +588,90 @@ impl Batcher {
 
     pub fn enqueue(&mut self, job: Job) {
         self.lock_metrics().requests += 1;
-        self.pending.push_back(job);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(QueuedJob { job, seq, enqueue_ms: self.clock.now_ms() });
+        self.shed_overflow();
+    }
+
+    /// Graceful overload: while the queue exceeds its bound, shed the
+    /// lowest-priority (newest within its class) queued generate request
+    /// with a structured `overloaded` reply carrying a deterministic
+    /// backoff hint. Save/resume verbs are never shed.
+    fn shed_overflow(&mut self) {
+        while self.pending.len() > self.cfg.max_queue {
+            let slots: Vec<sched::QueueSlot> = self.pending.iter().map(|q| q.slot()).collect();
+            let Some(vi) = sched::shed_victim(&slots) else { break };
+            let q = self.pending.remove(vi).unwrap();
+            let retry = sched::retry_after_ms(
+                self.pending.len(),
+                self.cfg.max_sessions,
+                self.round_ms_ema,
+            );
+            self.lock_metrics().shed_prefills += 1;
+            let _ = q.job.reply.send(Response::overloaded(q.job.request.id, retry));
+        }
+    }
+
+    /// Round-top deadline sweep: queued jobs past their deadline reply
+    /// `deadline_expired` and leave the queue; active groups past theirs
+    /// are flagged so every candidate retires (freeing its budget) in this
+    /// round's [`Batcher::decode_round`] — the same same-round reclamation
+    /// cancellation gets. Decisions read only the scheduler clock.
+    fn expire_deadlines(&mut self) {
+        let now = self.clock.now_ms();
+        let mut qi = 0;
+        while qi < self.pending.len() {
+            if now >= self.pending[qi].deadline_at() {
+                let q = self.pending.remove(qi).unwrap();
+                self.lock_metrics().deadline_expired += 1;
+                let _ = q.job.reply.send(Response::failed(
+                    q.job.request.id,
+                    0,
+                    "deadline_expired".into(),
+                ));
+            } else {
+                qi += 1;
+            }
+        }
+        let metrics = &self.metrics;
+        for g in self.groups.values_mut() {
+            if !g.expired && now >= g.deadline_at {
+                g.expired = true;
+                lock_tolerant(metrics).deadline_expired += 1;
+            }
+        }
+    }
+
+    /// Per-tenant live usage: seats held (fan-out candidates included, like
+    /// [`Batcher::seats_used`]) and KV bytes charged, keyed by tenant name.
+    /// Hibernated sessions hold no seat and no tenant attribution.
+    fn tenant_usage(&self) -> BTreeMap<String, (usize, f64)> {
+        let mut usage: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+        for s in &self.active {
+            if s.is_hibernated() {
+                continue;
+            }
+            let Some(g) = self.groups.get(&s.group) else { continue };
+            let seats = match &s.phase {
+                Phase::Prefilling { fanout, .. } => *fanout,
+                _ => 1,
+            };
+            let bytes = if s.charges_shared {
+                s.cache.mem_bytes()
+            } else {
+                (s.cache.mem_bytes() - s.cache.shared_prefix_bytes()).max(0.0)
+            };
+            let e = usage.entry(g.job.request.tenant.clone()).or_insert((0, 0.0));
+            e.0 += seats;
+            e.1 += bytes;
+        }
+        usage
+    }
+
+    /// One tenant's live (seats, charged bytes) — the admission quota gate.
+    fn tenant_load(&self, tenant: &str) -> (usize, f64) {
+        self.tenant_usage().remove(tenant).unwrap_or((0, 0.0))
     }
 
     /// Whether a scheduling round would make progress. Hibernated sessions
@@ -589,6 +770,7 @@ impl Batcher {
     /// round.
     pub fn round(&mut self) {
         self.round_no += 1;
+        self.expire_deadlines();
         self.admit();
         self.advance_prefills();
         if self.decode_round() > 0 && !self.pending.is_empty() {
@@ -598,9 +780,18 @@ impl Batcher {
         self.debug_budget_invariant();
         let kv_used = self.kv_used_bytes();
         let n_hib = self.n_hibernated() as u64;
+        let tenants: Vec<(String, u64, f64)> = self
+            .tenant_usage()
+            .into_iter()
+            .filter(|(t, _)| !t.is_empty())
+            .map(|(t, (seats, bytes))| (t, seats as u64, bytes))
+            .collect();
+        let queue_depth = self.pending.len() as u64;
         let mut m = self.lock_metrics();
         m.active_sessions = self.n_active() as u64;
         m.prefilling_sessions = self.n_prefilling() as u64;
+        m.queue_depth = queue_depth;
+        m.tenants = tenants;
         m.kv_used_bytes = kv_used;
         m.gram_bytes =
             self.ctx.dicts.as_ref().map(|d| d.gram_bytes() as f64).unwrap_or(0.0);
@@ -739,255 +930,295 @@ impl Batcher {
         }
     }
 
-    /// Admission pass: seat pending requests in FIFO order while the
-    /// session cap and KV budget allow. Admission does **zero transformer
-    /// work** — it validates, resolves the prefix cache, builds (or forks)
-    /// the session's KV cache and seats the session in
-    /// [`Phase::Prefilling`]; the prompt itself lands one budgeted chunk
-    /// per round in [`Batcher::advance_prefills`], charging the budget
-    /// incrementally as chunks materialize bytes.
+    /// Admission pass: seat pending requests in priority order (highest
+    /// first, FIFO within a class — with all-default priorities this is
+    /// exactly the old FIFO) while the session cap, tenant quotas and KV
+    /// budget allow. Admission does **zero transformer work** — it
+    /// validates, resolves the prefix cache, builds (or forks) the
+    /// session's KV cache and seats the session in [`Phase::Prefilling`];
+    /// the prompt itself lands one budgeted chunk per round in
+    /// [`Batcher::advance_prefills`], charging the budget incrementally as
+    /// chunks materialize bytes.
     pub fn admit(&mut self) {
-        loop {
-            let Some(front) = self.pending.front() else { break };
-            if front.cancelled() {
-                // the client vanished while the job was still queued
-                let job = self.pending.pop_front().unwrap();
-                self.lock_metrics().cancelled += 1;
-                let _ = job.reply.send(Response::failed(
-                    job.request.id,
-                    0,
-                    "cancelled: client disconnected".into(),
-                ));
-                continue;
-            }
-            match front.request.verb {
-                SessionVerb::Save => {
-                    let job = self.pending.pop_front().unwrap();
-                    self.handle_save(job);
-                    continue;
-                }
-                SessionVerb::Resume => {
-                    if self.try_resume() {
-                        continue;
-                    }
-                    break; // defer (seats or budget); stays at the front
-                }
-                SessionVerb::Generate => {}
-            }
-            if self.seats_used() >= self.cfg.max_sessions {
+        'pass: loop {
+            if self.pending.is_empty() {
                 break;
             }
-            let prompt = front.request.prompt.clone();
-            let max_new = front.request.max_new;
-            let req_fanout = front.request.fanout;
-            let session_name = front.request.session.clone();
-            if !session_name.is_empty() {
-                if !valid_session_name(&session_name) {
-                    let job = self.pending.pop_front().unwrap();
-                    self.reject(job, 0, format!("invalid session name {session_name:?}"));
-                    continue;
-                }
-                if req_fanout > 1 {
-                    let job = self.pending.pop_front().unwrap();
-                    self.reject(job, 0, "named sessions cannot fan out".into());
-                    continue;
+            let slots: Vec<sched::QueueSlot> = self.pending.iter().map(|q| q.slot()).collect();
+            for qi in sched::admission_order(&slots) {
+                match self.admit_one(qi) {
+                    // the queue (or reclaimable budget) changed under the
+                    // ordering: recompute it before the next attempt
+                    Admit::Progress => continue 'pass,
+                    Admit::Skip => continue,
+                    Admit::Stall => break 'pass,
                 }
             }
+            break; // every queued job skipped: nothing admissible now
+        }
+    }
 
-            // ---- validate ---------------------------------------------
-            let ids = match tasks::try_encode(&prompt) {
-                Ok(body) => {
-                    let mut ids = vec![tasks::BOS];
-                    ids.extend(body);
-                    ids
+    /// One admission attempt for the queued job at index `qi`: validation,
+    /// per-tenant quota gate, global seat/budget gates, seating. See
+    /// [`Admit`] for what each outcome tells the pass loop.
+    fn admit_one(&mut self, qi: usize) -> Admit {
+        let front = &self.pending[qi].job;
+        if front.cancelled() {
+            // the client vanished while the job was still queued
+            let q = self.pending.remove(qi).unwrap();
+            self.lock_metrics().cancelled += 1;
+            let _ = q.job.reply.send(Response::failed(
+                q.job.request.id,
+                0,
+                "cancelled: client disconnected".into(),
+            ));
+            return Admit::Progress;
+        }
+        match front.request.verb {
+            SessionVerb::Save => {
+                let q = self.pending.remove(qi).unwrap();
+                self.handle_save(q.job);
+                return Admit::Progress;
+            }
+            SessionVerb::Resume => return self.try_resume_at(qi),
+            SessionVerb::Generate => {}
+        }
+        if self.seats_used() >= self.cfg.max_sessions {
+            return Admit::Stall;
+        }
+        let prompt = front.request.prompt.clone();
+        let max_new = front.request.max_new;
+        let req_fanout = front.request.fanout;
+        let tenant = front.request.tenant.clone();
+        let session_name = front.request.session.clone();
+        if !session_name.is_empty() {
+            if !valid_session_name(&session_name) {
+                let q = self.pending.remove(qi).unwrap();
+                self.reject(q.job, 0, format!("invalid session name {session_name:?}"));
+                return Admit::Progress;
+            }
+            if req_fanout > 1 {
+                let q = self.pending.remove(qi).unwrap();
+                self.reject(q.job, 0, "named sessions cannot fan out".into());
+                return Admit::Progress;
+            }
+        }
+
+        // ---- validate ---------------------------------------------
+        let ids = match tasks::try_encode(&prompt) {
+            Ok(body) => {
+                let mut ids = vec![tasks::BOS];
+                ids.extend(body);
+                ids
+            }
+            Err(e) => {
+                let q = self.pending.remove(qi).unwrap();
+                self.reject(q.job, 0, format!("bad prompt: {e}"));
+                return Admit::Progress;
+            }
+        };
+        if ids.len() + 2 > self.max_seq {
+            let q = self.pending.remove(qi).unwrap();
+            self.reject(q.job, ids.len(), "prompt too long".into());
+            return Admit::Progress;
+        }
+        let fanout = req_fanout.clamp(1, self.cfg.max_fanout.min(self.cfg.max_sessions));
+        if self.seats_used() + fanout > self.cfg.max_sessions && self.has_schedulable() {
+            return Admit::Stall; // wait for seats
+        }
+        let method = if front.request.method.is_empty() {
+            self.cfg.default_method.clone()
+        } else {
+            front.request.method.clone()
+        };
+
+        // ---- budget gate ------------------------------------------
+        let hit = self.prefix.lookup(&method, &ids);
+        if hit.is_none() {
+            // a session is mid-prefill on a prefix of this prompt and
+            // will insert it into the prefix cache on completion: wait
+            // (skipped in place, other jobs admit past it) instead of
+            // duplicating the whole cold prefill — the
+            // shared-system-prompt burst case
+            let inflight = self.active.iter().any(|s| match &s.phase {
+                Phase::Prefilling { ids: in_ids, method: in_m, insert_on_done, .. } => {
+                    *insert_on_done
+                        && *in_m == method
+                        && in_ids.len() <= ids.len()
+                        && in_ids[..] == ids[..in_ids.len()]
+                }
+                _ => false,
+            });
+            if inflight {
+                return Admit::Skip;
+            }
+        }
+        let cold_tokens = match hit {
+            Some(ei) => ids.len() - self.prefix.entries[ei].state.len(),
+            None => ids.len(),
+        };
+        // Worst-case estimate: full-precision KV for the tokens this
+        // admission will materialize. Extra fan-out candidates are
+        // estimated at their generated tokens only (the copy-on-write
+        // case). A suffix-bearing prefix hit also clones the entry's
+        // dense f32 rows for the chunked resume — resident until the
+        // suffix lands, so the gate must hold them too. Prompt tokens
+        // still waiting in other sessions' unprefilled chunks are
+        // counted via `reserved_prompt_bytes`; the true footprint
+        // feeds back through `kv_used_bytes` as chunks land.
+        let shape = self.engine.shape();
+        let hit_state_bytes = match hit {
+            Some(ei) if cold_tokens > 0 => self.prefix.entries[ei].state.bytes(),
+            _ => 0.0,
+        };
+        let est = shape.n_layers as f64
+            * shape.full_token_bytes()
+            * ((cold_tokens + max_new) as f64 + ((fanout - 1) * max_new) as f64)
+            + hit_state_bytes;
+
+        // ---- per-tenant quota gate --------------------------------
+        if let Some(quota) = self.cfg.tenant_quotas.get(&tenant) {
+            let (seats, bytes) = self.tenant_load(&tenant);
+            if (quota.seats > 0 && seats + fanout > quota.seats)
+                || (quota.kv_bytes > 0.0 && bytes + est > quota.kv_bytes)
+            {
+                // over quota: stays queued (pressure resolves as this
+                // tenant's sessions retire); other tenants admit past it
+                return Admit::Skip;
+            }
+        }
+
+        // Clamped at zero: right after a hibernated session wakes, its
+        // faulted pages can push usage transiently past the budget —
+        // a negative headroom here would wrap the comparison instead
+        // of just deferring admission.
+        let budget_left = (self.cfg.kv_budget_bytes
+            - self.kv_used_bytes()
+            - self.reserved_prompt_bytes())
+        .max(0.0);
+        if est > budget_left {
+            // hibernated sessions' resident pages are the coldest
+            // bytes in the process: page them out before deferring
+            // admission or evicting prefix entries
+            if self.spill_coldest_hibernated_except(None) > 0.0 {
+                return Admit::Progress;
+            }
+            if self.has_schedulable() {
+                return Admit::Stall; // wait for a session to retire
+            }
+            // free prefix residency (never the entry just matched) and
+            // re-evaluate; a surviving fork inherits the page charge
+            if let Some(evicted) = self.prefix.evict_lru_except(hit) {
+                self.promote_entry_owner(evicted);
+                return Admit::Progress;
+            }
+        }
+
+        // ---- seat the session (cold cache, or fork on a hit) ------
+        let q = self.pending.remove(qi).unwrap();
+        let enqueue_ms = q.enqueue_ms;
+        let deadline_at = q.deadline_at();
+        let job = q.job;
+        let t0 = Instant::now();
+        let (cache, state, prefix_hit, charges_shared, from_entry, insert_on_done) = match hit {
+            Some(ei) => {
+                let entry = &self.prefix.entries[ei];
+                let entry_id = entry.id;
+                let mut cache = entry.proto.fork();
+                cache.set_pool(self.pool.clone());
+                let suffix_len = ids.len() - entry.state.len();
+                let state = if suffix_len == 0 {
+                    // exact hit: no chunk will ever run, so only the
+                    // length and logits are needed — skip the dense
+                    // K/V row copy entirely
+                    PrefixState {
+                        tokens: entry.state.tokens.clone(),
+                        ks: vec![Vec::new(); entry.state.ks.len()],
+                        vs: vec![Vec::new(); entry.state.vs.len()],
+                        logits: entry.state.logits.clone(),
+                    }
+                } else {
+                    // the session owns its copy of the prefix rows
+                    // (the entry may be evicted while chunks are still
+                    // landing); the memcpy costs less than even one
+                    // suffix token's attention over those same rows
+                    entry.state.clone()
+                };
+                let mut m = self.lock_metrics();
+                m.prefix_hits += 1;
+                m.prefill_tokens_total += ids.len() as u64;
+                m.shared_bytes += cache.shared_prefix_bytes();
+                drop(m);
+                let longer = suffix_len >= self.cfg.prefix_min_tokens;
+                (cache, state, true, false, Some(entry_id), longer)
+            }
+            None => match build_cache(&method, &self.ctx) {
+                Ok(mut cache) => {
+                    cache.set_pool(self.pool.clone());
+                    // every cache this batcher builds can page out to
+                    // the spill store; forks (prefix hits, fan-out
+                    // candidates) inherit the attachment
+                    if let Some(store) = &self.spill {
+                        cache.set_spill_store(store.clone());
+                    }
+                    let cacheable = self.cfg.prefix_entries > 0
+                        && cache.split_prefill_exact()
+                        && ids.len() >= self.cfg.prefix_min_tokens;
+                    let mut m = self.lock_metrics();
+                    m.prefix_misses += 1;
+                    m.prefill_tokens_total += ids.len() as u64;
+                    drop(m);
+                    // until a prototype enters the prefix cache, the
+                    // session is sole owner of its bytes and charges
+                    // them (flipped when the entry is inserted)
+                    let state = PrefixState::empty(shape.n_layers);
+                    (cache, state, false, true, None, cacheable)
                 }
                 Err(e) => {
-                    let job = self.pending.pop_front().unwrap();
-                    self.reject(job, 0, format!("bad prompt: {e}"));
-                    continue;
+                    self.reject(job, ids.len(), format!("bad method '{method}': {e}"));
+                    return Admit::Progress;
                 }
-            };
-            if ids.len() + 2 > self.max_seq {
-                let job = self.pending.pop_front().unwrap();
-                self.reject(job, ids.len(), "prompt too long".into());
-                continue;
-            }
-            let fanout = req_fanout.clamp(1, self.cfg.max_fanout.min(self.cfg.max_sessions));
-            if self.seats_used() + fanout > self.cfg.max_sessions && self.has_schedulable() {
-                break; // wait for seats
-            }
-            let method = if front.request.method.is_empty() {
-                self.cfg.default_method.clone()
-            } else {
-                front.request.method.clone()
-            };
+            },
+        };
 
-            // ---- budget gate ------------------------------------------
-            let hit = self.prefix.lookup(&method, &ids);
-            if hit.is_none() {
-                // a session is mid-prefill on a prefix of this prompt and
-                // will insert it into the prefix cache on completion:
-                // wait (FIFO) instead of duplicating the whole cold
-                // prefill — the shared-system-prompt burst case
-                let inflight = self.active.iter().any(|s| match &s.phase {
-                    Phase::Prefilling { ids: in_ids, method: in_m, insert_on_done, .. } => {
-                        *insert_on_done
-                            && *in_m == method
-                            && in_ids.len() <= ids.len()
-                            && in_ids[..] == ids[..in_ids.len()]
-                    }
-                    _ => false,
-                });
-                if inflight {
-                    break;
-                }
-            }
-            let cold_tokens = match hit {
-                Some(ei) => ids.len() - self.prefix.entries[ei].state.len(),
-                None => ids.len(),
-            };
-            // Worst-case estimate: full-precision KV for the tokens this
-            // admission will materialize. Extra fan-out candidates are
-            // estimated at their generated tokens only (the copy-on-write
-            // case). A suffix-bearing prefix hit also clones the entry's
-            // dense f32 rows for the chunked resume — resident until the
-            // suffix lands, so the gate must hold them too. Prompt tokens
-            // still waiting in other sessions' unprefilled chunks are
-            // counted via `reserved_prompt_bytes`; the true footprint
-            // feeds back through `kv_used_bytes` as chunks land.
-            let shape = self.engine.shape();
-            let hit_state_bytes = match hit {
-                Some(ei) if cold_tokens > 0 => self.prefix.entries[ei].state.bytes(),
-                _ => 0.0,
-            };
-            let est = shape.n_layers as f64
-                * shape.full_token_bytes()
-                * ((cold_tokens + max_new) as f64 + ((fanout - 1) * max_new) as f64)
-                + hit_state_bytes;
-            // Clamped at zero: right after a hibernated session wakes, its
-            // faulted pages can push usage transiently past the budget —
-            // a negative headroom here would wrap the comparison instead
-            // of just deferring admission.
-            let budget_left = (self.cfg.kv_budget_bytes
-                - self.kv_used_bytes()
-                - self.reserved_prompt_bytes())
-            .max(0.0);
-            if est > budget_left {
-                // hibernated sessions' resident pages are the coldest
-                // bytes in the process: page them out before deferring
-                // admission or evicting prefix entries
-                if self.spill_coldest_hibernated_except(None) > 0.0 {
-                    continue;
-                }
-                if self.has_schedulable() {
-                    break; // wait for a session to retire
-                }
-                // free prefix residency (never the entry just matched) and
-                // re-evaluate; a surviving fork inherits the page charge
-                if let Some(evicted) = self.prefix.evict_lru_except(hit) {
-                    self.promote_entry_owner(evicted);
-                    continue;
-                }
-            }
-
-            // ---- seat the session (cold cache, or fork on a hit) ------
-            let job = self.pending.pop_front().unwrap();
-            let t0 = Instant::now();
-            let (cache, state, prefix_hit, charges_shared, from_entry, insert_on_done) = match hit {
-                Some(ei) => {
-                    let entry = &self.prefix.entries[ei];
-                    let entry_id = entry.id;
-                    let mut cache = entry.proto.fork();
-                    cache.set_pool(self.pool.clone());
-                    let suffix_len = ids.len() - entry.state.len();
-                    let state = if suffix_len == 0 {
-                        // exact hit: no chunk will ever run, so only the
-                        // length and logits are needed — skip the dense
-                        // K/V row copy entirely
-                        PrefixState {
-                            tokens: entry.state.tokens.clone(),
-                            ks: vec![Vec::new(); entry.state.ks.len()],
-                            vs: vec![Vec::new(); entry.state.vs.len()],
-                            logits: entry.state.logits.clone(),
-                        }
-                    } else {
-                        // the session owns its copy of the prefix rows
-                        // (the entry may be evicted while chunks are still
-                        // landing); the memcpy costs less than even one
-                        // suffix token's attention over those same rows
-                        entry.state.clone()
-                    };
-                    let mut m = self.lock_metrics();
-                    m.prefix_hits += 1;
-                    m.prefill_tokens_total += ids.len() as u64;
-                    m.shared_bytes += cache.shared_prefix_bytes();
-                    drop(m);
-                    let longer = suffix_len >= self.cfg.prefix_min_tokens;
-                    (cache, state, true, false, Some(entry_id), longer)
-                }
-                None => match build_cache(&method, &self.ctx) {
-                    Ok(mut cache) => {
-                        cache.set_pool(self.pool.clone());
-                        // every cache this batcher builds can page out to
-                        // the spill store; forks (prefix hits, fan-out
-                        // candidates) inherit the attachment
-                        if let Some(store) = &self.spill {
-                            cache.set_spill_store(store.clone());
-                        }
-                        let cacheable = self.cfg.prefix_entries > 0
-                            && cache.split_prefill_exact()
-                            && ids.len() >= self.cfg.prefix_min_tokens;
-                        let mut m = self.lock_metrics();
-                        m.prefix_misses += 1;
-                        m.prefill_tokens_total += ids.len() as u64;
-                        drop(m);
-                        // until a prototype enters the prefix cache, the
-                        // session is sole owner of its bytes and charges
-                        // them (flipped when the entry is inserted)
-                        let state = PrefixState::empty(shape.n_layers);
-                        (cache, state, false, true, None, cacheable)
-                    }
-                    Err(e) => {
-                        self.reject(job, ids.len(), format!("bad method '{method}': {e}"));
-                        continue;
-                    }
-                },
-            };
-
-            let pos = state.len();
-            let gid = self.next_gid;
-            self.next_gid += 1;
-            self.groups.insert(gid, Group {
-                job,
-                n_prompt: ids.len(),
-                // sized for the requested fan-out; shrunk at transition if
-                // the vocab cannot seat that many distinct first tokens
-                outputs: vec![None; fanout],
-                n_generated_primary: 0,
-                kv_ratio: 0.0,
-                prefix_hit,
-                // only the primary session exists until the prompt lands
-                remaining: 1,
-                t0,
-                ttft_ms: 0.0,
-                error: None,
-                resumed: false,
-            });
-            self.active.push(Session {
-                group: gid,
-                cand: 0,
-                cache,
-                pos,
-                next_token: 0,
-                generated: Vec::new(),
-                charges_shared,
-                from_entry,
-                max_new,
-                phase: Phase::Prefilling { ids, state, method, fanout, insert_on_done },
-                skip_commit: false,
-                counted: 0,
-            });
-        }
+        let pos = state.len();
+        let gid = self.next_gid;
+        self.next_gid += 1;
+        self.groups.insert(gid, Group {
+            job,
+            n_prompt: ids.len(),
+            // sized for the requested fan-out; shrunk at transition if
+            // the vocab cannot seat that many distinct first tokens
+            outputs: vec![None; fanout],
+            n_generated_primary: 0,
+            kv_ratio: 0.0,
+            prefix_hit,
+            // only the primary session exists until the prompt lands
+            remaining: 1,
+            t0,
+            ttft_ms: 0.0,
+            error: None,
+            resumed: false,
+            enqueue_ms,
+            deadline_at,
+            expired: false,
+        });
+        self.active.push(Session {
+            group: gid,
+            cand: 0,
+            cache,
+            pos,
+            next_token: 0,
+            generated: Vec::new(),
+            charges_shared,
+            from_entry,
+            max_new,
+            phase: Phase::Prefilling { ids, state, method, fanout, insert_on_done },
+            skip_commit: false,
+            counted: 0,
+            last_step_round: self.round_no,
+        });
+        Admit::Progress
     }
 
     /// Advance every prefilling session by one budgeted chunk. A session
@@ -1005,8 +1236,10 @@ impl Batcher {
             return;
         }
         let engine = self.engine.clone();
-        let chunk_cap =
-            if self.cfg.prefill_chunk == 0 { usize::MAX } else { self.cfg.prefill_chunk };
+        // under a TPOT target the governor's AIMD budget replaces the
+        // static chunk size (identical to it while the target is unset)
+        let chunk_cap = self.chunk_gov.budget();
+        let now_ms = self.clock.now_ms();
         let mut round_tokens = 0u64;
         let mut round_chunks = 0u64;
         let mut inserts: Vec<(String, PrefixState, Box<dyn KvCache>)> = Vec::new();
@@ -1016,11 +1249,16 @@ impl Batcher {
             if !self.active[si].is_prefilling() {
                 continue;
             }
-            // a cancelled request stops consuming chunks; decode_round
-            // retires it (and frees its bytes) this same round
-            if self.groups[&self.active[si].group].job.cancelled() {
+            // a cancelled (or deadline-expired) request stops consuming
+            // chunks; decode_round retires it (and frees its bytes) this
+            // same round
+            let g = &self.groups[&self.active[si].group];
+            if g.job.cancelled() || g.expired {
                 continue;
             }
+            // a request past half its TTFT target abandons chunk pacing
+            // and rushes its remaining prompt this round
+            let rush = sched::ttft_rush(now_ms - g.enqueue_ms, self.cfg.slo.ttft_ms);
             let (logits, complete) = {
                 let sess = &mut self.active[si];
                 let Phase::Prefilling { ids, state, insert_on_done, .. } = &mut sess.phase else {
@@ -1028,7 +1266,11 @@ impl Batcher {
                 };
                 let done = state.len();
                 // non-splittable backends must see the whole prompt at once
-                let cap = if sess.cache.split_prefill_exact() { chunk_cap } else { usize::MAX };
+                let cap = if sess.cache.split_prefill_exact() && !rush {
+                    chunk_cap
+                } else {
+                    usize::MAX
+                };
                 let end = (done + cap.min(ids.len() - done)).min(ids.len());
                 let logits = if done == 0 && end == ids.len() && !*insert_on_done {
                     // the whole prompt lands in this one chunk and nothing
@@ -1088,6 +1330,7 @@ impl Batcher {
                     phase: Phase::Decoding,
                     skip_commit: false,
                     counted: 0,
+                    last_step_round: self.round_no,
                 });
             }
             extra_candidates += (firsts.len() - 1) as u64;
@@ -1130,6 +1373,59 @@ impl Batcher {
     pub fn decode_round(&mut self) -> usize {
         let mut retire: Vec<(usize, Retire)> = Vec::new();
         let mut streamed = 0u64;
+        let mut clamped = 0u64;
+        let round_no = self.round_no;
+
+        // ---- pass 1: candidates + cancellation/expiry retirement ------
+        // Batch composition is decided over the decodable set BEFORE any
+        // token commits, so a session deferred by the TPOT batch cap does
+        // not advance this round — the cap changes which round a token
+        // lands in, never the token stream itself.
+        let mut candidates: Vec<usize> = Vec::new();
+        let mut slots: Vec<sched::DecodeSlot> = Vec::new();
+        for (si, sess) in self.active.iter().enumerate() {
+            if sess.is_hibernated() {
+                continue; // parked; its group is long gone
+            }
+            let g = self.groups.get(&sess.group).expect("session without group");
+            if g.job.cancelled() {
+                // abandoned mid-stream (or mid-prefill): retire before
+                // committing a token so the bytes return to the budget
+                // this round
+                retire.push((si, Retire::Cancelled));
+                continue;
+            }
+            if g.expired {
+                // past its deadline: the same same-round reclamation as
+                // cancellation
+                retire.push((si, Retire::Expired));
+                continue;
+            }
+            if sess.is_prefilling() {
+                continue; // still consuming prompt chunks
+            }
+            slots.push(sched::DecodeSlot {
+                priority: g.job.request.priority,
+                last_step_round: sess.last_step_round,
+                seat: si as u64,
+            });
+            candidates.push(si);
+        }
+        let cfg_cap =
+            if self.cfg.max_decode_batch == 0 { usize::MAX } else { self.cfg.max_decode_batch };
+        let cap = cfg_cap.min(self.batch_gov.cap());
+        let selected: Vec<usize> = if candidates.len() > cap {
+            sched::decode_selection(&slots, cap).into_iter().map(|i| candidates[i]).collect()
+        } else {
+            candidates
+        };
+        let mut in_sel = vec![false; self.active.len()];
+        for &si in &selected {
+            in_sel[si] = true;
+        }
+
+        // ---- pass 2: commit + stream + batch the selected sessions ----
+        let mut round_observed: Option<(f64, usize)> = None;
         {
             let mut toks: Vec<u32> = Vec::new();
             let mut poss: Vec<usize> = Vec::new();
@@ -1137,20 +1433,10 @@ impl Batcher {
             let mut caches: Vec<&mut dyn KvCache> = Vec::new();
             let groups = &self.groups;
             for (si, sess) in self.active.iter_mut().enumerate() {
-                if sess.is_hibernated() {
-                    continue; // parked; its group is long gone
-                }
-                let g = groups.get(&sess.group).expect("session without group");
-                if g.job.cancelled() {
-                    // abandoned mid-stream (or mid-prefill): retire before
-                    // committing a token so the bytes return to the budget
-                    // this round
-                    retire.push((si, Retire::Cancelled));
+                if !in_sel[si] {
                     continue;
                 }
-                if sess.is_prefilling() {
-                    continue; // still consuming prompt chunks
-                }
+                let g = groups.get(&sess.group).expect("session without group");
                 if sess.skip_commit {
                     // first round after a resume whose `next_token` was
                     // already committed before hibernation: feed it to
@@ -1165,12 +1451,19 @@ impl Batcher {
                                 token: tasks::decode(&[sess.next_token]),
                                 i: sess.generated.len() - 1,
                             };
-                            if tx.send(delta).is_err() {
-                                // the front end is gone — cancel; the
-                                // session retires next round
-                                g.job.cancel.store(true, Ordering::SeqCst);
-                            } else {
-                                streamed += 1;
+                            match tx.try_send(delta) {
+                                Ok(()) => streamed += 1,
+                                // slow reader: the bounded channel is full,
+                                // so the delta is dropped (clamped) instead
+                                // of stalling the round or buffering
+                                // without limit — the final reply still
+                                // carries the full text
+                                Err(TrySendError::Full(_)) => clamped += 1,
+                                Err(TrySendError::Disconnected(_)) => {
+                                    // the front end is gone — cancel; the
+                                    // session retires next round
+                                    g.job.cancel.store(true, Ordering::SeqCst);
+                                }
                             }
                         }
                     }
@@ -1205,7 +1498,9 @@ impl Batcher {
                     let sess = &mut self.active[si];
                     sess.next_token = argmax(&logits[bi]) as u32;
                     sess.pos += 1;
+                    sess.last_step_round = round_no;
                 }
+                round_observed = Some((round_ms, decoding.len()));
                 // one sample per round (amortized ms/token at that round's
                 // batch size) — duplicating it per session would flatten
                 // the percentile summary into the mean
@@ -1214,9 +1509,23 @@ impl Batcher {
                 m.decode_round_ms.push(round_ms);
             }
         }
-        if streamed > 0 {
-            self.lock_metrics().streamed_tokens += streamed;
+        if let Some((round_ms, batch)) = round_observed {
+            // production-path latency feedback: the retry_after hint scale
+            // and the TPOT governors. Decision paths pinned by tests run
+            // under a manual clock with targets unset, so this wall-clock
+            // read never reaches them.
+            self.round_ms_ema = 0.8 * self.round_ms_ema + 0.2 * round_ms;
+            self.chunk_gov.observe(round_ms, self.cfg.slo.tpot_ms);
+            self.batch_gov.observe(round_ms, self.cfg.slo.tpot_ms, batch);
         }
+        if streamed > 0 || clamped > 0 {
+            let mut m = self.lock_metrics();
+            m.streamed_tokens += streamed;
+            m.stream_clamped += clamped;
+        }
+        // the retirement loop swap_removes by descending index; the two
+        // passes above each push ascending, so re-sort the combined list
+        retire.sort_by_key(|&(si, _)| si);
         let n_retired = retire.len();
         for (si, why) in retire.into_iter().rev() {
             let mut sess = self.active.swap_remove(si);
@@ -1292,6 +1601,13 @@ impl Batcher {
                         g.n_prompt,
                         "cancelled: client disconnected".into(),
                     ));
+                } else if g.expired {
+                    // counted in deadline_expired when the flag was set
+                    let _ = g.job.reply.send(Response::failed(
+                        g.job.request.id,
+                        g.n_prompt,
+                        "deadline_expired".into(),
+                    ));
                 } else {
                     let mut m = self.lock_metrics();
                     m.completed += 1;
@@ -1316,6 +1632,7 @@ impl Batcher {
                         kv_ratio: g.kv_ratio,
                         prefix_hit: g.prefix_hit,
                         error: None,
+                        retry_after_ms: None,
                     });
                 }
             }
@@ -1403,6 +1720,7 @@ impl Batcher {
                     kv_ratio: sess.cache.kv_ratio(),
                     prefix_hit: false,
                     error: None,
+                    retry_after_ms: None,
                 });
             }
             Err(e) => self.reject(job, 0, format!("save failed: {e}")),
@@ -1420,42 +1738,43 @@ impl Batcher {
         })
     }
 
-    /// `{"cmd":"resume"}` at the queue front: wake the named session (in
-    /// RAM, or rebuilt from its on-disk snapshot after a restart) and seat
-    /// it decoding for `max_new` more tokens. Returns false to defer the
-    /// job — seats or budget are tight but other sessions can still retire.
-    fn try_resume(&mut self) -> bool {
-        let front = self.pending.front().expect("resume without job");
+    /// A queued `{"cmd":"resume"}`: wake the named session (in RAM, or
+    /// rebuilt from its on-disk snapshot after a restart) and seat it
+    /// decoding for `max_new` more tokens. Returns [`Admit::Skip`] to
+    /// defer the job in place — seats or budget are tight but other
+    /// sessions can still retire (and other queued jobs admit past it).
+    fn try_resume_at(&mut self, qi: usize) -> Admit {
+        let front = &self.pending[qi].job;
         let name = front.request.session.clone();
         let max_new = front.request.max_new;
         if !valid_session_name(&name) {
-            let job = self.pending.pop_front().unwrap();
-            self.reject(job, 0, format!("resume requires a valid session name, got {name:?}"));
-            return true;
+            let q = self.pending.remove(qi).unwrap();
+            self.reject(q.job, 0, format!("resume requires a valid session name, got {name:?}"));
+            return Admit::Progress;
         }
         if self.session_is_live(&name) {
-            let job = self.pending.pop_front().unwrap();
-            self.reject(job, 0, format!("session '{name}' is still running"));
-            return true;
+            let q = self.pending.remove(qi).unwrap();
+            self.reject(q.job, 0, format!("session '{name}' is still running"));
+            return Admit::Progress;
         }
         let si = match self.hibernated_index(&name) {
             Some(si) => si,
             None => match self.revive_from_disk(&name) {
                 Ok(Some(si)) => si,
                 Ok(None) => {
-                    let job = self.pending.pop_front().unwrap();
-                    self.reject(job, 0, format!("unknown session '{name}'"));
-                    return true;
+                    let q = self.pending.remove(qi).unwrap();
+                    self.reject(q.job, 0, format!("unknown session '{name}'"));
+                    return Admit::Progress;
                 }
                 Err(e) => {
-                    let job = self.pending.pop_front().unwrap();
-                    self.reject(job, 0, format!("resume failed: {e}"));
-                    return true;
+                    let q = self.pending.remove(qi).unwrap();
+                    self.reject(q.job, 0, format!("resume failed: {e}"));
+                    return Admit::Progress;
                 }
             },
         };
         if self.seats_used() + 1 > self.cfg.max_sessions {
-            return false;
+            return Admit::Skip;
         }
         let shape = self.engine.shape();
         let est = self.active[si].cache.spilled_bytes()
@@ -1472,11 +1791,14 @@ impl Batcher {
                 continue;
             }
             if self.has_schedulable() {
-                return false;
+                return Admit::Skip;
             }
             break; // bootstrap: wake anyway rather than deadlock the queue
         }
-        let job = self.pending.pop_front().unwrap();
+        let q = self.pending.remove(qi).unwrap();
+        let enqueue_ms = q.enqueue_ms;
+        let deadline_at = q.deadline_at();
+        let job = q.job;
         let Phase::Hibernated { name, method, n_prompt, committed, .. } =
             std::mem::replace(&mut self.active[si].phase, Phase::Decoding)
         else {
@@ -1499,6 +1821,7 @@ impl Batcher {
                 kv_ratio: sess.cache.kv_ratio(),
                 prefix_hit: false,
                 error: None,
+                retry_after_ms: None,
             };
             sess.phase = Phase::Hibernated {
                 name,
@@ -1508,7 +1831,7 @@ impl Batcher {
                 last_touch: self.round_no,
             };
             let _ = job.reply.send(resp);
-            return true;
+            return Admit::Progress;
         }
         let gid = self.next_gid;
         self.next_gid += 1;
@@ -1524,6 +1847,9 @@ impl Batcher {
             ttft_ms: 0.0,
             error: None,
             resumed: true,
+            enqueue_ms,
+            deadline_at,
+            expired: false,
         });
         let sess = &mut self.active[si];
         sess.group = gid;
@@ -1531,8 +1857,9 @@ impl Batcher {
         // `max_new` more tokens on top of what the session already holds
         sess.max_new = sess.generated.len() + max_new;
         sess.skip_commit = committed;
+        sess.last_step_round = self.round_no;
         self.lock_metrics().resumed += 1;
-        true
+        Admit::Progress
     }
 
     /// Rebuild a hibernated session from its on-disk snapshot (the
@@ -1579,6 +1906,7 @@ impl Batcher {
             },
             skip_commit: false,
             counted,
+            last_step_round: self.round_no,
         });
         Ok(Some(si))
     }
@@ -1717,7 +2045,7 @@ mod tests {
     use crate::dict::{Dictionary, DictionarySet};
     use crate::model::testutil::tiny_weights;
     use crate::server::Request;
-    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 
     fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
         Arc::new(DictionarySet {
@@ -2354,7 +2682,7 @@ mod tests {
         let cfg = BatcherConfig { default_method: "full".into(), ..Default::default() };
         let (mut b, metrics) = mk_batcher(cfg, false);
         let (rtx, rrx) = channel();
-        let (stx, srx) = channel();
+        let (stx, srx) = sync_channel(crate::server::STREAM_BUFFER);
         let mut j = Job::new(Request::greedy(5, "1+2=", 8, ""), rtx);
         j.stream = Some(stx);
         b.enqueue(j);
@@ -2606,5 +2934,258 @@ mod tests {
         b.enqueue(j);
         run_to_completion(&mut b, 400);
         assert!(r.recv().unwrap().error.is_none());
+    }
+
+    // ---- SLO-aware multi-tenant admission + graceful overload ------------
+
+    fn pri_job(id: u64, prompt: &str, max_new: usize, pri: i64) -> (Job, Receiver<Response>) {
+        job_with(Request { priority: pri, ..Request::greedy(id, prompt, max_new, "") })
+    }
+
+    #[test]
+    fn higher_priority_admits_before_an_earlier_low_priority_job() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            max_sessions: 1,
+            prefix_entries: 0,
+            ..Default::default()
+        };
+        let (mut b, _m) = mk_batcher(cfg, false);
+        let (lo, lo_rx) = pri_job(1, "1+2=", 3, 0);
+        let (hi, hi_rx) = pri_job(2, "4+5=", 3, 5);
+        b.enqueue(lo);
+        b.enqueue(hi);
+        b.admit();
+        assert_eq!(b.n_active(), 1);
+        assert_eq!(b.n_pending(), 1);
+        let gid = b.active[0].group;
+        assert_eq!(b.groups[&gid].job.request.id, 2, "higher priority takes the seat");
+        run_to_completion(&mut b, 64);
+        assert!(hi_rx.try_recv().unwrap().error.is_none());
+        assert!(lo_rx.try_recv().unwrap().error.is_none(), "low priority still completes");
+    }
+
+    #[test]
+    fn tenant_seat_quota_defers_without_rejecting() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            prefix_entries: 0,
+            tenant_quotas: TenantQuotas::parse("free=seats:1").unwrap(),
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let mk = |id: u64, tenant: &str| {
+            job_with(Request { tenant: tenant.into(), ..Request::greedy(id, "1+2=", 3, "") })
+        };
+        let (j1, r1) = mk(1, "free");
+        let (j2, r2) = mk(2, "free");
+        let (j3, r3) = mk(3, "pro");
+        b.enqueue(j1);
+        b.enqueue(j2);
+        b.enqueue(j3);
+        b.admit();
+        assert_eq!(b.n_active(), 2, "one free seat + the unlimited pro tenant");
+        assert_eq!(b.n_pending(), 1, "over-quota free job waits, not rejected");
+        run_to_completion(&mut b, 128);
+        for r in [r1, r2, r3] {
+            assert!(r.try_recv().unwrap().error.is_none());
+        }
+        assert_eq!(lock_tolerant(&metrics).rejected, 0);
+    }
+
+    #[test]
+    fn queue_overflow_sheds_lowest_priority_newest_first() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            max_queue: 2,
+            prefix_entries: 0,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let (j1, r1) = pri_job(1, "1+2=", 3, 5);
+        let (j2, r2) = pri_job(2, "4+5=", 3, 0);
+        let (j3, r3) = pri_job(3, "2,7>", 3, 0);
+        b.enqueue(j1);
+        b.enqueue(j2);
+        b.enqueue(j3); // overflow: lowest class, newest arrival goes first
+        let shed3 = r3.try_recv().unwrap();
+        assert_eq!(shed3.error.as_deref(), Some("overloaded"));
+        assert!(shed3.retry_after_ms.unwrap() > 0, "shed reply carries a backoff hint");
+        let (j4, r4) = pri_job(4, "abc#", 3, 7);
+        b.enqueue(j4); // overflow again: j2 is now the lowest class
+        let shed2 = r2.try_recv().unwrap();
+        assert_eq!(shed2.error.as_deref(), Some("overloaded"));
+        assert!(shed2.retry_after_ms.unwrap() > 0);
+        assert_eq!(lock_tolerant(&metrics).shed_prefills, 2);
+        run_to_completion(&mut b, 64);
+        assert!(r1.try_recv().unwrap().error.is_none(), "high priority survives the shed");
+        assert!(r4.try_recv().unwrap().error.is_none());
+    }
+
+    #[test]
+    fn queued_job_past_its_deadline_expires_at_round_top() {
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            prefix_entries: 0,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        b.set_manual_time(0.0);
+        let (j, r) = job_with(Request { deadline_ms: 10, ..Request::greedy(1, "1+2=", 4, "") });
+        b.enqueue(j);
+        assert_eq!(b.n_pending(), 1);
+        b.set_manual_time(20.0);
+        b.round();
+        assert_eq!(b.n_pending(), 0, "expired job leaves the queue");
+        assert_eq!(b.n_active(), 0, "it must never seat");
+        assert_eq!(lock_tolerant(&metrics).deadline_expired, 1);
+        let resp = r.try_recv().unwrap();
+        assert_eq!(resp.error.as_deref(), Some("deadline_expired"));
+    }
+
+    #[test]
+    fn active_session_past_its_deadline_frees_budget_same_round() {
+        // same prompt-probe loop as the cancellation test: find a stream
+        // that survives a few rounds under the tiny weights
+        for prompt in ["k01=v11;k02?", "1+2=", "2,7,4>", "abc#"] {
+            let cfg = BatcherConfig {
+                default_method: "full".into(),
+                prefix_entries: 0,
+                ..Default::default()
+            };
+            let (mut b, metrics) = mk_batcher(cfg, false);
+            b.set_manual_time(0.0);
+            let (j, r) =
+                job_with(Request { deadline_ms: 1000, ..Request::greedy(1, prompt, 50, "") });
+            b.enqueue(j);
+            for _ in 0..4 {
+                b.round();
+            }
+            if b.n_active() == 0 {
+                continue; // stream stopped early; try the next prompt
+            }
+            assert!(b.kv_used_bytes() > 0.0);
+            b.set_manual_time(2000.0);
+            b.round();
+            assert_eq!(b.n_active(), 0, "expired session must retire in one round");
+            assert_eq!(b.kv_used_bytes(), 0.0, "bytes must return to the budget");
+            assert_eq!(lock_tolerant(&metrics).deadline_expired, 1);
+            let resp = r.try_recv().unwrap();
+            assert_eq!(resp.error.as_deref(), Some("deadline_expired"));
+            return;
+        }
+        panic!("no prompt survived 4 rounds");
+    }
+
+    #[test]
+    fn decode_batch_cap_changes_pacing_but_never_tokens() {
+        let run = |cap: usize| -> (Vec<String>, u64) {
+            let cfg = BatcherConfig {
+                default_method: "full".into(),
+                prefix_entries: 0,
+                max_decode_batch: cap,
+                ..Default::default()
+            };
+            let (mut b, _m) = mk_batcher(cfg, false);
+            let (lo, lo_rx) = pri_job(1, "2,7,4>", 6, 0);
+            let (hi, hi_rx) = pri_job(2, "1+2=", 6, 5);
+            b.enqueue(lo);
+            b.enqueue(hi);
+            let mut lo_resp = None;
+            let mut hi_resp = None;
+            let mut first_done = 0u64;
+            for _ in 0..256 {
+                if !b.has_work() {
+                    break;
+                }
+                b.round();
+                if lo_resp.is_none() {
+                    if let Ok(resp) = lo_rx.try_recv() {
+                        lo_resp = Some(resp);
+                        if first_done == 0 {
+                            first_done = 1;
+                        }
+                    }
+                }
+                if hi_resp.is_none() {
+                    if let Ok(resp) = hi_rx.try_recv() {
+                        hi_resp = Some(resp);
+                        if first_done == 0 {
+                            first_done = 2;
+                        }
+                    }
+                }
+            }
+            let lo_resp = lo_resp.expect("low-priority reply pending");
+            let hi_resp = hi_resp.expect("high-priority reply pending");
+            assert!(lo_resp.error.is_none() && hi_resp.error.is_none());
+            (vec![hi_resp.text, lo_resp.text], first_done)
+        };
+        let (ref_texts, _) = run(0); // uncapped reference
+        let (cap_texts, first_done) = run(1);
+        assert_eq!(cap_texts, ref_texts, "the cap must change pacing only, never tokens");
+        assert_eq!(first_done, 2, "strict priority: the high-priority stream finishes first");
+    }
+
+    #[test]
+    fn poisoned_metrics_lock_leaves_rounds_and_report_serving() {
+        // regression for the lock_tolerant sweep: a panic while holding the
+        // metrics lock (what a crashed round leaves behind) must not take
+        // down later rounds or the `{"cmd":"metrics"}` report path
+        let cfg = BatcherConfig {
+            default_method: "full".into(),
+            prefix_entries: 0,
+            ..Default::default()
+        };
+        let (mut b, metrics) = mk_batcher(cfg, false);
+        let m2 = metrics.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("deliberate: poison the metrics lock");
+        })
+        .join();
+        assert!(metrics.lock().is_err(), "the lock must actually be poisoned");
+        let (j, r) = job(1, "1+2=", 3);
+        b.enqueue(j);
+        run_to_completion(&mut b, 64);
+        assert!(r.try_recv().unwrap().error.is_none());
+        let m = lock_tolerant(&metrics);
+        assert_eq!(m.completed, 1);
+        assert!(m.report().contains("completed=1"), "report still renders");
+    }
+
+    #[test]
+    fn slow_reader_clamps_its_stream_but_gets_the_full_final_text() {
+        for prompt in ["k01=v11;k02?", "1+2=", "2,7,4>", "abc#"] {
+            let cfg = BatcherConfig {
+                default_method: "full".into(),
+                prefix_entries: 0,
+                ..Default::default()
+            };
+            let (mut b, metrics) = mk_batcher(cfg, false);
+            let (rtx, rrx) = channel();
+            let (stx, srx) = sync_channel(2); // a reader that never drains
+            let mut j = Job::new(Request::greedy(9, prompt, 50, ""), rtx);
+            j.stream = Some(stx);
+            b.enqueue(j);
+            run_to_completion(&mut b, 256);
+            let resp = rrx.try_recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            if resp.n_generated <= 2 {
+                continue; // too short to overflow the buffer; next prompt
+            }
+            let deltas: Vec<StreamDelta> = srx.try_iter().collect();
+            assert_eq!(deltas.len(), 2, "buffer capacity bounds the live stream");
+            for (i, d) in deltas.iter().enumerate() {
+                assert_eq!(d.i, i, "surviving deltas stay in stream order");
+            }
+            let concat: String = deltas.iter().map(|d| d.token.as_str()).collect();
+            assert!(resp.text.starts_with(&concat));
+            let m = lock_tolerant(&metrics);
+            assert_eq!(m.streamed_tokens, 2);
+            assert_eq!(m.stream_clamped, resp.n_generated as u64 - 2);
+            return;
+        }
+        panic!("no prompt generated more than 2 tokens");
     }
 }

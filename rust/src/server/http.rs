@@ -21,15 +21,15 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::{lock_tolerant, Job, Request, Response, SessionVerb, StreamDelta};
+use super::{lock_tolerant, Job, Request, Response, SessionVerb, StreamDelta, STREAM_BUFFER};
 use crate::util::json::{self, Json};
 
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
@@ -37,6 +37,36 @@ static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 /// How long reads and reply waits block before re-checking the shutdown
 /// flag — bounds how long a shutdown can go unnoticed by any handler.
 const POLL: Duration = Duration::from_millis(25);
+
+/// Hard bound on one request line: a client that streams bytes without ever
+/// sending a newline gets a structured error and its connection closed,
+/// instead of growing the assembly buffer without limit.
+const MAX_LINE: usize = 256 * 1024;
+
+/// Front-end limits (the listener side of graceful overload).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOpts {
+    /// concurrent connection cap: accepts beyond it get a structured
+    /// `busy` reply with a retry hint and are closed, instead of an
+    /// unbounded thread per connection (0 = unlimited)
+    pub max_conns: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts { max_conns: 256 }
+    }
+}
+
+/// Decrements the live-connection gauge when a handler exits — by any
+/// path, including a panic, so a crashed handler can never leak a slot.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 fn response_json(r: &Response) -> String {
     let mut fields = vec![
@@ -54,6 +84,9 @@ fn response_json(r: &Response) -> String {
     }
     if let Some(e) = &r.error {
         fields.push(("error", json::s(e)));
+    }
+    if let Some(ms) = r.retry_after_ms {
+        fields.push(("retry_after_ms", json::num(ms as f64)));
     }
     json::obj(fields).to_string()
 }
@@ -96,7 +129,20 @@ fn handle_conn(
         }
         match reader.read(&mut chunk) {
             Ok(0) => return Ok(()), // client closed
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                // a partial line may grow only to the bound; complete lines
+                // drain at the top of the loop before the next read
+                if buf.len() > MAX_LINE && !buf.contains(&b'\n') {
+                    lock_tolerant(&metrics).rejected += 1;
+                    let _ = writeln!(
+                        writer,
+                        "{}",
+                        json::obj(vec![("error", json::s("request line too long"))]).to_string()
+                    );
+                    return Ok(());
+                }
+            }
             Err(e)
                 if matches!(
                     e.kind(),
@@ -156,12 +202,15 @@ fn handle_line(
         fanout,
         session: parsed.get("session").as_str().unwrap_or("").to_string(),
         verb,
+        tenant: parsed.get("tenant").as_str().unwrap_or("").to_string(),
+        priority: parsed.get("priority").as_i64().unwrap_or(0),
+        deadline_ms: parsed.get("deadline_ms").as_u64().unwrap_or(0),
     };
     let (rtx, rrx) = channel();
     let mut job = Job::new(request, rtx);
     let cancel = job.cancel.clone();
     let deltas = parsed.get("stream").as_bool().unwrap_or(false).then(|| {
-        let (stx, srx) = channel();
+        let (stx, srx) = sync_channel(STREAM_BUFFER);
         job.stream = Some(stx);
         srx
     });
@@ -222,10 +271,21 @@ fn handle_line(
     }
 }
 
-/// Serve until a `shutdown` command arrives. Returns the bound address
-/// through `on_bound` (useful for tests binding port 0).
+/// Serve until a `shutdown` command arrives, with default limits. Returns
+/// the bound address through `on_bound` (useful for tests binding port 0).
 pub fn serve(
     addr: &str,
+    jobs: Sender<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    serve_opts(addr, ServeOpts::default(), jobs, metrics, on_bound)
+}
+
+/// [`serve`] with explicit front-end limits.
+pub fn serve_opts(
+    addr: &str,
+    opts: ServeOpts,
     jobs: Sender<Job>,
     metrics: Arc<Mutex<Metrics>>,
     on_bound: impl FnOnce(std::net::SocketAddr),
@@ -234,15 +294,37 @@ pub fn serve(
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
     let shutdown = Arc::new(AtomicBool::new(false));
-    let mut handles = Vec::new();
+    let live = Arc::new(AtomicUsize::new(0));
+    let cap = if opts.max_conns == 0 { usize::MAX } else { opts.max_conns };
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nonblocking(false)?;
+                if live.load(Ordering::SeqCst) >= cap {
+                    // at capacity: a structured busy reply and close,
+                    // instead of an unbounded thread per connection
+                    lock_tolerant(&metrics).http_busy += 1;
+                    let mut stream = stream;
+                    let _ = writeln!(
+                        stream,
+                        "{}",
+                        json::obj(vec![
+                            ("error", json::s("busy")),
+                            ("retry_after_ms", json::num(100.0)),
+                        ])
+                        .to_string()
+                    );
+                    continue;
+                }
+                live.fetch_add(1, Ordering::SeqCst);
+                let guard = ConnGuard(live.clone());
                 let jobs = jobs.clone();
                 let metrics = metrics.clone();
                 let sd = shutdown.clone();
+                handles.retain(|h| !h.is_finished());
                 handles.push(std::thread::spawn(move || {
+                    let _guard = guard;
                     let _ = handle_conn(stream, jobs, metrics, sd);
                 }));
             }
@@ -620,5 +702,111 @@ mod tests {
             .recv_timeout(std::time::Duration::from_secs(5))
             .expect("serve() hung after shutdown (idle/busy connections not unblocked)");
         assert!(ok, "serve() returned an error");
+    }
+
+    #[test]
+    fn tenant_priority_deadline_fields_round_trip() {
+        let addr = spawn_server();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(
+            conn,
+            r#"{{"prompt": "1+2=", "max_new": 3, "tenant": "pro", "priority": -2, "deadline_ms": 60000}}"#
+        )
+        .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().is_none(), "{line}");
+        assert!(v.get("n_generated").as_usize().unwrap() >= 1);
+        writeln!(conn, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn oversized_request_line_gets_a_structured_error_and_close() {
+        let addr = spawn_server();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // just past the line bound without a newline, so the server stops
+        // reading with only a few KiB left in the socket buffers (a much
+        // larger blast could deadlock the test's blocking write_all)
+        let junk = vec![b'a'; 260 * 1024];
+        conn.write_all(&junk).unwrap();
+        conn.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert!(v.get("error").as_str().unwrap().contains("too long"), "{line}");
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close the conn");
+        // the listener itself keeps serving
+        let mut conn2 = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader2 = BufReader::new(conn2.try_clone().unwrap());
+        writeln!(conn2, r#"{{"prompt": "1+2=", "max_new": 2}}"#).unwrap();
+        line.clear();
+        reader2.read_line(&mut line).unwrap();
+        assert!(Json::parse(&line).unwrap().get("error").as_str().is_none(), "{line}");
+        writeln!(conn2, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    }
+
+    #[test]
+    fn connection_cap_replies_busy_with_a_retry_hint() {
+        // spawn by hand with max_conns = 1
+        let engine = Arc::new(Engine::new(tiny_weights(17)));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (jtx, jrx) = channel();
+        let m2 = metrics.clone();
+        std::thread::spawn(move || {
+            batcher::run(
+                engine,
+                None,
+                BatcherConfig { default_method: "full".into(), ..Default::default() },
+                jrx,
+                m2,
+            )
+        });
+        let (atx, arx) = channel();
+        let m3 = metrics.clone();
+        std::thread::spawn(move || {
+            serve_opts("127.0.0.1:0", ServeOpts { max_conns: 1 }, jtx, m3, move |a| {
+                let _ = atx.send(a);
+            })
+        });
+        let addr = arx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+
+        // the one allowed connection parks idle, holding the slot
+        let held = std::net::TcpStream::connect(addr).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        // the next connection is turned away with a structured busy reply
+        let conn2 = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader2 = BufReader::new(conn2);
+        let mut line = String::new();
+        reader2.read_line(&mut line).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("error").as_str(), Some("busy"), "{line}");
+        assert!(v.get("retry_after_ms").as_usize().unwrap() > 0, "{line}");
+        assert_eq!(lock_tolerant(&metrics).http_busy, 1);
+
+        // freeing the held slot lets a new connection in (poll: the slot
+        // frees when the handler notices the closed socket)
+        drop(held);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let conn3 = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader3 = BufReader::new(conn3.try_clone().unwrap());
+            let mut conn3w = conn3;
+            writeln!(conn3w, r#"{{"cmd": "metrics"}}"#).unwrap();
+            line.clear();
+            reader3.read_line(&mut line).unwrap();
+            if line.contains("completed") {
+                writeln!(conn3w, r#"{{"cmd": "shutdown"}}"#).unwrap();
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "released slot never became available: {line}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
     }
 }

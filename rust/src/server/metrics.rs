@@ -28,8 +28,18 @@ pub struct Metrics {
     /// requests abandoned by their client (disconnect mid-stream or while
     /// queued) and retired by the batcher before finishing
     pub cancelled: u64,
+    /// queued prefills shed by graceful overload (`overloaded` reply with
+    /// a `retry_after_ms` hint)
+    pub shed_prefills: u64,
+    /// jobs — queued or mid-flight — retired past their `deadline_ms`
+    pub deadline_expired: u64,
+    /// connections turned away at the front end's concurrency cap (`busy`)
+    pub http_busy: u64,
     /// tokens forwarded through `"stream": true` delta channels
     pub streamed_tokens: u64,
+    /// stream deltas dropped because a slow reader's bounded channel was
+    /// full (the final reply still carries the full text)
+    pub stream_clamped: u64,
     /// prompt chunks landed by the chunked-prefill scheduler
     pub prefill_chunks: u64,
     /// most prompt tokens any single round prefilled — bounded by
@@ -41,7 +51,12 @@ pub struct Metrics {
     /// gauges refreshed at the end of every scheduling round
     pub active_sessions: u64,
     pub prefilling_sessions: u64,
+    /// admission queue depth (gauge)
+    pub queue_depth: u64,
     pub kv_used_bytes: f64,
+    /// per-tenant `(name, seats, kv_bytes)` gauges, refreshed each round
+    /// (anonymous-tenant traffic is not listed)
+    pub tenants: Vec<(String, u64, f64)>,
     /// bytes held by realized dictionary Gram caches (gauge; nonzero only
     /// once some cache opts into the precomputed-Gram OMP tier)
     pub gram_bytes: f64,
@@ -89,22 +104,35 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests={} completed={} rejected={} cancelled={} tokens={} throughput={:.1} tok/s",
+            "requests={} completed={} rejected={} cancelled={} shed={} expired={} tokens={} \
+             throughput={:.1} tok/s",
             self.requests,
             self.completed,
             self.rejected,
             self.cancelled,
+            self.shed_prefills,
+            self.deadline_expired,
             self.tokens_generated,
             self.throughput_tok_s()
         );
         s += &format!(
-            "\nsessions: active={} prefilling={} kv_used={:.1} KiB",
+            "\nsessions: active={} prefilling={} queue_depth={} kv_used={:.1} KiB",
             self.active_sessions,
             self.prefilling_sessions,
+            self.queue_depth,
             self.kv_used_bytes / 1024.0
         );
         if self.gram_bytes > 0.0 {
             s += &format!(" gram={:.1} KiB", self.gram_bytes / 1024.0);
+        }
+        if !self.tenants.is_empty() {
+            s += "\ntenants :";
+            for (name, seats, bytes) in &self.tenants {
+                s += &format!(" {name}=seats:{seats},kv:{:.1}KiB", bytes / 1024.0);
+            }
+        }
+        if self.http_busy > 0 {
+            s += &format!("\nhttp    : {} busy rejections", self.http_busy);
         }
         if self.spilled_pages + self.faults + self.hibernated_sessions + self.resumed > 0 {
             s += &format!(
@@ -154,8 +182,11 @@ impl Metrics {
                 self.prefill_chunks, self.max_round_prefill_tokens
             );
         }
-        if self.streamed_tokens > 0 {
+        if self.streamed_tokens + self.stream_clamped > 0 {
             s += &format!("\nstream  : {} tokens streamed", self.streamed_tokens);
+            if self.stream_clamped > 0 {
+                s += &format!(", {} clamped", self.stream_clamped);
+            }
         }
         if self.fanout_sessions > 0 {
             s += &format!("\nfanout  : {} extra candidate sessions", self.fanout_sessions);
@@ -185,12 +216,18 @@ mod tests {
         m.shared_bytes = 2048.0;
         m.fanout_sessions = 3;
         m.cancelled = 1;
+        m.shed_prefills = 4;
+        m.deadline_expired = 2;
+        m.http_busy = 3;
         m.streamed_tokens = 7;
+        m.stream_clamped = 5;
         m.prefill_chunks = 5;
         m.max_round_prefill_tokens = 256;
         m.active_sessions = 4;
         m.prefilling_sessions = 1;
+        m.queue_depth = 6;
         m.kv_used_bytes = 4096.0;
+        m.tenants = vec![("pro".into(), 2, 2048.0), ("free".into(), 1, 1024.0)];
         m.gram_bytes = 65536.0;
         m.hibernated_sessions = 2;
         m.resumed = 1;
@@ -199,8 +236,14 @@ mod tests {
         m.faults = 4;
         let r = m.report();
         assert!(r.contains("completed=2"));
-        assert!(r.contains("cancelled=1"), "{r}");
-        assert!(r.contains("active=4 prefilling=1 kv_used=4.0 KiB gram=64.0 KiB"), "{r}");
+        assert!(r.contains("cancelled=1 shed=4 expired=2"), "{r}");
+        assert!(
+            r.contains("active=4 prefilling=1 queue_depth=6 kv_used=4.0 KiB gram=64.0 KiB"),
+            "{r}"
+        );
+        assert!(r.contains("tenants : pro=seats:2,kv:2.0KiB free=seats:1,kv:1.0KiB"), "{r}");
+        assert!(r.contains("3 busy rejections"), "{r}");
+        assert!(r.contains("7 tokens streamed, 5 clamped"), "{r}");
         assert!(
             r.contains("hibernated=2 resumed=1 spilled_pages=6 spill_bytes=3.0 KiB faults=4"),
             "{r}"

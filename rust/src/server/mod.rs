@@ -22,10 +22,17 @@
 pub mod batcher;
 pub mod http;
 pub mod metrics;
+pub mod sched;
 
 use std::sync::atomic::AtomicBool;
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{Sender, SyncSender};
 use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Bound on buffered-but-unread stream deltas per request: a slow reader's
+/// channel fills to this depth and further deltas are dropped (clamped)
+/// instead of growing an unbounded queue — the final response still carries
+/// the full text, so clamping costs the client incremental display only.
+pub const STREAM_BUFFER: usize = 256;
 
 /// Poison-tolerant mutex lock: a panic on another thread while it held the
 /// lock must not cascade into every later lock site panicking too (one
@@ -69,6 +76,17 @@ pub struct Request {
     pub session: String,
     /// what to do with the named session (generate / save / resume)
     pub verb: SessionVerb,
+    /// tenant the request bills against (quota lookup key and metrics
+    /// label); empty = the anonymous default tenant
+    pub tenant: String,
+    /// admission priority: higher admits first, FIFO within a class, and
+    /// graceful overload sheds the lowest class first (default 0)
+    pub priority: i64,
+    /// milliseconds from enqueue until the job expires (0 = no deadline).
+    /// Past-deadline jobs — queued or mid-flight — are retired at round
+    /// top with a `deadline_expired` error, freeing their budget the same
+    /// round like cancellation.
+    pub deadline_ms: u64,
 }
 
 impl Request {
@@ -87,6 +105,9 @@ impl Request {
             fanout: 1,
             session: String::new(),
             verb: SessionVerb::Generate,
+            tenant: String::new(),
+            priority: 0,
+            deadline_ms: 0,
         }
     }
 }
@@ -107,6 +128,9 @@ pub struct Response {
     /// whether the prompt was served from the shared-prefix cache
     pub prefix_hit: bool,
     pub error: Option<String>,
+    /// backoff hint accompanying `overloaded`/`busy` errors: the client
+    /// should wait at least this long before retrying
+    pub retry_after_ms: Option<u64>,
 }
 
 impl Response {
@@ -123,6 +147,16 @@ impl Response {
             kv_ratio: 0.0,
             prefix_hit: false,
             error: Some(error),
+            retry_after_ms: None,
+        }
+    }
+
+    /// The graceful-overload shed reply: structured `overloaded` error plus
+    /// a deterministic backoff hint.
+    pub fn overloaded(id: u64, retry_after_ms: u64) -> Self {
+        Response {
+            retry_after_ms: Some(retry_after_ms),
+            ..Response::failed(id, 0, "overloaded".to_string())
         }
     }
 }
@@ -146,8 +180,11 @@ pub struct StreamDelta {
 pub struct Job {
     pub request: Request,
     pub reply: Sender<Response>,
-    /// per-token delta channel for streaming requests (None = buffered)
-    pub stream: Option<Sender<StreamDelta>>,
+    /// per-token delta channel for streaming requests (None = buffered).
+    /// Bounded ([`STREAM_BUFFER`]): the batcher sends with `try_send`, so
+    /// a slow reader clamps its own stream instead of stalling the round
+    /// or buffering without limit.
+    pub stream: Option<SyncSender<StreamDelta>>,
     /// set by the front end when the client vanishes (or on shutdown); the
     /// batcher retires the request's sessions the same round, returning
     /// their KV bytes to the admission budget

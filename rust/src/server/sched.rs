@@ -1,0 +1,448 @@
+//! SLO-aware multi-tenant scheduling policy: priority-ordered admission,
+//! per-tenant quotas, graceful-overload shedding, deadline bookkeeping and
+//! the TTFT/TPOT governors that steer the batcher's per-round budgets.
+//!
+//! Every *decision* in this module is a pure function of explicit inputs —
+//! queue snapshots, observed round latencies, a scheduler clock — so the
+//! batcher's shed/priority/deadline behavior is pinned bitwise by unit
+//! tests: tests drive a [`Clock::Manual`] time source and seeded arrival
+//! orders, production swaps in wall time without changing a single
+//! decision rule. The split keeps the batcher's scheduling loop honest:
+//! it *observes* (measures round latency, stamps arrival sequence numbers)
+//! and this module *decides* (who admits, who sheds, who expires, how many
+//! prompt tokens and decode seats this round may spend).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Round-time prior used for `retry_after_ms` hints before any round has
+/// been measured (a freshly started — or manually clocked — batcher).
+pub const DEFAULT_ROUND_MS: f64 = 5.0;
+
+// ---------------------------------------------------------------------------
+// Scheduler clock
+// ---------------------------------------------------------------------------
+
+/// The scheduler's time source. Production uses wall time since batcher
+/// start; tests pin a manual value so deadline expiry and shed decisions
+/// replay bitwise — the determinism scope promised in DESIGN.md §13 (no
+/// wall-clock reads sit in the decision path under test).
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// milliseconds elapsed since the batcher started
+    Wall(Instant),
+    /// a fixed time in milliseconds, advanced explicitly by tests
+    Manual(f64),
+}
+
+impl Clock {
+    pub fn wall() -> Self {
+        Clock::Wall(Instant::now())
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        match self {
+            Clock::Wall(t0) => t0.elapsed().as_secs_f64() * 1e3,
+            Clock::Manual(ms) => *ms,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO targets
+// ---------------------------------------------------------------------------
+
+/// Service-level targets steering the round budgets (0 = target unset).
+/// `ttft_ms` bounds time-to-first-token: a prefilling request past half its
+/// target abandons chunk pacing and rushes its remaining prompt. `tpot_ms`
+/// bounds per-round latency: sustained overshoot shrinks the prefill chunk
+/// budget and caps the decode batch (highest-priority sessions keep their
+/// cadence; lower priorities are paced down instead of everyone missing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloTargets {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Per-tenant quotas
+// ---------------------------------------------------------------------------
+
+/// Admission limits for one tenant (0 = unlimited on that axis).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantQuota {
+    /// concurrent seats (sessions incl. pending fan-out candidates)
+    pub seats: usize,
+    /// charged KV bytes across the tenant's live sessions
+    pub kv_bytes: f64,
+}
+
+/// The `--tenant-quota` table. A request's `tenant` field selects its row;
+/// the `*` row (if present) applies to tenants without an explicit entry,
+/// and tenants matching no row are unlimited. Over-quota jobs are *skipped*
+/// (left queued), never rejected — quota pressure resolves as the tenant's
+/// own sessions retire, while other tenants admit past the blocked job
+/// (no head-of-line blocking across tenants).
+#[derive(Clone, Debug, Default)]
+pub struct TenantQuotas {
+    quotas: BTreeMap<String, TenantQuota>,
+}
+
+impl TenantQuotas {
+    /// Parse a spec like `"free=seats:2,kv_mb:4;pro=seats:16;*=seats:8"`.
+    /// Entries are `;`-separated, limits `,`-separated `key:value` pairs
+    /// with keys `seats` and `kv_mb`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut quotas = BTreeMap::new();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (name, limits) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("tenant quota entry '{entry}' is not NAME=LIMITS"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("tenant quota entry '{entry}' has an empty tenant name"));
+            }
+            let mut q = TenantQuota::default();
+            for limit in limits.split(',').map(str::trim).filter(|l| !l.is_empty()) {
+                let (key, val) = limit
+                    .split_once(':')
+                    .ok_or_else(|| format!("tenant limit '{limit}' is not key:value"))?;
+                match key.trim() {
+                    "seats" => {
+                        q.seats = val
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad seats value '{val}'"))?;
+                    }
+                    "kv_mb" => {
+                        let mb: f64 = val
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad kv_mb value '{val}'"))?;
+                        if mb.is_nan() || mb < 0.0 {
+                            return Err(format!("bad kv_mb value '{val}'"));
+                        }
+                        q.kv_bytes = mb * 1024.0 * 1024.0;
+                    }
+                    other => return Err(format!("unknown tenant limit key '{other}'")),
+                }
+            }
+            if quotas.insert(name.to_string(), q).is_some() {
+                return Err(format!("duplicate tenant quota entry for '{name}'"));
+            }
+        }
+        Ok(TenantQuotas { quotas })
+    }
+
+    /// The quota governing `tenant`: its own row, else the `*` row, else
+    /// none (unlimited).
+    pub fn get(&self, tenant: &str) -> Option<TenantQuota> {
+        self.quotas.get(tenant).or_else(|| self.quotas.get("*")).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.quotas.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Priority-ordered admission + overload shedding
+// ---------------------------------------------------------------------------
+
+/// What the admission/shed policy may see of one queued job: its arrival
+/// sequence number (stamped at enqueue — the seeded, deterministic order)
+/// and its priority. Nothing time-valued enters these decisions.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueSlot {
+    pub seq: u64,
+    pub priority: i64,
+    /// whether overload may shed this job (generate requests; session
+    /// save/resume verbs are cheap bookkeeping and are never shed)
+    pub sheddable: bool,
+}
+
+/// Admission order replacing the FIFO: highest priority first, FIFO within
+/// a priority class. With all-default priorities this degenerates to
+/// exactly the old arrival order.
+pub fn admission_order(slots: &[QueueSlot]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..slots.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(slots[i].priority), slots[i].seq));
+    order
+}
+
+/// The queued job graceful overload sheds next: lowest priority first,
+/// newest arrival within the class (the oldest waiter of a class has paid
+/// the most and is closest to service — shedding it would maximize wasted
+/// wait). None when nothing is sheddable.
+pub fn shed_victim(slots: &[QueueSlot]) -> Option<usize> {
+    (0..slots.len())
+        .filter(|&i| slots[i].sheddable)
+        .max_by_key(|&i| (std::cmp::Reverse(slots[i].priority), slots[i].seq))
+}
+
+/// Backoff hint for a shed (or busy-rejected) client: a lower bound on the
+/// queue's drain time — `depth` jobs ahead, at most `max_sessions` retiring
+/// per round, `round_ms` per round. Deterministic in its inputs; clamped to
+/// at least 1 ms so a `retry_after_ms` of 0 never tells a client to
+/// hot-loop.
+pub fn retry_after_ms(depth: usize, max_sessions: usize, round_ms: f64) -> u64 {
+    let rounds = (depth as f64 / max_sessions.max(1) as f64).ceil().max(1.0);
+    (rounds * round_ms.max(1.0)).ceil() as u64
+}
+
+// ---------------------------------------------------------------------------
+// TTFT/TPOT governors
+// ---------------------------------------------------------------------------
+
+/// Adaptive per-round prefill chunk budget: AIMD against the TPOT target.
+/// A round over target halves the budget (multiplicative decrease — long
+/// prompts yield the round to decode cadence); a round under half target
+/// grows it additively back toward the configured base. With no target the
+/// budget pins to the base, making the governor invisible.
+#[derive(Clone, Debug)]
+pub struct ChunkGovernor {
+    base: usize,
+    min: usize,
+    budget: usize,
+}
+
+impl ChunkGovernor {
+    /// `base` is the configured `--prefill-chunk` (0 = monolithic prefill,
+    /// which the governor leaves alone: an unchunkable admission cannot be
+    /// paced, only scheduled).
+    pub fn new(base: usize) -> Self {
+        let base = if base == 0 { usize::MAX } else { base };
+        let min = if base == usize::MAX { usize::MAX } else { (base / 16).max(1) };
+        ChunkGovernor { base, min, budget: base }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Feed one observed round latency; returns the next round's budget.
+    pub fn observe(&mut self, round_ms: f64, target_ms: f64) -> usize {
+        if target_ms <= 0.0 || self.base == usize::MAX {
+            self.budget = self.base;
+        } else if round_ms > target_ms {
+            self.budget = (self.budget / 2).max(self.min);
+        } else if round_ms * 2.0 < target_ms {
+            self.budget = self.budget.saturating_add((self.base / 8).max(1)).min(self.base);
+        }
+        self.budget
+    }
+}
+
+/// Adaptive decode-batch cap under TPOT pressure: when rounds run hot the
+/// cap halves (highest-priority sessions keep advancing every round, the
+/// rest are paced), and recovers multiplicatively once rounds run cool.
+/// `usize::MAX` = uncapped, the steady state whenever the target is unset
+/// or met — the batcher's fast path skips selection entirely then, so the
+/// governor is bitwise invisible to existing workloads.
+#[derive(Clone, Debug, Default)]
+pub struct BatchGovernor {
+    cap: usize,
+}
+
+impl BatchGovernor {
+    pub fn new() -> Self {
+        BatchGovernor { cap: usize::MAX }
+    }
+
+    pub fn cap(&self) -> usize {
+        if self.cap == 0 { usize::MAX } else { self.cap }
+    }
+
+    /// Feed one observed round latency at the given batch size.
+    pub fn observe(&mut self, round_ms: f64, target_ms: f64, batch: usize) -> usize {
+        if target_ms <= 0.0 {
+            self.cap = usize::MAX;
+        } else if round_ms > target_ms * 1.5 && batch > 1 {
+            self.cap = (self.cap.min(batch) / 2).max(1);
+        } else if round_ms * 2.0 < target_ms && self.cap != usize::MAX {
+            let doubled = self.cap.saturating_mul(2);
+            self.cap = if doubled >= batch { usize::MAX } else { doubled };
+        }
+        self.cap()
+    }
+}
+
+impl Default for ChunkGovernor {
+    fn default() -> Self {
+        ChunkGovernor::new(0)
+    }
+}
+
+/// Whether a prefilling request should abandon chunk pacing and rush its
+/// remaining prompt this round: past half the TTFT target, finishing the
+/// prefill dominates protecting other sessions' round latency.
+pub fn ttft_rush(age_ms: f64, ttft_target_ms: f64) -> bool {
+    ttft_target_ms > 0.0 && age_ms * 2.0 >= ttft_target_ms
+}
+
+// ---------------------------------------------------------------------------
+// Capped decode-batch composition
+// ---------------------------------------------------------------------------
+
+/// What decode selection may see of one decodable session: priority, the
+/// round it last advanced (aging — within a priority class the session
+/// paced longest goes first, so a cap rotates fairly instead of starving),
+/// and its seat order as the final deterministic tie-break.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeSlot {
+    pub priority: i64,
+    pub last_step_round: u64,
+    pub seat: u64,
+}
+
+/// Indices (into `slots`, ascending) of the sessions that advance this
+/// round under `cap`. Selection changes only *pacing*: a deferred session
+/// keeps its pending token and produces the identical stream later.
+pub fn decode_selection(slots: &[DecodeSlot], cap: usize) -> Vec<usize> {
+    if slots.len() <= cap {
+        return (0..slots.len()).collect();
+    }
+    let mut order: Vec<usize> = (0..slots.len()).collect();
+    order.sort_by_key(|&i| {
+        (std::cmp::Reverse(slots[i].priority), slots[i].last_step_round, slots[i].seat)
+    });
+    order.truncate(cap);
+    order.sort_unstable();
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(seq: u64, priority: i64) -> QueueSlot {
+        QueueSlot { seq, priority, sheddable: true }
+    }
+
+    #[test]
+    fn admission_order_is_priority_then_fifo() {
+        let slots =
+            [slot(0, 0), slot(1, 5), slot(2, 5), slot(3, -1), slot(4, 0)];
+        assert_eq!(admission_order(&slots), vec![1, 2, 0, 4, 3]);
+        // all-default priorities degenerate to exact arrival order
+        let flat = [slot(10, 0), slot(11, 0), slot(12, 0)];
+        assert_eq!(admission_order(&flat), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn shed_victim_is_lowest_priority_newest_arrival() {
+        let slots = [slot(0, 0), slot(1, 5), slot(2, 0), slot(3, 9)];
+        // two priority-0 jobs: the newer one (seq 2) sheds first
+        assert_eq!(shed_victim(&slots), Some(2));
+        // save/resume verbs are never shed
+        let mut pinned = [slot(0, 0), slot(1, -5)];
+        pinned[1].sheddable = false;
+        assert_eq!(shed_victim(&pinned), Some(0));
+        pinned[0].sheddable = false;
+        assert_eq!(shed_victim(&pinned), None);
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth_and_never_hits_zero() {
+        assert_eq!(retry_after_ms(0, 4, 5.0), 5);
+        assert_eq!(retry_after_ms(8, 4, 5.0), 10);
+        assert_eq!(retry_after_ms(9, 4, 5.0), 15);
+        assert!(retry_after_ms(1, 1000, 0.0) >= 1);
+    }
+
+    #[test]
+    fn tenant_quota_parse_and_lookup() {
+        let q = TenantQuotas::parse("free=seats:2,kv_mb:4; pro = seats:16 ;*=seats:8").unwrap();
+        assert_eq!(q.get("free").unwrap().seats, 2);
+        assert_eq!(q.get("free").unwrap().kv_bytes, 4.0 * 1024.0 * 1024.0);
+        assert_eq!(q.get("pro").unwrap(), TenantQuota { seats: 16, kv_bytes: 0.0 });
+        // unlisted tenant falls to the wildcard row
+        assert_eq!(q.get("other").unwrap().seats, 8);
+        // no wildcard → unlisted tenants are unlimited
+        let q2 = TenantQuotas::parse("free=seats:1").unwrap();
+        assert!(q2.get("other").is_none());
+        assert!(TenantQuotas::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn tenant_quota_parse_rejects_malformed_specs() {
+        assert!(TenantQuotas::parse("free").is_err());
+        assert!(TenantQuotas::parse("=seats:1").is_err());
+        assert!(TenantQuotas::parse("a=seats").is_err());
+        assert!(TenantQuotas::parse("a=seats:x").is_err());
+        assert!(TenantQuotas::parse("a=kv_mb:-1").is_err());
+        assert!(TenantQuotas::parse("a=pages:3").is_err());
+        assert!(TenantQuotas::parse("a=seats:1;a=seats:2").is_err());
+    }
+
+    #[test]
+    fn chunk_governor_aimd_against_tpot_target() {
+        let mut g = ChunkGovernor::new(256);
+        assert_eq!(g.budget(), 256);
+        // no target: pinned to base regardless of latency
+        assert_eq!(g.observe(1e9, 0.0), 256);
+        // over target: halves, floored at base/16
+        assert_eq!(g.observe(10.0, 5.0), 128);
+        assert_eq!(g.observe(10.0, 5.0), 64);
+        for _ in 0..10 {
+            g.observe(10.0, 5.0);
+        }
+        assert_eq!(g.budget(), 16);
+        // under half target: additive recovery, capped at base
+        assert_eq!(g.observe(1.0, 5.0), 48);
+        for _ in 0..10 {
+            g.observe(1.0, 5.0);
+        }
+        assert_eq!(g.budget(), 256);
+        // between half and full target: hold
+        assert_eq!(g.observe(4.0, 5.0), 256);
+        // monolithic base stays monolithic
+        let mut m = ChunkGovernor::new(0);
+        assert_eq!(m.observe(1e9, 1.0), usize::MAX);
+    }
+
+    #[test]
+    fn batch_governor_caps_under_pressure_and_recovers() {
+        let mut g = BatchGovernor::new();
+        assert_eq!(g.cap(), usize::MAX);
+        // hot rounds at batch 8: cap 4, then 2, then 1
+        assert_eq!(g.observe(10.0, 5.0, 8), 4);
+        assert_eq!(g.observe(10.0, 5.0, 4), 2);
+        assert_eq!(g.observe(10.0, 5.0, 2), 1);
+        assert_eq!(g.observe(10.0, 5.0, 1), 1); // a batch of 1 can't shrink
+        // cool rounds: doubles, then uncaps once it covers the batch
+        assert_eq!(g.observe(1.0, 5.0, 8), 2);
+        assert_eq!(g.observe(1.0, 5.0, 8), 4);
+        assert_eq!(g.observe(1.0, 5.0, 8), usize::MAX);
+        // unset target is always uncapped
+        assert_eq!(g.observe(1e9, 0.0, 64), usize::MAX);
+    }
+
+    #[test]
+    fn ttft_rush_past_half_target() {
+        assert!(!ttft_rush(10.0, 100.0));
+        assert!(ttft_rush(50.0, 100.0));
+        assert!(ttft_rush(99.0, 100.0));
+        assert!(!ttft_rush(1e9, 0.0)); // unset target never rushes
+    }
+
+    #[test]
+    fn decode_selection_priority_then_aging_then_seat() {
+        let s = |priority, last_step_round, seat| DecodeSlot { priority, last_step_round, seat };
+        let slots = [s(0, 5, 0), s(5, 5, 1), s(0, 3, 2), s(5, 5, 3)];
+        // uncapped: everyone advances (fast path)
+        assert_eq!(decode_selection(&slots, usize::MAX), vec![0, 1, 2, 3]);
+        // cap 2: both priority-5 sessions (seat order breaks their tie)
+        assert_eq!(decode_selection(&slots, 2), vec![1, 3]);
+        // cap 3: the longest-paced priority-0 session (aging) joins
+        assert_eq!(decode_selection(&slots, 3), vec![1, 2, 3]);
+        assert_eq!(decode_selection(&slots, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn manual_clock_is_pinned() {
+        let c = Clock::Manual(123.5);
+        assert_eq!(c.now_ms(), 123.5);
+        assert!(Clock::wall().now_ms() >= 0.0);
+    }
+}

@@ -31,6 +31,16 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// Signed integer view (request `priority` fields); truncates any
+    /// fractional part the way `as_usize` does.
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|x| x as i64)
+    }
+    /// Unsigned integer view (`deadline_ms`, retry hints); negative
+    /// numbers saturate to 0 rather than wrapping.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|x| if x <= 0.0 { 0 } else { x as u64 })
+    }
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -351,6 +361,17 @@ mod tests {
         assert_eq!(v.get("b").get("d").as_bool(), Some(true));
         assert_eq!(v.get("b").get("e").as_bool(), None);
         assert_eq!(v.get("a").idx(0).as_bool(), None, "numbers are not booleans");
+    }
+
+    #[test]
+    fn integer_views_truncate_and_saturate() {
+        let v = Json::parse(r#"{"p": -2, "d": 1500, "f": 2.9, "s": "7"}"#).unwrap();
+        assert_eq!(v.get("p").as_i64(), Some(-2));
+        assert_eq!(v.get("d").as_u64(), Some(1500));
+        assert_eq!(v.get("f").as_i64(), Some(2), "fractional parts truncate");
+        assert_eq!(v.get("p").as_u64(), Some(0), "negatives saturate to zero");
+        assert_eq!(v.get("s").as_i64(), None, "strings are not numbers");
+        assert_eq!(v.get("missing").as_u64(), None);
     }
 
     #[test]
