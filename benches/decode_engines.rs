@@ -38,12 +38,20 @@ use lexico::cache::{CacheShape, KvCache};
 use lexico::dict::{Dictionary, DictionarySet};
 use lexico::exec::ExecPool;
 use lexico::model::{Engine, Weights};
+use lexico::runtime::{CacheRuntime, EncodeTier};
 use lexico::sparse::CsrRow;
 use lexico::store::SpillStore;
 use lexico::tasks;
 use lexico::tensor::{axpy, par_matmul_bt, softmax};
 use lexico::util::rng::Rng;
 use lexico::util::stats::{bench_ms, report};
+
+/// The construction runtime the benches attach resources through — same
+/// env-derived defaults the factory uses, so `--gram-omp` / `LEXICO_*`
+/// sweeps see their tier here too.
+fn bench_rt(pool: Arc<ExecPool>) -> CacheRuntime {
+    CacheRuntime::from_env().with_pool(pool)
+}
 
 /// The pre-PR scalar `dot`: 8 independent lanes combined by a LINEAR fold
 /// plus a sequential tail — the kernel the row-iterator baseline ran on
@@ -188,7 +196,7 @@ fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<f64> {
             values: vec![Dictionary::random(m, n_atoms, 12)],
         });
         let mut cache = LexicoCache::new(shape, dicts.clone(), cfg.clone());
-        cache.set_pool(Arc::new(ExecPool::new(1)));
+        cache.set_runtime(&bench_rt(Arc::new(ExecPool::new(1))));
         let mut rng = Rng::new(7);
         let kvd = shape.kv_dim();
         // fill through the real append path → batched OMP compression
@@ -210,9 +218,9 @@ fn longcontext_attend_sweep(smoke: bool) -> anyhow::Result<f64> {
         // (a) flat slabs, single-thread
         let st_slab = bench_ms(warm, iters, || cache.attend(0, &q, &mut out));
         // (b) flat slabs, score sweep sharded on the default pool
-        cache.set_pool(lexico::exec::default_pool());
+        cache.set_runtime(&bench_rt(lexico::exec::default_pool()));
         let st_pool = bench_ms(warm, iters, || cache.attend(0, &q, &mut out));
-        cache.set_pool(Arc::new(ExecPool::new(1)));
+        cache.set_runtime(&bench_rt(Arc::new(ExecPool::new(1))));
 
         // (c) row-iterator baseline on identical contents
         let heads: Vec<RowHead> = (0..shape.n_kv_heads)
@@ -471,7 +479,7 @@ fn pr6_sessions(
     let shape = PR6_SHAPE;
     let cfg = LexicoConfig { sparsity: 8, n_buffer: 32, ..Default::default() };
     let mut proto = LexicoCache::new(shape, dicts.clone(), cfg);
-    proto.set_pool(lexico::exec::default_pool());
+    proto.set_runtime(&bench_rt(lexico::exec::default_pool()));
     let mut rng = Rng::new(17);
     let kvd = shape.kv_dim();
     let mut done = 0usize;
@@ -734,8 +742,7 @@ fn pr7_filled_cache(store: &Arc<SpillStore>, t_tokens: usize) -> LexicoCache {
     let cfg = LexicoConfig { sparsity: 8, n_buffer: 32, ..Default::default() };
     let dicts = pr6_dicts(512);
     let mut cache = LexicoCache::new(shape, dicts, cfg);
-    cache.set_pool(Arc::new(ExecPool::new(1)));
-    cache.set_spill_store(store.clone());
+    cache.set_runtime(&bench_rt(Arc::new(ExecPool::new(1))).with_spill(store.clone()));
     let mut rng = Rng::new(23);
     let kvd = shape.kv_dim();
     let mut done = 0usize;
@@ -891,7 +898,8 @@ fn spill_residency_sweep(smoke: bool) -> anyhow::Result<()> {
 /// build (`par_syrk` at dictionary load) is timed separately — at serve
 /// time it is paid once per process, not per compression. Also measures
 /// end-to-end prefill tok/s through a tiny engine with a `LexicoCache`
-/// on each tier (`set_gram_omp`), the overflow-compression path the
+/// on each tier (the construction runtime's encode tier), the
+/// overflow-compression path the
 /// server actually runs. Emits `BENCH_PR8.json`; its `gate` object feeds
 /// `benches/compare.rs` against `benches/baseline_pr8.json`.
 fn gram_encode_sweep(smoke: bool) -> anyhow::Result<()> {
@@ -1000,8 +1008,8 @@ fn gram_encode_sweep(smoke: bool) -> anyhow::Result<()> {
     for (ti, &gram_on) in [false, true].iter().enumerate() {
         let st = bench_ms(warm, iters, || {
             let mut cache = LexicoCache::new(engine.shape(), dicts.clone(), cache_cfg.clone());
-            cache.set_pool(pool.clone());
-            cache.set_gram_omp(gram_on);
+            let tier = if gram_on { EncodeTier::Gram } else { EncodeTier::Canonical };
+            cache.set_runtime(&bench_rt(pool.clone()).with_encode_tier(tier));
             let _ = engine.prefill(&ids, &mut cache);
         });
         prefill_tok_s[ti] = prefill_tokens as f64 / (st.mean / 1e3).max(1e-12);
@@ -1076,7 +1084,7 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
     println!("default exec pool: {} threads\n", engine.pool().threads());
     let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let mut rng = Rng::new(5);
     let t_ctx = 400;
     let mut prompt = vec![tasks::BOS];
@@ -1155,7 +1163,7 @@ fn main() -> anyhow::Result<()> {
             let eng_t = Engine::with_pool(Weights::load(art.join("model_M.bin"))?, pool.clone());
             for &bsz in &[1usize, 4, 16] {
                 let mut proto = build_cache(spec, &ctx)?;
-                proto.set_pool(pool.clone());
+                proto.set_runtime(&bench_rt(pool.clone()));
                 let _ = eng_t.prefill(&prompt, &mut *proto);
                 let mut caches: Vec<Box<dyn KvCache>> =
                     (0..bsz - 1).map(|_| proto.fork()).collect();

@@ -1,53 +1,226 @@
-//! Fig 1 bench: wall-clock cost of regenerating the headline tradeoff
-//! sweep (method × sparsity on the arith task), plus the per-method eval
-//! throughput — the end-to-end harness cost that gates every experiment.
+//! Fig 1 bench (PR 10 shape): the headline accuracy-vs-bytes/token
+//! tradeoff, now swept **per coefficient mode** — every lexico operating
+//! point runs in FP16 (paper ablation), FP8 (default) and the sign tier
+//! (±α, one packed bit per atom plus an f16 row scale) against the kivi
+//! quantization baseline and the uncompressed cache. Each curve point
+//! reports bytes/token, bits/coefficient, task score and fidelity to the
+//! full cache (`agree`), plus the harness eval throughput.
 //!
-//!   cargo bench --bench fig1_tradeoff
+//!   cargo bench --bench fig1_tradeoff [-- --smoke]
+//!
+//! `--smoke` runs artifact-free on a tiny deterministic model with random
+//! dictionaries — scores are near zero there, but the byte accounting,
+//! the sign tier's ≤2 bits/coef invariant and the thread-determinism
+//! check are all exercised for real. With artifacts present (`make
+//! artifacts`) the full run sweeps the trained model M instead.
+//!
+//! The sweep also pins the sign tier's decode determinism: a 1536-token
+//! compressed context (past the sharded-score threshold) must attend
+//! bitwise identically on 1-, 2- and 4-thread pools.
+//!
+//! Emits `BENCH_PR10.json`; its `gate` object feeds `benches/compare.rs`
+//! against `benches/baseline_pr10.json`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use lexico::dict::DictionarySet;
+use lexico::cache::lexico::{LexicoCache, LexicoConfig};
+use lexico::cache::CacheShape;
+use lexico::dict::{Dictionary, DictionarySet};
 use lexico::eval::{evaluate, EvalConfig};
+use lexico::exec::ExecPool;
+use lexico::model::testutil::tiny_weights;
 use lexico::model::{Engine, Weights};
+use lexico::runtime::CacheRuntime;
+use lexico::sparse::CoefMode;
 use lexico::tasks::Task;
+use lexico::util::rng::Rng;
+use lexico::util::stats::bench_ms;
 
-fn main() -> anyhow::Result<()> {
-    let art = lexico::artifacts_dir();
-    if !art.join("model_M.bin").exists() {
-        println!("artifacts missing — run `make artifacts` first");
-        return Ok(());
+/// (display label, spec, lexico coef mode + sparsity when applicable)
+fn curve_specs() -> Vec<(&'static str, String, Option<(CoefMode, usize)>)> {
+    let mut specs: Vec<(&'static str, String, Option<(CoefMode, usize)>)> =
+        vec![("full", "full".into(), None)];
+    for s in [4usize, 8] {
+        for mode in [CoefMode::Fp16, CoefMode::Fp8, CoefMode::Sign] {
+            let flag = match mode {
+                CoefMode::Fp16 => ",fp16",
+                CoefMode::Fp8 => "",
+                CoefMode::Sign => ",sign",
+            };
+            let label = match mode {
+                CoefMode::Fp16 => "lexico-fp16",
+                CoefMode::Fp8 => "lexico-fp8",
+                CoefMode::Sign => "lexico-sign",
+            };
+            specs.push((label, format!("lexico:s={s},nb=32{flag}"), Some((mode, s))));
+        }
     }
-    let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
-    let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
-    let n = 10;
-    println!("eval throughput on arith (n={n} samples/method), model M:\n");
-    let mut total = 0.0;
-    for spec in [
-        "full",
-        "lexico:s=8,nb=32",
-        "lexico:s=4,nb=32",
-        "lexico:s=2,nb=32",
-        "kivi:bits=2,g=16,nb=16",
-        "kivi:bits=4,g=16,nb=16",
-        "pertoken:bits=4,g=16,nb=4",
-        "zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16",
-        "snapkv:cap=48,win=8",
-        "pyramidkv:cap=48,win=8",
-    ] {
-        let t0 = Instant::now();
-        let r = evaluate(&engine, Some(dicts.clone()), spec,
-                         &EvalConfig::new(Task::Arith, n, 12345))?;
-        let dt = t0.elapsed().as_secs_f64();
-        total += dt;
+    specs.push(("kivi", "kivi:bits=2,g=16,nb=16".into(), None));
+    specs.push(("kivi", "kivi:bits=4,g=16,nb=16".into(), None));
+    specs
+}
+
+/// Sign-tier thread-determinism pin: fill one sign-mode cache past the
+/// sharded-score threshold through the real append path, then attend the
+/// identical query on 1-, 2- and 4-thread pools — the outputs must be
+/// bitwise identical. Returns the single-thread attend ns/token (the
+/// PR10 perf-gate metric).
+fn sign_thread_determinism(smoke: bool) -> anyhow::Result<f64> {
+    let shape = CacheShape { n_layers: 1, n_heads: 8, n_kv_heads: 4, head_dim: 64 };
+    let (n_atoms, m) = (256usize, shape.head_dim);
+    let t_tokens = 1536usize; // past the sharded-score threshold (1024)
+    let (warm, iters) = if smoke { (2, 8) } else { (5, 25) };
+    let dicts = Arc::new(DictionarySet {
+        keys: vec![Dictionary::random(m, n_atoms, 71)],
+        values: vec![Dictionary::random(m, n_atoms, 72)],
+    });
+    let cfg = LexicoConfig {
+        sparsity: 4,
+        n_buffer: 32,
+        precision: CoefMode::Sign,
+        ..Default::default()
+    };
+    let mut reference: Option<Vec<u32>> = None;
+    let mut gate_ns_per_token = f64::NAN;
+    for threads in [1usize, 2, 4] {
+        let mut cache = LexicoCache::new(shape, dicts.clone(), cfg.clone());
+        cache.set_runtime(
+            &CacheRuntime::default().with_pool(Arc::new(ExecPool::new(threads))),
+        );
+        let mut rng = Rng::new(73);
+        let kvd = shape.kv_dim();
+        let mut done = 0usize;
+        while done < t_tokens {
+            let chunk = 512.min(t_tokens - done);
+            let ks = rng.normal_vec(chunk * kvd);
+            let vs = rng.normal_vec(chunk * kvd);
+            cache.append_batch(0, &ks, &vs, chunk);
+            done += chunk;
+        }
+        let q = Rng::new(74).normal_vec(shape.q_dim());
+        let mut out = vec![0.0f32; shape.q_dim()];
+        if threads == 1 {
+            let st = bench_ms(warm, iters, || cache.attend(0, &q, &mut out));
+            gate_ns_per_token = st.mean * 1e6 / t_tokens as f64;
+        }
+        cache.attend(0, &q, &mut out);
+        let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(want) => anyhow::ensure!(
+                *want == bits,
+                "sign attend diverged bitwise at T={threads}"
+            ),
+        }
         println!(
-            "{spec:<40} {:6.2} s  ({:5.2} s/sample, KV {:5.1}%, score {:5.1})",
-            dt,
-            dt / n as f64,
-            100.0 * r.kv_ratio,
-            r.score
+            "sign determinism T={threads}: {} compressed tokens, output bitwise {}",
+            t_tokens,
+            if threads == 1 { "recorded" } else { "identical" }
         );
     }
-    println!("\nfull sweep cost at these settings: {total:.1} s");
+    Ok(gate_ns_per_token)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let art = lexico::artifacts_dir();
+    let have_artifacts = art.join("model_M.bin").exists();
+
+    let gate_attend_ns = sign_thread_determinism(smoke)?;
+
+    // Model + dictionaries: trained artifacts when present (full run),
+    // else the deterministic tiny model with random dictionaries.
+    let (engine, dicts, model_name, n) = if !smoke && have_artifacts {
+        let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
+        let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
+        (engine, dicts, "M", 10usize)
+    } else {
+        let engine = Engine::new(tiny_weights(61));
+        let shape = engine.shape();
+        let dicts = Arc::new(DictionarySet {
+            keys: (0..shape.n_layers)
+                .map(|i| Dictionary::random(shape.head_dim, 64, 8100 + i as u64))
+                .collect(),
+            values: (0..shape.n_layers)
+                .map(|i| Dictionary::random(shape.head_dim, 64, 8200 + i as u64))
+                .collect(),
+        });
+        (engine, dicts, "tiny", 3usize)
+    };
+    let shape = engine.shape();
+    // uncompressed FP16 cost: K + V vectors per token per kv head per layer
+    let full_bytes_per_token =
+        (2 * 2 * shape.n_kv_heads * shape.head_dim * shape.n_layers) as f64;
+
+    println!(
+        "\nPR10 fig1 tradeoff (model {model_name}, n={n} samples/method, \
+         {full_bytes_per_token:.0} B/token uncompressed):\n"
+    );
+    let mut entries = Vec::new();
+    let mut total_s = 0.0f64;
+    let mut total_samples = 0usize;
+    for (label, spec, lex) in curve_specs() {
+        let t0 = Instant::now();
+        let r = evaluate(
+            &engine,
+            Some(dicts.clone()),
+            &spec,
+            &EvalConfig::new(Task::Arith, n, 12345),
+        )?;
+        let dt = t0.elapsed().as_secs_f64();
+        total_s += dt;
+        total_samples += r.n;
+        let bytes_tok = r.kv_ratio * full_bytes_per_token;
+        let (mode_name, bits_coef) = match lex {
+            Some((mode, s)) => (mode.name(), mode.bits_per_coef(s)),
+            None => ("-", f64::NAN),
+        };
+        if let Some((CoefMode::Sign, s)) = lex {
+            // acceptance: the sign tier stores at most 2 bits per coefficient
+            anyhow::ensure!(
+                bits_coef <= 2.0 + 1e-12,
+                "sign rows store {bits_coef} bits/coef at s={s}"
+            );
+        }
+        println!(
+            "{label:<12} {spec:<28} {bytes_tok:>8.1} B/tok  score {:>5.1}  agree {:>5.1}  \
+             ({dt:>6.2} s)",
+            r.score, r.agree
+        );
+        let bits_json =
+            if bits_coef.is_nan() { "null".into() } else { format!("{bits_coef:.3}") };
+        entries.push(format!(
+            "    {{\"method\": \"{label}\", \"spec\": \"{spec}\", \
+             \"coef_mode\": \"{mode_name}\", \"bits_per_coef\": {bits_json}, \
+             \"bytes_per_token\": {bytes_tok:.2}, \"kv_ratio_pct\": {:.2}, \
+             \"score\": {:.2}, \"agree\": {:.2}}}",
+            100.0 * r.kv_ratio,
+            r.score,
+            r.agree
+        ));
+    }
+    let eval_samples_per_s = total_samples as f64 / total_s.max(1e-9);
+    println!(
+        "\nsweep cost {total_s:.1} s ({eval_samples_per_s:.2} samples/s); \
+         sign attend gate {gate_attend_ns:.0} ns/token"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"pr10_fig1_tradeoff\",\n  \"smoke\": {smoke},\n  \
+         \"model\": \"{model_name}\",\n  \
+         \"config\": {{\"n_samples\": {n}, \"full_bytes_per_token\": {full_bytes_per_token:.0}, \
+         \"sign_determinism_threads\": [1, 2, 4]}},\n  \
+         \"gate\": {{\n    \"sign_attend_ns_per_token\": {gate_attend_ns:.1},\n    \
+         \"eval_samples_per_s\": {eval_samples_per_s:.3}\n  }},\n  \
+         \"curves\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let out_path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_PR10.json"))
+        .unwrap_or_else(|| "BENCH_PR10.json".into());
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}", out_path.display());
     Ok(())
 }

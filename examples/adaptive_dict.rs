@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     println!("the paper's Table 6 trade-off.\n");
 
     // Show the raw mechanism on one session: count atoms added.
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let mut rng = lexico::util::rng::Rng::new(7);
     let inst = lexico::tasks::gen_needle(&mut rng, 24);
     let mut prompt = vec![lexico::tasks::BOS];

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let art = lexico::artifacts_dir();
     let engine = Engine::new(Weights::load(art.join("model_M.bin"))?);
     let dicts = Arc::new(DictionarySet::load(art.join("dict_M_N1024.bin"))?);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let n_samples = 30;
 
     println!("needle-retrieval accuracy vs context length (n={n_samples} each)\n");

@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // Lexico at several sparsity levels: each vector of the compressed
     // prefix is s (index, FP8-coefficient) pairs = 3s+2 bytes vs 64 FP16.
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     for s in [8usize, 4, 2] {
         let spec = format!("lexico:s={s},nb=32");
         let mut cache = build_cache(&spec, &ctx)?;

@@ -2,7 +2,7 @@
 //!
 //! Spec grammar (used by the CLI, eval sweeps and the repro drivers):
 //!   full
-//!   lexico:s=8,nb=32,na=1[,delta=0.3][,fp16][,adaptive=1024:0.3][,dict=PATH]
+//!   lexico:s=8,nb=32,na=1[,delta=0.3][,fp16|,sign][,adaptive=1024:0.3][,dict=PATH]
 //!   kivi:bits=2,g=16,nb=16
 //!   pertoken:bits=4,g=16[,nb=0]
 //!   zipcache:hi=4,lo=2,g=16,frac=0.2,nb=16
@@ -23,6 +23,7 @@ use super::snapkv::{SnapKvCache, SnapKvConfig};
 use super::zipcache::{ZipCache, ZipCacheConfig};
 use super::{CacheShape, KvCache};
 use crate::dict::DictionarySet;
+use crate::runtime::CacheRuntime;
 use crate::sparse::CoefPrecision;
 
 /// Parsed method spec.
@@ -71,13 +72,34 @@ pub struct CacheContext {
     pub shape: CacheShape,
     /// Lexico dictionaries (required for lexico:* specs).
     pub dicts: Option<Arc<DictionarySet>>,
+    /// Resolved runtime (pool, spill store, encode tier, coefficient-mode
+    /// override, qd layout) applied to every cache this context builds and
+    /// inherited wholesale by their forks. This is the ONLY place a
+    /// `--coef-mode` / `LEXICO_COEF_MODE` override meets a fresh cache;
+    /// restore paths deliberately bypass it so snapshots keep the mode they
+    /// were recorded under.
+    pub runtime: CacheRuntime,
 }
 
-/// Build a cache backend from a spec string.
+impl CacheContext {
+    pub fn new(shape: CacheShape, dicts: Option<Arc<DictionarySet>>) -> CacheContext {
+        CacheContext { shape, dicts, runtime: CacheRuntime::from_env() }
+    }
+}
+
+/// Build a cache backend from a spec string, then apply the context's
+/// [`CacheRuntime`] to it.
 pub fn build_cache(spec: &str, ctx: &CacheContext) -> Result<Box<dyn KvCache>> {
     let ms = MethodSpec::parse(spec)?;
     let shape = ctx.shape;
-    Ok(match ms.kind.as_str() {
+    // An explicit per-spec mode flag (`fp16` / `sign`) outranks the global
+    // coefficient-mode override: `--coef-mode` / `LEXICO_COEF_MODE` retargets
+    // only specs that left the mode at its default.
+    let mut rt = ctx.runtime.clone();
+    if ms.flag("fp16") || ms.flag("sign") {
+        rt.coef_mode = None;
+    }
+    let mut cache: Box<dyn KvCache> = match ms.kind.as_str() {
         "full" => Box::new(FullCache::new(shape)),
         "lexico" => {
             let dicts = ctx
@@ -98,7 +120,9 @@ pub fn build_cache(spec: &str, ctx: &CacheContext) -> Result<Box<dyn KvCache>> {
                 delta: ms.get("delta", 0.0f32)?,
                 n_buffer: ms.get("nb", 32usize)?,
                 n_approx: ms.get("na", 1usize)?,
-                precision: if ms.flag("fp16") {
+                precision: if ms.flag("sign") {
+                    CoefPrecision::Sign
+                } else if ms.flag("fp16") {
                     CoefPrecision::Fp16
                 } else {
                     CoefPrecision::Fp8
@@ -136,7 +160,9 @@ pub fn build_cache(spec: &str, ctx: &CacheContext) -> Result<Box<dyn KvCache>> {
             slope: ms.get("slope", 3.0f32)?,
         })),
         other => bail!("unknown cache method '{other}'"),
-    })
+    };
+    cache.set_runtime(&rt);
+    Ok(cache)
 }
 
 #[cfg(test)]
@@ -149,7 +175,9 @@ mod tests {
             keys: (0..2).map(|i| crate::dict::Dictionary::random(16, 64, i)).collect(),
             values: (0..2).map(|i| crate::dict::Dictionary::random(16, 64, 9 + i)).collect(),
         };
-        CacheContext { shape, dicts: Some(Arc::new(dicts)) }
+        // a pinned default runtime: factory tests stay deterministic under
+        // the LEXICO_* CI matrix jobs
+        CacheContext { shape, dicts: Some(Arc::new(dicts)), runtime: CacheRuntime::default() }
     }
 
     #[test]
@@ -159,6 +187,7 @@ mod tests {
             "full",
             "lexico:s=4,nb=8",
             "lexico:s=4,nb=8,delta=0.3,fp16",
+            "lexico:s=4,nb=8,sign",
             "lexico:s=2,nb=4,adaptive=16:0.3",
             "kivi:bits=2,g=8,nb=4",
             "pertoken:bits=4,g=16",
@@ -175,5 +204,41 @@ mod tests {
     fn rejects_unknown() {
         assert!(build_cache("h2o", &ctx()).is_err());
         assert!(build_cache("lexico:s=abc", &ctx()).is_err());
+    }
+
+    #[test]
+    fn runtime_coef_mode_override_matches_spec_flag() {
+        // `--coef-mode sign` through the context runtime must produce the
+        // same cache as spelling `sign` in the spec: identical storage
+        // accounting on an identical stream, and cheaper than FP8.
+        let base = ctx();
+        let over = CacheContext {
+            shape: base.shape,
+            dicts: base.dicts.clone(),
+            runtime: CacheRuntime::default().with_coef_mode(crate::sparse::CoefMode::Sign),
+        };
+        let mut via_rt = build_cache("lexico:s=4,nb=4", &over).unwrap();
+        let mut via_spec = build_cache("lexico:s=4,nb=4,sign", &base).unwrap();
+        let mut fp8 = build_cache("lexico:s=4,nb=4", &base).unwrap();
+        // an explicit spec flag outranks the global override
+        let mut pinned = build_cache("lexico:s=4,nb=4,fp16", &over).unwrap();
+        let mut fp16 = build_cache("lexico:s=4,nb=4,fp16", &base).unwrap();
+        let mut rng = crate::util::rng::Rng::new(12);
+        let kvd = base.shape.kv_dim();
+        for _ in 0..12 {
+            let k = rng.normal_vec(kvd);
+            let v = rng.normal_vec(kvd);
+            for l in 0..base.shape.n_layers {
+                via_rt.append(l, &k, &v);
+                via_spec.append(l, &k, &v);
+                fp8.append(l, &k, &v);
+                pinned.append(l, &k, &v);
+                fp16.append(l, &k, &v);
+            }
+        }
+        assert_eq!(via_rt.mem_bytes(), via_spec.mem_bytes());
+        assert!(via_rt.mem_bytes() < fp8.mem_bytes());
+        assert_eq!(pinned.mem_bytes(), fp16.mem_bytes());
+        assert!(pinned.mem_bytes() > via_rt.mem_bytes());
     }
 }

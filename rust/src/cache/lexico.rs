@@ -23,7 +23,7 @@
 //! [`ExecPool`] (disjoint score ranges, per-element order unchanged —
 //! bitwise identical at every thread count).
 
-use super::{CacheShape, KvCache};
+use super::{CacheCaps, CacheShape, KvCache};
 use crate::dict::adaptive::AdaptiveDict;
 use crate::dict::DictionarySet;
 use crate::exec::{self, ExecPool, SendPtr};
@@ -31,6 +31,7 @@ use crate::omp::{
     omp_encode, omp_encode_batch, omp_encode_batch_gram, BatchOmpWorkspace, OmpWorkspace,
     SparseCode,
 };
+use crate::runtime::{CacheRuntime, EncodeTier};
 use crate::sparse::memory::csr_row_bytes;
 use crate::sparse::{CoefPrecision, CsrRow, CsrSlab};
 use crate::store::{self, wire, PageRef, SpillStore};
@@ -38,9 +39,12 @@ use crate::tensor::{axpy, dot, softmax};
 use std::sync::Arc;
 
 /// Session-snapshot magic (`"LXSS"`) / version for
-/// [`KvCache::hibernate_state`] blobs.
+/// [`KvCache::hibernate_state`] blobs. v2 replaced the FP16 flag byte with
+/// a coefficient-mode byte (0 = FP8, 1 = FP16, 2 = sign) so sign-tier
+/// sessions hibernate and restore with their mode checked, mirroring the
+/// page-format v2 header.
 const SNAP_MAGIC: u32 = 0x4c58_5353;
-const SNAP_VERSION: u16 = 1;
+const SNAP_VERSION: u16 = 2;
 
 /// Lexico knobs (paper defaults in comments).
 #[derive(Clone, Debug)]
@@ -326,6 +330,11 @@ pub struct LexicoCache {
     /// adaptive overlays (lazily created when cfg.adaptive is set)
     adaptive_k: Vec<Option<AdaptiveDict>>,
     adaptive_v: Vec<Option<AdaptiveDict>>,
+    /// atoms folded out of the adaptive overlays by [`KvCache::refresh_dicts`].
+    /// They moved into this session's private `Arc<DictionarySet>` rotation
+    /// but were paid for by this session, so `mem_bytes` keeps charging them
+    /// (FP16 per element) — a refresh must not make KV memory look cheaper.
+    folded_extra_atoms: usize,
     /// heads[layer * n_kv_heads + g]
     heads: Vec<HeadState>,
     tokens: usize,
@@ -387,13 +396,18 @@ impl LexicoCache {
         };
         let n_cap = n + cfg.adaptive.map(|(e, _)| e).unwrap_or(0);
         let pool = exec::default_pool();
+        // Environment defaults resolve through CacheRuntime (the one place
+        // LEXICO_* is interpreted); factory-built caches additionally get
+        // the full runtime — including any coefficient-mode override —
+        // applied via `set_runtime`.
+        let rt = CacheRuntime::from_env();
         LexicoCache {
             shape,
             ws: OmpWorkspace::new(n_cap, m, cfg.sparsity.max(1)),
             bws: BatchOmpWorkspace::with_pool(pool.clone()),
             pool,
-            qd_per_head: std::env::var_os("LEXICO_QD_PER_HEAD").is_some(),
-            gram_omp: crate::omp::gram_omp_requested(),
+            qd_per_head: rt.qd_per_head,
+            gram_omp: rt.encode_tier == EncodeTier::Gram,
             par_score_min: PAR_SCORE_MIN_TOKENS,
             csr_bytes: 0.0,
             buf_tokens: 0,
@@ -403,6 +417,7 @@ impl LexicoCache {
             dicts,
             adaptive_k,
             adaptive_v,
+            folded_extra_atoms: 0,
             heads,
             tokens: 0,
             gather_k: Vec::new(),
@@ -454,7 +469,7 @@ impl LexicoCache {
     /// count.
     fn compress_oldest(&mut self, layer: usize, n: usize) {
         let m = self.shape.head_dim;
-        let fp16 = self.cfg.precision == CoefPrecision::Fp16;
+        let mode = self.cfg.precision;
         if self.cfg.adaptive.is_some() {
             // Adaptive growth mutates the dictionary per encoded vector, so
             // results are order-dependent: keep the sequential path.
@@ -468,8 +483,8 @@ impl LexicoCache {
                     let v: Vec<f32> = self.heads[hi].v_buf[..m].to_vec();
                     let k_code = self.encode(layer, true, &k);
                     let v_code = self.encode(layer, false, &v);
-                    self.csr_bytes += (csr_row_bytes(k_code.nnz(), fp16)
-                        + csr_row_bytes(v_code.nnz(), fp16)) as f64;
+                    self.csr_bytes += (csr_row_bytes(k_code.nnz(), mode)
+                        + csr_row_bytes(v_code.nnz(), mode)) as f64;
                     self.buf_tokens -= 1;
                     let h = &mut self.heads[hi];
                     h.push_code(&k_code.idx, &k_code.val, &v_code.idx, &v_code.val);
@@ -529,7 +544,7 @@ impl LexicoCache {
             let mut new_bytes = 0usize;
             for code_i in off..off + take {
                 let (kc, vc) = (&k_codes[code_i], &v_codes[code_i]);
-                new_bytes += csr_row_bytes(kc.nnz(), fp16) + csr_row_bytes(vc.nnz(), fp16);
+                new_bytes += csr_row_bytes(kc.nnz(), mode) + csr_row_bytes(vc.nnz(), mode);
                 h.push_code(&kc.idx, &kc.val, &vc.idx, &vc.val);
             }
             h.k_buf.drain(..take * m);
@@ -568,17 +583,6 @@ impl LexicoCache {
         let m = self.shape.head_dim;
         let h = &self.heads[self.head_idx(layer, g)];
         (&h.k_buf[..h.buf_len * m], &h.v_buf[..h.buf_len * m], h.buf_len)
-    }
-
-    /// Override the encode tier for this cache (tests / benches). The
-    /// process-wide default is the `--gram-omp` / `LEXICO_GRAM_OMP=1`
-    /// snapshot taken at construction; forks inherit the current setting.
-    /// Only the batched non-adaptive overflow path dispatches on it —
-    /// adaptive mode always encodes sequentially with the canonical
-    /// pursuit (its dictionary mutates per vector, so a frozen Gram matrix
-    /// would go stale mid-batch).
-    pub fn set_gram_omp(&mut self, on: bool) {
-        self.gram_omp = on;
     }
 
     /// Make every sealed page resident before a scoring pass. O(1) when
@@ -1153,7 +1157,16 @@ impl KvCache for LexicoCache {
     /// semantic state — OMP results are workspace-independent). Continuing
     /// either copy is bitwise identical to continuing the original.
     fn fork(&self) -> Box<dyn KvCache> {
-        let n = self.dicts.keys[0].n;
+        // layers may hold different atom counts once a refresh has folded
+        // overlays, so the workspace ceiling is the max across both sides
+        let n = self
+            .dicts
+            .keys
+            .iter()
+            .chain(&self.dicts.values)
+            .map(|d| d.n)
+            .max()
+            .unwrap_or(0);
         let m = self.shape.head_dim;
         let n_cap = n + self.cfg.adaptive.map(|(e, _)| e).unwrap_or(0);
         Box::new(LexicoCache {
@@ -1172,6 +1185,7 @@ impl KvCache for LexicoCache {
             dicts: self.dicts.clone(),
             adaptive_k: self.adaptive_k.clone(),
             adaptive_v: self.adaptive_v.clone(),
+            folded_extra_atoms: self.folded_extra_atoms,
             heads: self.heads.iter().map(|h| h.fork()).collect(),
             tokens: self.tokens,
             gather_k: Vec::new(),
@@ -1196,23 +1210,109 @@ impl KvCache for LexicoCache {
             .sum()
     }
 
+    /// Apply the resolved [`CacheRuntime`] (DESIGN.md §14). The pool (shared
+    /// with the batched-OMP workspace — overflow compression and the
+    /// long-context score sweep both shard onto it, bitwise independent of
+    /// thread count) and the spill store attach whenever present; the encode
+    /// tier and qd layout swap freely because neither changes stored bits. A
+    /// coefficient-mode override re-seeds the slab storage, which is only
+    /// sound while the cache is empty — once tokens exist their coefficients
+    /// are already quantized, so a late override is ignored rather than
+    /// silently corrupting rows (see the trait docs).
+    fn set_runtime(&mut self, rt: &CacheRuntime) {
+        if let Some(pool) = &rt.pool {
+            self.pool = pool.clone();
+            self.bws.set_pool(pool.clone());
+        }
+        if let Some(store) = &rt.spill {
+            self.spill = Some(store.clone());
+        }
+        self.gram_omp = rt.encode_tier == EncodeTier::Gram;
+        self.qd_per_head = rt.qd_per_head;
+        if let Some(mode) = rt.coef_mode {
+            if mode != self.cfg.precision && self.tokens == 0 {
+                self.cfg.precision = mode;
+                for h in &mut self.heads {
+                    *h = HeadState::new(mode);
+                }
+            }
+        }
+    }
+
     /// Adaptive dictionaries grow per encoded vector, so the encode *order*
-    /// matters and split prefill diverges; the plain universal-dictionary
-    /// path compresses vector-by-vector independently.
-    fn split_prefill_exact(&self) -> bool {
-        self.cfg.adaptive.is_none()
+    /// matters: split prefill diverges, hibernation cannot capture the
+    /// overlay, and dictionary refresh becomes available. The plain
+    /// universal-dictionary path compresses vector-by-vector independently.
+    fn caps(&self) -> CacheCaps {
+        let adaptive = self.cfg.adaptive.is_some();
+        CacheCaps {
+            split_prefill_exact: !adaptive,
+            shared_dicts: true,
+            spill: true,
+            hibernate: !adaptive,
+            dict_refresh: adaptive,
+        }
     }
 
-    /// Overflow compression (the GEMM-batched OMP encoder) and the
-    /// long-context score sweep both run on `pool`; results are bitwise
-    /// independent of the pool's thread count.
-    fn set_pool(&mut self, pool: Arc<crate::exec::ExecPool>) {
-        self.pool = pool.clone();
-        self.bws.set_pool(pool);
-    }
-
-    fn set_spill_store(&mut self, store: Arc<SpillStore>) {
-        self.spill = Some(store);
+    /// Fold the adaptive overlays back into the universal dictionaries
+    /// between decode rounds: each layer/side with pending extension atoms
+    /// rotates to a *new* [`crate::dict::Dictionary`] generation via
+    /// [`crate::dict::Dictionary::refreshed`] — appended atoms, fresh Gram
+    /// cache (the old generation's Gram can never be served against the
+    /// grown atom set) — and the overlay rebases so its `max_extra` headroom
+    /// reopens. Stored codes are untouched: the refreshed base holds the
+    /// folded atoms at the indices the codes already reference, so decode
+    /// output is bitwise identical before and after a refresh. Returns the
+    /// number of atoms folded (0 when nothing grew since the last refresh).
+    fn refresh_dicts(&mut self) -> Result<usize, String> {
+        if self.cfg.adaptive.is_none() {
+            return Err("lexico: dictionary refresh requires adaptive mode".into());
+        }
+        let pending: usize = self
+            .adaptive_k
+            .iter()
+            .chain(&self.adaptive_v)
+            .flatten()
+            .map(|ad| ad.n_extra)
+            .sum();
+        if pending == 0 {
+            return Ok(0);
+        }
+        let fold = |bases: &[crate::dict::Dictionary], ads: &mut Vec<Option<AdaptiveDict>>| {
+            bases
+                .iter()
+                .zip(ads.iter_mut())
+                .map(|(base, ad)| {
+                    let ad = ad.as_mut().expect("adaptive cache has an overlay per layer");
+                    if ad.n_extra == 0 {
+                        return base.clone();
+                    }
+                    let d = base.refreshed(ad.extra_atoms());
+                    ad.rebase();
+                    d
+                })
+                .collect::<Vec<_>>()
+        };
+        let keys = fold(&self.dicts.keys, &mut self.adaptive_k);
+        let values = fold(&self.dicts.values, &mut self.adaptive_v);
+        self.dicts = Arc::new(DictionarySet { keys, values });
+        self.folded_extra_atoms += pending;
+        // The overlays' headroom reopened, so future growth can push the
+        // atom count past the original construction-time capacity: regrow
+        // the OMP workspace to the new ceiling (attend scratch resizes
+        // lazily and needs no help).
+        let n_max = self
+            .dicts
+            .keys
+            .iter()
+            .chain(&self.dicts.values)
+            .map(|d| d.n)
+            .max()
+            .unwrap_or(0);
+        let headroom = self.cfg.adaptive.map(|(e, _)| e).unwrap_or(0);
+        self.ws = OmpWorkspace::new(n_max + headroom, self.shape.head_dim,
+                                    self.cfg.sparsity.max(1));
+        Ok(pending)
     }
 
     fn spill_cold(&mut self) -> Result<(usize, f64), String> {
@@ -1244,7 +1344,11 @@ impl KvCache for LexicoCache {
         let mut buf = Vec::new();
         wire::put_u32(&mut buf, SNAP_MAGIC);
         wire::put_u16(&mut buf, SNAP_VERSION);
-        buf.push(if self.cfg.precision == CoefPrecision::Fp16 { 1 } else { 0 });
+        buf.push(match self.cfg.precision {
+            CoefPrecision::Fp8 => 0,
+            CoefPrecision::Fp16 => 1,
+            CoefPrecision::Sign => 2,
+        });
         wire::put_u32(&mut buf, self.shape.n_layers as u32);
         wire::put_u32(&mut buf, self.shape.n_kv_heads as u32);
         wire::put_u32(&mut buf, m as u32);
@@ -1294,9 +1398,14 @@ impl KvCache for LexicoCache {
         if r.take_u16()? != SNAP_VERSION {
             return Err("lexico snapshot: unsupported version".into());
         }
-        let fp16 = r.take_u8()? == 1;
-        if fp16 != (self.cfg.precision == CoefPrecision::Fp16) {
-            return Err("lexico snapshot: coefficient precision mismatch".into());
+        let mode = match r.take_u8()? {
+            0 => CoefPrecision::Fp8,
+            1 => CoefPrecision::Fp16,
+            2 => CoefPrecision::Sign,
+            b => return Err(format!("lexico snapshot: bad coefficient-mode byte {b}")),
+        };
+        if mode != self.cfg.precision {
+            return Err("lexico snapshot: coefficient mode mismatch".into());
         }
         let (nl, nkv, sm) = (r.take_u32()?, r.take_u32()?, r.take_u32()?);
         if (nl as usize, nkv as usize, sm as usize)
@@ -1375,11 +1484,13 @@ impl KvCache for LexicoCache {
     fn mem_bytes(&self) -> f64 {
         let m = self.shape.head_dim;
         let mut bytes = self.csr_bytes + (self.buf_tokens * 2 * m * 2) as f64; // buffer @ FP16
-        // adaptive atoms are session-private → charged to KV size (§4.2.4)
+        // adaptive atoms are session-private → charged to KV size (§4.2.4);
+        // atoms a refresh folded into this session's dictionary rotation
+        // stay charged — they still exist only because this session grew them
         for ad in self.adaptive_k.iter().chain(&self.adaptive_v).flatten() {
             bytes += ad.extra_bytes() as f64;
         }
-        bytes
+        bytes + (self.folded_extra_atoms * m * 2) as f64
     }
 
     fn full_bytes(&self) -> f64 {
@@ -1411,6 +1522,20 @@ mod tests {
         };
         let c = LexicoCache::new(shape, Arc::new(dicts), cfg);
         (shape, c)
+    }
+
+    /// The cache's *current* state as a runtime value: applying it back is
+    /// a no-op, so tests can attach one extra resource (pool, spill store)
+    /// without perturbing the tier/mode the cache resolved from its env —
+    /// keeping the parity suites valid under every `LEXICO_*` CI job.
+    fn rt_of(c: &LexicoCache) -> CacheRuntime {
+        CacheRuntime {
+            pool: Some(c.pool.clone()),
+            spill: c.spill.clone(),
+            encode_tier: if c.gram_omp { EncodeTier::Gram } else { EncodeTier::Canonical },
+            coef_mode: Some(c.cfg.precision),
+            qd_per_head: c.qd_per_head,
+        }
     }
 
     #[test]
@@ -1562,7 +1687,10 @@ mod tests {
                 };
                 let (shape, mut canon) = setup(64, cfg.clone());
                 let (_, mut gram) = setup(64, cfg);
-                gram.set_gram_omp(true);
+                // pin the tiers explicitly so the dispatch-proof asserts
+                // below hold even under the LEXICO_GRAM_OMP=1 CI job
+                canon.set_runtime(&CacheRuntime::default());
+                gram.set_runtime(&CacheRuntime::default().with_encode_tier(EncodeTier::Gram));
                 let mut rng = Rng::new(97);
                 let kvd = shape.kv_dim();
                 let m = shape.head_dim;
@@ -1623,8 +1751,8 @@ mod tests {
         let cfg = LexicoConfig { sparsity: 4, n_buffer: 5, n_approx: 2, ..Default::default() };
         let (shape, mut seq) = setup(64, cfg.clone());
         let (_, mut bat) = setup(64, cfg);
-        seq.set_gram_omp(true);
-        bat.set_gram_omp(true);
+        seq.set_runtime(&CacheRuntime::default().with_encode_tier(EncodeTier::Gram));
+        bat.set_runtime(&CacheRuntime::default().with_encode_tier(EncodeTier::Gram));
         let mut rng = Rng::new(53);
         let kvd = shape.kv_dim();
         let n = 13;
@@ -1769,7 +1897,7 @@ mod tests {
             },
         ] {
             let (shape, mut cold) = setup(64, cfg.clone());
-            assert!(cold.split_prefill_exact());
+            assert!(cold.caps().split_prefill_exact);
             let (_, mut split) = setup(64, cfg);
             let mut rng = Rng::new(23);
             let (tp, ts) = (9, 5);
@@ -1795,14 +1923,20 @@ mod tests {
                 assert_eq!(hc.v_buf, hs.v_buf);
             }
         }
-        // adaptive mode must *declare* itself split-inexact
+        // adaptive mode must *declare* itself split-inexact — and the rest
+        // of its capability surface flips with it: no hibernation (the
+        // overlay is not in the page format), refresh available
         let (_, c) = setup(16, LexicoConfig {
             sparsity: 2,
             n_buffer: 2,
             adaptive: Some((8, 0.1)),
             ..Default::default()
         });
-        assert!(!c.split_prefill_exact());
+        let caps = c.caps();
+        assert!(!caps.split_prefill_exact);
+        assert!(!caps.hibernate);
+        assert!(caps.dict_refresh);
+        assert!(caps.shared_dicts && caps.spill);
     }
 
     /// The retained row-iterator reference: the pre-slab attend, written
@@ -1929,6 +2063,333 @@ mod tests {
         }
     }
 
+    /// Sign-mode reference attend: the row-iterator storage walk with the
+    /// sign sweeps' documented op order replicated exactly — per K row
+    /// `Σ(±qd)` first, then `·α`, then `·scale`; per V row the magnitude is
+    /// folded once (`wrα = w·α`) and added/subtracted per bin. The linear
+    /// sign slab sweeps must match this bit for bit.
+    fn reference_attend_sign(c: &LexicoCache, layer: usize, q: &[f32], out: &mut [f32]) {
+        let m = c.shape.head_dim;
+        let n_heads = c.shape.n_heads;
+        let scale = 1.0 / (m as f32).sqrt();
+        out.fill(0.0);
+        let (k_atoms, k_n) = {
+            let (a, n) = c.atoms(layer, true);
+            (a.to_vec(), n)
+        };
+        let (v_atoms, v_n) = {
+            let (a, n) = c.atoms(layer, false);
+            (a.to_vec(), n)
+        };
+        let mut qd = vec![0.0f32; n_heads * k_n];
+        for n in 0..k_n {
+            let atom = &k_atoms[n * m..(n + 1) * m];
+            for h in 0..n_heads {
+                qd[h * k_n + n] = dot(&q[h * m..(h + 1) * m], atom);
+            }
+        }
+        let mut scores = Vec::new();
+        let mut z = vec![0.0f32; v_n];
+        for h in 0..n_heads {
+            let g = h / c.shape.group();
+            let head = &c.heads[c.head_idx(layer, g)];
+            let (k_rows, v_rows) = (head.k_rows(), head.v_rows());
+            let tc = head.n_csr;
+            let tb = head.buf_len;
+            let qh = &q[h * m..(h + 1) * m];
+            let qdh = &qd[h * k_n..(h + 1) * k_n];
+            scores.clear();
+            scores.resize(tc + tb, 0.0);
+            for (ti, row) in k_rows.iter().enumerate() {
+                let alpha = if row.nnz() > 0 { row.coef(0).abs() } else { 0.0 };
+                let mut sc = 0.0f32;
+                for j in 0..row.nnz() {
+                    let qv = qdh[row.idx[j] as usize];
+                    if row.coef_bits[j] != 0 {
+                        sc -= qv;
+                    } else {
+                        sc += qv;
+                    }
+                }
+                scores[ti] = (sc * alpha) * scale;
+            }
+            for ti in 0..tb {
+                scores[tc + ti] = dot(qh, &head.k_buf[ti * m..(ti + 1) * m]) * scale;
+            }
+            softmax(&mut scores[..tc + tb]);
+            let oh = &mut out[h * m..(h + 1) * m];
+            z.fill(0.0);
+            for (ti, row) in v_rows.iter().enumerate() {
+                let alpha = if row.nnz() > 0 { row.coef(0).abs() } else { 0.0 };
+                let wra = scores[ti] * alpha;
+                for j in 0..row.nnz() {
+                    let bin = row.idx[j] as usize;
+                    if row.coef_bits[j] != 0 {
+                        z[bin] -= wra;
+                    } else {
+                        z[bin] += wra;
+                    }
+                }
+            }
+            for (n, &zn) in z.iter().enumerate() {
+                if zn != 0.0 {
+                    axpy(oh, zn, &v_atoms[n * m..(n + 1) * m]);
+                }
+            }
+            for ti in 0..tb {
+                axpy(oh, scores[tc + ti], &head.v_buf[ti * m..(ti + 1) * m]);
+            }
+        }
+    }
+
+    #[test]
+    fn sign_slab_attend_matches_sign_reference_bitwise() {
+        // The sign-tier parity property: ±α slab sweeps vs the row-walk
+        // reference with identical op order — sealed pages + ragged tail,
+        // through attend AND attend_batch.
+        use crate::util::prop::Prop;
+        Prop::new(6).seed(0x516e).check("sign_slab_vs_rows", |rng, _| {
+            let cfg = LexicoConfig {
+                sparsity: 4,
+                n_buffer: 3,
+                precision: CoefPrecision::Sign,
+                ..Default::default()
+            };
+            let (shape, mut c) = setup(64, cfg);
+            let n_tok = PAGE_TOKENS + 3 + rng.below(PAGE_TOKENS);
+            for _ in 0..n_tok {
+                let k = rng.normal_vec(shape.kv_dim());
+                let v = rng.normal_vec(shape.kv_dim());
+                for l in 0..shape.n_layers {
+                    c.append(l, &k, &v);
+                }
+            }
+            assert!(!c.heads[0].pages.is_empty());
+            let q = rng.normal_vec(shape.q_dim());
+            let mut got = vec![0.0; shape.q_dim()];
+            let mut want = vec![0.0; shape.q_dim()];
+            c.attend(0, &q, &mut got);
+            reference_attend_sign(&c, 0, &q, &mut want);
+            if got != want {
+                return Err("sign slab attend diverged from row reference".into());
+            }
+            let b = 2;
+            let qs = rng.normal_vec(b * shape.q_dim());
+            let mut ob = vec![0.0; b * shape.q_dim()];
+            c.attend_batch(1, &qs, &mut ob, b);
+            for qi in 0..b {
+                let mut w = vec![0.0; shape.q_dim()];
+                reference_attend_sign(
+                    &c,
+                    1,
+                    &qs[qi * shape.q_dim()..(qi + 1) * shape.q_dim()],
+                    &mut w,
+                );
+                if ob[qi * shape.q_dim()..(qi + 1) * shape.q_dim()] != w[..] {
+                    return Err(format!("sign attend_batch row {qi} diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sign_mode_sharded_sweep_is_bitwise_deterministic() {
+        // The acceptance contract at the cache layer: sign-mode decode is
+        // bitwise self-identical at T ∈ {1, 2, 4} and equal to the serial
+        // sweep (sharded score ranges are disjoint, per-element order fixed).
+        let cfg = LexicoConfig {
+            sparsity: 4,
+            n_buffer: 4,
+            precision: CoefPrecision::Sign,
+            ..Default::default()
+        };
+        let n_tok = 3 * PAGE_TOKENS + 7;
+        let mut rng = Rng::new(67);
+        let shape = CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 16 };
+        let ks = rng.normal_vec(n_tok * shape.kv_dim());
+        let vs = rng.normal_vec(n_tok * shape.kv_dim());
+        let q = rng.normal_vec(shape.q_dim());
+        let qs = rng.normal_vec(3 * shape.q_dim());
+        let fill = |c: &mut LexicoCache| {
+            for i in 0..n_tok {
+                for l in 0..shape.n_layers {
+                    c.append(
+                        l,
+                        &ks[i * shape.kv_dim()..(i + 1) * shape.kv_dim()],
+                        &vs[i * shape.kv_dim()..(i + 1) * shape.kv_dim()],
+                    );
+                }
+            }
+        };
+        let (_, mut serial) = setup(64, cfg.clone());
+        fill(&mut serial);
+        let mut want = vec![0.0; shape.q_dim()];
+        serial.attend(0, &q, &mut want);
+        let mut want_b = vec![0.0; 3 * shape.q_dim()];
+        serial.attend_batch(1, &qs, &mut want_b, 3);
+        for threads in [1usize, 2, 4] {
+            let (_, mut c) = setup(64, cfg.clone());
+            let rt = rt_of(&c).with_pool(Arc::new(crate::exec::ExecPool::new(threads)));
+            c.set_runtime(&rt);
+            c.set_par_score_min(16);
+            fill(&mut c);
+            let mut got = vec![0.0; shape.q_dim()];
+            c.attend(0, &q, &mut got);
+            assert_eq!(got, want, "sign sharded attend diverged at T={threads}");
+            let mut got_b = vec![0.0; 3 * shape.q_dim()];
+            c.attend_batch(1, &qs, &mut got_b, 3);
+            assert_eq!(got_b, want_b, "sign sharded attend_batch diverged at T={threads}");
+        }
+    }
+
+    #[test]
+    fn fork_inherits_applied_runtime() {
+        // fork() must carry the applied CacheRuntime wholesale: the fork of
+        // a gram-tier FP16-mode cache compresses exactly like a cache that
+        // was explicitly configured that way.
+        let cfg = LexicoConfig { sparsity: 4, n_buffer: 3, ..Default::default() };
+        let (shape, mut c) = setup(64, cfg.clone());
+        let rt = rt_of(&c)
+            .with_pool(Arc::new(crate::exec::ExecPool::new(3)))
+            .with_encode_tier(EncodeTier::Gram)
+            .with_coef_mode(CoefPrecision::Fp16)
+            .with_qd_per_head(true);
+        c.set_runtime(&rt);
+        assert_eq!(c.cfg.precision, CoefPrecision::Fp16, "empty cache takes the mode override");
+        assert_eq!(c.dicts.gram_bytes(), 0);
+        let mut f = c.fork();
+
+        // reference: a cache explicitly built under the same runtime
+        // (setup() is seed-deterministic, so the dictionaries are equal)
+        let (_, mut want) = setup(64, cfg);
+        want.set_runtime(&rt);
+
+        let mut rng = Rng::new(171);
+        let kvd = shape.kv_dim();
+        for _ in 0..14 {
+            let k = rng.normal_vec(kvd);
+            let v = rng.normal_vec(kvd);
+            for l in 0..shape.n_layers {
+                f.append(l, &k, &v);
+                want.append(l, &k, &v);
+            }
+        }
+        // only the fork touched the parent's shared dictionaries — a
+        // realized Gram proves the fork inherited the encode tier
+        assert_eq!(c.tokens(), 0);
+        assert!(c.dicts.gram_bytes() > 0, "fork did not inherit the gram tier");
+        // inherited FP16 mode: identical accounting, bitwise-equal decode
+        assert_eq!(f.mem_bytes(), want.mem_bytes());
+        let q = rng.normal_vec(shape.q_dim());
+        let (mut o1, mut o2) = (vec![0.0; shape.q_dim()], vec![0.0; shape.q_dim()]);
+        f.attend(0, &q, &mut o1);
+        want.attend(0, &q, &mut o2);
+        assert_eq!(o1, o2, "forked runtime diverged from the explicitly configured cache");
+
+        // a late mode override is ignored: the stored rows are already
+        // quantized, so the cache keeps its mode once tokens exist
+        let rt2 = rt_of(&want).with_coef_mode(CoefPrecision::Sign);
+        want.set_runtime(&rt2);
+        assert_eq!(want.cfg.precision, CoefPrecision::Fp16);
+    }
+
+    #[test]
+    fn dict_refresh_folds_overlays_rotates_generation_and_keeps_decode_bitwise() {
+        // capability gate: the plain universal-dictionary path has nothing
+        // to refresh and must say so
+        let (_, mut plain) = setup(64, LexicoConfig { sparsity: 4, n_buffer: 3, ..Default::default() });
+        assert!(!plain.caps().dict_refresh);
+        assert!(plain.refresh_dicts().is_err());
+
+        let cfg = LexicoConfig {
+            sparsity: 2,
+            n_buffer: 2,
+            adaptive: Some((8, 0.05)),
+            ..Default::default()
+        };
+        let (shape, mut c) = setup(16, cfg); // tiny dict → growth certain
+        let mut rng = Rng::new(181);
+        for _ in 0..10 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let extra: usize = c
+            .adaptive_k
+            .iter()
+            .chain(&c.adaptive_v)
+            .flatten()
+            .map(|a| a.n_extra)
+            .sum();
+        assert!(extra > 0, "adaptive dict never grew");
+        let q = rng.normal_vec(shape.q_dim());
+        let mut before = vec![0.0; shape.q_dim()];
+        c.attend(0, &q, &mut before);
+        let mem_before = c.mem_bytes();
+        let old_dicts = c.shared_dicts().unwrap();
+        let old_atoms: usize = old_dicts.keys.iter().chain(&old_dicts.values).map(|d| d.n).sum();
+
+        let folded = c.refresh_dicts().unwrap();
+        assert_eq!(folded, extra, "refresh must fold every pending overlay atom");
+
+        // rotation: a NEW DictionarySet whose refreshed layers moved to the
+        // next generation and absorbed the overlay atoms at their indices
+        let new_dicts = c.shared_dicts().unwrap();
+        assert!(!Arc::ptr_eq(&old_dicts, &new_dicts), "refresh must rotate the dict set");
+        let new_atoms: usize = new_dicts.keys.iter().chain(&new_dicts.values).map(|d| d.n).sum();
+        assert_eq!(new_atoms, old_atoms + folded);
+        for (old, new) in old_dicts
+            .keys
+            .iter()
+            .chain(&old_dicts.values)
+            .zip(new_dicts.keys.iter().chain(&new_dicts.values))
+        {
+            if new.n > old.n {
+                assert_eq!(new.generation(), old.generation() + 1);
+            }
+        }
+        // overlays drained → full headroom reopened
+        let left: usize = c
+            .adaptive_k
+            .iter()
+            .chain(&c.adaptive_v)
+            .flatten()
+            .map(|a| a.n_extra)
+            .sum();
+        assert_eq!(left, 0);
+
+        // the determinism contract across a refresh: decode is bitwise
+        // unchanged (codes reference the same atom values at the same
+        // indices) and the folded atoms stay charged to this session
+        let mut after = vec![0.0; shape.q_dim()];
+        c.attend(0, &q, &mut after);
+        assert_eq!(before, after, "refresh changed decode bits");
+        assert_eq!(c.mem_bytes(), mem_before, "refresh must not un-charge folded atoms");
+
+        // nothing pending → Ok(0), no rotation
+        let unchanged = c.shared_dicts().unwrap();
+        assert_eq!(c.refresh_dicts().unwrap(), 0);
+        assert!(Arc::ptr_eq(&unchanged, &c.shared_dicts().unwrap()));
+
+        // the session keeps serving and can grow into the reopened headroom
+        for _ in 0..10 {
+            let k = rng.normal_vec(shape.kv_dim());
+            let v = rng.normal_vec(shape.kv_dim());
+            for l in 0..shape.n_layers {
+                c.append(l, &k, &v);
+            }
+        }
+        let mut o = vec![0.0; shape.q_dim()];
+        c.attend(0, &q, &mut o);
+        assert!(o.iter().all(|x| x.is_finite()));
+        // a fork carries the folded-atom charge with it
+        let f = c.fork();
+        assert_eq!(f.mem_bytes(), c.mem_bytes());
+    }
+
     #[test]
     fn pool_sharded_score_sweep_is_bitwise_identical_at_every_thread_count() {
         // Lower the shard threshold so a ~3-page context exercises the
@@ -1964,7 +2425,8 @@ mod tests {
         serial.attend_batch(1, &qs, &mut want_b, 3);
         for threads in [1usize, 2, 4] {
             let (_, mut c) = setup(64, cfg.clone());
-            c.set_pool(Arc::new(crate::exec::ExecPool::new(threads)));
+            let rt = rt_of(&c).with_pool(Arc::new(crate::exec::ExecPool::new(threads)));
+            c.set_runtime(&rt);
             c.set_par_score_min(16);
             fill(&mut c);
             assert!(c.heads[0].n_csr >= 16, "context long enough to shard");
@@ -2069,7 +2531,8 @@ mod tests {
             for threads in [1usize, 2, 4] {
                 let (shape, mut c) = setup(n_atoms, cfg.clone());
                 let pool = Arc::new(crate::exec::ExecPool::new(threads));
-                c.set_pool(pool.clone());
+                let rt = rt_of(&c).with_pool(pool.clone());
+                c.set_runtime(&rt);
                 c.set_par_score_min(16);
                 let mut rng = Rng::new(77);
                 let n_tok = PAGE_TOKENS + 9; // ≥1 sealed page + ragged tail
@@ -2184,7 +2647,7 @@ mod tests {
 
     #[test]
     fn spill_fault_round_trip_is_bitwise() {
-        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16, CoefPrecision::Sign] {
             let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, precision: prec, ..Default::default() };
             let (shape, mut c) = setup(64, cfg);
             let mut rng = Rng::new(111);
@@ -2201,7 +2664,8 @@ mod tests {
             let mem_before = c.mem_bytes();
 
             let (dir, store) = tmp_store(&format!("rt{}", prec.bytes_per_coef()));
-            c.set_spill_store(store.clone());
+            let rt = rt_of(&c).with_spill(store.clone());
+            c.set_runtime(&rt);
             let (n_pages, freed) = c.spill_cold().unwrap();
             assert!(n_pages > 0 && freed > 0.0);
             assert_eq!(c.mem_bytes(), mem_before - freed, "resident-only accounting");
@@ -2241,7 +2705,8 @@ mod tests {
             }
         }
         let (dir, store) = tmp_store("forkskip");
-        c.set_spill_store(store);
+        let rt = rt_of(&c).with_spill(store);
+        c.set_runtime(&rt);
         let f = c.fork();
         let (n_pages, freed) = c.spill_cold().unwrap();
         assert_eq!((n_pages, freed), (0, 0.0), "shared pages must stay resident");
@@ -2253,7 +2718,7 @@ mod tests {
 
     #[test]
     fn hibernate_restore_reproduces_the_session_bitwise() {
-        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16, CoefPrecision::Sign] {
             let cfg = LexicoConfig { sparsity: 4, n_buffer: 4, precision: prec, ..Default::default() };
             let (shape, mut c) = setup(64, cfg.clone());
             let mut rng = Rng::new(117);
@@ -2265,11 +2730,13 @@ mod tests {
                 }
             }
             let (dir, store) = tmp_store(&format!("hib{}", prec.bytes_per_coef()));
-            c.set_spill_store(store.clone());
+            let rt = rt_of(&c).with_spill(store.clone());
+            c.set_runtime(&rt);
             let blob = c.hibernate_state().unwrap();
 
             let (_, mut back) = setup(64, cfg);
-            back.set_spill_store(store);
+            let rt = rt_of(&back).with_spill(store);
+            back.set_runtime(&rt);
             back.restore_hibernated(&blob).unwrap();
             assert_eq!(back.tokens(), c.tokens());
             assert!(back.spilled_bytes > 0.0, "pages restore as spilled refs");
@@ -2308,11 +2775,13 @@ mod tests {
             }
         }
         let (dir, store) = tmp_store("corrupt");
-        c.set_spill_store(store.clone());
+        let rt = rt_of(&c).with_spill(store.clone());
+        c.set_runtime(&rt);
         let blob = c.hibernate_state().unwrap();
         let fresh = || {
             let (_, mut b) = setup(64, cfg.clone());
-            b.set_spill_store(store.clone());
+            let rt = rt_of(&b).with_spill(store.clone());
+            b.set_runtime(&rt);
             b
         };
         // truncated mid-snapshot
@@ -2323,18 +2792,21 @@ mod tests {
         let mut bad = blob.clone();
         bad[0] ^= 0xff;
         assert!(fresh().restore_hibernated(&bad).is_err());
-        // mismatched precision config
-        let (_, mut wrong) = setup(
-            64,
-            LexicoConfig {
-                sparsity: 4,
-                n_buffer: 4,
-                precision: CoefPrecision::Fp16,
-                ..Default::default()
-            },
-        );
-        wrong.set_spill_store(store.clone());
-        assert!(wrong.restore_hibernated(&blob).is_err());
+        // mismatched coefficient mode config (one per wrong mode)
+        for wrong_prec in [CoefPrecision::Fp16, CoefPrecision::Sign] {
+            let (_, mut wrong) = setup(
+                64,
+                LexicoConfig {
+                    sparsity: 4,
+                    n_buffer: 4,
+                    precision: wrong_prec,
+                    ..Default::default()
+                },
+            );
+            let rt = rt_of(&wrong).with_spill(store.clone());
+            wrong.set_runtime(&rt);
+            assert!(wrong.restore_hibernated(&blob).is_err());
+        }
         // a page ref pointing past the page file fails at fault time
         let mut back = fresh();
         back.restore_hibernated(&blob).unwrap();
@@ -2380,7 +2852,8 @@ mod tests {
                 .unwrap()
                 .with_cold_tier(ColdTier { keep_atoms: Some(3), to_fp8: true }),
         );
-        c.set_spill_store(store);
+        let rt = rt_of(&c).with_spill(store);
+        c.set_runtime(&rt);
         c.spill_cold().unwrap();
         c.fault_resident().unwrap();
         assert!(c.mem_bytes() < mem_before, "cold tier must shrink the faulted pages");

@@ -28,7 +28,49 @@ pub mod pyramidkv;
 pub mod snapkv;
 pub mod zipcache;
 
+use crate::runtime::CacheRuntime;
 use crate::tensor::{dot, softmax};
+
+/// What a backend can do, declared in one descriptor instead of scattered
+/// probe methods and `Err`-return sniffing. The batcher consults this once
+/// per cache: chunked prefill and the shared-prefix cache require
+/// `split_prefill_exact`; the residency manager only spills/hibernates
+/// caches that advertise it; the decode-round dictionary-refresh pass only
+/// visits caches with `dict_refresh`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheCaps {
+    /// `ingest_prefill(prefix)` + `ingest_prefill(suffix)` is bitwise
+    /// identical to one whole-prompt call. True for backends whose
+    /// compression depends only on token order; false where prefill-time
+    /// score state spans the whole prompt (snapkv/pyramidkv eviction,
+    /// zipcache salience) or the dictionary mutates per encode (adaptive
+    /// lexico).
+    pub split_prefill_exact: bool,
+    /// [`KvCache::shared_dicts`] returns `Some` — the engine can batch the
+    /// query–dictionary GEMM across sessions (DESIGN.md §10).
+    pub shared_dicts: bool,
+    /// [`KvCache::spill_cold`]/[`KvCache::fault_resident`] actually move
+    /// pages (DESIGN.md §11).
+    pub spill: bool,
+    /// [`KvCache::hibernate_state`]/[`KvCache::restore_hibernated`] are
+    /// supported.
+    pub hibernate: bool,
+    /// [`KvCache::refresh_dicts`] can fold accumulated adaptive atoms back
+    /// into the universal dictionary between decode rounds (DESIGN.md §14).
+    pub dict_refresh: bool,
+}
+
+impl Default for CacheCaps {
+    fn default() -> Self {
+        CacheCaps {
+            split_prefill_exact: true,
+            shared_dicts: false,
+            spill: false,
+            hibernate: false,
+            dict_refresh: false,
+        }
+    }
+}
 
 /// Geometry shared by all backends.
 #[derive(Clone, Copy, Debug)]
@@ -127,13 +169,25 @@ pub trait KvCache: Send {
         0.0
     }
 
-    /// Route this cache's internal compute (Lexico's batched-OMP overflow
-    /// compression) onto `pool` — the batcher calls this so every cache it
-    /// builds shares the serving pool. Results are bitwise independent of
-    /// the pool (the exec-layer determinism contract), so backends without
-    /// internal batch compute ignore it.
-    fn set_pool(&mut self, pool: std::sync::Arc<crate::exec::ExecPool>) {
-        let _ = pool;
+    /// Apply a resolved [`CacheRuntime`] (pool, spill store, encode tier,
+    /// coefficient mode, qd layout) in one call — the construction-time
+    /// replacement for the old `set_pool`/`set_spill_store`/`set_gram_omp`
+    /// setter chain. [`factory::build_cache`] calls this on every cache it
+    /// builds, and `fork()` inherits the applied runtime, so a session can
+    /// never end up with half-applied wiring. Backends without internal
+    /// compute or spillable state ignore it. Runtime fields that change
+    /// compression output (encode tier, coefficient mode) only take effect
+    /// on an empty cache; applying them later is a caller bug and may be
+    /// ignored.
+    fn set_runtime(&mut self, rt: &CacheRuntime) {
+        let _ = rt;
+    }
+
+    /// The capability descriptor — see [`CacheCaps`]. The default is a
+    /// plain split-exact backend with no spill/hibernate/shared-dict
+    /// support; backends override to advertise more (or less).
+    fn caps(&self) -> CacheCaps {
+        CacheCaps::default()
     }
 
     /// The shared dictionary set this cache scores against, if its attend
@@ -174,34 +228,26 @@ pub trait KvCache: Send {
         unreachable!("finish_shared_attend called on a backend without shared_dicts()");
     }
 
-    /// Whether `ingest_prefill(prefix)` followed by `ingest_prefill(suffix)`
-    /// leaves state bitwise identical to one `ingest_prefill(prefix ++
-    /// suffix)` call. True for backends whose compression decisions depend
-    /// only on token order (full, lexico without adaptive dictionaries,
-    /// kivi, pertoken); false where prefill-time *score state* spans the
-    /// whole prompt (snapkv/pyramidkv eviction, zipcache salience) or the
-    /// dictionary mutates per encode (adaptive lexico). The batcher's
-    /// shared-prefix cache only serves methods where this holds, so a
-    /// prefix-cache hit stays token-identical to a cold full-prompt
-    /// prefill.
-    fn split_prefill_exact(&self) -> bool {
-        true
-    }
-
-    /// Attach the shared on-disk page store (DESIGN.md §11). Backends with
-    /// spillable immutable state (Lexico's sealed CSR pages) keep the
-    /// handle for [`KvCache::spill_cold`]/[`KvCache::fault_resident`];
-    /// everyone else ignores it and stays RAM-only.
-    fn set_spill_store(&mut self, store: std::sync::Arc<crate::store::SpillStore>) {
-        let _ = store;
+    /// Fold accumulated adaptive-dictionary extra atoms back into the
+    /// universal dictionary between decode rounds (DESIGN.md §14): every
+    /// layer/side overlay with pending atoms rotates its base
+    /// [`crate::dict::Dictionary`] to a refreshed generation (base atoms +
+    /// extras appended, fresh Gram), the overlay rebases onto it, and the
+    /// cache's `shared_dicts()` Arc changes so round-level grouping
+    /// re-forms. Returns the number of atoms folded. Decode output is
+    /// bitwise unchanged — extras keep their indices — and the folded
+    /// atoms stay charged to this session's KV size. Only meaningful for
+    /// backends advertising [`CacheCaps::dict_refresh`]; the default has
+    /// no dictionary to refresh.
+    fn refresh_dicts(&mut self) -> Result<usize, String> {
+        Err(format!("{}: dictionary refresh is not supported by this backend", self.name()))
     }
 
     /// Evict this cache's sole-owned sealed pages to the spill store,
     /// returning `(pages evicted, resident bytes freed)`. Pages shared
     /// with a live fork stay resident (their memory would not be freed and
-    /// is charged to the owner). Requires a store from
-    /// [`KvCache::set_spill_store`]; the default backend has nothing
-    /// spillable.
+    /// is charged to the owner). Requires a spill store from the applied
+    /// [`CacheRuntime`]; the default backend has nothing spillable.
     fn spill_cold(&mut self) -> Result<(usize, f64), String> {
         Ok((0, 0.0))
     }

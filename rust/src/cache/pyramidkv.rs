@@ -99,8 +99,11 @@ impl KvCache for PyramidKvCache {
 
     /// Same reasoning as SnapKV: per-layer eviction budgets apply to the
     /// whole prompt at once.
-    fn split_prefill_exact(&self) -> bool {
-        false
+    fn caps(&self) -> super::CacheCaps {
+        super::CacheCaps {
+            split_prefill_exact: false,
+            ..Default::default()
+        }
     }
 
     fn tokens(&self) -> usize {

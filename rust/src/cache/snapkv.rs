@@ -193,8 +193,11 @@ impl KvCache for SnapKvCache {
     /// capacity; ingesting the prompt in two pieces applies the budget to
     /// each piece separately, so split prefill is not bitwise-reproducible
     /// once the prompt exceeds capacity.
-    fn split_prefill_exact(&self) -> bool {
-        false
+    fn caps(&self) -> super::CacheCaps {
+        super::CacheCaps {
+            split_prefill_exact: false,
+            ..Default::default()
+        }
     }
 
     fn tokens(&self) -> usize {

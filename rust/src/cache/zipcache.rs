@@ -216,8 +216,11 @@ impl KvCache for ZipCache {
     /// Salience accumulates across the *whole* prompt before prefill spill
     /// decisions are made; splitting the prompt changes the statistics at
     /// spill time, so split prefill is not bitwise-reproducible.
-    fn split_prefill_exact(&self) -> bool {
-        false
+    fn caps(&self) -> super::CacheCaps {
+        super::CacheCaps {
+            split_prefill_exact: false,
+            ..Default::default()
+        }
     }
 
     fn tokens(&self) -> usize {

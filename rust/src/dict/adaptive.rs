@@ -76,6 +76,22 @@ impl AdaptiveDict {
     pub fn extra_bytes(&self) -> usize {
         self.n_extra * self.m * 2
     }
+
+    /// The session-local overlay atoms (atom-major, `n_extra × m`) — the
+    /// slice a dictionary-refresh pass folds back into the universal
+    /// dictionary via [`Dictionary::refreshed`].
+    pub fn extra_atoms(&self) -> &[f32] {
+        &self.atoms[self.n_base * self.m..]
+    }
+
+    /// Absorb the overlay into the base after a refresh: the base
+    /// dictionary now owns every atom this overlay holds (same values,
+    /// same indices — `atoms` is already contiguous base+extra), so the
+    /// extra count resets and the full `max_extra` headroom reopens.
+    pub fn rebase(&mut self) {
+        self.n_base += self.n_extra;
+        self.n_extra = 0;
+    }
 }
 
 #[cfg(test)]
@@ -119,5 +135,38 @@ mod tests {
         }
         assert_eq!(grown, 2);
         assert_eq!(ad.n_extra, 2);
+    }
+
+    #[test]
+    fn rebase_folds_overlay_and_reopens_headroom() {
+        let m = 8;
+        let base = Dictionary::random(m, 16, 1);
+        let mut ad = AdaptiveDict::new(&base, 1, 0.01);
+        let mut ws = OmpWorkspace::new(64, m, 2);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(m);
+        let (code, grew) = ad.encode(&x, 1, &mut ws);
+        assert!(grew);
+        let overlay = ad.extra_atoms().to_vec();
+        assert_eq!(overlay.len(), m);
+
+        // fold into a refreshed base: same atoms, same indices
+        let refreshed = base.refreshed(&overlay);
+        ad.rebase();
+        assert_eq!(ad.n_base, 17);
+        assert_eq!(ad.n_extra, 0);
+        assert_eq!(ad.extra_bytes(), 0);
+        assert_eq!(ad.atoms(), &refreshed.atoms[..]);
+        assert_eq!(ad.extra_atoms(), &[] as &[f32]);
+        // the sparse code encoded pre-refresh decodes against the refreshed
+        // base: index 16 is the folded atom
+        assert_eq!(code.idx[0], 16);
+        assert_eq!(refreshed.atom(16), &overlay[..]);
+
+        // headroom reopened: the next hard vector can grow again
+        let y = rng.normal_vec(m);
+        let (_, grew2) = ad.encode(&y, 1, &mut ws);
+        assert!(grew2, "rebase must reopen max_extra headroom");
+        assert_eq!(ad.n_extra, 1);
     }
 }

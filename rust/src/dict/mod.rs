@@ -22,17 +22,23 @@ pub struct Dictionary {
     pub atoms: Vec<f32>,
     /// Lazily realized Gram matrix G = D·Dᵀ (`[n, n]`, full symmetric
     /// storage) for the precomputed-Gram OMP tier — computed once per
-    /// dictionary instance, then shared by every session/layer/head for
-    /// the life of the process (cloning a `Dictionary` clones the `Arc`,
-    /// not the 4·n² bytes). Realize only after the atoms are final: the
-    /// cache is never invalidated by later atom mutation.
+    /// dictionary **generation**, then shared by every session/layer/head
+    /// (cloning a `Dictionary` clones the `Arc`, not the 4·n² bytes). The
+    /// cache is never invalidated in place: any atom change must rotate to
+    /// a new generation via [`Dictionary::refreshed`], which starts with a
+    /// fresh, unrealized `OnceLock`. Realize only after the atoms are
+    /// final for the current generation.
     gram: OnceLock<Arc<Vec<f32>>>,
+    /// Monotone refresh counter: 0 for every freshly constructed
+    /// dictionary, bumped by [`Dictionary::refreshed`]. Lets callers
+    /// assert they are not holding a Gram from a superseded atom set.
+    generation: u64,
 }
 
 impl Dictionary {
     pub fn new(m: usize, n: usize, atoms: Vec<f32>) -> Self {
         debug_assert_eq!(atoms.len(), n * m);
-        Dictionary { m, n, atoms, gram: OnceLock::new() }
+        Dictionary { m, n, atoms, gram: OnceLock::new(), generation: 0 }
     }
 
     /// From column-major [m, N] layout (the LXDC / JAX convention).
@@ -43,7 +49,7 @@ impl Dictionary {
                 atoms[a * m + i] = data[i * n + a];
             }
         }
-        Dictionary { m, n, atoms, gram: OnceLock::new() }
+        Dictionary { m, n, atoms, gram: OnceLock::new(), generation: 0 }
     }
 
     /// Random unit-norm dictionary (Table 1 baseline).
@@ -54,7 +60,34 @@ impl Dictionary {
             let nrm = norm2(a).max(1e-12);
             a.iter_mut().for_each(|x| *x /= nrm);
         }
-        Dictionary { m, n, atoms, gram: OnceLock::new() }
+        Dictionary { m, n, atoms, gram: OnceLock::new(), generation: 0 }
+    }
+
+    /// Refresh generation of this dictionary (0 until the first
+    /// [`Dictionary::refreshed`]).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The explicit Gram-invalidation path: build the next generation of
+    /// this dictionary with `extra` atoms (length a multiple of `m`,
+    /// atom-major) appended after the existing `n`. Existing atom indices
+    /// are preserved, so sparse codes encoded against this dictionary stay
+    /// decodable against the refreshed one. The returned dictionary has a
+    /// fresh, unrealized Gram cache and `generation + 1` — the stale G of
+    /// the old generation can never be observed through the new value.
+    pub fn refreshed(&self, extra: &[f32]) -> Dictionary {
+        assert_eq!(extra.len() % self.m, 0, "extra atoms must be atom-major [k, m]");
+        let mut atoms = Vec::with_capacity(self.atoms.len() + extra.len());
+        atoms.extend_from_slice(&self.atoms);
+        atoms.extend_from_slice(extra);
+        Dictionary {
+            m: self.m,
+            n: self.n + extra.len() / self.m,
+            atoms,
+            gram: OnceLock::new(),
+            generation: self.generation + 1,
+        }
     }
 
     /// The dictionary's Gram matrix G = D·Dᵀ, realized on first request via
@@ -300,5 +333,35 @@ mod tests {
         // set-level accounting sums only realized caches
         let set = DictionarySet { keys: vec![d], values: vec![Dictionary::random(8, 16, 4)] };
         assert_eq!(set.gram_bytes(), 32 * 32 * 4);
+    }
+
+    #[test]
+    fn refresh_rotates_generation_and_never_serves_stale_gram() {
+        let d = Dictionary::random(8, 32, 5);
+        assert_eq!(d.generation(), 0);
+        let pool = ExecPool::new(2);
+        let g_old = d.gram(&pool); // realize generation 0's Gram
+        assert_eq!(d.gram_bytes(), 32 * 32 * 4);
+
+        // refresh with two extra atoms: new generation, larger n, old
+        // indices preserved, and an UNREALIZED Gram (explicit invalidation)
+        let mut rng = crate::util::rng::Rng::new(6);
+        let mut extra = rng.normal_vec(2 * 8);
+        for a in extra.chunks_mut(8) {
+            let nrm = norm2(a).max(1e-12);
+            a.iter_mut().for_each(|x| *x /= nrm);
+        }
+        let d2 = d.refreshed(&extra);
+        assert_eq!(d2.generation(), 1);
+        assert_eq!(d2.n, 34);
+        assert_eq!(d2.atom(7), d.atom(7), "base atom indices must be preserved");
+        assert_eq!(d2.atom(32), &extra[..8]);
+        assert_eq!(d2.gram_bytes(), 0, "refresh must drop the realized Gram");
+
+        let g_new = d2.gram(&pool);
+        assert_eq!(g_new.len(), 34 * 34, "new Gram covers the refreshed atom set");
+        assert!(!Arc::ptr_eq(&g_old, &g_new));
+        // chained refreshes keep counting up
+        assert_eq!(d2.refreshed(&[]).generation(), 2);
     }
 }

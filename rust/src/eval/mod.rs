@@ -62,7 +62,7 @@ pub fn evaluate(
     spec: &str,
     cfg: &EvalConfig,
 ) -> Result<EvalResult> {
-    let ctx = CacheContext { shape: engine.shape(), dicts };
+    let ctx = CacheContext::new(engine.shape(), dicts);
     let mut rng = Rng::new(cfg.seed);
     let nl = tasks::newline_id();
     let mut total = 0.0f64;

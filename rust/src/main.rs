@@ -65,6 +65,7 @@ USAGE:
                 [--resident-budget MB] [--max-queue 1024]
                 [--max-decode-batch 0] [--ttft-slo MS] [--tpot-slo MS]
                 [--tenant-quota SPEC] [--max-conns 256]
+                [--coef-mode fp8|fp16|sign] [--dict-refresh N]
   lexico eval   [--model M] [--task arith] [--method SPEC] [--n 50]
                 [--seed 0] [--dict-n 1024] [--threads N]
   lexico repro  <fig1|fig3|fig5|fig6|fig7|table1..table7|all> [--fast]
@@ -98,6 +99,21 @@ dictionaries); leave it off when comparing transcripts against
 canonical runs. Adaptive-dictionary methods always use the canonical
 path (atom mutation would stale the Gram cache).
 
+--coef-mode MODE (any subcommand) retargets every lexico cache that left
+its coefficient mode at the default: fp8 (1 byte/coef, the default),
+fp16 (2 bytes/coef, the paper's setting), or sign — coefficients
+collapse to ±α with one packed sign bit per atom and a single f16 row
+scale α, ~1–2 bits/coef stored. Equivalent to LEXICO_COEF_MODE=MODE.
+Method specs carrying an explicit ,fp16 or ,sign flag keep their pinned
+mode. Each mode's decode is bitwise deterministic at every thread count.
+
+--dict-refresh N (serve) folds each adaptive session's overlay atoms
+into its universal dictionaries every N scheduling rounds (0 = never,
+the default; LEXICO_DICT_REFRESH sets the same default). Decode output
+is bitwise unchanged — folded atoms keep their coefficients — while the
+overlay's growth headroom re-arms and the dictionary generation
+rotates, so a Gram cache realized afterwards sees the folded atoms.
+
 --prefill-chunk N bounds the prompt tokens a prefilling session consumes
 per scheduling round (0 = monolithic). Chunking keeps one long admission
 from stalling active sessions' decode cadence; token streams are bitwise
@@ -127,7 +143,7 @@ DIR. --resident-budget MB caps resident KV bytes below --budget-mb
 (default: equal), forcing cold sessions to disk under pressure.
 (LEXICO_SPILL_DIR / LEXICO_RESIDENT_BUDGET set the same defaults.)
 
-Method specs: full | lexico:s=8,nb=32[,delta=..][,fp16][,adaptive=N:d]
+Method specs: full | lexico:s=8,nb=32[,delta=..][,fp16|,sign][,adaptive=N:d]
   | kivi:bits=2,g=16,nb=16 | pertoken:bits=4,g=16 | zipcache:hi=4,lo=2
   | snapkv:cap=64,win=8 | pyramidkv:cap=64,win=8
 ";
@@ -149,6 +165,15 @@ fn main() -> Result<()> {
     // the request flag at construction
     if args.has("gram-omp") {
         std::env::set_var("LEXICO_GRAM_OMP", "1");
+    }
+    // route the coefficient-mode override through the runtime config's one
+    // resolution point (CacheRuntime::from_env) so every subcommand —
+    // serve, eval, repro — builds caches under the same mode
+    if let Some(mode) = args.flags.get("coef-mode") {
+        if lexico::sparse::CoefMode::parse(mode).is_none() {
+            bail!("--coef-mode must be fp8, fp16 or sign (got '{mode}')");
+        }
+        std::env::set_var("LEXICO_COEF_MODE", mode);
     }
     // size the exec pool before any engine or cache exists
     if let Some(t) = args.flags.get("threads") {
@@ -220,6 +245,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.resident_budget_bytes =
             mb.parse::<f64>().context("--resident-budget takes MB")? * 1024.0 * 1024.0;
     }
+    if let Some(n) = args.flags.get("dict-refresh") {
+        cfg.dict_refresh = n.parse().context("--dict-refresh takes a round count")?;
+    }
+    // redundant with the LEXICO_COEF_MODE env main() set, but keeps the
+    // batcher's config self-describing for programmatic embedders
+    cfg.coef_mode = args.flags.get("coef-mode").and_then(|m| lexico::sparse::CoefMode::parse(m));
     let addr = args.get("addr", "127.0.0.1:7077");
     let metrics = Arc::new(Mutex::new(Metrics::new()));
     let (jtx, jrx) = std::sync::mpsc::channel();
@@ -354,9 +385,13 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         }
     }
     for s in [1usize, 2, 4, 6, 8] {
+        let fp8 = lexico::sparse::memory::csr_ratio(s, c.head_dim, lexico::sparse::CoefMode::Fp8);
+        let sign =
+            lexico::sparse::memory::csr_ratio(s, c.head_dim, lexico::sparse::CoefMode::Sign);
         println!(
-            "  KV ratio at s={s}: {:.1}% (fp8 coefs, no buffer)",
-            100.0 * lexico::sparse::memory::csr_ratio(s, c.head_dim, false)
+            "  KV ratio at s={s}: {:.1}% fp8 / {:.1}% sign (no buffer)",
+            100.0 * fp8,
+            100.0 * sign
         );
     }
     Ok(())

@@ -254,7 +254,7 @@ impl Engine {
     /// attend in full precision over the stored prefix K/V rows plus each
     /// other (causally), and the cache — which must already hold the prefix
     /// (typically a fork of the prefix prototype) — ingests the suffix
-    /// rows only. For backends whose [`KvCache::split_prefill_exact`]
+    /// rows only. For backends whose [`crate::cache::CacheCaps::split_prefill_exact`]
     /// holds, the resulting cache state and logits are bitwise identical
     /// to a cold [`Engine::prefill`] of `prefix ++ suffix`; the prefix
     /// itself costs zero transformer work here. An empty suffix returns
@@ -295,7 +295,7 @@ impl Engine {
     /// [`Engine::prefill_suffix`] resume, and the prefix rows occupy the
     /// same score slots either way), so the final logits are bitwise
     /// identical and the cache state is bitwise identical for every
-    /// backend whose [`KvCache::split_prefill_exact`] holds. The batcher
+    /// backend whose [`crate::cache::CacheCaps::split_prefill_exact`] holds. The batcher
     /// relies on this to schedule prefill one budgeted chunk per round
     /// without perturbing pinned transcripts (DESIGN.md §9).
     ///
@@ -1048,8 +1048,9 @@ pub mod tests {
                 ];
                 let mut toks = Vec::new();
                 let mut poss = Vec::new();
+                let rt = crate::runtime::CacheRuntime::from_env().with_pool(pool.clone());
                 for (ci, p) in prompts.iter().enumerate() {
-                    caches[ci].set_pool(pool.clone());
+                    caches[ci].set_runtime(&rt);
                     let l = eng.prefill(p, &mut *caches[ci]);
                     toks.push(argmax(&l) as u32);
                     poss.push(p.len());

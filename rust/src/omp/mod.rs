@@ -234,6 +234,33 @@ pub fn reconstruct(atoms: &[f32], m: usize, code: &SparseCode, out: &mut [f32]) 
     }
 }
 
+/// Sign-tier finalize pass (DESIGN.md §14): collapse a pursuit's
+/// coefficients to `±α` with `α = f16(mean |val|)`, folding every
+/// magnitude into one per-row scale before the code reaches storage.
+///
+/// Runs after any encode tier (canonical, batch, or Gram pursuit) and
+/// before the cache quantizes the row, so the stored sign bitmap + scale
+/// reproduce exactly these values. The pass is idempotent in exact
+/// f32/f16 arithmetic: the n-fold sum of one f16-representable `α` is
+/// exact in f32 (α's 11-bit significand plus log2(n) carry bits fit in
+/// f32's 24), the division by n rounds that exact product back to `α`,
+/// and re-rounding an f16 value to f16 is the identity — so re-encoding
+/// a finalized code changes nothing, bit for bit.
+pub fn sign_finalize(code: &mut SparseCode) {
+    use crate::sparse::fp8::{f16_to_f32, f32_to_f16};
+    if code.val.is_empty() {
+        return;
+    }
+    let mut sum = 0.0f32;
+    for &v in &code.val {
+        sum += v.abs();
+    }
+    let alpha = f16_to_f32(f32_to_f16(sum / code.val.len() as f32));
+    for v in &mut code.val {
+        *v = if v.is_sign_negative() { -alpha } else { alpha };
+    }
+}
+
 /// Relative ℓ2 reconstruction error.
 pub fn rel_error(atoms: &[f32], m: usize, x: &[f32], code: &SparseCode) -> f32 {
     let mut recon = vec![0.0; m];
@@ -397,6 +424,43 @@ mod tests {
             assert_eq!(code.idx, solo.idx, "idx diverged at n={n} m={m} s={s}");
             assert_eq!(code.val, solo.val, "val diverged at n={n} m={m} s={s}");
         }
+    }
+
+    #[test]
+    fn sign_finalize_is_idempotent_and_matches_slab_quantization() {
+        use crate::sparse::{CoefMode, CsrSlab};
+        Prop::new(32).check("sign_finalize", |rng, _| {
+            let n = 1 + rng.below(12);
+            let mut code = SparseCode {
+                idx: (0..n as u16).collect(),
+                val: rng.normal_vec(n),
+            };
+            sign_finalize(&mut code);
+            // all magnitudes equal, signs preserved from the raw pursuit
+            let a = code.val[0].abs();
+            for &v in &code.val {
+                if v.abs().to_bits() != a.to_bits() {
+                    return Err(format!("unequal magnitude {v} vs {a}"));
+                }
+            }
+            // idempotent: finalizing again must not move a single bit
+            let once = code.val.clone();
+            sign_finalize(&mut code);
+            if code.val != once {
+                return Err("second finalize changed values".into());
+            }
+            // and the sign slab stores exactly these values back
+            let mut slab = CsrSlab::new(CoefMode::Sign);
+            slab.push_f32(&code.idx, &code.val);
+            let mut dec = Vec::new();
+            slab.row_values(0, &mut dec);
+            for (got, want) in dec.iter().zip(&code.val) {
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!("slab round-trip moved {want} → {got}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

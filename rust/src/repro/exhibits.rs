@@ -495,7 +495,7 @@ pub fn table5(opts: &ReproOpts) -> Result<()> {
     let mut rows = Vec::new();
     for s in [1usize, 2, 4, 6, 8] {
         // FP16 coefficients (paper's Table 5 setting): row = 4s+2 bytes
-        let r = crate::sparse::memory::csr_ratio(s, m, true);
+        let r = crate::sparse::memory::csr_ratio(s, m, crate::sparse::CoefMode::Fp16);
         // budget: [(T−nb)·r·2m·2 + nb·2m·2] / (T·2m·2) = 0.25
         let nb = if r < 0.25 {
             (t_ctx * (0.25 - r) / (1.0 - r)).round() as usize

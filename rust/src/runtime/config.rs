@@ -1,0 +1,143 @@
+//! `CacheRuntime`: the one place `LEXICO_*` environment flags and CLI
+//! options resolve into cache construction state (DESIGN.md §14).
+//!
+//! Before this module, runtime wiring was scattered: caches snapshotted
+//! `LEXICO_QD_PER_HEAD` / `LEXICO_GRAM_OMP` in their constructors, and the
+//! batcher chained post-construction setters (`set_pool`, `set_spill_store`,
+//! `set_gram_omp`) that each backend had to remember to propagate through
+//! `fork()`. Now a single [`CacheRuntime`] value is resolved once (env
+//! defaults via [`CacheRuntime::from_env`], CLI overrides via the builder
+//! methods), handed to [`crate::cache::factory::build_cache`], applied by
+//! `KvCache::set_runtime`, and inherited wholesale by forks.
+
+use std::sync::Arc;
+
+use crate::exec::ExecPool;
+use crate::sparse::CoefMode;
+use crate::store::SpillStore;
+
+/// Which OMP pursuit the cache's overflow compression runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EncodeTier {
+    /// Residual-space OMP (`omp_encode_batch`) — the always-correct default.
+    #[default]
+    Canonical,
+    /// Precomputed-Gram Batch-OMP (`omp_encode_batch_gram`, PR 8 tier):
+    /// tolerance-equal to canonical, opt-in via `--gram-omp` /
+    /// `LEXICO_GRAM_OMP=1`.
+    Gram,
+}
+
+/// Everything a cache needs from its environment, resolved exactly once.
+///
+/// `Clone` is cheap (two `Arc`s + scalars); a `fork()` inherits the parent's
+/// value verbatim, so a forked session can never silently diverge from the
+/// runtime its parent was built under.
+#[derive(Clone, Default)]
+pub struct CacheRuntime {
+    /// Worker pool for parallel compression/attend sharding. `None` keeps
+    /// each cache's private default pool.
+    pub pool: Option<Arc<ExecPool>>,
+    /// Disk spill store for the tiered-residency path (DESIGN.md §11).
+    pub spill: Option<Arc<SpillStore>>,
+    /// Which OMP pursuit overflow compression runs.
+    pub encode_tier: EncodeTier,
+    /// Coefficient storage mode override for CSR rows. `None` keeps the
+    /// backend spec's own precision (e.g. `lexico-fp16`'s FP16); `Some`
+    /// forces the mode — how `--coef-mode sign` / `LEXICO_COEF_MODE=sign`
+    /// select the 1-bit sign tier.
+    pub coef_mode: Option<CoefMode>,
+    /// Precompute q·D per head instead of per layer (`LEXICO_QD_PER_HEAD`).
+    pub qd_per_head: bool,
+}
+
+impl CacheRuntime {
+    /// Resolve the `LEXICO_*` environment into a runtime value. This is the
+    /// only place those variables are interpreted for cache construction:
+    /// `LEXICO_GRAM_OMP` (via the process-wide
+    /// [`crate::omp::gram_omp_requested`] snapshot), `LEXICO_COEF_MODE`
+    /// (`fp8` / `fp16` / `sign`; unrecognized spellings are ignored rather
+    /// than guessed), and `LEXICO_QD_PER_HEAD`.
+    pub fn from_env() -> CacheRuntime {
+        CacheRuntime {
+            pool: None,
+            spill: None,
+            encode_tier: if crate::omp::gram_omp_requested() {
+                EncodeTier::Gram
+            } else {
+                EncodeTier::Canonical
+            },
+            coef_mode: std::env::var("LEXICO_COEF_MODE")
+                .ok()
+                .and_then(|v| CoefMode::parse(&v)),
+            qd_per_head: std::env::var_os("LEXICO_QD_PER_HEAD").is_some(),
+        }
+    }
+
+    pub fn with_pool(mut self, pool: Arc<ExecPool>) -> CacheRuntime {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn with_spill(mut self, spill: Arc<SpillStore>) -> CacheRuntime {
+        self.spill = Some(spill);
+        self
+    }
+
+    pub fn with_encode_tier(mut self, tier: EncodeTier) -> CacheRuntime {
+        self.encode_tier = tier;
+        self
+    }
+
+    pub fn with_coef_mode(mut self, mode: CoefMode) -> CacheRuntime {
+        self.coef_mode = Some(mode);
+        self
+    }
+
+    pub fn with_qd_per_head(mut self, on: bool) -> CacheRuntime {
+        self.qd_per_head = on;
+        self
+    }
+}
+
+impl std::fmt::Debug for CacheRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheRuntime")
+            .field("pool", &self.pool.as_ref().map(|p| p.threads()))
+            .field("spill", &self.spill.is_some())
+            .field("encode_tier", &self.encode_tier)
+            .field("coef_mode", &self.coef_mode)
+            .field("qd_per_head", &self.qd_per_head)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose_and_default_is_canonical() {
+        let rt = CacheRuntime::default();
+        assert!(rt.pool.is_none());
+        assert!(rt.spill.is_none());
+        assert_eq!(rt.encode_tier, EncodeTier::Canonical);
+        assert_eq!(rt.coef_mode, None);
+        assert!(!rt.qd_per_head);
+
+        let pool = Arc::new(ExecPool::new(2));
+        let rt = CacheRuntime::default()
+            .with_pool(pool.clone())
+            .with_encode_tier(EncodeTier::Gram)
+            .with_coef_mode(CoefMode::Sign)
+            .with_qd_per_head(true);
+        assert!(Arc::ptr_eq(rt.pool.as_ref().unwrap(), &pool));
+        assert_eq!(rt.encode_tier, EncodeTier::Gram);
+        assert_eq!(rt.coef_mode, Some(CoefMode::Sign));
+        assert!(rt.qd_per_head);
+        // a clone (what fork() takes) is the same runtime, Arc-shared
+        let c = rt.clone();
+        assert!(Arc::ptr_eq(c.pool.as_ref().unwrap(), &pool));
+        assert_eq!(c.coef_mode, Some(CoefMode::Sign));
+    }
+}

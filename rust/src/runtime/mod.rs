@@ -14,6 +14,9 @@ use std::path::Path;
 use crate::model::Weights;
 use crate::util::json::Json;
 
+pub mod config;
+pub use config::{CacheRuntime, EncodeTier};
+
 /// Parsed `artifacts/manifest.json`.
 pub struct Manifest {
     pub json: Json,

@@ -38,7 +38,7 @@
 //! hit skips the row copy and runs zero chunks). Because the stored rows
 //! are exactly what a cold prefill computes, a hit is bitwise identical
 //! to a cold full-prompt prefill for every backend whose
-//! [`KvCache::split_prefill_exact`] holds (the only ones the cache
+//! [`crate::cache::CacheCaps::split_prefill_exact`] holds (the only ones the cache
 //! serves), while the prefix costs zero transformer work and zero OMP
 //! recompression. The budget charges each entry's resident bytes once and
 //! each forked session only its private bytes
@@ -93,9 +93,9 @@ pub struct BatcherConfig {
     /// one round). Chunking bounds the latency a long admission adds to
     /// every active session's decode round — the TPOT cliff — and is
     /// bitwise identical to monolithic prefill for every backend whose
-    /// [`KvCache::split_prefill_exact`] holds; backends where it does not
-    /// hold (SnapKV/PyramidKV/ZipCache observation-window state) are
-    /// prefilled monolithically regardless.
+    /// [`crate::cache::CacheCaps::split_prefill_exact`] holds; backends
+    /// where it does not hold (SnapKV/PyramidKV/ZipCache
+    /// observation-window state) are prefilled monolithically regardless.
     pub prefill_chunk: usize,
     /// spill directory for the tiered-residency page store (None disables
     /// spill, hibernation persistence and `save`/`resume` across restarts).
@@ -119,6 +119,19 @@ pub struct BatcherConfig {
     pub slo: SloTargets,
     /// per-tenant seat/KV-byte admission quotas (empty = unlimited)
     pub tenant_quotas: TenantQuotas,
+    /// online dictionary refresh cadence: every N scheduling rounds, fold
+    /// each session's adaptive-overlay atoms back into its universal
+    /// dictionary (`KvCache::refresh_dicts`, sessions whose
+    /// `caps().dict_refresh` holds — adaptive lexico). 0 = never. Decode
+    /// output is bitwise unchanged by a fold (the codes keep their indices
+    /// and the atoms keep their values); what changes is where the atoms
+    /// live, which re-arms the overlay headroom and rotates the dictionary
+    /// generation so stale Gram caches can never be served.
+    pub dict_refresh: u64,
+    /// coefficient-mode override for every cache this batcher builds
+    /// (`--coef-mode fp8|fp16|sign`); `None` defers to `LEXICO_COEF_MODE`
+    /// and then to each method spec's own flags.
+    pub coef_mode: Option<crate::sparse::CoefMode>,
 }
 
 /// Distinguishes spill directories of batchers that share the
@@ -154,6 +167,11 @@ impl Default for BatcherConfig {
             max_decode_batch: 0,
             slo: SloTargets::default(),
             tenant_quotas: TenantQuotas::default(),
+            dict_refresh: std::env::var("LEXICO_DICT_REFRESH")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0),
+            coef_mode: None,
         }
     }
 }
@@ -533,7 +551,6 @@ impl Batcher {
         cfg: BatcherConfig,
         metrics: Arc<Mutex<Metrics>>,
     ) -> Self {
-        let ctx = CacheContext { shape: engine.shape(), dicts };
         let max_seq = engine.weights.cfg.max_seq;
         let prefix = PrefixCache::new(cfg.prefix_entries);
         let pool = engine.pool().clone();
@@ -545,6 +562,16 @@ impl Batcher {
                 None
             }
         });
+        // the one runtime every cache this batcher builds is constructed
+        // under — forks (prefix hits, fan-out candidates) inherit it
+        let mut ctx = CacheContext::new(engine.shape(), dicts);
+        ctx.runtime = ctx.runtime.with_pool(pool.clone());
+        if let Some(store) = &spill {
+            ctx.runtime = ctx.runtime.with_spill(store.clone());
+        }
+        if let Some(mode) = cfg.coef_mode {
+            ctx.runtime = ctx.runtime.with_coef_mode(mode);
+        }
         let chunk_gov = ChunkGovernor::new(cfg.prefill_chunk);
         Batcher {
             engine,
@@ -775,6 +802,25 @@ impl Batcher {
         self.advance_prefills();
         if self.decode_round() > 0 && !self.pending.is_empty() {
             self.admit();
+        }
+        if self.cfg.dict_refresh > 0 && self.round_no % self.cfg.dict_refresh == 0 {
+            // online dictionary refresh: fold each adaptive session's
+            // overlay atoms into its universal dictionaries between
+            // rounds. Decode output is bitwise unchanged (the folded
+            // atoms keep their coefficients); the payoff is a re-armed
+            // overlay budget and a rotated dictionary generation, so any
+            // Gram cache realized afterwards sees the folded atoms.
+            let mut folded = 0u64;
+            for sess in &mut self.active {
+                if sess.cache.caps().dict_refresh {
+                    if let Ok(n) = sess.cache.refresh_dicts() {
+                        folded += n as u64;
+                    }
+                }
+            }
+            if folded > 0 {
+                self.lock_metrics().dict_refresh_atoms += folded;
+            }
         }
         self.enforce_residency();
         self.debug_budget_invariant();
@@ -1124,8 +1170,10 @@ impl Batcher {
             Some(ei) => {
                 let entry = &self.prefix.entries[ei];
                 let entry_id = entry.id;
-                let mut cache = entry.proto.fork();
-                cache.set_pool(self.pool.clone());
+                // the prototype was built under this batcher's runtime
+                // (pool, spill store, coefficient mode) — the fork
+                // inherits all of it
+                let cache = entry.proto.fork();
                 let suffix_len = ids.len() - entry.state.len();
                 let state = if suffix_len == 0 {
                     // exact hit: no chunk will ever run, so only the
@@ -1153,16 +1201,13 @@ impl Batcher {
                 (cache, state, true, false, Some(entry_id), longer)
             }
             None => match build_cache(&method, &self.ctx) {
-                Ok(mut cache) => {
-                    cache.set_pool(self.pool.clone());
-                    // every cache this batcher builds can page out to
-                    // the spill store; forks (prefix hits, fan-out
-                    // candidates) inherit the attachment
-                    if let Some(store) = &self.spill {
-                        cache.set_spill_store(store.clone());
-                    }
+                // `ctx.runtime` carries the pool and spill store, so
+                // every cache this batcher builds can page out to disk;
+                // forks (prefix hits, fan-out candidates) inherit the
+                // attachment
+                Ok(cache) => {
                     let cacheable = self.cfg.prefix_entries > 0
-                        && cache.split_prefill_exact()
+                        && cache.caps().split_prefill_exact
                         && ids.len() >= self.cfg.prefix_min_tokens;
                     let mut m = self.lock_metrics();
                     m.prefix_misses += 1;
@@ -1266,7 +1311,7 @@ impl Batcher {
                 };
                 let done = state.len();
                 // non-splittable backends must see the whole prompt at once
-                let cap = if sess.cache.split_prefill_exact() && !rush {
+                let cap = if sess.cache.caps().split_prefill_exact && !rush {
                     chunk_cap
                 } else {
                     usize::MAX
@@ -1872,10 +1917,11 @@ impl Batcher {
             return Ok(None);
         };
         let snap = decode_session_snapshot(&blob)?;
+        // `ctx.runtime` re-attaches the pool and spill store; the restore
+        // below keeps whatever coefficient mode the snapshot was recorded
+        // under (build_cache only retargets *empty* caches)
         let mut cache = build_cache(&snap.method, &self.ctx)
             .map_err(|e| format!("snapshot method '{}': {e}", snap.method))?;
-        cache.set_pool(self.pool.clone());
-        cache.set_spill_store(store);
         cache.restore_hibernated(&snap.cache_blob)?;
         if cache.tokens() != snap.pos {
             return Err(format!(
@@ -2153,6 +2199,52 @@ mod tests {
                 .collect()
         };
         assert_eq!(serve(true), serve(false));
+    }
+
+    #[test]
+    fn dict_refresh_folds_adaptive_overlays_without_changing_streams() {
+        // `--dict-refresh 1` folds every adaptive session's overlay atoms
+        // into its universal dictionaries each round. The fold keeps the
+        // atoms in selection order, so the served token streams must be
+        // identical to a run that never refreshes — the only observable
+        // difference is the metrics counter. The overlay cap is set high
+        // enough that it never binds within the horizon; otherwise a
+        // re-armed budget could legitimately change later encodes.
+        let run = |refresh: u64| -> (Vec<String>, u64) {
+            let engine = Arc::new(Engine::new(tiny_weights(13)));
+            // tiny universal dictionaries → residuals routinely exceed the
+            // threshold and the overlays actually grow
+            let dicts = Some(tiny_dicts(engine.shape(), 8));
+            let cfg = BatcherConfig {
+                default_method: "lexico:s=2,nb=4,adaptive=4096:0.05".into(),
+                dict_refresh: refresh,
+                prefix_entries: 0,
+                ..Default::default()
+            };
+            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            let mut b = Batcher::new(engine, dicts, cfg, metrics.clone());
+            let mut replies = Vec::new();
+            for (i, p) in ["1+2=", "a=3;b=a+4;b?", "9*9="].iter().enumerate() {
+                let (job, rrx) = job_with(Request::greedy(i as u64, p, 8, ""));
+                b.enqueue(job);
+                replies.push(rrx);
+            }
+            run_to_completion(&mut b, 300);
+            let texts = replies
+                .into_iter()
+                .map(|r| {
+                    let resp = r.recv_timeout(Duration::from_secs(30)).unwrap();
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    resp.text
+                })
+                .collect();
+            (texts, metrics.lock().unwrap().dict_refresh_atoms)
+        };
+        let (base, folded_off) = run(0);
+        assert_eq!(folded_off, 0, "refresh disabled must fold nothing");
+        let (refreshed, folded) = run(1);
+        assert_eq!(refreshed, base, "online dictionary refresh changed decode output");
+        assert!(folded > 0, "refresh pass never folded an overlay atom");
     }
 
     #[test]

@@ -60,6 +60,9 @@ pub struct Metrics {
     /// bytes held by realized dictionary Gram caches (gauge; nonzero only
     /// once some cache opts into the precomputed-Gram OMP tier)
     pub gram_bytes: f64,
+    /// adaptive-overlay atoms folded into sessions' universal dictionaries
+    /// by the online refresh pass (`--dict-refresh N`)
+    pub dict_refresh_atoms: u64,
     /// named sessions parked for a later `resume` (gauge)
     pub hibernated_sessions: u64,
     /// CSR pages written to the spill store over the server's lifetime
@@ -133,6 +136,9 @@ impl Metrics {
         }
         if self.http_busy > 0 {
             s += &format!("\nhttp    : {} busy rejections", self.http_busy);
+        }
+        if self.dict_refresh_atoms > 0 {
+            s += &format!("\nrefresh : {} dictionary atoms folded", self.dict_refresh_atoms);
         }
         if self.spilled_pages + self.faults + self.hibernated_sessions + self.resumed > 0 {
             s += &format!(
@@ -229,6 +235,7 @@ mod tests {
         m.kv_used_bytes = 4096.0;
         m.tenants = vec![("pro".into(), 2, 2048.0), ("free".into(), 1, 1024.0)];
         m.gram_bytes = 65536.0;
+        m.dict_refresh_atoms = 5;
         m.hibernated_sessions = 2;
         m.resumed = 1;
         m.spilled_pages = 6;
@@ -243,6 +250,7 @@ mod tests {
         );
         assert!(r.contains("tenants : pro=seats:2,kv:2.0KiB free=seats:1,kv:1.0KiB"), "{r}");
         assert!(r.contains("3 busy rejections"), "{r}");
+        assert!(r.contains("5 dictionary atoms folded"), "{r}");
         assert!(r.contains("7 tokens streamed, 5 clamped"), "{r}");
         assert!(
             r.contains("hibernated=2 resumed=1 spilled_pages=6 spill_bytes=3.0 KiB faults=4"),

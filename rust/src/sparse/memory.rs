@@ -5,6 +5,8 @@
 //! head per layer. "KV size %" = compressed bytes / baseline bytes at the
 //! end of generation, exactly as the paper reports it.
 
+use super::CoefMode;
+
 /// Bytes of one full-precision (FP16) K or V vector.
 pub fn full_vector_bytes(head_dim: usize) -> usize {
     2 * head_dim
@@ -12,19 +14,20 @@ pub fn full_vector_bytes(head_dim: usize) -> usize {
 
 /// Paper formula: CSR row of sparsity `s` with FP8 coefficients costs
 /// `3s+2` bytes (s values, 2s u16 indices, 2-byte offset); FP16 costs
-/// `4s+2`.
-pub fn csr_row_bytes(s: usize, fp16_coefs: bool) -> usize {
-    if fp16_coefs {
-        4 * s + 2
-    } else {
-        3 * s + 2
+/// `4s+2`; the sign tier costs `2s + ⌈s/8⌉ + 4` (2s indices, the packed
+/// sign bitmap, 2-byte offset, 2-byte f16 row scale).
+pub fn csr_row_bytes(s: usize, mode: CoefMode) -> usize {
+    match mode {
+        CoefMode::Fp8 => 3 * s + 2,
+        CoefMode::Fp16 => 4 * s + 2,
+        CoefMode::Sign => 2 * s + s.div_ceil(8) + 4,
     }
 }
 
 /// KV-size ratio of a pure-CSR cache (no buffer), as in §3.4:
-/// (3s+2) / (2m)  ≈ 1.17·s% at m=128.
-pub fn csr_ratio(s: usize, head_dim: usize, fp16_coefs: bool) -> f64 {
-    csr_row_bytes(s, fp16_coefs) as f64 / full_vector_bytes(head_dim) as f64
+/// (3s+2) / (2m)  ≈ 1.17·s% at m=128 for FP8.
+pub fn csr_ratio(s: usize, head_dim: usize, mode: CoefMode) -> f64 {
+    csr_row_bytes(s, mode) as f64 / full_vector_bytes(head_dim) as f64
 }
 
 /// Group-quantization cost: `bits` per element plus an FP16 scale and FP16
@@ -58,17 +61,31 @@ mod tests {
     #[test]
     fn paper_formula_at_m128() {
         // Paper: ~1.17·s % at head_dim 128 (e.g. 37.5% for s=32).
-        let r = csr_ratio(32, 128, false);
+        let r = csr_ratio(32, 128, CoefMode::Fp8);
         assert!((r - 0.3828).abs() < 1e-3, "{r}"); // (3*32+2)/256
-        let r4 = csr_ratio(4, 128, false);
+        let r4 = csr_ratio(4, 128, CoefMode::Fp8);
         assert!((r4 - 14.0 / 256.0).abs() < 1e-9);
     }
 
     #[test]
     fn our_m32_operating_points() {
-        assert!((csr_ratio(2, 32, false) - 0.125).abs() < 1e-9);
-        assert!((csr_ratio(4, 32, false) - 0.21875).abs() < 1e-9);
-        assert!((csr_ratio(8, 32, false) - 0.40625).abs() < 1e-9);
+        assert!((csr_ratio(2, 32, CoefMode::Fp8) - 0.125).abs() < 1e-9);
+        assert!((csr_ratio(4, 32, CoefMode::Fp8) - 0.21875).abs() < 1e-9);
+        assert!((csr_ratio(8, 32, CoefMode::Fp8) - 0.40625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sign_rows_store_at_most_two_bits_per_coef() {
+        // s=8 at m=32: (16 + 1 + 4)/64 — below a third of the FP8 row
+        assert_eq!(csr_row_bytes(8, CoefMode::Sign), 21);
+        assert_eq!(csr_row_bytes(4, CoefMode::Sign), 13);
+        for s in [2usize, 4, 6, 8, 16, 32] {
+            assert!(CoefMode::Sign.bits_per_coef(s) <= 2.0 + 1e-12, "s={s}");
+            assert!(
+                csr_row_bytes(s, CoefMode::Sign) < csr_row_bytes(s, CoefMode::Fp8),
+                "s={s}"
+            );
+        }
     }
 
     #[test]

@@ -1,64 +1,146 @@
 //! Sparse KV-cache storage: CSR slabs (struct-of-arrays), CSR rows,
-//! coefficient precision, byte accounting.
+//! coefficient modes, byte accounting.
 //!
 //! The hot-path storage type is [`CsrSlab`]: one contiguous `idx` array,
-//! one contiguous `coef_bits` array, and a row-offset array — so scoring
-//! and bin-accumulation over thousands of compressed tokens are linear
-//! sweeps over three flat buffers instead of a pointer chase through
+//! flat coefficient storage, and a row-offset array — so scoring and
+//! bin-accumulation over thousands of compressed tokens are linear
+//! sweeps over flat buffers instead of a pointer chase through
 //! per-token `Vec`s. [`CsrRow`] remains as the one-row interchange /
 //! reference type (the property suites check the slab sweeps against a
 //! row-by-row reference built from it).
+//!
+//! Coefficient storage comes in three modes ([`CoefMode`]): byte-wide
+//! FP8/FP16 words, and the 1-bit *sign* tier where a row's coefficients
+//! are `±α` for one per-row f16 scale `α` — a packed sign bitmap plus
+//! one scale word (DESIGN.md §14).
 
 pub mod fp8;
 pub mod memory;
 
 use fp8::{e4m3_lut, e4m3_to_f32, f16_to_f32, f32_to_e4m3, f32_to_f16};
 
-/// Precision of the stored CSR coefficients.
+/// Storage mode of the CSR coefficients.
 ///
 /// The paper's main configuration is FP8 (E4M3); the ablations in
-/// Tables 4/5/9/10 use FP16 coefficients.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum CoefPrecision {
+/// Tables 4/5/9/10 use FP16 coefficients. `Sign` is the extreme-
+/// compression tier: each coefficient collapses to one bit of sign
+/// against a shared per-row f16 magnitude `α` (the mean |coefficient|,
+/// folded in by the encoder's sign-finalize pass — `omp::sign_finalize`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CoefMode {
+    #[default]
     Fp8,
     Fp16,
+    Sign,
 }
 
-impl CoefPrecision {
+/// Former name of [`CoefMode`], kept so `precision`-era call sites and
+/// configs keep compiling unchanged.
+pub type CoefPrecision = CoefMode;
+
+impl CoefMode {
+    /// Bytes per stored coefficient *word* for the byte-wide modes.
+    /// `Sign` packs bits, not bytes, and returns 0 here — its exact
+    /// accounting lives in [`CsrRow::bytes`]/[`CsrSlab::bytes`].
     pub fn bytes_per_coef(self) -> usize {
         match self {
-            CoefPrecision::Fp8 => 1,
-            CoefPrecision::Fp16 => 2,
+            CoefMode::Fp8 => 1,
+            CoefMode::Fp16 => 2,
+            CoefMode::Sign => 0,
         }
     }
+
+    /// Stored bits per coefficient, counting the sign tier's packed
+    /// bitmap byte (so s=4 rows pay 2 bits/coef, s≥8 rows 1 bit/coef);
+    /// the per-row scale word is row overhead, like the CSR offset.
+    pub fn bits_per_coef(self, s: usize) -> f64 {
+        match self {
+            CoefMode::Fp8 => 8.0,
+            CoefMode::Fp16 => 16.0,
+            CoefMode::Sign => {
+                if s == 0 {
+                    0.0
+                } else {
+                    8.0 * s.div_ceil(8) as f64 / s as f64
+                }
+            }
+        }
+    }
+
+    /// Parse a CLI/env spelling (`fp8` | `fp16` | `sign`). This is the
+    /// one spelling table shared by `--coef-mode`, `LEXICO_COEF_MODE`
+    /// and the method-spec `sign`/`fp16` flags.
+    pub fn parse(s: &str) -> Option<CoefMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fp8" => Some(CoefMode::Fp8),
+            "fp16" => Some(CoefMode::Fp16),
+            "sign" => Some(CoefMode::Sign),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CoefMode::Fp8 => "fp8",
+            CoefMode::Fp16 => "fp16",
+            CoefMode::Sign => "sign",
+        }
+    }
+}
+
+/// The shared per-row sign-tier scale: f16(mean |v|). Computed with an
+/// ascending-order f32 sum so it is deterministic, and idempotent — a
+/// row already holding `±α` values re-derives exactly the same bits
+/// (the n-fold sum of one f16 value and the division by n are both
+/// exact in f32, see `omp::sign_finalize`).
+fn sign_alpha_bits(vals: &[f32]) -> u16 {
+    if vals.is_empty() {
+        return 0;
+    }
+    let mut sum = 0.0f32;
+    for &v in vals {
+        sum += v.abs();
+    }
+    f32_to_f16(sum / vals.len() as f32)
 }
 
 /// One compressed vector: `s` (index, coefficient) pairs.
 ///
 /// Storage-exact representation: indices are u16 (dictionary size ≤ 65536),
-/// coefficients are stored already *quantized through* the chosen precision
+/// coefficients are stored already *quantized through* the chosen mode
 /// so that every downstream computation sees exactly what a bit-packed
 /// implementation would see. Byte accounting (paper §3.4): 3s+2 for FP8
-/// (s values + 2s indices + 2-byte CSR offset), 4s+2 for FP16.
+/// (s values + 2s indices + 2-byte CSR offset), 4s+2 for FP16, and
+/// 2s + ⌈s/8⌉ + 4 for the sign tier (2s indices + the packed sign
+/// bitmap + 2-byte offset + 2-byte f16 row scale).
 #[derive(Clone, Debug, Default)]
 pub struct CsrRow {
     pub idx: Vec<u16>,
-    /// Quantized coefficient *bits*: low byte = e4m3, or full u16 = f16.
+    /// Fp8/Fp16: quantized coefficient *bits* (low byte = e4m3, or full
+    /// u16 = f16). Sign: one word per pair, 0 = `+α`, 1 = `−α`.
     pub coef_bits: Vec<u16>,
-    pub precision_fp16: bool,
+    /// Sign mode only: the shared row magnitude `α` as f16 bits.
+    pub scale_bits: u16,
+    pub mode: CoefMode,
 }
 
 impl CsrRow {
-    pub fn from_f32(idx: &[u16], vals: &[f32], prec: CoefPrecision) -> Self {
+    pub fn from_f32(idx: &[u16], vals: &[f32], mode: CoefMode) -> Self {
         debug_assert_eq!(idx.len(), vals.len());
-        let coef_bits = match prec {
-            CoefPrecision::Fp8 => vals.iter().map(|&v| f32_to_e4m3(v) as u16).collect(),
-            CoefPrecision::Fp16 => vals.iter().map(|&v| f32_to_f16(v)).collect(),
+        let mut scale_bits = 0u16;
+        let coef_bits = match mode {
+            CoefMode::Fp8 => vals.iter().map(|&v| f32_to_e4m3(v) as u16).collect(),
+            CoefMode::Fp16 => vals.iter().map(|&v| f32_to_f16(v)).collect(),
+            CoefMode::Sign => {
+                scale_bits = sign_alpha_bits(vals);
+                vals.iter().map(|&v| v.is_sign_negative() as u16).collect()
+            }
         };
         CsrRow {
             idx: idx.to_vec(),
             coef_bits,
-            precision_fp16: prec == CoefPrecision::Fp16,
+            scale_bits,
+            mode,
         }
     }
 
@@ -69,10 +151,17 @@ impl CsrRow {
     /// Decode coefficient `j` back to f32.
     #[inline]
     pub fn coef(&self, j: usize) -> f32 {
-        if self.precision_fp16 {
-            f16_to_f32(self.coef_bits[j])
-        } else {
-            e4m3_to_f32(self.coef_bits[j] as u8)
+        match self.mode {
+            CoefMode::Fp16 => f16_to_f32(self.coef_bits[j]),
+            CoefMode::Fp8 => e4m3_to_f32(self.coef_bits[j] as u8),
+            CoefMode::Sign => {
+                let a = f16_to_f32(self.scale_bits);
+                if self.coef_bits[j] != 0 {
+                    -a
+                } else {
+                    a
+                }
+            }
         }
     }
 
@@ -86,56 +175,87 @@ impl CsrRow {
         }
     }
 
-    /// Exact storage bytes for this row (paper §3.4 accounting):
-    /// coefficient bytes + 2 bytes/index + 2-byte CSR row offset.
+    /// Exact storage bytes for this row (paper §3.4 accounting): the
+    /// mode's coefficient payload + 2 bytes/index + 2-byte CSR row
+    /// offset (+ the 2-byte row scale in sign mode).
     pub fn bytes(&self) -> usize {
-        let per = if self.precision_fp16 { 2 } else { 1 };
-        self.nnz() * (per + 2) + 2
+        let s = self.nnz();
+        match self.mode {
+            CoefMode::Fp8 => s * 3 + 2,
+            CoefMode::Fp16 => s * 4 + 2,
+            CoefMode::Sign => s * 2 + s.div_ceil(8) + 4,
+        }
     }
 }
 
 /// Struct-of-arrays slab of CSR rows — the flat storage the compressed
 /// attention hot path sweeps (DESIGN.md §8).
 ///
-/// Layout: `idx`/`coef_bits` hold the concatenated (index, coefficient)
-/// pairs of every row; `row_off` (length `rows + 1`, starting at 0) marks
-/// each row's span, so row `r` is `idx[row_off[r]..row_off[r+1]]`.
-/// Coefficients are stored *already quantized through* the slab's
-/// precision, exactly like [`CsrRow`]; byte accounting is O(1) from the
-/// aggregate counts (`nnz·(per+2) + rows·2`, the paper's §3.4 formula
-/// summed over rows).
+/// Layout: `idx` holds the concatenated indices of every row; `row_off`
+/// (length `rows + 1`, starting at 0) marks each row's span, so row `r`
+/// is `idx[row_off[r]..row_off[r+1]]`. In the byte-wide modes the
+/// coefficients sit in `coef_bits`, parallel to `idx`. In sign mode
+/// `coef_bits` stays empty: each row owns a byte-aligned span of the
+/// packed `signs` bitmap (bit j of the row = sign of its j-th pair,
+/// 1 = negative, tracked by `sign_off`) plus one f16 `row_scale` word.
+/// Coefficients are stored *already quantized through* the slab's mode,
+/// exactly like [`CsrRow`]; byte accounting is O(1) from the aggregate
+/// counts and equals the paper's §3.4 formula summed over rows.
 #[derive(Clone, Debug)]
 pub struct CsrSlab {
     idx: Vec<u16>,
-    /// quantized coefficient bits: low byte = e4m3, or full u16 = f16
+    /// byte-wide modes: quantized coefficient bits (low byte = e4m3, or
+    /// full u16 = f16); empty in sign mode
     coef_bits: Vec<u16>,
+    /// sign mode: packed per-row byte-aligned sign bitmaps
+    signs: Vec<u8>,
+    /// sign mode: row r's bitmap spans `signs[sign_off[r]..sign_off[r+1]]`
+    sign_off: Vec<u32>,
+    /// sign mode: per-row shared magnitude `α` as f16 bits
+    row_scale: Vec<u16>,
     /// row r spans `row_off[r]..row_off[r+1]`; always starts with 0
     row_off: Vec<u32>,
-    precision_fp16: bool,
+    mode: CoefMode,
 }
 
 impl Default for CsrSlab {
     fn default() -> Self {
-        CsrSlab::new(CoefPrecision::Fp8)
+        CsrSlab::new(CoefMode::Fp8)
     }
 }
 
+fn validate_row_off(row_off: &[u32], nnz: usize) -> Result<(), String> {
+    if row_off.first() != Some(&0) {
+        return Err("csr: row_off must start at 0".into());
+    }
+    if row_off.windows(2).any(|w| w[0] > w[1]) {
+        return Err("csr: row_off must be monotone non-decreasing".into());
+    }
+    if *row_off.last().unwrap() as usize != nnz {
+        return Err(format!(
+            "csr: row_off end {} != nnz {}",
+            row_off.last().unwrap(),
+            nnz
+        ));
+    }
+    Ok(())
+}
+
 impl CsrSlab {
-    pub fn new(prec: CoefPrecision) -> Self {
+    pub fn new(mode: CoefMode) -> Self {
         CsrSlab {
             idx: Vec::new(),
             coef_bits: Vec::new(),
+            signs: Vec::new(),
+            sign_off: vec![0],
+            row_scale: Vec::new(),
             row_off: vec![0],
-            precision_fp16: prec == CoefPrecision::Fp16,
+            mode,
         }
     }
 
-    pub fn precision(&self) -> CoefPrecision {
-        if self.precision_fp16 {
-            CoefPrecision::Fp16
-        } else {
-            CoefPrecision::Fp8
-        }
+    pub fn precision(&self) -> CoefMode {
+        self.mode
     }
 
     /// Number of rows (compressed tokens) in the slab.
@@ -154,81 +274,179 @@ impl CsrSlab {
         *self.row_off.last().unwrap() as usize
     }
 
-    /// Append one row, quantizing `vals` through the slab's precision.
+    /// Append one row, quantizing `vals` through the slab's mode. In
+    /// sign mode this derives the row scale `α = f16(mean |v|)` and
+    /// packs one sign bit per pair — idempotent on already-finalized
+    /// `±α` rows (same `α` bits re-derived, same bitmap).
     pub fn push_f32(&mut self, idx: &[u16], vals: &[f32]) {
         debug_assert_eq!(idx.len(), vals.len());
         self.idx.extend_from_slice(idx);
-        if self.precision_fp16 {
-            self.coef_bits.extend(vals.iter().map(|&v| f32_to_f16(v)));
-        } else {
-            self.coef_bits.extend(vals.iter().map(|&v| f32_to_e4m3(v) as u16));
+        match self.mode {
+            CoefMode::Fp16 => self.coef_bits.extend(vals.iter().map(|&v| f32_to_f16(v))),
+            CoefMode::Fp8 => self
+                .coef_bits
+                .extend(vals.iter().map(|&v| f32_to_e4m3(v) as u16)),
+            CoefMode::Sign => {
+                self.row_scale.push(sign_alpha_bits(vals));
+                let base = self.signs.len();
+                self.signs.resize(base + vals.len().div_ceil(8), 0u8);
+                for (j, &v) in vals.iter().enumerate() {
+                    if v.is_sign_negative() {
+                        self.signs[base + j / 8] |= 1 << (j % 8);
+                    }
+                }
+                self.sign_off.push(self.signs.len() as u32);
+            }
         }
         self.row_off.push(self.idx.len() as u32);
     }
 
-    /// Append one already-quantized row (bits in this slab's precision).
+    /// Append one already-quantized row (bits in this slab's byte-wide
+    /// mode). Sign rows carry per-row state and go through
+    /// [`Self::push_f32`] or [`Self::push_sign_row`].
     pub fn push_bits(&mut self, idx: &[u16], bits: &[u16]) {
+        assert!(
+            self.mode != CoefMode::Sign,
+            "push_bits is for byte-wide coefficient modes"
+        );
         debug_assert_eq!(idx.len(), bits.len());
         self.idx.extend_from_slice(idx);
         self.coef_bits.extend_from_slice(bits);
         self.row_off.push(self.idx.len() as u32);
     }
 
-    /// Move the contents out, leaving an empty slab of the same precision
+    /// Append one already-finalized sign row: indices, the row's `α`
+    /// bits, and one negative-flag per pair.
+    pub fn push_sign_row(&mut self, idx: &[u16], scale_bits: u16, neg: &[bool]) {
+        assert!(self.mode == CoefMode::Sign, "push_sign_row needs a sign slab");
+        debug_assert_eq!(idx.len(), neg.len());
+        self.idx.extend_from_slice(idx);
+        self.row_scale.push(scale_bits);
+        let base = self.signs.len();
+        self.signs.resize(base + idx.len().div_ceil(8), 0u8);
+        for (j, &n) in neg.iter().enumerate() {
+            if n {
+                self.signs[base + j / 8] |= 1 << (j % 8);
+            }
+        }
+        self.sign_off.push(self.signs.len() as u32);
+        self.row_off.push(self.idx.len() as u32);
+    }
+
+    /// Move the contents out, leaving an empty slab of the same mode
     /// (the page-sealing primitive).
     pub fn take(&mut self) -> CsrSlab {
-        std::mem::replace(self, CsrSlab::new(self.precision()))
+        std::mem::replace(self, CsrSlab::new(self.mode))
     }
 
-    /// Row `r` as (indices, quantized bits).
+    /// Row `r` as (indices, quantized bits). In sign mode the bits
+    /// slice is empty — use [`Self::sign_row`] for the bitmap view.
     pub fn row(&self, r: usize) -> (&[u16], &[u16]) {
         let (s, e) = (self.row_off[r] as usize, self.row_off[r + 1] as usize);
-        (&self.idx[s..e], &self.coef_bits[s..e])
+        match self.mode {
+            CoefMode::Sign => (&self.idx[s..e], &self.coef_bits[..]),
+            _ => (&self.idx[s..e], &self.coef_bits[s..e]),
+        }
     }
 
-    /// Decode one stored coefficient word to f32.
+    /// Sign-mode row view: (indices, byte-aligned sign bitmap, `α` bits).
+    pub fn sign_row(&self, r: usize) -> (&[u16], &[u8], u16) {
+        assert!(self.mode == CoefMode::Sign, "sign_row needs a sign slab");
+        let (s, e) = (self.row_off[r] as usize, self.row_off[r + 1] as usize);
+        let (bs, be) = (self.sign_off[r] as usize, self.sign_off[r + 1] as usize);
+        (&self.idx[s..e], &self.signs[bs..be], self.row_scale[r])
+    }
+
+    /// Decode one stored coefficient word to f32 (byte-wide modes).
     #[inline]
     pub fn decode(&self, bits: u16) -> f32 {
-        if self.precision_fp16 {
-            f16_to_f32(bits)
-        } else {
-            e4m3_to_f32(bits as u8)
+        match self.mode {
+            CoefMode::Fp16 => f16_to_f32(bits),
+            CoefMode::Fp8 => e4m3_to_f32(bits as u8),
+            CoefMode::Sign => unreachable!("sign slabs decode rows via sign_row/row_values"),
+        }
+    }
+
+    /// Decode all of row `r`'s coefficients into `out` (any mode).
+    pub fn row_values(&self, r: usize, out: &mut Vec<f32>) {
+        out.clear();
+        let (s, e) = (self.row_off[r] as usize, self.row_off[r + 1] as usize);
+        match self.mode {
+            CoefMode::Fp16 => out.extend(self.coef_bits[s..e].iter().map(|&b| f16_to_f32(b))),
+            CoefMode::Fp8 => {
+                out.extend(self.coef_bits[s..e].iter().map(|&b| e4m3_to_f32(b as u8)))
+            }
+            CoefMode::Sign => {
+                let sb = self.sign_off[r] as usize;
+                let alpha = f16_to_f32(self.row_scale[r]);
+                for j in 0..e - s {
+                    let neg = self.signs[sb + j / 8] >> (j % 8) & 1 != 0;
+                    out.push(if neg { -alpha } else { alpha });
+                }
+            }
         }
     }
 
     /// Exact storage bytes (paper §3.4 summed over rows) — O(1).
     pub fn bytes(&self) -> usize {
-        let per = if self.precision_fp16 { 2 } else { 1 };
-        self.nnz() * (per + 2) + self.rows() * 2
+        match self.mode {
+            CoefMode::Fp8 => self.nnz() * 3 + self.rows() * 2,
+            CoefMode::Fp16 => self.nnz() * 4 + self.rows() * 2,
+            // 2s idx + bitmap bytes + (2 offset + 2 scale) per row
+            CoefMode::Sign => self.nnz() * 2 + self.signs.len() + self.rows() * 4,
+        }
     }
 
     /// `out[r - lo] = scale · Σ_j qd[idx[j]] · coef[j]` for rows
     /// `lo..hi` — the split-computation score sweep (`q·D` is already in
     /// `qd`). Per row the products accumulate in ascending storage order
     /// into a single f32 accumulator, identical to the row-iterator
-    /// reference, so sub-range calls (pool shards) compose bitwise.
+    /// reference, so sub-range calls (pool shards) compose bitwise. The
+    /// sign tier factors the shared magnitude out of the loop — signed
+    /// sums of `qd` gathers, then `(sum · α) · scale` — and IEEE
+    /// negation is exact, so this too is one canonical reduction order.
     pub fn score_rows(&self, lo: usize, hi: usize, qd: &[f32], scale: f32, out: &mut [f32]) {
         debug_assert!(hi <= self.rows() && lo <= hi);
         debug_assert!(out.len() >= hi - lo);
         let offs = &self.row_off[lo..=hi];
-        if self.precision_fp16 {
-            for (r, w) in offs.windows(2).enumerate() {
-                let (s, e) = (w[0] as usize, w[1] as usize);
-                let mut sc = 0.0f32;
-                for j in s..e {
-                    sc += qd[self.idx[j] as usize] * f16_to_f32(self.coef_bits[j]);
+        match self.mode {
+            CoefMode::Fp16 => {
+                for (r, w) in offs.windows(2).enumerate() {
+                    let (s, e) = (w[0] as usize, w[1] as usize);
+                    let mut sc = 0.0f32;
+                    for j in s..e {
+                        sc += qd[self.idx[j] as usize] * f16_to_f32(self.coef_bits[j]);
+                    }
+                    out[r] = sc * scale;
                 }
-                out[r] = sc * scale;
             }
-        } else {
-            let lut = e4m3_lut();
-            for (r, w) in offs.windows(2).enumerate() {
-                let (s, e) = (w[0] as usize, w[1] as usize);
-                let mut sc = 0.0f32;
-                for j in s..e {
-                    sc += qd[self.idx[j] as usize] * lut[(self.coef_bits[j] & 0xff) as usize];
+            CoefMode::Fp8 => {
+                let lut = e4m3_lut();
+                for (r, w) in offs.windows(2).enumerate() {
+                    let (s, e) = (w[0] as usize, w[1] as usize);
+                    let mut sc = 0.0f32;
+                    for j in s..e {
+                        sc += qd[self.idx[j] as usize] * lut[(self.coef_bits[j] & 0xff) as usize];
+                    }
+                    out[r] = sc * scale;
                 }
-                out[r] = sc * scale;
+            }
+            CoefMode::Sign => {
+                for (r, w) in offs.windows(2).enumerate() {
+                    let (s, e) = (w[0] as usize, w[1] as usize);
+                    let sb = self.sign_off[lo + r] as usize;
+                    let mut sc = 0.0f32;
+                    for j in s..e {
+                        let q = qd[self.idx[j] as usize];
+                        if self.signs[sb + (j - s) / 8] >> ((j - s) % 8) & 1 != 0 {
+                            sc -= q;
+                        } else {
+                            sc += q;
+                        }
+                    }
+                    let alpha = f16_to_f32(self.row_scale[lo + r]);
+                    out[r] = (sc * alpha) * scale;
+                }
             }
         }
     }
@@ -236,47 +454,77 @@ impl CsrSlab {
     /// `z[idx[j]] += weights[r] · coef[j]` for every row `r` — the value
     /// side's dictionary-bin accumulation, as one linear sweep. Rows are
     /// processed in storage order with each row's pairs in ascending
-    /// order, matching the row-iterator reference exactly.
+    /// order, matching the row-iterator reference exactly. The sign tier
+    /// folds the magnitude once per row (`wrα = weights[r] · α`) and
+    /// adds/subtracts that product per bin — the same value every
+    /// per-element path would produce, in the same order.
     pub fn accumulate_bins(&self, weights: &[f32], z: &mut [f32]) {
         debug_assert!(weights.len() >= self.rows());
-        if self.precision_fp16 {
-            for (r, w) in self.row_off.windows(2).enumerate() {
-                let (s, e) = (w[0] as usize, w[1] as usize);
-                let wr = weights[r];
-                for j in s..e {
-                    z[self.idx[j] as usize] += wr * f16_to_f32(self.coef_bits[j]);
+        match self.mode {
+            CoefMode::Fp16 => {
+                for (r, w) in self.row_off.windows(2).enumerate() {
+                    let (s, e) = (w[0] as usize, w[1] as usize);
+                    let wr = weights[r];
+                    for j in s..e {
+                        z[self.idx[j] as usize] += wr * f16_to_f32(self.coef_bits[j]);
+                    }
                 }
             }
-        } else {
-            let lut = e4m3_lut();
-            for (r, w) in self.row_off.windows(2).enumerate() {
-                let (s, e) = (w[0] as usize, w[1] as usize);
-                let wr = weights[r];
-                for j in s..e {
-                    z[self.idx[j] as usize] += wr * lut[(self.coef_bits[j] & 0xff) as usize];
+            CoefMode::Fp8 => {
+                let lut = e4m3_lut();
+                for (r, w) in self.row_off.windows(2).enumerate() {
+                    let (s, e) = (w[0] as usize, w[1] as usize);
+                    let wr = weights[r];
+                    for j in s..e {
+                        z[self.idx[j] as usize] += wr * lut[(self.coef_bits[j] & 0xff) as usize];
+                    }
+                }
+            }
+            CoefMode::Sign => {
+                for (r, w) in self.row_off.windows(2).enumerate() {
+                    let (s, e) = (w[0] as usize, w[1] as usize);
+                    let sb = self.sign_off[r] as usize;
+                    let wra = weights[r] * f16_to_f32(self.row_scale[r]);
+                    for j in s..e {
+                        let bin = self.idx[j] as usize;
+                        if self.signs[sb + (j - s) / 8] >> ((j - s) % 8) & 1 != 0 {
+                            z[bin] -= wra;
+                        } else {
+                            z[bin] += wra;
+                        }
+                    }
                 }
             }
         }
     }
 
     /// Borrow the three flat storage arrays `(idx, coef_bits, row_off)` —
-    /// the serialization view used by the page store (`store::page`).
+    /// the serialization view used by the page store (`store::page`) for
+    /// the byte-wide modes.
     pub fn raw_parts(&self) -> (&[u16], &[u16], &[u32]) {
         (&self.idx, &self.coef_bits, &self.row_off)
     }
 
-    /// Rebuild a slab from its flat arrays, validating the CSR invariants
-    /// (`row_off` starts at 0, is monotone, and its last entry equals the
-    /// pair-array length). This is the deserialization entry point: a slab
-    /// built from a well-formed page file is field-for-field identical to
-    /// the slab that was serialized, so every downstream sweep is bitwise
-    /// unchanged.
+    /// Sign-mode serialization view: `(idx, signs, row_scale, row_off)`.
+    pub fn sign_parts(&self) -> (&[u16], &[u8], &[u16], &[u32]) {
+        (&self.idx, &self.signs, &self.row_scale, &self.row_off)
+    }
+
+    /// Rebuild a byte-wide slab from its flat arrays, validating the CSR
+    /// invariants (`row_off` starts at 0, is monotone, and its last entry
+    /// equals the pair-array length). This is the deserialization entry
+    /// point: a slab built from a well-formed page file is
+    /// field-for-field identical to the slab that was serialized, so
+    /// every downstream sweep is bitwise unchanged.
     pub fn from_raw_parts(
         idx: Vec<u16>,
         coef_bits: Vec<u16>,
         row_off: Vec<u32>,
-        prec: CoefPrecision,
+        mode: CoefMode,
     ) -> Result<CsrSlab, String> {
+        if mode == CoefMode::Sign {
+            return Err("csr: sign slabs deserialize via from_sign_parts".into());
+        }
         if idx.len() != coef_bits.len() {
             return Err(format!(
                 "csr: idx/coef length mismatch ({} vs {})",
@@ -284,34 +532,87 @@ impl CsrSlab {
                 coef_bits.len()
             ));
         }
-        if row_off.first() != Some(&0) {
+        if row_off.is_empty() {
             return Err("csr: row_off must start at 0".into());
         }
-        if row_off.windows(2).any(|w| w[0] > w[1]) {
-            return Err("csr: row_off must be monotone non-decreasing".into());
+        validate_row_off(&row_off, idx.len())?;
+        Ok(CsrSlab {
+            idx,
+            coef_bits,
+            signs: Vec::new(),
+            sign_off: vec![0],
+            row_scale: Vec::new(),
+            row_off,
+            mode,
+        })
+    }
+
+    /// Rebuild a sign slab from its flat arrays. `sign_off` is derived
+    /// from `row_off` (each row's bitmap is byte-aligned), so a
+    /// round-trip through [`Self::sign_parts`] is field-for-field exact.
+    pub fn from_sign_parts(
+        idx: Vec<u16>,
+        signs: Vec<u8>,
+        row_scale: Vec<u16>,
+        row_off: Vec<u32>,
+    ) -> Result<CsrSlab, String> {
+        if row_off.is_empty() {
+            return Err("csr: row_off must start at 0".into());
         }
-        if *row_off.last().unwrap() as usize != idx.len() {
+        validate_row_off(&row_off, idx.len())?;
+        let rows = row_off.len() - 1;
+        if row_scale.len() != rows {
             return Err(format!(
-                "csr: row_off end {} != nnz {}",
-                row_off.last().unwrap(),
-                idx.len()
+                "csr: {} row scales for {} rows",
+                row_scale.len(),
+                rows
+            ));
+        }
+        let mut sign_off = Vec::with_capacity(rows + 1);
+        sign_off.push(0u32);
+        let mut total = 0usize;
+        for w in row_off.windows(2) {
+            total += ((w[1] - w[0]) as usize).div_ceil(8);
+            sign_off.push(total as u32);
+        }
+        if signs.len() != total {
+            return Err(format!(
+                "csr: sign bitmap is {} bytes, expected {}",
+                signs.len(),
+                total
             ));
         }
         Ok(CsrSlab {
             idx,
-            coef_bits,
+            coef_bits: Vec::new(),
+            signs,
+            sign_off,
+            row_scale,
             row_off,
-            precision_fp16: prec == CoefPrecision::Fp16,
+            mode: CoefMode::Sign,
         })
     }
 
     /// Cold-tier recompression: keep at most `keep` atoms per row, dropping
     /// the lowest-|coefficient| ones first (ties broken toward keeping the
     /// earlier storage position). Survivors stay in their original storage
-    /// order, so the result is a valid, smaller slab of the same precision.
-    /// Lossy by construction — never applied inside the bitwise contract.
+    /// order, so the result is a valid, smaller slab of the same mode.
+    /// In sign mode every magnitude is the row's shared `α`, so the
+    /// tie-break keeps the earliest `keep` positions and the scale is
+    /// preserved. Lossy by construction — never applied inside the
+    /// bitwise contract.
     pub fn retain_top(&self, keep: usize) -> CsrSlab {
-        let mut out = CsrSlab::new(self.precision());
+        let mut out = CsrSlab::new(self.mode);
+        if self.mode == CoefMode::Sign {
+            for r in 0..self.rows() {
+                let (idx, bitmap, ab) = self.sign_row(r);
+                let take = idx.len().min(keep);
+                let neg: Vec<bool> =
+                    (0..take).map(|j| bitmap[j / 8] >> (j % 8) & 1 != 0).collect();
+                out.push_sign_row(&idx[..take], ab, &neg);
+            }
+            return out;
+        }
         let mut order: Vec<usize> = Vec::new();
         for r in 0..self.rows() {
             let (idx, bits) = self.row(r);
@@ -335,19 +636,21 @@ impl CsrSlab {
         out
     }
 
-    /// Cold-tier precision tightening: requantize every coefficient through
-    /// `prec` (meaningful for FP16 → FP8; FP8 → FP8 is the identity since
-    /// stored bits already round-trip through e4m3). Lossy for FP16 inputs
-    /// — never applied inside the bitwise contract.
-    pub fn to_precision(&self, prec: CoefPrecision) -> CsrSlab {
-        if prec == self.precision() {
+    /// Cold-tier mode conversion: requantize every coefficient through
+    /// `mode` (meaningful for FP16 → FP8 tightening, or folding a
+    /// byte-wide slab down to the sign tier; FP8 → FP8 is the identity
+    /// since stored bits already round-trip through e4m3). Lossy across
+    /// modes — never applied inside the bitwise contract.
+    pub fn to_precision(&self, mode: CoefMode) -> CsrSlab {
+        if mode == self.mode {
             return self.clone();
         }
-        let mut out = CsrSlab::new(prec);
+        let mut out = CsrSlab::new(mode);
+        let mut vals = Vec::new();
         for r in 0..self.rows() {
-            let (idx, bits) = self.row(r);
-            let vals: Vec<f32> = bits.iter().map(|&b| self.decode(b)).collect();
-            out.push_f32(idx, &vals);
+            self.row_values(r, &mut vals);
+            let (s, e) = (self.row_off[r] as usize, self.row_off[r + 1] as usize);
+            out.push_f32(&self.idx[s..e], &vals);
         }
         out
     }
@@ -356,12 +659,27 @@ impl CsrSlab {
     /// view used by reference implementations in tests and benches.
     pub fn to_rows(&self) -> Vec<CsrRow> {
         (0..self.rows())
-            .map(|r| {
-                let (idx, bits) = self.row(r);
-                CsrRow {
-                    idx: idx.to_vec(),
-                    coef_bits: bits.to_vec(),
-                    precision_fp16: self.precision_fp16,
+            .map(|r| match self.mode {
+                CoefMode::Sign => {
+                    let (idx, bitmap, ab) = self.sign_row(r);
+                    let coef_bits = (0..idx.len())
+                        .map(|j| (bitmap[j / 8] >> (j % 8) & 1) as u16)
+                        .collect();
+                    CsrRow {
+                        idx: idx.to_vec(),
+                        coef_bits,
+                        scale_bits: ab,
+                        mode: CoefMode::Sign,
+                    }
+                }
+                _ => {
+                    let (idx, bits) = self.row(r);
+                    CsrRow {
+                        idx: idx.to_vec(),
+                        coef_bits: bits.to_vec(),
+                        scale_bits: 0,
+                        mode: self.mode,
+                    }
                 }
             })
             .collect()
@@ -374,17 +692,19 @@ mod tests {
 
     #[test]
     fn csr_bytes_formula() {
-        let r = CsrRow::from_f32(&[1, 5, 9], &[0.5, -1.0, 2.0], CoefPrecision::Fp8);
+        let r = CsrRow::from_f32(&[1, 5, 9], &[0.5, -1.0, 2.0], CoefMode::Fp8);
         assert_eq!(r.bytes(), 3 * 3 + 2); // 3s + 2
-        let r = CsrRow::from_f32(&[1, 5, 9], &[0.5, -1.0, 2.0], CoefPrecision::Fp16);
+        let r = CsrRow::from_f32(&[1, 5, 9], &[0.5, -1.0, 2.0], CoefMode::Fp16);
         assert_eq!(r.bytes(), 4 * 3 + 2); // 4s + 2
+        let r = CsrRow::from_f32(&[1, 5, 9], &[0.5, -1.0, 2.0], CoefMode::Sign);
+        assert_eq!(r.bytes(), 2 * 3 + 1 + 4); // 2s + ceil(s/8) + 4
     }
 
     #[test]
     fn csr_reconstruct() {
         // atoms: identity-ish 2 atoms of dim 3
         let atoms = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]; // [2,3]
-        let r = CsrRow::from_f32(&[0, 1], &[2.0, -0.5], CoefPrecision::Fp16);
+        let r = CsrRow::from_f32(&[0, 1], &[2.0, -0.5], CoefMode::Fp16);
         let mut out = vec![0.0; 3];
         r.reconstruct(&atoms, 3, &mut out);
         assert!((out[0] - 2.0).abs() < 1e-3);
@@ -396,7 +716,7 @@ mod tests {
     fn slab_matches_rows_and_bytes_are_o1_exact() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(77);
-        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+        for prec in [CoefMode::Fp8, CoefMode::Fp16] {
             let mut slab = CsrSlab::new(prec);
             let mut rows = Vec::new();
             let mut want_bytes = 0usize;
@@ -429,10 +749,76 @@ mod tests {
     }
 
     #[test]
+    fn sign_slab_matches_row_reference_and_bytes_are_o1_exact() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(78);
+        let mut slab = CsrSlab::new(CoefMode::Sign);
+        let mut rows = Vec::new();
+        let mut want_bytes = 0usize;
+        for r in 0..21 {
+            let nnz = r % 11; // spans both sides of a bitmap byte boundary
+            let idx: Vec<u16> = (0..nnz as u16).map(|j| j * 3 + r as u16).collect();
+            let vals = rng.normal_vec(nnz);
+            slab.push_f32(&idx, &vals);
+            let row = CsrRow::from_f32(&idx, &vals, CoefMode::Sign);
+            want_bytes += row.bytes();
+            rows.push(row);
+        }
+        assert_eq!(slab.rows(), 21);
+        assert_eq!(slab.bytes(), want_bytes, "O(1) bytes must equal summed row bytes");
+        for (r, row) in rows.iter().enumerate() {
+            let (idx, bitmap, ab) = slab.sign_row(r);
+            assert_eq!(idx, &row.idx[..]);
+            assert_eq!(ab, row.scale_bits, "row {r} scale");
+            assert_eq!(bitmap.len(), row.nnz().div_ceil(8));
+            let mut vals = Vec::new();
+            slab.row_values(r, &mut vals);
+            for (j, &v) in vals.iter().enumerate() {
+                assert_eq!(v.to_bits(), row.coef(j).to_bits(), "row {r} coef {j}");
+            }
+        }
+        // to_rows carries mode, per-element sign words and the row scale
+        let back = slab.to_rows();
+        for (a, b) in back.iter().zip(&rows) {
+            assert_eq!(a.mode, CoefMode::Sign);
+            assert_eq!(
+                (&a.idx, &a.coef_bits, a.scale_bits),
+                (&b.idx, &b.coef_bits, b.scale_bits)
+            );
+        }
+        // ≤ 2 bits per stored coefficient at the paper's operating points
+        for s in [4usize, 6, 8] {
+            assert!(CoefMode::Sign.bits_per_coef(s) <= 2.0 + 1e-12, "s={s}");
+        }
+    }
+
+    #[test]
+    fn sign_alpha_is_idempotent_bitwise() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(79);
+        for n in 1..17usize {
+            let vals = rng.normal_vec(n);
+            let idx: Vec<u16> = (0..n as u16).collect();
+            let mut slab = CsrSlab::new(CoefMode::Sign);
+            slab.push_f32(&idx, &vals);
+            // decode the finalized row and push it again: the re-derived
+            // α bits and bitmap must be identical (the mean of n copies
+            // of a f16-representable α is exact in f32)
+            let mut dec = Vec::new();
+            slab.row_values(0, &mut dec);
+            slab.push_f32(&idx, &dec);
+            let (_, b0, a0) = slab.sign_row(0);
+            let (_, b1, a1) = slab.sign_row(1);
+            assert_eq!(a0, a1, "n={n} scale must be stable");
+            assert_eq!(b0, b1, "n={n} bitmap must be stable");
+        }
+    }
+
+    #[test]
     fn slab_sweeps_match_row_iterator_reference_bitwise() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(99);
-        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+        for prec in [CoefMode::Fp8, CoefMode::Fp16, CoefMode::Sign] {
             let n_bins = 64usize;
             let mut slab = CsrSlab::new(prec);
             for _ in 0..23 {
@@ -444,15 +830,34 @@ mod tests {
             let rows = slab.to_rows();
             let qd = rng.normal_vec(n_bins);
             let scale = 0.25f32;
-            // score sweep vs row-by-row reference (the pre-slab loop shape)
+            // score sweep vs row-by-row reference (the pre-slab loop shape;
+            // the sign tier's reference replays the same signed-sum-then-
+            // scale order, which is the canonical order of that mode)
             let mut got = vec![0.0f32; slab.rows()];
             slab.score_rows(0, slab.rows(), &qd, scale, &mut got);
             for (ti, row) in rows.iter().enumerate() {
-                let mut sc = 0.0f32;
-                for j in 0..row.nnz() {
-                    sc += qd[row.idx[j] as usize] * row.coef(j);
-                }
-                assert_eq!(got[ti].to_bits(), (sc * scale).to_bits(), "row {ti}");
+                let want = match prec {
+                    CoefMode::Sign => {
+                        let mut sc = 0.0f32;
+                        for j in 0..row.nnz() {
+                            let q = qd[row.idx[j] as usize];
+                            if row.coef_bits[j] != 0 {
+                                sc -= q;
+                            } else {
+                                sc += q;
+                            }
+                        }
+                        (sc * f16_to_f32(row.scale_bits)) * scale
+                    }
+                    _ => {
+                        let mut sc = 0.0f32;
+                        for j in 0..row.nnz() {
+                            sc += qd[row.idx[j] as usize] * row.coef(j);
+                        }
+                        sc * scale
+                    }
+                };
+                assert_eq!(got[ti].to_bits(), want.to_bits(), "row {ti}");
             }
             // sub-range calls compose to the full sweep (pool-shard shape)
             let mut parts = vec![0.0f32; slab.rows()];
@@ -466,8 +871,22 @@ mod tests {
             slab.accumulate_bins(&weights, &mut z_got);
             let mut z_want = vec![0.0f32; n_bins];
             for (ti, row) in rows.iter().enumerate() {
-                for j in 0..row.nnz() {
-                    z_want[row.idx[j] as usize] += weights[ti] * row.coef(j);
+                match prec {
+                    CoefMode::Sign => {
+                        let wra = weights[ti] * f16_to_f32(row.scale_bits);
+                        for j in 0..row.nnz() {
+                            if row.coef_bits[j] != 0 {
+                                z_want[row.idx[j] as usize] -= wra;
+                            } else {
+                                z_want[row.idx[j] as usize] += wra;
+                            }
+                        }
+                    }
+                    _ => {
+                        for j in 0..row.nnz() {
+                            z_want[row.idx[j] as usize] += weights[ti] * row.coef(j);
+                        }
+                    }
                 }
             }
             for (a, b) in z_got.iter().zip(&z_want) {
@@ -478,7 +897,7 @@ mod tests {
 
     #[test]
     fn slab_take_seals_and_resets() {
-        let mut slab = CsrSlab::new(CoefPrecision::Fp16);
+        let mut slab = CsrSlab::new(CoefMode::Fp16);
         slab.push_f32(&[1, 2], &[0.5, -0.5]);
         slab.push_bits(&[3], &[0x3c00]); // 1.0 in f16
         let sealed = slab.take();
@@ -487,15 +906,23 @@ mod tests {
         assert_eq!(sealed.decode(sealed.row(1).1[0]), 1.0);
         assert_eq!(slab.rows(), 0);
         assert_eq!(slab.nnz(), 0);
-        assert_eq!(slab.precision(), CoefPrecision::Fp16);
+        assert_eq!(slab.precision(), CoefMode::Fp16);
         assert_eq!(slab.bytes(), 0);
+        // same for the sign tier: take() resets bitmap + scale state too
+        let mut slab = CsrSlab::new(CoefMode::Sign);
+        slab.push_f32(&[1, 2, 3], &[0.5, -0.5, 0.25]);
+        let sealed = slab.take();
+        assert_eq!(sealed.rows(), 1);
+        assert_eq!(sealed.sign_row(0).1.len(), 1);
+        assert_eq!(slab.precision(), CoefMode::Sign);
+        assert_eq!((slab.rows(), slab.nnz(), slab.bytes()), (0, 0, 0));
     }
 
     #[test]
     fn raw_parts_round_trip_is_field_exact() {
         use crate::util::rng::Rng;
         let mut rng = Rng::new(31);
-        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+        for prec in [CoefMode::Fp8, CoefMode::Fp16] {
             let mut slab = CsrSlab::new(prec);
             for r in 0..9 {
                 let nnz = r % 4;
@@ -513,8 +940,31 @@ mod tests {
     }
 
     #[test]
+    fn sign_parts_round_trip_is_field_exact() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(32);
+        let mut slab = CsrSlab::new(CoefMode::Sign);
+        for r in 0..13 {
+            let nnz = r % 10;
+            let idx: Vec<u16> = (0..nnz as u16).map(|j| j * 5 + r as u16).collect();
+            slab.push_f32(&idx, &rng.normal_vec(nnz));
+        }
+        let (i, s, sc, o) = slab.sign_parts();
+        let back =
+            CsrSlab::from_sign_parts(i.to_vec(), s.to_vec(), sc.to_vec(), o.to_vec()).unwrap();
+        let (bi, bs, bsc, bo) = back.sign_parts();
+        assert_eq!((i, s, sc, o), (bi, bs, bsc, bo));
+        assert_eq!(back.precision(), CoefMode::Sign);
+        assert_eq!(back.bytes(), slab.bytes());
+        // and every sweep input is identical, row by row
+        for r in 0..slab.rows() {
+            assert_eq!(slab.sign_row(r), back.sign_row(r));
+        }
+    }
+
+    #[test]
     fn from_raw_parts_rejects_malformed_csr() {
-        let prec = CoefPrecision::Fp8;
+        let prec = CoefMode::Fp8;
         // idx/coef length mismatch
         assert!(CsrSlab::from_raw_parts(vec![1, 2], vec![3], vec![0, 2], prec).is_err());
         // row_off not starting at 0
@@ -525,11 +975,25 @@ mod tests {
         assert!(CsrSlab::from_raw_parts(vec![1, 2], vec![3, 4], vec![0, 1], prec).is_err());
         // empty row_off
         assert!(CsrSlab::from_raw_parts(vec![], vec![], vec![], prec).is_err());
+        // sign slabs must go through from_sign_parts
+        assert!(CsrSlab::from_raw_parts(vec![1], vec![0], vec![0, 1], CoefMode::Sign).is_err());
+    }
+
+    #[test]
+    fn from_sign_parts_rejects_malformed_slabs() {
+        // scale count != rows
+        assert!(CsrSlab::from_sign_parts(vec![1], vec![0], vec![], vec![0, 1]).is_err());
+        // bitmap byte count != sum of per-row ceil(nnz/8)
+        assert!(CsrSlab::from_sign_parts(vec![1], vec![0, 0], vec![1], vec![0, 1]).is_err());
+        assert!(CsrSlab::from_sign_parts(vec![1], vec![], vec![1], vec![0, 1]).is_err());
+        // row_off invariants still enforced
+        assert!(CsrSlab::from_sign_parts(vec![1], vec![0], vec![1], vec![1, 1]).is_err());
+        assert!(CsrSlab::from_sign_parts(vec![], vec![], vec![], vec![]).is_err());
     }
 
     #[test]
     fn retain_top_keeps_largest_coefs_in_storage_order() {
-        let mut slab = CsrSlab::new(CoefPrecision::Fp16);
+        let mut slab = CsrSlab::new(CoefMode::Fp16);
         slab.push_f32(&[4, 9, 2, 7], &[0.25, -2.0, 1.0, 0.5]);
         slab.push_f32(&[1], &[3.0]); // shorter than keep: untouched
         slab.push_f32(&[], &[]); // empty row survives as empty
@@ -547,11 +1011,27 @@ mod tests {
     }
 
     #[test]
+    fn retain_top_on_sign_slab_keeps_scale_and_early_positions() {
+        let mut slab = CsrSlab::new(CoefMode::Sign);
+        slab.push_f32(&[4, 9, 2, 7], &[0.25, -2.0, 1.0, -0.5]);
+        slab.push_f32(&[1], &[3.0]);
+        let top = slab.retain_top(2);
+        assert_eq!(top.rows(), 2);
+        let (idx, bitmap, ab) = top.sign_row(0);
+        // all magnitudes are the shared α: tie-break keeps positions 0, 1
+        assert_eq!(idx, &[4, 9]);
+        assert_eq!(ab, slab.sign_row(0).2, "row scale survives recompression");
+        assert_eq!(bitmap[0] & 1, 0); // +0.25 stayed positive
+        assert_eq!(bitmap[0] >> 1 & 1, 1); // -2.0 stayed negative
+        assert!(top.bytes() < slab.bytes());
+    }
+
+    #[test]
     fn to_precision_requantizes_through_e4m3() {
-        let mut slab = CsrSlab::new(CoefPrecision::Fp16);
+        let mut slab = CsrSlab::new(CoefMode::Fp16);
         slab.push_f32(&[0, 3], &[0.3, -1.7]);
-        let cold = slab.to_precision(CoefPrecision::Fp8);
-        assert_eq!(cold.precision(), CoefPrecision::Fp8);
+        let cold = slab.to_precision(CoefMode::Fp8);
+        assert_eq!(cold.precision(), CoefMode::Fp8);
         let (idx, bits) = cold.row(0);
         assert_eq!(idx, slab.row(0).0);
         for (j, &b) in bits.iter().enumerate() {
@@ -559,14 +1039,37 @@ mod tests {
             assert_eq!(cold.decode(b).to_bits(), want.to_bits());
         }
         // identity for matching precision
-        let same = slab.to_precision(CoefPrecision::Fp16);
+        let same = slab.to_precision(CoefMode::Fp16);
         assert_eq!(same.raw_parts(), slab.raw_parts());
+    }
+
+    #[test]
+    fn to_precision_folds_byte_modes_down_to_sign_and_back() {
+        let mut slab = CsrSlab::new(CoefMode::Fp16);
+        slab.push_f32(&[0, 3, 5], &[0.3, -1.7, 0.9]);
+        let sign = slab.to_precision(CoefMode::Sign);
+        assert_eq!(sign.precision(), CoefMode::Sign);
+        assert_eq!(sign.row(0).0, slab.row(0).0);
+        // α = f16(mean |fp16(v)|), signs preserved
+        let vals: Vec<f32> = (0..3).map(|j| slab.decode(slab.row(0).1[j])).collect();
+        let want = f16_to_f32(sign_alpha_bits(&vals));
+        let mut dec = Vec::new();
+        sign.row_values(0, &mut dec);
+        assert_eq!(dec[0].to_bits(), want.to_bits());
+        assert_eq!(dec[1].to_bits(), (-want).to_bits());
+        assert_eq!(dec[2].to_bits(), want.to_bits());
+        assert!(sign.bytes() < slab.bytes());
+        // sign → fp16 widens the ±α values losslessly (α is f16)
+        let wide = sign.to_precision(CoefMode::Fp16);
+        let mut w = Vec::new();
+        wide.row_values(0, &mut w);
+        assert_eq!(w, dec);
     }
 
     #[test]
     fn fp8_quantization_is_visible() {
         // Storing through FP8 must round the coefficient exactly as e4m3.
-        let r = CsrRow::from_f32(&[0], &[0.3], CoefPrecision::Fp8);
+        let r = CsrRow::from_f32(&[0], &[0.3], CoefMode::Fp8);
         assert_eq!(r.coef(0), fp8::e4m3_to_f32(fp8::f32_to_e4m3(0.3)));
         assert!((r.coef(0) - 0.3).abs() < 0.02);
     }

@@ -6,9 +6,11 @@
 //!
 //! - [`wire`]: little-endian encode/decode helpers shared by every
 //!   serialized artifact (pages, session snapshots).
-//! - a binary page format (`encode_page`/`decode_page`): a fixed header
-//!   carrying magic, version, per-side precision, row/nnz counts and an
-//!   FNV-1a 64 payload checksum, followed by the six flat CSR arrays.
+//! - a binary page format v2 (`encode_page`/`decode_page`): a fixed header
+//!   carrying magic, version, per-side coefficient mode, row/nnz/aux counts
+//!   and an FNV-1a 64 payload checksum, followed by each side's flat CSR
+//!   arrays (for the sign tier: indices, packed sign bitmap, per-row f16
+//!   scales, row offsets).
 //! - [`PageFile`]: an append-only file of pages with an in-memory index,
 //!   rebuilt by a validating scan on reopen (a torn tail from a crash
 //!   mid-append is truncated away rather than poisoning the file).
@@ -30,16 +32,18 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
-use crate::sparse::{CoefPrecision, CsrSlab};
+use crate::sparse::{CoefMode, CoefPrecision, CsrSlab};
 
 pub mod wire;
 
 /// Page header magic: `"LXPG"`.
 pub const PAGE_MAGIC: u32 = 0x4c58_5047;
-/// Page format version.
-pub const PAGE_VERSION: u16 = 1;
+/// Page format version. v2 added per-side coefficient-mode bytes and the
+/// sign-bitmap aux lengths; v1 pages (which predate the sign tier) are
+/// rejected rather than silently misparsed.
+pub const PAGE_VERSION: u16 = 2;
 /// Fixed page header length in bytes.
-pub const HEADER_LEN: usize = 28;
+pub const HEADER_LEN: usize = 36;
 
 /// FNV-1a 64-bit hash — the page payload checksum.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -88,38 +92,62 @@ pub struct PageRef {
     pub len: u32,
 }
 
-fn prec_byte(p: CoefPrecision) -> u8 {
-    match p {
-        CoefPrecision::Fp8 => 0,
-        CoefPrecision::Fp16 => 1,
+fn mode_byte(m: CoefMode) -> u8 {
+    match m {
+        CoefMode::Fp8 => 0,
+        CoefMode::Fp16 => 1,
+        CoefMode::Sign => 2,
     }
 }
 
-fn byte_prec(b: u8, offset: u64) -> Result<CoefPrecision, StoreError> {
+fn byte_mode(b: u8, offset: u64) -> Result<CoefMode, StoreError> {
     match b {
-        0 => Ok(CoefPrecision::Fp8),
-        1 => Ok(CoefPrecision::Fp16),
+        0 => Ok(CoefMode::Fp8),
+        1 => Ok(CoefMode::Fp16),
+        2 => Ok(CoefMode::Sign),
         _ => Err(StoreError::Corrupt {
             offset,
-            what: format!("bad precision byte {b}"),
+            what: format!("bad coefficient-mode byte {b}"),
         }),
     }
 }
 
+/// The `aux` header field for one side: the packed sign-bitmap byte count
+/// (sign tier only — byte modes carry no bitmap and store 0).
+fn slab_aux(s: &CsrSlab) -> usize {
+    match s.precision() {
+        CoefMode::Sign => s.sign_parts().1.len(),
+        _ => 0,
+    }
+}
+
 fn slab_payload(buf: &mut Vec<u8>, s: &CsrSlab) {
-    let (idx, bits, off) = s.raw_parts();
-    wire::put_u16_slice_raw(buf, idx);
-    wire::put_u16_slice_raw(buf, bits);
-    wire::put_u32_slice_raw(buf, off);
+    match s.precision() {
+        CoefMode::Fp8 | CoefMode::Fp16 => {
+            let (idx, bits, off) = s.raw_parts();
+            wire::put_u16_slice_raw(buf, idx);
+            wire::put_u16_slice_raw(buf, bits);
+            wire::put_u32_slice_raw(buf, off);
+        }
+        CoefMode::Sign => {
+            let (idx, signs, scales, off) = s.sign_parts();
+            wire::put_u16_slice_raw(buf, idx);
+            wire::put_u8_slice_raw(buf, signs);
+            wire::put_u16_slice_raw(buf, scales);
+            wire::put_u32_slice_raw(buf, off);
+        }
+    }
 }
 
 /// Serialize a (K, V) slab pair into the page wire format.
 ///
-/// Layout (little-endian): `magic u32 | version u16 | k_prec u8 | v_prec u8
-/// | rows u32 | k_nnz u32 | v_nnz u32 | checksum u64 | payload`, where the
-/// payload is the six flat arrays `k.idx, k.coef_bits, k.row_off, v.idx,
-/// v.coef_bits, v.row_off` and the checksum is FNV-1a 64 over the payload.
-/// Both slabs must have the same row count (a page covers one token span).
+/// Layout (little-endian): `magic u32 | version u16 | k_mode u8 | v_mode u8
+/// | rows u32 | k_nnz u32 | v_nnz u32 | k_aux u32 | v_aux u32 | checksum
+/// u64 | payload`. Per side, a byte-mode payload is the three flat arrays
+/// `idx, coef_bits, row_off`; a sign-tier payload is `idx, sign bitmap
+/// (aux bytes), row_scale, row_off`. The checksum is FNV-1a 64 over the
+/// whole payload. Both slabs must have the same row count (a page covers
+/// one token span).
 pub fn encode_page(k: &CsrSlab, v: &CsrSlab) -> Vec<u8> {
     assert_eq!(k.rows(), v.rows(), "page K/V slabs must cover the same rows");
     let mut payload = Vec::with_capacity(4 * (k.nnz() + v.nnz()) + 8 * (k.rows() + 1));
@@ -128,29 +156,42 @@ pub fn encode_page(k: &CsrSlab, v: &CsrSlab) -> Vec<u8> {
     let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
     wire::put_u32(&mut buf, PAGE_MAGIC);
     wire::put_u16(&mut buf, PAGE_VERSION);
-    buf.push(prec_byte(k.precision()));
-    buf.push(prec_byte(v.precision()));
+    buf.push(mode_byte(k.precision()));
+    buf.push(mode_byte(v.precision()));
     wire::put_u32(&mut buf, k.rows() as u32);
     wire::put_u32(&mut buf, k.nnz() as u32);
     wire::put_u32(&mut buf, v.nnz() as u32);
+    wire::put_u32(&mut buf, slab_aux(k) as u32);
+    wire::put_u32(&mut buf, slab_aux(v) as u32);
     wire::put_u64(&mut buf, fnv1a64(&payload));
     buf.extend_from_slice(&payload);
     buf
 }
 
 struct PageHeader {
-    k_prec: CoefPrecision,
-    v_prec: CoefPrecision,
+    k_mode: CoefMode,
+    v_mode: CoefMode,
     rows: u32,
     k_nnz: u32,
     v_nnz: u32,
+    k_aux: u32,
+    v_aux: u32,
     checksum: u64,
+}
+
+fn side_payload_len(mode: CoefMode, nnz: usize, rows: usize, aux: usize) -> usize {
+    let off = 4 * (rows + 1);
+    match mode {
+        CoefMode::Fp8 | CoefMode::Fp16 => 2 * nnz + 2 * nnz + off,
+        CoefMode::Sign => 2 * nnz + aux + 2 * rows + off,
+    }
 }
 
 impl PageHeader {
     fn payload_len(&self) -> usize {
-        let per_side_off = 4 * (self.rows as usize + 1);
-        2 * (self.k_nnz as usize + self.v_nnz as usize) * 2 + 2 * per_side_off
+        let rows = self.rows as usize;
+        side_payload_len(self.k_mode, self.k_nnz as usize, rows, self.k_aux as usize)
+            + side_payload_len(self.v_mode, self.v_nnz as usize, rows, self.v_aux as usize)
     }
 
     fn total_len(&self) -> usize {
@@ -180,27 +221,48 @@ fn decode_header(buf: &[u8], offset: u64) -> Result<PageHeader, StoreError> {
             what: format!("unsupported page version {version}"),
         });
     }
-    let k_prec = byte_prec(r.take_u8().unwrap(), offset)?;
-    let v_prec = byte_prec(r.take_u8().unwrap(), offset)?;
+    let k_mode = byte_mode(r.take_u8().unwrap(), offset)?;
+    let v_mode = byte_mode(r.take_u8().unwrap(), offset)?;
     let rows = r.take_u32().unwrap();
     let k_nnz = r.take_u32().unwrap();
     let v_nnz = r.take_u32().unwrap();
+    let k_aux = r.take_u32().unwrap();
+    let v_aux = r.take_u32().unwrap();
     let checksum = r.take_u64().unwrap();
-    Ok(PageHeader { k_prec, v_prec, rows, k_nnz, v_nnz, checksum })
+    for (side, mode, aux) in [("K", k_mode, k_aux), ("V", v_mode, v_aux)] {
+        if mode != CoefMode::Sign && aux != 0 {
+            return Err(StoreError::Corrupt {
+                offset,
+                what: format!("{side} side: nonzero aux {aux} for byte-coef mode"),
+            });
+        }
+    }
+    Ok(PageHeader { k_mode, v_mode, rows, k_nnz, v_nnz, k_aux, v_aux, checksum })
 }
 
 fn decode_slab(
     r: &mut wire::Reader<'_>,
     nnz: usize,
     rows: usize,
-    prec: CoefPrecision,
+    mode: CoefMode,
+    aux: usize,
     offset: u64,
 ) -> Result<CsrSlab, StoreError> {
     let corrupt = |what: String| StoreError::Corrupt { offset, what };
     let idx = r.take_u16_slice_raw(nnz).map_err(&corrupt)?;
-    let bits = r.take_u16_slice_raw(nnz).map_err(&corrupt)?;
-    let off = r.take_u32_slice_raw(rows + 1).map_err(&corrupt)?;
-    CsrSlab::from_raw_parts(idx, bits, off, prec).map_err(&corrupt)
+    match mode {
+        CoefMode::Fp8 | CoefMode::Fp16 => {
+            let bits = r.take_u16_slice_raw(nnz).map_err(&corrupt)?;
+            let off = r.take_u32_slice_raw(rows + 1).map_err(&corrupt)?;
+            CsrSlab::from_raw_parts(idx, bits, off, mode).map_err(&corrupt)
+        }
+        CoefMode::Sign => {
+            let signs = r.take_u8_slice_raw(aux).map_err(&corrupt)?;
+            let scales = r.take_u16_slice_raw(rows).map_err(&corrupt)?;
+            let off = r.take_u32_slice_raw(rows + 1).map_err(&corrupt)?;
+            CsrSlab::from_sign_parts(idx, signs, scales, off).map_err(&corrupt)
+        }
+    }
 }
 
 /// Decode one page produced by [`encode_page`], verifying magic, version,
@@ -224,8 +286,8 @@ pub fn decode_page(buf: &[u8], offset: u64) -> Result<(CsrSlab, CsrSlab), StoreE
     }
     let mut r = wire::Reader::new(payload);
     let rows = h.rows as usize;
-    let k = decode_slab(&mut r, h.k_nnz as usize, rows, h.k_prec, offset)?;
-    let v = decode_slab(&mut r, h.v_nnz as usize, rows, h.v_prec, offset)?;
+    let k = decode_slab(&mut r, h.k_nnz as usize, rows, h.k_mode, h.k_aux as usize, offset)?;
+    let v = decode_slab(&mut r, h.v_nnz as usize, rows, h.v_mode, h.v_aux as usize, offset)?;
     Ok((k, v))
 }
 
@@ -504,13 +566,17 @@ mod tests {
 
     fn assert_slab_eq(a: &CsrSlab, b: &CsrSlab) {
         assert_eq!(a.precision(), b.precision());
-        assert_eq!(a.raw_parts(), b.raw_parts());
+        if a.precision() == CoefMode::Sign {
+            assert_eq!(a.sign_parts(), b.sign_parts());
+        } else {
+            assert_eq!(a.raw_parts(), b.raw_parts());
+        }
     }
 
     #[test]
     fn encode_decode_round_trip_is_field_exact() {
         let mut rng = Rng::new(7);
-        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16] {
+        for prec in [CoefPrecision::Fp8, CoefPrecision::Fp16, CoefMode::Sign] {
             for rows in [0usize, 1, 5, 32] {
                 let (k, v) = slab_pair(&mut rng, rows, prec);
                 let buf = encode_page(&k, &v);
@@ -522,6 +588,20 @@ mod tests {
     }
 
     #[test]
+    fn mixed_mode_pages_round_trip_per_side() {
+        // K and V carry their coefficient mode independently in the header.
+        let mut rng = Rng::new(70);
+        let (k, _) = slab_pair(&mut rng, 9, CoefMode::Sign);
+        let (_, v) = slab_pair(&mut rng, 9, CoefMode::Fp8);
+        let buf = encode_page(&k, &v);
+        let (k2, v2) = decode_page(&buf, 0).unwrap();
+        assert_eq!(k2.precision(), CoefMode::Sign);
+        assert_eq!(v2.precision(), CoefMode::Fp8);
+        assert_slab_eq(&k, &k2);
+        assert_slab_eq(&v, &v2);
+    }
+
+    #[test]
     fn decode_rejects_corruption() {
         let mut rng = Rng::new(8);
         let (k, v) = slab_pair(&mut rng, 4, CoefPrecision::Fp8);
@@ -530,10 +610,20 @@ mod tests {
         let mut bad = good.clone();
         bad[0] ^= 0xff;
         assert!(matches!(decode_page(&bad, 0), Err(StoreError::Corrupt { .. })));
-        // bad version
+        // bad version (v1 pages predate the sign tier and must be rejected)
         let mut bad = good.clone();
-        bad[4] = 0x7f;
+        bad[4] = 0x01;
+        let err = decode_page(&bad, 0).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // bad coefficient-mode byte
+        let mut bad = good.clone();
+        bad[6] = 9;
         assert!(matches!(decode_page(&bad, 0), Err(StoreError::Corrupt { .. })));
+        // nonzero aux on a byte-coef side
+        let mut bad = good.clone();
+        bad[20] = 1;
+        let err = decode_page(&bad, 0).unwrap_err();
+        assert!(err.to_string().contains("aux"), "{err}");
         // flipped payload bit -> checksum mismatch
         let mut bad = good.clone();
         let n = bad.len();
@@ -559,7 +649,7 @@ mod tests {
         {
             let mut pf = PageFile::open(&path).unwrap();
             for i in 0..6 {
-                let prec = if i % 2 == 0 { CoefPrecision::Fp8 } else { CoefPrecision::Fp16 };
+                let prec = [CoefMode::Fp8, CoefMode::Fp16, CoefMode::Sign][i % 3];
                 let (k, v) = slab_pair(&mut rng, 1 + i, prec);
                 refs.push(pf.append(&k, &v).unwrap());
                 pages.push((k, v));
@@ -617,6 +707,22 @@ mod tests {
         assert_eq!((sp, fa), (1, 1));
         assert_eq!(sb, r.len as u64);
         assert_eq!(fb, r.len as u64);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sign_pages_spill_and_fault_bitwise() {
+        // The residency tier round-trips the sign tier's mode field and
+        // bitmap exactly — fault(spill(p)) ≡ p holds for every mode.
+        let dir = tmpdir("spill_sign");
+        let store = SpillStore::open(&dir).unwrap();
+        let mut rng = Rng::new(13);
+        let (k, v) = slab_pair(&mut rng, 24, CoefMode::Sign);
+        let r = store.spill(&k, &v).unwrap();
+        let (k2, v2) = store.fault(r).unwrap();
+        assert_eq!(k2.precision(), CoefMode::Sign);
+        assert_slab_eq(&k, &k2);
+        assert_slab_eq(&v, &v2);
         let _ = fs::remove_dir_all(&dir);
     }
 

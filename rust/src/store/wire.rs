@@ -34,6 +34,12 @@ pub fn put_u32_slice_raw(buf: &mut Vec<u8>, s: &[u32]) {
     }
 }
 
+/// Raw (unframed) byte slice — caller must know the count to read it
+/// back (the sign-tier bitmap payload in page format v2).
+pub fn put_u8_slice_raw(buf: &mut Vec<u8>, s: &[u8]) {
+    buf.extend_from_slice(s);
+}
+
 /// u32-length-prefixed u16 slice.
 pub fn put_u16s(buf: &mut Vec<u8>, s: &[u16]) {
     put_u32(buf, s.len() as u32);
@@ -134,6 +140,11 @@ impl<'a> Reader<'a> {
     pub fn take_u32_slice_raw(&mut self, n: usize) -> Result<Vec<u32>, String> {
         let b = self.take(n * 4)?;
         Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Raw (unframed) byte slice of known count.
+    pub fn take_u8_slice_raw(&mut self, n: usize) -> Result<Vec<u8>, String> {
+        Ok(self.take(n)?.to_vec())
     }
 
     fn take_len(&mut self) -> Result<usize, String> {

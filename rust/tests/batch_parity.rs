@@ -32,7 +32,7 @@ fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
 fn decode_batch_reproduces_sequential_decode_across_mixed_backends() {
     let engine = Engine::new(tiny_weights(60));
     let dicts = tiny_dicts(engine.shape(), 64);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let specs = [
         "full",
         "lexico:s=2,nb=8",
@@ -109,7 +109,7 @@ fn decode_batch_reproduces_sequential_decode_across_mixed_backends() {
 fn cache_batch_entry_points_match_sequential_for_every_backend() {
     let shape = CacheShape { n_layers: 2, n_heads: 4, n_kv_heads: 2, head_dim: 8 };
     let dicts = tiny_dicts(shape, 64);
-    let ctx = CacheContext { shape, dicts: Some(dicts) };
+    let ctx = CacheContext::new(shape, Some(dicts));
     let specs = [
         "full",
         "lexico:s=2,nb=4",
@@ -155,7 +155,7 @@ fn cache_batch_entry_points_match_sequential_for_every_backend() {
 #[test]
 fn decode_batch_b1_equals_decode_step() {
     let engine = Engine::new(tiny_weights(61));
-    let ctx = CacheContext { shape: engine.shape(), dicts: None };
+    let ctx = CacheContext::new(engine.shape(), None);
     let prompt: Vec<u32> = vec![5, 6, 7, 8];
     let mut c1 = build_cache("full", &ctx).unwrap();
     let mut c2 = build_cache("full", &ctx).unwrap();

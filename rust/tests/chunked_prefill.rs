@@ -17,11 +17,12 @@ use lexico::tensor::argmax;
 use lexico::util::rng::Rng;
 
 /// Backends the chunked scheduler serves chunked (split-exact families,
-/// both lexico coefficient precisions).
-const SPLIT_EXACT_SPECS: [&str; 6] = [
+/// every lexico coefficient mode).
+const SPLIT_EXACT_SPECS: [&str; 7] = [
     "full",
     "lexico:s=2,nb=4",
     "lexico:s=2,nb=4,fp16",
+    "lexico:s=2,nb=4,sign",
     "lexico:s=4,nb=8",
     "kivi:bits=4,g=4,nb=4",
     "pertoken:bits=8,g=8,nb=2",
@@ -62,7 +63,7 @@ fn decode_trace(
 fn chunked_prefill_is_bitwise_identical_for_every_split_exact_backend() {
     for (wi, weights) in [tiny_weights(55), tiny_weights_deep(56)].into_iter().enumerate() {
         let eng = Engine::new(weights);
-        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        let ctx = CacheContext::new(eng.shape(), Some(tiny_dicts(eng.shape(), 64)));
         let mut rng = Rng::new(77 + wi as u64);
         // long enough that lexico overflows its residual buffer and
         // compresses mid-prompt — across chunk boundaries
@@ -70,7 +71,7 @@ fn chunked_prefill_is_bitwise_identical_for_every_split_exact_backend() {
 
         for spec in SPLIT_EXACT_SPECS {
             let mut mono = build_cache(spec, &ctx).unwrap();
-            assert!(mono.split_prefill_exact(), "{spec} must be split-exact");
+            assert!(mono.caps().split_prefill_exact, "{spec} must be split-exact");
             let l_mono = eng.prefill(&prompt, &mut *mono);
             let bytes_mono = mono.mem_bytes();
             let trace_mono = decode_trace(&eng, &mut *mono, l_mono.clone(), prompt.len(), 3);
@@ -134,11 +135,11 @@ fn non_split_exact_backends_reject_nothing_but_differ_when_chunked() {
     // (asserted at the batcher level in server::batcher::tests). Here we
     // pin the trait flag that gates that decision.
     let eng = Engine::new(tiny_weights(58));
-    let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+    let ctx = CacheContext::new(eng.shape(), Some(tiny_dicts(eng.shape(), 64)));
     for spec in ["snapkv:cap=24,win=4", "pyramidkv:cap=24,win=4"] {
         let cache = build_cache(spec, &ctx).unwrap();
         assert!(
-            !cache.split_prefill_exact(),
+            !cache.caps().split_prefill_exact,
             "{spec}: observation-window backends must opt out of chunked prefill"
         );
     }

@@ -17,7 +17,7 @@
 //! `fork(prefix prototype)` + suffix prefill + greedy decode must be
 //! token-identical to a cold session prefilled on the full prompt — for
 //! every backend (score-state backends are exercised in regimes where
-//! split prefill is exact; their `split_prefill_exact()` contract is
+//! split prefill is exact; their `caps().split_prefill_exact` contract is
 //! asserted, which is what keeps the production prefix cache away from
 //! the inexact regimes).
 
@@ -35,12 +35,13 @@ use lexico::tensor::argmax;
 const N_DECODE: usize = 16;
 const PROMPT: &str = "k01=v42;k07=v13;k01?";
 
-/// Backend specs pinned by the snapshot (every backend family, both
-/// coefficient precisions for lexico).
-const SPECS: [&str; 8] = [
+/// Backend specs pinned by the snapshot (every backend family, all three
+/// coefficient modes for lexico).
+const SPECS: [&str; 9] = [
     "full",
     "lexico:s=2,nb=4",
     "lexico:s=2,nb=4,fp16",
+    "lexico:s=2,nb=4,sign",
     "kivi:bits=4,g=4,nb=4",
     "pertoken:bits=8,g=8,nb=2",
     "zipcache:hi=4,lo=2,g=8,frac=0.25,nb=8",
@@ -67,7 +68,7 @@ fn engines() -> Vec<(&'static str, Engine)> {
 }
 
 fn ctx_for(engine: &Engine) -> CacheContext {
-    CacheContext { shape: engine.shape(), dicts: Some(tiny_dicts(engine.shape(), 64)) }
+    CacheContext::new(engine.shape(), Some(tiny_dicts(engine.shape(), 64)))
 }
 
 fn prompt_ids() -> Vec<u32> {
@@ -147,6 +148,20 @@ fn golden_transcripts_pin_greedy_decode_streams() {
         );
         return;
     }
+    if std::env::var("LEXICO_COEF_MODE").is_ok_and(|v| !v.is_empty()) {
+        // A global coefficient-mode override retargets every lexico spec
+        // that left its mode at the default, so the canonical snapshot
+        // doesn't apply — the overridden mode must still be bitwise
+        // reproducible: record ≡ replay within this process. (CI runs the
+        // suite twice back to back, so a second whole-process render is
+        // verified against this one too.)
+        assert_eq!(current, render(), "coef-mode decode streams are not reproducible");
+        eprintln!(
+            "LEXICO_COEF_MODE set: skipping canonical snapshot compare \
+             (override mode verified record ≡ replay instead)"
+        );
+        return;
+    }
     let path = snap_path(".snap");
     match std::fs::read_to_string(&path) {
         Ok(pinned) if !pinned.trim().is_empty() => {
@@ -217,16 +232,17 @@ fn fork_midstream_continuation_is_token_identical_for_every_backend() {
 /// stream must be identical to a cold session prefilled on the whole
 /// prompt. Score-state backends run in regimes where their prefill
 /// decisions cannot differ (under eviction capacity / inside the
-/// residual window); their `split_prefill_exact()` must still be `false`,
-/// which is what keeps the production prefix cache away from the regimes
-/// where they *would* diverge.
+/// residual window); their `caps().split_prefill_exact` must still be
+/// `false`, which is what keeps the production prefix cache away from the
+/// regimes where they *would* diverge.
 #[test]
 fn fork_plus_suffix_prefill_matches_cold_prefill_for_every_backend() {
-    // (spec, exact): `exact` mirrors KvCache::split_prefill_exact
-    let cases: [(&str, bool); 8] = [
+    // (spec, exact): `exact` mirrors CacheCaps::split_prefill_exact
+    let cases: [(&str, bool); 9] = [
         ("full", true),
         ("lexico:s=2,nb=4", true),
         ("lexico:s=2,nb=4,fp16", true),
+        ("lexico:s=2,nb=4,sign", true),
         ("kivi:bits=4,g=4,nb=4", true),
         ("pertoken:bits=8,g=8,nb=2", true),
         // nothing spills within the test horizon → salience never consulted
@@ -241,7 +257,7 @@ fn fork_plus_suffix_prefill_matches_cold_prefill_for_every_backend() {
         let split = 12; // prefix "k01=v42;k07" ++ suffix "=v13;k01?"
         for (spec, exact) in cases {
             assert_eq!(
-                build_cache(spec, &ctx).unwrap().split_prefill_exact(),
+                build_cache(spec, &ctx).unwrap().caps().split_prefill_exact,
                 exact,
                 "{spec}: split_prefill_exact contract"
             );

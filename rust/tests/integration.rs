@@ -49,7 +49,7 @@ const ALL_SPECS: &[&str] = &[
 fn every_backend_generates() {
     let engine = Engine::new(tiny_weights(40));
     let dicts = tiny_dicts(engine.shape(), 64);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let mut rng = Rng::new(0);
     let prompt: Vec<u32> = (0..40).map(|_| 3 + rng.below(50) as u32).collect();
     for spec in ALL_SPECS {
@@ -67,7 +67,7 @@ fn every_backend_generates() {
 fn compressing_backends_report_compression() {
     let engine = Engine::new(tiny_weights(41));
     let dicts = tiny_dicts(engine.shape(), 64);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let mut rng = Rng::new(1);
     let prompt: Vec<u32> = (0..100).map(|_| 3 + rng.below(50) as u32).collect();
     for spec in &ALL_SPECS[1..] {
@@ -101,7 +101,7 @@ fn lexico_exact_dictionary_matches_full_cache_generation() {
         keys: vec![d.clone(); shape.n_layers],
         values: vec![d; shape.n_layers],
     });
-    let ctx = CacheContext { shape, dicts: Some(dicts) };
+    let ctx = CacheContext::new(shape, Some(dicts));
     let mut rng = Rng::new(2);
     let prompt: Vec<u32> = (0..30).map(|_| 3 + rng.below(50) as u32).collect();
     let mut lex = build_cache(&format!("lexico:s={m},nb=4,fp16"), &ctx).unwrap();
@@ -116,7 +116,7 @@ fn lexico_exact_dictionary_matches_full_cache_generation() {
 fn lexico_memory_monotone_in_sparsity() {
     let engine = Engine::new(tiny_weights(43));
     let dicts = tiny_dicts(engine.shape(), 64);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let mut rng = Rng::new(3);
     let prompt: Vec<u32> = (0..80).map(|_| 3 + rng.below(50) as u32).collect();
     let mut prev = 0.0;
@@ -152,7 +152,7 @@ fn eval_harness_deterministic() {
 #[test]
 fn int8_nearly_lossless_generation() {
     let engine = Engine::new(tiny_weights(45));
-    let ctx = CacheContext { shape: engine.shape(), dicts: None };
+    let ctx = CacheContext::new(engine.shape(), None);
     let mut rng = Rng::new(4);
     let mut agree = 0;
     let total = 10;
@@ -173,7 +173,7 @@ fn int8_nearly_lossless_generation() {
 fn memory_scaling_invariants() {
     let engine = Engine::new(tiny_weights(46));
     let dicts = tiny_dicts(engine.shape(), 64);
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(dicts) };
+    let ctx = CacheContext::new(engine.shape(), Some(dicts));
     let mut rng = Rng::new(5);
     let prompt_a: Vec<u32> = (0..40).map(|_| 3 + rng.below(50) as u32).collect();
     let prompt_b: Vec<u32> = (0..100).map(|_| 3 + rng.below(50) as u32).collect();

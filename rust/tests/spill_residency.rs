@@ -23,9 +23,17 @@ use lexico::util::rng::Rng;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
 
-/// Both coefficient precisions; sparsity 2 so the tiny prompts still
-/// overflow the recency buffer and seal pages.
-const SPECS: [&str; 2] = ["lexico:s=2,nb=4", "lexico:s=2,nb=4,fp16"];
+/// Every coefficient mode (FP8, FP16 and the 1-bit sign tier); sparsity 2
+/// so the tiny prompts still overflow the recency buffer and seal pages.
+const SPECS: [&str; 3] = ["lexico:s=2,nb=4", "lexico:s=2,nb=4,fp16", "lexico:s=2,nb=4,sign"];
+
+/// The spec's context, with the engine pool and a spill store wired
+/// through the construction runtime (the batcher's wiring).
+fn spill_ctx(eng: &Engine, store: &Arc<SpillStore>) -> CacheContext {
+    let mut ctx = CacheContext::new(eng.shape(), Some(tiny_dicts(eng.shape(), 64)));
+    ctx.runtime = ctx.runtime.with_pool(eng.pool().clone()).with_spill(store.clone());
+    ctx
+}
 
 fn tiny_dicts(shape: CacheShape, n_atoms: usize) -> Arc<DictionarySet> {
     Arc::new(DictionarySet {
@@ -60,7 +68,8 @@ fn bits(v: &[f32]) -> Vec<u32> {
 fn random_spill_wake_schedules_are_bitwise_identical() {
     for &threads in &THREAD_COUNTS {
         let eng = engine_with_threads(threads);
-        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        let mut ctx = CacheContext::new(eng.shape(), Some(tiny_dicts(eng.shape(), 64)));
+        ctx.runtime = ctx.runtime.with_pool(eng.pool().clone());
         for (pi, spec) in SPECS.iter().enumerate() {
             let (store, _dir) = tmp_store(&format!("prop_t{threads}_p{pi}"));
             let mut rng = Rng::new(0xC0FFEE + 31 * threads as u64 + pi as u64);
@@ -68,10 +77,7 @@ fn random_spill_wake_schedules_are_bitwise_identical() {
             // 12-row ragged tail past the 4-token recency buffer
             let prompt: Vec<u32> = (0..80).map(|_| 3 + rng.below(50) as u32).collect();
             let mut plain = build_cache(spec, &ctx).unwrap();
-            plain.set_pool(eng.pool().clone());
-            let mut spilly = build_cache(spec, &ctx).unwrap();
-            spilly.set_pool(eng.pool().clone());
-            spilly.set_spill_store(store.clone());
+            let mut spilly = build_cache(spec, &spill_ctx(&eng, &store)).unwrap();
             let l0 = eng.prefill(&prompt, &mut *plain);
             let l1 = eng.prefill(&prompt, &mut *spilly);
             assert_eq!(bits(&l0), bits(&l1), "T={threads} {spec}: prefill diverged");
@@ -112,14 +118,12 @@ fn random_spill_wake_schedules_are_bitwise_identical() {
 fn hibernate_restore_continues_the_stream_bitwise_across_thread_counts() {
     for &threads in &THREAD_COUNTS {
         let eng = engine_with_threads(threads);
-        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
         for (pi, spec) in SPECS.iter().enumerate() {
             let (store, _dir) = tmp_store(&format!("snap_t{threads}_p{pi}"));
+            let ctx = spill_ctx(&eng, &store);
             let mut rng = Rng::new(0xBEEF + threads as u64 + 7 * pi as u64);
             let prompt: Vec<u32> = (0..70).map(|_| 3 + rng.below(50) as u32).collect();
             let mut live = build_cache(spec, &ctx).unwrap();
-            live.set_pool(eng.pool().clone());
-            live.set_spill_store(store.clone());
             let logits = eng.prefill(&prompt, &mut *live);
             let mut tok = argmax(&logits) as u32;
             let mut pos = prompt.len();
@@ -130,8 +134,6 @@ fn hibernate_restore_continues_the_stream_bitwise_across_thread_counts() {
             }
             let blob = live.hibernate_state().expect("hibernate");
             let mut revived = build_cache(spec, &ctx).unwrap();
-            revived.set_pool(eng.pool().clone());
-            revived.set_spill_store(store.clone());
             revived.restore_hibernated(&blob).expect("restore");
             assert_eq!(revived.tokens(), live.tokens());
             // both continue 10 more steps — identical logits every step
@@ -159,12 +161,9 @@ fn hibernate_restore_continues_the_stream_bitwise_across_thread_counts() {
 #[test]
 fn corrupt_and_truncated_page_files_fail_faults_cleanly() {
     let eng = engine_with_threads(1);
-    let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
     let mk_spilled = |tag: &str| -> (Box<dyn KvCache>, std::path::PathBuf) {
         let (store, dir) = tmp_store(tag);
-        let mut c = build_cache("lexico:s=2,nb=4", &ctx).unwrap();
-        c.set_pool(eng.pool().clone());
-        c.set_spill_store(store.clone());
+        let mut c = build_cache("lexico:s=2,nb=4", &spill_ctx(&eng, &store)).unwrap();
         let prompt: Vec<u32> = (0..70).map(|i| 3 + (i % 50) as u32).collect();
         let _ = eng.prefill(&prompt, &mut *c);
         let (n, freed) = c.spill_cold().unwrap();

@@ -24,10 +24,11 @@ const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
 
 /// Backend specs covering every compression family (and both lexico
 /// precisions) — the same families the golden transcripts pin.
-const SPECS: [&str; 8] = [
+const SPECS: [&str; 9] = [
     "full",
     "lexico:s=2,nb=4",
     "lexico:s=2,nb=4,fp16",
+    "lexico:s=2,nb=4,sign",
     "lexico:s=2,nb=4,adaptive=16:0.3",
     "kivi:bits=4,g=4,nb=4",
     "pertoken:bits=8,g=8,nb=2",
@@ -54,9 +55,9 @@ fn engine_with_threads(threads: usize) -> Engine {
 /// engine's pool (the batcher's wiring). Returns (stream, logit trace of
 /// the first decode step).
 fn greedy_stream(engine: &Engine, spec: &str, prompt: &[u32], n: usize) -> (Vec<u32>, Vec<f32>) {
-    let ctx = CacheContext { shape: engine.shape(), dicts: Some(tiny_dicts(engine.shape(), 64)) };
+    let mut ctx = CacheContext::new(engine.shape(), Some(tiny_dicts(engine.shape(), 64)));
+    ctx.runtime = ctx.runtime.with_pool(engine.pool().clone());
     let mut cache = build_cache(spec, &ctx).unwrap();
-    cache.set_pool(engine.pool().clone());
     let logits = engine.prefill(prompt, &mut *cache);
     let mut tok = argmax(&logits) as u32;
     let mut pos = prompt.len();
@@ -109,14 +110,14 @@ fn decode_batch_is_token_identical_across_thread_counts() {
     };
     let run = |threads: usize| -> Vec<Vec<u32>> {
         let eng = engine_with_threads(threads);
-        let ctx = CacheContext { shape: eng.shape(), dicts: Some(tiny_dicts(eng.shape(), 64)) };
+        let mut ctx = CacheContext::new(eng.shape(), Some(tiny_dicts(eng.shape(), 64)));
+        ctx.runtime = ctx.runtime.with_pool(eng.pool().clone());
         let mut caches: Vec<Box<dyn KvCache>> = Vec::new();
         let mut toks: Vec<u32> = Vec::new();
         let mut poss: Vec<usize> = Vec::new();
         let mut streams: Vec<Vec<u32>> = Vec::new();
         for (spec, prompt) in SPECS.iter().zip(&prompts) {
             let mut cache = build_cache(spec, &ctx).unwrap();
-            cache.set_pool(eng.pool().clone());
             let logits = eng.prefill(prompt, &mut *cache);
             caches.push(cache);
             toks.push(argmax(&logits) as u32);
